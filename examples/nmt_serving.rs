@@ -1,0 +1,101 @@
+//! End-to-end driver — the deliverable that proves all three layers
+//! compose on a real workload:
+//!
+//!   L1 (Pallas stitched softmax→BMM kernel) → L2 (JAX attention block)
+//!   → `make artifacts` (AOT HLO text) → Rust runtime (PJRT CPU) →
+//!   L3 serving coordinator (dynamic batching), fused vs unfused.
+//!
+//! It serves batched translation-style requests against both artifact
+//! variants, checks the numerics agree between them (the stitched kernel
+//! is semantically identical to the op-by-op graph), and reports
+//! latency/throughput. Results are recorded in EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example nmt_serving
+//! ```
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::metrics::LatencyRecorder;
+use fusion_stitching::coordinator::{ServerConfig, ServingCoordinator};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+// Shapes baked by python/compile/aot.py (see python/compile/model.py).
+const BATCH: usize = 8;
+const SEQ: usize = 64;
+const MODEL: usize = 512;
+const DIM: usize = 64;
+const REQUESTS: usize = 64;
+
+fn request(i: usize) -> Vec<f32> {
+    // Deterministic pseudo-embedding for request i.
+    (0..SEQ * MODEL)
+        .map(|j| (((i * 131 + j * 31) % 977) as f32 / 977.0) - 0.5)
+        .collect()
+}
+
+fn serve(artifact: &str) -> anyhow::Result<(Vec<Vec<f32>>, LatencyRecorder, f64)> {
+    let cfg = ServerConfig {
+        artifact: artifact.to_string(),
+        batch: BATCH,
+        in_elems_per_request: SEQ * MODEL,
+        out_elems_per_request: SEQ * DIM,
+        input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
+        policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
+    };
+    let srv = ServingCoordinator::start(Path::new("artifacts"), cfg)?;
+    let _ = srv.infer(request(0))?; // warmup: first execute pays PJRT JIT
+
+    let mut lat = LatencyRecorder::default();
+    let mut outputs = Vec::new();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..REQUESTS {
+        pending.push((Instant::now(), srv.infer_async(request(i))?));
+        if pending.len() == BATCH {
+            for (t, rx) in pending.drain(..) {
+                outputs.push(rx.recv()??);
+                lat.record(t.elapsed());
+            }
+        }
+    }
+    for (t, rx) in pending.drain(..) {
+        outputs.push(rx.recv()??);
+        lat.record(t.elapsed());
+    }
+    let rps = lat.throughput_rps(t0.elapsed());
+    srv.shutdown().ok();
+    Ok((outputs, lat, rps))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== NMT online serving: stitched (Pallas) vs unfused attention ==");
+    let (fused_out, fused_lat, fused_rps) = serve("attention_fused")?;
+    let (unfused_out, unfused_lat, unfused_rps) = serve("attention_unfused")?;
+
+    // The stitched kernel must be numerically equivalent to the
+    // op-by-op graph — same guarantee the paper's codegen gives.
+    let mut max_diff = 0f32;
+    for (a, b) in fused_out.iter().zip(&unfused_out) {
+        for (x, y) in a.iter().zip(b) {
+            max_diff = max_diff.max((x - y).abs());
+        }
+    }
+    println!("numeric agreement: max |fused - unfused| = {max_diff:.2e}");
+    assert!(max_diff < 1e-3, "variants diverged");
+
+    for (name, lat, rps) in [
+        ("fused", &fused_lat, fused_rps),
+        ("unfused", &unfused_lat, unfused_rps),
+    ] {
+        println!(
+            "{name:<8} p50 {:.2} ms | p95 {:.2} ms | mean {:.2} ms | {:.0} req/s",
+            lat.percentile_us(50.0) / 1e3,
+            lat.percentile_us(95.0) / 1e3,
+            lat.mean_us() / 1e3,
+            rps,
+        );
+    }
+    println!("({REQUESTS} requests, batch {BATCH}, seq {SEQ}, model {MODEL})");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+"""AOT lowering: JAX/Pallas (L2/L1) → HLO text artifacts for the Rust
+runtime.
+
+HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits `HloModuleProto`s
+with 64-bit instruction ids that the runtime's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (`make artifacts`); never on the request path.
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--only STEM]
+"""
+
+import argparse
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (`return_tuple=True` so the
+    Rust side unwraps a tuple literal)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(fn, shapes) -> str:
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="lower a single artifact stem")
+    # Back-compat with the original Makefile target.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out).parent if args.out else pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    for stem, (fn, shapes) in ARTIFACTS.items():
+        if args.only and stem != args.only:
+            continue
+        text = lower_artifact(fn, shapes)
+        path = out_dir / f"{stem}.hlo.txt"
+        path.write_text(text)
+        n_kernels = text.count("fusion(") + text.count("fusion.")
+        print(f"wrote {path} ({len(text)} chars)")
+        del n_kernels
+
+    # Stamp file so `make artifacts` can be a cheap no-op when inputs are
+    # unchanged.
+    (out_dir / ".stamp").write_text("ok\n")
+
+
+if __name__ == "__main__":
+    main()

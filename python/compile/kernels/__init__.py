@@ -1,0 +1,9 @@
+"""Pallas kernels (L1) + pure-jnp oracles.
+
+Authored and verified at build time only; lowered into the L2 model's
+HLO by `compile.aot` and executed by the Rust runtime.
+"""
+
+from .ref import layernorm_ref, softmax_bmm_ref, softmax_ref  # noqa: F401
+from .stitched_layernorm import stitched_layernorm  # noqa: F401
+from .stitched_softmax_bmm import stitched_softmax_bmm  # noqa: F401

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with ordinary jax.numpy ops only. pytest (python/tests) asserts
+allclose between kernel and oracle across a hypothesis-driven sweep of
+shapes and dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def softmax_bmm_ref(scores, v):
+    """Figure 3's pattern: softmax over the last dim of ``scores``,
+    then a batched matmul with ``v``.
+
+    scores: [B, S, S], v: [B, S, D] -> [B, S, D]
+    """
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    s = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / s
+    return jnp.einsum("bij,bjd->bid", p, v)
+
+
+def softmax_ref(scores):
+    """Numerically-stable softmax over the last dim."""
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def layernorm_ref(x, gamma, beta, eps=1e-6):
+    """Layer normalization over the last dim.
+
+    x: [N, D], gamma/beta: [D] -> [N, D]
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: block-composed layer normalization.
+
+The second stitched pattern from the benchmarks (the W2V/LR/Speech-style
+`reduce → elementwise tail` interaction): `mean-reduce → sub → square →
+mean-reduce → rsqrt → scale/shift` in one kernel. Under XLA's baseline
+this is ≥2 kernels (each reduce is a fusion root, §3.2); block
+composition stitches both reduces and the elementwise tail through
+on-chip memory.
+
+Schedule (paper terms): ``Row`` with ``split_dim=0, sword=N/rows_per_block``
+— each grid cell normalizes a contiguous strip of rows; all reduction
+work for a row stays inside one block (the Table 1 reduce constraint).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, gamma_ref, beta_ref, o_ref, cent_ref, *, eps):
+    """cent_ref: [R, D] VMEM scratch holding the centered values between
+    the two reduce stages (the 'shared memory' buffer)."""
+    x = x_ref[...]
+    # Stage 1 — Reduce.1 (mean over the minor dim).
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    # Stage 2 — centering, stored to scratch (ALLOC).
+    cent_ref[...] = x - mu
+    # Stage 3 — Reduce.2 (variance) reads the scratch.
+    var = jnp.mean(cent_ref[...] * cent_ref[...], axis=-1, keepdims=True)
+    # Stage 4 — normalize in place (space sharing: the centered buffer is
+    # overwritten by the normalized values).
+    cent_ref[...] = cent_ref[...] * jax.lax.rsqrt(var + eps)
+    # Stage 5 — scale/shift elementwise tail.
+    o_ref[...] = cent_ref[...] * gamma_ref[...] + beta_ref[...]
+
+
+def stitched_layernorm(x, gamma, beta, eps=1e-6, rows_per_block=None):
+    """Layer norm over the last dim in a single stitched kernel.
+
+    x: [N, D], gamma/beta: [D] -> [N, D]
+    """
+    n, d = x.shape
+    assert gamma.shape == (d,) and beta.shape == (d,)
+    if rows_per_block is None:
+        # Target a ~128-row strip but never exceed N; N is required to be
+        # divisible (the paper's `sword must divide K` legality rule).
+        rows_per_block = min(n, 128)
+        while n % rows_per_block != 0:
+            rows_per_block //= 2
+    assert n % rows_per_block == 0, f"{rows_per_block} must divide {n}"
+    grid = n // rows_per_block
+
+    def kernel(x_ref, g_ref, b_ref, o_ref, cent_ref):
+        _kernel(x_ref, g_ref, b_ref, o_ref, cent_ref, eps=eps)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((rows_per_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((rows_per_block, d), x.dtype)],
+        interpret=True,
+    )(x, gamma, beta)
+
+
+def vmem_bytes(rows_per_block, d, itemsize=4):
+    """Per-block VMEM footprint: x strip + gamma + beta + out strip +
+    centered scratch (§Perf roofline input)."""
+    return itemsize * (rows_per_block * d * 3 + 2 * d)

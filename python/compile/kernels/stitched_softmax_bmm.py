@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: block-composed softmax → BatchDot (Figure 3).
+
+The paper composes `reduce(max) → sub → exp → reduce(sum) → div → dot`
+into ONE GPU kernel by giving each op its own parallel loop and stitching
+them through on-chip shared memory (`IrEmitterStitched`, §5). The TPU
+adaptation (DESIGN.md §Hardware-Adaptation):
+
+- one Pallas *grid cell* plays the thread block (CTA): ``grid=(B,)`` is
+  the paper's `Row` schedule with ``split_dim=0, sword=B`` — one block
+  per batch element;
+- VMEM scratch plays shared memory: the ``exp`` intermediate lives in a
+  VMEM scratch buffer between the reduce/divide stages;
+- *space sharing* (§5.1.3): ``div`` overwrites the ``exp`` buffer in
+  place — exactly the paper's `Divide.1 SHAREs Exponential.1`;
+- the MXU plays cuBLAS for the stitched contraction: the final dot
+  inside the kernel hits the systolic array per block.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact
+runs under the Rust runtime. Real-TPU perf is estimated from the VMEM
+footprint in DESIGN.md/EXPERIMENTS.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(scores_ref, v_ref, o_ref, exp_ref):
+    """One grid cell = one batch element (one 'thread block').
+
+    scores_ref: [1, S, S] VMEM block of the scores
+    v_ref:      [1, S, D] VMEM block of the values
+    o_ref:      [1, S, D] output block
+    exp_ref:    [S, S]    VMEM scratch — the 'shared memory' intermediary
+    """
+    scores = scores_ref[0]
+    # Stage 1 — Reduce.1 (max), its own loop over rows.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    # Stage 2 — subtract + Exponential.1, written to scratch (ALLOC).
+    exp_ref[...] = jnp.exp(scores - m)
+    # Stage 3 — Reduce.2 (sum) reads the scratch buffer.
+    s = jnp.sum(exp_ref[...], axis=-1, keepdims=True)
+    # Stage 4 — Divide.1 SHAREs Exponential.1's buffer (in-place reuse,
+    # §5.1.3 space sharing).
+    exp_ref[...] = exp_ref[...] / s
+    # Stage 5 — Dot.1 on the MXU, fed straight from scratch.
+    o_ref[0] = jnp.dot(exp_ref[...], v_ref[0], preferred_element_type=o_ref.dtype)
+
+
+def stitched_softmax_bmm(scores, v):
+    """``softmax(scores) @ v`` in a single stitched kernel.
+
+    scores: [B, S, S], v: [B, S, D] -> [B, S, D]
+    """
+    b, s, s2 = scores.shape
+    assert s == s2, f"scores must be square per batch, got {scores.shape}"
+    bv, sv, d = v.shape
+    assert (bv, sv) == (b, s), f"v shape {v.shape} mismatches scores {scores.shape}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, s, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, d), scores.dtype),
+        scratch_shapes=[pltpu.VMEM((s, s), scores.dtype)],
+        interpret=True,
+    )(scores, v)
+
+
+def vmem_bytes(b, s, d, itemsize=4):
+    """Per-block VMEM footprint of the stitched kernel: input block +
+    value block + output block + the shared scratch. Used by the §Perf
+    roofline estimate (DESIGN.md)."""
+    del b  # per-block footprint is batch-independent
+    return itemsize * (s * s + s * d + s * d + s * s)

@@ -1,0 +1,93 @@
+"""L2: the JAX model — the paper's NMT attention block (the Figure 3
+subgraph embedded in a decoder layer), in two variants:
+
+- ``attention_fused``  — the softmax→BatchDot core runs as the L1
+  stitched Pallas kernel (FusionStitching's output);
+- ``attention_unfused`` — identical math, op-by-op jnp (what the XLA
+  baseline executes: each reduce its own fusion root).
+
+Both lower to HLO text via `compile.aot` and are served by the Rust
+coordinator; pytest asserts they agree to float tolerance. Weights are
+baked in as constants from a fixed seed so the serving artifact takes
+only the hidden states.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+# Shapes baked into the artifacts — keep in sync with the Rust server
+# config (rust/src/main.rs `cmd_serve`) and examples/nmt_serving.rs.
+BATCH = 8
+SEQ = 64
+MODEL = 512
+DIM = 64
+SCALE = 1.0 / (DIM**0.5)
+
+# LayerNorm demo shapes (the W2V/Speech-style pattern).
+LN_ROWS = 256
+LN_DIM = 512
+
+
+def _weights(seed: int = 0):
+    """Deterministic projection weights, shared by both variants."""
+    k = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(k, 3)
+    scale = 1.0 / (MODEL**0.5)
+    wq = jax.random.normal(kq, (MODEL, DIM), jnp.float32) * scale
+    wk = jax.random.normal(kk, (MODEL, DIM), jnp.float32) * scale
+    wv = jax.random.normal(kv, (MODEL, DIM), jnp.float32) * scale
+    return wq, wk, wv
+
+
+def _qkv(hidden):
+    """Projections + reshape to per-batch tensors. `hidden`: [B*S, MODEL]."""
+    wq, wk, wv = _weights()
+    q = (hidden @ wq).reshape(BATCH, SEQ, DIM)
+    k = (hidden @ wk).reshape(BATCH, SEQ, DIM)
+    v = (hidden @ wv).reshape(BATCH, SEQ, DIM)
+    scores = jnp.einsum("bid,bjd->bij", q, k) * SCALE
+    return scores, v
+
+
+def attention_fused(hidden):
+    """Attention context with the stitched softmax→BMM kernel (L1)."""
+    scores, v = _qkv(hidden)
+    ctx = kernels.stitched_softmax_bmm(scores, v)
+    return (ctx,)
+
+
+def attention_unfused(hidden):
+    """Same math, op-by-op (the XLA-baseline artifact)."""
+    scores, v = _qkv(hidden)
+    ctx = kernels.softmax_bmm_ref(scores, v)
+    return (ctx,)
+
+
+def _ln_params(seed: int = 1):
+    k = jax.random.PRNGKey(seed)
+    kg, kb = jax.random.split(k)
+    gamma = 1.0 + 0.1 * jax.random.normal(kg, (LN_DIM,), jnp.float32)
+    beta = 0.1 * jax.random.normal(kb, (LN_DIM,), jnp.float32)
+    return gamma, beta
+
+
+def layernorm_fused(x):
+    """Stitched layer norm over [LN_ROWS, LN_DIM]."""
+    gamma, beta = _ln_params()
+    return (kernels.stitched_layernorm(x, gamma, beta),)
+
+
+def layernorm_unfused(x):
+    gamma, beta = _ln_params()
+    return (kernels.layernorm_ref(x, gamma, beta),)
+
+
+#: artifact stem -> (function, example input shapes)
+ARTIFACTS = {
+    "attention_fused": (attention_fused, [(BATCH * SEQ, MODEL)]),
+    "attention_unfused": (attention_unfused, [(BATCH * SEQ, MODEL)]),
+    "layernorm_fused": (layernorm_fused, [(LN_ROWS, LN_DIM)]),
+    "layernorm_unfused": (layernorm_unfused, [(LN_ROWS, LN_DIM)]),
+}

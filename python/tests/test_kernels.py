@@ -1,0 +1,148 @@
+"""Kernel vs oracle — the core correctness signal (L1).
+
+Hypothesis sweeps shapes and dtypes for every Pallas kernel and asserts
+allclose against the pure-jnp references in `compile.kernels.ref`.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: 1e-5, jnp.bfloat16: 5e-2}
+
+
+# ---------------------------------------------------------------------
+# stitched_softmax_bmm
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=6),
+    s=st.sampled_from([4, 8, 16, 33, 64]),
+    d=st.sampled_from([1, 4, 8, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_softmax_bmm_matches_ref_f32(b, s, d, seed):
+    rng = np.random.default_rng(seed)
+    scores = _rand(rng, (b, s, s), jnp.float32)
+    v = _rand(rng, (b, s, d), jnp.float32)
+    got = kernels.stitched_softmax_bmm(scores, v)
+    want = kernels.softmax_bmm_ref(scores, v)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=3),
+    s=st.sampled_from([8, 16]),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_softmax_bmm_matches_ref_bf16(b, s, d, seed):
+    rng = np.random.default_rng(seed)
+    scores = _rand(rng, (b, s, s), jnp.bfloat16)
+    v = _rand(rng, (b, s, d), jnp.bfloat16)
+    got = np.asarray(kernels.stitched_softmax_bmm(scores, v), np.float32)
+    want = np.asarray(
+        kernels.softmax_bmm_ref(
+            jnp.asarray(scores, jnp.float32), jnp.asarray(v, jnp.float32)
+        )
+    )
+    np.testing.assert_allclose(got, want, atol=6e-2, rtol=6e-2)
+
+
+def test_softmax_bmm_rows_sum_to_one_property():
+    # softmax(scores) @ ones == ones: probabilities sum to 1 per row.
+    rng = np.random.default_rng(7)
+    scores = _rand(rng, (4, 32, 32), jnp.float32)
+    ones = jnp.ones((4, 32, 1), jnp.float32)
+    out = kernels.stitched_softmax_bmm(scores, ones)
+    np.testing.assert_allclose(out, np.ones_like(out), atol=1e-5)
+
+
+def test_softmax_bmm_shift_invariance_property():
+    # softmax is invariant to a per-row constant shift.
+    rng = np.random.default_rng(8)
+    scores = _rand(rng, (2, 16, 16), jnp.float32)
+    v = _rand(rng, (2, 16, 8), jnp.float32)
+    a = kernels.stitched_softmax_bmm(scores, v)
+    b = kernels.stitched_softmax_bmm(scores + 100.0, v)
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+def test_softmax_bmm_extreme_values_stable():
+    # the max-subtraction must keep exp from overflowing.
+    scores = jnp.full((1, 8, 8), 1e4, jnp.float32)
+    v = jnp.ones((1, 8, 4), jnp.float32)
+    out = kernels.stitched_softmax_bmm(scores, v)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_softmax_bmm_shape_mismatch_raises():
+    scores = jnp.zeros((2, 8, 8), jnp.float32)
+    v = jnp.zeros((3, 8, 4), jnp.float32)
+    with pytest.raises(AssertionError):
+        kernels.stitched_softmax_bmm(scores, v)
+
+
+# ---------------------------------------------------------------------
+# stitched_layernorm
+# ---------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([1, 8, 64, 96, 256]),
+    d=st.sampled_from([4, 16, 48, 512]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_layernorm_matches_ref_f32(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (n, d), jnp.float32)
+    gamma = _rand(rng, (d,), jnp.float32)
+    beta = _rand(rng, (d,), jnp.float32)
+    got = kernels.stitched_layernorm(x, gamma, beta)
+    want = kernels.layernorm_ref(x, gamma, beta)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.sampled_from([1, 2, 8, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_layernorm_rows_per_block_invariant(rows, seed):
+    # The schedule (sword) must not change the numbers — the paper's
+    # whole premise: schedules tune performance, not semantics.
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, (64, 32), jnp.float32)
+    gamma = jnp.ones((32,), jnp.float32)
+    beta = jnp.zeros((32,), jnp.float32)
+    a = kernels.stitched_layernorm(x, gamma, beta, rows_per_block=rows)
+    b = kernels.layernorm_ref(x, gamma, beta)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+def test_layernorm_output_standardized_property():
+    # gamma=1, beta=0: rows have ~zero mean, ~unit variance.
+    rng = np.random.default_rng(9)
+    x = _rand(rng, (32, 128), jnp.float32)
+    out = kernels.stitched_layernorm(
+        x, jnp.ones((128,), jnp.float32), jnp.zeros((128,), jnp.float32)
+    )
+    out = np.asarray(out)
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-2)

@@ -1,0 +1,56 @@
+"""L2 model tests: fused vs unfused variants agree; shapes match what the
+Rust server bakes in."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+
+
+def _hidden(seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.standard_normal((model.BATCH * model.SEQ, model.MODEL)), jnp.float32
+    )
+
+
+def test_fused_matches_unfused():
+    h = _hidden()
+    (fused,) = model.attention_fused(h)
+    (unfused,) = model.attention_unfused(h)
+    np.testing.assert_allclose(fused, unfused, atol=1e-4, rtol=1e-4)
+
+
+def test_attention_output_shape():
+    h = _hidden()
+    (ctx,) = model.attention_fused(h)
+    assert ctx.shape == (model.BATCH, model.SEQ, model.DIM)
+
+
+def test_attention_deterministic_weights():
+    # Same input twice → identical output (weights are baked constants).
+    a = model.attention_fused(_hidden(1))[0]
+    b = model.attention_fused(_hidden(1))[0]
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_layernorm_variants_agree():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((model.LN_ROWS, model.LN_DIM)), jnp.float32)
+    (fused,) = model.layernorm_fused(x)
+    (unfused,) = model.layernorm_unfused(x)
+    np.testing.assert_allclose(fused, unfused, atol=1e-4, rtol=1e-4)
+
+
+def test_artifact_registry_complete():
+    assert set(model.ARTIFACTS) == {
+        "attention_fused",
+        "attention_unfused",
+        "layernorm_fused",
+        "layernorm_unfused",
+    }
+    for _, (fn, shapes) in model.ARTIFACTS.items():
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+        out = jax.eval_shape(fn, *specs)
+        assert isinstance(out, tuple) and len(out) == 1

@@ -1,0 +1,33 @@
+//! Shared helpers for the hand-rolled bench harnesses (criterion is not
+//! available in this offline image; each bench is a `harness = false`
+//! binary that times with `std::time::Instant` and prints the paper's
+//! rows).
+
+use std::time::{Duration, Instant};
+
+/// Time `f` over `iters` iterations after `warmup` warmups; returns
+/// (mean, min) per-iteration duration.
+#[allow(dead_code)]
+pub fn time_it<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> (Duration, Duration) {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut total = Duration::ZERO;
+    let mut best = Duration::MAX;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed();
+        total += dt;
+        best = best.min(dt);
+    }
+    (total / iters as u32, best)
+}
+
+#[allow(dead_code)]
+pub fn ms(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e3
+}
+
+#[allow(dead_code)]
+fn main() {}

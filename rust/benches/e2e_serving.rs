@@ -1,0 +1,89 @@
+//! E2E serving bench — the paper's latency-critical online NMT use case
+//! (§6.1) on the *real* runtime: AOT-compiled JAX/Pallas artifacts
+//! executed by the Rust coordinator over PJRT CPU, fused (stitched
+//! Pallas attention) vs unfused (op-by-op) variants, batched requests.
+//!
+//! Run `make artifacts` first. Reports per-variant latency percentiles
+//! and throughput. Note: on the CPU backend both variants compile
+//! through the same XLA CPU pipeline, so this validates *numerics and
+//! the serving path*, not GPU-style kernel-launch savings (those are
+//! the simulator benches).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::metrics::LatencyRecorder;
+use fusion_stitching::coordinator::{ServerConfig, ServingCoordinator};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+const BATCH: usize = 8;
+const SEQ: usize = 64;
+const MODEL: usize = 512;
+const DIM: usize = 64;
+const REQUESTS: usize = 96;
+
+fn bench_variant(artifact: &str) -> Option<(f64, f64, f64, usize)> {
+    let dir = Path::new("artifacts");
+    let cfg = ServerConfig {
+        artifact: artifact.to_string(),
+        batch: BATCH,
+        in_elems_per_request: SEQ * MODEL,
+        out_elems_per_request: SEQ * DIM,
+        input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
+        policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
+    };
+    let srv = ServingCoordinator::start(dir, cfg).ok()?;
+    // warmup (first execution pays XLA JIT inside PJRT)
+    let _ = srv.infer(vec![0.1; SEQ * MODEL]).ok()?;
+
+    let mut lat = LatencyRecorder::default();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..REQUESTS {
+        let input = vec![0.01 * (i % 11) as f32; SEQ * MODEL];
+        pending.push((Instant::now(), srv.infer_async(input).unwrap()));
+        if pending.len() == BATCH {
+            for (t, rx) in pending.drain(..) {
+                rx.recv().unwrap().unwrap();
+                lat.record(t.elapsed());
+            }
+        }
+    }
+    for (t, rx) in pending.drain(..) {
+        rx.recv().unwrap().unwrap();
+        lat.record(t.elapsed());
+    }
+    let wall = t0.elapsed();
+    let stats = srv.shutdown().unwrap();
+    Some((
+        lat.percentile_us(50.0) / 1e3,
+        lat.percentile_us(95.0) / 1e3,
+        lat.throughput_rps(wall),
+        stats.batches,
+    ))
+}
+
+fn main() {
+    println!("== E2E serving: NMT attention, fused (stitched Pallas) vs unfused ==");
+    println!(
+        "{:<20} {:>10} {:>10} {:>12} {:>9}",
+        "artifact", "p50_ms", "p95_ms", "throughput", "batches"
+    );
+    let mut any = false;
+    for artifact in ["attention_fused", "attention_unfused"] {
+        match bench_variant(artifact) {
+            Some((p50, p95, rps, batches)) => {
+                any = true;
+                println!(
+                    "{artifact:<20} {p50:>10.2} {p95:>10.2} {rps:>9.0}r/s {batches:>9}"
+                );
+            }
+            None => println!("{artifact:<20} — missing (run `make artifacts`)"),
+        }
+    }
+    if !any {
+        eprintln!("no artifacts found; skipping (run `make artifacts` first)");
+    }
+}

@@ -1,0 +1,57 @@
+//! Fig. 1 — accumulated percentile distribution of memory IO footprints
+//! of the six most popular ops over a model corpus (§1).
+//!
+//! The paper measured 53,470 production models on PAI; we regenerate the
+//! same plot over a seeded synthetic corpus (DESIGN.md substitutions).
+//! Shapes asserted: all curves monotone, reaching ~100%; elementwise and
+//! reduce instances are mostly small (the fine-granularity problem);
+//! MatMul/Conv2D run larger than elementwise at the median.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{ms, time_it};
+use fusion_stitching::corpus::generator::{generate, CorpusConfig};
+use fusion_stitching::corpus::{percentiles, OpClass};
+
+fn main() {
+    let cfg = CorpusConfig::default();
+    let (t, _) = time_it(0, 3, || generate(&cfg));
+    let stats = generate(&cfg);
+    println!(
+        "== Fig. 1: footprint percentiles ({} instances / {} models, corpus gen {:.0}ms) ==",
+        stats.total_instances(),
+        cfg.models,
+        ms(t)
+    );
+    let cuts: Vec<u32> = (4..=26).step_by(2).collect();
+    print!("{:<8}", "log2(N)");
+    for c in &cuts {
+        print!("{c:>7}");
+    }
+    println!();
+    for class in OpClass::ALL {
+        let series = &stats.samples[&class];
+        let p = percentiles(series, &cuts);
+        print!("{:<8}", class.label());
+        for v in &p {
+            print!("{:>6.1}%", 100.0 * v);
+        }
+        println!();
+        for w in p.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12, "{}: non-monotone curve", class.label());
+        }
+        assert!(p.last().unwrap() > &0.99, "{}: curve must saturate", class.label());
+    }
+
+    let median = |c: OpClass| {
+        let v = &stats.samples[&c];
+        v[v.len() / 2]
+    };
+    assert!(
+        median(OpClass::MatMul) > median(OpClass::Add),
+        "MatMul footprints should exceed elementwise (paper's observation)"
+    );
+    let small_add = percentiles(&stats.samples[&OpClass::Add], &[20])[0];
+    assert!(small_add > 0.5, "most elementwise instances must be small");
+}

@@ -1,0 +1,57 @@
+//! Fig. 7 — the fusion ratio: #kernels(FusionStitching) / #kernels(XLA
+//! baseline), library calls excluded (§6.3).
+//!
+//! Paper's series: LR/W2V/RNN/BiRNN/Speech/NMT with W2V worst (0.82),
+//! Speech best (0.25), geomean ≈ 0.45 ("another 55% reduction of GPU
+//! kernel launches"). The shape to reproduce: every ratio < 1, W2V the
+//! highest, the complex graphs (Speech/NMT) the lowest.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{ms, time_it};
+use fusion_stitching::coordinator::pipeline::{
+    compile_module, geomean, FusionMode, PipelineConfig,
+};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::models;
+use fusion_stitching::schedule::PerfLibrary;
+
+fn main() {
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    println!("== Fig. 7: fusion ratio ==");
+    println!(
+        "{:<8} {:>8} {:>8} {:>8} {:>14} {:>14}",
+        "model", "XLA", "FS", "ratio", "xla_compile", "fs_compile"
+    );
+    let mut ratios = Vec::new();
+    for (meta, module) in models::all_benchmarks() {
+        let mut cfg = PipelineConfig::default();
+        cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        let (tb, _) = time_it(1, 3, || {
+            compile_module(&module, FusionMode::XlaBaseline, &mut lib, &cfg).unwrap()
+        });
+        let base = compile_module(&module, FusionMode::XlaBaseline, &mut lib, &cfg).unwrap();
+        let (tf, _) = time_it(1, 3, || {
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap()
+        });
+        let fs = compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        let b = base.plan.generated_kernel_count(&module.entry);
+        let f = fs.plan.generated_kernel_count(&module.entry);
+        let ratio = f as f64 / b as f64;
+        ratios.push(ratio);
+        println!(
+            "{:<8} {:>8} {:>8} {:>8.2} {:>12.1}ms {:>12.1}ms",
+            meta.name,
+            b,
+            f,
+            ratio,
+            ms(tb),
+            ms(tf)
+        );
+        assert!(ratio <= 1.0, "{}: FS must not launch more kernels", meta.name);
+    }
+    let g = geomean(ratios.iter().copied());
+    println!("geomean: {g:.2}  (paper: ~0.45 — a 55% reduction)");
+    assert!(g < 0.75, "geomean fusion ratio should show a large reduction");
+}

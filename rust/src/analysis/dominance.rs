@@ -1,0 +1,224 @@
+//! Dominance tree over the dataflow graph — §5.1.3 (space sharing).
+//!
+//! The paper builds a dominance tree *starting from the root instruction*
+//! and walks it with a dataflow analysis to let later ops reuse shared
+//! memory buffers of ops they dominate (e.g. `Reduce.2` reuses
+//! `Reduce.1`'s buffer in Figure 3).
+//!
+//! We treat the fused computation as a flow graph rooted at the fusion
+//! root with edges root → operands; `a` dominates `b` iff every
+//! root-to-`b` path passes through `a`. Classic Cooper–Harvey–Kennedy
+//! iterative algorithm over the reverse post-order.
+
+use crate::hlo::{Computation, InstrId};
+use std::collections::{HashMap, HashSet};
+
+/// Immediate-dominator tree for a (sub)graph of a computation.
+#[derive(Debug, Clone)]
+pub struct DominatorTree {
+    root: InstrId,
+    /// node → immediate dominator. The root maps to itself.
+    idom: HashMap<InstrId, InstrId>,
+    /// reverse post-order position used during construction.
+    rpo_pos: HashMap<InstrId, usize>,
+}
+
+impl DominatorTree {
+    /// Build the tree for the subgraph reachable from `root` through
+    /// operand edges, optionally restricted to `scope` (a fusion group).
+    /// Operands outside the scope are treated as external leaves and
+    /// excluded.
+    pub fn build(comp: &Computation, root: InstrId, scope: Option<&HashSet<InstrId>>) -> Self {
+        let in_scope =
+            |id: InstrId| scope.map(|s| s.contains(&id)).unwrap_or(true);
+        assert!(in_scope(root), "root must be in scope");
+
+        // DFS for reverse post-order from root via operand edges.
+        let mut post: Vec<InstrId> = Vec::new();
+        let mut seen: HashSet<InstrId> = HashSet::new();
+        let mut stack = vec![(root, false)];
+        while let Some((id, expanded)) = stack.pop() {
+            if expanded {
+                post.push(id);
+                continue;
+            }
+            if !seen.insert(id) {
+                continue;
+            }
+            stack.push((id, true));
+            for &op in &comp.get(id).operands {
+                if in_scope(op) && !seen.contains(&op) {
+                    stack.push((op, false));
+                }
+            }
+        }
+        post.reverse(); // now RPO: root first
+        let rpo_pos: HashMap<InstrId, usize> =
+            post.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+
+        // Predecessors in the flow graph = users (within scope & reachable).
+        let preds = |id: InstrId| -> Vec<InstrId> {
+            comp.users(id)
+                .iter()
+                .copied()
+                .filter(|u| rpo_pos.contains_key(u))
+                .collect()
+        };
+
+        let mut idom: HashMap<InstrId, InstrId> = HashMap::new();
+        idom.insert(root, root);
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for &b in post.iter().skip(1) {
+                let mut new_idom: Option<InstrId> = None;
+                for p in preds(b) {
+                    if idom.contains_key(&p) {
+                        new_idom = Some(match new_idom {
+                            None => p,
+                            Some(cur) => intersect(&idom, &rpo_pos, p, cur),
+                        });
+                    }
+                }
+                if let Some(ni) = new_idom {
+                    if idom.get(&b) != Some(&ni) {
+                        idom.insert(b, ni);
+                        changed = true;
+                    }
+                }
+            }
+        }
+
+        DominatorTree { root, idom, rpo_pos }
+    }
+
+    pub fn root(&self) -> InstrId {
+        self.root
+    }
+
+    /// Immediate dominator of `id` (`None` for the root or unreachable
+    /// nodes).
+    pub fn idom(&self, id: InstrId) -> Option<InstrId> {
+        if id == self.root {
+            return None;
+        }
+        self.idom.get(&id).copied()
+    }
+
+    /// Whether `a` dominates `b` (reflexive).
+    pub fn dominates(&self, a: InstrId, b: InstrId) -> bool {
+        let mut cur = b;
+        loop {
+            if cur == a {
+                return true;
+            }
+            match self.idom(cur) {
+                Some(d) if d != cur => cur = d,
+                _ => return false,
+            }
+        }
+    }
+
+    /// Nodes covered by the tree (reachable from root within scope).
+    pub fn nodes(&self) -> impl Iterator<Item = InstrId> + '_ {
+        self.rpo_pos.keys().copied()
+    }
+}
+
+fn intersect(
+    idom: &HashMap<InstrId, InstrId>,
+    rpo: &HashMap<InstrId, usize>,
+    mut a: InstrId,
+    mut b: InstrId,
+) -> InstrId {
+    while a != b {
+        while rpo[&a] > rpo[&b] {
+            a = idom[&a];
+        }
+        while rpo[&b] > rpo[&a] {
+            b = idom[&b];
+        }
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    /// The Figure 3 sharing relations: in softmax, `divide` dominates
+    /// `exponential` (every root path to exp goes through div), and the
+    /// second reduce dominates the first.
+    #[test]
+    fn figure3_dominance() {
+        let mut b = GraphBuilder::new("fig3");
+        let scores = b.param("scores", Shape::f32(&[8, 64, 64]));
+        let v = b.param("v", Shape::f32(&[8, 64, 32]));
+        let m = b.reduce(scores, &[2], ReduceKind::Max); // Reduce.1
+        let mb = b.broadcast(m, &[8, 64, 64], &[0, 1]);
+        let sh = b.sub(scores, mb);
+        let e = b.exp(sh); // Exponential.1
+        let s = b.reduce(e, &[2], ReduceKind::Sum); // Reduce.2
+        let sb = b.broadcast(s, &[8, 64, 64], &[0, 1]);
+        let p = b.div(e, sb); // Divide.1
+        let out = b.batch_dot(p, v);
+        let comp = b.finish(out);
+
+        let dt = DominatorTree::build(&comp, out, None);
+        assert!(dt.dominates(p, e), "Divide.1 should dominate Exponential.1");
+        assert!(dt.dominates(out, p));
+        assert!(!dt.dominates(s, e), "exp also reaches root via divide directly");
+        assert!(!dt.dominates(e, p));
+        // In the *stable* softmax (max-subtraction), the subtract path
+        // bypasses Reduce.2, so unlike the paper's Figure 3 sketch the
+        // sum-reduce does not dominate the max-reduce; its broadcast does.
+        assert!(!dt.dominates(s, m));
+        assert!(dt.dominates(mb, m));
+    }
+
+    #[test]
+    fn chain_dominance_is_total() {
+        let mut b = GraphBuilder::new("chain");
+        let x = b.param("x", Shape::f32(&[4]));
+        let a = b.exp(x);
+        let c = b.tanh(a);
+        let d = b.neg(c);
+        let comp = b.finish(d);
+        let dt = DominatorTree::build(&comp, d, None);
+        assert!(dt.dominates(d, x));
+        assert!(dt.dominates(c, a));
+        assert_eq!(dt.idom(a), Some(c));
+        assert_eq!(dt.idom(d), None);
+    }
+
+    #[test]
+    fn diamond_joins_at_root() {
+        // root = a + b, both consume x: neither a nor b dominates x.
+        let mut b = GraphBuilder::new("diamond");
+        let x = b.param("x", Shape::f32(&[4]));
+        let l = b.exp(x);
+        let r = b.tanh(x);
+        let sum = b.add(l, r);
+        let comp = b.finish(sum);
+        let dt = DominatorTree::build(&comp, sum, None);
+        assert!(!dt.dominates(l, x));
+        assert!(!dt.dominates(r, x));
+        assert_eq!(dt.idom(x), Some(sum));
+    }
+
+    #[test]
+    fn scoped_build_excludes_external() {
+        let mut b = GraphBuilder::new("scoped");
+        let x = b.param("x", Shape::f32(&[4]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let comp = b.finish(t);
+        let scope: HashSet<InstrId> = [e, t].into_iter().collect();
+        let dt = DominatorTree::build(&comp, t, Some(&scope));
+        let nodes: Vec<InstrId> = dt.nodes().collect();
+        assert!(nodes.contains(&e) && nodes.contains(&t));
+        assert!(!nodes.contains(&x));
+    }
+}

@@ -1,0 +1,102 @@
+//! Memory IO footprint accounting.
+//!
+//! Two consumers:
+//! - Figure 1 regenerates the footprint percentile distribution over a
+//!   model corpus using [`instr_footprint_elements`] (the paper measures
+//!   "memory IO footprint size in number of floats").
+//! - The fusion pass bounds fused-kernel size with
+//!   [`group_footprint_bytes`] (§3.2: "the other factor is the fused
+//!   memory footprint", controlled by a tunable threshold).
+
+use crate::hlo::{Computation, InstrId};
+use std::collections::HashSet;
+
+/// IO footprint of one instruction in elements: output + all operands.
+pub fn instr_footprint_elements(comp: &Computation, id: InstrId) -> i64 {
+    let i = comp.get(id);
+    i.shape.num_elements()
+        + i.operands.iter().map(|&o| comp.get(o).shape.num_elements()).sum::<i64>()
+}
+
+/// IO footprint of a *fused group* in bytes: bytes flowing across the
+/// kernel boundary — external operands read plus outputs written
+/// (values consumed outside the group or being group roots). Internal
+/// intermediates stay in registers/shared memory and do not count; this
+/// is exactly the footprint reduction fusion buys (§4.1 objective (1)).
+pub fn group_footprint_bytes(comp: &Computation, members: &HashSet<InstrId>) -> usize {
+    let mut inputs: HashSet<InstrId> = HashSet::new();
+    let mut output_bytes = 0usize;
+    for &id in members {
+        let instr = comp.get(id);
+        for &op in &instr.operands {
+            if !members.contains(&op) {
+                inputs.insert(op);
+            }
+        }
+        let escapes = comp.users(id).iter().any(|u| !members.contains(u))
+            || comp.users(id).is_empty();
+        if escapes {
+            output_bytes += instr.shape.byte_size();
+        }
+    }
+    let input_bytes: usize = inputs.iter().map(|&i| comp.get(i).shape.byte_size()).sum();
+    input_bytes + output_bytes
+}
+
+/// Number of outputs a fused group exposes (multi-output fusion control).
+pub fn group_output_count(comp: &Computation, members: &HashSet<InstrId>) -> usize {
+    members
+        .iter()
+        .filter(|&&id| {
+            comp.users(id).iter().any(|u| !members.contains(u)) || comp.users(id).is_empty()
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    #[test]
+    fn instr_footprint() {
+        let mut b = GraphBuilder::new("f");
+        let x = b.param("x", Shape::f32(&[100]));
+        let y = b.param("y", Shape::f32(&[100]));
+        let s = b.add(x, y);
+        let comp = b.finish(s);
+        assert_eq!(instr_footprint_elements(&comp, s), 300);
+        assert_eq!(instr_footprint_elements(&comp, x), 100);
+    }
+
+    #[test]
+    fn fused_group_footprint_smaller_than_sum() {
+        // x -> exp -> tanh -> out: fusing exp+tanh removes the
+        // intermediate from the footprint.
+        let mut b = GraphBuilder::new("g");
+        let x = b.param("x", Shape::f32(&[256]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [e, t].into_iter().collect();
+        let fused = group_footprint_bytes(&comp, &members);
+        // unfused: exp reads 256 writes 256; tanh reads 256 writes 256 = 4096 B
+        // fused: read x (1024 B) + write t (1024 B) = 2048 B
+        assert_eq!(fused, 2048);
+    }
+
+    #[test]
+    fn multi_output_group() {
+        let mut b = GraphBuilder::new("g");
+        let x = b.param("x", Shape::f32(&[8]));
+        let e = b.exp(x);
+        let t = b.tanh(e); // escapes (root)
+        let s = b.sigmoid(e); // dead-end => also an output
+        let _ = s;
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [e, t, s].into_iter().collect();
+        assert_eq!(group_output_count(&comp, &members), 2);
+        // inputs: x (32 B); outputs: t + s (64 B)
+        assert_eq!(group_footprint_bytes(&comp, &members), 96);
+    }
+}

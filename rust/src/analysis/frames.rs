@@ -1,0 +1,145 @@
+//! While-loop frame contexts — §3.1's preprocessing step.
+//!
+//! Practical Tensorflow graphs contain large, possibly nested while
+//! loops, which break standard Work/Span analysis (it assumes a DAG).
+//! The paper partitions all nodes into subgraphs, one per frame context,
+//! and analyses each independently. Our IR carries the frame as an
+//! instruction tag (assigned by the graph builder / frontend); this
+//! module derives the partition and its nesting structure.
+
+use crate::hlo::{Computation, InstrId};
+use std::collections::BTreeMap;
+
+/// The frame partition of a computation.
+#[derive(Debug, Clone)]
+pub struct FramePartition {
+    /// frame → member instruction ids (id order).
+    members: BTreeMap<u32, Vec<InstrId>>,
+    /// frame → parent frame, for nested loops. A frame's parent is the
+    /// frame of the first external producer feeding into it (frames are
+    /// entered from their enclosing context); top-level frames have no
+    /// parent.
+    parent: BTreeMap<u32, Option<u32>>,
+}
+
+impl FramePartition {
+    pub fn build(comp: &Computation) -> FramePartition {
+        let mut members: BTreeMap<u32, Vec<InstrId>> = BTreeMap::new();
+        for id in comp.ids() {
+            members.entry(comp.get(id).frame).or_default().push(id);
+        }
+        let mut parent: BTreeMap<u32, Option<u32>> = BTreeMap::new();
+        for (&frame, ids) in &members {
+            // Frame 0 is by definition the top-level graph.
+            if frame == 0 {
+                parent.insert(0, None);
+                continue;
+            }
+            let mut p = None;
+            'outer: for &id in ids {
+                for &op in &comp.get(id).operands {
+                    let of = comp.get(op).frame;
+                    if of != frame {
+                        p = Some(of);
+                        break 'outer;
+                    }
+                }
+            }
+            parent.insert(frame, p);
+        }
+        FramePartition { members, parent }
+    }
+
+    pub fn frames(&self) -> Vec<u32> {
+        self.members.keys().copied().collect()
+    }
+
+    pub fn members(&self, frame: u32) -> &[InstrId] {
+        self.members.get(&frame).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn parent(&self, frame: u32) -> Option<u32> {
+        self.parent.get(&frame).copied().flatten()
+    }
+
+    /// Number of frame contexts.
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Instructions whose operands cross into this frame from another —
+    /// the frame's entry values (loop-carried inputs).
+    pub fn entries(&self, comp: &Computation, frame: u32) -> Vec<InstrId> {
+        self.members(frame)
+            .iter()
+            .copied()
+            .filter(|&id| {
+                comp.get(id).operands.iter().any(|&op| comp.get(op).frame != frame)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    fn nested() -> Computation {
+        let mut b = GraphBuilder::new("nested");
+        let x = b.param("x", Shape::f32(&[8]));
+        let e = b.exp(x); // frame 0
+        b.set_frame(1); // outer while body
+        let t = b.tanh(e);
+        b.set_frame(2); // inner while body
+        let s = b.sigmoid(t);
+        let s2 = b.sqrt(s);
+        b.set_frame(1);
+        let m = b.neg(s2);
+        b.set_frame(0);
+        let out = b.copy(m);
+        b.finish(out)
+    }
+
+    #[test]
+    fn partition_members() {
+        let c = nested();
+        let fp = FramePartition::build(&c);
+        assert_eq!(fp.frames(), vec![0, 1, 2]);
+        assert_eq!(fp.members(0).len(), 3); // param, exp, copy
+        assert_eq!(fp.members(1).len(), 2); // tanh, neg
+        assert_eq!(fp.members(2).len(), 2); // sigmoid, sqrt
+    }
+
+    #[test]
+    fn nesting_parents() {
+        let c = nested();
+        let fp = FramePartition::build(&c);
+        assert_eq!(fp.parent(0), None);
+        assert_eq!(fp.parent(1), Some(0));
+        assert_eq!(fp.parent(2), Some(1));
+    }
+
+    #[test]
+    fn frame_entries() {
+        let c = nested();
+        let fp = FramePartition::build(&c);
+        let e1 = fp.entries(&c, 1);
+        assert_eq!(e1.len(), 2); // tanh consumes frame-0 exp; neg consumes frame-2 sqrt
+    }
+
+    #[test]
+    fn single_frame_graph() {
+        let mut b = GraphBuilder::new("flat");
+        let x = b.param("x", Shape::f32(&[4]));
+        let y = b.exp(x);
+        let c = b.finish(y);
+        let fp = FramePartition::build(&c);
+        assert_eq!(fp.len(), 1);
+        assert_eq!(fp.parent(0), None);
+    }
+}

@@ -1,0 +1,17 @@
+//! Graph analyses feeding fusion, scheduling and codegen.
+//!
+//! - [`span`] — Work/Span (critical path) analysis (§3.1).
+//! - [`frames`] — while-loop frame-context partitioning (§3.1).
+//! - [`dominance`] — dominance tree for shared-memory space sharing (§5.1.3).
+//! - [`footprint`] — memory IO footprint accounting (Fig. 1, fusion
+//!   thresholds).
+
+pub mod dominance;
+pub mod footprint;
+pub mod frames;
+pub mod span;
+
+pub use dominance::DominatorTree;
+pub use footprint::{group_footprint_bytes, instr_footprint_elements};
+pub use frames::FramePartition;
+pub use span::SpanAnalysis;

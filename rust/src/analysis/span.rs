@@ -1,0 +1,214 @@
+//! Work/Span (critical path) analysis — §3.1 of the paper.
+//!
+//! Each instruction gets a *span*: the root has span 0; any other
+//! instruction's span is `max(span of its users) + 1`. Instructions with
+//! the same span form a *layer* with no data dependences among them
+//! (Figure 3's circled numbers). The maximum span is the critical path
+//! length.
+//!
+//! Spans are computed **per frame context** (see [`super::frames`]):
+//! standard Work/Span assumes an acyclic graph, and practical TF graphs
+//! contain (nested) while loops, so each frame is analysed independently.
+//! Edges that cross frames are ignored for span purposes, mirroring the
+//! paper's preprocessing step.
+
+use crate::hlo::{Computation, InstrId};
+use std::collections::BTreeMap;
+
+/// Result of Work/Span analysis over one computation.
+#[derive(Debug, Clone)]
+pub struct SpanAnalysis {
+    /// span[i] — layer number of instruction `i` within its frame.
+    span: Vec<u32>,
+    /// (frame, span) → instruction ids, each list in id order.
+    layers: BTreeMap<(u32, u32), Vec<InstrId>>,
+    /// frame → critical path length (max span in the frame).
+    critical_path: BTreeMap<u32, u32>,
+    /// total work: sum over non-free instructions of output elements.
+    work_elements: i64,
+}
+
+impl SpanAnalysis {
+    /// Run the analysis. Sinks (instructions with no same-frame users)
+    /// anchor span 0 of their frame, which makes the root span 0 per the
+    /// paper and handles multi-output graphs gracefully.
+    pub fn run(comp: &Computation) -> SpanAnalysis {
+        let n = comp.len();
+        let mut span = vec![0u32; n];
+        // Instructions are stored topologically (operands first), so a
+        // reverse scan sees every user before its producer.
+        for idx in (0..n).rev() {
+            let id = InstrId(idx);
+            let frame = comp.get(id).frame;
+            let mut s = 0u32;
+            for &u in comp.users(id) {
+                if comp.get(u).frame == frame {
+                    s = s.max(span[u.0] + 1);
+                }
+            }
+            span[idx] = s;
+        }
+
+        let mut layers: BTreeMap<(u32, u32), Vec<InstrId>> = BTreeMap::new();
+        let mut critical_path: BTreeMap<u32, u32> = BTreeMap::new();
+        for id in comp.ids() {
+            let frame = comp.get(id).frame;
+            layers.entry((frame, span[id.0])).or_default().push(id);
+            let e = critical_path.entry(frame).or_insert(0);
+            *e = (*e).max(span[id.0]);
+        }
+
+        let work_elements = comp
+            .instructions()
+            .filter(|i| !i.opcode.is_free())
+            .map(|i| i.shape.num_elements())
+            .sum();
+
+        SpanAnalysis { span, layers, critical_path, work_elements }
+    }
+
+    pub fn span_of(&self, id: InstrId) -> u32 {
+        self.span[id.0]
+    }
+
+    /// Instructions in layer `(frame, span)`, in id order. Empty slice if
+    /// the layer does not exist.
+    pub fn layer(&self, frame: u32, span: u32) -> &[InstrId] {
+        self.layers.get(&(frame, span)).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Critical path length of `frame` (0 if frame absent).
+    pub fn critical_path(&self, frame: u32) -> u32 {
+        self.critical_path.get(&frame).copied().unwrap_or(0)
+    }
+
+    /// All frames present, ascending.
+    pub fn frames(&self) -> Vec<u32> {
+        self.critical_path.keys().copied().collect()
+    }
+
+    /// Total parallel work in elements (the "Work" half of Work/Span).
+    pub fn work_elements(&self) -> i64 {
+        self.work_elements
+    }
+
+    /// Spans within `frame` that contain at least one library call — the
+    /// LC-layers delimiting fusable regions (§3.2), ascending.
+    pub fn lc_layers(&self, comp: &Computation, frame: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        for (&(f, s), ids) in &self.layers {
+            if f == frame && ids.iter().any(|&id| comp.get(id).opcode.is_library_call()) {
+                out.push(s);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    /// Reproduce the Figure 3 layering property: ops on the same layer
+    /// have no data dependences, root has span 0.
+    #[test]
+    fn figure3_like_spans() {
+        let mut b = GraphBuilder::new("fig3");
+        let scores = b.param("scores", Shape::f32(&[8, 64, 64]));
+        let v = b.param("v", Shape::f32(&[8, 64, 32]));
+        let m = b.reduce(scores, &[2], ReduceKind::Max);
+        let mb = b.broadcast(m, &[8, 64, 64], &[0, 1]);
+        let sh = b.sub(scores, mb);
+        let e = b.exp(sh);
+        let s = b.reduce(e, &[2], ReduceKind::Sum);
+        let sb = b.broadcast(s, &[8, 64, 64], &[0, 1]);
+        let p = b.div(e, sb);
+        let out = b.batch_dot(p, v);
+        let comp = b.finish(out);
+        let sa = SpanAnalysis::run(&comp);
+
+        assert_eq!(sa.span_of(out), 0);
+        assert_eq!(sa.span_of(p), 1);
+        assert_eq!(sa.span_of(sb), 2);
+        assert_eq!(sa.span_of(s), 3);
+        // exp feeds both div (span 1) and sum-reduce (span 3): span = 4
+        assert_eq!(sa.span_of(e), 4);
+        assert_eq!(sa.span_of(sh), 5);
+        assert_eq!(sa.span_of(mb), 6);
+        assert_eq!(sa.span_of(m), 7);
+        assert_eq!(sa.span_of(scores), 8);
+        // v is consumed only by the root dot
+        assert_eq!(sa.span_of(v), 1);
+        assert_eq!(sa.critical_path(0), 8);
+    }
+
+    #[test]
+    fn same_layer_has_no_dependences() {
+        let mut b = GraphBuilder::new("layers");
+        let x = b.param("x", Shape::f32(&[16]));
+        let y = b.param("y", Shape::f32(&[16]));
+        let e1 = b.exp(x);
+        let e2 = b.tanh(y);
+        let sum = b.add(e1, e2);
+        let comp = b.finish(sum);
+        let sa = SpanAnalysis::run(&comp);
+        assert_eq!(sa.span_of(e1), sa.span_of(e2));
+        for (frame, span) in sa.layers.keys() {
+            let ids = sa.layer(*frame, *span);
+            for &a in ids {
+                for &bb in ids {
+                    if a != bb {
+                        assert!(!comp.get(a).operands.contains(&bb));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frames_analysed_independently() {
+        let mut b = GraphBuilder::new("frames");
+        let x = b.param("x", Shape::f32(&[16]));
+        let e = b.exp(x);
+        b.set_frame(1);
+        let t = b.tanh(e); // crosses into frame 1
+        let u = b.sigmoid(t);
+        b.set_frame(0);
+        // bring `u` back via a same-shape op in frame 0
+        let u0 = b.copy(u);
+        let out = b.add(e, u0);
+        let comp = b.finish(out);
+        let sa = SpanAnalysis::run(&comp);
+        // frame 1's sink is `u` (its only user is in frame 0) → span 0
+        assert_eq!(sa.span_of(u), 0);
+        assert_eq!(sa.span_of(t), 1);
+        assert_eq!(sa.frames(), vec![0, 1]);
+        assert!(sa.critical_path(1) >= 1);
+    }
+
+    #[test]
+    fn lc_layers_found() {
+        let mut b = GraphBuilder::new("lc");
+        let x = b.param("x", Shape::f32(&[4, 4]));
+        let w = b.param("w", Shape::f32(&[4, 4]));
+        let d = b.dot(x, w); // library call
+        let e = b.exp(d);
+        let comp = b.finish(e);
+        let sa = SpanAnalysis::run(&comp);
+        let lc = sa.lc_layers(&comp, 0);
+        assert_eq!(lc, vec![sa.span_of(d)]);
+    }
+
+    #[test]
+    fn work_counts_non_free_ops() {
+        let mut b = GraphBuilder::new("w");
+        let x = b.param("x", Shape::f32(&[10]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let comp = b.finish(t);
+        let sa = SpanAnalysis::run(&comp);
+        assert_eq!(sa.work_elements(), 20); // exp + tanh, not the parameter
+    }
+}

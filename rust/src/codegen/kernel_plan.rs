@@ -1,0 +1,166 @@
+//! The emitted kernel artifact and its simulator projection.
+
+use super::shm_planner::ShmPlan;
+use crate::gpusim::cost::KernelDesc;
+use crate::hlo::{Computation, InstrId};
+use crate::schedule::{OpSchedule, Schedule, TunedPlan};
+use std::collections::HashSet;
+
+/// Which emitter produced an op's code (Algorithm 2's dispatch).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EmitterKind {
+    /// Own parallel loop under the given schedule (`StitchedEmitter`).
+    Stitched(Schedule),
+    /// Composed into its consumer's loop body (XLA's
+    /// `ElementalIrEmitter` fallback).
+    Elemental,
+}
+
+/// Code-generation record for one op in the fused kernel.
+#[derive(Debug, Clone)]
+pub struct EmittedOp {
+    pub id: InstrId,
+    pub emitter: EmitterKind,
+    /// Writes its per-block result to shared memory (`EmitWriteSharedArray`).
+    pub writes_shared: bool,
+    /// Writes to global memory (`EmitWriteOutputArray` — fusion roots).
+    pub writes_output: bool,
+    /// Pseudo-IR lines for this op (inspection/debugging; stands in for
+    /// the LLVM IR the paper emits).
+    pub ir: Vec<String>,
+}
+
+/// A fully planned kernel: what the paper's codegen phase hands to LLVM,
+/// minus the actual LLVM — launch dims, shared-memory layout, per-op
+/// emitters and pseudo-IR.
+#[derive(Debug, Clone)]
+pub struct KernelPlan {
+    pub name: String,
+    /// Launch dimensions.
+    pub blocks: u64,
+    pub threads: u32,
+    /// Shared-memory layout.
+    pub shm: ShmPlan,
+    /// Per-op emission records, in emission (topological) order.
+    pub ops: Vec<EmittedOp>,
+    /// Estimated execution time from tuning (sum-of-ops model, §4.4).
+    pub est_exec_us: f64,
+}
+
+impl KernelPlan {
+    /// Render the whole kernel's pseudo-IR.
+    pub fn ir_text(&self) -> String {
+        let mut out = format!(
+            "; kernel {} <<<{}, {}>>> smem={}B\n",
+            self.name, self.blocks, self.threads, self.shm.total_bytes
+        );
+        for op in &self.ops {
+            for line in &op.ir {
+                out.push_str(line);
+                out.push('\n');
+            }
+        }
+        out
+    }
+
+    /// Project the fused kernel onto a simulator descriptor.
+    pub fn to_kernel_desc(
+        &self,
+        comp: &Computation,
+        members: &HashSet<InstrId>,
+        tuned: &TunedPlan,
+    ) -> KernelDesc {
+        let mut d = fused_kernel_desc(comp, members, tuned);
+        d.smem_bytes = self.shm.total_bytes;
+        d
+    }
+}
+
+/// Resource descriptor of a fused kernel: DRAM traffic is the group's
+/// *boundary* footprint (internal values stay on chip — the whole point
+/// of stitching, §4.1 objective (1)), flops accumulate over members, and
+/// the worst member coalescing gates the memory system.
+pub fn fused_kernel_desc(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    tuned: &TunedPlan,
+) -> KernelDesc {
+    let mut inputs: HashSet<InstrId> = HashSet::new();
+    let mut bytes_written = 0u64;
+    let mut flops = 0u64;
+    let mut weighted = 0f64;
+    let mut worst_coalescing: f64 = 1.0;
+    // deterministic iteration: float accumulation order must not depend
+    // on hash state (compilation is asserted reproducible)
+    let mut ordered: Vec<InstrId> = members.iter().copied().collect();
+    ordered.sort_unstable();
+    for id in ordered {
+        let instr = comp.get(id);
+        for &op in &instr.operands {
+            if !members.contains(&op) {
+                inputs.insert(op);
+            }
+        }
+        if comp.users(id).iter().any(|u| !members.contains(u)) || comp.users(id).is_empty() {
+            bytes_written += instr.shape.byte_size() as u64;
+        }
+        if let Some(OpSchedule::Scheduled(s)) = tuned.assignment.get(&id) {
+            let d = crate::schedule::perf_library::kernel_desc(
+                comp,
+                id,
+                *s,
+                tuned.threads,
+                &crate::gpusim::DeviceConfig::pascal(),
+            );
+            flops += d.flops;
+            weighted += d.effective_flops();
+            worst_coalescing = worst_coalescing.min(d.coalescing);
+        }
+    }
+    let bytes_read: u64 = inputs.iter().map(|&i| comp.get(i).shape.byte_size() as u64).sum();
+    let op_weight = if flops > 0 { weighted / flops as f64 } else { 1.0 };
+    KernelDesc {
+        bytes_read,
+        bytes_written,
+        flops,
+        blocks: tuned.blocks,
+        threads: tuned.threads,
+        smem_bytes: 0,
+        coalescing: worst_coalescing,
+        op_weight,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::DeviceConfig;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+    use crate::schedule::{tune, PerfLibrary, TuningConfig};
+
+    #[test]
+    fn fused_desc_counts_boundary_traffic_only() {
+        let mut b = GraphBuilder::new("kd");
+        let x = b.param("x", Shape::f32(&[64, 64]));
+        let e = b.exp(x);
+        let r = b.reduce(e, &[1], ReduceKind::Sum);
+        let comp = b.finish(r);
+        let members: HashSet<InstrId> = [e, r].into_iter().collect();
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let tuned = tune(&comp, &members, &[r], &mut lib, &TuningConfig::default()).unwrap();
+        let plan = super::super::emitter::emit_group(
+            &comp,
+            &members,
+            &[r],
+            &tuned,
+            &DeviceConfig::pascal(),
+            "k0",
+        )
+        .unwrap();
+        let desc = plan.to_kernel_desc(&comp, &members, &tuned);
+        assert_eq!(desc.bytes_read, 64 * 64 * 4); // x only
+        assert_eq!(desc.bytes_written, 64 * 4); // r only — e stays on chip
+        assert!(desc.flops > 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! Code generation — §5 of the paper.
+//!
+//! - [`shm_planner`] — shared-memory planning: size-requirements
+//!   analysis, best-effort size shrinking (trade space for recompute)
+//!   and dominance-tree space sharing (§5.1).
+//! - [`emitter`] — `IrEmitterStitched` (Algorithm 2): block composition
+//!   of per-op parallel loop emitters, falling back to the elemental
+//!   (thread-composition) emitter where possible.
+//! - [`kernel_plan`] — the emitted kernel artifact: launch dimensions,
+//!   shared-memory layout, per-op emitters and pseudo-IR, plus the
+//!   conversion into a simulator kernel descriptor.
+
+pub mod emitter;
+pub mod kernel_plan;
+pub mod shm_planner;
+
+pub use emitter::emit_group;
+pub use kernel_plan::KernelPlan;
+pub use shm_planner::{plan_shared_memory, ShmError, ShmPlan};

@@ -1,0 +1,388 @@
+//! Shared-memory planning — §5.1.
+//!
+//! On-chip shared memory is the intermediary that lets ops in one fused
+//! kernel keep *different* parallel-loop emitters (block composition).
+//! Planning proceeds in the paper's three steps:
+//!
+//! 1. **Size-requirements analysis** (§5.1.1) — find ops needing a
+//!    per-block buffer: interior `Reduce`/`BatchDot` results
+//!    (mandatory), expensive elementwise ops with multiple users, and
+//!    expensive elementwise ops transitively consumed by a `BatchDot`
+//!    (high reuse);
+//! 2. **Size shrinking** (§5.1.2) — when the total exceeds the kernel
+//!    budget, trade space for recomputation, dropping buffers from
+//!    cheapest-to-recompute to dearest, preferring the candidate closest
+//!    to the root of the span;
+//! 3. **Space sharing** (§5.1.3) — reuse dead buffers along the data
+//!    flow, allowed when the new owner *dominates* the previous one in
+//!    the dominance tree rooted at the fusion root.
+
+use crate::analysis::{DominatorTree, SpanAnalysis};
+use crate::gpusim::DeviceConfig;
+use crate::hlo::{Computation, InstrId, Opcode};
+use crate::schedule::{OpSchedule, TunedPlan};
+use std::collections::{BTreeMap, HashSet};
+
+/// One allocated shared-memory buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShmSlot {
+    /// Byte offset inside the kernel's shared-memory segment.
+    pub offset: usize,
+    /// Buffer size in bytes (the owner's per-block chunk).
+    pub bytes: usize,
+    /// `Some(prev)` when this op reuses the buffer first allocated for
+    /// `prev` (the paper's SHARE annotation); `None` for fresh ALLOCs.
+    pub reused_from: Option<InstrId>,
+}
+
+/// The shared-memory plan for one fused kernel.
+#[derive(Debug, Clone, Default)]
+pub struct ShmPlan {
+    /// Per-op buffer assignment (ALLOC and SHARE entries).
+    pub slots: BTreeMap<InstrId, ShmSlot>,
+    /// Total distinct bytes allocated (peak shared-memory usage).
+    pub total_bytes: usize,
+    /// Ops whose buffers were dropped to recomputation by shrinking.
+    pub shrunk: Vec<InstrId>,
+    /// Bytes of allocated space reused by at least one later op — the
+    /// numerator of Table 3's Shared Ratio.
+    pub shared_bytes: usize,
+}
+
+impl ShmPlan {
+    /// Whether the §5.1.2 shrinking process fired for this kernel
+    /// (Table 3's #Shrink counts kernels where it did).
+    pub fn shrink_triggered(&self) -> bool {
+        !self.shrunk.is_empty()
+    }
+
+    /// Table 3's Shared Ratio for this kernel.
+    pub fn shared_ratio(&self) -> f64 {
+        if self.total_bytes == 0 {
+            0.0
+        } else {
+            self.shared_bytes as f64 / self.total_bytes as f64
+        }
+    }
+}
+
+/// Planning failure: requirements exceed the budget even after
+/// shrinking — fed back to fusion (§5.1.2).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShmError {
+    Exceeded { required: usize, limit: usize },
+}
+
+/// Candidate priority classes, in *drop order* (§5.1.2: "we start from
+/// inexpensive elementwise ops with multiple users, then expensive
+/// elementwise ops with multiple uses, finally expensive ops with
+/// transitive uses by BatchMatMul").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum Class {
+    CheapMultiUser = 0,
+    ExpensiveMultiUser = 1,
+    ExpensiveFeedsDot = 2,
+    /// Interior reduce/batch-dot results: structurally required, never
+    /// dropped.
+    Mandatory = 3,
+}
+
+/// Plan shared memory for the fused group under `tuned`.
+pub fn plan_shared_memory(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    roots: &[InstrId],
+    tuned: &TunedPlan,
+    dev: &DeviceConfig,
+) -> Result<ShmPlan, ShmError> {
+    let root_set: HashSet<InstrId> = roots.iter().copied().collect();
+    let mut candidates: Vec<(InstrId, Class, usize)> = Vec::new(); // (id, class, bytes)
+
+    for &id in members {
+        if root_set.contains(&id) {
+            continue; // roots write global memory directly
+        }
+        let Some(OpSchedule::Scheduled(sched)) = tuned.assignment.get(&id).copied() else {
+            continue; // inlined ops are never materialized
+        };
+        let instr = comp.get(id);
+        let chunk_bytes =
+            sched.chunk_elements(&instr.shape) as usize * instr.shape.dtype.byte_size();
+        let in_group_users =
+            comp.users(id).iter().filter(|u| members.contains(u)).count();
+
+        let class = if instr.opcode.is_reduce() || instr.opcode == Opcode::BatchDot {
+            Some(Class::Mandatory)
+        } else if instr.opcode.is_expensive_elementwise() {
+            if feeds_batch_dot(comp, id, members) {
+                Some(Class::ExpensiveFeedsDot)
+            } else if in_group_users > 1 {
+                Some(Class::ExpensiveMultiUser)
+            } else {
+                None
+            }
+        } else if instr.opcode.is_elementwise() && in_group_users > 1 {
+            Some(Class::CheapMultiUser)
+        } else {
+            None
+        };
+        if let Some(c) = class {
+            candidates.push((id, c, chunk_bytes));
+        }
+    }
+
+    // Emission order = ascending id (construction order is topological).
+    candidates.sort_by_key(|&(id, _, _)| id);
+
+    // Dominance tree for the sharing rule; only single-root groups have a
+    // well-defined root to anchor it (multi-root elementwise groups have
+    // no interior buffers in practice).
+    let domtree = if roots.len() == 1 {
+        Some(DominatorTree::build(comp, roots[0], Some(members)))
+    } else {
+        None
+    };
+    let spans = SpanAnalysis::run(comp);
+    let limit = dev.shared_mem_kernel_limit;
+
+    let mut dropped: Vec<InstrId> = Vec::new();
+    loop {
+        let live: Vec<(InstrId, Class, usize)> = candidates
+            .iter()
+            .copied()
+            .filter(|(id, _, _)| !dropped.contains(id))
+            .collect();
+        let plan = allocate(comp, members, &live, domtree.as_ref(), &dropped);
+        if plan.total_bytes <= limit {
+            return Ok(plan);
+        }
+        // §5.1.2 shrinking: drop the lowest class first; within a class,
+        // prefer the candidate closest to the root of the span.
+        let victim = live
+            .iter()
+            .filter(|(_, c, _)| *c != Class::Mandatory)
+            .min_by_key(|(id, c, _)| (*c, spans.span_of(*id)))
+            .map(|(id, _, _)| *id);
+        match victim {
+            Some(v) => dropped.push(v),
+            None => return Err(ShmError::Exceeded { required: plan.total_bytes, limit }),
+        }
+    }
+}
+
+/// Linear-scan allocation with dominance-gated reuse.
+fn allocate(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    live: &[(InstrId, Class, usize)],
+    domtree: Option<&DominatorTree>,
+    dropped: &[InstrId],
+) -> ShmPlan {
+    // Free point of a buffer: after its last in-group user is emitted.
+    let last_use = |id: InstrId| -> usize {
+        comp.users(id)
+            .iter()
+            .filter(|u| members.contains(u))
+            .map(|u| u.0)
+            .max()
+            .unwrap_or(id.0)
+    };
+
+    struct Region {
+        owner: InstrId,
+        offset: usize,
+        bytes: usize,
+        free_after: usize,
+        reused: bool,
+    }
+    let mut regions: Vec<Region> = Vec::new();
+    let mut plan = ShmPlan { shrunk: dropped.to_vec(), ..Default::default() };
+    let mut cursor = 0usize; // next fresh offset
+
+    for &(id, _, bytes) in live {
+        let emit_idx = id.0;
+        // Find a dead region big enough whose owner this op dominates
+        // (§5.1.3's rule: Reduce.2 reuses Reduce.1 because it dominates
+        // it). An elementwise op that is itself the buffer's last reader
+        // may overwrite it in place (Figure 3: Divide.1 reuses
+        // Exponential.1 while consuming it).
+        let is_ew = comp.get(id).opcode.is_elementwise();
+        let reuse = regions.iter_mut().find(|r| {
+            (r.free_after < emit_idx || (r.free_after == emit_idx && is_ew))
+                && r.bytes >= bytes
+                && domtree.map(|t| t.dominates(id, r.owner)).unwrap_or(false)
+        });
+        match reuse {
+            Some(r) => {
+                plan.slots.insert(
+                    id,
+                    ShmSlot { offset: r.offset, bytes, reused_from: Some(r.owner) },
+                );
+                plan.shared_bytes += bytes;
+                r.owner = id;
+                r.free_after = last_use(id);
+                r.reused = true;
+            }
+            None => {
+                plan.slots.insert(id, ShmSlot { offset: cursor, bytes, reused_from: None });
+                regions.push(Region {
+                    owner: id,
+                    offset: cursor,
+                    bytes,
+                    free_after: last_use(id),
+                    reused: false,
+                });
+                cursor += bytes;
+            }
+        }
+    }
+    plan.total_bytes = cursor;
+    plan
+}
+
+/// Does `id`'s value flow into a `BatchDot` within the group, possibly
+/// through shape-modulation ops (the Figure 3 `Divide.1 → Bitcast.1 →
+/// Dot.1` pattern)?
+fn feeds_batch_dot(comp: &Computation, id: InstrId, members: &HashSet<InstrId>) -> bool {
+    let mut stack: Vec<InstrId> = comp.users(id).iter().copied().collect();
+    let mut seen: HashSet<InstrId> = HashSet::new();
+    while let Some(u) = stack.pop() {
+        if !members.contains(&u) || !seen.insert(u) {
+            continue;
+        }
+        let op = comp.get(u).opcode;
+        if op == Opcode::BatchDot {
+            return true;
+        }
+        if op.is_shape_modulation() {
+            stack.extend(comp.users(u).iter().copied());
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+    use crate::schedule::{tune, PerfLibrary, TuningConfig};
+
+    /// Figure 3's full pattern: softmax stitched into a batch-dot.
+    /// Expected (per the paper's annotations): both reduces ALLOC,
+    /// exp ALLOCs, divide SHAREs exp's buffer, the second reduce SHAREs
+    /// the first's.
+    fn fig3() -> (Computation, Vec<InstrId>, InstrId) {
+        let mut b = GraphBuilder::new("fig3");
+        let scores = b.param("scores", Shape::f32(&[8, 64, 64]));
+        let v = b.param("v", Shape::f32(&[8, 64, 32]));
+        let m = b.reduce(scores, &[2], ReduceKind::Max); // Reduce.1
+        let mb = b.broadcast(m, &[8, 64, 64], &[0, 1]);
+        let sh = b.sub(scores, mb);
+        let e = b.exp(sh); // Exponential.1
+        let s = b.reduce(e, &[2], ReduceKind::Sum); // Reduce.2
+        let sb = b.broadcast(s, &[8, 64, 64], &[0, 1]);
+        let p = b.div(e, sb); // Divide.1
+        let bc = b.bitcast(p, &[8, 64, 64]); // Bitcast.1
+        let out = b.batch_dot(bc, v); // Dot.1
+        let comp = b.finish(out);
+        (comp, vec![m, mb, sh, e, s, sb, p, bc], out)
+    }
+
+    fn plan_fig3() -> (Computation, Vec<InstrId>, InstrId, ShmPlan) {
+        let (comp, ids, out) = fig3();
+        let mut members: HashSet<InstrId> = ids.iter().copied().collect();
+        members.insert(out);
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let tuned = tune(&comp, &members, &[out], &mut lib, &TuningConfig::default())
+            .expect("fig3 must tune");
+        let plan =
+            plan_shared_memory(&comp, &members, &[out], &tuned, &DeviceConfig::pascal())
+                .expect("fig3 must fit");
+        (comp, ids, out, plan)
+    }
+
+    #[test]
+    fn figure3_allocations_match_paper() {
+        let (_, ids, _, plan) = plan_fig3();
+        let (m, e, s, p) = (ids[0], ids[3], ids[4], ids[6]);
+        // Reduce.1, Exponential.1 get fresh ALLOCs.
+        assert!(plan.slots[&m].reused_from.is_none(), "Reduce.1 should ALLOC");
+        assert!(plan.slots[&e].reused_from.is_none(), "Exponential.1 should ALLOC");
+        // Divide.1 SHAREs Exponential.1's buffer in place (the paper's
+        // §5.1.3 example). In the stable softmax Reduce.2 does not
+        // dominate Reduce.1 (the subtract path bypasses it), so the
+        // planner conservatively keeps the second reduce's own buffer.
+        assert_eq!(plan.slots[&p].reused_from, Some(e), "Divide.1 should reuse Exponential.1");
+        assert!(plan.slots[&s].reused_from.is_none());
+        assert!(plan.shared_ratio() > 0.0);
+    }
+
+    #[test]
+    fn figure3_fits_budget() {
+        let (_, _, _, plan) = plan_fig3();
+        assert!(plan.total_bytes <= DeviceConfig::pascal().shared_mem_kernel_limit);
+        assert!(!plan.shrink_triggered());
+    }
+
+    #[test]
+    fn single_user_cheap_ops_get_no_buffer() {
+        let mut b = GraphBuilder::new("cheap");
+        let x = b.param("x", Shape::f32(&[64, 64]));
+        let a = b.add(x, x);
+        let t = b.tanh(a);
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [a, t].into_iter().collect();
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let tuned = tune(&comp, &members, &[t], &mut lib, &TuningConfig::default()).unwrap();
+        let plan =
+            plan_shared_memory(&comp, &members, &[t], &tuned, &DeviceConfig::pascal()).unwrap();
+        assert!(plan.slots.is_empty());
+        assert_eq!(plan.total_bytes, 0);
+    }
+
+    #[test]
+    fn shrinking_drops_cheap_multiuser_first() {
+        // A cheap multi-user op and an expensive multi-user op compete
+        // for a budget that fits only one: the cheap one is dropped.
+        let mut b = GraphBuilder::new("shrink");
+        let dev = DeviceConfig { shared_mem_kernel_limit: 3000, ..DeviceConfig::pascal() };
+        let x = b.param("x", Shape::f32(&[16, 512]));
+        let a = b.add(x, x); // cheap, two users
+        let e = b.exp(a); // expensive, two users
+        let t1 = b.tanh(e);
+        let t2 = b.sigmoid(e);
+        let u = b.add(t1, t2);
+        let w = b.mul(u, a);
+        let r = b.reduce(w, &[1], ReduceKind::Sum);
+        let comp = b.finish(r);
+        let members: HashSet<InstrId> = [a, e, t1, t2, u, w, r].into_iter().collect();
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let tuning = TuningConfig::default();
+        // Tune under the restricted device budget via a plan that yields
+        // 16 blocks → 512-float (2 KB) chunks per buffered op.
+        let tuned = tune(&comp, &members, &[r], &mut lib, &tuning).unwrap();
+        match plan_shared_memory(&comp, &members, &[r], &tuned, &dev) {
+            Ok(plan) => {
+                if plan.shrink_triggered() {
+                    // cheap `add` dropped before expensive `exp`
+                    assert!(plan.shrunk.contains(&a));
+                    assert!(!plan.shrunk.contains(&e));
+                }
+            }
+            Err(_) => panic!("droppable candidates must allow shrinking to succeed"),
+        }
+    }
+
+    #[test]
+    fn feeds_batch_dot_through_shape_ops() {
+        let (comp, ids, out) = fig3();
+        let mut members: HashSet<InstrId> = ids.iter().copied().collect();
+        members.insert(out);
+        let p = ids[6]; // Divide.1 → Bitcast.1 → Dot.1
+        assert!(feeds_batch_dot(&comp, p, &members));
+        let m = ids[0]; // Reduce.1 feeds broadcast→sub→…: broadcast is
+                        // shape-mod but sub is not → no direct dot path
+        assert!(!feeds_batch_dot(&comp, m, &members));
+    }
+}

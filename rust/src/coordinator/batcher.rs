@@ -1,0 +1,99 @@
+//! Dynamic batching for the online serving loop.
+//!
+//! The paper's NMT online use case (§6.1) is latency-critical with small
+//! batches; the batcher trades a bounded wait for batching efficiency:
+//! a batch closes when it reaches `max_batch` requests or when
+//! `max_wait` has elapsed since its first request.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// One enqueued inference request.
+pub struct Request {
+    /// Flattened input row(s) for this request.
+    pub input: Vec<f32>,
+    /// Where to send the flattened output.
+    pub respond: std::sync::mpsc::Sender<anyhow::Result<Vec<f32>>>,
+    /// Enqueue timestamp (for latency accounting).
+    pub enqueued: Instant,
+}
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Collect the next batch from `rx` under `policy`. Blocks for the first
+/// request; then fills up to `max_batch` until `max_wait` expires.
+/// Returns `None` once the channel is closed and drained.
+pub fn next_batch(rx: &Receiver<Request>, policy: &BatchPolicy) -> Option<Vec<Request>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + policy.max_wait;
+    let mut batch = vec![first];
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(req) => batch.push(req),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn req(v: f32) -> (Request, mpsc::Receiver<anyhow::Result<Vec<f32>>>) {
+        let (tx, rx) = mpsc::channel();
+        (Request { input: vec![v], respond: tx, enqueued: Instant::now() }, rx)
+    }
+
+    #[test]
+    fn batch_fills_to_capacity() {
+        let (tx, rx) = mpsc::channel();
+        let mut receivers = Vec::new();
+        for i in 0..5 {
+            let (r, rr) = req(i as f32);
+            receivers.push(rr);
+            tx.send(r).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(50) };
+        let batch = next_batch(&rx, &policy).unwrap();
+        assert_eq!(batch.len(), 3);
+        let batch2 = next_batch(&rx, &policy).unwrap();
+        assert_eq!(batch2.len(), 2);
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        let (r, _rr) = req(1.0);
+        tx.send(r).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let start = Instant::now();
+        let batch = next_batch(&rx, &policy).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(start.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+}

@@ -1,0 +1,101 @@
+//! Latency/throughput accounting for the serving loop.
+
+use std::time::Duration;
+
+/// Collects request latencies and derives the usual percentiles.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyRecorder {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyRecorder {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.samples_us.push(us);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+    }
+
+    /// Percentile in [0, 100], nearest-rank.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
+        v[rank.min(v.len()) - 1]
+    }
+
+    /// Requests per second given the wall-clock window of the run.
+    pub fn throughput_rps(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        self.samples_us.len() as f64 / wall.as_secs_f64()
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(vals: &[f64]) -> LatencyRecorder {
+        let mut r = LatencyRecorder::default();
+        for &v in vals {
+            r.record_us(v);
+        }
+        r
+    }
+
+    #[test]
+    fn mean_and_percentiles() {
+        let r = rec(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert!((r.mean_us() - 22.0).abs() < 1e-9);
+        assert_eq!(r.percentile_us(50.0), 3.0);
+        assert_eq!(r.percentile_us(99.0), 100.0);
+        assert_eq!(r.percentile_us(100.0), 100.0);
+    }
+
+    #[test]
+    fn empty_is_safe() {
+        let r = LatencyRecorder::default();
+        assert_eq!(r.mean_us(), 0.0);
+        assert_eq!(r.percentile_us(50.0), 0.0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn throughput() {
+        let r = rec(&[1.0; 10]);
+        assert!((r.throughput_rps(Duration::from_secs(2)) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = rec(&[1.0, 2.0]);
+        let b = rec(&[3.0]);
+        a.merge(&b);
+        assert_eq!(a.len(), 3);
+    }
+}

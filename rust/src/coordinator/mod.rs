@@ -1,0 +1,19 @@
+//! The L3 coordinator: compilation pipeline driver, evaluation harness
+//! and the NMT online-serving loop.
+//!
+//! - [`pipeline`] — `HloModule` → fusion → schedule planning → codegen →
+//!   simulated timing (Fig. 4's three stages), for both the XLA baseline
+//!   and FusionStitching, plus the per-benchmark evaluation report that
+//!   regenerates Figs. 6–8 and Table 3.
+//! - [`server`] / [`batcher`] — the latency-critical online NMT use case
+//!   (§6.1): a thread-based serving loop with dynamic batching over the
+//!   PJRT runtime.
+//! - [`metrics`] — latency/throughput accounting for the serving loop.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod server;
+
+pub use pipeline::{compile_module, evaluate, CompiledModule, FusionMode, ModuleReport, PipelineConfig};
+pub use server::{ServerConfig, ServingCoordinator};

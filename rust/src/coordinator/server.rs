@@ -1,0 +1,235 @@
+//! The online serving coordinator — the paper's latency-critical NMT use
+//! case (§6.1: "batch size is small, and latency is critical … every
+//! millisecond of performance improvement is of significance").
+//!
+//! A worker thread owns the PJRT executable; callers submit flattened
+//! request rows and receive their slice of the batched output. Padding
+//! fills partial batches (the artifact's batch dimension is baked in at
+//! AOT time).
+
+use super::batcher::{next_batch, BatchPolicy, Request};
+use crate::runtime::Engine;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::sync::mpsc::{self, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server configuration: which artifact to serve and its baked shapes.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Artifact stem under `artifacts/` (e.g. "attention_fused").
+    pub artifact: String,
+    /// Baked batch size of the artifact (requests per execution).
+    pub batch: usize,
+    /// Flattened f32 elements per request in the input.
+    pub in_elems_per_request: usize,
+    /// Flattened f32 elements per request in the (first) output.
+    pub out_elems_per_request: usize,
+    /// Input dims of the whole batch (product = batch × in_elems).
+    pub input_dims: Vec<i64>,
+    pub policy: BatchPolicy,
+}
+
+/// Handle to the serving loop.
+pub struct ServingCoordinator {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<WorkerStats>>,
+    cfg: ServerConfig,
+}
+
+/// Worker-side counters.
+#[derive(Debug, Default, Clone)]
+pub struct WorkerStats {
+    pub batches: usize,
+    pub requests: usize,
+    /// Execution time spent inside PJRT, per batch, microseconds.
+    pub exec_us: Vec<f64>,
+}
+
+impl ServingCoordinator {
+    /// Start the loop: spawns the worker, which owns the PJRT client and
+    /// executable (the xla wrappers are not `Send`, so everything PJRT
+    /// lives on the worker thread) and signals readiness back.
+    pub fn start(artifact_dir: &Path, cfg: ServerConfig) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let wcfg = cfg.clone();
+        let dir = artifact_dir.to_path_buf();
+        let worker = std::thread::spawn(move || {
+            let mut stats = WorkerStats::default();
+            let engine = match Engine::new(&dir).and_then(|mut e| {
+                e.load(&wcfg.artifact)?;
+                Ok(e)
+            }) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return stats;
+                }
+            };
+            let model = engine.get(&wcfg.artifact).expect("loaded above");
+            let batch_elems = wcfg.batch * wcfg.in_elems_per_request;
+            while let Some(batch) = next_batch(&rx, &wcfg.policy) {
+                // Assemble the padded batch input.
+                let mut input = vec![0f32; batch_elems];
+                for (i, req) in batch.iter().enumerate() {
+                    let start = i * wcfg.in_elems_per_request;
+                    let row = &req.input;
+                    input[start..start + row.len().min(wcfg.in_elems_per_request)]
+                        .copy_from_slice(&row[..row.len().min(wcfg.in_elems_per_request)]);
+                }
+                let t0 = Instant::now();
+                let result = model.run_f32(&[(&input, &wcfg.input_dims)]);
+                stats.exec_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                stats.batches += 1;
+                stats.requests += batch.len();
+                match result {
+                    Ok(outputs) => {
+                        let out = &outputs[0];
+                        for (i, req) in batch.iter().enumerate() {
+                            let start = i * wcfg.out_elems_per_request;
+                            let end = start + wcfg.out_elems_per_request;
+                            let slice = out
+                                .get(start..end)
+                                .map(<[f32]>::to_vec)
+                                .ok_or_else(|| anyhow!("output shorter than expected"));
+                            let _ = req.respond.send(slice);
+                        }
+                    }
+                    Err(e) => {
+                        for req in &batch {
+                            let _ = req.respond.send(Err(anyhow!("execution failed: {e:#}")));
+                        }
+                    }
+                }
+            }
+            stats
+        });
+        // Fail fast if the artifact is missing/bad.
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("worker died during startup"))
+            .and_then(|r| r)
+            .inspect_err(|_| {
+                let _ = worker.thread();
+            })?;
+        Ok(ServingCoordinator { tx: Some(tx), worker: Some(worker), cfg })
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Submit one request and block for its output. Returns the output
+    /// slice and the end-to-end latency.
+    pub fn infer(&self, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
+        let (rtx, rrx) = mpsc::channel();
+        let enqueued = Instant::now();
+        self.tx
+            .as_ref()
+            .context("server stopped")?
+            .send(Request { input, respond: rtx, enqueued })
+            .map_err(|_| anyhow!("worker gone"))?;
+        let out = rrx.recv().context("worker dropped response")??;
+        Ok((out, enqueued.elapsed()))
+    }
+
+    /// Submit asynchronously; the caller holds the response channel.
+    pub fn infer_async(
+        &self,
+        input: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .context("server stopped")?
+            .send(Request { input, respond: rtx, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("worker gone"))?;
+        Ok(rrx)
+    }
+
+    /// Stop accepting requests, drain, and return worker statistics.
+    pub fn shutdown(mut self) -> Result<WorkerStats> {
+        drop(self.tx.take());
+        self.worker
+            .take()
+            .context("already shut down")?
+            .join()
+            .map_err(|_| anyhow!("worker panicked"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    /// Identity-ish artifact: doubles a [4, 3] batch (batch=4 requests of
+    /// 3 elements each).
+    const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+
+    fn server(dir: &TempDir) -> ServingCoordinator {
+        std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+        ServingCoordinator::start(
+            dir.path(),
+            ServerConfig {
+                artifact: "double".into(),
+                batch: 4,
+                in_elems_per_request: 3,
+                out_elems_per_request: 3,
+                input_dims: vec![4, 3],
+                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let dir = TempDir::new("srv");
+        let srv = server(&dir);
+        let (out, lat) = srv.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(out, vec![2.0, 4.0, 6.0]);
+        assert!(lat > Duration::ZERO);
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.requests, 1);
+    }
+
+    #[test]
+    fn concurrent_requests_share_batches() {
+        let dir = TempDir::new("srv2");
+        let srv = server(&dir);
+        let pending: Vec<_> = (0..8)
+            .map(|i| srv.infer_async(vec![i as f32, 0.0, 1.0]).unwrap())
+            .collect();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out, vec![2.0 * i as f32, 0.0, 2.0]);
+        }
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.requests, 8);
+        // batching actually happened: fewer executions than requests
+        assert!(stats.batches < 8, "batches = {}", stats.batches);
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let dir = TempDir::new("srv3");
+        let srv = server(&dir);
+        let rx = srv.infer_async(vec![5.0, 5.0, 5.0]).unwrap();
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![10.0, 10.0, 10.0]);
+    }
+}

@@ -1,0 +1,255 @@
+//! Corpus generation + footprint statistics (Figure 1).
+
+use crate::analysis::footprint::instr_footprint_elements;
+use crate::hlo::instruction::ReduceKind;
+use crate::hlo::{Computation, GraphBuilder, Opcode, Shape};
+use crate::testutil::Rng;
+
+/// The six most frequent computing ops of Figure 1. `Reduce` collects
+/// mean/sum/min/max like the paper's orange line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpClass {
+    Mul,
+    Add,
+    Sub,
+    Reduce,
+    MatMul,
+    Conv2D,
+}
+
+impl OpClass {
+    pub const ALL: [OpClass; 6] =
+        [OpClass::Mul, OpClass::Add, OpClass::Sub, OpClass::Reduce, OpClass::MatMul, OpClass::Conv2D];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OpClass::Mul => "mul",
+            OpClass::Add => "add",
+            OpClass::Sub => "sub",
+            OpClass::Reduce => "reduce",
+            OpClass::MatMul => "matmul",
+            OpClass::Conv2D => "conv2d",
+        }
+    }
+
+    fn classify(op: Opcode, kind: Option<ReduceKind>) -> Option<OpClass> {
+        match op {
+            Opcode::Multiply => Some(OpClass::Mul),
+            Opcode::Add => Some(OpClass::Add),
+            Opcode::Subtract => Some(OpClass::Sub),
+            Opcode::Reduce => kind.map(|_| OpClass::Reduce),
+            Opcode::Dot | Opcode::BatchDot => Some(OpClass::MatMul),
+            Opcode::Convolution => Some(OpClass::Conv2D),
+            _ => None,
+        }
+    }
+}
+
+/// Corpus generation parameters.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub seed: u64,
+    /// Number of synthetic models. (The paper's population is 53,470
+    /// models; percentile curves stabilize far earlier.)
+    pub models: usize,
+    /// Ops per model, min/max.
+    pub ops_per_model: (usize, usize),
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig { seed: 1701, models: 800, ops_per_model: (24, 96) }
+    }
+}
+
+/// Footprint samples (in number of floats, like Figure 1's x-axis) per
+/// op class.
+#[derive(Debug, Default, Clone)]
+pub struct CorpusStats {
+    pub samples: std::collections::HashMap<OpClass, Vec<i64>>,
+}
+
+impl CorpusStats {
+    pub fn total_instances(&self) -> usize {
+        self.samples.values().map(Vec::len).sum()
+    }
+
+    pub fn record(&mut self, comp: &Computation) {
+        for instr in comp.instructions() {
+            if let Some(class) = OpClass::classify(instr.opcode, instr.attrs.reduce_kind) {
+                self.samples
+                    .entry(class)
+                    .or_default()
+                    .push(instr_footprint_elements(comp, instr.id));
+            }
+        }
+    }
+
+    /// Finalize: sort all series ascending for percentile queries.
+    pub fn finalize(&mut self) {
+        for v in self.samples.values_mut() {
+            v.sort_unstable();
+        }
+    }
+}
+
+/// Generate the corpus and collect footprint statistics.
+pub fn generate(cfg: &CorpusConfig) -> CorpusStats {
+    let mut rng = Rng::new(cfg.seed);
+    let mut stats = CorpusStats::default();
+    for i in 0..cfg.models {
+        let comp = gen_model(&mut rng, i, cfg);
+        stats.record(&comp);
+    }
+    stats.finalize();
+    stats
+}
+
+/// Accumulated-percentile curve of a sorted series at the given
+/// cut-points of log2(footprint): returns, per cut, the fraction of
+/// instances with footprint ≤ 2^cut — Figure 1's y-axis.
+pub fn percentiles(sorted: &[i64], log2_cuts: &[u32]) -> Vec<f64> {
+    log2_cuts
+        .iter()
+        .map(|&c| {
+            let bound = 1i64 << c;
+            let pos = sorted.partition_point(|&x| x <= bound);
+            pos as f64 / sorted.len().max(1) as f64
+        })
+        .collect()
+}
+
+/// One synthetic model: a stack of layers whose widths follow a
+/// heavy-tailed distribution — mostly small (embedding/update tails),
+/// occasionally large (wide dense layers).
+fn gen_model(rng: &mut Rng, idx: usize, _cfg: &CorpusConfig) -> Computation {
+    let mut b = GraphBuilder::new(format!("corpus_{idx}"));
+    // Heavy-tailed width: 2^(3..14) weighted toward the low end
+    // (quadratic bias).
+    fn width(rng: &mut Rng) -> i64 {
+        let exp = 3 + (rng.f64() * rng.f64() * 11.0) as u32;
+        1i64 << exp
+    }
+    let batch = [1i64, 8, 32, 128][rng.below(4)];
+
+    let d0 = width(rng);
+    let x0 = b.param("x", Shape::f32(&[batch, d0]));
+    let mut cur = x0;
+    let layers = rng.range(2, 6);
+    for _ in 0..layers {
+        let cur_dims = b.peek().get(cur).shape.dims.clone();
+        let d_in = cur_dims[1];
+        match rng.below(8) {
+            // dense layer (matmul + bias/activation elementwise tail)
+            0 | 1 => {
+                let d_out = width(rng);
+                let w = b.param("w", Shape::f32(&[d_in, d_out]));
+                let y = b.dot(cur, w);
+                let bias = b.param("bias", Shape::f32(&[d_out]));
+                let bb = b.broadcast(bias, &[batch, d_out], &[1]);
+                let z = b.add(y, bb);
+                cur = b.tanh(z);
+            }
+            // conv block when the width factors nicely
+            2 => {
+                let hw = 16i64;
+                if d_in % (hw * hw) == 0 && d_in / (hw * hw) > 0 {
+                    let c = d_in / (hw * hw);
+                    let img = b.reshape(cur, &[batch, hw, hw, c]);
+                    let k = b.param("k", Shape::f32(&[3, 3, c, c]));
+                    let cv = b.conv2d(img, k);
+                    cur = b.reshape(cv, &[batch, d_in]);
+                } else {
+                    let o = b.param("o", Shape::f32(&[batch, d_in]));
+                    cur = b.mul(cur, o);
+                }
+            }
+            // normalization-ish reduce + broadcast + sub/mul
+            3 | 4 => {
+                let kind = *rng.pick(&[
+                    ReduceKind::Mean,
+                    ReduceKind::Sum,
+                    ReduceKind::Min,
+                    ReduceKind::Max,
+                ]);
+                let r = b.reduce(cur, &[1], kind);
+                let rb = b.broadcast(r, &[batch, d_in], &[0]);
+                cur = b.sub(cur, rb);
+            }
+            // elementwise update pairs (the fine-granularity population)
+            _ => {
+                let o = b.param("o", Shape::f32(&[batch, d_in]));
+                let m = b.mul(cur, o);
+                let a = b.add(m, o);
+                cur = b.sub(a, cur);
+            }
+        }
+    }
+    let dims = b.peek().get(cur).shape.dims.clone();
+    let all: Vec<usize> = (0..dims.len()).collect();
+    let out = b.reduce(cur, &all, ReduceKind::Mean);
+    b.finish(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CorpusStats {
+        generate(&CorpusConfig { seed: 7, models: 120, ops_per_model: (8, 32) })
+    }
+
+    #[test]
+    fn corpus_covers_all_classes() {
+        let stats = small();
+        for class in OpClass::ALL {
+            assert!(
+                stats.samples.get(&class).map(|v| !v.is_empty()).unwrap_or(false),
+                "class {class:?} missing"
+            );
+        }
+        assert!(stats.total_instances() > 500);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = small();
+        let b = small();
+        for class in OpClass::ALL {
+            assert_eq!(a.samples[&class], b.samples[&class]);
+        }
+    }
+
+    #[test]
+    fn percentile_curve_monotone() {
+        let stats = small();
+        let cuts: Vec<u32> = (4..26).collect();
+        for class in OpClass::ALL {
+            let p = percentiles(&stats.samples[&class], &cuts);
+            for w in p.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12, "non-monotone percentile curve");
+            }
+            assert!(p.last().copied().unwrap_or(0.0) > 0.99);
+        }
+    }
+
+    #[test]
+    fn figure1_shape_matmul_bigger_than_elementwise() {
+        // The paper's observation: MatMul/Conv2D footprints are generally
+        // larger than elementwise ones — compare medians.
+        let stats = small();
+        let median = |v: &Vec<i64>| v[v.len() / 2];
+        let mm = median(&stats.samples[&OpClass::MatMul]);
+        let add = median(&stats.samples[&OpClass::Add]);
+        assert!(mm > add, "matmul median {mm} should exceed add median {add}");
+    }
+
+    #[test]
+    fn most_instances_are_small() {
+        // "most op instances have small memory footprints" — over half
+        // of elementwise instances below 2^20 floats.
+        let stats = small();
+        let p = percentiles(&stats.samples[&OpClass::Add], &[20]);
+        assert!(p[0] > 0.5, "fraction below 2^20 = {}", p[0]);
+    }
+}

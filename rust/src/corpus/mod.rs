@@ -1,0 +1,15 @@
+//! Synthetic model corpus — regenerates Figure 1.
+//!
+//! The paper's Figure 1 plots the accumulated percentile distribution of
+//! memory IO footprints for the six most frequent computing ops over
+//! 53,470 production models on Alibaba PAI. We have no access to that
+//! corpus, so this module generates a seeded synthetic population with
+//! the qualitative properties the paper reports (see DESIGN.md
+//! substitutions): most elementwise/reduce instances have small
+//! footprints (launch-bound territory), MatMul/Conv2D instances run
+//! larger, and all distributions are heavy-tailed (spanning many decades
+//! at log2 scale).
+
+pub mod generator;
+
+pub use generator::{percentiles, CorpusConfig, CorpusStats, OpClass};

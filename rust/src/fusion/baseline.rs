@@ -1,0 +1,289 @@
+//! The XLA-like fusion baseline — the comparison target of every
+//! experiment (§6.1: "Our evaluation baseline is the XLA implementation
+//! of fusion and code generation").
+//!
+//! Reimplements the static `ShouldFuse` discipline of XLA's
+//! `GpuInstructionFusion` circa TF 1.7, whose known exceptions motivate
+//! the paper (§1): expensive elementwise ops are not duplicated, column
+//! reductions and layout transposes stay unfused, batched matmuls are
+//! left alone, and reductions can only ever be fusion *roots* (input
+//! fusion), never interior producers — because the single parallel loop
+//! emitter composes ops by thread only.
+
+use super::plan::FusionPlan;
+use crate::hlo::{Computation, InstrId, Opcode};
+use std::collections::HashSet;
+
+/// Run the baseline pass and return the kernel partition.
+pub fn xla_baseline_fusion(comp: &Computation) -> FusionPlan {
+    // group_id per instruction; start with every non-free op a singleton.
+    let n = comp.len();
+    let mut group: Vec<Option<usize>> = vec![None; n];
+    let mut next_group = 0usize;
+    for id in comp.ids() {
+        if !comp.get(id).opcode.is_free() && !comp.get(id).opcode.is_library_call() {
+            group[id.0] = Some(next_group);
+            next_group += 1;
+        }
+    }
+
+    // Walk producers in reverse topological order, trying to fuse each
+    // into its consumer's group (greedy, like XLA's reverse-post-order
+    // instruction fusion).
+    for idx in (0..n).rev() {
+        let producer = InstrId(idx);
+        if group[producer.0].is_none() {
+            continue;
+        }
+        let users: Vec<InstrId> = comp.users(producer).to_vec();
+        if users.is_empty() {
+            continue;
+        }
+        // All users must already sit in one common group (no multi-output
+        // fusion in the baseline) …
+        let target = match group[users[0].0] {
+            Some(g) if users.iter().all(|u| group[u.0] == Some(g)) => g,
+            _ => continue,
+        };
+        if !should_fuse(comp, producer, &users, &group, target) {
+            continue;
+        }
+        // … and fusing must not create an inter-group cycle: no operand
+        // of the producer may transitively depend on a member of the
+        // target group other than through the producer itself.
+        if creates_cycle(comp, producer, &group, target) {
+            continue;
+        }
+        group[producer.0] = Some(target);
+    }
+
+    assemble(comp, group)
+}
+
+/// XLA's static `ShouldFuse` rules (the baseline's whole intelligence).
+fn should_fuse(
+    comp: &Computation,
+    producer: InstrId,
+    users: &[InstrId],
+    group: &[Option<usize>],
+    target: usize,
+) -> bool {
+    let p = comp.get(producer);
+    // Never fuse across library calls, and never fuse the library call.
+    if p.opcode.is_library_call() {
+        return false;
+    }
+    // While-loop bodies are separate computations in XLA: no kernel
+    // straddles frames.
+    if users.iter().any(|&u| comp.get(u).frame != p.frame) {
+        return false;
+    }
+    // Batched matmuls are exceptions XLA leaves alone (§1).
+    if p.opcode == Opcode::BatchDot {
+        return false;
+    }
+    // Consumers must all be fusable kernels themselves.
+    for &u in users {
+        let uo = comp.get(u).opcode;
+        if uo.is_library_call() || uo == Opcode::BatchDot {
+            return false;
+        }
+    }
+    // Reduce may be a fusion root but not an interior producer: the
+    // single loop emitter cannot compose a reduction's value into a
+    // consumer loop body (that is exactly what IrEmitterStitched adds).
+    if p.opcode.is_reduce() {
+        return false;
+    }
+    // Layout-changing transposes stay unfused (the elemental emitter
+    // would serialize uncoalesced reads into every consumer thread).
+    if p.opcode == Opcode::Transpose {
+        let identity = p.min_trans_dim().is_none();
+        if !identity {
+            return false;
+        }
+    }
+    // Gather-class data movement isn't loop-fusable.
+    if matches!(
+        p.opcode,
+        Opcode::Gather | Opcode::DynamicSlice | Opcode::DynamicUpdateSlice | Opcode::Pad
+    ) {
+        return false;
+    }
+    // Expensive elementwise ops are not duplicated into multiple
+    // consumers (XLA's duplication rule); with a single consumer they
+    // fuse fine.
+    if p.opcode.is_expensive_elementwise() && users.len() > 1 {
+        return false;
+    }
+    // The target group must not already contain a reduce interior to the
+    // new producer's path — conservatively, baseline groups contain at
+    // most one reduce and it must be a root.
+    let _ = (group, target);
+    true
+}
+
+fn creates_cycle(
+    comp: &Computation,
+    producer: InstrId,
+    group: &[Option<usize>],
+    target: usize,
+) -> bool {
+    // DFS down from the producer's operands: reaching a member of
+    // `target` means a path group → … → producer exists outside the
+    // group.
+    let mut stack: Vec<InstrId> = comp.get(producer).operands.clone();
+    let mut seen: HashSet<InstrId> = HashSet::new();
+    while let Some(id) = stack.pop() {
+        if !seen.insert(id) {
+            continue;
+        }
+        if group[id.0] == Some(target) {
+            return true;
+        }
+        stack.extend(comp.get(id).operands.iter().copied());
+    }
+    false
+}
+
+fn assemble(comp: &Computation, group: Vec<Option<usize>>) -> FusionPlan {
+    use std::collections::HashMap;
+    let mut members: HashMap<usize, Vec<InstrId>> = HashMap::new();
+    for id in comp.ids() {
+        if let Some(g) = group[id.0] {
+            members.entry(g).or_default().push(id);
+        }
+    }
+    let mut groups: Vec<(Vec<InstrId>, Vec<InstrId>)> = Vec::new();
+    for (_, m) in members {
+        let mset: HashSet<InstrId> = m.iter().copied().collect();
+        let roots: Vec<InstrId> = m
+            .iter()
+            .copied()
+            .filter(|&id| {
+                comp.users(id).iter().any(|u| !mset.contains(u)) || comp.users(id).is_empty()
+            })
+            .collect();
+        groups.push((m, roots));
+    }
+    // Deterministic order for reproducible reports.
+    groups.sort_by_key(|(m, _)| m.iter().map(|i| i.0).min().unwrap());
+    FusionPlan::from_groups(comp, groups)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    #[test]
+    fn elementwise_chain_fuses_to_one_kernel() {
+        let mut b = GraphBuilder::new("chain");
+        let x = b.param("x", Shape::f32(&[128]));
+        let a = b.add(x, x);
+        let e = b.exp(a);
+        let t = b.tanh(e);
+        let comp = b.finish(t);
+        let plan = xla_baseline_fusion(&comp);
+        plan.validate(&comp).unwrap();
+        assert_eq!(plan.generated_kernel_count(&comp), 1);
+    }
+
+    #[test]
+    fn reduce_is_root_only() {
+        // x -> exp -> reduce -> tanh : exp fuses into reduce (input
+        // fusion), but reduce cannot fuse into tanh → 2 kernels.
+        let mut b = GraphBuilder::new("r");
+        let x = b.param("x", Shape::f32(&[64, 32]));
+        let e = b.exp(x);
+        let r = b.reduce(e, &[1], ReduceKind::Sum);
+        let t = b.tanh(r);
+        let comp = b.finish(t);
+        let plan = xla_baseline_fusion(&comp);
+        plan.validate(&comp).unwrap();
+        assert_eq!(plan.generated_kernel_count(&comp), 2);
+        // exp and reduce share a group
+        assert_eq!(
+            plan.group_of(e).unwrap().id,
+            plan.group_of(r).unwrap().id
+        );
+    }
+
+    #[test]
+    fn softmax_needs_three_baseline_kernels() {
+        // The Figure 3 inner pattern: max-reduce / exp+sum-reduce / div.
+        let mut b = GraphBuilder::new("sm");
+        let x = b.param("x", Shape::f32(&[8, 64]));
+        let m = b.reduce(x, &[1], ReduceKind::Max);
+        let mb = b.broadcast(m, &[8, 64], &[0]);
+        let sh = b.sub(x, mb);
+        let e = b.exp(sh);
+        let s = b.reduce(e, &[1], ReduceKind::Sum);
+        let sb = b.broadcast(s, &[8, 64], &[0]);
+        let p = b.div(e, sb);
+        let comp = b.finish(p);
+        let plan = xla_baseline_fusion(&comp);
+        plan.validate(&comp).unwrap();
+        // exp has two users (sum-reduce and divide) and is expensive →
+        // not duplicated; reduces are roots only. XLA ends up with ≥3
+        // kernels where FusionStitching gets 1.
+        assert!(plan.generated_kernel_count(&comp) >= 3);
+    }
+
+    #[test]
+    fn transpose_stays_unfused() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.param("x", Shape::f32(&[64, 32]));
+        let t = b.transpose(x, &[1, 0]);
+        let e = b.exp(t);
+        let comp = b.finish(e);
+        let plan = xla_baseline_fusion(&comp);
+        assert_eq!(plan.generated_kernel_count(&comp), 2);
+    }
+
+    #[test]
+    fn batch_dot_stays_unfused() {
+        let mut b = GraphBuilder::new("bd");
+        let x = b.param("x", Shape::f32(&[4, 8, 8]));
+        let y = b.param("y", Shape::f32(&[4, 8, 8]));
+        let d = b.batch_dot(x, y);
+        let e = b.exp(d);
+        let comp = b.finish(e);
+        let plan = xla_baseline_fusion(&comp);
+        assert_eq!(plan.generated_kernel_count(&comp), 2);
+        let _ = d;
+    }
+
+    #[test]
+    fn library_call_delimits() {
+        let mut b = GraphBuilder::new("lc");
+        let x = b.param("x", Shape::f32(&[16, 16]));
+        let w = b.param("w", Shape::f32(&[16, 16]));
+        let a = b.add(x, x);
+        let d = b.dot(a, w);
+        let e = b.exp(d);
+        let comp = b.finish(e);
+        let plan = xla_baseline_fusion(&comp);
+        plan.validate(&comp).unwrap();
+        assert_eq!(plan.library_call_count(), 1);
+        assert_eq!(plan.generated_kernel_count(&comp), 2); // add, exp
+    }
+
+    #[test]
+    fn cheap_producer_with_diverging_users_not_fused_without_mof() {
+        // broadcast consumed by two different groups: baseline (no
+        // multi-output fusion) leaves it standalone.
+        let mut b = GraphBuilder::new("div");
+        let x = b.param("x", Shape::f32(&[8]));
+        let bc = b.broadcast(x, &[4, 8], &[1]);
+        let e = b.exp(bc);
+        let r = b.reduce(bc, &[0], ReduceKind::Sum);
+        let rb = b.broadcast(r, &[4, 8], &[1]);
+        let out = b.add(e, rb);
+        let comp = b.finish(out);
+        let plan = xla_baseline_fusion(&comp);
+        plan.validate(&comp).unwrap();
+        assert!(plan.generated_kernel_count(&comp) >= 2);
+    }
+}

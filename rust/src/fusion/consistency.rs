@@ -1,0 +1,251 @@
+//! `SchdConsistent` — the fusion feasibility gate (§3.2), wired to
+//! schedule planning (§4) and the shared-memory feedback loop (§5.1.2).
+//!
+//! A fusion candidate is accepted only if
+//! 1. it does not close a dependency cycle through given-up instructions;
+//! 2. it extends a producer/consumer chain into the current group;
+//! 3. an optimized schedule is resolvable for the enlarged group
+//!    ([`crate::schedule::tuning`]); and
+//! 4. the enlarged group's shared-memory requirement fits the kernel
+//!    budget after best-effort shrinking ([`crate::codegen::shm_planner`]).
+//!    Planning failure feeds back as a rejection — the paper's
+//!    granularity-control mechanism.
+
+use crate::codegen::shm_planner::{plan_shared_memory, ShmError};
+use crate::gpusim::DeviceConfig;
+use crate::hlo::{Computation, InstrId};
+use crate::schedule::{tune, PerfLibrary, TunedPlan, TuningConfig};
+use std::collections::HashSet;
+
+/// The checker owns the tuning resources shared across fusion decisions.
+pub struct ScheduleConsistencyChecker<'a> {
+    pub lib: &'a mut PerfLibrary,
+    pub tuning: TuningConfig,
+    pub dev: DeviceConfig,
+    /// Statistics: how many candidates the shared-memory feedback path
+    /// rejected (visible in reports).
+    pub shm_rejections: usize,
+    /// How many candidates schedule resolution rejected.
+    pub schedule_rejections: usize,
+    /// How many candidates the performance heuristic rejected.
+    pub profit_rejections: usize,
+    /// Memoized standalone kernel cost per instruction.
+    singleton_cost: std::collections::HashMap<InstrId, f64>,
+}
+
+impl<'a> ScheduleConsistencyChecker<'a> {
+    pub fn new(lib: &'a mut PerfLibrary, tuning: TuningConfig, dev: DeviceConfig) -> Self {
+        ScheduleConsistencyChecker {
+            lib,
+            tuning,
+            dev,
+            shm_rejections: 0,
+            schedule_rejections: 0,
+            profit_rejections: 0,
+            singleton_cost: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Estimated wall time of the fused kernel described by `plan` over
+    /// `members`: boundary DRAM traffic + accumulated flops + one launch
+    /// (internal values stay on chip).
+    pub fn fused_time(
+        &self,
+        comp: &Computation,
+        members: &HashSet<InstrId>,
+        plan: &TunedPlan,
+    ) -> f64 {
+        let desc = crate::codegen::kernel_plan::fused_kernel_desc(comp, members, plan);
+        crate::gpusim::cost::kernel_time_us(&desc, &self.dev)
+    }
+
+    /// Estimated cost of launching `id` as its own kernel (its tuned
+    /// standalone time plus one launch overhead) — what fusion saves.
+    pub fn standalone_cost(&mut self, comp: &Computation, id: InstrId) -> f64 {
+        if let Some(&c) = self.singleton_cost.get(&id) {
+            return c;
+        }
+        let members: HashSet<InstrId> = [id].into_iter().collect();
+        let exec = tune(comp, &members, &[id], self.lib, &self.tuning)
+            .map(|p| p.est_exec_us)
+            .unwrap_or_else(|| {
+                self.lib.lookup(comp, id, crate::schedule::Schedule::fallback(), 128)
+            });
+        let cost = exec + self.dev.launch_overhead_us;
+        self.singleton_cost.insert(id, cost);
+        cost
+    }
+
+    /// The full `SchdConsistent` predicate of Algorithm 1. `hlo` is the
+    /// candidate; `fused` the instructions already in the group (root
+    /// included); `giveup` the rejected set; `current_cost` the estimated
+    /// execution time of the group as it stands — Fig. 4's "performance
+    /// heuristics regarding current fusion plan" feedback. Returns the
+    /// tuned plan of the *enlarged* group on success so the caller can
+    /// carry its cost forward.
+    pub fn schd_consistent(
+        &mut self,
+        comp: &Computation,
+        roots: &[InstrId],
+        hlo: InstrId,
+        fused: &HashSet<InstrId>,
+        giveup: &HashSet<InstrId>,
+        current_cost: f64,
+    ) -> Option<TunedPlan> {
+        let instr = comp.get(hlo);
+        // Only the paper's four fusable categories enter groups.
+        if !instr.opcode.is_fusable() {
+            return None;
+        }
+        // Frame discipline: a kernel cannot straddle while-loop bodies.
+        if let Some(&r) = roots.first() {
+            if comp.get(r).frame != instr.frame {
+                return None;
+            }
+        }
+        // (1) user in giveup → fusing would risk a cyclic dependency.
+        if comp.users(hlo).iter().any(|u| giveup.contains(u)) {
+            return None;
+        }
+        // (2) producer/consumer only: some user must already be fused.
+        if !comp.users(hlo).iter().any(|u| fused.contains(u)) {
+            return None;
+        }
+        // (3) + (4): resolve a schedule and a shared-memory plan.
+        let mut enlarged = fused.clone();
+        enlarged.insert(hlo);
+        let plan = self.check_group(comp, &enlarged, roots)?;
+        // (5) performance feedback: the fused kernel (boundary-traffic
+        // model, one launch) must not cost more than the current kernel
+        // plus the candidate as its own launch. This is what keeps a
+        // scalar-rooted (single-block) kernel from eating a highly
+        // parallel producer.
+        let new_time = self.fused_time(comp, &enlarged, &plan);
+        let budget = current_cost + self.standalone_cost(comp, hlo);
+        if new_time > budget {
+            self.profit_rejections += 1;
+            return None;
+        }
+        Some(plan)
+    }
+
+    /// Conditions (3)+(4) alone — used both by `schd_consistent` and by
+    /// `ElementwiseFusion` when validating an intra-layer group.
+    pub fn check_group(
+        &mut self,
+        comp: &Computation,
+        members: &HashSet<InstrId>,
+        roots: &[InstrId],
+    ) -> Option<TunedPlan> {
+        let plan = match tune(comp, members, roots, self.lib, &self.tuning) {
+            Some(p) => p,
+            None => {
+                self.schedule_rejections += 1;
+                return None;
+            }
+        };
+        match plan_shared_memory(comp, members, roots, &plan, &self.dev) {
+            Ok(_) => Some(plan),
+            Err(ShmError::Exceeded { .. }) => {
+                // §5.1.2: "a feedback signal is generated back to
+                // ScheduleConsistencyChecker … to trigger other fusion
+                // decisions."
+                self.shm_rejections += 1;
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    fn checker_dev() -> (PerfLibrary, TuningConfig, DeviceConfig) {
+        (
+            PerfLibrary::new(DeviceConfig::pascal()),
+            TuningConfig::default(),
+            DeviceConfig::pascal(),
+        )
+    }
+
+    #[test]
+    fn accepts_producer_of_fused_user() {
+        let mut b = GraphBuilder::new("ok");
+        let x = b.param("x", Shape::f32(&[64, 64]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let comp = b.finish(t);
+        let (mut lib, cfg, dev) = checker_dev();
+        let mut ck = ScheduleConsistencyChecker::new(&mut lib, cfg, dev);
+        let fused: HashSet<InstrId> = [t].into_iter().collect();
+        let giveup = HashSet::new();
+        assert!(ck.schd_consistent(&comp, &[t], e, &fused, &giveup, 1e9).is_some());
+    }
+
+    #[test]
+    fn rejects_non_consumer_relationship() {
+        // sibling (no fused user) → leave for ElementwiseFusion.
+        let mut b = GraphBuilder::new("sib");
+        let x = b.param("x", Shape::f32(&[64]));
+        let e = b.exp(x);
+        let t = b.tanh(x);
+        let comp = b.finish(t);
+        let (mut lib, cfg, dev) = checker_dev();
+        let mut ck = ScheduleConsistencyChecker::new(&mut lib, cfg, dev);
+        let fused: HashSet<InstrId> = [t].into_iter().collect();
+        assert!(ck.schd_consistent(&comp, &[t], e, &fused, &HashSet::new(), 1e9).is_none());
+    }
+
+    #[test]
+    fn rejects_user_in_giveup() {
+        let mut b = GraphBuilder::new("gu");
+        let x = b.param("x", Shape::f32(&[64]));
+        let e = b.exp(x);
+        let s = b.sigmoid(e);
+        let t = b.tanh(s);
+        let comp = b.finish(t);
+        let (mut lib, cfg, dev) = checker_dev();
+        let mut ck = ScheduleConsistencyChecker::new(&mut lib, cfg, dev);
+        let fused: HashSet<InstrId> = [t].into_iter().collect();
+        let giveup: HashSet<InstrId> = [s].into_iter().collect();
+        assert!(ck.schd_consistent(&comp, &[t], e, &fused, &giveup, 1e9).is_none());
+    }
+
+    #[test]
+    fn rejects_library_call() {
+        let mut b = GraphBuilder::new("lc");
+        let x = b.param("x", Shape::f32(&[8, 8]));
+        let w = b.param("w", Shape::f32(&[8, 8]));
+        let d = b.dot(x, w);
+        let e = b.exp(d);
+        let comp = b.finish(e);
+        let (mut lib, cfg, dev) = checker_dev();
+        let mut ck = ScheduleConsistencyChecker::new(&mut lib, cfg, dev);
+        let fused: HashSet<InstrId> = [e].into_iter().collect();
+        assert!(ck.schd_consistent(&comp, &[e], d, &fused, &HashSet::new(), 1e9).is_none());
+    }
+
+    #[test]
+    fn shm_budget_feedback_rejects_oversized_group() {
+        // A non-root reduce forces a mandatory shared buffer per block;
+        // a scalar root (full reduce) pins the grid to one block, so the
+        // interior reduce's chunk is its whole 32 KB output — over the
+        // 20 KB budget, and shrinking cannot drop mandatory allocations.
+        let mut b = GraphBuilder::new("big");
+        let x = b.param("x", Shape::f32(&[64, 8192]));
+        let e = b.exp(x);
+        let r1 = b.reduce(e, &[0], ReduceKind::Sum); // [8192] interior
+        let t = b.tanh(r1);
+        let rr = b.reduce(t, &[0], ReduceKind::Sum); // scalar root
+        let comp = b.finish(rr);
+        let (mut lib, cfg, dev) = checker_dev();
+        let mut ck = ScheduleConsistencyChecker::new(&mut lib, cfg, dev);
+        let members: HashSet<InstrId> = [e, r1, t, rr].into_iter().collect();
+        let plan = ck.check_group(&comp, &members, &[rr]);
+        assert!(plan.is_none(), "mandatory interior reduce buffer must blow the budget");
+        assert!(ck.shm_rejections > 0);
+    }
+}

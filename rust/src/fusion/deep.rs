@@ -1,0 +1,386 @@
+//! Deep fusion — §3.2 / Algorithm 1.
+//!
+//! Driven by Work/Span layers: within each while-frame, walk root layers
+//! from the graph output upward; at each layer first run intra-layer
+//! `ElementwiseFusion`, then grow every fusion seed across subsequent
+//! layers up to the next library-call layer (the *roof*), admitting an
+//! instruction whenever `SchdConsistent` accepts it and giving it up
+//! otherwise (which poisons its producers to avoid dependency cycles).
+
+use super::consistency::ScheduleConsistencyChecker;
+use super::elementwise::{elementwise_fusion, eligible, ElementwiseFusionConfig};
+use super::plan::FusionPlan;
+use crate::analysis::{FramePartition, SpanAnalysis};
+use crate::gpusim::DeviceConfig;
+use crate::hlo::{Computation, InstrId, Opcode};
+use crate::schedule::{PerfLibrary, TuningConfig};
+use std::collections::HashSet;
+
+/// Deep-fusion configuration.
+#[derive(Debug, Clone)]
+pub struct DeepFusionConfig {
+    /// Whether BatchMatMul ops join fused kernels — workload-dependent
+    /// and left to the user in the paper (§2.1).
+    pub fuse_batch_dot: bool,
+    pub elementwise: ElementwiseFusionConfig,
+    pub tuning: TuningConfig,
+    pub device: DeviceConfig,
+}
+
+impl Default for DeepFusionConfig {
+    fn default() -> Self {
+        DeepFusionConfig {
+            fuse_batch_dot: true,
+            elementwise: ElementwiseFusionConfig::default(),
+            tuning: TuningConfig::default(),
+            device: DeviceConfig::pascal(),
+        }
+    }
+}
+
+/// Statistics reported alongside the plan.
+#[derive(Debug, Clone, Default)]
+pub struct DeepFusionStats {
+    pub seeds: usize,
+    pub accepted: usize,
+    pub given_up: usize,
+    pub schedule_rejections: usize,
+    pub shm_rejections: usize,
+}
+
+/// Run deep fusion over `comp`, producing the kernel partition.
+pub fn deep_fusion(
+    comp: &Computation,
+    lib: &mut PerfLibrary,
+    cfg: &DeepFusionConfig,
+) -> (FusionPlan, DeepFusionStats) {
+    let spans = SpanAnalysis::run(comp);
+    let frames = FramePartition::build(comp);
+    let mut checker =
+        ScheduleConsistencyChecker::new(lib, cfg.tuning.clone(), cfg.device.clone());
+    let mut stats = DeepFusionStats::default();
+
+    let mut claimed: HashSet<InstrId> = HashSet::new();
+    let mut groups: Vec<(Vec<InstrId>, Vec<InstrId>)> = Vec::new();
+
+    for frame in frames.frames() {
+        let critical = spans.critical_path(frame);
+        let lc_spans = spans.lc_layers(comp, frame);
+        for root_span in 0..=critical {
+            let layer: Vec<InstrId> = spans.layer(frame, root_span).to_vec();
+            // The roof: the next library-call layer above this root
+            // layer (§3.2 — fusion never crosses it).
+            let roof = lc_spans
+                .iter()
+                .copied()
+                .find(|&s| s > root_span)
+                .unwrap_or(critical + 1);
+
+            // Step 1: intra-layer ElementwiseFusion.
+            let avail = eligible(comp, &layer, &claimed);
+            for seed in elementwise_fusion(comp, &avail, &cfg.elementwise) {
+                let members: HashSet<InstrId> = seed.iter().copied().collect();
+                let Some(seed_plan) = checker.check_group(comp, &members, &seed) else {
+                    continue; // incompatible grids — leave them singleton
+                };
+                stats.seeds += 1;
+                let seed_cost = checker.fused_time(comp, &members, &seed_plan);
+                let fused = grow(
+                    comp, &spans, frame, roof, seed.clone(), members, seed_cost,
+                    &mut checker, &claimed, cfg, &mut stats,
+                );
+                finalize(comp, fused, &mut claimed, &mut groups);
+            }
+
+            // Step 2: every remaining fusable instruction in the layer
+            // seeds subgraph fusion (Algorithm 1).
+            for &root in &layer {
+                if claimed.contains(&root) {
+                    continue;
+                }
+                let opcode = comp.get(root).opcode;
+                if !opcode.is_fusable() || (opcode == Opcode::BatchDot && !cfg.fuse_batch_dot) {
+                    continue;
+                }
+                stats.seeds += 1;
+                let members: HashSet<InstrId> = [root].into_iter().collect();
+                let seed_cost = checker.standalone_cost(comp, root);
+                let fused = grow(
+                    comp, &spans, frame, roof, vec![root], members, seed_cost, &mut checker,
+                    &claimed, cfg, &mut stats,
+                );
+                if fused.len() >= 2 {
+                    finalize(comp, fused, &mut claimed, &mut groups);
+                } else {
+                    // A seed that grew nothing stays a singleton kernel;
+                    // leaving it unclaimed lets a *later* root layer pull
+                    // it in as a producer.
+                }
+            }
+        }
+    }
+
+    // Post-pass: absorb stragglers. Algorithm 1 never fuses instructions
+    // sharing a span layer with a library call (the roof itself), which
+    // strands e.g. the bias broadcast that happens to sit next to its
+    // matmul. Any unclaimed fusable op whose users all live in a single
+    // same-frame group joins it when the enlarged group still checks out.
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for id in comp.ids() {
+            let instr = comp.get(id);
+            if claimed.contains(&id)
+                || !instr.opcode.is_fusable()
+                || (instr.opcode.is_free() && instr.opcode != Opcode::Bitcast)
+                || (instr.opcode == Opcode::BatchDot && !cfg.fuse_batch_dot)
+            {
+                continue;
+            }
+            let users = comp.users(id);
+            if users.is_empty() {
+                continue;
+            }
+            let Some(gidx) = groups.iter().position(|(members, _)| {
+                users.iter().all(|u| members.contains(u))
+            }) else {
+                continue;
+            };
+            if comp.get(groups[gidx].0[0]).frame != instr.frame {
+                continue;
+            }
+            // No cycles: the producer must not itself depend on a member.
+            if groups[gidx].0.iter().any(|&m| comp.depends_on(id, m)) {
+                continue;
+            }
+            let mut enlarged: HashSet<InstrId> =
+                groups[gidx].0.iter().copied().collect();
+            enlarged.insert(id);
+            if checker.check_group(comp, &enlarged, &groups[gidx].1).is_some() {
+                groups[gidx].0.push(id);
+                groups[gidx].0.sort_unstable();
+                claimed.insert(id);
+                stats.accepted += 1;
+                changed = true;
+            }
+        }
+    }
+
+    stats.schedule_rejections = checker.schedule_rejections;
+    stats.shm_rejections = checker.shm_rejections;
+    let plan = FusionPlan::from_groups(comp, groups);
+    debug_assert!(plan.validate(comp).is_ok());
+    (plan, stats)
+}
+
+/// Algorithm 1: grow `fused` (seeded at the root layer) layer by layer
+/// up to (excluding) `roof`.
+#[allow(clippy::too_many_arguments)]
+#[allow(clippy::too_many_arguments)]
+fn grow(
+    comp: &Computation,
+    spans: &SpanAnalysis,
+    frame: u32,
+    roof: u32,
+    roots: Vec<InstrId>,
+    mut fused: HashSet<InstrId>,
+    mut current_cost: f64,
+    checker: &mut ScheduleConsistencyChecker<'_>,
+    claimed: &HashSet<InstrId>,
+    cfg: &DeepFusionConfig,
+    stats: &mut DeepFusionStats,
+) -> HashSet<InstrId> {
+    let curr_span = roots.iter().map(|&r| spans.span_of(r)).min().unwrap_or(0);
+    let mut giveup: HashSet<InstrId> = HashSet::new();
+    for l in curr_span + 1..roof {
+        for &hlo in spans.layer(frame, l) {
+            if claimed.contains(&hlo) || fused.contains(&hlo) {
+                continue;
+            }
+            let opcode = comp.get(hlo).opcode;
+            // Free ops never launch kernels, but bitcasts must still join
+            // groups: they carry producer/consumer connectivity (the
+            // Figure 3 `Divide.1 → Bitcast.1 → Dot.1` chain).
+            if opcode.is_free() && opcode != Opcode::Bitcast {
+                continue;
+            }
+            if opcode == Opcode::BatchDot && !cfg.fuse_batch_dot {
+                giveup.insert(hlo);
+                continue;
+            }
+            match checker.schd_consistent(comp, &roots, hlo, &fused, &giveup, current_cost) {
+                Some(plan) => {
+                    fused.insert(hlo);
+                    current_cost = checker.fused_time(comp, &fused, &plan);
+                    stats.accepted += 1;
+                }
+                None => {
+                    giveup.insert(hlo);
+                    stats.given_up += 1;
+                }
+            }
+        }
+    }
+    fused
+}
+
+/// Claim the grown group and record it with its final root set (members
+/// whose values escape the group).
+fn finalize(
+    comp: &Computation,
+    fused: HashSet<InstrId>,
+    claimed: &mut HashSet<InstrId>,
+    groups: &mut Vec<(Vec<InstrId>, Vec<InstrId>)>,
+) {
+    let roots: Vec<InstrId> = {
+        let mut r: Vec<InstrId> = fused
+            .iter()
+            .copied()
+            .filter(|&id| {
+                comp.users(id).iter().any(|u| !fused.contains(u)) || comp.users(id).is_empty()
+            })
+            .collect();
+        r.sort_unstable();
+        r
+    };
+    claimed.extend(fused.iter().copied());
+    let mut members: Vec<InstrId> = fused.into_iter().collect();
+    members.sort_unstable();
+    groups.push((members, roots));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::baseline::xla_baseline_fusion;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    fn run(comp: &Computation) -> (FusionPlan, DeepFusionStats) {
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        deep_fusion(comp, &mut lib, &DeepFusionConfig::default())
+    }
+
+    /// The headline behaviour: the Figure 3 pattern becomes ONE stitched
+    /// kernel where the XLA baseline needs several.
+    #[test]
+    fn figure3_fuses_to_single_kernel() {
+        let mut b = GraphBuilder::new("fig3");
+        let scores = b.param("scores", Shape::f32(&[8, 64, 64]));
+        let v = b.param("v", Shape::f32(&[8, 64, 32]));
+        let m = b.reduce(scores, &[2], ReduceKind::Max);
+        let mb = b.broadcast(m, &[8, 64, 64], &[0, 1]);
+        let sh = b.sub(scores, mb);
+        let e = b.exp(sh);
+        let s = b.reduce(e, &[2], ReduceKind::Sum);
+        let sb = b.broadcast(s, &[8, 64, 64], &[0, 1]);
+        let p = b.div(e, sb);
+        let bc = b.bitcast(p, &[8, 64, 64]);
+        let out = b.batch_dot(bc, v);
+        let comp = b.finish(out);
+
+        let (plan, _) = run(&comp);
+        plan.validate(&comp).unwrap();
+        let deep_kernels = plan.generated_kernel_count(&comp);
+        let baseline = xla_baseline_fusion(&comp);
+        let base_kernels = baseline.generated_kernel_count(&comp);
+        assert_eq!(deep_kernels, 1, "FusionStitching should stitch the whole pattern");
+        assert!(base_kernels >= 3, "baseline needs several kernels, got {base_kernels}");
+    }
+
+    #[test]
+    fn does_not_fuse_across_library_calls() {
+        let mut b = GraphBuilder::new("lc");
+        let x = b.param("x", Shape::f32(&[32, 32]));
+        let w = b.param("w", Shape::f32(&[32, 32]));
+        let e = b.exp(x);
+        let d = b.dot(e, w); // LC-layer
+        let t = b.tanh(d);
+        let u = b.sigmoid(t);
+        let comp = b.finish(u);
+        let (plan, _) = run(&comp);
+        plan.validate(&comp).unwrap();
+        // exp | dot | tanh+sigmoid → 2 generated kernels + 1 library call
+        assert_eq!(plan.library_call_count(), 1);
+        assert_eq!(plan.generated_kernel_count(&comp), 2);
+        assert_eq!(plan.group_of(t).unwrap().id, plan.group_of(u).unwrap().id);
+        assert_ne!(plan.group_of(e).unwrap().id, plan.group_of(t).unwrap().id);
+    }
+
+    #[test]
+    fn intra_layer_elementwise_fused() {
+        // Four independent same-shape accumulation ops (the training-graph
+        // pattern §3.2 calls out) → one multi-root kernel.
+        let mut b = GraphBuilder::new("acc");
+        let w1 = b.param("w1", Shape::f32(&[256]));
+        let g1 = b.param("g1", Shape::f32(&[256]));
+        let w2 = b.param("w2", Shape::f32(&[256]));
+        let g2 = b.param("g2", Shape::f32(&[256]));
+        let u1 = b.add(w1, g1);
+        let u2 = b.add(w2, g2);
+        let u3 = b.mul(w1, g2);
+        let u4 = b.sub(w2, g1);
+        let comp = b.finish(u1);
+        let (plan, _) = run(&comp);
+        plan.validate(&comp).unwrap();
+        let g = plan.group_of(u1).unwrap().id;
+        assert_eq!(plan.group_of(u2).unwrap().id, g);
+        assert_eq!(plan.group_of(u3).unwrap().id, g);
+        assert_eq!(plan.group_of(u4).unwrap().id, g);
+        assert_eq!(plan.generated_kernel_count(&comp), 1);
+    }
+
+    #[test]
+    fn batch_dot_fusion_is_configurable() {
+        let mut b = GraphBuilder::new("bd");
+        let x = b.param("x", Shape::f32(&[4, 16, 16]));
+        let y = b.param("y", Shape::f32(&[4, 16, 16]));
+        let e = b.exp(x);
+        let d = b.batch_dot(e, y);
+        let comp = b.finish(d);
+
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let (plan_on, _) =
+            deep_fusion(&comp, &mut lib, &DeepFusionConfig { fuse_batch_dot: true, ..Default::default() });
+        assert_eq!(plan_on.generated_kernel_count(&comp), 1);
+
+        let (plan_off, _) =
+            deep_fusion(&comp, &mut lib, &DeepFusionConfig { fuse_batch_dot: false, ..Default::default() });
+        assert_eq!(plan_off.generated_kernel_count(&comp), 2);
+    }
+
+    #[test]
+    fn deep_never_worse_than_unfused(){
+        // Kernel count after deep fusion ≤ number of non-free ops.
+        let mut b = GraphBuilder::new("mono");
+        let x = b.param("x", Shape::f32(&[16, 64]));
+        let e = b.exp(x);
+        let r = b.reduce(e, &[1], ReduceKind::Sum);
+        let rb = b.broadcast(r, &[16, 64], &[0]);
+        let d = b.div(e, rb);
+        let t = b.tanh(d);
+        let comp = b.finish(t);
+        let (plan, _) = run(&comp);
+        plan.validate(&comp).unwrap();
+        assert!(plan.generated_kernel_count(&comp) <= comp.unfused_kernel_count());
+        assert_eq!(plan.generated_kernel_count(&comp), 1, "softmax-like chain should stitch");
+    }
+
+    #[test]
+    fn frames_not_mixed() {
+        let mut b = GraphBuilder::new("fr");
+        let x = b.param("x", Shape::f32(&[64]));
+        let e = b.exp(x);
+        b.set_frame(1);
+        let t = b.tanh(e);
+        let s = b.sigmoid(t);
+        b.set_frame(0);
+        let out = b.copy(s);
+        let comp = b.finish(out);
+        let (plan, _) = run(&comp);
+        plan.validate(&comp).unwrap();
+        // tanh+sigmoid fuse inside frame 1; exp stays in frame 0.
+        assert_eq!(plan.group_of(t).unwrap().id, plan.group_of(s).unwrap().id);
+        assert_ne!(plan.group_of(e).unwrap().id, plan.group_of(t).unwrap().id);
+    }
+}

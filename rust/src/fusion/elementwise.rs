@@ -1,0 +1,191 @@
+//! Intra-layer `ElementwiseFusion` — §3.2.
+//!
+//! Targets same-layer instructions *without* producer/consumer
+//! relationships — primarily the many small weight-accumulation ops in
+//! training graphs, each often < 10 µs, where fusing N launches into one
+//! removes N−1 launch overheads.
+//!
+//! Grouping follows the paper's two factors:
+//! 1. schedule compatibility — "elementwise instructions within a layer
+//!    naturally fall into a few groups according to output shapes";
+//! 2. fused memory footprint — a tunable threshold bounds group size to
+//!    avoid extra-large multi-output computations.
+
+use crate::hlo::{Computation, InstrId, Shape};
+use std::collections::{BTreeMap, HashSet};
+
+/// Configuration for intra-layer fusion.
+#[derive(Debug, Clone)]
+pub struct ElementwiseFusionConfig {
+    /// Max fused IO footprint per group, bytes (the paper's tunable
+    /// threshold parameter).
+    pub max_footprint_bytes: usize,
+    /// Max outputs per fused computation.
+    pub max_outputs: usize,
+}
+
+impl Default for ElementwiseFusionConfig {
+    fn default() -> Self {
+        ElementwiseFusionConfig { max_footprint_bytes: 64 << 20, max_outputs: 32 }
+    }
+}
+
+/// Partition the given same-layer instructions into multi-root fusion
+/// seeds. `available` must all be elementwise, un-grouped, and on the
+/// same Work/Span layer (the caller guarantees layer membership).
+/// Returns groups of ≥ 2 instructions; singletons stay un-fused here.
+pub fn elementwise_fusion(
+    comp: &Computation,
+    available: &[InstrId],
+    cfg: &ElementwiseFusionConfig,
+) -> Vec<Vec<InstrId>> {
+    // Factor 1: bucket by output shape (schedule compatibility — equal
+    // shapes trivially share every candidate schedule).
+    let mut buckets: BTreeMap<String, Vec<InstrId>> = BTreeMap::new();
+    for &id in available {
+        let instr = comp.get(id);
+        debug_assert!(instr.opcode.is_elementwise());
+        buckets.entry(shape_key(&instr.shape)).or_default().push(id);
+    }
+
+    // Factor 2: split each bucket by the footprint threshold. Membership
+    // additionally requires mutual independence: same-frame Work/Span
+    // layers guarantee it, but cross-frame paths can still link two
+    // same-layer ops, so we check transitively.
+    let mut groups = Vec::new();
+    for (_, ids) in buckets {
+        let mut current: Vec<InstrId> = Vec::new();
+        let mut current_bytes = 0usize;
+        for id in ids {
+            if current
+                .iter()
+                .any(|&m| comp.depends_on(id, m) || comp.depends_on(m, id))
+            {
+                continue; // dependent sibling: leave for subgraph fusion
+            }
+            let fp = footprint_bytes(comp, id);
+            let would_overflow = !current.is_empty()
+                && (current_bytes + fp > cfg.max_footprint_bytes
+                    || current.len() >= cfg.max_outputs);
+            if would_overflow {
+                if current.len() >= 2 {
+                    groups.push(std::mem::take(&mut current));
+                } else {
+                    current.clear();
+                }
+                current_bytes = 0;
+            }
+            current_bytes += fp;
+            current.push(id);
+        }
+        if current.len() >= 2 {
+            groups.push(current);
+        }
+    }
+    groups
+}
+
+/// Instructions in a layer eligible for intra-layer fusion: elementwise,
+/// fusable, not already claimed by another group, and mutually
+/// independent (same layer ⇒ guaranteed by Work/Span, asserted in debug).
+pub fn eligible(
+    comp: &Computation,
+    layer: &[InstrId],
+    claimed: &HashSet<InstrId>,
+) -> Vec<InstrId> {
+    layer
+        .iter()
+        .copied()
+        .filter(|&id| {
+            let i = comp.get(id);
+            i.opcode.is_elementwise() && !claimed.contains(&id)
+        })
+        .collect()
+}
+
+fn shape_key(s: &Shape) -> String {
+    s.to_string()
+}
+
+fn footprint_bytes(comp: &Computation, id: InstrId) -> usize {
+    let i = comp.get(id);
+    i.shape.byte_size()
+        + i.operands.iter().map(|&o| comp.get(o).shape.byte_size()).sum::<usize>()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    #[test]
+    fn groups_by_shape() {
+        let mut b = GraphBuilder::new("ew");
+        let x = b.param("x", Shape::f32(&[64]));
+        let y = b.param("y", Shape::f32(&[64]));
+        let z = b.param("z", Shape::f32(&[32]));
+        let a1 = b.add(x, y); // [64]
+        let a2 = b.mul(x, y); // [64]
+        let a3 = b.exp(z); // [32] — different shape
+        let comp = b.finish(a1);
+        let groups = elementwise_fusion(
+            &comp,
+            &[a1, a2, a3],
+            &ElementwiseFusionConfig::default(),
+        );
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0], vec![a1, a2]);
+    }
+
+    #[test]
+    fn footprint_threshold_splits_groups() {
+        let mut b = GraphBuilder::new("fp");
+        let x = b.param("x", Shape::f32(&[1024]));
+        let adds: Vec<InstrId> = (0..6).map(|_| b.add(x, x)).collect();
+        let comp = b.finish(adds[0]);
+        // each add: out 4 KB + 2×4 KB operands = 12 KB; cap at 25 KB → 2 per group
+        let cfg = ElementwiseFusionConfig { max_footprint_bytes: 25_000, max_outputs: 32 };
+        let groups = elementwise_fusion(&comp, &adds, &cfg);
+        assert_eq!(groups.len(), 3);
+        for g in &groups {
+            assert_eq!(g.len(), 2);
+        }
+    }
+
+    #[test]
+    fn max_outputs_respected() {
+        let mut b = GraphBuilder::new("mo");
+        let x = b.param("x", Shape::f32(&[8]));
+        let adds: Vec<InstrId> = (0..10).map(|_| b.add(x, x)).collect();
+        let comp = b.finish(adds[0]);
+        let cfg = ElementwiseFusionConfig { max_footprint_bytes: usize::MAX, max_outputs: 4 };
+        let groups = elementwise_fusion(&comp, &adds, &cfg);
+        assert!(groups.iter().all(|g| g.len() <= 4));
+        let total: usize = groups.iter().map(Vec::len).sum();
+        assert!(total >= 8, "most ops should still be grouped");
+    }
+
+    #[test]
+    fn singletons_not_grouped() {
+        let mut b = GraphBuilder::new("one");
+        let x = b.param("x", Shape::f32(&[64]));
+        let a = b.exp(x);
+        let comp = b.finish(a);
+        let groups =
+            elementwise_fusion(&comp, &[a], &ElementwiseFusionConfig::default());
+        assert!(groups.is_empty());
+    }
+
+    #[test]
+    fn eligible_filters_claimed_and_non_elementwise() {
+        let mut b = GraphBuilder::new("el");
+        let x = b.param("x", Shape::f32(&[4, 4]));
+        let a = b.exp(x);
+        let t = b.transpose(x, &[1, 0]);
+        let m = b.tanh(x);
+        let comp = b.finish(m);
+        let claimed: HashSet<InstrId> = [m].into_iter().collect();
+        let e = eligible(&comp, &[a, t, m], &claimed);
+        assert_eq!(e, vec![a]);
+    }
+}

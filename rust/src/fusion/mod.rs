@@ -1,0 +1,23 @@
+//! Op fusion — §3 of the paper.
+//!
+//! - [`plan`] — the fusion plan representation: a partition of a
+//!   computation's instructions into kernel groups.
+//! - [`baseline`] — the XLA-like `GpuInstructionFusion` baseline with its
+//!   static `ShouldFuse` rules (the paper's comparison target, §6.1).
+//! - [`elementwise`] — intra-layer `ElementwiseFusion` of independent
+//!   fine-grained ops (§3.2).
+//! - [`consistency`] — `SchdConsistent`: the schedule/shared-memory
+//!   feasibility gate, including the §5.1.2 feedback loop.
+//! - [`deep`] — the layered subgraph fusion of Algorithm 1 driven by
+//!   Work/Span layers.
+
+pub mod baseline;
+pub mod consistency;
+pub mod deep;
+pub mod elementwise;
+pub mod plan;
+
+pub use baseline::xla_baseline_fusion;
+pub use consistency::ScheduleConsistencyChecker;
+pub use deep::{deep_fusion, DeepFusionConfig};
+pub use plan::{FusionGroup, FusionPlan, GroupKind};

@@ -1,0 +1,261 @@
+//! Fusion plan: a partition of a computation's instructions into kernel
+//! groups.
+//!
+//! Unlike XLA (which rewrites the graph with nested fusion computations),
+//! we keep the original graph immutable and overlay a group assignment —
+//! every downstream pass (scheduling, shared-memory planning, codegen,
+//! simulation) operates per group on the original instructions. Kernel
+//! counting for Fig. 7 falls directly out of the partition.
+
+use crate::hlo::{Computation, InstrId};
+use std::collections::{HashMap, HashSet};
+
+/// What kind of kernel a group lowers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupKind {
+    /// Single parallel loop emitter (XLA-style thread composition only).
+    Loop,
+    /// Block composition: multiple emitters stitched through shared
+    /// memory (`IrEmitterStitched`).
+    Stitched,
+    /// A vendor library call (cuBLAS/cuDNN) — excluded from the Fig. 7
+    /// kernel counts.
+    Library,
+}
+
+/// One fused kernel.
+#[derive(Debug, Clone)]
+pub struct FusionGroup {
+    pub id: usize,
+    /// Member instructions (includes the roots).
+    pub members: HashSet<InstrId>,
+    /// Output-producing members (fusion roots). For single-root groups
+    /// this is the classic `fusion_root`.
+    pub roots: Vec<InstrId>,
+    pub kind: GroupKind,
+}
+
+impl FusionGroup {
+    /// Does this group launch a generated GPU kernel? Library calls and
+    /// all-free groups do not count toward the fusion ratio (§6.3
+    /// "excluding library call kernels").
+    pub fn is_generated_kernel(&self, comp: &Computation) -> bool {
+        self.kind != GroupKind::Library
+            && self.members.iter().any(|&id| !comp.get(id).opcode.is_free())
+    }
+}
+
+/// The complete partition.
+#[derive(Debug, Clone, Default)]
+pub struct FusionPlan {
+    pub groups: Vec<FusionGroup>,
+    instr_to_group: HashMap<InstrId, usize>,
+}
+
+impl FusionPlan {
+    /// Build a plan from group member sets; instructions not covered by
+    /// any set become singleton groups (their own kernels), and library
+    /// calls become `Library` groups. This "completion" guarantees the
+    /// partition covers every non-free instruction exactly once.
+    pub fn from_groups(comp: &Computation, groups: Vec<(Vec<InstrId>, Vec<InstrId>)>) -> Self {
+        let mut plan = FusionPlan::default();
+        for (members, roots) in groups {
+            plan.push_group(comp, members, roots);
+        }
+        // Completion: cover the rest.
+        let covered: HashSet<InstrId> = plan.instr_to_group.keys().copied().collect();
+        for id in comp.ids() {
+            let instr = comp.get(id);
+            if covered.contains(&id) || instr.opcode.is_free() {
+                continue;
+            }
+            plan.push_group(comp, vec![id], vec![id]);
+        }
+        plan
+    }
+
+    fn push_group(&mut self, comp: &Computation, members: Vec<InstrId>, roots: Vec<InstrId>) {
+        let gid = self.groups.len();
+        let member_set: HashSet<InstrId> = members.iter().copied().collect();
+        assert!(!member_set.is_empty(), "empty fusion group");
+        for &m in &member_set {
+            let prev = self.instr_to_group.insert(m, gid);
+            assert!(prev.is_none(), "instruction {m} in two groups");
+        }
+        let kind = if member_set.len() == 1
+            && comp.get(*member_set.iter().next().unwrap()).opcode.is_library_call()
+        {
+            GroupKind::Library
+        } else if needs_stitching(comp, &member_set) {
+            GroupKind::Stitched
+        } else {
+            GroupKind::Loop
+        };
+        debug_assert!(!roots.is_empty());
+        self.groups.push(FusionGroup { id: gid, members: member_set, roots, kind });
+    }
+
+    pub fn group_of(&self, id: InstrId) -> Option<&FusionGroup> {
+        self.instr_to_group.get(&id).map(|&g| &self.groups[g])
+    }
+
+    /// Generated-kernel launches (the Fig. 7 count, library calls
+    /// excluded).
+    pub fn generated_kernel_count(&self, comp: &Computation) -> usize {
+        self.groups.iter().filter(|g| g.is_generated_kernel(comp)).count()
+    }
+
+    /// Library-call launches.
+    pub fn library_call_count(&self) -> usize {
+        self.groups.iter().filter(|g| g.kind == GroupKind::Library).count()
+    }
+
+    /// Partition sanity: every non-free instruction in exactly one group,
+    /// all groups acyclic w.r.t. each other (no group both feeds and
+    /// consumes another). Used by tests and debug assertions.
+    pub fn validate(&self, comp: &Computation) -> crate::Result<()> {
+        for id in comp.ids() {
+            if !comp.get(id).opcode.is_free() && self.group_of(id).is_none() {
+                anyhow::bail!("instruction {id} not covered by any group");
+            }
+        }
+        // Inter-group acyclicity: contract groups and look for a cycle.
+        let gcount = self.groups.len();
+        let mut edges: HashSet<(usize, usize)> = HashSet::new();
+        for id in comp.ids() {
+            let Some(gu) = self.instr_to_group.get(&id) else { continue };
+            for &op in &comp.get(id).operands {
+                if let Some(gp) = self.instr_to_group.get(&op) {
+                    if gp != gu {
+                        edges.insert((*gp, *gu));
+                    }
+                }
+            }
+        }
+        // Kahn's algorithm over the contracted DAG.
+        let mut indeg = vec![0usize; gcount];
+        for &(_, b) in &edges {
+            indeg[b] += 1;
+        }
+        let mut queue: Vec<usize> = (0..gcount).filter(|&g| indeg[g] == 0).collect();
+        let mut seen = 0;
+        while let Some(g) = queue.pop() {
+            seen += 1;
+            for &(a, b) in &edges {
+                if a == g {
+                    indeg[b] -= 1;
+                    if indeg[b] == 0 {
+                        queue.push(b);
+                    }
+                }
+            }
+        }
+        if seen != gcount {
+            anyhow::bail!("fusion plan has an inter-group cycle");
+        }
+        Ok(())
+    }
+}
+
+/// A group needs block composition when it cannot be emitted as one
+/// parallel loop: any internal reduce/batch-dot producer, or any
+/// schedule-bearing op mix beyond pure thread composition (§2, Fig. 2).
+fn needs_stitching(comp: &Computation, members: &HashSet<InstrId>) -> bool {
+    members.iter().any(|&id| {
+        let i = comp.get(id);
+        let is_root_like = comp.users(id).iter().all(|u| !members.contains(u));
+        (i.opcode.is_reduce() || i.opcode == crate::hlo::Opcode::BatchDot) && !is_root_like
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    fn softmax_graph() -> (Computation, Vec<InstrId>) {
+        let mut b = GraphBuilder::new("sm");
+        let x = b.param("x", Shape::f32(&[8, 64]));
+        let m = b.reduce(x, &[1], ReduceKind::Max);
+        let mb = b.broadcast(m, &[8, 64], &[0]);
+        let sh = b.sub(x, mb);
+        let e = b.exp(sh);
+        let s = b.reduce(e, &[1], ReduceKind::Sum);
+        let sb = b.broadcast(s, &[8, 64], &[0]);
+        let p = b.div(e, sb);
+        let comp = b.finish(p);
+        (comp, vec![m, mb, sh, e, s, sb, p])
+    }
+
+    #[test]
+    fn completion_covers_all() {
+        let (comp, ids) = softmax_graph();
+        // Group only {exp, sum-reduce}; the rest become singletons.
+        let plan = FusionPlan::from_groups(&comp, vec![(vec![ids[3], ids[4]], vec![ids[4]])]);
+        plan.validate(&comp).unwrap();
+        // 1 fused group + 5 singleton kernels
+        assert_eq!(plan.generated_kernel_count(&comp), 6);
+        assert_eq!(plan.library_call_count(), 0);
+    }
+
+    #[test]
+    fn stitched_kind_detected() {
+        let (comp, ids) = softmax_graph();
+        let all = ids.clone();
+        let plan = FusionPlan::from_groups(&comp, vec![(all, vec![ids[6]])]);
+        assert_eq!(plan.groups[0].kind, GroupKind::Stitched);
+        assert_eq!(plan.generated_kernel_count(&comp), 1);
+    }
+
+    #[test]
+    fn loop_kind_for_pure_elementwise() {
+        let mut b = GraphBuilder::new("ew");
+        let x = b.param("x", Shape::f32(&[32]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let comp = b.finish(t);
+        let plan = FusionPlan::from_groups(&comp, vec![(vec![e, t], vec![t])]);
+        assert_eq!(plan.groups[0].kind, GroupKind::Loop);
+    }
+
+    #[test]
+    fn library_groups_excluded_from_count() {
+        let mut b = GraphBuilder::new("lib");
+        let x = b.param("x", Shape::f32(&[4, 4]));
+        let w = b.param("w", Shape::f32(&[4, 4]));
+        let d = b.dot(x, w);
+        let e = b.exp(d);
+        let comp = b.finish(e);
+        let plan = FusionPlan::from_groups(&comp, vec![]);
+        assert_eq!(plan.library_call_count(), 1);
+        assert_eq!(plan.generated_kernel_count(&comp), 1); // just exp
+        let _ = d;
+    }
+
+    #[test]
+    #[should_panic(expected = "two groups")]
+    fn overlapping_groups_panic() {
+        let (comp, ids) = softmax_graph();
+        let _ = FusionPlan::from_groups(
+            &comp,
+            vec![
+                (vec![ids[3], ids[4]], vec![ids[4]]),
+                (vec![ids[4], ids[6]], vec![ids[6]]),
+            ],
+        );
+    }
+
+    #[test]
+    fn cycle_detection() {
+        // a -> b -> c with groups {a, c} and {b}: group cycle.
+        let mut bld = GraphBuilder::new("cyc");
+        let x = bld.param("x", Shape::f32(&[4]));
+        let a = bld.exp(x);
+        let b = bld.tanh(a);
+        let c = bld.neg(b);
+        let comp = bld.finish(c);
+        let plan = FusionPlan::from_groups(&comp, vec![(vec![a, c], vec![c])]);
+        assert!(plan.validate(&comp).is_err());
+    }
+}

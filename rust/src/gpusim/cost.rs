@@ -1,0 +1,134 @@
+//! Per-kernel analytical cost: a roofline with launch, occupancy and
+//! coalescing terms.
+
+use super::device::DeviceConfig;
+
+/// Resource description of one GPU kernel launch. Constructed by the
+/// performance library from (opcode, shape, schedule) keys, or by the
+/// executor for library calls.
+#[derive(Debug, Clone)]
+pub struct KernelDesc {
+    /// Bytes read from DRAM.
+    pub bytes_read: u64,
+    /// Bytes written to DRAM.
+    pub bytes_written: u64,
+    /// FP operations executed.
+    pub flops: u64,
+    /// Grid size (thread blocks).
+    pub blocks: u64,
+    /// Threads per block.
+    pub threads: u32,
+    /// Shared memory per block, bytes.
+    pub smem_bytes: usize,
+    /// Memory access efficiency in (0, 1]: 1.0 = fully coalesced.
+    pub coalescing: f64,
+    /// Per-element instruction weight (transcendentals cost more than
+    /// adds on the SFU): multiplies `flops` into "effective flops".
+    pub op_weight: f64,
+}
+
+impl KernelDesc {
+    pub fn effective_flops(&self) -> f64 {
+        self.flops as f64 * self.op_weight.max(1.0)
+    }
+}
+
+/// Execution-only time (no launch overhead) — the quantity the paper's
+/// performance library stores per schedule key.
+pub fn kernel_exec_time_us(desc: &KernelDesc, dev: &DeviceConfig) -> f64 {
+    let occ = dev.occupancy(desc.blocks, desc.threads);
+    let mem_bytes = (desc.bytes_read + desc.bytes_written) as f64;
+    let eff_bw = dev.dram_bw_bytes_per_us * dev.bw_efficiency * desc.coalescing.clamp(0.05, 1.0);
+    // Memory system saturates only with enough parallelism in flight:
+    // sqrt softens the penalty vs compute (latency hiding needs fewer
+    // warps for streaming loads).
+    let mem_time = mem_bytes / (eff_bw * occ.sqrt());
+    let comp_time = desc.effective_flops() / (dev.peak_flops_per_us * occ);
+    mem_time.max(comp_time).max(0.2) // floor: even a null kernel has ~0.2us of work
+}
+
+/// Full kernel time including the launch overhead — what E2E timing sums.
+pub fn kernel_time_us(desc: &KernelDesc, dev: &DeviceConfig) -> f64 {
+    dev.launch_overhead_us + kernel_exec_time_us(desc, dev)
+}
+
+/// Library-call cost (cuBLAS/cuDNN in the paper): modelled as a highly
+/// optimized compute-bound kernel at `lib_efficiency` of peak, with a
+/// bandwidth floor.
+pub fn library_call_time_us(
+    flops: u64,
+    bytes: u64,
+    dev: &DeviceConfig,
+    lib_efficiency: f64,
+) -> f64 {
+    let comp = flops as f64 / (dev.peak_flops_per_us * lib_efficiency.clamp(0.05, 1.0));
+    let mem = bytes as f64 / (dev.dram_bw_bytes_per_us * dev.bw_efficiency);
+    dev.launch_overhead_us + comp.max(mem).max(0.2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn desc(bytes: u64, blocks: u64) -> KernelDesc {
+        KernelDesc {
+            bytes_read: bytes,
+            bytes_written: bytes / 2,
+            flops: bytes / 4,
+            blocks,
+            threads: 256,
+            smem_bytes: 0,
+            coalescing: 1.0,
+            op_weight: 1.0,
+        }
+    }
+
+    #[test]
+    fn tiny_kernels_are_launch_bound() {
+        let dev = DeviceConfig::pascal();
+        let d = desc(4096, 4);
+        let t = kernel_time_us(&d, &dev);
+        // launch overhead dominates: the fine-granularity problem (§1).
+        assert!(dev.launch_overhead_us / t > 0.5, "t = {t}");
+    }
+
+    #[test]
+    fn more_blocks_is_faster_until_saturation() {
+        let dev = DeviceConfig::pascal();
+        let big = 64 * 1024 * 1024u64;
+        let t1 = kernel_exec_time_us(&desc(big, 1), &dev);
+        let t56 = kernel_exec_time_us(&desc(big, 56), &dev);
+        let t4096 = kernel_exec_time_us(&desc(big, 4096), &dev);
+        assert!(t1 > t56, "{t1} vs {t56}");
+        assert!(t56 > t4096, "{t56} vs {t4096}");
+    }
+
+    #[test]
+    fn poor_coalescing_costs() {
+        let dev = DeviceConfig::pascal();
+        let mut d = desc(16 * 1024 * 1024, 2048);
+        let good = kernel_exec_time_us(&d, &dev);
+        d.coalescing = 0.4;
+        let bad = kernel_exec_time_us(&d, &dev);
+        assert!(bad > 2.0 * good);
+    }
+
+    #[test]
+    fn expensive_ops_weigh_more() {
+        let dev = DeviceConfig::pascal();
+        let mut d = desc(1024 * 1024, 2048);
+        d.flops = 100_000_000; // compute bound
+        let cheap = kernel_exec_time_us(&d, &dev);
+        d.op_weight = 8.0;
+        let exp = kernel_exec_time_us(&d, &dev);
+        assert!(exp > 4.0 * cheap);
+    }
+
+    #[test]
+    fn library_call_bounded_by_peak() {
+        let dev = DeviceConfig::pascal();
+        let t = library_call_time_us(9_300_000_000, 1024, &dev, 0.8);
+        // 9.3 GFLOP at 80% of 9.3 TFLOP/s ≈ 1250us + launch
+        assert!((t - (1250.0 + dev.launch_overhead_us)).abs() < 10.0, "t = {t}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Device configuration for the analytical GPU model.
+
+
+/// Parameters of the simulated GPU. Defaults model the paper's testbed:
+/// "a Pascal GPU, with 3584 cores and 64KB shared memory per SM"
+/// (a P100/GP100-class part).
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    pub name: String,
+    /// Number of streaming multiprocessors.
+    pub sm_count: u32,
+    /// CUDA cores per SM (FP32 lanes).
+    pub cores_per_sm: u32,
+    /// Shared memory per SM in bytes (the paper: 64 KB).
+    pub shared_mem_per_sm: usize,
+    /// Shared-memory budget FusionStitching allows one kernel (§6.5: the
+    /// paper sets an upper limit, currently 20 KB).
+    pub shared_mem_kernel_limit: usize,
+    /// Peak DRAM bandwidth, bytes/us (P100 HBM2 ≈ 732 GB/s).
+    pub dram_bw_bytes_per_us: f64,
+    /// Achievable fraction of peak bandwidth for well-coalesced access.
+    pub bw_efficiency: f64,
+    /// Peak FP32 throughput, flops/us (P100 ≈ 9.3 TFLOP/s).
+    pub peak_flops_per_us: f64,
+    /// Fixed kernel launch overhead in us (driver + dispatch; the paper's
+    /// motivation: fine-grained ops are launch-bound).
+    pub launch_overhead_us: f64,
+    /// Warp size.
+    pub warp_size: u32,
+    /// Max threads per block.
+    pub max_threads_per_block: u32,
+    /// Max resident blocks per SM.
+    pub max_blocks_per_sm: u32,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig::pascal()
+    }
+}
+
+impl DeviceConfig {
+    /// The paper's testbed: Pascal, 3584 cores, 64 KB smem/SM.
+    pub fn pascal() -> Self {
+        DeviceConfig {
+            name: "sim-pascal".into(),
+            sm_count: 56,
+            cores_per_sm: 64,
+            shared_mem_per_sm: 64 * 1024,
+            shared_mem_kernel_limit: 20 * 1024,
+            dram_bw_bytes_per_us: 732_000.0,
+            bw_efficiency: 0.75,
+            peak_flops_per_us: 9_300_000.0,
+            launch_overhead_us: 4.0,
+            warp_size: 32,
+            max_threads_per_block: 1024,
+            max_blocks_per_sm: 32,
+        }
+    }
+
+    /// Total CUDA cores (sanity: pascal() gives the paper's 3584).
+    pub fn total_cores(&self) -> u32 {
+        self.sm_count * self.cores_per_sm
+    }
+
+    /// Fraction of the machine kept busy by `blocks` thread blocks of
+    /// `threads` threads each. Small grids underutilize (the motivation
+    /// for enlarging kernel granularity).
+    ///
+    /// Model: SM *coverage* (each resident block occupies one SM) scaled
+    /// by a latency-hiding bonus (more resident warps per SM hide more
+    /// memory latency, up to the 64-slot limit) and a thread-count
+    /// efficiency (blocks below ~4 warps cannot fill the FP32 pipes).
+    pub fn occupancy(&self, blocks: u64, threads: u32) -> f64 {
+        let coverage = (blocks as f64 / self.sm_count as f64).min(1.0);
+        let warps_per_block = (threads.max(1)).div_ceil(self.warp_size) as f64;
+        let warp_slots = (self.sm_count as f64) * 64.0;
+        let warp_occ = ((blocks as f64 * warps_per_block) / warp_slots).min(1.0);
+        let thread_eff = (threads as f64 / 128.0).clamp(0.25, 1.0);
+        (coverage * (0.5 + 0.5 * warp_occ) * thread_eff).clamp(1e-4, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pascal_matches_paper() {
+        let d = DeviceConfig::pascal();
+        assert_eq!(d.total_cores(), 3584);
+        assert_eq!(d.shared_mem_per_sm, 65536);
+        assert_eq!(d.shared_mem_kernel_limit, 20 * 1024);
+    }
+
+    #[test]
+    fn occupancy_monotone_in_blocks() {
+        let d = DeviceConfig::pascal();
+        let o1 = d.occupancy(1, 256);
+        let o8 = d.occupancy(8, 256);
+        let o1000 = d.occupancy(1000, 256);
+        let o100k = d.occupancy(100_000, 256);
+        assert!(o1 < o8 && o8 < o1000);
+        assert!(o1000 <= o100k);
+        assert!(o100k <= 1.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Module-level simulated timing: aggregates per-kernel estimates the way
+//! `nvprof` aggregates real kernels in the paper's evaluation (§6).
+
+use super::cost::{kernel_time_us, library_call_time_us, KernelDesc};
+use super::device::DeviceConfig;
+
+/// One launched kernel in a simulated module execution.
+#[derive(Debug, Clone)]
+pub enum SimKernel {
+    /// A generated (possibly fused) kernel.
+    Generated(KernelDesc),
+    /// A vendor library call (cuBLAS/cuDNN class): flops + bytes moved.
+    Library { flops: u64, bytes: u64 },
+}
+
+/// Timing breakdown of one simulated module execution — the quantities
+/// behind Figs. 6 and 8.
+#[derive(Debug, Clone, Default)]
+pub struct ModuleTiming {
+    /// Time spent in generated (fusable-portion) kernels, us.
+    pub fusable_us: f64,
+    /// Time spent in library calls, us.
+    pub library_us: f64,
+    /// Number of generated kernel launches (the Fig. 7 numerator or
+    /// denominator, library calls excluded per §6.3).
+    pub generated_kernels: usize,
+    /// Number of library-call launches.
+    pub library_kernels: usize,
+}
+
+impl ModuleTiming {
+    pub fn total_us(&self) -> f64 {
+        self.fusable_us + self.library_us
+    }
+
+    /// The paper's FusableRatio: execution-time share of the fusable
+    /// (non-MatMul/Conv) portion (§6.4).
+    pub fn fusable_ratio(&self) -> f64 {
+        if self.total_us() == 0.0 {
+            0.0
+        } else {
+            self.fusable_us / self.total_us()
+        }
+    }
+}
+
+/// Simulate executing a sequence of kernels on `dev`.
+/// `lib_efficiency` is the fraction of peak the vendor library achieves.
+pub fn simulate_module(kernels: &[SimKernel], dev: &DeviceConfig, lib_efficiency: f64) -> ModuleTiming {
+    let mut t = ModuleTiming::default();
+    for k in kernels {
+        match k {
+            SimKernel::Generated(desc) => {
+                t.fusable_us += kernel_time_us(desc, dev);
+                t.generated_kernels += 1;
+            }
+            SimKernel::Library { flops, bytes } => {
+                t.library_us += library_call_time_us(*flops, *bytes, dev, lib_efficiency);
+                t.library_kernels += 1;
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(bytes: u64) -> SimKernel {
+        SimKernel::Generated(KernelDesc {
+            bytes_read: bytes,
+            bytes_written: bytes,
+            flops: bytes / 4,
+            blocks: 128,
+            threads: 256,
+            smem_bytes: 0,
+            coalescing: 1.0,
+            op_weight: 1.0,
+        })
+    }
+
+    #[test]
+    fn breakdown_accounts_both_portions() {
+        let dev = DeviceConfig::pascal();
+        let kernels = vec![
+            gen(1 << 20),
+            gen(1 << 20),
+            SimKernel::Library { flops: 1 << 30, bytes: 1 << 22 },
+        ];
+        let t = simulate_module(&kernels, &dev, 0.8);
+        assert_eq!(t.generated_kernels, 2);
+        assert_eq!(t.library_kernels, 1);
+        assert!(t.fusable_us > 0.0 && t.library_us > 0.0);
+        assert!((t.fusable_ratio() - t.fusable_us / t.total_us()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fewer_launches_is_faster_for_tiny_kernels() {
+        // The paper's core claim: fusing N launch-bound kernels into one
+        // wins on launch overhead alone.
+        let dev = DeviceConfig::pascal();
+        let many: Vec<SimKernel> = (0..10).map(|_| gen(4096)).collect();
+        let one = vec![gen(40960)];
+        let t_many = simulate_module(&many, &dev, 0.8);
+        let t_one = simulate_module(&one, &dev, 0.8);
+        assert!(t_one.total_us() < t_many.total_us() / 3.0);
+    }
+}

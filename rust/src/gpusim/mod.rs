@@ -1,0 +1,24 @@
+//! Analytical GPU cost model — the substrate standing in for the paper's
+//! physical Pascal GPU + `nvprof` (see DESIGN.md §2 substitutions).
+//!
+//! The paper's pipeline consumes GPU measurements in two places:
+//! 1. the performance library (§4.4) fills misses by compiling a CUDA
+//!    kernel and timing it with nvprof — we fill misses from
+//!    [`cost::kernel_time_us`] instead;
+//! 2. the evaluation (Figs. 6/8) times whole modules — we aggregate
+//!    per-kernel estimates plus launch overheads in [`executor`].
+//!
+//! The model is deliberately simple and deterministic: a roofline over
+//! memory bandwidth and FLOPs with occupancy/coalescing/launch terms.
+//! Absolute numbers are not claimed; *relative* behaviour (more blocks →
+//! better until saturation, column-schedule reductions pay a coalescing
+//! penalty, tiny kernels are launch-bound) is what the paper's decisions
+//! need.
+
+pub mod cost;
+pub mod device;
+pub mod executor;
+
+pub use cost::{kernel_time_us, KernelDesc};
+pub use device::DeviceConfig;
+pub use executor::{simulate_module, ModuleTiming};

@@ -1,0 +1,441 @@
+//! Ergonomic graph construction with shape inference.
+//!
+//! The benchmark models (Table 2) and all tests build graphs through this
+//! builder; it infers output shapes and panics on malformed graphs so that
+//! model definitions stay short and honest.
+
+use super::computation::{Computation, InstrId};
+use super::instruction::{Attrs, FrameId, ReduceKind};
+use super::opcode::Opcode;
+use super::shape::{DType, Shape};
+
+/// Builder over a [`Computation`]. Consumed by `finish()`.
+pub struct GraphBuilder {
+    comp: Computation,
+    frame: FrameId,
+    next_param: usize,
+    fresh: usize,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        GraphBuilder { comp: Computation::new(name), frame: 0, next_param: 0, fresh: 0 }
+    }
+
+    /// Set the while-loop frame context for subsequently added ops (§3.1).
+    pub fn set_frame(&mut self, frame: FrameId) {
+        self.frame = frame;
+    }
+
+    pub fn frame(&self) -> FrameId {
+        self.frame
+    }
+
+    fn name(&mut self, base: &str) -> String {
+        self.fresh += 1;
+        format!("{base}.{}", self.fresh)
+    }
+
+    fn shape_of(&self, id: InstrId) -> &Shape {
+        &self.comp.get(id).shape
+    }
+
+    fn push(&mut self, base: &str, op: Opcode, shape: Shape, operands: Vec<InstrId>, attrs: Attrs) -> InstrId {
+        let name = self.name(base);
+        self.comp.add(name, op, shape, operands, attrs, self.frame)
+    }
+
+    // ---- leaves ----
+
+    pub fn param(&mut self, name: &str, shape: Shape) -> InstrId {
+        let n = self.next_param;
+        self.next_param += 1;
+        self.comp.add(
+            name,
+            Opcode::Parameter,
+            shape,
+            vec![],
+            Attrs { parameter_number: Some(n), ..Default::default() },
+            self.frame,
+        )
+    }
+
+    pub fn constant(&mut self, shape: Shape) -> InstrId {
+        self.push("const", Opcode::Constant, shape, vec![], Attrs::default())
+    }
+
+    pub fn scalar(&mut self, dtype: DType) -> InstrId {
+        self.constant(Shape::scalar(dtype))
+    }
+
+    pub fn iota(&mut self, shape: Shape) -> InstrId {
+        self.push("iota", Opcode::Iota, shape, vec![], Attrs::default())
+    }
+
+    // ---- elementwise unary ----
+
+    fn unary(&mut self, op: Opcode, x: InstrId) -> InstrId {
+        let shape = self.shape_of(x).clone();
+        self.push(&op.to_string().to_lowercase(), op, shape, vec![x], Attrs::default())
+    }
+
+    pub fn exp(&mut self, x: InstrId) -> InstrId {
+        self.unary(Opcode::Exp, x)
+    }
+    pub fn log(&mut self, x: InstrId) -> InstrId {
+        self.unary(Opcode::Log, x)
+    }
+    pub fn tanh(&mut self, x: InstrId) -> InstrId {
+        self.unary(Opcode::Tanh, x)
+    }
+    pub fn sigmoid(&mut self, x: InstrId) -> InstrId {
+        self.unary(Opcode::Sigmoid, x)
+    }
+    pub fn sqrt(&mut self, x: InstrId) -> InstrId {
+        self.unary(Opcode::Sqrt, x)
+    }
+    pub fn rsqrt(&mut self, x: InstrId) -> InstrId {
+        self.unary(Opcode::Rsqrt, x)
+    }
+    pub fn neg(&mut self, x: InstrId) -> InstrId {
+        self.unary(Opcode::Negate, x)
+    }
+    pub fn abs(&mut self, x: InstrId) -> InstrId {
+        self.unary(Opcode::Abs, x)
+    }
+    pub fn copy(&mut self, x: InstrId) -> InstrId {
+        self.unary(Opcode::Copy, x)
+    }
+    pub fn erf(&mut self, x: InstrId) -> InstrId {
+        self.unary(Opcode::Erf, x)
+    }
+
+    // ---- elementwise binary (shapes must match exactly; broadcast
+    //      explicitly with `broadcast`) ----
+
+    fn binary(&mut self, op: Opcode, a: InstrId, b: InstrId) -> InstrId {
+        let sa = self.shape_of(a).clone();
+        let sb = self.shape_of(b);
+        assert_eq!(&sa, sb, "binary {op} shape mismatch: {sa} vs {sb}");
+        self.push(&op.to_string().to_lowercase(), op, sa, vec![a, b], Attrs::default())
+    }
+
+    pub fn add(&mut self, a: InstrId, b: InstrId) -> InstrId {
+        self.binary(Opcode::Add, a, b)
+    }
+    pub fn sub(&mut self, a: InstrId, b: InstrId) -> InstrId {
+        self.binary(Opcode::Subtract, a, b)
+    }
+    pub fn mul(&mut self, a: InstrId, b: InstrId) -> InstrId {
+        self.binary(Opcode::Multiply, a, b)
+    }
+    pub fn div(&mut self, a: InstrId, b: InstrId) -> InstrId {
+        self.binary(Opcode::Divide, a, b)
+    }
+    pub fn pow(&mut self, a: InstrId, b: InstrId) -> InstrId {
+        self.binary(Opcode::Power, a, b)
+    }
+    pub fn max(&mut self, a: InstrId, b: InstrId) -> InstrId {
+        self.binary(Opcode::Maximum, a, b)
+    }
+    pub fn min(&mut self, a: InstrId, b: InstrId) -> InstrId {
+        self.binary(Opcode::Minimum, a, b)
+    }
+
+    pub fn compare(&mut self, a: InstrId, b: InstrId) -> InstrId {
+        let sa = self.shape_of(a).clone();
+        assert_eq!(&sa.dims, &self.shape_of(b).dims);
+        let shape = Shape::new(DType::Pred, sa.dims);
+        self.push("compare", Opcode::Compare, shape, vec![a, b], Attrs::default())
+    }
+
+    pub fn select(&mut self, pred: InstrId, on_true: InstrId, on_false: InstrId) -> InstrId {
+        let st = self.shape_of(on_true).clone();
+        assert_eq!(&st, self.shape_of(on_false));
+        self.push("select", Opcode::Select, st, vec![pred, on_true, on_false], Attrs::default())
+    }
+
+    // ---- shape modulation ----
+
+    pub fn reshape(&mut self, x: InstrId, dims: &[i64]) -> InstrId {
+        let sx = self.shape_of(x);
+        let out = Shape::new(sx.dtype, dims.to_vec());
+        assert!(
+            sx.same_elements(&out),
+            "reshape element mismatch: {sx} -> {out}"
+        );
+        self.push("reshape", Opcode::Reshape, out, vec![x], Attrs::default())
+    }
+
+    pub fn bitcast(&mut self, x: InstrId, dims: &[i64]) -> InstrId {
+        let sx = self.shape_of(x);
+        let out = Shape::new(sx.dtype, dims.to_vec());
+        assert!(sx.same_elements(&out), "bitcast element mismatch: {sx} -> {out}");
+        self.push("bitcast", Opcode::Bitcast, out, vec![x], Attrs::default())
+    }
+
+    pub fn transpose(&mut self, x: InstrId, perm: &[usize]) -> InstrId {
+        let sx = self.shape_of(x);
+        assert_eq!(perm.len(), sx.rank(), "perm rank mismatch");
+        let mut sorted = perm.to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..sx.rank()).collect::<Vec<_>>(), "not a permutation: {perm:?}");
+        let dims: Vec<i64> = perm.iter().map(|&p| sx.dims[p]).collect();
+        let out = Shape::new(sx.dtype, dims);
+        self.push(
+            "transpose",
+            Opcode::Transpose,
+            out,
+            vec![x],
+            Attrs { transpose_perm: Some(perm.to_vec()), ..Default::default() },
+        )
+    }
+
+    /// Broadcast `x` into `out_dims`; `bcast_dims[i]` is the output dim
+    /// that input dim `i` maps to (XLA semantics).
+    pub fn broadcast(&mut self, x: InstrId, out_dims: &[i64], bcast_dims: &[usize]) -> InstrId {
+        let sx = self.shape_of(x);
+        assert_eq!(bcast_dims.len(), sx.rank(), "broadcast_dims rank mismatch");
+        for (i, &d) in bcast_dims.iter().enumerate() {
+            assert!(d < out_dims.len());
+            assert_eq!(sx.dims[i], out_dims[d], "broadcast dim size mismatch at {i}");
+        }
+        assert!(bcast_dims.windows(2).all(|w| w[0] < w[1]), "broadcast_dims must be sorted");
+        let out = Shape::new(sx.dtype, out_dims.to_vec());
+        self.push(
+            "broadcast",
+            Opcode::Broadcast,
+            out,
+            vec![x],
+            Attrs { broadcast_dims: Some(bcast_dims.to_vec()), ..Default::default() },
+        )
+    }
+
+    pub fn concat(&mut self, xs: &[InstrId], dim: usize) -> InstrId {
+        assert!(!xs.is_empty());
+        let first = self.shape_of(xs[0]).clone();
+        let mut dims = first.dims.clone();
+        let mut total = 0;
+        for &x in xs {
+            let sx = self.shape_of(x);
+            assert_eq!(sx.rank(), first.rank());
+            for (i, (&a, &b)) in sx.dims.iter().zip(&first.dims).enumerate() {
+                if i != dim {
+                    assert_eq!(a, b, "concat non-joined dim mismatch");
+                }
+            }
+            total += sx.dims[dim];
+        }
+        dims[dim] = total;
+        let out = Shape::new(first.dtype, dims);
+        self.push(
+            "concat",
+            Opcode::Concatenate,
+            out,
+            xs.to_vec(),
+            Attrs { concat_dim: Some(dim), ..Default::default() },
+        )
+    }
+
+    pub fn slice(&mut self, x: InstrId, starts: &[i64], limits: &[i64]) -> InstrId {
+        let sx = self.shape_of(x);
+        assert_eq!(starts.len(), sx.rank());
+        assert_eq!(limits.len(), sx.rank());
+        let dims: Vec<i64> = starts
+            .iter()
+            .zip(limits)
+            .zip(&sx.dims)
+            .map(|((&s, &l), &d)| {
+                assert!(0 <= s && s <= l && l <= d, "slice bounds out of range");
+                l - s
+            })
+            .collect();
+        let out = Shape::new(sx.dtype, dims);
+        self.push(
+            "slice",
+            Opcode::Slice,
+            out,
+            vec![x],
+            Attrs {
+                slice_starts: Some(starts.to_vec()),
+                slice_limits: Some(limits.to_vec()),
+                ..Default::default()
+            },
+        )
+    }
+
+    // ---- reduce ----
+
+    pub fn reduce(&mut self, x: InstrId, dims: &[usize], kind: ReduceKind) -> InstrId {
+        let sx = self.shape_of(x);
+        assert!(!dims.is_empty(), "reduce needs at least one dim");
+        let mut sorted = dims.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), dims.len(), "duplicate reduce dims");
+        assert!(*sorted.last().unwrap() < sx.rank(), "reduce dim out of range");
+        let out_dims: Vec<i64> = sx
+            .dims
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !sorted.contains(i))
+            .map(|(_, &d)| d)
+            .collect();
+        let out = Shape::new(sx.dtype, out_dims);
+        self.push(
+            "reduce",
+            Opcode::Reduce,
+            out,
+            vec![x],
+            Attrs { reduce_dims: Some(sorted), reduce_kind: Some(kind), ..Default::default() },
+        )
+    }
+
+    // ---- contractions ----
+
+    /// Batched matmul: `[..., m, k] x [..., k, n] -> [..., m, n]`.
+    /// Fusable (§2.1) — kept inside the graph, unlike `dot`.
+    pub fn batch_dot(&mut self, a: InstrId, b: InstrId) -> InstrId {
+        let shape = self.contract_shape(a, b);
+        self.push("batch_dot", Opcode::BatchDot, shape, vec![a, b], Attrs::default())
+    }
+
+    /// Library matmul (cuBLAS in the paper): an LC-layer delimiter.
+    pub fn dot(&mut self, a: InstrId, b: InstrId) -> InstrId {
+        let shape = self.contract_shape(a, b);
+        self.push("dot", Opcode::Dot, shape, vec![a, b], Attrs::default())
+    }
+
+    fn contract_shape(&self, a: InstrId, b: InstrId) -> Shape {
+        let sa = self.shape_of(a);
+        let sb = self.shape_of(b);
+        assert!(sa.rank() >= 2 && sb.rank() == sa.rank(), "contract rank mismatch: {sa} x {sb}");
+        let r = sa.rank();
+        assert_eq!(sa.dims[r - 1], sb.dims[r - 2], "contract inner dim mismatch: {sa} x {sb}");
+        assert_eq!(sa.dims[..r - 2], sb.dims[..r - 2], "batch dims mismatch: {sa} x {sb}");
+        let mut dims = sa.dims.clone();
+        dims[r - 1] = sb.dims[r - 1];
+        Shape::new(sa.dtype, dims)
+    }
+
+    /// Library convolution (cuDNN in the paper). NHWC input, HWIO filter,
+    /// stride 1, SAME padding — enough fidelity for cost accounting.
+    pub fn conv2d(&mut self, input: InstrId, filter: InstrId) -> InstrId {
+        let si = self.shape_of(input);
+        let sf = self.shape_of(filter);
+        assert_eq!(si.rank(), 4, "conv2d input must be NHWC");
+        assert_eq!(sf.rank(), 4, "conv2d filter must be HWIO");
+        assert_eq!(si.dims[3], sf.dims[2], "conv2d channel mismatch");
+        let out = Shape::new(si.dtype, vec![si.dims[0], si.dims[1], si.dims[2], sf.dims[3]]);
+        self.push("conv2d", Opcode::Convolution, out, vec![input, filter], Attrs::default())
+    }
+
+    /// Opaque library call (e.g. a cuDNN RNN cell).
+    pub fn custom_call(&mut self, target: &str, operands: &[InstrId], shape: Shape) -> InstrId {
+        self.push(
+            "custom_call",
+            Opcode::CustomCall,
+            shape,
+            operands.to_vec(),
+            Attrs { custom_call_target: Some(target.to_string()), ..Default::default() },
+        )
+    }
+
+    // ---- finish ----
+
+    pub fn finish(mut self, root: InstrId) -> Computation {
+        self.comp.set_root(root);
+        self.comp
+    }
+
+    /// Access the computation under construction (read-only), e.g. for
+    /// shape queries inside model definitions.
+    pub fn peek(&self) -> &Computation {
+        &self.comp
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_pattern_shapes() {
+        // The Figure 3 motivating pattern (simplified): softmax over the
+        // last dim of [B, S, S] followed by a batched dot with [B, S, D].
+        let mut b = GraphBuilder::new("softmax_bmm");
+        let scores = b.param("scores", Shape::f32(&[8, 64, 64]));
+        let v = b.param("v", Shape::f32(&[8, 64, 32]));
+        let m = b.reduce(scores, &[2], ReduceKind::Max);
+        let mb = b.broadcast(m, &[8, 64, 64], &[0, 1]);
+        let shifted = b.sub(scores, mb);
+        let e = b.exp(shifted);
+        let s = b.reduce(e, &[2], ReduceKind::Sum);
+        let sb = b.broadcast(s, &[8, 64, 64], &[0, 1]);
+        let p = b.div(e, sb);
+        let out = b.batch_dot(p, v);
+        let comp = b.finish(out);
+        assert_eq!(comp.get(out).shape, Shape::f32(&[8, 64, 32]));
+        assert_eq!(comp.get(m).shape, Shape::f32(&[8, 64]));
+    }
+
+    #[test]
+    fn transpose_shape() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.param("x", Shape::f32(&[2, 3, 4]));
+        let t = b.transpose(x, &[2, 0, 1]);
+        assert_eq!(b.peek().get(t).shape.dims, vec![4, 2, 3]);
+    }
+
+    #[test]
+    fn reduce_removes_dims() {
+        let mut b = GraphBuilder::new("r");
+        let x = b.param("x", Shape::f32(&[2, 3, 4, 5]));
+        let r = b.reduce(x, &[1, 3], ReduceKind::Sum);
+        assert_eq!(b.peek().get(r).shape.dims, vec![2, 4]);
+    }
+
+    #[test]
+    fn concat_shapes() {
+        let mut b = GraphBuilder::new("c");
+        let x = b.param("x", Shape::f32(&[2, 3]));
+        let y = b.param("y", Shape::f32(&[2, 5]));
+        let c = b.concat(&[x, y], 1);
+        assert_eq!(b.peek().get(c).shape.dims, vec![2, 8]);
+    }
+
+    #[test]
+    fn slice_shape() {
+        let mut b = GraphBuilder::new("s");
+        let x = b.param("x", Shape::f32(&[4, 6]));
+        let s = b.slice(x, &[1, 2], &[3, 6]);
+        assert_eq!(b.peek().get(s).shape.dims, vec![2, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn binary_shape_mismatch_panics() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.param("x", Shape::f32(&[2]));
+        let y = b.param("y", Shape::f32(&[3]));
+        b.add(x, y);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dim mismatch")]
+    fn dot_inner_mismatch_panics() {
+        let mut b = GraphBuilder::new("bad");
+        let x = b.param("x", Shape::f32(&[2, 3]));
+        let y = b.param("y", Shape::f32(&[4, 2]));
+        b.dot(x, y);
+    }
+
+    #[test]
+    fn conv2d_shape() {
+        let mut b = GraphBuilder::new("conv");
+        let x = b.param("x", Shape::f32(&[8, 28, 28, 3]));
+        let w = b.param("w", Shape::f32(&[3, 3, 3, 16]));
+        let c = b.conv2d(x, w);
+        assert_eq!(b.peek().get(c).shape.dims, vec![8, 28, 28, 16]);
+    }
+}

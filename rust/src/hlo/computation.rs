@@ -1,0 +1,271 @@
+//! The computation arena: an append-only SSA graph of instructions.
+//!
+//! Append-only construction gives us a free topological order (operands
+//! always precede users), which every pass in the pipeline relies on.
+
+use super::instruction::{Attrs, FrameId, Instruction};
+use super::opcode::Opcode;
+use super::shape::Shape;
+use std::fmt;
+
+/// Index of an instruction inside its [`Computation`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InstrId(pub usize);
+
+impl fmt::Display for InstrId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{}", self.0)
+    }
+}
+
+/// A computation: a DAG of instructions with a designated root (output).
+#[derive(Debug, Clone)]
+pub struct Computation {
+    pub name: String,
+    instrs: Vec<Instruction>,
+    /// users[i] = ids of instructions that consume instruction i.
+    users: Vec<Vec<InstrId>>,
+    root: Option<InstrId>,
+}
+
+impl Computation {
+    pub fn new(name: impl Into<String>) -> Self {
+        Computation { name: name.into(), instrs: Vec::new(), users: Vec::new(), root: None }
+    }
+
+    /// Append an instruction. Operand ids must already exist (this is what
+    /// keeps instruction order topological). Returns the new id.
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        opcode: Opcode,
+        shape: Shape,
+        operands: Vec<InstrId>,
+        attrs: Attrs,
+        frame: FrameId,
+    ) -> InstrId {
+        let id = InstrId(self.instrs.len());
+        for op in &operands {
+            assert!(op.0 < id.0, "operand {op} does not precede {id} (append-only invariant)");
+            self.users[op.0].push(id);
+        }
+        self.instrs.push(Instruction {
+            id,
+            name: name.into(),
+            opcode,
+            shape,
+            operands,
+            attrs,
+            frame,
+        });
+        self.users.push(Vec::new());
+        id
+    }
+
+    pub fn get(&self, id: InstrId) -> &Instruction {
+        &self.instrs[id.0]
+    }
+
+    pub fn get_mut(&mut self, id: InstrId) -> &mut Instruction {
+        &mut self.instrs[id.0]
+    }
+
+    /// Instructions that consume `id`'s value.
+    pub fn users(&self, id: InstrId) -> &[InstrId] {
+        &self.users[id.0]
+    }
+
+    pub fn set_root(&mut self, id: InstrId) {
+        assert!(id.0 < self.instrs.len());
+        self.root = Some(id);
+    }
+
+    pub fn root(&self) -> InstrId {
+        self.root.expect("computation has no root")
+    }
+
+    pub fn has_root(&self) -> bool {
+        self.root.is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// All ids in topological (construction) order.
+    pub fn ids(&self) -> impl Iterator<Item = InstrId> + '_ {
+        (0..self.instrs.len()).map(InstrId)
+    }
+
+    pub fn instructions(&self) -> impl Iterator<Item = &Instruction> {
+        self.instrs.iter()
+    }
+
+    /// Shapes of `id`'s operands, in operand order.
+    pub fn operand_shapes(&self, id: InstrId) -> Vec<&Shape> {
+        self.get(id).operands.iter().map(|&o| &self.get(o).shape).collect()
+    }
+
+    /// Ids of instructions with no users (graph outputs). The root is
+    /// always included even if it has users.
+    pub fn outputs(&self) -> Vec<InstrId> {
+        let mut outs: Vec<InstrId> =
+            self.ids().filter(|&id| self.users(id).is_empty()).collect();
+        if let Some(r) = self.root {
+            if !outs.contains(&r) {
+                outs.push(r);
+            }
+        }
+        outs
+    }
+
+    /// Parameters in parameter-number order.
+    pub fn parameters(&self) -> Vec<InstrId> {
+        let mut params: Vec<InstrId> =
+            self.ids().filter(|&id| self.get(id).opcode == Opcode::Parameter).collect();
+        params.sort_by_key(|&id| self.get(id).attrs.parameter_number.unwrap_or(usize::MAX));
+        params
+    }
+
+    /// Depth-first post-order from the root (operands before users),
+    /// restricted to instructions reachable from the root.
+    pub fn post_order_from_root(&self) -> Vec<InstrId> {
+        let mut visited = vec![false; self.instrs.len()];
+        let mut order = Vec::new();
+        let mut stack = vec![(self.root(), false)];
+        while let Some((id, expanded)) = stack.pop() {
+            if expanded {
+                order.push(id);
+                continue;
+            }
+            if visited[id.0] {
+                continue;
+            }
+            visited[id.0] = true;
+            stack.push((id, true));
+            for &op in &self.get(id).operands {
+                if !visited[op.0] {
+                    stack.push((op, false));
+                }
+            }
+        }
+        order
+    }
+
+    /// True if `a` transitively depends on `b` (i.e. `b` is reachable from
+    /// `a` through operand edges).
+    pub fn depends_on(&self, a: InstrId, b: InstrId) -> bool {
+        if a == b {
+            return true;
+        }
+        // operands always have smaller ids, so walk down only.
+        let mut seen = vec![false; a.0 + 1];
+        let mut stack = vec![a];
+        while let Some(id) = stack.pop() {
+            if id == b {
+                return true;
+            }
+            for &op in &self.get(id).operands {
+                if op.0 >= b.0 && !seen[op.0] {
+                    seen[op.0] = true;
+                    stack.push(op);
+                }
+            }
+        }
+        false
+    }
+
+    /// Number of GPU kernels this computation launches *before any fusion*:
+    /// every non-free instruction is one kernel (the paper's fine-granularity
+    /// problem, §1).
+    pub fn unfused_kernel_count(&self) -> usize {
+        self.instructions().filter(|i| !i.opcode.is_free()).count()
+    }
+}
+
+impl fmt::Display for Computation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{} {{", self.name)?;
+        for instr in &self.instrs {
+            writeln!(f, "  {instr}")?;
+        }
+        writeln!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::shape::DType;
+
+    fn simple() -> Computation {
+        // p0, p1 -> add -> exp (root)
+        let mut c = Computation::new("t");
+        let s = Shape::f32(&[4]);
+        let p0 = c.add("p0", Opcode::Parameter, s.clone(), vec![], Attrs::default(), 0);
+        let p1 = c.add("p1", Opcode::Parameter, s.clone(), vec![], Attrs::default(), 0);
+        let add = c.add("add", Opcode::Add, s.clone(), vec![p0, p1], Attrs::default(), 0);
+        let exp = c.add("exp", Opcode::Exp, s, vec![add], Attrs::default(), 0);
+        c.set_root(exp);
+        c
+    }
+
+    #[test]
+    fn users_maintained() {
+        let c = simple();
+        assert_eq!(c.users(InstrId(0)), &[InstrId(2)]);
+        assert_eq!(c.users(InstrId(2)), &[InstrId(3)]);
+        assert!(c.users(InstrId(3)).is_empty());
+    }
+
+    #[test]
+    fn outputs_and_params() {
+        let c = simple();
+        assert_eq!(c.outputs(), vec![InstrId(3)]);
+        assert_eq!(c.parameters().len(), 2);
+    }
+
+    #[test]
+    fn post_order_operands_first() {
+        let c = simple();
+        let order = c.post_order_from_root();
+        let pos = |id: InstrId| order.iter().position(|&x| x == id).unwrap();
+        assert!(pos(InstrId(0)) < pos(InstrId(2)));
+        assert!(pos(InstrId(2)) < pos(InstrId(3)));
+        assert_eq!(order.len(), 4);
+    }
+
+    #[test]
+    fn depends_on() {
+        let c = simple();
+        assert!(c.depends_on(InstrId(3), InstrId(0)));
+        assert!(c.depends_on(InstrId(3), InstrId(3)));
+        assert!(!c.depends_on(InstrId(0), InstrId(3)));
+        assert!(!c.depends_on(InstrId(0), InstrId(1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "append-only")]
+    fn forward_reference_panics() {
+        let mut c = Computation::new("bad");
+        c.add(
+            "x",
+            Opcode::Exp,
+            Shape::scalar(DType::F32),
+            vec![InstrId(5)],
+            Attrs::default(),
+            0,
+        );
+    }
+
+    #[test]
+    fn unfused_kernel_count_excludes_free_ops() {
+        let c = simple();
+        // add + exp are kernels; parameters are free.
+        assert_eq!(c.unfused_kernel_count(), 2);
+    }
+}

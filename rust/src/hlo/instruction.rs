@@ -1,0 +1,196 @@
+//! HLO instructions: opcode + output shape + operands + op attributes.
+
+use super::computation::InstrId;
+use super::opcode::Opcode;
+use super::shape::Shape;
+use std::fmt;
+
+/// Reduction kind. The paper's Figure 1 groups mean/sum/min/max under a
+/// collective "reduce" line; we keep the kind explicit for codegen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+    Min,
+    Mean,
+    Prod,
+}
+
+impl fmt::Display for ReduceKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// While-loop frame context id (§3.1: nodes are partitioned into frame
+/// contexts before Work/Span analysis). Frame 0 is the top-level graph.
+pub type FrameId = u32;
+
+/// Optional per-op attributes. Only the fields relevant to an opcode are
+/// populated; the verifier enforces this.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Attrs {
+    /// `Transpose`: output dim `i` reads input dim `perm[i]`.
+    pub transpose_perm: Option<Vec<usize>>,
+    /// `Reduce`: input dims being collapsed (sorted ascending).
+    pub reduce_dims: Option<Vec<usize>>,
+    /// `Reduce`: combiner.
+    pub reduce_kind: Option<ReduceKind>,
+    /// `Broadcast`: which output dims the operand dims map to
+    /// (XLA `broadcast_dimensions`), sorted ascending.
+    pub broadcast_dims: Option<Vec<usize>>,
+    /// `Concatenate`: dimension along which operands are joined.
+    pub concat_dim: Option<usize>,
+    /// `Slice`: start index per dim.
+    pub slice_starts: Option<Vec<i64>>,
+    /// `Slice`: limit index per dim.
+    pub slice_limits: Option<Vec<i64>>,
+    /// `CustomCall`: opaque target name (e.g. "cudnn_lstm").
+    pub custom_call_target: Option<String>,
+    /// `Parameter`: position in the entry signature.
+    pub parameter_number: Option<usize>,
+    /// `GetTupleElement`: tuple index.
+    pub tuple_index: Option<usize>,
+}
+
+/// One HLO instruction. Instructions live in a [`super::Computation`]
+/// arena and reference operands by [`InstrId`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instruction {
+    pub id: InstrId,
+    pub name: String,
+    pub opcode: Opcode,
+    pub shape: Shape,
+    pub operands: Vec<InstrId>,
+    pub attrs: Attrs,
+    /// While-loop frame context (0 = top level).
+    pub frame: FrameId,
+}
+
+impl Instruction {
+    /// Memory IO footprint in number of elements: output plus all operand
+    /// elements. This is the metric of the paper's Figure 1 ("memory IO
+    /// footprint size in number of floats").
+    ///
+    /// Note this intentionally counts *instruction-local* IO; buffer
+    /// sharing across a fused kernel is accounted separately by
+    /// [`crate::analysis::footprint`].
+    pub fn io_footprint_elements(&self, operand_shapes: &[&Shape]) -> i64 {
+        self.shape.num_elements() + operand_shapes.iter().map(|s| s.num_elements()).sum::<i64>()
+    }
+
+    /// For `Reduce`: the smallest reduced input dimension index
+    /// (`min_reduce_dim` in Table 1). Panics if not a reduce.
+    pub fn min_reduce_dim(&self) -> usize {
+        *self
+            .attrs
+            .reduce_dims
+            .as_ref()
+            .expect("reduce_dims on non-reduce")
+            .iter()
+            .min()
+            .expect("empty reduce_dims")
+    }
+
+    /// For `Reduce`: the largest reduced input dimension index.
+    pub fn max_reduce_dim(&self) -> usize {
+        *self
+            .attrs
+            .reduce_dims
+            .as_ref()
+            .expect("reduce_dims on non-reduce")
+            .iter()
+            .max()
+            .expect("empty reduce_dims")
+    }
+
+    /// For `Transpose`: smallest dim index that actually moves
+    /// (`min_trans_dim` in Table 1). `None` if the permutation is identity.
+    pub fn min_trans_dim(&self) -> Option<usize> {
+        let perm = self.attrs.transpose_perm.as_ref().expect("perm on non-transpose");
+        perm.iter().enumerate().filter(|(i, &p)| *i != p).map(|(i, _)| i).min()
+    }
+
+    /// For `Transpose`: largest dim index that actually moves.
+    pub fn max_trans_dim(&self) -> Option<usize> {
+        let perm = self.attrs.transpose_perm.as_ref().expect("perm on non-transpose");
+        perm.iter().enumerate().filter(|(i, &p)| *i != p).map(|(i, _)| i).max()
+    }
+}
+
+impl fmt::Display for Instruction {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "%{} = {} {}", self.name, self.shape, self.opcode)?;
+        if !self.operands.is_empty() {
+            let ops: Vec<String> = self.operands.iter().map(|o| format!("%{}", o.0)).collect();
+            write!(f, "({})", ops.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::computation::InstrId;
+
+    fn reduce_instr(dims: Vec<usize>) -> Instruction {
+        Instruction {
+            id: InstrId(0),
+            name: "r".into(),
+            opcode: Opcode::Reduce,
+            shape: Shape::f32(&[2, 3]),
+            operands: vec![InstrId(1)],
+            attrs: Attrs {
+                reduce_dims: Some(dims),
+                reduce_kind: Some(ReduceKind::Sum),
+                ..Default::default()
+            },
+            frame: 0,
+        }
+    }
+
+    #[test]
+    fn reduce_dim_bounds() {
+        let r = reduce_instr(vec![2, 4, 3]);
+        assert_eq!(r.min_reduce_dim(), 2);
+        assert_eq!(r.max_reduce_dim(), 4);
+    }
+
+    #[test]
+    fn transpose_dim_bounds() {
+        let t = Instruction {
+            id: InstrId(0),
+            name: "t".into(),
+            opcode: Opcode::Transpose,
+            shape: Shape::f32(&[4, 3, 2]),
+            operands: vec![InstrId(1)],
+            attrs: Attrs { transpose_perm: Some(vec![0, 2, 1]), ..Default::default() },
+            frame: 0,
+        };
+        assert_eq!(t.min_trans_dim(), Some(1));
+        assert_eq!(t.max_trans_dim(), Some(2));
+    }
+
+    #[test]
+    fn identity_transpose_has_no_moving_dims() {
+        let t = Instruction {
+            id: InstrId(0),
+            name: "t".into(),
+            opcode: Opcode::Transpose,
+            shape: Shape::f32(&[4, 3]),
+            operands: vec![InstrId(1)],
+            attrs: Attrs { transpose_perm: Some(vec![0, 1]), ..Default::default() },
+            frame: 0,
+        };
+        assert_eq!(t.min_trans_dim(), None);
+        assert_eq!(t.max_trans_dim(), None);
+    }
+
+    #[test]
+    fn io_footprint() {
+        let r = reduce_instr(vec![0]);
+        let in_shape = Shape::f32(&[10, 2, 3]);
+        assert_eq!(r.io_footprint_elements(&[&in_shape]), 6 + 60);
+    }
+}

@@ -1,0 +1,24 @@
+//! HLO-like intermediate representation.
+//!
+//! Mirrors the subset of XLA's `HloModule` that FusionStitching operates
+//! on: a flat, SSA-style instruction arena per computation, with the four
+//! op categories the paper considers (§2.1): elementwise, shape
+//! modulation, reduction and batched matmul — plus parameters, constants,
+//! library calls (Dot/Conv/CustomCall) and while-frame tags.
+
+pub mod builder;
+pub mod computation;
+pub mod instruction;
+pub mod module;
+pub mod opcode;
+pub mod parser;
+pub mod printer;
+pub mod shape;
+pub mod verifier;
+
+pub use builder::GraphBuilder;
+pub use computation::{Computation, InstrId};
+pub use instruction::{Instruction, ReduceKind};
+pub use module::Module;
+pub use opcode::Opcode;
+pub use shape::{DType, Shape};

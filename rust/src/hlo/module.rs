@@ -1,0 +1,42 @@
+//! An `HloModule`-like container: one entry computation plus metadata.
+
+use super::computation::Computation;
+use std::fmt;
+
+/// A compilation unit. The paper's pipeline takes an `HloModule` as input
+/// (Fig. 4); our `Module` wraps the entry computation and carries the
+/// workload name used in reports.
+#[derive(Debug, Clone)]
+pub struct Module {
+    pub name: String,
+    pub entry: Computation,
+}
+
+impl Module {
+    pub fn new(name: impl Into<String>, entry: Computation) -> Self {
+        Module { name: name.into(), entry }
+    }
+}
+
+impl fmt::Display for Module {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", crate::hlo::printer::print_module(self))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::builder::GraphBuilder;
+    use crate::hlo::shape::Shape;
+
+    #[test]
+    fn module_holds_entry() {
+        let mut b = GraphBuilder::new("entry");
+        let x = b.param("x", Shape::f32(&[4]));
+        let y = b.exp(x);
+        let m = Module::new("test", b.finish(y));
+        assert_eq!(m.name, "test");
+        assert_eq!(m.entry.len(), 2);
+    }
+}

@@ -1,0 +1,276 @@
+//! Instruction opcodes and the paper's op-category predicates.
+//!
+//! §2.1 of the paper considers four op categories inside fusable
+//! subgraphs: (1) elementwise, (2) shape modulation (`Reshape`, `Bitcast`,
+//! `Transpose`, `Broadcast`), (3) reduction, (4) `BatchMatMul`. Library
+//! calls (`Dot`/`Conv`/`CustomCall`) delimit the fusable regions
+//! (LC-layers, §3.2).
+
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Opcode {
+    // ---- graph plumbing ----
+    Parameter,
+    Constant,
+    Iota,
+    Tuple,
+    GetTupleElement,
+
+    // ---- cheap elementwise (unary) ----
+    Abs,
+    Negate,
+    Sign,
+    Floor,
+    Ceil,
+    Not,
+    Copy,
+
+    // ---- expensive elementwise (unary) — §5.1.1 "expensive" set ----
+    Exp,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Tanh,
+    Sigmoid,
+    Erf,
+
+    // ---- cheap elementwise (binary) ----
+    Add,
+    Subtract,
+    Multiply,
+    Maximum,
+    Minimum,
+    Compare,
+    And,
+    Or,
+
+    // ---- expensive elementwise (binary) ----
+    Divide,
+    Power,
+    Remainder,
+
+    // ---- elementwise (ternary) ----
+    Select,
+    Clamp,
+
+    // ---- shape modulation ----
+    Reshape,
+    Bitcast,
+    Transpose,
+    Broadcast,
+    Slice,
+    Concatenate,
+    Pad,
+    Gather,
+    DynamicSlice,
+    DynamicUpdateSlice,
+
+    // ---- reductions ----
+    Reduce,
+    ReduceWindow,
+
+    // ---- fusable contraction (§2.1: workload-specific BatchMatMul) ----
+    BatchDot,
+
+    // ---- library calls (LC-layers; never fused, §3.2) ----
+    Dot,
+    Convolution,
+    CustomCall,
+
+    // ---- control flow ----
+    While,
+}
+
+impl Opcode {
+    /// Elementwise ops compute each output element from the corresponding
+    /// input element(s): the paper's category (1).
+    pub fn is_elementwise(self) -> bool {
+        use Opcode::*;
+        matches!(
+            self,
+            Abs | Negate
+                | Sign
+                | Floor
+                | Ceil
+                | Not
+                | Copy
+                | Exp
+                | Log
+                | Sqrt
+                | Rsqrt
+                | Tanh
+                | Sigmoid
+                | Erf
+                | Add
+                | Subtract
+                | Multiply
+                | Maximum
+                | Minimum
+                | Compare
+                | And
+                | Or
+                | Divide
+                | Power
+                | Remainder
+                | Select
+                | Clamp
+        )
+    }
+
+    /// The paper's "expensive elementwise" set (§5.1.1): transcendental
+    /// and division ops whose recomputation under thread composition is
+    /// what shared-memory stitching avoids.
+    pub fn is_expensive_elementwise(self) -> bool {
+        use Opcode::*;
+        matches!(
+            self,
+            Exp | Log | Sqrt | Rsqrt | Tanh | Sigmoid | Erf | Divide | Power | Remainder
+        )
+    }
+
+    /// Shape modulation ops: category (2). They move/reinterpret data
+    /// without computing on it.
+    pub fn is_shape_modulation(self) -> bool {
+        use Opcode::*;
+        matches!(
+            self,
+            Reshape
+                | Bitcast
+                | Transpose
+                | Broadcast
+                | Slice
+                | Concatenate
+                | Pad
+                | Gather
+                | DynamicSlice
+                | DynamicUpdateSlice
+        )
+    }
+
+    /// Reduction ops: category (3). `Reduce` collapses a set of dims.
+    pub fn is_reduce(self) -> bool {
+        matches!(self, Opcode::Reduce | Opcode::ReduceWindow)
+    }
+
+    /// Library calls delimit fusable regions (§3.2: "we do not fuse across
+    /// library calls"). `Dot`/`Convolution` go to cuBLAS/cuDNN in the
+    /// paper; `CustomCall` covers everything else opaque.
+    pub fn is_library_call(self) -> bool {
+        matches!(self, Opcode::Dot | Opcode::Convolution | Opcode::CustomCall)
+    }
+
+    /// Fusable by FusionStitching: one of the paper's four categories.
+    pub fn is_fusable(self) -> bool {
+        self.is_elementwise()
+            || self.is_shape_modulation()
+            || self.is_reduce()
+            || self == Opcode::BatchDot
+    }
+
+    /// Ops that produce no GPU kernel of their own (graph plumbing /
+    /// zero-cost reinterpretation). Used when counting kernels (Fig. 7).
+    pub fn is_free(self) -> bool {
+        use Opcode::*;
+        matches!(
+            self,
+            Parameter | Constant | Tuple | GetTupleElement | Bitcast | While
+        )
+    }
+
+    /// Ops the schedule tuner may bypass when they strictly modulate
+    /// shapes (§4.3, first optimization): computationally trivial,
+    /// inlined via thread composition with negligible loss.
+    pub fn is_trivially_inlinable(self) -> bool {
+        use Opcode::*;
+        matches!(self, Reshape | Bitcast | Broadcast | Copy | Iota)
+    }
+
+    /// Number of operands for fixed-arity ops; `None` for variadic.
+    pub fn arity(self) -> Option<usize> {
+        use Opcode::*;
+        match self {
+            Parameter | Constant | Iota => Some(0),
+            Abs | Negate | Sign | Floor | Ceil | Not | Copy | Exp | Log | Sqrt | Rsqrt | Tanh
+            | Sigmoid | Erf | Reshape | Bitcast | Transpose | Broadcast | Slice | Reduce
+            | ReduceWindow | GetTupleElement | Pad => Some(1),
+            Add | Subtract | Multiply | Maximum | Minimum | Compare | And | Or | Divide
+            | Power | Remainder | BatchDot | Dot | Gather | DynamicSlice => Some(2),
+            Select | Clamp | DynamicUpdateSlice => Some(3),
+            Convolution => Some(2),
+            Tuple | Concatenate | CustomCall | While => None,
+        }
+    }
+}
+
+impl fmt::Display for Opcode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categories_are_disjoint_on_core_ops() {
+        for op in [
+            Opcode::Add,
+            Opcode::Exp,
+            Opcode::Reshape,
+            Opcode::Transpose,
+            Opcode::Reduce,
+            Opcode::BatchDot,
+            Opcode::Dot,
+        ] {
+            let cats = [
+                op.is_elementwise(),
+                op.is_shape_modulation(),
+                op.is_reduce(),
+                op == Opcode::BatchDot,
+                op.is_library_call(),
+            ];
+            assert_eq!(
+                cats.iter().filter(|&&c| c).count(),
+                1,
+                "{op} should be in exactly one category"
+            );
+        }
+    }
+
+    #[test]
+    fn expensive_is_subset_of_elementwise() {
+        for op in [Opcode::Exp, Opcode::Divide, Opcode::Tanh, Opcode::Power] {
+            assert!(op.is_expensive_elementwise());
+            assert!(op.is_elementwise());
+        }
+        assert!(!Opcode::Add.is_expensive_elementwise());
+        assert!(!Opcode::Multiply.is_expensive_elementwise());
+    }
+
+    #[test]
+    fn library_calls_not_fusable() {
+        for op in [Opcode::Dot, Opcode::Convolution, Opcode::CustomCall] {
+            assert!(op.is_library_call());
+            assert!(!op.is_fusable());
+        }
+        assert!(Opcode::BatchDot.is_fusable());
+    }
+
+    #[test]
+    fn free_ops() {
+        assert!(Opcode::Parameter.is_free());
+        assert!(Opcode::Bitcast.is_free());
+        assert!(!Opcode::Reshape.is_free());
+        assert!(!Opcode::Add.is_free());
+    }
+
+    #[test]
+    fn arity() {
+        assert_eq!(Opcode::Add.arity(), Some(2));
+        assert_eq!(Opcode::Exp.arity(), Some(1));
+        assert_eq!(Opcode::Select.arity(), Some(3));
+        assert_eq!(Opcode::Concatenate.arity(), None);
+    }
+}

@@ -1,0 +1,223 @@
+//! Parser for the textual form produced by [`super::printer`].
+//!
+//! Used by the CLI (`fusion-stitching compile <file>`) and round-trip
+//! tests. The grammar is deliberately small; see the printer docs.
+
+use super::computation::{Computation, InstrId};
+use super::instruction::{Attrs, ReduceKind};
+use super::module::Module;
+use super::printer::keyword_opcode;
+use super::shape::{DType, Shape};
+use anyhow::{anyhow, bail, Result};
+
+/// Parse a module from its textual form.
+pub fn parse_module(text: &str) -> Result<Module> {
+    let mut lines = text.lines().map(str::trim).filter(|l| !l.is_empty() && !l.starts_with("//"));
+    let header = lines.next().ok_or_else(|| anyhow!("empty module text"))?;
+    let name = header
+        .strip_prefix("module ")
+        .and_then(|r| r.strip_suffix('{'))
+        .map(str::trim)
+        .ok_or_else(|| anyhow!("bad module header: {header}"))?;
+
+    let mut comp = Computation::new("entry");
+    let mut root: Option<InstrId> = None;
+    for line in lines {
+        if line == "entry {" || line == "}" {
+            continue;
+        }
+        if let Some(r) = line.strip_prefix("root %") {
+            root = Some(InstrId(r.trim().parse()?));
+            continue;
+        }
+        parse_instruction(line, &mut comp)?;
+    }
+    let root = root.ok_or_else(|| anyhow!("module has no root"))?;
+    comp.set_root(root);
+    Ok(Module::new(name, comp))
+}
+
+fn parse_instruction(line: &str, comp: &mut Computation) -> Result<()> {
+    // %<id> = <shape> <opcode>(<operands>) {<attrs>}
+    let (lhs, rhs) = line.split_once('=').ok_or_else(|| anyhow!("no '=' in: {line}"))?;
+    let id: usize = lhs.trim().strip_prefix('%').ok_or_else(|| anyhow!("bad lhs: {lhs}"))?.parse()?;
+    if id != comp.len() {
+        bail!("instruction ids must be dense and in order (got %{id}, expected %{})", comp.len());
+    }
+    let rhs = rhs.trim();
+    let (shape_str, rest) = rhs.split_once(' ').ok_or_else(|| anyhow!("bad rhs: {rhs}"))?;
+    let shape = parse_shape(shape_str)?;
+
+    let open = rest.find('(').ok_or_else(|| anyhow!("no operand list in: {rest}"))?;
+    let close = rest.find(')').ok_or_else(|| anyhow!("unclosed operand list in: {rest}"))?;
+    let opcode = keyword_opcode(rest[..open].trim())
+        .ok_or_else(|| anyhow!("unknown opcode: {}", &rest[..open]))?;
+    let operands: Vec<InstrId> = rest[open + 1..close]
+        .split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(|s| -> Result<InstrId> {
+            Ok(InstrId(s.strip_prefix('%').ok_or_else(|| anyhow!("bad operand {s}"))?.parse()?))
+        })
+        .collect::<Result<_>>()?;
+
+    let mut attrs = Attrs::default();
+    let mut frame = 0;
+    let mut name = format!("i{id}");
+    if let Some(abrace) = rest[close..].find('{') {
+        let astr = &rest[close + abrace + 1..rest.rfind('}').unwrap_or(rest.len())];
+        for kv in split_attrs(astr) {
+            let (k, v) = kv.split_once('=').ok_or_else(|| anyhow!("bad attr: {kv}"))?;
+            let (k, v) = (k.trim(), v.trim());
+            match k {
+                "num" => attrs.parameter_number = Some(v.parse()?),
+                "perm" => attrs.transpose_perm = Some(parse_usize_list(v)?),
+                "dims" => attrs.reduce_dims = Some(parse_usize_list(v)?),
+                "kind" => attrs.reduce_kind = Some(parse_reduce_kind(v)?),
+                "bdims" => attrs.broadcast_dims = Some(parse_usize_list(v)?),
+                "cdim" => attrs.concat_dim = Some(v.parse()?),
+                "starts" => attrs.slice_starts = Some(parse_i64_list(v)?),
+                "limits" => attrs.slice_limits = Some(parse_i64_list(v)?),
+                "target" => attrs.custom_call_target = Some(v.trim_matches('"').to_string()),
+                "frame" => frame = v.parse()?,
+                "name" => name = v.to_string(),
+                "idx" => attrs.tuple_index = Some(v.parse()?),
+                other => bail!("unknown attr key: {other}"),
+            }
+        }
+    }
+    comp.add(name, opcode, shape, operands, attrs, frame);
+    Ok(())
+}
+
+fn split_attrs(s: &str) -> Vec<&str> {
+    // split on commas that are not inside [...] brackets
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(s[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let last = s[start..].trim();
+    if !last.is_empty() {
+        out.push(last);
+    }
+    out
+}
+
+pub fn parse_shape(s: &str) -> Result<Shape> {
+    let open = s.find('[').ok_or_else(|| anyhow!("bad shape: {s}"))?;
+    let close = s.find(']').ok_or_else(|| anyhow!("bad shape: {s}"))?;
+    let dtype = match &s[..open] {
+        "pred" => DType::Pred,
+        "s32" => DType::S32,
+        "s64" => DType::S64,
+        "f16" => DType::F16,
+        "bf16" => DType::BF16,
+        "f32" => DType::F32,
+        "f64" => DType::F64,
+        other => bail!("unknown dtype: {other}"),
+    };
+    let dims: Vec<i64> = s[open + 1..close]
+        .split(',')
+        .map(str::trim)
+        .filter(|d| !d.is_empty())
+        .map(|d| d.parse::<i64>().map_err(Into::into))
+        .collect::<Result<_>>()?;
+    Ok(Shape::new(dtype, dims))
+}
+
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    s.trim_matches(['[', ']'])
+        .split(',')
+        .map(str::trim)
+        .filter(|x| !x.is_empty())
+        .map(|x| x.parse::<usize>().map_err(Into::into))
+        .collect()
+}
+
+fn parse_i64_list(s: &str) -> Result<Vec<i64>> {
+    s.trim_matches(['[', ']'])
+        .split(',')
+        .map(str::trim)
+        .filter(|x| !x.is_empty())
+        .map(|x| x.parse::<i64>().map_err(Into::into))
+        .collect()
+}
+
+fn parse_reduce_kind(s: &str) -> Result<ReduceKind> {
+    Ok(match s {
+        "Sum" => ReduceKind::Sum,
+        "Max" => ReduceKind::Max,
+        "Min" => ReduceKind::Min,
+        "Mean" => ReduceKind::Mean,
+        "Prod" => ReduceKind::Prod,
+        other => bail!("unknown reduce kind: {other}"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::builder::GraphBuilder;
+    use crate::hlo::printer::print_module;
+
+    #[test]
+    fn shape_parse() {
+        assert_eq!(parse_shape("f32[2,3]").unwrap(), Shape::f32(&[2, 3]));
+        assert_eq!(parse_shape("pred[]").unwrap(), Shape::scalar(DType::Pred));
+        assert!(parse_shape("zzz[2]").is_err());
+    }
+
+    #[test]
+    fn roundtrip_softmax_pattern() {
+        let mut b = GraphBuilder::new("rt");
+        let scores = b.param("scores", Shape::f32(&[8, 64, 64]));
+        let v = b.param("v", Shape::f32(&[8, 64, 32]));
+        let m = b.reduce(scores, &[2], ReduceKind::Max);
+        let mb = b.broadcast(m, &[8, 64, 64], &[0, 1]);
+        let sh = b.sub(scores, mb);
+        let e = b.exp(sh);
+        let s = b.reduce(e, &[2], ReduceKind::Sum);
+        let sb = b.broadcast(s, &[8, 64, 64], &[0, 1]);
+        let p = b.div(e, sb);
+        let t = b.transpose(p, &[0, 2, 1]);
+        let sl = b.slice(t, &[0, 0, 0], &[8, 32, 64]);
+        let cc = b.concat(&[sl, sl], 1);
+        let out = b.batch_dot(p, v);
+        let _ = (cc, out);
+        let module = Module::new("rt", b.finish(out));
+        let text = print_module(&module);
+        let parsed = parse_module(&text).unwrap();
+        assert_eq!(parsed.entry.len(), module.entry.len());
+        for id in module.entry.ids() {
+            let a = module.entry.get(id);
+            let b2 = parsed.entry.get(id);
+            assert_eq!(a.opcode, b2.opcode, "opcode mismatch at {id}");
+            assert_eq!(a.shape, b2.shape, "shape mismatch at {id}");
+            assert_eq!(a.operands, b2.operands, "operands mismatch at {id}");
+            assert_eq!(a.attrs, b2.attrs, "attrs mismatch at {id}");
+        }
+        assert_eq!(parsed.entry.root(), module.entry.root());
+    }
+
+    #[test]
+    fn rejects_out_of_order_ids() {
+        let text = "module m {\nentry {\n%1 = f32[2] parameter(0) {num=0}\nroot %1\n}\n}";
+        assert!(parse_module(text).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_root() {
+        let text = "module m {\nentry {\n%0 = f32[2] parameter() {num=0}\n}\n}";
+        assert!(parse_module(text).is_err());
+    }
+}

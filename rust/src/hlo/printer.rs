@@ -1,0 +1,230 @@
+//! Textual form of modules/computations, loosely modelled on XLA's HLO
+//! text syntax. Round-trips with [`super::parser`].
+//!
+//! Example:
+//! ```text
+//! module softmax {
+//!   entry {
+//!     %0 = f32[8,64,64] parameter(0) {name=scores}
+//!     %1 = f32[8,64] reduce(%0) {dims=[2], kind=Max}
+//!     ...
+//!     root %7
+//!   }
+//! }
+//! ```
+
+use super::computation::Computation;
+use super::instruction::Instruction;
+use super::module::Module;
+use super::opcode::Opcode;
+use std::fmt::Write;
+
+pub fn print_module(m: &Module) -> String {
+    let mut out = String::new();
+    writeln!(out, "module {} {{", m.name).unwrap();
+    out.push_str(&print_computation(&m.entry, 1));
+    out.push_str("}\n");
+    out
+}
+
+pub fn print_computation(c: &Computation, indent: usize) -> String {
+    let pad = "  ".repeat(indent);
+    let mut out = String::new();
+    writeln!(out, "{pad}entry {{").unwrap();
+    for instr in c.instructions() {
+        writeln!(out, "{pad}  {}", print_instruction(instr)).unwrap();
+    }
+    if c.has_root() {
+        writeln!(out, "{pad}  root %{}", c.root().0).unwrap();
+    }
+    writeln!(out, "{pad}}}").unwrap();
+    out
+}
+
+pub fn print_instruction(i: &Instruction) -> String {
+    let mut s = format!("%{} = {} {}", i.id.0, i.shape, opcode_keyword(i.opcode));
+    let ops: Vec<String> = i.operands.iter().map(|o| format!("%{}", o.0)).collect();
+    s.push_str(&format!("({})", ops.join(", ")));
+    let mut attrs: Vec<String> = Vec::new();
+    if let Some(n) = i.attrs.parameter_number {
+        attrs.push(format!("num={n}"));
+    }
+    if let Some(p) = &i.attrs.transpose_perm {
+        attrs.push(format!("perm={p:?}"));
+    }
+    if let Some(d) = &i.attrs.reduce_dims {
+        attrs.push(format!("dims={d:?}"));
+    }
+    if let Some(k) = &i.attrs.reduce_kind {
+        attrs.push(format!("kind={k}"));
+    }
+    if let Some(d) = &i.attrs.broadcast_dims {
+        attrs.push(format!("bdims={d:?}"));
+    }
+    if let Some(d) = i.attrs.concat_dim {
+        attrs.push(format!("cdim={d}"));
+    }
+    if let Some(st) = &i.attrs.slice_starts {
+        attrs.push(format!("starts={st:?}"));
+    }
+    if let Some(li) = &i.attrs.slice_limits {
+        attrs.push(format!("limits={li:?}"));
+    }
+    if let Some(t) = &i.attrs.custom_call_target {
+        attrs.push(format!("target=\"{t}\""));
+    }
+    if i.frame != 0 {
+        attrs.push(format!("frame={}", i.frame));
+    }
+    attrs.push(format!("name={}", i.name));
+    if !attrs.is_empty() {
+        s.push_str(&format!(" {{{}}}", attrs.join(", ")));
+    }
+    s
+}
+
+pub(crate) fn opcode_keyword(op: Opcode) -> &'static str {
+    use Opcode::*;
+    match op {
+        Parameter => "parameter",
+        Constant => "constant",
+        Iota => "iota",
+        Tuple => "tuple",
+        GetTupleElement => "get-tuple-element",
+        Abs => "abs",
+        Negate => "negate",
+        Sign => "sign",
+        Floor => "floor",
+        Ceil => "ceil",
+        Not => "not",
+        Copy => "copy",
+        Exp => "exponential",
+        Log => "log",
+        Sqrt => "sqrt",
+        Rsqrt => "rsqrt",
+        Tanh => "tanh",
+        Sigmoid => "sigmoid",
+        Erf => "erf",
+        Add => "add",
+        Subtract => "subtract",
+        Multiply => "multiply",
+        Maximum => "maximum",
+        Minimum => "minimum",
+        Compare => "compare",
+        And => "and",
+        Or => "or",
+        Divide => "divide",
+        Power => "power",
+        Remainder => "remainder",
+        Select => "select",
+        Clamp => "clamp",
+        Reshape => "reshape",
+        Bitcast => "bitcast",
+        Transpose => "transpose",
+        Broadcast => "broadcast",
+        Slice => "slice",
+        Concatenate => "concatenate",
+        Pad => "pad",
+        Gather => "gather",
+        DynamicSlice => "dynamic-slice",
+        DynamicUpdateSlice => "dynamic-update-slice",
+        Reduce => "reduce",
+        ReduceWindow => "reduce-window",
+        BatchDot => "batch-dot",
+        Dot => "dot",
+        Convolution => "convolution",
+        CustomCall => "custom-call",
+        While => "while",
+    }
+}
+
+pub(crate) fn keyword_opcode(kw: &str) -> Option<Opcode> {
+    use Opcode::*;
+    Some(match kw {
+        "parameter" => Parameter,
+        "constant" => Constant,
+        "iota" => Iota,
+        "tuple" => Tuple,
+        "get-tuple-element" => GetTupleElement,
+        "abs" => Abs,
+        "negate" => Negate,
+        "sign" => Sign,
+        "floor" => Floor,
+        "ceil" => Ceil,
+        "not" => Not,
+        "copy" => Copy,
+        "exponential" => Exp,
+        "log" => Log,
+        "sqrt" => Sqrt,
+        "rsqrt" => Rsqrt,
+        "tanh" => Tanh,
+        "sigmoid" => Sigmoid,
+        "erf" => Erf,
+        "add" => Add,
+        "subtract" => Subtract,
+        "multiply" => Multiply,
+        "maximum" => Maximum,
+        "minimum" => Minimum,
+        "compare" => Compare,
+        "and" => And,
+        "or" => Or,
+        "divide" => Divide,
+        "power" => Power,
+        "remainder" => Remainder,
+        "select" => Select,
+        "clamp" => Clamp,
+        "reshape" => Reshape,
+        "bitcast" => Bitcast,
+        "transpose" => Transpose,
+        "broadcast" => Broadcast,
+        "slice" => Slice,
+        "concatenate" => Concatenate,
+        "pad" => Pad,
+        "gather" => Gather,
+        "dynamic-slice" => DynamicSlice,
+        "dynamic-update-slice" => DynamicUpdateSlice,
+        "reduce" => Reduce,
+        "reduce-window" => ReduceWindow,
+        "batch-dot" => BatchDot,
+        "dot" => Dot,
+        "convolution" => Convolution,
+        "custom-call" => CustomCall,
+        "while" => While,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::builder::GraphBuilder;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::shape::Shape;
+
+    #[test]
+    fn print_contains_all_instructions() {
+        let mut b = GraphBuilder::new("p");
+        let x = b.param("x", Shape::f32(&[4, 4]));
+        let r = b.reduce(x, &[1], ReduceKind::Sum);
+        let m = Module::new("m", b.finish(r));
+        let text = print_module(&m);
+        assert!(text.contains("parameter"));
+        assert!(text.contains("reduce"));
+        assert!(text.contains("dims=[1]"));
+        assert!(text.contains("root %1"));
+    }
+
+    #[test]
+    fn opcode_keyword_roundtrip() {
+        for op in [
+            Opcode::Exp,
+            Opcode::Reduce,
+            Opcode::BatchDot,
+            Opcode::GetTupleElement,
+            Opcode::DynamicUpdateSlice,
+        ] {
+            assert_eq!(keyword_opcode(opcode_keyword(op)), Some(op));
+        }
+        assert_eq!(keyword_opcode("bogus"), None);
+    }
+}

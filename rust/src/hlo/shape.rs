@@ -1,0 +1,178 @@
+//! Tensor shapes and element types.
+
+use std::fmt;
+
+/// Element type of a tensor. Covers the dtypes that occur in the paper's
+/// workloads (training + inference graphs on GPUs circa TF 1.7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    Pred,
+    S32,
+    S64,
+    F16,
+    BF16,
+    F32,
+    F64,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn byte_size(self) -> usize {
+        match self {
+            DType::Pred => 1,
+            DType::F16 | DType::BF16 => 2,
+            DType::S32 | DType::F32 => 4,
+            DType::S64 | DType::F64 => 8,
+        }
+    }
+
+    /// Whether this is a floating point type.
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F16 | DType::BF16 | DType::F32 | DType::F64)
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::Pred => "pred",
+            DType::S32 => "s32",
+            DType::S64 => "s64",
+            DType::F16 => "f16",
+            DType::BF16 => "bf16",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// A dense array shape: element type plus dimensions, row-major
+/// (most-significant dimension first), matching XLA's default layout.
+///
+/// Rank-0 (scalar) shapes have empty `dims`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub dtype: DType,
+    pub dims: Vec<i64>,
+}
+
+impl Shape {
+    pub fn new(dtype: DType, dims: Vec<i64>) -> Self {
+        debug_assert!(dims.iter().all(|&d| d >= 0), "negative dim in {dims:?}");
+        Shape { dtype, dims }
+    }
+
+    /// Shorthand for an f32 shape — the dominant dtype in the paper's
+    /// workloads and in our benchmark graphs.
+    pub fn f32(dims: &[i64]) -> Self {
+        Shape::new(DType::F32, dims.to_vec())
+    }
+
+    pub fn scalar(dtype: DType) -> Self {
+        Shape::new(dtype, vec![])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total number of elements (1 for scalars).
+    pub fn num_elements(&self) -> i64 {
+        self.dims.iter().product()
+    }
+
+    /// Total byte size of the dense array.
+    pub fn byte_size(&self) -> usize {
+        self.num_elements() as usize * self.dtype.byte_size()
+    }
+
+    /// True if this shape has the same element count as `other` (the
+    /// reshape/bitcast legality condition).
+    pub fn same_elements(&self, other: &Shape) -> bool {
+        self.num_elements() == other.num_elements()
+    }
+
+    /// Row-major strides, in elements.
+    pub fn strides(&self) -> Vec<i64> {
+        let mut strides = vec![1i64; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.dims[i + 1];
+        }
+        strides
+    }
+
+    /// Row-major linear index decomposition: which multi-index does flat
+    /// index `linear` correspond to. Used by schedule propagation through
+    /// `Reshape` (§4.2) and by tests.
+    pub fn delinearize(&self, mut linear: i64) -> Vec<i64> {
+        let mut idx = vec![0i64; self.rank()];
+        for (i, s) in self.strides().iter().enumerate() {
+            idx[i] = linear / s;
+            linear %= s;
+        }
+        idx
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let dims: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "{}[{}]", self.dtype, dims.join(","))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.byte_size(), 4);
+        assert_eq!(DType::F16.byte_size(), 2);
+        assert_eq!(DType::BF16.byte_size(), 2);
+        assert_eq!(DType::Pred.byte_size(), 1);
+        assert_eq!(DType::S64.byte_size(), 8);
+        assert!(DType::BF16.is_float());
+        assert!(!DType::S32.is_float());
+    }
+
+    #[test]
+    fn shape_basics() {
+        let s = Shape::f32(&[2, 3, 4]);
+        assert_eq!(s.rank(), 3);
+        assert_eq!(s.num_elements(), 24);
+        assert_eq!(s.byte_size(), 96);
+        assert_eq!(s.to_string(), "f32[2,3,4]");
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Shape::scalar(DType::F32);
+        assert_eq!(s.rank(), 0);
+        assert_eq!(s.num_elements(), 1);
+        assert_eq!(s.byte_size(), 4);
+    }
+
+    #[test]
+    fn strides_row_major() {
+        let s = Shape::f32(&[2, 3, 4]);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn delinearize_roundtrip() {
+        let s = Shape::f32(&[2, 3, 4]);
+        let idx = s.delinearize(17);
+        assert_eq!(idx, vec![1, 1, 1]);
+        // linearize back
+        let lin: i64 = idx.iter().zip(s.strides()).map(|(i, st)| i * st).sum();
+        assert_eq!(lin, 17);
+    }
+
+    #[test]
+    fn same_elements() {
+        assert!(Shape::f32(&[6, 4]).same_elements(&Shape::f32(&[2, 12])));
+        assert!(!Shape::f32(&[6, 4]).same_elements(&Shape::f32(&[5, 5])));
+    }
+}

@@ -1,0 +1,217 @@
+//! Structural verifier for computations.
+//!
+//! Run after parsing and after every pass in debug builds; catches the
+//! invariants the rest of the pipeline assumes (arity, attrs matching
+//! opcodes, shape consistency for the ops with inferable shapes).
+
+use super::computation::Computation;
+use super::module::Module;
+use super::opcode::Opcode;
+use super::shape::Shape;
+use anyhow::{bail, Result};
+
+/// Verify a whole module.
+pub fn verify_module(m: &Module) -> Result<()> {
+    verify_computation(&m.entry)
+}
+
+/// Verify one computation.
+pub fn verify_computation(c: &Computation) -> Result<()> {
+    if !c.has_root() {
+        bail!("computation {} has no root", c.name);
+    }
+    for instr in c.instructions() {
+        let id = instr.id;
+        // arity
+        if let Some(arity) = instr.opcode.arity() {
+            if instr.operands.len() != arity {
+                bail!("{id}: {} expects {arity} operands, got {}", instr.opcode, instr.operands.len());
+            }
+        }
+        // operand existence + ordering
+        for &op in &instr.operands {
+            if op.0 >= id.0 {
+                bail!("{id}: operand {op} does not precede it");
+            }
+        }
+        let operand_shapes: Vec<&Shape> = c.operand_shapes(id);
+        match instr.opcode {
+            Opcode::Parameter => {
+                if instr.attrs.parameter_number.is_none() {
+                    bail!("{id}: parameter without parameter_number");
+                }
+            }
+            op if op.is_elementwise() => {
+                // all operand dims must equal output dims (explicit
+                // broadcast discipline)
+                for s in &operand_shapes {
+                    if s.dims != instr.shape.dims {
+                        bail!(
+                            "{id}: elementwise {op} operand shape {s} != output {}",
+                            instr.shape
+                        );
+                    }
+                }
+            }
+            Opcode::Reshape | Opcode::Bitcast => {
+                if !operand_shapes[0].same_elements(&instr.shape) {
+                    bail!("{id}: reshape/bitcast element count mismatch");
+                }
+            }
+            Opcode::Transpose => {
+                let perm = instr
+                    .attrs
+                    .transpose_perm
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("{id}: transpose without perm"))?;
+                if perm.len() != operand_shapes[0].rank() {
+                    bail!("{id}: transpose perm rank mismatch");
+                }
+                let expect: Vec<i64> = perm.iter().map(|&p| operand_shapes[0].dims[p]).collect();
+                if expect != instr.shape.dims {
+                    bail!("{id}: transpose output shape mismatch");
+                }
+            }
+            Opcode::Broadcast => {
+                let bd = instr
+                    .attrs
+                    .broadcast_dims
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("{id}: broadcast without bdims"))?;
+                if bd.len() != operand_shapes[0].rank() {
+                    bail!("{id}: broadcast dims rank mismatch");
+                }
+                for (i, &d) in bd.iter().enumerate() {
+                    if d >= instr.shape.rank() || operand_shapes[0].dims[i] != instr.shape.dims[d] {
+                        bail!("{id}: broadcast dim mapping invalid");
+                    }
+                }
+            }
+            Opcode::Reduce => {
+                let dims = instr
+                    .attrs
+                    .reduce_dims
+                    .as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("{id}: reduce without dims"))?;
+                if instr.attrs.reduce_kind.is_none() {
+                    bail!("{id}: reduce without kind");
+                }
+                let in_rank = operand_shapes[0].rank();
+                if dims.iter().any(|&d| d >= in_rank) {
+                    bail!("{id}: reduce dim out of range");
+                }
+                if instr.shape.rank() != in_rank - dims.len() {
+                    bail!("{id}: reduce output rank mismatch");
+                }
+            }
+            Opcode::Concatenate => {
+                if instr.attrs.concat_dim.is_none() {
+                    bail!("{id}: concat without cdim");
+                }
+                if instr.operands.is_empty() {
+                    bail!("{id}: concat with no operands");
+                }
+            }
+            Opcode::Slice => {
+                if instr.attrs.slice_starts.is_none() || instr.attrs.slice_limits.is_none() {
+                    bail!("{id}: slice without bounds");
+                }
+            }
+            Opcode::BatchDot | Opcode::Dot => {
+                let (a, b) = (&operand_shapes[0], &operand_shapes[1]);
+                let r = a.rank();
+                if r < 2 || b.rank() != r || a.dims[r - 1] != b.dims[r - 2] {
+                    bail!("{id}: dot shape mismatch {a} x {b}");
+                }
+            }
+            Opcode::CustomCall => {
+                if instr.attrs.custom_call_target.is_none() {
+                    bail!("{id}: custom-call without target");
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::builder::GraphBuilder;
+    use crate::hlo::computation::InstrId;
+    use crate::hlo::instruction::{Attrs, ReduceKind};
+    use crate::hlo::shape::DType;
+
+    #[test]
+    fn builder_output_verifies() {
+        let mut b = GraphBuilder::new("ok");
+        let x = b.param("x", Shape::f32(&[4, 8]));
+        let t = b.transpose(x, &[1, 0]);
+        let r = b.reduce(t, &[0], ReduceKind::Sum);
+        let c = b.finish(r);
+        verify_computation(&c).unwrap();
+    }
+
+    #[test]
+    fn catches_bad_transpose_shape() {
+        let mut c = Computation::new("bad");
+        let p = c.add(
+            "p",
+            Opcode::Parameter,
+            Shape::f32(&[2, 3]),
+            vec![],
+            Attrs { parameter_number: Some(0), ..Default::default() },
+            0,
+        );
+        let t = c.add(
+            "t",
+            Opcode::Transpose,
+            Shape::f32(&[2, 3]), // wrong: should be [3,2]
+            vec![p],
+            Attrs { transpose_perm: Some(vec![1, 0]), ..Default::default() },
+            0,
+        );
+        c.set_root(t);
+        assert!(verify_computation(&c).is_err());
+    }
+
+    #[test]
+    fn catches_missing_param_number() {
+        let mut c = Computation::new("bad");
+        let p = c.add("p", Opcode::Parameter, Shape::scalar(DType::F32), vec![], Attrs::default(), 0);
+        c.set_root(p);
+        assert!(verify_computation(&c).is_err());
+    }
+
+    #[test]
+    fn catches_elementwise_mismatch() {
+        let mut c = Computation::new("bad");
+        let p0 = c.add(
+            "p0",
+            Opcode::Parameter,
+            Shape::f32(&[2]),
+            vec![],
+            Attrs { parameter_number: Some(0), ..Default::default() },
+            0,
+        );
+        let p1 = c.add(
+            "p1",
+            Opcode::Parameter,
+            Shape::f32(&[3]),
+            vec![],
+            Attrs { parameter_number: Some(1), ..Default::default() },
+            0,
+        );
+        let a = c.add("a", Opcode::Add, Shape::f32(&[2]), vec![p0, p1], Attrs::default(), 0);
+        c.set_root(a);
+        assert!(verify_computation(&c).is_err());
+    }
+
+    #[test]
+    fn catches_missing_root() {
+        let c = Computation::new("noroot");
+        assert!(verify_computation(&c).is_err());
+        let _ = InstrId(0);
+    }
+}

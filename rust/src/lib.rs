@@ -1,0 +1,48 @@
+//! # FusionStitching
+//!
+//! A reproduction of *"FusionStitching: Deep Fusion and Code Generation for
+//! Tensorflow Computations on GPUs"* (Long, Yang, Zhu, Lin — Alibaba, 2018)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organised around the paper's pipeline
+//! (`HloModule` → op fusion → schedule planning → code generation):
+//!
+//! - [`hlo`] — the HLO-like intermediate representation every pass
+//!   operates on (substrate; mirrors the XLA `HloModule` subset the paper
+//!   needs: elementwise, shape-modulation, reduce, batch-dot, library
+//!   calls, while-frames).
+//! - [`analysis`] — Work/Span (critical path) analysis, while-loop frame
+//!   contexts, dominance trees and memory-footprint accounting (§3.1,
+//!   §5.1.3 of the paper).
+//! - [`fusion`] — the XLA-like baseline fusion pass and the paper's deep
+//!   fusion: intra-layer `ElementwiseFusion` plus layered subgraph fusion
+//!   (Algorithm 1) gated by `SchdConsistent` (§3.2).
+//! - [`schedule`] — schedule specification (`split_dim`, `sword`,
+//!   `sched_type`), Table 1 constraint propagation, tuning and the
+//!   persistent performance library (§4).
+//! - [`codegen`] — shared-memory planning (size analysis, shrinking,
+//!   dominance-based space sharing) and the stitched emitter producing
+//!   kernel plans (Algorithm 2, §5).
+//! - [`gpusim`] — an analytical Pascal-class GPU cost model standing in
+//!   for the paper's physical GPU + nvprof (see DESIGN.md substitutions).
+//! - [`models`] — the six benchmark graphs of Table 2.
+//! - [`corpus`] — synthetic model corpus regenerating Figure 1.
+//! - [`runtime`] — PJRT CPU client wrapper executing AOT-lowered JAX/Pallas
+//!   artifacts from Rust (the numeric hot path).
+//! - [`coordinator`] — the end-to-end pipeline driver and the NMT online
+//!   serving loop (dynamic batching over the runtime).
+
+pub mod analysis;
+pub mod codegen;
+pub mod coordinator;
+pub mod corpus;
+pub mod fusion;
+pub mod gpusim;
+pub mod hlo;
+pub mod models;
+pub mod runtime;
+pub mod schedule;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,288 @@
+//! FusionStitching CLI — the leader entrypoint.
+//!
+//! ```text
+//! fusion-stitching report [--perf-lib <path>]        # Figs 6/7/8 + Table 3 over Table 2
+//! fusion-stitching compile <model|file.hlo> [--mode baseline|stitching] [--ir]
+//! fusion-stitching corpus [--models N]               # Fig. 1 percentile table
+//! fusion-stitching serve [--requests N]              # NMT online serving demo
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline image carries no clap.)
+
+use fusion_stitching::coordinator::pipeline::{
+    compile_module, evaluate, geomean, FusionMode, PipelineConfig,
+};
+use fusion_stitching::coordinator::{ServerConfig, ServingCoordinator};
+use fusion_stitching::corpus::generator::{self, CorpusConfig};
+use fusion_stitching::corpus::{percentiles, OpClass};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::parser::parse_module;
+use fusion_stitching::models;
+use fusion_stitching::schedule::PerfLibrary;
+use std::path::PathBuf;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("report") => cmd_report(&args[1..]),
+        Some("compile") => cmd_compile(&args[1..]),
+        Some("corpus") => cmd_corpus(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        _ => {
+            eprintln!(
+                "usage: fusion-stitching <report|compile|corpus|serve> [options]\n\
+                 \x20 report   — reproduce Figs 6/7/8 + Table 3 over the Table 2 benchmarks\n\
+                 \x20 compile  — run one model/file through the pipeline\n\
+                 \x20 corpus   — regenerate Fig. 1's footprint distribution\n\
+                 \x20 serve    — NMT online-serving demo over the PJRT runtime"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(String::as_str)
+}
+
+fn perf_library(args: &[String]) -> PerfLibrary {
+    match flag_value(args, "--perf-lib") {
+        Some(p) => PerfLibrary::load(std::path::Path::new(p), DeviceConfig::pascal()),
+        None => PerfLibrary::new(DeviceConfig::pascal()),
+    }
+}
+
+fn cmd_report(args: &[String]) -> i32 {
+    let mut lib = perf_library(args);
+    let cfg = PipelineConfig::default();
+    let mut reports = Vec::new();
+    for (meta, module) in models::all_benchmarks() {
+        match evaluate(&meta, &module, &mut lib, &cfg) {
+            Ok(r) => reports.push(r),
+            Err(e) => {
+                eprintln!("{}: {e:#}", meta.name);
+                return 1;
+            }
+        }
+    }
+
+    println!("== Fig. 7: fusion ratio (#kernels FS / #kernels XLA, library calls excluded) ==");
+    println!("{:<8} {:>10} {:>10} {:>8}", "model", "XLA", "FS", "ratio");
+    for r in &reports {
+        println!(
+            "{:<8} {:>10} {:>10} {:>8.2}",
+            r.name, r.baseline_kernels, r.fs_kernels, r.fusion_ratio
+        );
+    }
+    println!(
+        "geomean fusion ratio: {:.2} (paper: ~0.45 — 55% reduction)\n",
+        geomean(reports.iter().map(|r| r.fusion_ratio))
+    );
+
+    println!("== Fig. 6: execution breakdown (simulated) ==");
+    println!("{:<8} {:>12} {:>12} {:>10}", "model", "library_us", "fusable_us", "fusable%");
+    for r in &reports {
+        println!(
+            "{:<8} {:>12.1} {:>12.1} {:>9.1}%",
+            r.name,
+            r.library_us,
+            r.baseline_fusable_us,
+            100.0 * r.fusable_ratio
+        );
+    }
+    println!();
+
+    println!("== Fig. 8: speedups ==");
+    println!(
+        "{:<8} {:>13} {:>13} {:>13}",
+        "model", "FusionSpeedup", "predictedE2E", "measuredE2E"
+    );
+    for r in &reports {
+        println!(
+            "{:<8} {:>13.2} {:>13.2} {:>13.2}",
+            r.name, r.fusion_speedup, r.predicted_e2e, r.measured_e2e
+        );
+    }
+    println!(
+        "geomean FusionSpeedup: {:.2} (paper: 1.74), geomean E2E: {:.2} (paper: 1.13)\n",
+        geomean(reports.iter().map(|r| r.fusion_speedup)),
+        geomean(reports.iter().map(|r| r.measured_e2e))
+    );
+
+    println!("== Table 3: shared memory statistics ==");
+    println!(
+        "{:<8} {:>10} {:>10} {:>8} {:>12}",
+        "model", "avg_B", "max_B", "#shrink", "shared_ratio"
+    );
+    for r in &reports {
+        println!(
+            "{:<8} {:>10.0} {:>10} {:>8} {:>12.2}",
+            r.name, r.shm_avg_bytes, r.shm_max_bytes, r.shm_shrinks, r.shm_shared_ratio
+        );
+    }
+
+    if let Some(p) = flag_value(args, "--perf-lib") {
+        if let Err(e) = lib.save(std::path::Path::new(p)) {
+            eprintln!("saving perf library: {e:#}");
+        }
+    }
+    0
+}
+
+fn cmd_compile(args: &[String]) -> i32 {
+    let Some(target) = args.first() else {
+        eprintln!("compile: need a model name (LR/W2V/RNN/BiRNN/Speech/NMT) or .hlo file");
+        return 2;
+    };
+    let mode = match flag_value(args, "--mode") {
+        Some("baseline") => FusionMode::XlaBaseline,
+        _ => FusionMode::FusionStitching,
+    };
+    let module = if target.ends_with(".hlo") || target.ends_with(".txt") {
+        match std::fs::read_to_string(target)
+            .map_err(anyhow::Error::from)
+            .and_then(|t| parse_module(&t))
+        {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("parsing {target}: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        match models::by_name(target) {
+            Some((_, m)) => m,
+            None => {
+                eprintln!("unknown model {target}");
+                return 2;
+            }
+        }
+    };
+    let mut lib = perf_library(args);
+    match compile_module(&module, mode, &mut lib, &PipelineConfig::default()) {
+        Ok(compiled) => {
+            println!(
+                "{}: {:?} → {} generated kernels, {} library calls, simulated {:.1} us",
+                compiled.name,
+                mode,
+                compiled.plan.generated_kernel_count(&module.entry),
+                compiled.plan.library_call_count(),
+                compiled.timing.total_us()
+            );
+            let (avg, max, shrinks, shared) = compiled.shm_stats();
+            println!(
+                "shm: avg {avg:.0} B, max {max} B, #shrink {shrinks}, shared ratio {shared:.2}"
+            );
+            if args.iter().any(|a| a == "--ir") {
+                for k in &compiled.kernels {
+                    println!("\n{}", k.ir_text());
+                }
+            }
+            if args.iter().any(|a| a == "--groups") {
+                for (g, k) in compiled.generated_group_ids.iter().zip(&compiled.kernels) {
+                    let grp = &compiled.plan.groups[*g];
+                    let names: Vec<String> = {
+                        let mut m: Vec<_> = grp.members.iter().copied().collect();
+                        m.sort();
+                        m.iter()
+                            .map(|&i| format!("{}:{}", i.0, module.entry.get(i).opcode))
+                            .collect()
+                    };
+                    println!(
+                        "group {g}: kind={:?} blocks={} threads={} est={:.2}us smem={}B members=[{}]",
+                        grp.kind, k.blocks, k.threads, k.est_exec_us, k.shm.total_bytes,
+                        names.join(", ")
+                    );
+                }
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("compile failed: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_corpus(args: &[String]) -> i32 {
+    let models_n = flag_value(args, "--models").and_then(|v| v.parse().ok()).unwrap_or(800);
+    let stats = generator::generate(&CorpusConfig { models: models_n, ..Default::default() });
+    println!(
+        "== Fig. 1: accumulated percentile of op memory footprints ({} instances over {} models) ==",
+        stats.total_instances(),
+        models_n
+    );
+    let cuts: Vec<u32> = (4..=26).step_by(2).collect();
+    print!("{:<8}", "log2(N)");
+    for c in &cuts {
+        print!("{c:>7}");
+    }
+    println!();
+    for class in OpClass::ALL {
+        let series = &stats.samples[&class];
+        let p = percentiles(series, &cuts);
+        print!("{:<8}", class.label());
+        for v in p {
+            print!("{:>6.1}%", 100.0 * v);
+        }
+        println!();
+    }
+    0
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    use fusion_stitching::coordinator::batcher::BatchPolicy;
+    use fusion_stitching::coordinator::metrics::LatencyRecorder;
+
+    let requests: usize =
+        flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let artifact = flag_value(args, "--artifact").unwrap_or("attention_fused").to_string();
+    let dir = PathBuf::from(flag_value(args, "--artifacts-dir").unwrap_or("artifacts"));
+
+    // Shapes baked by python/compile/aot.py for the NMT attention block.
+    let (batch, seq, model_d, out_d) = (8usize, 64usize, 512usize, 64usize);
+    let cfg = ServerConfig {
+        artifact,
+        batch,
+        in_elems_per_request: seq * model_d,
+        out_elems_per_request: seq * out_d,
+        input_dims: vec![(batch * seq) as i64, model_d as i64],
+        policy: BatchPolicy::default(),
+    };
+    let srv = match ServingCoordinator::start(&dir, cfg.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("starting server (run `make artifacts` first?): {e:#}");
+            return 1;
+        }
+    };
+    let mut lat = LatencyRecorder::default();
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let input = vec![0.01 * (i % 7) as f32; cfg.in_elems_per_request];
+        pending.push((std::time::Instant::now(), srv.infer_async(input).unwrap()));
+        if pending.len() >= cfg.batch {
+            for (t, rx) in pending.drain(..) {
+                rx.recv().unwrap().unwrap();
+                lat.record(t.elapsed());
+            }
+        }
+    }
+    for (t, rx) in pending.drain(..) {
+        rx.recv().unwrap().unwrap();
+        lat.record(t.elapsed());
+    }
+    let wall = t0.elapsed();
+    let stats = srv.shutdown().unwrap();
+    println!(
+        "served {} requests in {} batches: p50 {:.2} ms, p95 {:.2} ms, throughput {:.0} req/s",
+        stats.requests,
+        stats.batches,
+        lat.percentile_us(50.0) / 1e3,
+        lat.percentile_us(95.0) / 1e3,
+        lat.throughput_rps(wall),
+    );
+    0
+}

@@ -1,0 +1,95 @@
+//! BiRNN — bidirectional LSTM classifier (Table 2, aymericdamien's
+//! `bidirectional_rnn`, default configuration: MNIST sequence, hidden
+//! 128 per direction, batch 128).
+//!
+//! Two LSTM cell bodies in separate while-loop frames (forward /
+//! backward, the way TF's `bidirectional_dynamic_rnn` emits two loops),
+//! concatenated at top level into a 2H feature for the classifier.
+
+use super::rnn::lstm_cell;
+use super::{dense, softmax};
+use crate::hlo::instruction::ReduceKind;
+use crate::hlo::{GraphBuilder, Module, Shape};
+
+pub const BATCH: i64 = 128;
+pub const INPUT: i64 = 28;
+pub const HIDDEN: i64 = 128;
+pub const CLASSES: i64 = 10;
+
+pub fn build() -> Module {
+    let mut b = GraphBuilder::new("birnn_entry");
+    let x_fwd = b.param("x_fwd", Shape::f32(&[BATCH, INPUT]));
+    let x_bwd = b.param("x_bwd", Shape::f32(&[BATCH, INPUT]));
+    let h0f = b.param("h0f", Shape::f32(&[BATCH, HIDDEN]));
+    let c0f = b.param("c0f", Shape::f32(&[BATCH, HIDDEN]));
+    let h0b = b.param("h0b", Shape::f32(&[BATCH, HIDDEN]));
+    let c0b = b.param("c0b", Shape::f32(&[BATCH, HIDDEN]));
+    let wf = b.param("w_fwd", Shape::f32(&[INPUT + HIDDEN, 4 * HIDDEN]));
+    let bf = b.param("b_fwd", Shape::f32(&[4 * HIDDEN]));
+    let wb = b.param("w_bwd", Shape::f32(&[INPUT + HIDDEN, 4 * HIDDEN]));
+    let bb = b.param("b_bwd", Shape::f32(&[4 * HIDDEN]));
+    let w_out = b.param("w_out", Shape::f32(&[2 * HIDDEN, CLASSES]));
+    let b_out = b.param("b_out", Shape::f32(&[CLASSES]));
+    let y = b.param("y", Shape::f32(&[BATCH, CLASSES]));
+
+    // Forward loop body (frame 1).
+    b.set_frame(1);
+    let (hf, _cf) = lstm_cell(&mut b, x_fwd, h0f, c0f, wf, bf);
+
+    // Backward loop body (frame 2).
+    b.set_frame(2);
+    let (hb, _cb) = lstm_cell(&mut b, x_bwd, h0b, c0b, wb, bb);
+
+    // Join at top level: concat(h_fwd, h_bwd) → classifier.
+    b.set_frame(0);
+    let hf0 = b.copy(hf);
+    let hb0 = b.copy(hb);
+    let feat = b.concat(&[hf0, hb0], 1); // [B, 2H]
+    let logits = dense(&mut b, feat, w_out, b_out);
+    let probs = softmax(&mut b, logits);
+    let logp = b.log(probs);
+    let yl = b.mul(y, logp);
+    let nll = b.neg(yl);
+    let loss = b.reduce(nll, &[0, 1], ReduceKind::Mean);
+    Module::new("BiRNN", b.finish(loss))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::FramePartition;
+    use crate::hlo::verifier::verify_module;
+    use crate::hlo::Opcode;
+
+    #[test]
+    fn builds_and_verifies() {
+        verify_module(&build()).unwrap();
+    }
+
+    #[test]
+    fn two_direction_frames() {
+        let m = build();
+        let fp = FramePartition::build(&m.entry);
+        assert_eq!(fp.frames(), vec![0, 1, 2]);
+        assert!(fp.members(1).len() >= 10);
+        assert!(fp.members(2).len() >= 10);
+    }
+
+    #[test]
+    fn concat_joins_directions() {
+        let m = build();
+        let concat2h = m
+            .entry
+            .instructions()
+            .filter(|i| {
+                i.opcode == Opcode::Concatenate && i.shape.dims == vec![BATCH, 2 * HIDDEN]
+            })
+            .count();
+        assert_eq!(concat2h, 1);
+    }
+
+    #[test]
+    fn larger_than_rnn() {
+        assert!(build().entry.len() > super::super::rnn::build().entry.len());
+    }
+}

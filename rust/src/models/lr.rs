@@ -1,0 +1,92 @@
+//! LR — logistic regression training step (Table 2, aymericdamien's
+//! TensorFlow-Examples `logistic_regression`, default configuration:
+//! MNIST, batch 128, 784 → 10, softmax cross-entropy + SGD).
+//!
+//! One training iteration: forward dense layer (library dot), softmax
+//! cross-entropy loss, analytic gradients, SGD parameter updates. The
+//! update tail is the fine-grained elementwise pattern whose launch
+//! overhead motivates intra-layer fusion.
+
+use super::{dense, sgd_update, softmax};
+use crate::hlo::instruction::ReduceKind;
+use crate::hlo::{GraphBuilder, Module, Shape};
+
+pub const BATCH: i64 = 128;
+pub const FEATURES: i64 = 784;
+pub const CLASSES: i64 = 10;
+
+pub fn build() -> Module {
+    let mut b = GraphBuilder::new("lr_entry");
+    let x = b.param("x", Shape::f32(&[BATCH, FEATURES]));
+    let y = b.param("y", Shape::f32(&[BATCH, CLASSES])); // one-hot labels
+    let w = b.param("w", Shape::f32(&[FEATURES, CLASSES]));
+    let bias = b.param("b", Shape::f32(&[CLASSES]));
+    let lr = b.param("lr", Shape::f32(&[]));
+
+    // Forward: logits = x·W + b, probs = softmax(logits).
+    let logits = dense(&mut b, x, w, bias);
+    let probs = softmax(&mut b, logits);
+
+    // Loss: mean cross-entropy −Σ y·log p (kept in the graph: its value
+    // is an output the session fetches every step).
+    let logp = b.log(probs);
+    let yl = b.mul(y, logp);
+    let nll = b.neg(yl);
+    let loss = b.reduce(nll, &[0, 1], ReduceKind::Mean);
+
+    // Backward: dlogits = (probs − y) / batch.
+    let diff = b.sub(probs, y);
+    let inv_batch = b.constant(Shape::f32(&[]));
+    let invb = b.broadcast(inv_batch, &[BATCH, CLASSES], &[]);
+    let dlogits = b.mul(diff, invb);
+
+    // dW = xᵀ · dlogits (library matmul); db = Σ_rows dlogits.
+    let xt = b.transpose(x, &[1, 0]);
+    let dw = b.dot(xt, dlogits);
+    let db = b.reduce(dlogits, &[0], ReduceKind::Sum);
+
+    // SGD updates — small same-shape elementwise ops in one span layer.
+    let w_new = sgd_update(&mut b, w, dw, lr);
+    let b_new = sgd_update(&mut b, bias, db, lr);
+
+    // Keep all outputs live via a cheap combine onto the loss scalar.
+    let wsum = b.reduce(w_new, &[0, 1], ReduceKind::Sum);
+    let bsum = b.reduce(b_new, &[0], ReduceKind::Sum);
+    let t1 = b.add(loss, wsum);
+    let root = b.add(t1, bsum);
+    Module::new("LR", b.finish(root))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::verifier::verify_module;
+    use crate::hlo::Opcode;
+
+    #[test]
+    fn builds_and_verifies() {
+        let m = build();
+        verify_module(&m).unwrap();
+    }
+
+    #[test]
+    fn has_two_library_matmuls() {
+        let m = build();
+        let dots =
+            m.entry.instructions().filter(|i| i.opcode == Opcode::Dot).count();
+        assert_eq!(dots, 2); // forward + dW
+    }
+
+    #[test]
+    fn update_tail_is_fine_grained() {
+        // The SGD update ops all produce parameter-shaped outputs —
+        // small tensors, the launch-bound regime of Fig. 1.
+        let m = build();
+        let small = m
+            .entry
+            .instructions()
+            .filter(|i| i.opcode.is_elementwise() && i.shape.num_elements() <= FEATURES * CLASSES)
+            .count();
+        assert!(small >= 4, "expected several fine-grained update ops, got {small}");
+    }
+}

@@ -1,0 +1,141 @@
+//! NMT — attention-based neural machine translation inference (Table 2
+//! stand-in for the paper's in-house transformer-style NMT; see DESIGN.md
+//! substitutions; cf. Vaswani et al. 2017 / Xiong et al. 2018, which the
+//! paper cites as its basis).
+//!
+//! The *online* use case: small batch, latency-critical. One decoder
+//! block: Q/K/V projections (library matmuls), scaled dot-product
+//! attention whose batched dots have workload-specific marginal shapes —
+//! the case where "cuBLAS kernels do not deliver satisfactory
+//! performance" (§2.1) and `fuse_batch_dot = true` pays — a GELU FFN,
+//! residuals and layer norms. The softmax → BatchDot core is exactly
+//! Figure 3, including the shared-memory reuse measured in Table 3 (NMT
+//! shared ratio 0.17).
+
+use super::{layer_norm, softmax};
+use crate::hlo::{GraphBuilder, InstrId, Module, Shape};
+
+pub const BATCH: i64 = 8; // heads × beam — small, latency-critical
+pub const SEQ: i64 = 64;
+pub const DIM: i64 = 64; // per-head dim
+pub const MODEL: i64 = 512;
+pub const FFN: i64 = 1024;
+pub const VOCAB: i64 = 512;
+
+pub fn build() -> Module {
+    let mut b = GraphBuilder::new("nmt_entry");
+    let hidden = b.param("hidden", Shape::f32(&[BATCH * SEQ, MODEL]));
+    let wq = b.param("wq", Shape::f32(&[MODEL, DIM]));
+    let wk = b.param("wk", Shape::f32(&[MODEL, DIM]));
+    let wv = b.param("wv", Shape::f32(&[MODEL, DIM]));
+    let wo = b.param("wo", Shape::f32(&[DIM, MODEL]));
+    let ln1_g = b.param("ln1_g", Shape::f32(&[MODEL]));
+    let ln1_b = b.param("ln1_b", Shape::f32(&[MODEL]));
+    let ln2_g = b.param("ln2_g", Shape::f32(&[MODEL]));
+    let ln2_b = b.param("ln2_b", Shape::f32(&[MODEL]));
+    let w1 = b.param("w_ffn1", Shape::f32(&[MODEL, FFN]));
+    let w2 = b.param("w_ffn2", Shape::f32(&[FFN, MODEL]));
+    let w_vocab = b.param("w_vocab", Shape::f32(&[MODEL, VOCAB]));
+
+    // --- projections (library matmuls, LC-layer) ---
+    let q2 = b.dot(hidden, wq); // [B*S, D]
+    let k2 = b.dot(hidden, wk);
+    let v2 = b.dot(hidden, wv);
+    let q = b.reshape(q2, &[BATCH, SEQ, DIM]);
+    let k = b.reshape(k2, &[BATCH, SEQ, DIM]);
+    let v = b.reshape(v2, &[BATCH, SEQ, DIM]);
+
+    // --- scaled dot-product attention: the Figure 3 subgraph ---
+    let kt = b.transpose(k, &[0, 2, 1]); // [B, D, S]
+    let scores = b.batch_dot(q, kt); // [B, S, S] — marginal batched shape
+    let scale = b.constant(Shape::f32(&[]));
+    let scaleb = b.broadcast(scale, &[BATCH, SEQ, SEQ], &[]);
+    let scaled = b.mul(scores, scaleb);
+    let probs = softmax(&mut b, scaled); // max/exp/sum/div with smem reuse
+    let ctx = b.batch_dot(probs, v); // [B, S, D] — Dot.1 in Figure 3
+
+    // --- output projection + residual + layer norm ---
+    let ctx2 = b.reshape(ctx, &[BATCH * SEQ, DIM]);
+    let proj = b.dot(ctx2, wo); // library
+    let res1 = b.add(hidden, proj);
+    let ln1 = layer_norm(&mut b, res1, ln1_g, ln1_b);
+
+    // --- GELU FFN ---
+    let f1 = b.dot(ln1, w1); // library
+    let g = gelu(&mut b, f1);
+    let f2 = b.dot(g, w2); // library
+    let res2 = b.add(ln1, f2);
+    let ln2 = layer_norm(&mut b, res2, ln2_g, ln2_b);
+
+    // --- vocab logits + softmax for the next token ---
+    let logits = b.dot(ln2, w_vocab); // [B*S, V]
+    let last = b.reshape(logits, &[BATCH, SEQ, VOCAB]);
+    let out_probs = softmax(&mut b, last);
+    let root = b.log(out_probs);
+    Module::new("NMT", b.finish(root))
+}
+
+/// tanh-approximation GELU: the expensive-elementwise chain
+/// (mul/pow/tanh) typical of transformer FFNs.
+fn gelu(b: &mut GraphBuilder, x: InstrId) -> InstrId {
+    let dims = b.peek().get(x).shape.dims.clone();
+    let c0 = b.constant(Shape::f32(&[])); // 0.7978845608…
+    let c1 = b.constant(Shape::f32(&[])); // 0.044715
+    let half = b.constant(Shape::f32(&[])); // 0.5
+    let onec = b.constant(Shape::f32(&[]));
+    let c0b = b.broadcast(c0, &dims, &[]);
+    let c1b = b.broadcast(c1, &dims, &[]);
+    let halfb = b.broadcast(half, &dims, &[]);
+    let oneb = b.broadcast(onec, &dims, &[]);
+    let x2 = b.mul(x, x);
+    let x3 = b.mul(x2, x);
+    let inner = b.mul(c1b, x3);
+    let sum = b.add(x, inner);
+    let arg = b.mul(c0b, sum);
+    let t = b.tanh(arg);
+    let onep = b.add(oneb, t);
+    let halfx = b.mul(halfb, x);
+    b.mul(halfx, onep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::verifier::verify_module;
+    use crate::hlo::Opcode;
+
+    #[test]
+    fn builds_and_verifies() {
+        verify_module(&build()).unwrap();
+    }
+
+    #[test]
+    fn figure3_pattern_embedded() {
+        let m = build();
+        let bdots =
+            m.entry.instructions().filter(|i| i.opcode == Opcode::BatchDot).count();
+        assert_eq!(bdots, 2, "scores and context batched dots");
+        // two softmaxes (attention + vocab) → 4 reduces + 2 divides at least
+        let reduces = m.entry.instructions().filter(|i| i.opcode.is_reduce()).count();
+        assert!(reduces >= 8, "attention softmax, vocab softmax, 2 layer norms");
+    }
+
+    #[test]
+    fn library_calls_delimit_regions() {
+        let m = build();
+        let dots = m.entry.instructions().filter(|i| i.opcode == Opcode::Dot).count();
+        assert_eq!(dots, 7); // q,k,v,wo,ffn1,ffn2,vocab
+    }
+
+    #[test]
+    fn expensive_elementwise_present() {
+        // exp/div/tanh in softmax+gelu — the smem candidates of §5.1.1.
+        let m = build();
+        let expensive = m
+            .entry
+            .instructions()
+            .filter(|i| i.opcode.is_expensive_elementwise())
+            .count();
+        assert!(expensive >= 6, "got {expensive}");
+    }
+}

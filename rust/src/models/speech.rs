@@ -1,0 +1,148 @@
+//! Speech — speech-recognition training step (Table 2 stand-in for the
+//! paper's in-house application training on consumer-device voice
+//! samples; see DESIGN.md substitutions).
+//!
+//! Built to exhibit exactly what §6.3 credits for the paper's *best*
+//! fusion ratio (0.25) on Speech: "complex interaction patterns among
+//! reduce, transpose, concat, and elementwise ops" — a conv/cuDNN
+//! frontend, time/feature-major transposes between stages, per-frame
+//! feature normalization (reduce + rsqrt tails), skip concats, masked
+//! pooling, and a log-softmax CTC-style head. Shared-memory pressure is
+//! intentionally high (Table 3: Speech averages ~9.5 KB and triggers
+//! shrinking).
+
+use super::{layer_norm, softmax};
+use crate::hlo::instruction::ReduceKind;
+use crate::hlo::{GraphBuilder, InstrId, Module, Shape};
+
+pub const BATCH: i64 = 16;
+pub const TIME: i64 = 96;
+pub const MEL: i64 = 64;
+pub const FEAT: i64 = 128;
+pub const VOCAB: i64 = 48;
+
+pub fn build() -> Module {
+    let mut b = GraphBuilder::new("speech_entry");
+    // Log-mel spectrogram input, NHWC for the conv frontend.
+    let spec = b.param("spec", Shape::f32(&[BATCH, TIME, MEL, 1]));
+    let conv_w1 = b.param("conv_w1", Shape::f32(&[3, 3, 1, 8]));
+    let conv_w2 = b.param("conv_w2", Shape::f32(&[3, 3, 8, 2]));
+    let ln1_g = b.param("ln1_g", Shape::f32(&[FEAT]));
+    let ln1_b = b.param("ln1_b", Shape::f32(&[FEAT]));
+    let ln2_g = b.param("ln2_g", Shape::f32(&[2 * FEAT]));
+    let ln2_b = b.param("ln2_b", Shape::f32(&[2 * FEAT]));
+    let w_head = b.param("w_head", Shape::f32(&[2 * FEAT, VOCAB]));
+    let b_head = b.param("b_head", Shape::f32(&[VOCAB]));
+    let labels = b.param("labels", Shape::f32(&[BATCH, TIME, VOCAB]));
+
+    // --- cuDNN conv frontend (LC-layers) ---
+    let c1 = b.conv2d(spec, conv_w1); // [B, T, MEL, 8]
+    let r1 = relu(&mut b, c1);
+    let c2 = b.conv2d(r1, conv_w2); // [B, T, MEL, 2]
+    let r2 = relu(&mut b, c2);
+
+    // --- fold channels into features: [B, T, MEL*2] = [B, T, FEAT] ---
+    let folded = b.reshape(r2, &[BATCH, TIME, FEAT]);
+
+    // Per-utterance global mean/variance normalization over time —
+    // *column* reduction (major dim), the XLA weak spot §1 names.
+    let tmean = b.reduce(folded, &[1], ReduceKind::Mean); // [B, FEAT]
+    let tmb = b.broadcast(tmean, &[BATCH, TIME, FEAT], &[0, 2]);
+    let centered = b.sub(folded, tmb);
+    let sq = b.mul(centered, centered);
+    let tvar = b.reduce(sq, &[1], ReduceKind::Mean); // [B, FEAT]
+    let tvb = b.broadcast(tvar, &[BATCH, TIME, FEAT], &[0, 2]);
+    let rstd = b.rsqrt(tvb);
+    let cmvn = b.mul(centered, rstd);
+
+    // --- layer-norm + gated elementwise block, time-major transposes ---
+    let ln1 = layer_norm(&mut b, cmvn, ln1_g, ln1_b); // [B, T, F]
+    let tmaj = b.transpose(ln1, &[1, 0, 2]); // [T, B, F] time-major
+    let gate = b.sigmoid(tmaj);
+    let cand = b.tanh(tmaj);
+    let gated = b.mul(gate, cand);
+    let back = b.transpose(gated, &[1, 0, 2]); // [B, T, F]
+
+    // --- skip concat: [B, T, 2F] (the concat/elementwise interaction) ---
+    let skip = b.concat(&[back, cmvn], 2);
+    let ln2 = layer_norm(&mut b, skip, ln2_g, ln2_b); // [B, T, 2F]
+
+    // --- masked statistics pooling over time (more column reduces) ---
+    let gmax = b.reduce(ln2, &[1], ReduceKind::Max); // [B, 2F]
+    let gmean = b.reduce(ln2, &[1], ReduceKind::Mean); // [B, 2F]
+    let pooled = b.add(gmax, gmean);
+    let pool_n = b.tanh(pooled);
+
+    // --- CTC-style head: per-frame vocab logits + log-softmax ---
+    let flat = b.reshape(ln2, &[BATCH * TIME, 2 * FEAT]);
+    let logits2 = b.dot(flat, w_head); // library matmul
+    let hb = b.broadcast(b_head, &[BATCH * TIME, VOCAB], &[1]);
+    let logits = b.add(logits2, hb);
+    let frames = b.reshape(logits, &[BATCH, TIME, VOCAB]);
+    let probs = softmax(&mut b, frames);
+    let logp = b.log(probs);
+    let yl = b.mul(labels, logp);
+    let nll = b.neg(yl);
+    let loss = b.reduce(nll, &[0, 1, 2], ReduceKind::Mean);
+
+    // keep the pooled embedding alive (multi-task: speaker head)
+    let psum = b.reduce(pool_n, &[0, 1], ReduceKind::Sum);
+    let root = b.add(loss, psum);
+    Module::new("Speech", b.finish(root))
+}
+
+fn relu(b: &mut GraphBuilder, x: InstrId) -> InstrId {
+    let dims = b.peek().get(x).shape.dims.clone();
+    let zc = b.constant(Shape::f32(&[]));
+    let zeros = b.broadcast(zc, &dims, &[]);
+    b.max(x, zeros)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::verifier::verify_module;
+    use crate::hlo::Opcode;
+
+    #[test]
+    fn builds_and_verifies() {
+        verify_module(&build()).unwrap();
+    }
+
+    #[test]
+    fn has_the_section63_op_mix() {
+        // "complex interaction patterns among reduce, transpose, concat,
+        // and elementwise ops"
+        let m = build();
+        let count = |f: &dyn Fn(Opcode) -> bool| {
+            m.entry.instructions().filter(|i| f(i.opcode)).count()
+        };
+        assert!(count(&|o| o.is_reduce()) >= 7, "many reduces");
+        assert!(count(&|o| o == Opcode::Transpose) >= 2, "transposes");
+        assert!(count(&|o| o == Opcode::Concatenate) >= 1, "concat");
+        assert!(count(&|o| o.is_elementwise()) >= 15, "elementwise");
+        assert!(count(&|o| o == Opcode::Convolution) == 2, "cuDNN frontend");
+    }
+
+    #[test]
+    fn column_reductions_present() {
+        // reduces over dim 1 of rank-3 tensors (time axis) — the
+        // column-reduction weak spot.
+        let m = build();
+        let col = m
+            .entry
+            .instructions()
+            .filter(|i| {
+                i.opcode == Opcode::Reduce
+                    && i.attrs.reduce_dims.as_ref() == Some(&vec![1])
+            })
+            .count();
+        assert!(col >= 4, "got {col}");
+    }
+
+    #[test]
+    fn is_the_largest_training_graph() {
+        let speech = build().entry.len();
+        assert!(speech > super::super::birnn::build().entry.len());
+    }
+}

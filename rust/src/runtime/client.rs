@@ -1,0 +1,61 @@
+//! PJRT CPU client wrapper.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes
+//! `HloModuleProto`s with 64-bit instruction ids that the crate's
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Owns the PJRT client. One per process; executables share it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client (the paper's GPU backend is simulated;
+    /// numerics run on the XLA CPU backend).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it to an executable.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+        assert!(rt.device_count() >= 1);
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.load_hlo_text(Path::new("/nonexistent/x.hlo.txt")).is_err());
+    }
+}

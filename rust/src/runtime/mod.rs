@@ -1,0 +1,9 @@
+//! The PJRT runtime: loads AOT-compiled HLO artifacts (produced once by
+//! `python/compile/aot.py` from the JAX/Pallas layers) and executes them
+//! from Rust. Python never runs on this path.
+
+pub mod client;
+pub mod engine;
+
+pub use client::Runtime;
+pub use engine::{Engine, LoadedModel};

@@ -1,0 +1,26 @@
+//! Schedule planning — §4 of the paper.
+//!
+//! - [`spec`] — the compact schedule space: `(split_dim, sword,
+//!   sched_type)` triples over an instruction's output shape (§4.1).
+//! - [`propagate`] — Table 1's constraint-propagation rules, resolving
+//!   whether a root schedule is satisfiable by every instruction of a
+//!   fused computation (§4.2).
+//! - [`perf_library`] — the persistent key-value store of per-schedule
+//!   kernel times, filled on miss from the GPU cost model (§4.4).
+//! - [`tuning`] — candidate enumeration, the two-stage multi-root search
+//!   and best-so-far pruning (§4.3).
+//! - [`predictor`] — the paper's §4.4 future work: a learned model
+//!   predicting kernel time from key features, replacing synchronous
+//!   measurement on library misses.
+
+pub mod perf_library;
+pub mod predictor;
+pub mod propagate;
+pub mod spec;
+pub mod tuning;
+
+pub use perf_library::PerfLibrary;
+pub use predictor::PerfPredictor;
+pub use propagate::{propagate, OpSchedule, PropagationResult};
+pub use spec::{SchedType, Schedule};
+pub use tuning::{tune, TunedPlan, TuningConfig};

@@ -1,0 +1,600 @@
+//! Schedule constraint propagation — §4.2 / Table 1.
+//!
+//! Given schedules for the roots of a fused computation, decide whether
+//! they are satisfiable by every member instruction, and if so derive the
+//! per-instruction schedule assignment. Propagation walks backwards
+//! (root → operands), transforming `(split_dim, sword)` through shape
+//! modulation and rejecting combinations Table 1 forbids (e.g. splitting
+//! inside a reduce's reduction dims).
+//!
+//! Every instruction in one kernel must agree on the grid — the `blocks`
+//! count — because block composition (§5) stitches their per-block data
+//! chunks through shared memory, which is private to a block.
+
+use super::spec::{SchedType, Schedule};
+use crate::hlo::{Computation, InstrId, Opcode, Shape};
+use std::collections::{BTreeMap, HashSet};
+
+/// What codegen will do with one member of the fused computation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OpSchedule {
+    /// Op gets its own parallel loop emitter under this schedule
+    /// (block composition).
+    Scheduled(Schedule),
+    /// Op is folded into its consumer's loop (thread composition), like
+    /// XLA's elemental IR emitter — used for trivially-inlinable shape
+    /// modulation (§4.3 optimization 1).
+    Inlined,
+}
+
+/// Successful propagation: a consistent assignment for all members.
+#[derive(Debug, Clone)]
+pub struct PropagationResult {
+    pub assignment: BTreeMap<InstrId, OpSchedule>,
+    /// Common grid size shared by every scheduled member.
+    pub blocks: u64,
+}
+
+/// Why propagation failed. Feeds the fusion pass's `SchdConsistent`
+/// decision and (via tuning) the shared-memory feedback loop.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Unsatisfiable {
+    /// Table 1 rejects the schedule at this instruction.
+    RuleViolation(InstrId, &'static str),
+    /// Two users demand different schedules of the same producer.
+    Conflict(InstrId),
+    /// Root schedule invalid for the root shape.
+    BadRootSchedule(InstrId),
+}
+
+impl std::fmt::Display for Unsatisfiable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Unsatisfiable::RuleViolation(id, why) => write!(f, "rule violation at {id}: {why}"),
+            Unsatisfiable::Conflict(id) => write!(f, "conflicting schedules demanded of {id}"),
+            Unsatisfiable::BadRootSchedule(id) => write!(f, "invalid root schedule at {id}"),
+        }
+    }
+}
+
+/// Propagate root schedules through the fused computation `members`.
+///
+/// `roots` pairs each fusion root with its candidate schedule. All
+/// non-root members must be reachable from some root through operand
+/// edges within `members`.
+pub fn propagate(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    roots: &[(InstrId, Schedule)],
+) -> Result<PropagationResult, Unsatisfiable> {
+    let mut assignment: BTreeMap<InstrId, OpSchedule> = BTreeMap::new();
+    let mut blocks: Option<u64> = None;
+
+    // Seed roots, checking validity and grid agreement (§4.3's multi-root
+    // blocks intersection reduces to this check here).
+    for &(root, sched) in roots {
+        let shape = &comp.get(root).shape;
+        if !sched.is_valid_for(shape) {
+            return Err(Unsatisfiable::BadRootSchedule(root));
+        }
+        let b = sched.blocks(shape);
+        match blocks {
+            None => blocks = Some(b),
+            Some(prev) if prev != b => {
+                return Err(Unsatisfiable::RuleViolation(root, "roots disagree on grid size"))
+            }
+            _ => {}
+        }
+        merge(&mut assignment, root, OpSchedule::Scheduled(sched))?;
+    }
+    let blocks = blocks.unwrap_or(1);
+
+    // Members are ids into one arena; descending id order is reverse
+    // topological, so each instruction is processed after all its users.
+    let mut order: Vec<InstrId> = members.iter().copied().collect();
+    order.sort_unstable_by(|a, b| b.cmp(a));
+
+    for id in order {
+        let state = match assignment.get(&id) {
+            Some(&OpSchedule::Scheduled(s)) => s,
+            Some(&OpSchedule::Inlined) => {
+                // Inlined ops impose no constraint of their own; their
+                // operands were already handled when the op was inlined.
+                continue;
+            }
+            None => {
+                // Never demanded by any user: only acceptable for ops we
+                // can always inline (e.g. a dead-end trivial op) — reject
+                // otherwise so fusion keeps groups connected.
+                if comp.get(id).opcode.is_trivially_inlinable() {
+                    assignment.insert(id, OpSchedule::Inlined);
+                    continue;
+                }
+                return Err(Unsatisfiable::RuleViolation(id, "member unreachable from roots"));
+            }
+        };
+        for (operand, req) in propagate_one(comp, members, id, state)? {
+            debug_assert!(members.contains(&operand));
+            match req {
+                Some(s) => merge(&mut assignment, operand, OpSchedule::Scheduled(s))?,
+                None => {
+                    // Constraint-free operand (e.g. a broadcast's small
+                    // input): recomputed per block via thread
+                    // composition. Reductions and contractions cannot be
+                    // thread-composed (no single-lane form) — reject.
+                    let oc = comp.get(operand).opcode;
+                    if oc.is_reduce() || oc == Opcode::BatchDot {
+                        return Err(Unsatisfiable::RuleViolation(
+                            operand,
+                            "reduce/batch-dot cannot be thread-composed",
+                        ));
+                    }
+                    assignment.entry(operand).or_insert(OpSchedule::Inlined);
+                }
+            }
+        }
+    }
+
+    Ok(PropagationResult { assignment, blocks })
+}
+
+fn merge(
+    assignment: &mut BTreeMap<InstrId, OpSchedule>,
+    id: InstrId,
+    new: OpSchedule,
+) -> Result<(), Unsatisfiable> {
+    match assignment.get(&id) {
+        None => {
+            assignment.insert(id, new);
+            Ok(())
+        }
+        Some(old) if *old == new => Ok(()),
+        // An op already marked Inlined can be upgraded to Scheduled by a
+        // stronger demand; two *different* schedules conflict.
+        Some(OpSchedule::Inlined) => {
+            assignment.insert(id, new);
+            Ok(())
+        }
+        Some(OpSchedule::Scheduled(_)) if new == OpSchedule::Inlined => Ok(()),
+        _ => Err(Unsatisfiable::Conflict(id)),
+    }
+}
+
+/// Requirements `id`'s schedule imposes on each **in-group** operand:
+/// `Some(s)` = the operand must run under schedule `s`; `None` =
+/// unconstrained (recomputed per block via thread composition).
+///
+/// Operands outside `members` are kernel inputs read from DRAM — blocks
+/// can read arbitrary regions of them, so Table 1's structural rules
+/// only apply along in-group edges (where a producer must deposit
+/// exactly the consumer's per-block chunk into shared memory).
+fn propagate_one(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    id: InstrId,
+    sched: Schedule,
+) -> Result<Vec<(InstrId, Option<Schedule>)>, Unsatisfiable> {
+    let instr = comp.get(id);
+    let out_shape = &instr.shape;
+    let ops = &instr.operands;
+    use Opcode::*;
+
+    let internal = |o: &InstrId| members.contains(o);
+    let same_for_internal = |s: Schedule| -> Vec<(InstrId, Option<Schedule>)> {
+        ops.iter().filter(|o| internal(o)).map(|&o| (o, Some(s))).collect()
+    };
+
+    if instr.opcode.is_library_call() {
+        return Err(Unsatisfiable::RuleViolation(id, "library calls are never fused"));
+    }
+
+    // §4.3: "There is always a valid Row schedule for any fused
+    // computation, with split_dim = 0 and sword = 1. In this case, we
+    // only use one thread block for all instructions." A single block
+    // sees every operand chunk whole, so all directional rules pass.
+    if instr.opcode.is_fusable() && sched.blocks(out_shape) == 1 {
+        return Ok(ops
+            .iter()
+            .filter(|o| internal(o))
+            .map(|&o| (o, Some(Schedule::fallback())))
+            .collect());
+    }
+
+    match instr.opcode {
+        // Table 1: Elementwise — pass Row, Column unchanged.
+        op if op.is_elementwise() => Ok(same_for_internal(sched)),
+
+        Parameter | Constant | Iota => Ok(vec![]),
+
+        // Table 1: Transpose — the split must stay outside the
+        // transposed window for the producer's chunk to align:
+        // `split_dim <= min_trans_dim` passes Row, `split_dim >=
+        // max_trans_dim` passes Column. Outside the window the
+        // permutation is the identity, so (split_dim, sword) carry over.
+        Transpose => {
+            if !internal(&ops[0]) {
+                return Ok(vec![]);
+            }
+            match (instr.min_trans_dim(), instr.max_trans_dim()) {
+                (None, _) | (_, None) => Ok(same_for_internal(sched)), // identity perm
+                (Some(lo), Some(hi)) => match sched.sched_type {
+                    SchedType::Row if sched.split_dim < lo => Ok(same_for_internal(sched)),
+                    SchedType::Column if sched.split_dim > hi => Ok(same_for_internal(sched)),
+                    _ => Err(Unsatisfiable::RuleViolation(
+                        id,
+                        "transpose: split inside transposed window",
+                    )),
+                },
+            }
+        }
+
+        // Table 1: Reduce — all reduction dims must live inside one
+        // thread block; the output split maps to the matching input dim
+        // and must fall strictly left (Row) or right (Column) of the
+        // reduced window.
+        Reduce => {
+            let in_shape = &comp.get(ops[0]).shape;
+            let dims = instr.attrs.reduce_dims.as_ref().expect("verified");
+            if !internal(&ops[0]) {
+                return Ok(vec![]);
+            }
+            if dims.len() == in_shape.rank() {
+                // Full reduction: only a single-block grid can see all
+                // the data of an in-group producer.
+                if sched.blocks(out_shape) != 1 {
+                    return Err(Unsatisfiable::RuleViolation(id, "full reduce needs 1 block"));
+                }
+                return Ok(vec![(ops[0], Some(Schedule::fallback()))]);
+            }
+            let kept: Vec<usize> =
+                (0..in_shape.rank()).filter(|d| !dims.contains(d)).collect();
+            let isd = kept[sched.split_dim]; // input dim the output split maps to
+            let lo = instr.min_reduce_dim();
+            let hi = instr.max_reduce_dim();
+            let ok = match sched.sched_type {
+                SchedType::Row => isd < lo,
+                SchedType::Column => isd > hi,
+            };
+            if !ok {
+                return Err(Unsatisfiable::RuleViolation(
+                    id,
+                    "reduce: split does not clear the reduced window",
+                ));
+            }
+            Ok(vec![(ops[0], Some(Schedule::new(isd, sched.sword, sched.sched_type)))])
+        }
+
+        // Table 1: BatchDot — with in-group producers, only Row
+        // schedules over batch dims pass (`split_dim < num_dims - 2`);
+        // operands share the batch dims.
+        BatchDot => {
+            if ops.iter().all(|o| !internal(o)) {
+                return Ok(vec![]);
+            }
+            if sched.sched_type != SchedType::Row || sched.split_dim + 2 >= out_shape.rank() {
+                return Err(Unsatisfiable::RuleViolation(
+                    id,
+                    "batch-dot: schedule must split a batch dim with Row",
+                ));
+            }
+            Ok(same_for_internal(sched))
+        }
+
+        // Table 1: Reshape — transform (split_dim, sword) through the
+        // element-count-preserving relayout, pass Row/Column.
+        Reshape | Bitcast => {
+            if !internal(&ops[0]) {
+                return Ok(vec![]);
+            }
+            let in_shape = &comp.get(ops[0]).shape;
+            match transform_through_reshape(out_shape, in_shape, sched) {
+                Some(s) => Ok(vec![(ops[0], Some(s))]),
+                None => Err(Unsatisfiable::RuleViolation(
+                    id,
+                    "reshape: no input split matches the grid",
+                )),
+            }
+        }
+
+        // Table 1: Broadcast — transform through the dim mapping; dims
+        // created by the broadcast leave the operand unconstrained (each
+        // block recomputes/rereads the small operand whole).
+        Broadcast => {
+            if !internal(&ops[0]) {
+                return Ok(vec![]);
+            }
+            let bdims = instr.attrs.broadcast_dims.as_ref().expect("verified");
+            let in_shape = &comp.get(ops[0]).shape;
+            match bdims.iter().position(|&d| d == sched.split_dim) {
+                // The mapped split only describes the same grid when no
+                // broadcast-created dim contributes to the block count
+                // (prefix for Row / suffix for Column); otherwise each
+                // block sees a *slice* of the operand repeated — fall
+                // back to per-block recomputation.
+                Some(i) => {
+                    let s = Schedule::new(i, sched.sword, sched.sched_type);
+                    if s.is_valid_for(in_shape) && s.blocks(in_shape) == sched.blocks(out_shape)
+                    {
+                        Ok(vec![(ops[0], Some(s))])
+                    } else {
+                        Ok(vec![(ops[0], None)])
+                    }
+                }
+                None => Ok(vec![(ops[0], None)]),
+            }
+        }
+
+        // Concatenate: blocks agree iff the split stays on the
+        // non-joined side (prefix products match for Row, suffix for
+        // Column).
+        Concatenate => {
+            if ops.iter().all(|o| !internal(o)) {
+                return Ok(vec![]);
+            }
+            let cdim = instr.attrs.concat_dim.expect("verified");
+            let ok = match sched.sched_type {
+                SchedType::Row => sched.split_dim < cdim,
+                SchedType::Column => sched.split_dim > cdim,
+            };
+            if !ok {
+                return Err(Unsatisfiable::RuleViolation(
+                    id,
+                    "concat: split crosses the joined dim",
+                ));
+            }
+            Ok(same_for_internal(sched))
+        }
+
+        // Data-movement ops whose output chunks draw from input regions
+        // no block-aligned producer schedule can match: in-group
+        // producers fall back to per-block recomputation (thread
+        // composition) — rejected upstream if they cannot be.
+        Slice | Pad | Gather | DynamicSlice | DynamicUpdateSlice => {
+            Ok(ops.iter().filter(|o| internal(o)).map(|&o| (o, None)).collect())
+        }
+
+        op if op.is_library_call() => {
+            Err(Unsatisfiable::RuleViolation(id, "library calls are never fused"))
+        }
+
+        _ => Err(Unsatisfiable::RuleViolation(id, "op has no propagation rule")),
+    }
+}
+
+/// Reshape transform: a `Row` schedule partitions the (row-major) linear
+/// element space into `blocks` equal contiguous chunks, so any input
+/// `(split_dim', sword')` producing the same block count describes the
+/// same partition; `Column` is the mirror image on the reversed dims.
+fn transform_through_reshape(out: &Shape, input: &Shape, sched: Schedule) -> Option<Schedule> {
+    let target_blocks = sched.blocks(out);
+    if target_blocks == 1 {
+        return Some(Schedule::new(0, 1, sched.sched_type));
+    }
+    let rank = input.rank();
+    let dims: Vec<i64> = match sched.sched_type {
+        SchedType::Row => input.dims.clone(),
+        SchedType::Column => input.dims.iter().rev().copied().collect(),
+    };
+    // Find (sd, sword): prod(dims[..sd]) * sword == target, sword | dims[sd].
+    let mut prefix: i64 = 1;
+    for sd in 0..rank {
+        let t = target_blocks as i64;
+        if t % prefix == 0 {
+            let sword = t / prefix;
+            if sword >= 1 && sword <= dims[sd] && dims[sd] % sword == 0 {
+                let real_sd = match sched.sched_type {
+                    SchedType::Row => sd,
+                    SchedType::Column => rank - 1 - sd,
+                };
+                return Some(Schedule::new(real_sd, sword, sched.sched_type));
+            }
+        }
+        prefix *= dims[sd];
+        if prefix > target_blocks as i64 {
+            break;
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    fn all(comp: &Computation) -> HashSet<InstrId> {
+        comp.ids().filter(|&i| !comp.get(i).opcode.is_free() || comp.get(i).opcode == Opcode::Bitcast).collect()
+    }
+
+    /// The motivating pattern: softmax + batch-dot, Row over the batch
+    /// dim — the schedule used by our L1 Pallas kernel.
+    #[test]
+    fn figure3_row_schedule_satisfiable() {
+        let mut b = GraphBuilder::new("fig3");
+        let scores = b.param("scores", Shape::f32(&[8, 64, 64]));
+        let v = b.param("v", Shape::f32(&[8, 64, 32]));
+        let m = b.reduce(scores, &[2], ReduceKind::Max);
+        let mb = b.broadcast(m, &[8, 64, 64], &[0, 1]);
+        let sh = b.sub(scores, mb);
+        let e = b.exp(sh);
+        let s = b.reduce(e, &[2], ReduceKind::Sum);
+        let sb = b.broadcast(s, &[8, 64, 64], &[0, 1]);
+        let p = b.div(e, sb);
+        let out = b.batch_dot(p, v);
+        let comp = b.finish(out);
+
+        let members = all(&comp);
+        let sched = Schedule::new(0, 8, SchedType::Row); // one block per batch
+        let res = propagate(&comp, &members, &[(out, sched)]).unwrap();
+        assert_eq!(res.blocks, 8);
+        // Every non-parameter member scheduled with 8 blocks.
+        for (&id, st) in &res.assignment {
+            if let OpSchedule::Scheduled(s) = st {
+                assert_eq!(s.blocks(&comp.get(id).shape), 8, "at {id}");
+            }
+        }
+        // The reduce over dim 2 propagates a Row split on dim 0.
+        match res.assignment[&sh] {
+            OpSchedule::Scheduled(s) => {
+                assert_eq!(s.split_dim, 0);
+                assert_eq!(s.sched_type, SchedType::Row);
+            }
+            _ => panic!("sub should be scheduled"),
+        }
+    }
+
+    #[test]
+    fn reduce_rejects_split_inside_window() {
+        let mut b = GraphBuilder::new("r");
+        let x = b.param("x", Shape::f32(&[4, 8, 16]));
+        let e = b.exp(x);
+        let r = b.reduce(e, &[0], ReduceKind::Sum); // reduce major dim
+        let comp = b.finish(r);
+        let members: HashSet<InstrId> = [e, r].into_iter().collect();
+        // Row over the output's dim 0 maps to input dim 1 > min_reduce_dim=0.
+        let bad = Schedule::new(0, 4, SchedType::Row);
+        assert!(matches!(
+            propagate(&comp, &members, &[(r, bad)]),
+            Err(Unsatisfiable::RuleViolation(_, _))
+        ));
+        // Column over output dim 1 maps to input dim 2 > max_reduce_dim: ok.
+        let good = Schedule::new(1, 4, SchedType::Column);
+        let res = propagate(&comp, &members, &[(r, good)]).unwrap();
+        assert_eq!(res.blocks, Schedule::new(1, 4, SchedType::Column).blocks(&Shape::f32(&[8, 16])));
+    }
+
+    #[test]
+    fn full_reduce_needs_one_block() {
+        let mut b = GraphBuilder::new("fr");
+        let x = b.param("x", Shape::f32(&[32, 32]));
+        let e = b.exp(x);
+        let r = b.reduce(e, &[0, 1], ReduceKind::Sum);
+        let comp = b.finish(r);
+        let members: HashSet<InstrId> = [e, r].into_iter().collect();
+        let res = propagate(&comp, &members, &[(r, Schedule::fallback())]).unwrap();
+        assert_eq!(res.blocks, 1);
+        assert_eq!(res.assignment[&e], OpSchedule::Scheduled(Schedule::fallback()));
+    }
+
+    #[test]
+    fn transpose_row_passes_left_of_window() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.param("x", Shape::f32(&[8, 4, 16]));
+        let e = b.exp(x);
+        let t = b.transpose(e, &[0, 2, 1]); // dims 1,2 move
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [e, t].into_iter().collect();
+        // split_dim 0 < min_trans_dim 1: Row passes
+        let ok = Schedule::new(0, 8, SchedType::Row);
+        assert!(propagate(&comp, &members, &[(t, ok)]).is_ok());
+        // split_dim 1 inside the window: rejected
+        let bad = Schedule::new(1, 2, SchedType::Row);
+        assert!(propagate(&comp, &members, &[(t, bad)]).is_err());
+    }
+
+    #[test]
+    fn reshape_transforms_split() {
+        let mut b = GraphBuilder::new("rs");
+        let x = b.param("x", Shape::f32(&[8, 64]));
+        let e = b.exp(x);
+        let r = b.reshape(e, &[8, 8, 8]);
+        let t = b.tanh(r);
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [e, r, t].into_iter().collect();
+        // 8 blocks over the reshaped output → input split (0, 8) or (1, 1)...
+        let sched = Schedule::new(0, 8, SchedType::Row);
+        let res = propagate(&comp, &members, &[(t, sched)]).unwrap();
+        match res.assignment[&e] {
+            OpSchedule::Scheduled(s) => {
+                assert_eq!(s.blocks(&Shape::f32(&[8, 64])), 8);
+                assert_eq!(s.sched_type, SchedType::Row);
+            }
+            _ => panic!("exp should be scheduled"),
+        }
+    }
+
+    #[test]
+    fn reshape_rejects_unalignable_grid() {
+        let mut b = GraphBuilder::new("rs2");
+        let x = b.param("x", Shape::f32(&[7, 11]));
+        let e = b.exp(x);
+        let r = b.reshape(e, &[11, 7]);
+        let comp = b.finish(r);
+        let members: HashSet<InstrId> = [e, r].into_iter().collect();
+        // 11 blocks on the [11,7] output cannot split [7,11] rows evenly
+        // at any dim: 11 ∤ 7 and prefix 7 ∤ 11.
+        let sched = Schedule::new(0, 11, SchedType::Row);
+        assert!(propagate(&comp, &members, &[(r, sched)]).is_err());
+    }
+
+    #[test]
+    fn broadcast_unconstrains_new_dims() {
+        let mut b = GraphBuilder::new("bc");
+        let x = b.param("x", Shape::f32(&[64]));
+        let e = b.exp(x);
+        let bc = b.broadcast(e, &[8, 64], &[1]); // dim 0 is new
+        let t = b.tanh(bc);
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [e, bc, t].into_iter().collect();
+        let sched = Schedule::new(0, 8, SchedType::Row); // split the new dim
+        let res = propagate(&comp, &members, &[(t, sched)]).unwrap();
+        // exp feeds only the broadcast on an unsplit dim → inlined.
+        assert_eq!(res.assignment[&e], OpSchedule::Inlined);
+    }
+
+    #[test]
+    fn concat_split_must_avoid_joined_dim() {
+        let mut b = GraphBuilder::new("cc");
+        let x = b.param("x", Shape::f32(&[8, 16]));
+        let y = b.param("y", Shape::f32(&[8, 16]));
+        let ex = b.exp(x);
+        let ey = b.exp(y);
+        let c = b.concat(&[ex, ey], 1);
+        let comp = b.finish(c);
+        let members: HashSet<InstrId> = [ex, ey, c].into_iter().collect();
+        assert!(propagate(&comp, &members, &[(c, Schedule::new(0, 8, SchedType::Row))]).is_ok());
+        assert!(propagate(&comp, &members, &[(c, Schedule::new(1, 4, SchedType::Row))]).is_err());
+    }
+
+    #[test]
+    fn conflict_detected() {
+        // One producer consumed under two different demanded schedules.
+        let mut b = GraphBuilder::new("conflict");
+        let x = b.param("x", Shape::f32(&[4, 4, 16]));
+        let e = b.exp(x);
+        let r1 = b.reduce(e, &[2], ReduceKind::Sum); // [4,4]
+        let t = b.transpose(e, &[1, 0, 2]);
+        let r2 = b.reduce(t, &[2], ReduceKind::Sum); // [4,4]
+        let s = b.add(r1, r2);
+        let comp = b.finish(s);
+        let members: HashSet<InstrId> = [e, r1, t, r2, s].into_iter().collect();
+        // Splitting dim 0 of the sum: r1 demands e split at 0; r2 demands
+        // t split at 0 → e split at 1 (perm). Conflict at e.
+        let sched = Schedule::new(0, 4, SchedType::Row);
+        let err = propagate(&comp, &members, &[(s, sched)]);
+        assert!(matches!(err, Err(Unsatisfiable::Conflict(_)) | Err(Unsatisfiable::RuleViolation(_, _))));
+    }
+
+    #[test]
+    fn multi_root_grid_agreement() {
+        let mut b = GraphBuilder::new("mr");
+        let x = b.param("x", Shape::f32(&[16, 8]));
+        let e = b.exp(x);
+        let t = b.tanh(x);
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [e, t].into_iter().collect();
+        let ok = propagate(
+            &comp,
+            &members,
+            &[(e, Schedule::new(0, 4, SchedType::Row)), (t, Schedule::new(0, 4, SchedType::Row))],
+        );
+        assert!(ok.is_ok());
+        let bad = propagate(
+            &comp,
+            &members,
+            &[(e, Schedule::new(0, 4, SchedType::Row)), (t, Schedule::new(0, 2, SchedType::Row))],
+        );
+        assert!(bad.is_err());
+    }
+}

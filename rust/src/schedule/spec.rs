@@ -1,0 +1,189 @@
+//! Schedule specification — §4.1.
+//!
+//! A schedule on an instruction's output shape (its *work space*) is the
+//! triple `(split_dim, sword, sched_type)`:
+//!
+//! - `split_dim` — the dimension where the work space is split;
+//! - `sword` — how that dimension is partitioned (must divide its size);
+//! - `sched_type` — `Row` or `Column`.
+//!
+//! The schedule determines `blocks`, the number of thread blocks (CTAs):
+//! a `Row` schedule uses the dims on the left (more significant side) of
+//! `split_dim` times `sword` as the grid; a `Column` schedule mirrors
+//! this on the right (Fig. 5).
+
+use crate::hlo::Shape;
+use std::fmt;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchedType {
+    Row,
+    Column,
+}
+
+impl fmt::Display for SchedType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Schedule {
+    pub split_dim: usize,
+    pub sword: i64,
+    pub sched_type: SchedType,
+}
+
+impl Schedule {
+    pub fn new(split_dim: usize, sword: i64, sched_type: SchedType) -> Self {
+        Schedule { split_dim, sword, sched_type }
+    }
+
+    /// The always-valid fallback (§4.3): `split_dim = 0`, `sword = 1`,
+    /// Row — one thread block does everything.
+    pub fn fallback() -> Self {
+        Schedule::new(0, 1, SchedType::Row)
+    }
+
+    /// Is this schedule legal on `shape`?
+    pub fn is_valid_for(&self, shape: &Shape) -> bool {
+        if shape.rank() == 0 {
+            return self.split_dim == 0 && self.sword == 1;
+        }
+        self.split_dim < shape.rank()
+            && self.sword >= 1
+            && shape.dims[self.split_dim] % self.sword == 0
+    }
+
+    /// Number of thread blocks (grid size) this schedule launches.
+    ///
+    /// `Row`: `prod(dims[0..split_dim]) * sword` — the Fig. 5 C-code.
+    /// `Column`: `sword * prod(dims[split_dim+1..])`.
+    pub fn blocks(&self, shape: &Shape) -> u64 {
+        if shape.rank() == 0 {
+            return 1;
+        }
+        debug_assert!(self.is_valid_for(shape), "{self:?} invalid for {shape}");
+        let p: i64 = match self.sched_type {
+            SchedType::Row => shape.dims[..self.split_dim].iter().product(),
+            SchedType::Column => shape.dims[self.split_dim + 1..].iter().product(),
+        };
+        (p * self.sword).max(1) as u64
+    }
+
+    /// Elements each block processes.
+    pub fn chunk_elements(&self, shape: &Shape) -> i64 {
+        let b = self.blocks(shape) as i64;
+        (shape.num_elements() / b).max(1)
+    }
+
+    /// Enumerate the full legal schedule space on `shape` (§4.1: the
+    /// Cartesian product of legal `split_dim`, `sword`, `sched_type`
+    /// values). Small by construction — this is what keeps compilation
+    /// fast.
+    pub fn enumerate(shape: &Shape) -> Vec<Schedule> {
+        if shape.rank() == 0 {
+            return vec![Schedule::fallback()];
+        }
+        let mut out = Vec::new();
+        for sd in 0..shape.rank() {
+            for sword in divisors(shape.dims[sd]) {
+                for ty in [SchedType::Row, SchedType::Column] {
+                    out.push(Schedule::new(sd, sword, ty));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for Schedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "({}, {}, {})", self.split_dim, self.sword, self.sched_type)
+    }
+}
+
+/// All positive divisors of `n`, ascending. `divisors(0) = [1]` (degenerate
+/// dims appear in rank-reducing corner cases).
+pub fn divisors(n: i64) -> Vec<i64> {
+    if n <= 0 {
+        return vec![1];
+    }
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(7), vec![1, 7]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(0), vec![1]);
+    }
+
+    #[test]
+    fn blocks_row_and_column() {
+        let shape = Shape::f32(&[4, 6, 8]);
+        // Row, split at dim 1 with sword 3: blocks = 4 * 3 = 12
+        assert_eq!(Schedule::new(1, 3, SchedType::Row).blocks(&shape), 12);
+        // Column, split at dim 1 with sword 3: blocks = 3 * 8 = 24
+        assert_eq!(Schedule::new(1, 3, SchedType::Column).blocks(&shape), 24);
+        // fallback = single block
+        assert_eq!(Schedule::fallback().blocks(&shape), 1);
+    }
+
+    #[test]
+    fn chunk_times_blocks_covers_workspace() {
+        let shape = Shape::f32(&[4, 6, 8]);
+        for s in Schedule::enumerate(&shape) {
+            assert_eq!(
+                s.chunk_elements(&shape) * s.blocks(&shape) as i64,
+                shape.num_elements(),
+                "schedule {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn enumerate_counts() {
+        // dims [4,6]: (divisors(4)=3 + divisors(6)=4) * 2 types = 14
+        let shape = Shape::f32(&[4, 6]);
+        assert_eq!(Schedule::enumerate(&shape).len(), 14);
+        for s in Schedule::enumerate(&shape) {
+            assert!(s.is_valid_for(&shape));
+        }
+    }
+
+    #[test]
+    fn scalar_has_one_schedule() {
+        let shape = Shape::f32(&[]);
+        let e = Schedule::enumerate(&shape);
+        assert_eq!(e.len(), 1);
+        assert_eq!(e[0].blocks(&shape), 1);
+    }
+
+    #[test]
+    fn validity_requires_divisibility() {
+        let shape = Shape::f32(&[6]);
+        assert!(Schedule::new(0, 3, SchedType::Row).is_valid_for(&shape));
+        assert!(!Schedule::new(0, 4, SchedType::Row).is_valid_for(&shape));
+        assert!(!Schedule::new(1, 1, SchedType::Row).is_valid_for(&shape));
+    }
+}

@@ -1,0 +1,358 @@
+//! Schedule tuning — §4.3.
+//!
+//! Iterates the candidate schedules of the fusion root(s), tests each for
+//! satisfiability via [`super::propagate`], scores satisfiable ones by
+//! summing per-op kernel times from the performance library, and returns
+//! the best implementation plan.
+//!
+//! Implements both of the paper's optimizations:
+//! 1. computationally trivial shape-modulation ops are bypassed (inlined
+//!    via thread composition) rather than letting their strict shape
+//!    modulation reject good schedules — handled inside propagation and
+//!    by skipping `Inlined` members during scoring;
+//! 2. best-so-far pruning: scoring aborts as soon as the accumulated time
+//!    exceeds the current best.
+//!
+//! Multi-root computations use the two-stage search: stage one intersects
+//! the valid `blocks` sets of all roots; stage two only scores schedule
+//! combinations whose grid lies in the intersection.
+
+use super::perf_library::PerfLibrary;
+use super::propagate::{propagate, OpSchedule, PropagationResult};
+use super::spec::Schedule;
+use crate::hlo::{Computation, InstrId};
+use std::collections::{BTreeMap, BTreeSet, HashSet};
+
+/// Tuning knobs.
+#[derive(Debug, Clone)]
+pub struct TuningConfig {
+    /// Thread-block sizes to consider — multiples of the warp size in
+    /// `[1, 1024]` (§4.4).
+    pub thread_candidates: Vec<u32>,
+    /// Cap on root schedules examined per root (the schedule space is
+    /// small in practice; this is a safety bound for huge dims).
+    pub max_schedules_per_root: usize,
+}
+
+impl Default for TuningConfig {
+    fn default() -> Self {
+        TuningConfig { thread_candidates: vec![256, 512], max_schedules_per_root: 24 }
+    }
+}
+
+/// The tuned implementation plan handed to code generation: launch
+/// parameters plus the per-op schedule assignment.
+#[derive(Debug, Clone)]
+pub struct TunedPlan {
+    /// Chosen schedule per fusion root.
+    pub root_schedules: Vec<(InstrId, Schedule)>,
+    /// Per-member emitter assignment.
+    pub assignment: BTreeMap<InstrId, OpSchedule>,
+    /// Grid size (launch dimension).
+    pub blocks: u64,
+    /// Thread-block size (launch dimension).
+    pub threads: u32,
+    /// Estimated kernel execution time (sum of member op times — the
+    /// paper's accumulated-performance metric, §4.4 last paragraph).
+    pub est_exec_us: f64,
+}
+
+/// Tune the fused computation `members` with the given `roots`. Returns
+/// `None` when no root schedule satisfies the constraints — the signal
+/// `SchdConsistent` uses to reject a fusion candidate.
+pub fn tune(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    roots: &[InstrId],
+    lib: &mut PerfLibrary,
+    cfg: &TuningConfig,
+) -> Option<TunedPlan> {
+    if roots.is_empty() {
+        return None;
+    }
+    if roots.len() == 1 {
+        tune_single_root(comp, members, roots[0], lib, cfg)
+    } else {
+        tune_multi_root(comp, members, roots, lib, cfg)
+    }
+}
+
+fn candidate_schedules(comp: &Computation, root: InstrId, cap: usize) -> Vec<Schedule> {
+    let mut v = Schedule::enumerate(&comp.get(root).shape);
+    v.truncate(cap);
+    v
+}
+
+fn tune_single_root(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    root: InstrId,
+    lib: &mut PerfLibrary,
+    cfg: &TuningConfig,
+) -> Option<TunedPlan> {
+    let mut best: Option<TunedPlan> = None;
+    for sched in candidate_schedules(comp, root, cfg.max_schedules_per_root) {
+        let Ok(prop) = propagate(comp, members, &[(root, sched)]) else {
+            continue;
+        };
+        score_and_keep(comp, &[(root, sched)], &prop, lib, cfg, &mut best);
+    }
+    best
+}
+
+fn tune_multi_root(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    roots: &[InstrId],
+    lib: &mut PerfLibrary,
+    cfg: &TuningConfig,
+) -> Option<TunedPlan> {
+    // Stage 1: valid blocks set per root, then intersect (§4.3).
+    let mut per_root: Vec<Vec<(u64, Schedule)>> = Vec::with_capacity(roots.len());
+    let mut common: Option<BTreeSet<u64>> = None;
+    for &root in roots {
+        let shape = &comp.get(root).shape;
+        let cands: Vec<(u64, Schedule)> = candidate_schedules(comp, root, cfg.max_schedules_per_root)
+            .into_iter()
+            .map(|s| (s.blocks(shape), s))
+            .collect();
+        let blocks: BTreeSet<u64> = cands.iter().map(|(b, _)| *b).collect();
+        common = Some(match common {
+            None => blocks,
+            Some(c) => c.intersection(&blocks).copied().collect(),
+        });
+        per_root.push(cands);
+    }
+    let common = common?;
+
+    // Stage 2: iterate grids in the agreed blocks set; for each grid take
+    // each root's candidate schedules at that grid. To keep the
+    // combination count bounded we pair schedules positionally per grid
+    // (first-valid per root first), scoring with best-so-far pruning.
+    let mut best: Option<TunedPlan> = None;
+    for &b in common.iter().rev() {
+        // prefer larger grids first: tends to reach good plans (and thus
+        // effective pruning) sooner
+        let lists: Vec<Vec<Schedule>> = per_root
+            .iter()
+            .map(|cands| cands.iter().filter(|(bb, _)| *bb == b).map(|(_, s)| *s).collect())
+            .collect();
+        if lists.iter().any(|l: &Vec<Schedule>| l.is_empty()) {
+            continue;
+        }
+        let max_len = lists.iter().map(Vec::len).max().unwrap();
+        for k in 0..max_len {
+            let combo: Vec<(InstrId, Schedule)> = roots
+                .iter()
+                .zip(&lists)
+                .map(|(&r, l)| (r, l[k.min(l.len() - 1)]))
+                .collect();
+            let Ok(prop) = propagate(comp, members, &combo) else {
+                continue;
+            };
+            score_and_keep(comp, &combo, &prop, lib, cfg, &mut best);
+        }
+    }
+    best
+}
+
+/// Score one satisfiable plan across thread-candidate sizes, with the
+/// paper's best-so-far pruning, updating `best` in place.
+fn score_and_keep(
+    comp: &Computation,
+    root_schedules: &[(InstrId, Schedule)],
+    prop: &PropagationResult,
+    lib: &mut PerfLibrary,
+    cfg: &TuningConfig,
+    best: &mut Option<TunedPlan>,
+) {
+    for &threads in &cfg.thread_candidates {
+        let budget = best.as_ref().map(|b| b.est_exec_us).unwrap_or(f64::INFINITY);
+        let mut total = 0.0;
+        let mut pruned = false;
+        for (&id, st) in &prop.assignment {
+            if let OpSchedule::Scheduled(s) = st {
+                // Trivial modulation ops are ignored during evaluation
+                // (§4.3 optimization 1) even when scheduled.
+                if comp.get(id).opcode.is_trivially_inlinable() {
+                    continue;
+                }
+                total += lib.lookup(comp, id, *s, threads);
+                if total >= budget {
+                    pruned = true; // §4.3 optimization 2
+                    break;
+                }
+            }
+        }
+        if !pruned && total < budget {
+            *best = Some(TunedPlan {
+                root_schedules: root_schedules.to_vec(),
+                assignment: prop.assignment.clone(),
+                blocks: prop.blocks,
+                threads,
+                est_exec_us: total,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::DeviceConfig;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    fn members_of(comp: &Computation) -> HashSet<InstrId> {
+        comp.ids().filter(|&i| !comp.get(i).opcode.is_free()).collect()
+    }
+
+    #[test]
+    fn fallback_always_tunable() {
+        // Any fused computation admits the (0, 1, Row) schedule (§4.3),
+        // so tuning a well-formed group must succeed.
+        let mut b = GraphBuilder::new("fb");
+        let x = b.param("x", Shape::f32(&[32, 16]));
+        let e = b.exp(x);
+        let r = b.reduce(e, &[0, 1], ReduceKind::Sum); // full reduce: 1 block only
+        let comp = b.finish(r);
+        let plan =
+            tune(&comp, &members_of(&comp), &[r], &mut PerfLibrary::new(DeviceConfig::pascal()), &TuningConfig::default())
+                .expect("fallback must exist");
+        assert_eq!(plan.blocks, 1);
+    }
+
+    #[test]
+    fn tuner_prefers_parallel_grids() {
+        let mut b = GraphBuilder::new("par");
+        let x = b.param("x", Shape::f32(&[512, 1024]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let comp = b.finish(t);
+        let plan = tune(
+            &comp,
+            &members_of(&comp),
+            &[t],
+            &mut PerfLibrary::new(DeviceConfig::pascal()),
+            &TuningConfig::default(),
+        )
+        .unwrap();
+        assert!(plan.blocks > 16, "expected a parallel grid, got {}", plan.blocks);
+    }
+
+    #[test]
+    fn tuner_picks_row_for_minor_reduce() {
+        let mut b = GraphBuilder::new("rr");
+        let x = b.param("x", Shape::f32(&[256, 2048]));
+        let e = b.mul(x, x);
+        let r = b.reduce(e, &[1], ReduceKind::Sum);
+        let comp = b.finish(r);
+        let plan = tune(
+            &comp,
+            &members_of(&comp),
+            &[r],
+            &mut PerfLibrary::new(DeviceConfig::pascal()),
+            &TuningConfig::default(),
+        )
+        .unwrap();
+        let (_, s) = plan.root_schedules[0];
+        assert_eq!(s.sched_type, super::super::spec::SchedType::Row);
+    }
+
+    #[test]
+    fn multi_root_agrees_on_grid() {
+        // Two independent elementwise chains fused by ElementwiseFusion:
+        // same output shapes → blocks sets intersect richly.
+        let mut b = GraphBuilder::new("mr");
+        let x = b.param("x", Shape::f32(&[128, 64]));
+        let y = b.param("y", Shape::f32(&[128, 64]));
+        let e = b.exp(x);
+        let t = b.tanh(y);
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [e, t].into_iter().collect();
+        let plan = tune(
+            &comp,
+            &members,
+            &[e, t],
+            &mut PerfLibrary::new(DeviceConfig::pascal()),
+            &TuningConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(plan.root_schedules.len(), 2);
+        let s0 = plan.root_schedules[0].1;
+        let s1 = plan.root_schedules[1].1;
+        assert_eq!(
+            s0.blocks(&comp.get(e).shape),
+            s1.blocks(&comp.get(t).shape),
+            "grids must agree"
+        );
+        assert!(plan.blocks >= 1);
+    }
+
+    #[test]
+    fn multi_root_mismatched_shapes_still_intersect_at_common_grids() {
+        let mut b = GraphBuilder::new("mm");
+        let x = b.param("x", Shape::f32(&[96, 8]));
+        let y = b.param("y", Shape::f32(&[64, 32]));
+        let e = b.exp(x);
+        let t = b.tanh(y);
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [e, t].into_iter().collect();
+        let plan = tune(
+            &comp,
+            &members,
+            &[e, t],
+            &mut PerfLibrary::new(DeviceConfig::pascal()),
+            &TuningConfig::default(),
+        );
+        // 96 and 64 share divisors {1,2,4,8,16,32,96*...}: grids like 32
+        // exist, so tuning succeeds.
+        assert!(plan.is_some());
+    }
+
+    #[test]
+    fn unsatisfiable_group_returns_none() {
+        // A slice consuming an in-group producer can't block-compose.
+        let mut b = GraphBuilder::new("bad");
+        let x = b.param("x", Shape::f32(&[16, 16]));
+        let e = b.exp(x);
+        let s = b.slice(e, &[0, 0], &[8, 16]);
+        let t = b.tanh(s);
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [e, s, t].into_iter().collect();
+        let plan = tune(
+            &comp,
+            &members,
+            &[t],
+            &mut PerfLibrary::new(DeviceConfig::pascal()),
+            &TuningConfig::default(),
+        );
+        // e is only reachable through the slice, which unconstrains it →
+        // e (non-trivial) is inlined; plan may exist. What must hold: if
+        // a plan exists, the slice is never Scheduled with its own loop
+        // over an in-group producer.
+        if let Some(p) = plan {
+            // slice itself may be scheduled (it reads DRAM-visible data
+            // only if e were external — e is in-group, so e must be
+            // Inlined in the plan)
+            assert_eq!(p.assignment.get(&e), Some(&OpSchedule::Inlined));
+        }
+    }
+
+    #[test]
+    fn est_time_is_positive_and_bounded() {
+        let mut b = GraphBuilder::new("est");
+        let x = b.param("x", Shape::f32(&[64, 64]));
+        let e = b.exp(x);
+        let comp = b.finish(e);
+        let plan = tune(
+            &comp,
+            &members_of(&comp),
+            &[e],
+            &mut PerfLibrary::new(DeviceConfig::pascal()),
+            &TuningConfig::default(),
+        )
+        .unwrap();
+        assert!(plan.est_exec_us > 0.0 && plan.est_exec_us < 1e6);
+    }
+}

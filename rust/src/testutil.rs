@@ -1,0 +1,217 @@
+//! Test utilities: a deterministic PRNG (this image has no `rand` /
+//! `proptest`), random graph generators for property-style tests, and a
+//! self-cleaning temp dir.
+//!
+//! The property tests in `rust/tests/` draw hundreds of random graphs
+//! from [`GraphGen`] and assert pipeline invariants over each — the same
+//! methodology proptest would give us, with an explicit seed for
+//! reproducibility.
+
+use crate::hlo::instruction::ReduceKind;
+use crate::hlo::{Computation, GraphBuilder, InstrId, Shape};
+use std::path::PathBuf;
+
+/// xorshift64* — deterministic, seedable, good enough for test-case
+/// generation.
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng(seed.max(1))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        (self.next_u64() as f64 / u64::MAX as f64) < p
+    }
+
+    /// Pick a random element.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.next_u64() as f64 / u64::MAX as f64
+    }
+}
+
+/// Random-graph generator: builds well-formed computations mixing the
+/// paper's four op categories, for property-style testing of the whole
+/// pipeline.
+pub struct GraphGen {
+    pub rng: Rng,
+    /// Max instructions per generated graph.
+    pub max_ops: usize,
+    /// Probability of emitting a library call (dot).
+    pub p_library: f64,
+}
+
+impl GraphGen {
+    pub fn new(seed: u64) -> Self {
+        GraphGen { rng: Rng::new(seed), max_ops: 24, p_library: 0.08 }
+    }
+
+    /// Generate one random computation. All graphs are valid (built via
+    /// the shape-inferring builder) and end in a single root.
+    pub fn gen(&mut self) -> Computation {
+        let rng = &mut self.rng;
+        let mut b = GraphBuilder::new("prop");
+        let base_dims: Vec<i64> = match rng.below(3) {
+            0 => vec![rng.range(2, 8) as i64 * 2, rng.range(8, 64) as i64],
+            1 => vec![
+                rng.range(2, 4) as i64 * 2,
+                rng.range(4, 16) as i64,
+                rng.range(8, 32) as i64 * 2,
+            ],
+            _ => vec![rng.range(16, 256) as i64 * 2],
+        };
+        let p0 = b.param("p0", Shape::f32(&base_dims));
+        let p1 = b.param("p1", Shape::f32(&base_dims));
+        // pool of same-shape values we can combine elementwise
+        let mut pool: Vec<InstrId> = vec![p0, p1];
+        let mut last = p0;
+        let n_ops = rng.range(3, self.max_ops);
+        for _ in 0..n_ops {
+            let v = *rng.pick(&pool);
+            let w = *rng.pick(&pool);
+            let dims = b.peek().get(v).shape.dims.clone();
+            let rank = dims.len();
+            let choice = rng.below(10);
+            let out = match choice {
+                0 => b.add(v, w),
+                1 => b.mul(v, w),
+                2 => b.exp(v),
+                3 => b.tanh(v),
+                4 => b.div(v, w),
+                5 if rank >= 2 => {
+                    // transpose then transpose back keeps shapes poolable
+                    let mut perm: Vec<usize> = (0..rank).collect();
+                    perm.swap(rank - 2, rank - 1);
+                    let t = b.transpose(v, &perm);
+                    b.transpose(t, &perm)
+                }
+                6 if rank >= 2 => {
+                    // reduce minor dim then broadcast back
+                    let r = b.reduce(v, &[rank - 1], ReduceKind::Sum);
+                    let bdims: Vec<usize> = (0..rank - 1).collect();
+                    b.broadcast(r, &dims, &bdims)
+                }
+                7 => {
+                    let flat: i64 = dims.iter().product();
+                    let r = b.reshape(v, &[flat]);
+                    b.reshape(r, &dims)
+                }
+                8 => b.max(v, w),
+                _ => b.sub(v, w),
+            };
+            pool.push(out);
+            last = out;
+        }
+        // occasional library call at the end (LC-layer)
+        if rng.chance(self.p_library) {
+            let d = b.peek().get(last).shape.dims.clone();
+            if d.len() == 2 {
+                let wshape = Shape::f32(&[d[1], d[1]]);
+                let wparam = b.param("w", wshape);
+                last = b.dot(last, wparam);
+            }
+        }
+        let t = b.tanh(last);
+        b.finish(t)
+    }
+}
+
+/// A temp directory removed on drop.
+pub struct TempDir(PathBuf);
+
+impl TempDir {
+    pub fn new(tag: &str) -> Self {
+        let mut p = std::env::temp_dir();
+        let unique = format!(
+            "fs-{tag}-{}-{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        );
+        p.push(unique);
+        std::fs::create_dir_all(&p).expect("create temp dir");
+        TempDir(p)
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::verifier::verify_computation;
+
+    #[test]
+    fn rng_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_range_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.range(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn generated_graphs_verify() {
+        let mut g = GraphGen::new(123);
+        for _ in 0..50 {
+            let c = g.gen();
+            verify_computation(&c).unwrap();
+            assert!(c.len() >= 5);
+        }
+    }
+
+    #[test]
+    fn tempdir_cleans_up() {
+        let p;
+        {
+            let d = TempDir::new("t");
+            p = d.path().to_path_buf();
+            std::fs::write(p.join("x"), "y").unwrap();
+        }
+        assert!(!p.exists());
+    }
+}

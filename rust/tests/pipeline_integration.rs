@@ -1,0 +1,211 @@
+//! Integration tests: the full pipeline (fusion → scheduling → shm →
+//! codegen → simulation) over every Table 2 benchmark, under both
+//! fusion modes, checking the paper's cross-cutting invariants.
+
+use fusion_stitching::codegen::emitter::emit_group;
+use fusion_stitching::coordinator::pipeline::{
+    compile_module, evaluate, geomean, FusionMode, PipelineConfig,
+};
+use fusion_stitching::fusion::GroupKind;
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::models;
+use fusion_stitching::schedule::{tune, PerfLibrary, TuningConfig};
+
+fn setup() -> (PerfLibrary, PipelineConfig) {
+    (PerfLibrary::new(DeviceConfig::pascal()), PipelineConfig::default())
+}
+
+#[test]
+fn all_benchmarks_compile_under_both_modes() {
+    let (mut lib, cfg) = setup();
+    for (meta, module) in models::all_benchmarks() {
+        let mut cfg = cfg.clone();
+        cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        for mode in [FusionMode::XlaBaseline, FusionMode::FusionStitching] {
+            let compiled = compile_module(&module, mode, &mut lib, &cfg)
+                .unwrap_or_else(|e| panic!("{} {mode:?}: {e:#}", meta.name));
+            compiled.plan.validate(&module.entry).unwrap();
+            assert!(compiled.timing.total_us() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn fusion_never_increases_kernel_count() {
+    let (mut lib, cfg) = setup();
+    for (meta, module) in models::all_benchmarks() {
+        let mut cfg = cfg.clone();
+        cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        let base = compile_module(&module, FusionMode::XlaBaseline, &mut lib, &cfg).unwrap();
+        let fs =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        let b = base.plan.generated_kernel_count(&module.entry);
+        let f = fs.plan.generated_kernel_count(&module.entry);
+        assert!(f <= b, "{}: FS {f} > baseline {b}", meta.name);
+        // and the unfused graph is an upper bound for both
+        assert!(b <= module.entry.unfused_kernel_count());
+    }
+}
+
+#[test]
+fn library_kernels_identical_across_modes() {
+    // Fusion never touches library calls (§3.2).
+    let (mut lib, cfg) = setup();
+    for (meta, module) in models::all_benchmarks() {
+        let base = compile_module(&module, FusionMode::XlaBaseline, &mut lib, &cfg).unwrap();
+        let fs =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        assert_eq!(
+            base.plan.library_call_count(),
+            fs.plan.library_call_count(),
+            "{}",
+            meta.name
+        );
+    }
+}
+
+#[test]
+fn shared_memory_budget_respected_everywhere() {
+    let (mut lib, cfg) = setup();
+    let limit = cfg.deep.device.shared_mem_kernel_limit;
+    for (meta, module) in models::all_benchmarks() {
+        let fs =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        for k in &fs.kernels {
+            assert!(
+                k.shm.total_bytes <= limit,
+                "{}: kernel {} uses {} B > {limit} B",
+                meta.name,
+                k.name,
+                k.shm.total_bytes
+            );
+        }
+    }
+}
+
+#[test]
+fn emitted_ir_is_well_formed() {
+    // Every shared write is followed by a barrier; every root writes
+    // global memory; launch dims appear in the header.
+    let (mut lib, cfg) = setup();
+    for (meta, module) in models::all_benchmarks() {
+        let fs =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        for k in &fs.kernels {
+            let text = k.ir_text();
+            assert_eq!(
+                text.matches("EmitWriteSharedArray").count(),
+                text.matches("__syncthreads").count(),
+                "{}: barrier/write mismatch in {}",
+                meta.name,
+                k.name
+            );
+            assert!(
+                text.contains("EmitWriteOutputArray"),
+                "{}: kernel {} has no global output",
+                meta.name,
+                k.name
+            );
+            assert!(text.contains(&format!("<<<{}, {}>>>", k.blocks, k.threads)));
+        }
+    }
+}
+
+#[test]
+fn stitched_groups_have_interior_heavy_ops() {
+    // GroupKind::Stitched ⟺ a reduce/batch-dot is interior (non-root).
+    let (mut lib, cfg) = setup();
+    for (meta, module) in models::all_benchmarks() {
+        let fs =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        for g in &fs.plan.groups {
+            if g.kind != GroupKind::Stitched {
+                continue;
+            }
+            let interior_heavy = g.members.iter().any(|&id| {
+                let i = module.entry.get(id);
+                let heavy = i.opcode.is_reduce()
+                    || i.opcode == fusion_stitching::hlo::Opcode::BatchDot;
+                heavy && module.entry.users(id).iter().any(|u| g.members.contains(u))
+            });
+            assert!(interior_heavy, "{}: stitched group without interior heavy op", meta.name);
+        }
+    }
+}
+
+#[test]
+fn paper_headline_shapes_hold() {
+    let (mut lib, cfg) = setup();
+    let mut ratios = Vec::new();
+    let mut reports = Vec::new();
+    for (meta, module) in models::all_benchmarks() {
+        let r = evaluate(&meta, &module, &mut lib, &cfg).unwrap();
+        ratios.push(r.fusion_ratio);
+        reports.push(r);
+    }
+    // headline: large kernel-launch reduction (paper: geomean 0.45)
+    let g = geomean(ratios.iter().copied());
+    assert!(g < 0.75, "geomean fusion ratio {g}");
+    // W2V is the least fusable (paper: 0.82, the highest ratio)
+    let w2v = reports.iter().find(|r| r.name == "W2V").unwrap();
+    assert!(
+        reports.iter().all(|r| r.fusion_ratio <= w2v.fusion_ratio + 1e-9),
+        "W2V should have the highest fusion ratio"
+    );
+    // all speedups ≥ 1, prediction tracks measurement (Fig. 8)
+    for r in &reports {
+        assert!(r.fusion_speedup >= 1.0, "{}", r.name);
+        assert!(r.measured_e2e >= 1.0, "{}", r.name);
+        assert!((r.predicted_e2e - r.measured_e2e).abs() / r.measured_e2e < 0.40, "{}", r.name);
+    }
+    // NMT exhibits buffer reuse (Table 3's shared ratio)
+    let nmt = reports.iter().find(|r| r.name == "NMT").unwrap();
+    assert!(nmt.shm_shared_ratio > 0.0);
+}
+
+#[test]
+fn perf_library_amortizes_across_compilations() {
+    let (mut lib, cfg) = setup();
+    for (_, module) in models::all_benchmarks() {
+        let _ = compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+    }
+    let after_first = lib.len();
+    for (_, module) in models::all_benchmarks() {
+        let _ = compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+    }
+    assert_eq!(lib.len(), after_first, "second pass must be all hits");
+    assert!(lib.hit_rate() > 0.5);
+}
+
+#[test]
+fn group_emission_is_deterministic() {
+    let (mut lib, cfg) = setup();
+    let (_, module) = models::by_name("NMT").unwrap();
+    let a = compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+    let b = compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+    let ta: Vec<String> = a.kernels.iter().map(|k| k.ir_text()).collect();
+    let tb: Vec<String> = b.kernels.iter().map(|k| k.ir_text()).collect();
+    assert_eq!(ta, tb, "compilation must be deterministic");
+}
+
+#[test]
+fn manual_group_tune_and_emit_roundtrip() {
+    // Drive tune + emit directly on a benchmark subgraph (API-level use).
+    let (_, module) = models::by_name("LR").unwrap();
+    let comp = &module.entry;
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    // largest FS group from the plan
+    let fs = compile_module(&module, FusionMode::FusionStitching, &mut lib, &PipelineConfig::default()).unwrap();
+    let g = fs
+        .plan
+        .groups
+        .iter()
+        .filter(|g| g.kind != GroupKind::Library)
+        .max_by_key(|g| g.members.len())
+        .unwrap();
+    let tuned = tune(comp, &g.members, &g.roots, &mut lib, &TuningConfig::default()).unwrap();
+    let plan = emit_group(comp, &g.members, &g.roots, &tuned, &DeviceConfig::pascal(), "manual")
+        .unwrap();
+    assert_eq!(plan.blocks, tuned.blocks);
+    assert!(!plan.ops.is_empty());
+}

@@ -1,0 +1,211 @@
+//! Property-style tests: pipeline invariants over hundreds of random
+//! graphs drawn from the deterministic generator in
+//! `fusion_stitching::testutil` (proptest is unavailable in this offline
+//! image; the methodology is the same, with explicit seeds for
+//! reproducibility).
+
+use fusion_stitching::analysis::{DominatorTree, SpanAnalysis};
+use fusion_stitching::coordinator::pipeline::{compile_module, FusionMode, PipelineConfig};
+use fusion_stitching::fusion::{deep_fusion, xla_baseline_fusion, DeepFusionConfig};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::printer::print_module;
+use fusion_stitching::hlo::{parser::parse_module, verifier::verify_computation, Module};
+use fusion_stitching::schedule::{propagate, OpSchedule, PerfLibrary, Schedule};
+use fusion_stitching::testutil::GraphGen;
+
+const CASES: usize = 120;
+
+#[test]
+fn prop_both_fusion_passes_produce_valid_partitions() {
+    let mut gen = GraphGen::new(0xF00D);
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    for case in 0..CASES {
+        let comp = gen.gen();
+        verify_computation(&comp).unwrap();
+        let base = xla_baseline_fusion(&comp);
+        base.validate(&comp).unwrap_or_else(|e| panic!("case {case} baseline: {e:#}"));
+        let (deep, _) = deep_fusion(&comp, &mut lib, &DeepFusionConfig::default());
+        deep.validate(&comp).unwrap_or_else(|e| panic!("case {case} deep: {e:#}"));
+        // fusion monotonicity
+        assert!(
+            deep.generated_kernel_count(&comp) <= comp.unfused_kernel_count(),
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_deep_fusion_never_beats_baseline_on_launches_backwards() {
+    // Deep fusion's kernel count is ≤ the baseline's on every graph.
+    let mut gen = GraphGen::new(0xBEEF);
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    for case in 0..CASES {
+        let comp = gen.gen();
+        let base = xla_baseline_fusion(&comp).generated_kernel_count(&comp);
+        let (deep, _) = deep_fusion(&comp, &mut lib, &DeepFusionConfig::default());
+        let d = deep.generated_kernel_count(&comp);
+        assert!(d <= base, "case {case}: deep {d} > baseline {base}");
+    }
+}
+
+#[test]
+fn prop_schedule_propagation_agrees_on_grid() {
+    // For every deep-fusion group with a sound plan, all scheduled
+    // members share the group's block count (the block-composition
+    // precondition).
+    let mut gen = GraphGen::new(0xCAFE);
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let cfg = PipelineConfig::default();
+    for case in 0..60 {
+        let comp = gen.gen();
+        let module = Module::new(format!("prop{case}"), comp);
+        let compiled =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        for (gid, kernel) in compiled.generated_group_ids.iter().zip(&compiled.kernels) {
+            let group = &compiled.plan.groups[*gid];
+            let roots: Vec<_> = group
+                .roots
+                .iter()
+                .map(|&r| (r, pick_root_schedule(kernel.blocks, &module, r)))
+                .collect();
+            let _ = roots; // grid agreement is enforced below via emitter state
+            for op in &kernel.ops {
+                if let fusion_stitching::codegen::kernel_plan::EmitterKind::Stitched(s) =
+                    &op.emitter
+                {
+                    let shape = &module.entry.get(op.id).shape;
+                    assert_eq!(
+                        s.blocks(shape),
+                        kernel.blocks,
+                        "case {case}: op {} grid disagrees",
+                        op.id
+                    );
+                }
+            }
+        }
+    }
+}
+
+fn pick_root_schedule(_blocks: u64, _m: &Module, _r: fusion_stitching::hlo::InstrId) -> () {}
+
+#[test]
+fn prop_propagation_fallback_always_satisfiable() {
+    // §4.3: the (0,1,Row) single-block schedule is valid for ANY fused
+    // computation whose members are fusable and connected to the root.
+    let mut gen = GraphGen::new(0xABCD);
+    for _ in 0..CASES {
+        let comp = gen.gen();
+        // take the root's producer-closure restricted to fusable ops
+        let root = comp.root();
+        if !comp.get(root).opcode.is_fusable() {
+            continue;
+        }
+        let mut members = std::collections::HashSet::new();
+        let mut stack = vec![root];
+        while let Some(id) = stack.pop() {
+            if !comp.get(id).opcode.is_fusable() || !members.insert(id) {
+                continue;
+            }
+            for &op in &comp.get(id).operands {
+                if comp.get(op).opcode.is_fusable() && !comp.get(op).opcode.is_free() {
+                    stack.push(op);
+                }
+            }
+        }
+        members.retain(|&id| comp.depends_on(root, id));
+        let res = propagate(&comp, &members, &[(root, Schedule::fallback())]);
+        let prop = res.expect("fallback schedule must satisfy any connected group");
+        assert_eq!(prop.blocks, 1);
+        for st in prop.assignment.values() {
+            if let OpSchedule::Scheduled(s) = st {
+                assert_eq!(s.sword, 1);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_parser_roundtrips_random_graphs() {
+    let mut gen = GraphGen::new(0x5EED);
+    for case in 0..CASES {
+        let comp = gen.gen();
+        let module = Module::new(format!("rt{case}"), comp);
+        let text = print_module(&module);
+        let parsed = parse_module(&text).unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        assert_eq!(parsed.entry.len(), module.entry.len());
+        for id in module.entry.ids() {
+            let a = module.entry.get(id);
+            let b = parsed.entry.get(id);
+            assert_eq!(a.opcode, b.opcode, "case {case} at {id}");
+            assert_eq!(a.shape, b.shape, "case {case} at {id}");
+            assert_eq!(a.operands, b.operands, "case {case} at {id}");
+        }
+        // and the reparse verifies
+        verify_computation(&parsed.entry).unwrap();
+    }
+}
+
+#[test]
+fn prop_span_layers_are_antichains() {
+    // No data dependence within a (frame, span) layer.
+    let mut gen = GraphGen::new(0x1234);
+    for _ in 0..CASES {
+        let comp = gen.gen();
+        let spans = SpanAnalysis::run(&comp);
+        for frame in spans.frames() {
+            for s in 0..=spans.critical_path(frame) {
+                let layer = spans.layer(frame, s);
+                for &a in layer {
+                    for &op in &comp.get(a).operands {
+                        if comp.get(op).frame == frame {
+                            assert_ne!(
+                                spans.span_of(op),
+                                s,
+                                "operand in same layer as user"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_dominance_is_a_partial_order_on_chains() {
+    let mut gen = GraphGen::new(0x9999);
+    for _ in 0..40 {
+        let comp = gen.gen();
+        let root = comp.root();
+        let dt = DominatorTree::build(&comp, root, None);
+        for id in dt.nodes() {
+            // root dominates everything reachable; reflexivity holds.
+            assert!(dt.dominates(root, id));
+            assert!(dt.dominates(id, id));
+            // idom is itself a dominator
+            if let Some(d) = dt.idom(id) {
+                assert!(dt.dominates(d, id));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_shm_plans_respect_budget_or_reject() {
+    // compile_module either produces kernels within the budget, or the
+    // feedback loop rejected the grouping earlier — never an over-budget
+    // kernel.
+    let mut gen = GraphGen::new(0x7777);
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let cfg = PipelineConfig::default();
+    let limit = cfg.deep.device.shared_mem_kernel_limit;
+    for case in 0..60 {
+        let comp = gen.gen();
+        let module = Module::new(format!("shm{case}"), comp);
+        let compiled =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        for k in &compiled.kernels {
+            assert!(k.shm.total_bytes <= limit, "case {case}: {} B", k.shm.total_bytes);
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Runtime integration against the real AOT artifacts (skipped cleanly
+//! when `make artifacts` has not run — CI runs it first via `make test`).
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::{ServerConfig, ServingCoordinator};
+use fusion_stitching::runtime::Engine;
+use std::path::Path;
+use std::time::Duration;
+
+const BATCH: usize = 8;
+const SEQ: usize = 64;
+const MODEL: usize = 512;
+const DIM: usize = 64;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new("artifacts");
+    if p.join("attention_fused.hlo.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn engine_loads_all_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    let stems = engine.load_all().unwrap();
+    for want in
+        ["attention_fused", "attention_unfused", "layernorm_fused", "layernorm_unfused"]
+    {
+        assert!(stems.iter().any(|s| s == want), "missing artifact {want}");
+    }
+}
+
+#[test]
+fn fused_and_unfused_attention_agree_numerically() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    engine.load("attention_fused").unwrap();
+    engine.load("attention_unfused").unwrap();
+    let input: Vec<f32> =
+        (0..BATCH * SEQ * MODEL).map(|i| ((i % 601) as f32 / 601.0) - 0.5).collect();
+    let dims = [(BATCH * SEQ) as i64, MODEL as i64];
+    let fused = engine.get("attention_fused").unwrap().run_f32(&[(&input, &dims)]).unwrap();
+    let unfused =
+        engine.get("attention_unfused").unwrap().run_f32(&[(&input, &dims)]).unwrap();
+    assert_eq!(fused[0].len(), BATCH * SEQ * DIM);
+    let max_diff = fused[0]
+        .iter()
+        .zip(&unfused[0])
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "stitched kernel diverged: {max_diff}");
+    assert!(fused[0].iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn layernorm_artifacts_agree() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(dir).unwrap();
+    engine.load("layernorm_fused").unwrap();
+    engine.load("layernorm_unfused").unwrap();
+    let (rows, d) = (256usize, 512usize);
+    let input: Vec<f32> = (0..rows * d).map(|i| ((i % 37) as f32) * 0.1).collect();
+    let dims = [rows as i64, d as i64];
+    let a = engine.get("layernorm_fused").unwrap().run_f32(&[(&input, &dims)]).unwrap();
+    let b = engine.get("layernorm_unfused").unwrap().run_f32(&[(&input, &dims)]).unwrap();
+    let max_diff =
+        a[0].iter().zip(&b[0]).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+    assert!(max_diff < 1e-3, "layernorm diverged: {max_diff}");
+}
+
+#[test]
+fn serving_loop_runs_real_artifact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let srv = ServingCoordinator::start(
+        dir,
+        ServerConfig {
+            artifact: "attention_fused".into(),
+            batch: BATCH,
+            in_elems_per_request: SEQ * MODEL,
+            out_elems_per_request: SEQ * DIM,
+            input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
+            policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(1) },
+        },
+    )
+    .unwrap();
+    let pending: Vec<_> = (0..16)
+        .map(|i| srv.infer_async(vec![0.05 * i as f32; SEQ * MODEL]).unwrap())
+        .collect();
+    for rx in pending {
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.len(), SEQ * DIM);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+    let stats = srv.shutdown().unwrap();
+    assert_eq!(stats.requests, 16);
+    assert!(stats.batches <= 16);
+}
