@@ -1,0 +1,19 @@
+# Convenience targets; everything also works via plain cargo / python.
+
+.PHONY: build test bench artifacts doc
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench
+
+doc:
+	cargo doc --no-deps
+
+# AOT-lower the JAX/Pallas layers to HLO-text artifacts (needs jax).
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts

@@ -42,6 +42,7 @@ fn serve(artifact: &str) -> anyhow::Result<(Vec<Vec<f32>>, LatencyRecorder, f64)
         out_elems_per_request: SEQ * DIM,
         input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
         policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
+        compile: None,
     };
     let srv = ServingCoordinator::start(Path::new("artifacts"), cfg)?;
     let _ = srv.infer(request(0))?; // warmup: first execute pays PJRT JIT

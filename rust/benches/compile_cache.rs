@@ -1,0 +1,62 @@
+//! Compile-once serving bench: cold pipeline compile vs. compilation-
+//! cache hit, per model (LR, RNN, NMT — the paper's serving-relevant
+//! spread: small training graph, loopy training graph, the inference
+//! workload).
+//!
+//! The acceptance bar for the cache: a hit (same module fingerprint +
+//! fusion mode + device) must skip fusion/tuning/emission entirely and
+//! come back ≥ 10× faster than the cold path.
+
+#[path = "bench_util.rs"]
+mod bench_util;
+
+use bench_util::time_it;
+use fusion_stitching::coordinator::cache::CompileService;
+use fusion_stitching::coordinator::pipeline::{FusionMode, PipelineConfig};
+use fusion_stitching::models;
+use std::time::Instant;
+
+fn main() {
+    println!("== compile cache: cold pipeline vs cache hit ==");
+    println!(
+        "{:<8} {:>7} {:>12} {:>12} {:>10}",
+        "model", "ops", "cold", "cached", "speedup"
+    );
+    let mut worst_speedup = f64::INFINITY;
+    for name in ["LR", "RNN", "NMT"] {
+        let (meta, module) = models::by_name(name).unwrap();
+        let mut cfg = PipelineConfig::default();
+        cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        let mut svc = CompileService::new(cfg);
+
+        let t0 = Instant::now();
+        let (_, hit) = svc.compile(&module, FusionMode::FusionStitching).unwrap();
+        let cold = t0.elapsed();
+        assert!(!hit, "first compile must be cold");
+
+        let (_, cached_best) = time_it(3, 50, || {
+            let (artifact, hit) = svc.compile(&module, FusionMode::FusionStitching).unwrap();
+            assert!(hit, "repeat compile must hit the cache");
+            artifact
+        });
+
+        let speedup = cold.as_secs_f64() / cached_best.as_secs_f64().max(1e-9);
+        worst_speedup = worst_speedup.min(speedup);
+        println!(
+            "{:<8} {:>7} {:>10.2}ms {:>10.2}us {:>9.0}x",
+            meta.name,
+            module.entry.len(),
+            cold.as_secs_f64() * 1e3,
+            cached_best.as_secs_f64() * 1e6,
+            speedup
+        );
+        let stats = svc.stats();
+        assert_eq!(stats.misses, 1);
+        assert!(stats.hits >= 50);
+    }
+    println!("worst-case speedup: {worst_speedup:.0}x (acceptance bar: >= 10x)");
+    assert!(
+        worst_speedup >= 10.0,
+        "cached compile must be at least 10x faster than cold (got {worst_speedup:.1}x)"
+    );
+}

@@ -33,6 +33,7 @@ fn bench_variant(artifact: &str) -> Option<(f64, f64, f64, usize)> {
         out_elems_per_request: SEQ * DIM,
         input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
         policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
+        compile: None,
     };
     let srv = ServingCoordinator::start(dir, cfg).ok()?;
     // warmup (first execution pays XLA JIT inside PJRT)

@@ -4,6 +4,12 @@
 //! batches; the batcher trades a bounded wait for batching efficiency:
 //! a batch closes when it reaches `max_batch` requests or when
 //! `max_wait` has elapsed since its first request.
+//!
+//! Every request carries a `shape_key` (derived from its input shape).
+//! The keyed collector [`next_batch_keyed`] never mixes keys inside one
+//! batch — mixed-shape batches would need separate compiled artifacts —
+//! and carries the first mismatched request over to seed the next
+//! batch, so nothing is dropped or reordered across shapes.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -12,6 +18,11 @@ use std::time::{Duration, Instant};
 pub struct Request {
     /// Flattened input row(s) for this request.
     pub input: Vec<f32>,
+    /// Shape identity of the input: requests with different keys never
+    /// share a batch (the serving loop derives it from the input length;
+    /// anything stable per shape works, e.g. a truncated
+    /// [`crate::hlo::Fingerprint`]).
+    pub shape_key: u64,
     /// Where to send the flattened output.
     pub respond: std::sync::mpsc::Sender<anyhow::Result<Vec<f32>>>,
     /// Enqueue timestamp (for latency accounting).
@@ -31,12 +42,46 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Collect the next batch from `rx` under `policy`. Blocks for the first
-/// request; then fills up to `max_batch` until `max_wait` expires.
-/// Returns `None` once the channel is closed and drained.
+/// Collect the next batch from `rx` under `policy`, ignoring shape
+/// keys. Blocks for the first request; then fills up to `max_batch`
+/// until `max_wait` expires. Returns `None` once the channel is closed
+/// and drained.
 pub fn next_batch(rx: &Receiver<Request>, policy: &BatchPolicy) -> Option<Vec<Request>> {
-    let first = rx.recv().ok()?;
-    let deadline = Instant::now() + policy.max_wait;
+    collect(rx, policy, &mut None, false)
+}
+
+/// Like [`next_batch`], but a batch only contains requests sharing one
+/// `shape_key`. A request with a different key closes the batch and is
+/// stashed in `carry` — pass the same `carry` slot on every call so it
+/// seeds the next batch.
+pub fn next_batch_keyed(
+    rx: &Receiver<Request>,
+    policy: &BatchPolicy,
+    carry: &mut Option<Request>,
+) -> Option<Vec<Request>> {
+    collect(rx, policy, carry, true)
+}
+
+fn collect(
+    rx: &Receiver<Request>,
+    policy: &BatchPolicy,
+    carry: &mut Option<Request>,
+    keyed: bool,
+) -> Option<Vec<Request>> {
+    let (first, carried) = match carry.take() {
+        Some(r) => (r, true),
+        None => (rx.recv().ok()?, false),
+    };
+    let key = first.shape_key;
+    let now = Instant::now();
+    // A carried request already sat through the previous batch's window;
+    // give it only what is left of its own `max_wait` budget (possibly
+    // nothing) instead of restarting the clock.
+    let deadline = if carried {
+        (first.enqueued + policy.max_wait).max(now)
+    } else {
+        now + policy.max_wait
+    };
     let mut batch = vec![first];
     while batch.len() < policy.max_batch {
         let now = Instant::now();
@@ -44,7 +89,13 @@ pub fn next_batch(rx: &Receiver<Request>, policy: &BatchPolicy) -> Option<Vec<Re
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(req) => batch.push(req),
+            Ok(req) => {
+                if keyed && req.shape_key != key {
+                    *carry = Some(req);
+                    break;
+                }
+                batch.push(req);
+            }
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
@@ -58,8 +109,15 @@ mod tests {
     use std::sync::mpsc;
 
     fn req(v: f32) -> (Request, mpsc::Receiver<anyhow::Result<Vec<f32>>>) {
+        keyed_req(v, 1)
+    }
+
+    fn keyed_req(v: f32, key: u64) -> (Request, mpsc::Receiver<anyhow::Result<Vec<f32>>>) {
         let (tx, rx) = mpsc::channel();
-        (Request { input: vec![v], respond: tx, enqueued: Instant::now() }, rx)
+        (
+            Request { input: vec![v], shape_key: key, respond: tx, enqueued: Instant::now() },
+            rx,
+        )
     }
 
     #[test]
@@ -95,5 +153,46 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Request>();
         drop(tx);
         assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn keyed_batches_never_mix_shapes() {
+        let (tx, rx) = mpsc::channel();
+        let mut receivers = Vec::new();
+        for (v, key) in [(0.0, 7), (1.0, 7), (2.0, 9), (3.0, 9)] {
+            let (r, rr) = keyed_req(v, key);
+            receivers.push(rr);
+            tx.send(r).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) };
+        let mut carry = None;
+        let a = next_batch_keyed(&rx, &policy, &mut carry).unwrap();
+        assert_eq!(a.len(), 2);
+        assert!(a.iter().all(|r| r.shape_key == 7));
+        assert!(carry.is_some(), "mismatched request must be carried, not dropped");
+        drop(tx);
+        let b = next_batch_keyed(&rx, &policy, &mut carry).unwrap();
+        assert_eq!(b.len(), 2);
+        assert!(b.iter().all(|r| r.shape_key == 9));
+        assert!(carry.is_none());
+        assert!(next_batch_keyed(&rx, &policy, &mut carry).is_none());
+    }
+
+    #[test]
+    fn carry_survives_channel_close() {
+        let (tx, rx) = mpsc::channel();
+        let (r1, _k1) = keyed_req(0.0, 1);
+        let (r2, _k2) = keyed_req(1.0, 2);
+        tx.send(r1).unwrap();
+        tx.send(r2).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let mut carry = None;
+        let a = next_batch_keyed(&rx, &policy, &mut carry).unwrap();
+        assert_eq!(a[0].shape_key, 1);
+        // the carried key-2 request still comes out after the channel died
+        let b = next_batch_keyed(&rx, &policy, &mut carry).unwrap();
+        assert_eq!(b[0].shape_key, 2);
+        assert!(next_batch_keyed(&rx, &policy, &mut carry).is_none());
     }
 }

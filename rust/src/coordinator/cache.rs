@@ -1,0 +1,320 @@
+//! The compilation cache: compile once, serve every identical request
+//! after that from memory.
+//!
+//! The paper's motivation for all of this machinery is a *serving*
+//! system: fusion + tuning cost must be paid once per computation and
+//! amortized over latency-critical traffic (§6.1). [`CompileCache`] is
+//! a bounded LRU keyed by [`CacheKey`] — the module's structural
+//! [`Fingerprint`] plus everything else that shapes the artifact
+//! (fusion mode, device, batch-dot policy). [`CompileService`] bundles
+//! the cache with a [`PerfLibrary`] and a [`PipelineConfig`] into the
+//! one-stop compile front end that the serving loop
+//! ([`crate::coordinator::server`]) talks to.
+//!
+//! ```
+//! use fusion_stitching::coordinator::cache::CompileService;
+//! use fusion_stitching::coordinator::pipeline::{FusionMode, PipelineConfig};
+//! use fusion_stitching::hlo::{GraphBuilder, Module, Shape};
+//!
+//! let mut b = GraphBuilder::new("entry");
+//! let x = b.param("x", Shape::f32(&[32, 16]));
+//! let e = b.exp(x);
+//! let t = b.tanh(e);
+//! let module = Module::new("demo", b.finish(t));
+//!
+//! let mut svc = CompileService::new(PipelineConfig::default());
+//! let (cold, hit_a) = svc.compile(&module, FusionMode::FusionStitching).unwrap();
+//! let (warm, hit_b) = svc.compile(&module, FusionMode::FusionStitching).unwrap();
+//! assert!(!hit_a && hit_b, "second compile must be a cache hit");
+//! assert!(std::sync::Arc::ptr_eq(&cold, &warm), "hits share the artifact");
+//! assert_eq!(svc.stats().hits, 1);
+//! ```
+
+use crate::hlo::{fingerprint_module, Fingerprint, Module};
+use crate::schedule::PerfLibrary;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::driver::compile_module_traced;
+use super::metrics::PassTrace;
+use super::pipeline::{CompiledModule, FusionMode, PipelineConfig};
+
+/// Everything that determines a compiled artifact — the memo key.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// Structural hash of the module (ids/names do not matter).
+    pub fingerprint: Fingerprint,
+    pub mode: FusionMode,
+    /// Device name — artifacts are tuned against one cost model.
+    pub device: String,
+    /// The §2.1 user knob that changes the partition.
+    pub fuse_batch_dot: bool,
+    /// Digest of every remaining pipeline knob (tuning space,
+    /// elementwise thresholds, library efficiency, full device
+    /// constants) — two configs differing in any of them never share
+    /// an entry.
+    pub config_digest: u64,
+}
+
+impl CacheKey {
+    pub fn new(module: &Module, mode: FusionMode, cfg: &PipelineConfig) -> Self {
+        CacheKey {
+            fingerprint: fingerprint_module(module),
+            mode,
+            device: cfg.deep.device.name.clone(),
+            fuse_batch_dot: cfg.deep.fuse_batch_dot,
+            config_digest: super::driver::config_digest(cfg),
+        }
+    }
+}
+
+/// Hit/miss/eviction counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub insertions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A bounded LRU cache of compiled modules. Values are `Arc`s so the
+/// serving loop can hold an artifact while the cache evicts it.
+#[derive(Debug)]
+pub struct CompileCache {
+    map: HashMap<CacheKey, (Arc<CompiledModule>, u64)>,
+    capacity: usize,
+    tick: u64,
+    stats: CacheStats,
+}
+
+impl CompileCache {
+    /// `capacity` is the maximum number of resident artifacts (≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "cache capacity must be at least 1");
+        CompileCache { map: HashMap::new(), capacity, tick: 0, stats: CacheStats::default() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Look up an artifact, refreshing its recency on hit.
+    pub fn get(&mut self, key: &CacheKey) -> Option<Arc<CompiledModule>> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some((value, last_used)) => {
+                *last_used = self.tick;
+                self.stats.hits += 1;
+                Some(value.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert an artifact, evicting the least-recently-used entry when
+    /// the cache is full.
+    pub fn insert(&mut self, key: CacheKey, value: Arc<CompiledModule>) {
+        self.tick += 1;
+        if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, (_, last_used))| *last_used)
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&victim);
+                self.stats.evictions += 1;
+            }
+        }
+        self.stats.insertions += 1;
+        self.map.insert(key, (value, self.tick));
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+/// The compile front end for serving: cache + perf library + config.
+///
+/// [`CompileService::compile`] answers from the cache when the module's
+/// fingerprint (and mode/device) has been seen, and otherwise runs the
+/// full instrumented pipeline, keeping the pass trace of the last cold
+/// compile for inspection.
+#[derive(Debug)]
+pub struct CompileService {
+    cache: CompileCache,
+    lib: PerfLibrary,
+    cfg: PipelineConfig,
+    last_trace: Option<PassTrace>,
+}
+
+/// Default number of resident artifacts per service.
+pub const DEFAULT_CACHE_CAPACITY: usize = 64;
+
+impl CompileService {
+    pub fn new(cfg: PipelineConfig) -> Self {
+        Self::with_capacity(cfg, DEFAULT_CACHE_CAPACITY)
+    }
+
+    pub fn with_capacity(cfg: PipelineConfig, capacity: usize) -> Self {
+        let lib = PerfLibrary::new(cfg.deep.device.clone());
+        CompileService { cache: CompileCache::new(capacity), lib, cfg, last_trace: None }
+    }
+
+    /// Compile (or fetch) `module` under `mode`. Returns the artifact
+    /// and whether it was served from the cache.
+    pub fn compile(
+        &mut self,
+        module: &Module,
+        mode: FusionMode,
+    ) -> crate::Result<(Arc<CompiledModule>, bool)> {
+        let key = CacheKey::new(module, mode, &self.cfg);
+        if let Some(hit) = self.cache.get(&key) {
+            return Ok((hit, true));
+        }
+        let (compiled, trace) = compile_module_traced(module, mode, &mut self.lib, &self.cfg)?;
+        self.last_trace = Some(trace);
+        let artifact = Arc::new(compiled);
+        self.cache.insert(key, artifact.clone());
+        Ok((artifact, false))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn cache(&self) -> &CompileCache {
+        &self.cache
+    }
+
+    pub fn cache_mut(&mut self) -> &mut CompileCache {
+        &mut self.cache
+    }
+
+    /// The perf library backing tuning (tuned plans persist here by
+    /// fingerprint; see [`PerfLibrary::tuned_insert`]).
+    pub fn perf_library(&self) -> &PerfLibrary {
+        &self.lib
+    }
+
+    pub fn perf_library_mut(&mut self) -> &mut PerfLibrary {
+        &mut self.lib
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Pass trace of the most recent *cold* compile.
+    pub fn last_trace(&self) -> Option<&PassTrace> {
+        self.last_trace.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    fn tiny_module(dim: i64) -> Module {
+        let mut b = GraphBuilder::new("entry");
+        let x = b.param("x", Shape::f32(&[dim, 16]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        Module::new(format!("m{dim}"), b.finish(t))
+    }
+
+    #[test]
+    fn hit_returns_same_arc_and_counts() {
+        let mut svc = CompileService::new(PipelineConfig::default());
+        let m = tiny_module(8);
+        let (a, hit_a) = svc.compile(&m, FusionMode::FusionStitching).unwrap();
+        let (b, hit_b) = svc.compile(&m, FusionMode::FusionStitching).unwrap();
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = svc.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 1));
+        assert!(s.hit_rate() > 0.49 && s.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn different_modes_are_different_entries() {
+        let mut svc = CompileService::new(PipelineConfig::default());
+        let m = tiny_module(8);
+        let (_, h1) = svc.compile(&m, FusionMode::FusionStitching).unwrap();
+        let (_, h2) = svc.compile(&m, FusionMode::XlaBaseline).unwrap();
+        assert!(!h1 && !h2);
+        assert_eq!(svc.cache().len(), 2);
+    }
+
+    #[test]
+    fn renamed_module_still_hits() {
+        // The whole point of fingerprinting: identity is structural.
+        let mut svc = CompileService::new(PipelineConfig::default());
+        let m1 = tiny_module(8);
+        let mut m2 = tiny_module(8);
+        m2.name = "a_totally_different_deployment_label".into();
+        for id in m2.entry.ids().collect::<Vec<_>>() {
+            m2.entry.get_mut(id).name = format!("other_{}", id.0);
+        }
+        let (_, h1) = svc.compile(&m1, FusionMode::FusionStitching).unwrap();
+        let (_, h2) = svc.compile(&m2, FusionMode::FusionStitching).unwrap();
+        assert!(!h1);
+        assert!(h2, "renamed module must hit the cache");
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut svc = CompileService::with_capacity(PipelineConfig::default(), 2);
+        let (m1, m2, m3) = (tiny_module(4), tiny_module(8), tiny_module(16));
+        svc.compile(&m1, FusionMode::FusionStitching).unwrap();
+        svc.compile(&m2, FusionMode::FusionStitching).unwrap();
+        // touch m1 so m2 becomes the LRU victim
+        let (_, h) = svc.compile(&m1, FusionMode::FusionStitching).unwrap();
+        assert!(h);
+        svc.compile(&m3, FusionMode::FusionStitching).unwrap(); // evicts m2
+        assert_eq!(svc.cache().len(), 2);
+        assert_eq!(svc.stats().evictions, 1);
+        let (_, h1) = svc.compile(&m1, FusionMode::FusionStitching).unwrap();
+        let (_, h2) = svc.compile(&m2, FusionMode::FusionStitching).unwrap();
+        assert!(h1, "m1 must have survived");
+        assert!(!h2, "m2 must have been evicted");
+    }
+
+    #[test]
+    fn cold_compile_records_a_trace() {
+        let mut svc = CompileService::new(PipelineConfig::default());
+        assert!(svc.last_trace().is_none());
+        svc.compile(&tiny_module(8), FusionMode::FusionStitching).unwrap();
+        let trace = svc.last_trace().expect("cold compile leaves a trace");
+        assert!(trace.total_us() > 0.0);
+        assert!(trace.records.iter().any(|r| r.name == "fingerprint"));
+    }
+}

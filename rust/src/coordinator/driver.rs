@@ -1,0 +1,544 @@
+//! The pass manager: the compilation pipeline as named, instrumented
+//! passes.
+//!
+//! The original `compile_module` ran fusion → tuning → shared-memory
+//! planning → emission → simulation as one opaque function. This module
+//! factors that sequence into a [`PassManager`] of named [`Pass`]es so
+//! that
+//!
+//! - every pass reports wall time and before/after unit counts into a
+//!   [`PassTrace`] ([`crate::coordinator::metrics`]),
+//! - the schedule-and-emit pass can consult the persisted tuned-plan
+//!   store in [`PerfLibrary`] (keyed by the module
+//!   [`crate::hlo::Fingerprint`]) and skip re-tuning groups it has seen
+//!   before, and
+//! - callers that only want the compiled artifact keep the old
+//!   single-call shape via [`crate::coordinator::pipeline::compile_module`].
+//!
+//! Pipeline order (see DESIGN.md for the full dataflow diagram):
+//!
+//! ```text
+//! HloModule ──fingerprint──▶ fusion ──validate──▶ schedule+emit ──▶ simulate
+//!                 │                                     ▲
+//!                 └──── tuned-plan store (PerfLibrary) ─┘
+//! ```
+
+use crate::codegen::emitter::emit_group;
+use crate::codegen::KernelPlan;
+use crate::fusion::{deep_fusion, xla_baseline_fusion, FusionPlan, GroupKind};
+use crate::gpusim::executor::{simulate_module, ModuleTiming, SimKernel};
+use crate::hlo::{fingerprint_module, Computation, Fingerprint, InstrId, Module, Opcode};
+use crate::schedule::{tune, PerfLibrary, Schedule, TunedPlan, TuningConfig};
+use anyhow::anyhow;
+use std::collections::HashSet;
+use std::time::Instant;
+
+use super::metrics::PassTrace;
+use super::pipeline::{CompiledModule, FusionMode, PipelineConfig};
+
+/// The named pipeline passes, in the order the standard pipeline runs
+/// them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    /// Canonicalize + fingerprint the module (cache / perf-library key).
+    Fingerprint,
+    /// Partition the graph into kernel groups (baseline or deep fusion).
+    Fusion,
+    /// Check the partition covers every instruction acyclically.
+    ValidatePlan,
+    /// Tune each generated group (reusing persisted tuned plans where
+    /// the fingerprint matches) and emit its kernel plan.
+    ScheduleAndEmit,
+    /// Project all kernels onto the analytical GPU model.
+    Simulate,
+}
+
+impl Pass {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pass::Fingerprint => "fingerprint",
+            Pass::Fusion => "fusion",
+            Pass::ValidatePlan => "validate-plan",
+            Pass::ScheduleAndEmit => "schedule-emit",
+            Pass::Simulate => "simulate",
+        }
+    }
+}
+
+/// Mutable state threaded through the passes.
+struct CompileState {
+    fingerprint: Option<Fingerprint>,
+    plan: Option<FusionPlan>,
+    kernels: Vec<KernelPlan>,
+    generated_group_ids: Vec<usize>,
+    sim: Vec<SimKernel>,
+    timing: Option<ModuleTiming>,
+}
+
+/// Runs a pass sequence over one module, recording a [`PassTrace`].
+#[derive(Debug, Clone)]
+pub struct PassManager {
+    passes: Vec<Pass>,
+}
+
+impl PassManager {
+    /// The standard five-pass pipeline.
+    pub fn standard() -> Self {
+        PassManager {
+            passes: vec![
+                Pass::Fingerprint,
+                Pass::Fusion,
+                Pass::ValidatePlan,
+                Pass::ScheduleAndEmit,
+                Pass::Simulate,
+            ],
+        }
+    }
+
+    /// The pass sequence this manager runs.
+    pub fn passes(&self) -> &[Pass] {
+        &self.passes
+    }
+
+    /// Compile `module` under `mode`, returning the artifact plus the
+    /// per-pass trace.
+    pub fn run(
+        &self,
+        module: &Module,
+        mode: FusionMode,
+        lib: &mut PerfLibrary,
+        cfg: &PipelineConfig,
+    ) -> crate::Result<(CompiledModule, PassTrace)> {
+        let comp = &module.entry;
+        let mut st = CompileState {
+            fingerprint: None,
+            plan: None,
+            kernels: Vec::new(),
+            generated_group_ids: Vec::new(),
+            sim: Vec::new(),
+            timing: None,
+        };
+        let mut trace = PassTrace::default();
+
+        for &pass in &self.passes {
+            let before = self.units(pass, &st, comp, true);
+            let t0 = Instant::now();
+            match pass {
+                Pass::Fingerprint => {
+                    st.fingerprint = Some(fingerprint_module(module));
+                }
+                Pass::Fusion => {
+                    st.plan = Some(match mode {
+                        FusionMode::XlaBaseline => xla_baseline_fusion(comp),
+                        FusionMode::FusionStitching => deep_fusion(comp, lib, &cfg.deep).0,
+                    });
+                }
+                Pass::ValidatePlan => {
+                    self.plan_of(&st)?.validate(comp)?;
+                }
+                Pass::ScheduleAndEmit => {
+                    self.schedule_and_emit(module, mode, lib, cfg, &mut st)?;
+                }
+                Pass::Simulate => {
+                    st.timing = Some(simulate_module(&st.sim, &cfg.deep.device, cfg.lib_efficiency));
+                }
+            }
+            let wall_us = t0.elapsed().as_secs_f64() * 1e6;
+            let after = self.units(pass, &st, comp, false);
+            trace.record(pass.name(), wall_us, before, after);
+        }
+
+        let compiled = CompiledModule {
+            name: module.name.clone(),
+            mode,
+            fingerprint: st
+                .fingerprint
+                .ok_or_else(|| anyhow!("pipeline ran without the fingerprint pass"))?,
+            plan: st.plan.ok_or_else(|| anyhow!("pipeline ran without the fusion pass"))?,
+            kernels: st.kernels,
+            generated_group_ids: st.generated_group_ids,
+            timing: st.timing.ok_or_else(|| anyhow!("pipeline ran without the simulate pass"))?,
+        };
+        Ok((compiled, trace))
+    }
+
+    fn plan_of<'s>(&self, st: &'s CompileState) -> crate::Result<&'s FusionPlan> {
+        st.plan.as_ref().ok_or_else(|| anyhow!("fusion pass has not run"))
+    }
+
+    /// Work-unit count a pass transforms: kernel-granularity items.
+    fn units(&self, pass: Pass, st: &CompileState, comp: &Computation, before: bool) -> usize {
+        match pass {
+            Pass::Fingerprint => comp.len(),
+            Pass::Fusion => {
+                if before {
+                    comp.unfused_kernel_count()
+                } else {
+                    st.plan.as_ref().map_or(0, |p| p.groups.len())
+                }
+            }
+            Pass::ValidatePlan => st.plan.as_ref().map_or(0, |p| p.groups.len()),
+            Pass::ScheduleAndEmit => {
+                if before {
+                    st.plan
+                        .as_ref()
+                        .map_or(0, |p| p.groups.iter().filter(|g| g.is_generated_kernel(comp)).count())
+                } else {
+                    st.kernels.len()
+                }
+            }
+            Pass::Simulate => st.sim.len(),
+        }
+    }
+
+    fn schedule_and_emit(
+        &self,
+        module: &Module,
+        mode: FusionMode,
+        lib: &mut PerfLibrary,
+        cfg: &PipelineConfig,
+        st: &mut CompileState,
+    ) -> crate::Result<()> {
+        let comp = &module.entry;
+        let dev = cfg.deep.device.clone();
+        let fp = st
+            .fingerprint
+            .ok_or_else(|| anyhow!("schedule-emit needs the fingerprint pass"))?;
+        let plan = st.plan.clone().ok_or_else(|| anyhow!("schedule-emit needs the fusion pass"))?;
+
+        for group in &plan.groups {
+            match group.kind {
+                GroupKind::Library => {
+                    let id = *group.members.iter().next().unwrap();
+                    let (flops, bytes) = library_call_cost(comp, id);
+                    st.sim.push(SimKernel::Library { flops, bytes });
+                }
+                _ => {
+                    if !group.is_generated_kernel(comp) {
+                        continue;
+                    }
+                    let tkey = tuned_key(fp, mode, cfg, comp, group);
+                    // Peek + validate first; only a plan that actually
+                    // gets reused counts as a tuned-store hit.
+                    let cached = lib
+                        .tuned_peek(&tkey)
+                        .filter(|p| tuned_plan_matches(p, &group.members, &group.roots))
+                        .cloned();
+                    let tuned = match cached {
+                        Some(p) => {
+                            lib.tuned_mark_reused();
+                            p
+                        }
+                        None => {
+                            let p = tune_group(comp, &group.members, &group.roots, lib, &cfg.deep.tuning)
+                                .ok_or_else(|| {
+                                    anyhow!(
+                                        "group {} of {} is unschedulable (roots {:?})",
+                                        group.id,
+                                        module.name,
+                                        group.roots
+                                    )
+                                })?;
+                            lib.tuned_insert(tkey, p.clone());
+                            p
+                        }
+                    };
+                    let kplan = emit_group(
+                        comp,
+                        &group.members,
+                        &group.roots,
+                        &tuned,
+                        &dev,
+                        &format!("{}_k{}", module.name, group.id),
+                    )?;
+                    st.sim.push(SimKernel::Generated(kplan.to_kernel_desc(
+                        comp,
+                        &group.members,
+                        &tuned,
+                    )));
+                    st.generated_group_ids.push(group.id);
+                    st.kernels.push(kplan);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Compile one module through the standard pass pipeline, returning the
+/// artifact and the instrumented per-pass trace.
+pub fn compile_module_traced(
+    module: &Module,
+    mode: FusionMode,
+    lib: &mut PerfLibrary,
+    cfg: &PipelineConfig,
+) -> crate::Result<(CompiledModule, PassTrace)> {
+    PassManager::standard().run(module, mode, lib, cfg)
+}
+
+/// Persisted-tuned-plan key: module fingerprint + everything else that
+/// shapes the group partition (fusion mode, batch-dot policy, device) +
+/// the group id within the deterministic partition + an *id-sensitive*
+/// digest of the group's concrete instructions.
+///
+/// The module fingerprint is id-invariant by design, but a persisted
+/// [`TunedPlan`] stores raw [`InstrId`]s — so the key must also pin the
+/// concrete numbering and the device the plan was tuned for. Otherwise
+/// a renumbered structural twin (same fingerprint, different id →
+/// instruction mapping) or a different cost model could silently adopt
+/// schedules meant for other instructions.
+fn tuned_key(
+    fp: Fingerprint,
+    mode: FusionMode,
+    cfg: &PipelineConfig,
+    comp: &Computation,
+    group: &crate::fusion::FusionGroup,
+) -> String {
+    format!(
+        "{}|{:?}|bd{}|dev:{}|c{:016x}|g{}|i{:016x}",
+        fp.to_hex(),
+        mode,
+        cfg.deep.fuse_batch_dot as u8,
+        cfg.deep.device.name,
+        config_digest(cfg),
+        group.id,
+        group_digest(comp, &group.members)
+    )
+}
+
+/// FNV-1a digest of every remaining pipeline knob that shapes a
+/// compiled artifact: the tuning space, elementwise-fusion thresholds,
+/// library efficiency and the full device constants (not just the
+/// device name). Shared by [`tuned_key`] and
+/// [`crate::coordinator::cache::CacheKey`], so plans tuned under one
+/// configuration are never adopted under another.
+pub(crate) fn config_digest(cfg: &PipelineConfig) -> u64 {
+    let text = format!(
+        "{:?}|{:?}|{}|{:?}",
+        cfg.deep.tuning, cfg.deep.elementwise, cfg.lib_efficiency, cfg.deep.device
+    );
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in text.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// FNV-1a over the group's member instructions *including their ids and
+/// operand ids* — deliberately not renumbering-invariant (see
+/// [`tuned_key`]).
+fn group_digest(comp: &Computation, members: &HashSet<InstrId>) -> u64 {
+    fn mix(mut h: u64, v: u64) -> u64 {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+        h
+    }
+    let mut ordered: Vec<InstrId> = members.iter().copied().collect();
+    ordered.sort_unstable();
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for id in ordered {
+        let i = comp.get(id);
+        h = mix(h, id.0 as u64);
+        h = mix(h, i.opcode as u64);
+        h = mix(h, i.shape.dims.len() as u64);
+        for &d in &i.shape.dims {
+            h = mix(h, d as u64);
+        }
+        for &op in &i.operands {
+            h = mix(h, op.0 as u64);
+        }
+    }
+    h
+}
+
+/// Sanity check before trusting a persisted plan: it must cover exactly
+/// this group's members and roots (guards against key collisions and
+/// stale stores).
+fn tuned_plan_matches(plan: &TunedPlan, members: &HashSet<InstrId>, roots: &[InstrId]) -> bool {
+    plan.blocks >= 1
+        && plan.root_schedules.len() == roots.len()
+        && plan.root_schedules.iter().all(|(id, _)| roots.contains(id))
+        && plan.assignment.len() == members.len()
+        && plan.assignment.keys().all(|id| members.contains(id))
+}
+
+/// Tune a group, falling back to the always-valid single-block Row
+/// schedule (§4.3) when the enumerated space rejects everything — this
+/// covers baseline singleton groups of awkward ops.
+fn tune_group(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    roots: &[InstrId],
+    lib: &mut PerfLibrary,
+    tuning: &TuningConfig,
+) -> Option<TunedPlan> {
+    if let Some(plan) = tune(comp, members, roots, lib, tuning) {
+        return Some(plan);
+    }
+    // Fallback: propagate (0, 1, Row) from all roots.
+    let combo: Vec<(InstrId, Schedule)> =
+        roots.iter().map(|&r| (r, Schedule::fallback())).collect();
+    let prop = crate::schedule::propagate(comp, members, &combo).ok()?;
+    let mut est = 0.0;
+    for (&id, s) in &prop.assignment {
+        if let crate::schedule::OpSchedule::Scheduled(s) = s {
+            est += lib.lookup(comp, id, *s, 128);
+        }
+    }
+    Some(TunedPlan {
+        root_schedules: combo,
+        assignment: prop.assignment.into_iter().collect(),
+        blocks: prop.blocks,
+        threads: 128,
+        est_exec_us: est,
+    })
+}
+
+/// FLOPs + bytes moved of a vendor library call.
+fn library_call_cost(comp: &Computation, id: InstrId) -> (u64, u64) {
+    let instr = comp.get(id);
+    let out_elems = instr.shape.num_elements() as u64;
+    let bytes: u64 = instr.shape.byte_size() as u64
+        + comp
+            .operand_shapes(id)
+            .iter()
+            .map(|s| s.byte_size() as u64)
+            .sum::<u64>();
+    let flops = match instr.opcode {
+        Opcode::Dot => {
+            let k = comp.operand_shapes(id)[0].dims.last().copied().unwrap_or(1) as u64;
+            2 * out_elems * k
+        }
+        Opcode::Convolution => {
+            let f = comp.operand_shapes(id)[1];
+            let window = (f.dims[0] * f.dims[1] * f.dims[2]) as u64;
+            2 * out_elems * window
+        }
+        // Opaque custom calls (cuDNN RNN cells etc.): assume moderately
+        // compute-dense.
+        _ => 16 * out_elems,
+    };
+    (flops, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::DeviceConfig;
+    use crate::models;
+
+    fn setup() -> (PerfLibrary, PipelineConfig) {
+        (PerfLibrary::new(DeviceConfig::pascal()), PipelineConfig::default())
+    }
+
+    #[test]
+    fn standard_pipeline_traces_every_pass() {
+        let (mut lib, cfg) = setup();
+        let (_, module) = models::by_name("LR").unwrap();
+        let (compiled, trace) =
+            compile_module_traced(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        let names: Vec<&str> = trace.records.iter().map(|r| r.name).collect();
+        assert_eq!(
+            names,
+            vec!["fingerprint", "fusion", "validate-plan", "schedule-emit", "simulate"]
+        );
+        assert!(trace.records.iter().all(|r| r.wall_us >= 0.0));
+        assert!(trace.total_us() > 0.0);
+        assert_eq!(compiled.fingerprint, crate::hlo::fingerprint_module(&module));
+        assert!(!compiled.kernels.is_empty());
+    }
+
+    #[test]
+    fn fusion_pass_reduces_unit_count() {
+        let (mut lib, cfg) = setup();
+        let (_, module) = models::by_name("NMT").unwrap();
+        let (_, trace) =
+            compile_module_traced(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        let fusion = trace.records.iter().find(|r| r.name == "fusion").unwrap();
+        assert!(
+            fusion.units_after < fusion.units_before,
+            "fusion should shrink the kernel partition: {} -> {}",
+            fusion.units_before,
+            fusion.units_after
+        );
+        let emit = trace.records.iter().find(|r| r.name == "schedule-emit").unwrap();
+        assert_eq!(emit.units_before, emit.units_after, "every generated group emits");
+    }
+
+    #[test]
+    fn tuned_plans_are_reused_across_compilations() {
+        let (mut lib, cfg) = setup();
+        let (_, module) = models::by_name("RNN").unwrap();
+        let (a, _) =
+            compile_module_traced(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        assert!(lib.tuned_len() > 0, "first compile must populate the tuned store");
+        assert_eq!(lib.tuned_hits(), 0);
+        let (b, _) =
+            compile_module_traced(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        assert!(lib.tuned_hits() > 0, "second compile must reuse tuned plans");
+        // reuse must not change the produced kernels
+        let ir_a: Vec<String> = a.kernels.iter().map(|k| k.ir_text()).collect();
+        let ir_b: Vec<String> = b.kernels.iter().map(|k| k.ir_text()).collect();
+        assert_eq!(ir_a, ir_b);
+    }
+
+    #[test]
+    fn tuned_store_survives_disk_roundtrip() {
+        let (mut lib, cfg) = setup();
+        let (_, module) = models::by_name("LR").unwrap();
+        let _ = compile_module_traced(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        let dir = crate::testutil::TempDir::new("drv");
+        let path = dir.path().join("perf.tsv");
+        lib.save(&path).unwrap();
+
+        let mut lib2 = PerfLibrary::load(&path, DeviceConfig::pascal());
+        assert_eq!(lib2.tuned_len(), lib.tuned_len());
+        let _ = compile_module_traced(&module, FusionMode::FusionStitching, &mut lib2, &cfg).unwrap();
+        assert!(lib2.tuned_hits() > 0, "fresh process must hit the persisted tuned plans");
+    }
+
+    #[test]
+    fn renumbered_twin_does_not_adopt_tuned_plans() {
+        // Two structural twins share a fingerprint but number their
+        // instructions differently; persisted plans hold raw InstrIds,
+        // so the id-sensitive digest in the key must force a re-tune.
+        use crate::hlo::{GraphBuilder, Module, Shape};
+        let (mut lib, cfg) = setup();
+
+        let mut b1 = GraphBuilder::new("e");
+        let x = b1.param("x", Shape::f32(&[64, 32]));
+        let y = b1.param("y", Shape::f32(&[64, 32]));
+        let e = b1.exp(x);
+        let t = b1.tanh(y);
+        let s = b1.add(e, t);
+        let m1 = Module::new("m1", b1.finish(s));
+
+        let mut b2 = GraphBuilder::new("e");
+        let x = b2.param("x", Shape::f32(&[64, 32]));
+        let y = b2.param("y", Shape::f32(&[64, 32]));
+        let t = b2.tanh(y); // ids of exp/tanh swapped vs m1
+        let e = b2.exp(x);
+        let s = b2.add(e, t);
+        let m2 = Module::new("m2", b2.finish(s));
+
+        let (a, _) =
+            compile_module_traced(&m1, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        let (b, _) =
+            compile_module_traced(&m2, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        assert_eq!(a.fingerprint, b.fingerprint, "twins share the structural fingerprint");
+        assert_eq!(lib.tuned_hits(), 0, "but tuned plans must not transfer across numberings");
+    }
+
+    #[test]
+    fn modes_do_not_share_tuned_entries() {
+        let (mut lib, cfg) = setup();
+        let (_, module) = models::by_name("LR").unwrap();
+        let _ = compile_module_traced(&module, FusionMode::XlaBaseline, &mut lib, &cfg).unwrap();
+        let after_baseline = lib.tuned_len();
+        let _ = compile_module_traced(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        assert!(lib.tuned_len() > after_baseline, "each mode gets its own tuned entries");
+    }
+}

@@ -1,6 +1,57 @@
-//! Latency/throughput accounting for the serving loop.
+//! Latency/throughput accounting for the serving loop, plus the
+//! per-pass compile-time instrumentation recorded by
+//! [`crate::coordinator::driver::PassManager`].
 
+use std::fmt;
 use std::time::Duration;
+
+/// One instrumented pipeline pass execution: wall time plus the number
+/// of work units (kernel-granularity items) before and after. For the
+/// fusion pass the unit counts are the unfused vs. fused kernel counts;
+/// for emission they are groups in vs. kernel plans out.
+#[derive(Debug, Clone)]
+pub struct PassRecord {
+    pub name: &'static str,
+    pub wall_us: f64,
+    pub units_before: usize,
+    pub units_after: usize,
+}
+
+/// The trace of one pipeline run: every pass, in execution order.
+#[derive(Debug, Clone, Default)]
+pub struct PassTrace {
+    pub records: Vec<PassRecord>,
+}
+
+impl PassTrace {
+    pub fn record(&mut self, name: &'static str, wall_us: f64, before: usize, after: usize) {
+        self.records.push(PassRecord { name, wall_us, units_before: before, units_after: after });
+    }
+
+    /// Total wall time across all passes, microseconds.
+    pub fn total_us(&self) -> f64 {
+        self.records.iter().map(|r| r.wall_us).sum()
+    }
+
+    /// Wall time of one pass by name (0 if it did not run).
+    pub fn pass_us(&self, name: &str) -> f64 {
+        self.records.iter().filter(|r| r.name == name).map(|r| r.wall_us).sum()
+    }
+}
+
+impl fmt::Display for PassTrace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{:<18} {:>10} {:>8} {:>8}", "pass", "wall_us", "before", "after")?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{:<18} {:>10.1} {:>8} {:>8}",
+                r.name, r.wall_us, r.units_before, r.units_after
+            )?;
+        }
+        write!(f, "total {:.1} us", self.total_us())
+    }
+}
 
 /// Collects request latencies and derives the usual percentiles.
 #[derive(Debug, Default, Clone)]
@@ -97,5 +148,18 @@ mod tests {
         let b = rec(&[3.0]);
         a.merge(&b);
         assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn pass_trace_totals_and_lookup() {
+        let mut t = PassTrace::default();
+        t.record("fusion", 120.0, 40, 12);
+        t.record("simulate", 30.0, 12, 12);
+        assert_eq!(t.records.len(), 2);
+        assert!((t.total_us() - 150.0).abs() < 1e-9);
+        assert_eq!(t.pass_us("fusion"), 120.0);
+        assert_eq!(t.pass_us("nope"), 0.0);
+        let text = t.to_string();
+        assert!(text.contains("fusion") && text.contains("total"));
     }
 }

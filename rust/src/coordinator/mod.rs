@@ -1,19 +1,30 @@
-//! The L3 coordinator: compilation pipeline driver, evaluation harness
-//! and the NMT online-serving loop.
+//! The L3 coordinator: compilation pipeline driver, evaluation harness,
+//! compilation cache and the NMT online-serving loop.
 //!
 //! - [`pipeline`] — `HloModule` → fusion → schedule planning → codegen →
 //!   simulated timing (Fig. 4's three stages), for both the XLA baseline
 //!   and FusionStitching, plus the per-benchmark evaluation report that
 //!   regenerates Figs. 6–8 and Table 3.
+//! - [`driver`] — the pass manager: the pipeline as named, instrumented
+//!   passes with per-pass wall time and unit counts.
+//! - [`cache`] — the compilation cache (structural-fingerprint keyed,
+//!   bounded LRU) and the [`cache::CompileService`] front end that the
+//!   serving loop uses to pay compilation cost exactly once.
 //! - [`server`] / [`batcher`] — the latency-critical online NMT use case
-//!   (§6.1): a thread-based serving loop with dynamic batching over the
-//!   PJRT runtime.
-//! - [`metrics`] — latency/throughput accounting for the serving loop.
+//!   (§6.1): a thread-based serving loop with shape-keyed dynamic
+//!   batching over the runtime.
+//! - [`metrics`] — latency/throughput accounting for the serving loop
+//!   plus the per-pass compile-time trace types.
 
 pub mod batcher;
+pub mod cache;
+pub mod driver;
 pub mod metrics;
 pub mod pipeline;
 pub mod server;
 
+pub use cache::{CacheKey, CacheStats, CompileCache, CompileService};
+pub use driver::{compile_module_traced, Pass, PassManager};
+pub use metrics::{PassRecord, PassTrace};
 pub use pipeline::{compile_module, evaluate, CompiledModule, FusionMode, ModuleReport, PipelineConfig};
-pub use server::{ServerConfig, ServingCoordinator};
+pub use server::{CompileOptions, ServerConfig, ServingCoordinator};

@@ -1,24 +1,23 @@
 //! The compilation pipeline (Fig. 4) and the evaluation harness.
 //!
-//! `compile_module` runs one module through fusion → schedule planning →
-//! code generation and projects every kernel onto the GPU cost model;
+//! `compile_module` runs one module through the instrumented pass
+//! pipeline of [`crate::coordinator::driver`] (fingerprint → fusion →
+//! validation → schedule planning + code generation → simulation);
 //! `evaluate` runs a benchmark under both the XLA baseline and
 //! FusionStitching and derives every number the paper's evaluation
 //! reports: Fig. 6 (execution breakdown), Fig. 7 (fusion ratio), Fig. 8
 //! (FusionSpeedup / predicted E2E / measured E2E) and Table 3
 //! (shared-memory statistics).
 
-use crate::codegen::{emit_group, KernelPlan};
-use crate::fusion::{deep_fusion, xla_baseline_fusion, DeepFusionConfig, FusionPlan, GroupKind};
-use crate::gpusim::executor::{simulate_module, ModuleTiming, SimKernel};
-use crate::hlo::{Computation, InstrId, Module, Opcode};
+use crate::codegen::KernelPlan;
+use crate::fusion::{DeepFusionConfig, FusionPlan};
+use crate::gpusim::executor::ModuleTiming;
+use crate::hlo::{Fingerprint, Module};
 use crate::models::ModelMeta;
-use crate::schedule::{tune, PerfLibrary, Schedule, TunedPlan, TuningConfig};
-use anyhow::anyhow;
-use std::collections::HashSet;
+use crate::schedule::PerfLibrary;
 
 /// Which fusion pass compiles the module.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FusionMode {
     XlaBaseline,
     FusionStitching,
@@ -39,11 +38,15 @@ impl Default for PipelineConfig {
 }
 
 /// A fully compiled module: the kernel partition, per-kernel plans and
-/// the simulated execution timing.
-#[derive(Debug)]
+/// the simulated execution timing. `Clone` is cheap enough to allow
+/// cached artifacts to be shared by value, though the
+/// [`crate::coordinator::cache::CompileCache`] hands out `Arc`s.
+#[derive(Debug, Clone)]
 pub struct CompiledModule {
     pub name: String,
     pub mode: FusionMode,
+    /// Structural fingerprint of the source module — the cache identity.
+    pub fingerprint: Fingerprint,
     pub plan: FusionPlan,
     /// Kernel plans for generated (non-library) groups, aligned with
     /// `generated_group_ids`.
@@ -74,119 +77,17 @@ impl CompiledModule {
     }
 }
 
-/// Compile one module under the chosen fusion mode.
+/// Compile one module under the chosen fusion mode through the standard
+/// pass pipeline (see [`crate::coordinator::driver`] for the pass list
+/// and for [`crate::coordinator::driver::compile_module_traced`], which
+/// additionally returns the per-pass instrumentation).
 pub fn compile_module(
     module: &Module,
     mode: FusionMode,
     lib: &mut PerfLibrary,
     cfg: &PipelineConfig,
 ) -> crate::Result<CompiledModule> {
-    let comp = &module.entry;
-    let plan = match mode {
-        FusionMode::XlaBaseline => xla_baseline_fusion(comp),
-        FusionMode::FusionStitching => deep_fusion(comp, lib, &cfg.deep).0,
-    };
-    plan.validate(comp)?;
-
-    let dev = cfg.deep.device.clone();
-    let mut kernels = Vec::new();
-    let mut generated_group_ids = Vec::new();
-    let mut sim = Vec::new();
-    for group in &plan.groups {
-        match group.kind {
-            GroupKind::Library => {
-                let id = *group.members.iter().next().unwrap();
-                let (flops, bytes) = library_call_cost(comp, id);
-                sim.push(SimKernel::Library { flops, bytes });
-            }
-            _ => {
-                if !group.is_generated_kernel(comp) {
-                    continue;
-                }
-                let tuned = tune_group(comp, &group.members, &group.roots, lib, &cfg.deep.tuning)
-                    .ok_or_else(|| {
-                        anyhow!(
-                            "group {} of {} is unschedulable (roots {:?})",
-                            group.id,
-                            module.name,
-                            group.roots
-                        )
-                    })?;
-                let kplan = emit_group(
-                    comp,
-                    &group.members,
-                    &group.roots,
-                    &tuned,
-                    &dev,
-                    &format!("{}_k{}", module.name, group.id),
-                )?;
-                sim.push(SimKernel::Generated(kplan.to_kernel_desc(comp, &group.members, &tuned)));
-                generated_group_ids.push(group.id);
-                kernels.push(kplan);
-            }
-        }
-    }
-    let timing = simulate_module(&sim, &dev, cfg.lib_efficiency);
-    Ok(CompiledModule { name: module.name.clone(), mode, plan, kernels, generated_group_ids, timing })
-}
-
-/// Tune a group, falling back to the always-valid single-block Row
-/// schedule (§4.3) when the enumerated space rejects everything — this
-/// covers baseline singleton groups of awkward ops.
-fn tune_group(
-    comp: &Computation,
-    members: &HashSet<InstrId>,
-    roots: &[InstrId],
-    lib: &mut PerfLibrary,
-    tuning: &TuningConfig,
-) -> Option<TunedPlan> {
-    if let Some(plan) = tune(comp, members, roots, lib, tuning) {
-        return Some(plan);
-    }
-    // Fallback: propagate (0, 1, Row) from all roots.
-    let combo: Vec<(InstrId, Schedule)> =
-        roots.iter().map(|&r| (r, Schedule::fallback())).collect();
-    let prop = crate::schedule::propagate(comp, members, &combo).ok()?;
-    let mut est = 0.0;
-    for (&id, st) in &prop.assignment {
-        if let crate::schedule::OpSchedule::Scheduled(s) = st {
-            est += lib.lookup(comp, id, *s, 128);
-        }
-    }
-    Some(TunedPlan {
-        root_schedules: combo,
-        assignment: prop.assignment.into_iter().collect(),
-        blocks: prop.blocks,
-        threads: 128,
-        est_exec_us: est,
-    })
-}
-
-/// FLOPs + bytes moved of a vendor library call.
-fn library_call_cost(comp: &Computation, id: InstrId) -> (u64, u64) {
-    let instr = comp.get(id);
-    let out_elems = instr.shape.num_elements() as u64;
-    let bytes: u64 = instr.shape.byte_size() as u64
-        + comp
-            .operand_shapes(id)
-            .iter()
-            .map(|s| s.byte_size() as u64)
-            .sum::<u64>();
-    let flops = match instr.opcode {
-        Opcode::Dot => {
-            let k = comp.operand_shapes(id)[0].dims.last().copied().unwrap_or(1) as u64;
-            2 * out_elems * k
-        }
-        Opcode::Convolution => {
-            let f = comp.operand_shapes(id)[1];
-            let window = (f.dims[0] * f.dims[1] * f.dims[2]) as u64;
-            2 * out_elems * window
-        }
-        // Opaque custom calls (cuDNN RNN cells etc.): assume moderately
-        // compute-dense.
-        _ => 16 * out_elems,
-    };
-    (flops, bytes)
+    super::driver::compile_module_traced(module, mode, lib, cfg).map(|(compiled, _)| compiled)
 }
 
 // ---------------------------------------------------------------------

@@ -2,18 +2,47 @@
 //! case (§6.1: "batch size is small, and latency is critical … every
 //! millisecond of performance improvement is of significance").
 //!
-//! A worker thread owns the PJRT executable; callers submit flattened
+//! A worker thread owns the runtime executable; callers submit flattened
 //! request rows and receive their slice of the batched output. Padding
 //! fills partial batches (the artifact's batch dimension is baked in at
 //! AOT time).
+//!
+//! **Compile-once serving:** when [`ServerConfig::compile`] is set, the
+//! worker routes every batch through a shared
+//! [`CompileService`] before executing it: the first batch
+//! pays the full fusion → tuning → codegen pipeline for the module, and
+//! every later batch with the same structural fingerprint is answered
+//! from the [`super::cache::CompileCache`]. [`WorkerStats`] reports the
+//! resulting hit/miss counts and per-batch compile latencies, so the
+//! serving loop's cache hit-rate is directly observable.
 
-use super::batcher::{next_batch, BatchPolicy, Request};
+use super::batcher::{next_batch_keyed, BatchPolicy, Request};
+use super::cache::CompileService;
+use super::pipeline::{FusionMode, PipelineConfig};
+use crate::hlo::Module;
 use crate::runtime::Engine;
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// What the serving loop compiles (once) per configured module.
+#[derive(Debug, Clone)]
+pub struct CompileOptions {
+    /// The HLO module behind the served artifact (e.g. the NMT graph).
+    pub module: Module,
+    pub mode: FusionMode,
+    /// Pipeline knobs for the compile service.
+    ///
+    /// Used only when [`ServingCoordinator::start`] creates the loop's
+    /// own service. With
+    /// [`ServingCoordinator::start_with_service`], the *shared
+    /// service's* config governs every compile (a shared cache must be
+    /// keyed against one config) and this field is ignored.
+    pub pipeline: PipelineConfig,
+}
 
 /// Server configuration: which artifact to serve and its baked shapes.
 #[derive(Debug, Clone)]
@@ -29,6 +58,10 @@ pub struct ServerConfig {
     /// Input dims of the whole batch (product = batch × in_elems).
     pub input_dims: Vec<i64>,
     pub policy: BatchPolicy,
+    /// Compile-once serving: route each batch through the compilation
+    /// cache for this module. `None` serves the artifact without
+    /// touching the compiler.
+    pub compile: Option<CompileOptions>,
 }
 
 /// Handle to the serving loop.
@@ -36,6 +69,7 @@ pub struct ServingCoordinator {
     tx: Option<Sender<Request>>,
     worker: Option<JoinHandle<WorkerStats>>,
     cfg: ServerConfig,
+    service: Option<Arc<Mutex<CompileService>>>,
 }
 
 /// Worker-side counters.
@@ -43,18 +77,69 @@ pub struct ServingCoordinator {
 pub struct WorkerStats {
     pub batches: usize,
     pub requests: usize,
-    /// Execution time spent inside PJRT, per batch, microseconds.
+    /// Execution time spent inside the runtime, per batch, microseconds.
     pub exec_us: Vec<f64>,
+    /// Compilation-cache hits observed on the serving path.
+    pub cache_hits: usize,
+    /// Compilation-cache misses (cold compiles) on the serving path.
+    pub cache_misses: usize,
+    /// Time spent obtaining the compiled plan, per batch, microseconds
+    /// (cache hits make this collapse after the first batch).
+    pub compile_us: Vec<f64>,
+    /// Serving-path compiles that errored. After the first failure the
+    /// worker stops retrying (a failing module would otherwise re-run
+    /// the whole cold pipeline on every batch).
+    pub compile_failures: usize,
+}
+
+impl WorkerStats {
+    /// Cache hit-rate over the serving run.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
 }
 
 impl ServingCoordinator {
-    /// Start the loop: spawns the worker, which owns the PJRT client and
-    /// executable (the xla wrappers are not `Send`, so everything PJRT
-    /// lives on the worker thread) and signals readiness back.
+    /// Start the loop: spawns the worker, which owns the runtime client
+    /// and executable (kept on one thread so a non-`Send` PJRT backend
+    /// can be swapped back in) and signals readiness back. When
+    /// [`ServerConfig::compile`] is set, a fresh [`CompileService`] is
+    /// created for the loop; use [`ServingCoordinator::start_with_service`]
+    /// to share one cache across servers.
     pub fn start(artifact_dir: &Path, cfg: ServerConfig) -> Result<Self> {
+        let service = cfg
+            .compile
+            .as_ref()
+            .map(|o| Arc::new(Mutex::new(CompileService::new(o.pipeline.clone()))));
+        Self::start_inner(artifact_dir, cfg, service)
+    }
+
+    /// Start the loop against a shared compilation cache (several
+    /// serving loops — or a warmup job — can feed one service). All
+    /// compiles run under the shared service's own `PipelineConfig`;
+    /// [`CompileOptions::pipeline`] is ignored on this path.
+    pub fn start_with_service(
+        artifact_dir: &Path,
+        cfg: ServerConfig,
+        service: Arc<Mutex<CompileService>>,
+    ) -> Result<Self> {
+        Self::start_inner(artifact_dir, cfg, Some(service))
+    }
+
+    fn start_inner(
+        artifact_dir: &Path,
+        cfg: ServerConfig,
+        service: Option<Arc<Mutex<CompileService>>>,
+    ) -> Result<Self> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let wcfg = cfg.clone();
+        let wservice = service.clone();
         let dir = artifact_dir.to_path_buf();
         let worker = std::thread::spawn(move || {
             let mut stats = WorkerStats::default();
@@ -73,7 +158,38 @@ impl ServingCoordinator {
             };
             let model = engine.get(&wcfg.artifact).expect("loaded above");
             let batch_elems = wcfg.batch * wcfg.in_elems_per_request;
-            while let Some(batch) = next_batch(&rx, &wcfg.policy) {
+            let mut carry = None;
+            let mut compile_failed = false;
+            while let Some(batch) = next_batch_keyed(&rx, &wcfg.policy, &mut carry) {
+                // Compile-once serving: make sure the kernel plans for
+                // this module are resident before touching the batch.
+                if let (Some(opts), Some(svc)) = (&wcfg.compile, &wservice) {
+                    if !compile_failed {
+                        let t0 = Instant::now();
+                        match svc
+                            .lock()
+                            .expect("compile service poisoned")
+                            .compile(&opts.module, opts.mode)
+                        {
+                            Ok((_plan, hit)) => {
+                                stats.compile_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                                if hit {
+                                    stats.cache_hits += 1;
+                                } else {
+                                    stats.cache_misses += 1;
+                                }
+                            }
+                            Err(e) => {
+                                // Don't re-pay the full cold pipeline on
+                                // every batch for a module that cannot
+                                // compile; serve uncompiled and report.
+                                stats.compile_failures += 1;
+                                compile_failed = true;
+                                eprintln!("serving-path compile failed (disabling): {e:#}");
+                            }
+                        }
+                    }
+                }
                 // Assemble the padded batch input.
                 let mut input = vec![0f32; batch_elems];
                 for (i, req) in batch.iter().enumerate() {
@@ -117,11 +233,17 @@ impl ServingCoordinator {
             .inspect_err(|_| {
                 let _ = worker.thread();
             })?;
-        Ok(ServingCoordinator { tx: Some(tx), worker: Some(worker), cfg })
+        Ok(ServingCoordinator { tx: Some(tx), worker: Some(worker), cfg, service })
     }
 
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
+    }
+
+    /// The compilation cache behind this loop (None without
+    /// [`ServerConfig::compile`]).
+    pub fn compile_service(&self) -> Option<&Arc<Mutex<CompileService>>> {
+        self.service.as_ref()
     }
 
     /// Submit one request and block for its output. Returns the output
@@ -129,10 +251,11 @@ impl ServingCoordinator {
     pub fn infer(&self, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
         let (rtx, rrx) = mpsc::channel();
         let enqueued = Instant::now();
+        let shape_key = input.len() as u64;
         self.tx
             .as_ref()
             .context("server stopped")?
-            .send(Request { input, respond: rtx, enqueued })
+            .send(Request { input, shape_key, respond: rtx, enqueued })
             .map_err(|_| anyhow!("worker gone"))?;
         let out = rrx.recv().context("worker dropped response")??;
         Ok((out, enqueued.elapsed()))
@@ -144,10 +267,11 @@ impl ServingCoordinator {
         input: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
         let (rtx, rrx) = mpsc::channel();
+        let shape_key = input.len() as u64;
         self.tx
             .as_ref()
             .context("server stopped")?
-            .send(Request { input, respond: rtx, enqueued: Instant::now() })
+            .send(Request { input, shape_key, respond: rtx, enqueued: Instant::now() })
             .map_err(|_| anyhow!("worker gone"))?;
         Ok(rrx)
     }
@@ -179,20 +303,21 @@ ENTRY main {
 }
 "#;
 
+    fn config() -> ServerConfig {
+        ServerConfig {
+            artifact: "double".into(),
+            batch: 4,
+            in_elems_per_request: 3,
+            out_elems_per_request: 3,
+            input_dims: vec![4, 3],
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+            compile: None,
+        }
+    }
+
     fn server(dir: &TempDir) -> ServingCoordinator {
         std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
-        ServingCoordinator::start(
-            dir.path(),
-            ServerConfig {
-                artifact: "double".into(),
-                batch: 4,
-                in_elems_per_request: 3,
-                out_elems_per_request: 3,
-                input_dims: vec![4, 3],
-                policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
-            },
-        )
-        .unwrap()
+        ServingCoordinator::start(dir.path(), config()).unwrap()
     }
 
     #[test]
@@ -231,5 +356,45 @@ ENTRY main {
         let stats = srv.shutdown().unwrap();
         assert_eq!(stats.requests, 1);
         assert_eq!(rx.recv().unwrap().unwrap(), vec![10.0, 10.0, 10.0]);
+    }
+
+    #[test]
+    fn compile_once_serving_hits_cache_after_first_batch() {
+        use crate::hlo::{GraphBuilder, Module, Shape};
+
+        let dir = TempDir::new("srv4");
+        std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+
+        // A small stand-in for the served module — what the compile
+        // service fingerprints and caches.
+        let mut b = GraphBuilder::new("entry");
+        let x = b.param("x", Shape::f32(&[4, 3]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let module = Module::new("served", b.finish(t));
+
+        let mut cfg = config();
+        cfg.compile = Some(CompileOptions {
+            module,
+            mode: FusionMode::FusionStitching,
+            pipeline: PipelineConfig::default(),
+        });
+        let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
+
+        // Sequential round-trips force separate batches.
+        for i in 0..3 {
+            let (out, _) = srv.infer(vec![i as f32; 3]).unwrap();
+            assert_eq!(out, vec![2.0 * i as f32; 3]);
+        }
+        let service = srv.compile_service().unwrap().clone();
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.batches, 3);
+        assert_eq!(stats.cache_misses, 1, "only the first batch compiles cold");
+        assert_eq!(stats.cache_hits, 2);
+        assert!(stats.cache_hit_rate() > 0.6);
+        assert_eq!(stats.compile_us.len(), 3);
+        // the service agrees with the worker's view
+        let s = service.lock().unwrap().stats();
+        assert_eq!((s.hits, s.misses), (2, 1));
     }
 }

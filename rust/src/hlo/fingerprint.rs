@@ -1,0 +1,398 @@
+//! Canonicalization + structural fingerprinting of HLO graphs.
+//!
+//! Compile-once serving needs a cache key that identifies a computation
+//! by *structure*, not by identity: two modules describing the same
+//! dataflow graph must collide even when their instruction ids, textual
+//! names or construction order differ. The fingerprint here is a
+//! 128-bit FNV-1a hash over a canonical encoding of the graph:
+//!
+//! - every instruction hashes its opcode, output shape (dtype + dims),
+//!   the op attributes that affect semantics, its while-frame, and the
+//!   *hashes* of its operands (in operand order — operand position is
+//!   semantic);
+//! - instruction ids and names never enter the hash, so renumbering or
+//!   renaming cannot change it;
+//! - the module fingerprint combines the graph outputs (as an unordered
+//!   multiset of hashes, with the designated root distinguished), the
+//!   instruction count and the node-hash multiset — so value-sharing
+//!   differences (one shared `exp` vs. two duplicated `exp`s) produce
+//!   different fingerprints even though the outputs agree.
+//!
+//! Everything downstream keys on [`Fingerprint`]: the
+//! [`crate::coordinator::cache::CompileCache`] uses it (together with
+//! the fusion mode and device) as the memo key, and
+//! [`crate::schedule::PerfLibrary`] persists tuned group schedules
+//! under fingerprint-derived keys so tuning work survives across
+//! processes.
+//!
+//! ```
+//! use fusion_stitching::hlo::fingerprint::fingerprint_module;
+//! use fusion_stitching::hlo::{GraphBuilder, Module, Shape};
+//!
+//! let build = |tag: &str| {
+//!     let mut b = GraphBuilder::new(tag);
+//!     let x = b.param("x", Shape::f32(&[8, 16]));
+//!     let e = b.exp(x);
+//!     let t = b.tanh(e);
+//!     Module::new(tag, b.finish(t))
+//! };
+//! // Same structure, different module/instruction names → same hash.
+//! assert_eq!(fingerprint_module(&build("a")), fingerprint_module(&build("b")));
+//! ```
+
+use super::computation::{Computation, InstrId};
+use super::instruction::Instruction;
+use super::module::Module;
+use std::fmt;
+
+/// A 128-bit structural hash of a computation graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Fingerprint(pub u128);
+
+impl Fingerprint {
+    /// The low 64 bits — enough for in-memory tables where 128-bit keys
+    /// are inconvenient.
+    pub fn short(&self) -> u64 {
+        self.0 as u64
+    }
+
+    /// Canonical 32-hex-digit rendering (used in perf-library keys and
+    /// logs).
+    pub fn to_hex(&self) -> String {
+        format!("{:032x}", self.0)
+    }
+}
+
+impl fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+// 128-bit FNV-1a — deterministic, dependency-free, and fast enough for
+// graphs of a few hundred instructions.
+const FNV_OFFSET: u128 = 0x6c62272e07bb014262b821756295c58d;
+const FNV_PRIME: u128 = 0x0000000001000000000000000000013b;
+
+#[derive(Clone, Copy)]
+struct Fnv(u128);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(FNV_OFFSET)
+    }
+
+    fn byte(&mut self, b: u8) {
+        self.0 ^= b as u128;
+        self.0 = self.0.wrapping_mul(FNV_PRIME);
+    }
+
+    fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.byte(b);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn u128(&mut self, v: u128) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn i64(&mut self, v: i64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn usize_list(&mut self, tag: u8, xs: &[usize]) {
+        self.byte(tag);
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.u64(x as u64);
+        }
+    }
+
+    fn i64_list(&mut self, tag: u8, xs: &[i64]) {
+        self.byte(tag);
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.i64(x);
+        }
+    }
+
+    fn finish(self) -> u128 {
+        self.0
+    }
+}
+
+/// Structural hash of one instruction given its operands' hashes.
+fn instruction_hash(instr: &Instruction, operand_hashes: &[u128]) -> u128 {
+    let mut h = Fnv::new();
+    h.byte(instr.opcode as u8);
+    // Output shape: dtype tag + dims.
+    h.byte(instr.shape.dtype.byte_size() as u8);
+    h.bytes(instr.shape.dtype.to_string().as_bytes());
+    h.i64_list(b'S', &instr.shape.dims);
+    // While-frame context: fusion never crosses frames, so structure
+    // inside different frames is distinct structure.
+    h.u64(instr.frame as u64);
+    // Semantic attributes only — never the instruction name.
+    let a = &instr.attrs;
+    if let Some(n) = a.parameter_number {
+        h.byte(b'p');
+        h.u64(n as u64);
+    }
+    if let Some(p) = &a.transpose_perm {
+        h.usize_list(b't', p);
+    }
+    if let Some(d) = &a.reduce_dims {
+        h.usize_list(b'r', d);
+    }
+    if let Some(k) = a.reduce_kind {
+        h.byte(b'k');
+        h.byte(k as u8);
+    }
+    if let Some(d) = &a.broadcast_dims {
+        h.usize_list(b'b', d);
+    }
+    if let Some(d) = a.concat_dim {
+        h.byte(b'c');
+        h.u64(d as u64);
+    }
+    if let Some(s) = &a.slice_starts {
+        h.i64_list(b's', s);
+    }
+    if let Some(l) = &a.slice_limits {
+        h.i64_list(b'l', l);
+    }
+    if let Some(t) = &a.custom_call_target {
+        h.byte(b'x');
+        h.bytes(t.as_bytes());
+    }
+    if let Some(i) = a.tuple_index {
+        h.byte(b'i');
+        h.u64(i as u64);
+    }
+    // Operands in order — position is semantic (subtract, slice, …).
+    h.byte(b'O');
+    h.u64(operand_hashes.len() as u64);
+    for &oh in operand_hashes {
+        h.u128(oh);
+    }
+    h.finish()
+}
+
+/// Per-instruction structural hashes, indexed by [`InstrId`]. Computed
+/// in one topological sweep (operands always precede users in the
+/// arena).
+pub fn instruction_hashes(comp: &Computation) -> Vec<u128> {
+    let mut hashes: Vec<u128> = Vec::with_capacity(comp.len());
+    for id in comp.ids() {
+        let instr = comp.get(id);
+        let op_hashes: Vec<u128> = instr.operands.iter().map(|o| hashes[o.0]).collect();
+        hashes.push(instruction_hash(instr, &op_hashes));
+    }
+    hashes
+}
+
+/// Fingerprint a whole computation (see the module docs for what the
+/// hash covers).
+pub fn fingerprint_computation(comp: &Computation) -> Fingerprint {
+    let hashes = instruction_hashes(comp);
+    let mut h = Fnv::new();
+    h.u64(comp.len() as u64);
+
+    // Node multiset: wrapping sums are order-independent, so the id
+    // numbering cannot leak in, while duplicated subgraphs (no sharing)
+    // still shift the sum relative to shared ones.
+    let mut node_sum: u128 = 0;
+    let mut node_xor: u128 = 0;
+    for &nh in &hashes {
+        node_sum = node_sum.wrapping_add(nh);
+        node_xor ^= nh.rotate_left((nh % 127) as u32);
+    }
+    h.u128(node_sum);
+    h.u128(node_xor);
+
+    // Outputs as a sorted (id-independent) list; the designated root is
+    // hashed separately because it is semantically distinguished.
+    let mut out_hashes: Vec<u128> = comp.outputs().iter().map(|o| hashes[o.0]).collect();
+    out_hashes.sort_unstable();
+    h.byte(b'R');
+    h.u64(out_hashes.len() as u64);
+    for oh in out_hashes {
+        h.u128(oh);
+    }
+    if comp.has_root() {
+        h.byte(b'r');
+        h.u128(hashes[comp.root().0]);
+    }
+    Fingerprint(h.finish())
+}
+
+/// Fingerprint a module (its entry computation; the module *name* is
+/// deliberately excluded — serving replicas deploy the same graph under
+/// different labels).
+pub fn fingerprint_module(module: &Module) -> Fingerprint {
+    fingerprint_computation(&module.entry)
+}
+
+/// A canonical, id-independent instruction order: topological
+/// (operands first), with ties broken by structural hash. Two
+/// renumberings of the same graph produce the same *sequence of
+/// structural hashes* under this order — which is what "canonical" has
+/// to mean when ids themselves are arbitrary.
+pub fn canonical_order(comp: &Computation) -> Vec<InstrId> {
+    let hashes = instruction_hashes(comp);
+    let mut order: Vec<InstrId> = comp.ids().collect();
+    // Sort by (depth-from-leaves, hash): depth keeps the order
+    // topological, the hash removes id dependence inside a depth level.
+    let mut depth = vec![0usize; comp.len()];
+    for id in comp.ids() {
+        let d = comp
+            .get(id)
+            .operands
+            .iter()
+            .map(|o| depth[o.0] + 1)
+            .max()
+            .unwrap_or(0);
+        depth[id.0] = d;
+    }
+    order.sort_by_key(|id| (depth[id.0], hashes[id.0], id.0));
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    fn softmax_like(name: &str) -> Computation {
+        let mut b = GraphBuilder::new(name);
+        let x = b.param("x", Shape::f32(&[8, 64]));
+        let m = b.reduce(x, &[1], ReduceKind::Max);
+        let mb = b.broadcast(m, &[8, 64], &[0]);
+        let sh = b.sub(x, mb);
+        let e = b.exp(sh);
+        b.finish(e)
+    }
+
+    #[test]
+    fn deterministic_and_name_invariant() {
+        let a = softmax_like("a");
+        let mut b = softmax_like("completely_different");
+        // rename every instruction
+        for id in b.ids().collect::<Vec<_>>() {
+            b.get_mut(id).name = format!("renamed_{}", id.0);
+        }
+        assert_eq!(fingerprint_computation(&a), fingerprint_computation(&b));
+    }
+
+    #[test]
+    fn id_numbering_invariant() {
+        // Same dataflow, different construction interleaving → different
+        // instruction ids for the same logical nodes.
+        let mut b1 = GraphBuilder::new("g1");
+        let x1 = b1.param("x", Shape::f32(&[16]));
+        let y1 = b1.param("y", Shape::f32(&[16]));
+        let e1 = b1.exp(x1);
+        let t1 = b1.tanh(y1);
+        let s1 = b1.add(e1, t1);
+        let c1 = b1.finish(s1);
+
+        let mut b2 = GraphBuilder::new("g2");
+        let x2 = b2.param("x", Shape::f32(&[16]));
+        let y2 = b2.param("y", Shape::f32(&[16]));
+        let t2 = b2.tanh(y2); // built before the exp this time
+        let e2 = b2.exp(x2);
+        let s2 = b2.add(e2, t2);
+        let c2 = b2.finish(s2);
+
+        assert_eq!(fingerprint_computation(&c1), fingerprint_computation(&c2));
+    }
+
+    #[test]
+    fn shape_change_changes_hash() {
+        let a = softmax_like("a");
+        let mut b = GraphBuilder::new("b");
+        let x = b.param("x", Shape::f32(&[8, 128])); // wider
+        let m = b.reduce(x, &[1], ReduceKind::Max);
+        let mb = b.broadcast(m, &[8, 128], &[0]);
+        let sh = b.sub(x, mb);
+        let e = b.exp(sh);
+        let c = b.finish(e);
+        assert_ne!(fingerprint_computation(&a), fingerprint_computation(&c));
+    }
+
+    #[test]
+    fn opcode_change_changes_hash() {
+        let a = softmax_like("a");
+        let mut b = GraphBuilder::new("b");
+        let x = b.param("x", Shape::f32(&[8, 64]));
+        let m = b.reduce(x, &[1], ReduceKind::Sum); // Max → Sum
+        let mb = b.broadcast(m, &[8, 64], &[0]);
+        let sh = b.sub(x, mb);
+        let e = b.exp(sh);
+        let c = b.finish(e);
+        assert_ne!(fingerprint_computation(&a), fingerprint_computation(&c));
+    }
+
+    #[test]
+    fn operand_order_is_semantic() {
+        let mk = |swap: bool| {
+            let mut b = GraphBuilder::new("s");
+            let x = b.param("x", Shape::f32(&[4]));
+            let y = b.param("y", Shape::f32(&[4]));
+            let d = if swap { b.sub(y, x) } else { b.sub(x, y) };
+            b.finish(d)
+        };
+        assert_ne!(
+            fingerprint_computation(&mk(false)),
+            fingerprint_computation(&mk(true))
+        );
+    }
+
+    #[test]
+    fn sharing_differs_from_duplication() {
+        // add(exp(x), exp(x)) with one shared exp vs two duplicate exps:
+        // same outputs, different graphs → different fingerprints.
+        let mut b1 = GraphBuilder::new("shared");
+        let x1 = b1.param("x", Shape::f32(&[4]));
+        let e1 = b1.exp(x1);
+        let s1 = b1.add(e1, e1);
+        let c1 = b1.finish(s1);
+
+        let mut b2 = GraphBuilder::new("dup");
+        let x2 = b2.param("x", Shape::f32(&[4]));
+        let ea = b2.exp(x2);
+        let eb = b2.exp(x2);
+        let s2 = b2.add(ea, eb);
+        let c2 = b2.finish(s2);
+
+        assert_ne!(fingerprint_computation(&c1), fingerprint_computation(&c2));
+    }
+
+    #[test]
+    fn canonical_order_is_topological_and_stable() {
+        let c = softmax_like("a");
+        let order = canonical_order(&c);
+        assert_eq!(order.len(), c.len());
+        let pos = |id: InstrId| order.iter().position(|&x| x == id).unwrap();
+        for id in c.ids() {
+            for &op in &c.get(id).operands {
+                assert!(pos(op) < pos(id), "operand after user in canonical order");
+            }
+        }
+        assert_eq!(order, canonical_order(&c));
+    }
+
+    #[test]
+    fn hex_rendering_is_32_digits() {
+        let fp = fingerprint_computation(&softmax_like("a"));
+        assert_eq!(fp.to_hex().len(), 32);
+        assert_eq!(fp.to_string(), fp.to_hex());
+        assert_eq!(fp.short(), fp.0 as u64);
+    }
+}

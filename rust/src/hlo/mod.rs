@@ -8,6 +8,7 @@
 
 pub mod builder;
 pub mod computation;
+pub mod fingerprint;
 pub mod instruction;
 pub mod module;
 pub mod opcode;
@@ -18,6 +19,7 @@ pub mod verifier;
 
 pub use builder::GraphBuilder;
 pub use computation::{Computation, InstrId};
+pub use fingerprint::{fingerprint_computation, fingerprint_module, Fingerprint};
 pub use instruction::{Instruction, ReduceKind};
 pub use module::Module;
 pub use opcode::Opcode;

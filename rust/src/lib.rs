@@ -10,7 +10,9 @@
 //! - [`hlo`] — the HLO-like intermediate representation every pass
 //!   operates on (substrate; mirrors the XLA `HloModule` subset the paper
 //!   needs: elementwise, shape-modulation, reduce, batch-dot, library
-//!   calls, while-frames).
+//!   calls, while-frames), plus canonicalization + structural
+//!   fingerprinting ([`hlo::fingerprint`]) — the identity the
+//!   compilation cache keys on.
 //! - [`analysis`] — Work/Span (critical path) analysis, while-loop frame
 //!   contexts, dominance trees and memory-footprint accounting (§3.1,
 //!   §5.1.3 of the paper).
@@ -27,10 +29,16 @@
 //!   for the paper's physical GPU + nvprof (see DESIGN.md substitutions).
 //! - [`models`] — the six benchmark graphs of Table 2.
 //! - [`corpus`] — synthetic model corpus regenerating Figure 1.
-//! - [`runtime`] — PJRT CPU client wrapper executing AOT-lowered JAX/Pallas
-//!   artifacts from Rust (the numeric hot path).
-//! - [`coordinator`] — the end-to-end pipeline driver and the NMT online
-//!   serving loop (dynamic batching over the runtime).
+//! - [`runtime`] — the execution runtime for AOT-lowered JAX/Pallas
+//!   artifacts (HLO-text interpreter standing in for the PJRT CPU
+//!   client; the numeric hot path).
+//! - [`coordinator`] — the end-to-end pipeline driver (a pass manager
+//!   with per-pass instrumentation), the fingerprint-keyed compilation
+//!   cache for compile-once serving, and the NMT online serving loop
+//!   (shape-keyed dynamic batching over the runtime).
+//!
+//! Architecture, the paper-section ↔ module map and every cost-model
+//! substitution are documented in `DESIGN.md` at the repository root.
 
 pub mod analysis;
 pub mod codegen;

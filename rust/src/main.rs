@@ -9,9 +9,7 @@
 //!
 //! (Hand-rolled argument parsing: the offline image carries no clap.)
 
-use fusion_stitching::coordinator::pipeline::{
-    compile_module, evaluate, geomean, FusionMode, PipelineConfig,
-};
+use fusion_stitching::coordinator::pipeline::{evaluate, geomean, FusionMode, PipelineConfig};
 use fusion_stitching::coordinator::{ServerConfig, ServingCoordinator};
 use fusion_stitching::corpus::generator::{self, CorpusConfig};
 use fusion_stitching::corpus::{percentiles, OpClass};
@@ -160,8 +158,13 @@ fn cmd_compile(args: &[String]) -> i32 {
         }
     };
     let mut lib = perf_library(args);
-    match compile_module(&module, mode, &mut lib, &PipelineConfig::default()) {
-        Ok(compiled) => {
+    match fusion_stitching::coordinator::compile_module_traced(
+        &module,
+        mode,
+        &mut lib,
+        &PipelineConfig::default(),
+    ) {
+        Ok((compiled, trace)) => {
             println!(
                 "{}: {:?} → {} generated kernels, {} library calls, simulated {:.1} us",
                 compiled.name,
@@ -170,6 +173,10 @@ fn cmd_compile(args: &[String]) -> i32 {
                 compiled.plan.library_call_count(),
                 compiled.timing.total_us()
             );
+            println!("fingerprint: {}", compiled.fingerprint);
+            if args.iter().any(|a| a == "--passes") {
+                println!("{trace}");
+            }
             let (avg, max, shrinks, shared) = compiled.shm_stats();
             println!(
                 "shm: avg {avg:.0} B, max {max} B, #shrink {shrinks}, shared ratio {shared:.2}"
@@ -234,11 +241,20 @@ fn cmd_corpus(args: &[String]) -> i32 {
 fn cmd_serve(args: &[String]) -> i32 {
     use fusion_stitching::coordinator::batcher::BatchPolicy;
     use fusion_stitching::coordinator::metrics::LatencyRecorder;
+    use fusion_stitching::coordinator::server::CompileOptions;
 
     let requests: usize =
         flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
     let artifact = flag_value(args, "--artifact").unwrap_or("attention_fused").to_string();
     let dir = PathBuf::from(flag_value(args, "--artifacts-dir").unwrap_or("artifacts"));
+
+    // Compile-once serving: every batch routes through the compilation
+    // cache for the NMT module; the first pays fusion+tuning, the rest hit.
+    let compile = models::by_name("NMT").map(|(meta, module)| {
+        let mut pipeline = PipelineConfig::default();
+        pipeline.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        CompileOptions { module, mode: FusionMode::FusionStitching, pipeline }
+    });
 
     // Shapes baked by python/compile/aot.py for the NMT attention block.
     let (batch, seq, model_d, out_d) = (8usize, 64usize, 512usize, 64usize);
@@ -249,6 +265,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         out_elems_per_request: seq * out_d,
         input_dims: vec![(batch * seq) as i64, model_d as i64],
         policy: BatchPolicy::default(),
+        compile,
     };
     let srv = match ServingCoordinator::start(&dir, cfg.clone()) {
         Ok(s) => s,
@@ -284,5 +301,21 @@ fn cmd_serve(args: &[String]) -> i32 {
         lat.percentile_us(95.0) / 1e3,
         lat.throughput_rps(wall),
     );
+    if stats.cache_hits + stats.cache_misses > 0 {
+        let cold = stats.compile_us.first().copied().unwrap_or(0.0);
+        let warm = if stats.compile_us.len() > 1 {
+            stats.compile_us[1..].iter().sum::<f64>() / (stats.compile_us.len() - 1) as f64
+        } else {
+            0.0
+        };
+        println!(
+            "compile cache: {} hits / {} misses (hit-rate {:.0}%), cold {:.0} us, warm {:.1} us",
+            stats.cache_hits,
+            stats.cache_misses,
+            100.0 * stats.cache_hit_rate(),
+            cold,
+            warm,
+        );
+    }
     0
 }

@@ -1,44 +1,45 @@
-//! PJRT CPU client wrapper.
+//! The runtime client: loads HLO **text** artifacts for execution.
 //!
-//! HLO **text** is the interchange format: jax ≥ 0.5 serializes
-//! `HloModuleProto`s with 64-bit instruction ids that the crate's
-//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
-//! round-trips cleanly (see /opt/xla-example/README.md).
+//! HLO text is the interchange format: jax ≥ 0.5 serializes
+//! `HloModuleProto`s with 64-bit instruction ids that older PJRT
+//! bindings reject; the text form round-trips cleanly and stays
+//! human-diffable. Execution is handled by the dependency-free
+//! interpreter in [`super::interp`] (see its module docs for why the
+//! PJRT C++ bindings are not linked in this image); this wrapper keeps
+//! the PJRT-client surface (`cpu()`, `platform()`, `device_count()`,
+//! `load_hlo_text()`) so a real backend can be swapped back in without
+//! touching callers.
 
+use super::interp::HloProgram;
 use anyhow::{Context, Result};
 use std::path::Path;
 
-/// Owns the PJRT client. One per process; executables share it.
+/// Owns the execution backend. One per process; executables share it.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    platform: &'static str,
 }
 
 impl Runtime {
-    /// Create the CPU PJRT client (the paper's GPU backend is simulated;
-    /// numerics run on the XLA CPU backend).
+    /// Create the CPU runtime (the paper's GPU backend is simulated by
+    /// [`crate::gpusim`]; numerics run on the host CPU).
     pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
+        Ok(Runtime { platform: "cpu" })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.to_string()
     }
 
     pub fn device_count(&self) -> usize {
-        self.client.device_count()
+        1
     }
 
-    /// Load an HLO-text artifact and compile it to an executable.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        self.client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))
+    /// Load an HLO-text artifact and prepare it for execution.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<HloProgram> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading HLO text {}", path.display()))?;
+        HloProgram::parse(&text)
+            .with_context(|| format!("parsing HLO text {}", path.display()))
     }
 }
 

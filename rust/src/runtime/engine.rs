@@ -1,6 +1,7 @@
 //! Artifact registry + typed execution wrapper over compiled models.
 
 use super::client::Runtime;
+use super::interp::HloProgram;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -8,32 +9,26 @@ use std::path::{Path, PathBuf};
 /// A compiled artifact ready to execute.
 pub struct LoadedModel {
     pub name: String,
-    exe: xla::PjRtLoadedExecutable,
+    exe: HloProgram,
 }
 
 impl LoadedModel {
     /// Execute with f32 inputs given as `(data, dims)` pairs; returns the
     /// flattened f32 outputs (artifacts are lowered with
-    /// `return_tuple=True`, so the single result literal is a tuple).
+    /// `return_tuple=True`, so the root is usually a tuple; each tuple
+    /// element becomes one output buffer).
     pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
+        let buffers: Vec<Vec<f32>> = inputs
             .iter()
-            .map(|(data, dims)| -> Result<xla::Literal> {
+            .map(|(data, dims)| -> Result<Vec<f32>> {
                 let expect: i64 = dims.iter().product();
                 if expect != data.len() as i64 {
                     bail!("input length {} does not match dims {dims:?}", data.len());
                 }
-                Ok(xla::Literal::vec1(data).reshape(dims)?)
+                Ok(data.to_vec())
             })
             .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let out = result
-            .first()
-            .and_then(|per_device| per_device.first())
-            .context("executable returned no output")?
-            .to_literal_sync()?;
-        let parts = out.to_tuple()?;
-        parts.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+        self.exe.execute(&buffers)
     }
 }
 

@@ -1,0 +1,400 @@
+//! A minimal interpreter for XLA HLO **text** artifacts.
+//!
+//! The original runtime layer wrapped a PJRT CPU client through the
+//! `xla` (xla_extension) bindings. That crate needs a multi-gigabyte
+//! C++ `xla_extension` install at build time, which the offline image
+//! does not carry — so the numeric hot path is served by this small,
+//! dependency-free interpreter instead. It understands the subset of
+//! HLO text that `python/compile/aot.py` emits for the paper's
+//! artifacts (flat f32 graphs of parameters, elementwise ops, tuples)
+//! and executes them exactly; anything outside the subset fails loudly
+//! at load time. Swapping a real PJRT backend back in only touches
+//! [`super::client`] — the [`HloProgram`] API is shaped like a loaded
+//! executable on purpose.
+//!
+//! Scope note: full-size artifacts freshly lowered by jax (the
+//! attention/layernorm pairs) use a wider opcode set (`dot`, `reduce`
+//! with regions, `call`, `convert`, …) than this interpreter carries —
+//! executing those requires the real PJRT backend, which is why the
+//! artifact-dependent tests/benches skip cleanly when `artifacts/` is
+//! absent. The serving-loop and engine tests here use artifacts within
+//! the subset.
+//!
+//! ```
+//! use fusion_stitching::runtime::interp::HloProgram;
+//! let text = "HloModule double\n\nENTRY main {\n  p0 = f32[2]{0} parameter(0)\n  s = f32[2]{0} add(p0, p0)\n  ROOT t = (f32[2]{0}) tuple(s)\n}\n";
+//! let prog = HloProgram::parse(text).unwrap();
+//! let out = prog.execute(&[vec![1.0, 2.5]]).unwrap();
+//! assert_eq!(out, vec![vec![2.0, 5.0]]);
+//! ```
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// The supported operation subset. Everything is dense f32.
+#[derive(Debug, Clone, PartialEq)]
+enum Op {
+    Parameter(usize),
+    Constant(f32),
+    Add,
+    Subtract,
+    Multiply,
+    Divide,
+    Maximum,
+    Minimum,
+    Exp,
+    Log,
+    Tanh,
+    Sqrt,
+    Rsqrt,
+    Negate,
+    Abs,
+    Copy,
+    /// Splat a scalar (or pass an equal-sized operand through).
+    Broadcast,
+    Tuple,
+}
+
+#[derive(Debug, Clone)]
+struct Instr {
+    name: String,
+    op: Op,
+    /// Output element count; 0 for tuples (their shape is the operands').
+    elems: usize,
+    operands: Vec<usize>,
+}
+
+/// A parsed, executable HLO-text module.
+#[derive(Debug, Clone)]
+pub struct HloProgram {
+    name: String,
+    instrs: Vec<Instr>,
+    /// Instruction indices of parameters, ordered by parameter number.
+    params: Vec<usize>,
+    root: usize,
+}
+
+impl HloProgram {
+    /// Module name from the `HloModule` header.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of entry parameters.
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Parse the ENTRY computation of an HLO text module.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut name = String::from("module");
+        let mut instrs: Vec<Instr> = Vec::new();
+        let mut index: HashMap<String, usize> = HashMap::new();
+        let mut params: Vec<(usize, usize)> = Vec::new(); // (param number, instr idx)
+        let mut root: Option<usize> = None;
+        let mut in_entry = false;
+
+        for raw in text.lines() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with("//") {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("HloModule ") {
+                name = rest.split([',', ' ']).next().unwrap_or("module").to_string();
+                continue;
+            }
+            if line.starts_with("ENTRY ") {
+                in_entry = true;
+                continue;
+            }
+            if !in_entry {
+                continue;
+            }
+            if line == "}" {
+                in_entry = false;
+                continue;
+            }
+            let (is_root, instr) =
+                parse_instruction(line, &index).with_context(|| format!("in line: {line}"))?;
+            let idx = instrs.len();
+            if let Op::Parameter(n) = instr.op {
+                params.push((n, idx));
+            }
+            if is_root {
+                root = Some(idx);
+            }
+            index.insert(instr.name.clone(), idx);
+            instrs.push(instr);
+        }
+
+        let root = root.ok_or_else(|| anyhow!("module {name} has no ROOT instruction"))?;
+        params.sort_by_key(|&(n, _)| n);
+        let params = params.into_iter().map(|(_, i)| i).collect();
+        Ok(HloProgram { name, instrs, params, root })
+    }
+
+    /// Execute with one flattened f32 buffer per parameter. Returns the
+    /// flattened output buffers: the root tuple's element values, or a
+    /// single buffer for a non-tuple root.
+    pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.params.len() {
+            bail!("expected {} inputs, got {}", self.params.len(), inputs.len());
+        }
+        let mut values: Vec<Option<Vec<f32>>> = vec![None; self.instrs.len()];
+        for (slot, input) in self.params.iter().zip(inputs) {
+            let want = self.instrs[*slot].elems;
+            if want != 0 && input.len() != want {
+                bail!(
+                    "parameter {} expects {} elements, got {}",
+                    self.instrs[*slot].name,
+                    want,
+                    input.len()
+                );
+            }
+            values[*slot] = Some(input.clone());
+        }
+
+        for (i, instr) in self.instrs.iter().enumerate() {
+            if values[i].is_some() || instr.op == Op::Tuple {
+                continue;
+            }
+            let v = self.eval(instr, &values)?;
+            values[i] = Some(v);
+        }
+
+        let root = &self.instrs[self.root];
+        let gather = |ix: usize| -> Result<Vec<f32>> {
+            values[ix]
+                .clone()
+                .ok_or_else(|| anyhow!("value of {} never computed", self.instrs[ix].name))
+        };
+        if root.op == Op::Tuple {
+            root.operands.iter().map(|&o| gather(o)).collect()
+        } else {
+            Ok(vec![gather(self.root)?])
+        }
+    }
+
+    fn eval(&self, instr: &Instr, values: &[Option<Vec<f32>>]) -> Result<Vec<f32>> {
+        let arg = |k: usize| -> Result<&Vec<f32>> {
+            let ix = *instr
+                .operands
+                .get(k)
+                .ok_or_else(|| anyhow!("{} missing operand {k}", instr.name))?;
+            values[ix]
+                .as_ref()
+                .ok_or_else(|| anyhow!("operand of {} not yet computed", instr.name))
+        };
+        let unary = |f: fn(f32) -> f32| -> Result<Vec<f32>> {
+            Ok(arg(0)?.iter().map(|&x| f(x)).collect())
+        };
+        let binary = |f: fn(f32, f32) -> f32| -> Result<Vec<f32>> {
+            let (a, b) = (arg(0)?, arg(1)?);
+            if a.len() != b.len() {
+                bail!("{}: operand length mismatch {} vs {}", instr.name, a.len(), b.len());
+            }
+            Ok(a.iter().zip(b).map(|(&x, &y)| f(x, y)).collect())
+        };
+        match instr.op {
+            Op::Parameter(_) => bail!("parameter {} was not bound", instr.name),
+            Op::Constant(c) => {
+                Ok(vec![c; instr.elems.max(1)])
+            }
+            Op::Add => binary(|x, y| x + y),
+            Op::Subtract => binary(|x, y| x - y),
+            Op::Multiply => binary(|x, y| x * y),
+            Op::Divide => binary(|x, y| x / y),
+            Op::Maximum => binary(f32::max),
+            Op::Minimum => binary(f32::min),
+            Op::Exp => unary(f32::exp),
+            Op::Log => unary(f32::ln),
+            Op::Tanh => unary(f32::tanh),
+            Op::Sqrt => unary(f32::sqrt),
+            Op::Rsqrt => unary(|x| 1.0 / x.sqrt()),
+            Op::Negate => unary(|x| -x),
+            Op::Abs => unary(f32::abs),
+            Op::Copy => Ok(arg(0)?.clone()),
+            Op::Broadcast => {
+                let a = arg(0)?;
+                if instr.elems != 0 && a.len() == instr.elems {
+                    Ok(a.clone())
+                } else if a.len() == 1 {
+                    Ok(vec![a[0]; instr.elems.max(1)])
+                } else {
+                    bail!(
+                        "{}: unsupported broadcast {} -> {} elements",
+                        instr.name,
+                        a.len(),
+                        instr.elems
+                    )
+                }
+            }
+            Op::Tuple => bail!("tuple {} is not a value", instr.name),
+        }
+    }
+}
+
+/// Opcode keywords recognised in artifact text, longest-match first.
+const OPCODES: &[(&str, fn(&str) -> Result<Op>)] = &[
+    ("parameter", |args| Ok(Op::Parameter(args.trim().parse()?))),
+    ("constant", |args| Ok(Op::Constant(args.trim().parse()?))),
+    ("add", |_| Ok(Op::Add)),
+    ("subtract", |_| Ok(Op::Subtract)),
+    ("multiply", |_| Ok(Op::Multiply)),
+    ("divide", |_| Ok(Op::Divide)),
+    ("maximum", |_| Ok(Op::Maximum)),
+    ("minimum", |_| Ok(Op::Minimum)),
+    ("exponential", |_| Ok(Op::Exp)),
+    ("log", |_| Ok(Op::Log)),
+    ("tanh", |_| Ok(Op::Tanh)),
+    ("sqrt", |_| Ok(Op::Sqrt)),
+    ("rsqrt", |_| Ok(Op::Rsqrt)),
+    ("negate", |_| Ok(Op::Negate)),
+    ("abs", |_| Ok(Op::Abs)),
+    ("copy", |_| Ok(Op::Copy)),
+    ("broadcast", |_| Ok(Op::Broadcast)),
+    ("tuple", |_| Ok(Op::Tuple)),
+];
+
+/// Parse one `name = shape opcode(operands)[, metadata]` line.
+fn parse_instruction(line: &str, index: &HashMap<String, usize>) -> Result<(bool, Instr)> {
+    let (lhs, rhs) = line.split_once('=').ok_or_else(|| anyhow!("no '='"))?;
+    let lhs = lhs.trim();
+    let (is_root, name) = match lhs.strip_prefix("ROOT ") {
+        Some(n) => (true, n.trim()),
+        None => (false, lhs),
+    };
+    let rhs = rhs.trim();
+
+    // Locate `<opcode>(` preceded by whitespace; the prefix is the shape.
+    let mut found: Option<(usize, &str, fn(&str) -> Result<Op>)> = None;
+    for &(kw, build) in OPCODES {
+        let pat = format!("{kw}(");
+        let mut from = 0;
+        while let Some(rel) = rhs[from..].find(&pat) {
+            let pos = from + rel;
+            let preceded_ok =
+                pos == 0 || rhs[..pos].chars().next_back().map_or(false, char::is_whitespace);
+            let better = match found {
+                None => true,
+                Some((p, k, _)) => pos < p || (pos == p && kw.len() > k.len()),
+            };
+            if preceded_ok && better {
+                found = Some((pos, kw, build));
+            }
+            from = pos + pat.len();
+        }
+    }
+    let (pos, kw, build) = found.ok_or_else(|| anyhow!("no supported opcode found"))?;
+
+    let shape_text = rhs[..pos].trim();
+    let elems = shape_elements(shape_text);
+
+    let args_start = pos + kw.len() + 1;
+    let args_end = rhs[args_start..]
+        .find(')')
+        .map(|r| args_start + r)
+        .ok_or_else(|| anyhow!("unclosed operand list"))?;
+    let args = &rhs[args_start..args_end];
+
+    let op = build(args)?;
+    let operands: Vec<usize> = match op {
+        Op::Parameter(_) | Op::Constant(_) => Vec::new(),
+        _ => args
+            .split(',')
+            .map(str::trim)
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                // Operands may be printed as `name` or `shape name`.
+                let t = t.rsplit(' ').next().unwrap_or(t);
+                index
+                    .get(t)
+                    .copied()
+                    .ok_or_else(|| anyhow!("unknown operand {t} (forward refs unsupported)"))
+            })
+            .collect::<Result<_>>()?,
+    };
+
+    Ok((is_root, Instr { name: name.to_string(), op, elems, operands }))
+}
+
+/// Element count of an `f32[...]`-style shape string; 0 when the shape is
+/// a tuple or malformed (then the operands' sizes govern).
+fn shape_elements(shape: &str) -> usize {
+    let Some(open) = shape.find('[') else { return 0 };
+    if shape.starts_with('(') {
+        return 0; // tuple shape
+    }
+    let Some(close) = shape[open..].find(']').map(|r| open + r) else { return 0 };
+    let body = &shape[open + 1..close];
+    if body.trim().is_empty() {
+        return 1; // scalar f32[]
+    }
+    body.split(',')
+        .map(|d| d.trim().parse::<usize>().unwrap_or(0))
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOUBLE: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+
+    #[test]
+    fn parses_and_doubles() {
+        let prog = HloProgram::parse(DOUBLE).unwrap();
+        assert_eq!(prog.name(), "double");
+        assert_eq!(prog.param_count(), 1);
+        let input: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let out = prog.execute(&[input.clone()]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], input.iter().map(|x| 2.0 * x).collect::<Vec<f32>>());
+    }
+
+    #[test]
+    fn elementwise_chain_and_constants() {
+        let text = "HloModule m\nENTRY e {\n  p0 = f32[3]{0} parameter(0)\n  c = f32[] constant(2.5)\n  cb = f32[3]{0} broadcast(c)\n  m = f32[3]{0} multiply(p0, cb)\n  ROOT t = f32[3]{0} tanh(m)\n}\n";
+        let prog = HloProgram::parse(text).unwrap();
+        let out = prog.execute(&[vec![0.0, 1.0, -1.0]]).unwrap();
+        assert_eq!(out[0][0], 0.0);
+        assert!((out[0][1] - (2.5f32).tanh()).abs() < 1e-6);
+        assert!((out[0][2] - (-2.5f32).tanh()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn non_tuple_root_returns_single_output() {
+        let text = "HloModule m\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT n = f32[2]{0} negate(p0)\n}\n";
+        let prog = HloProgram::parse(text).unwrap();
+        let out = prog.execute(&[vec![1.0, -2.0]]).unwrap();
+        assert_eq!(out, vec![vec![-1.0, 2.0]]);
+    }
+
+    #[test]
+    fn wrong_arity_rejected() {
+        let prog = HloProgram::parse(DOUBLE).unwrap();
+        assert!(prog.execute(&[]).is_err());
+        assert!(prog.execute(&[vec![0.0; 5]]).is_err());
+    }
+
+    #[test]
+    fn unsupported_opcode_rejected() {
+        let text = "HloModule m\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT d = f32[2,2]{1,0} dot(p0, p0)\n}\n";
+        assert!(HloProgram::parse(text).is_err());
+    }
+
+    #[test]
+    fn multi_parameter_order_follows_parameter_numbers() {
+        let text = "HloModule m\nENTRY e {\n  b = f32[2]{0} parameter(1)\n  a = f32[2]{0} parameter(0)\n  ROOT s = f32[2]{0} subtract(a, b)\n}\n";
+        let prog = HloProgram::parse(text).unwrap();
+        let out = prog.execute(&[vec![5.0, 5.0], vec![2.0, 3.0]]).unwrap();
+        assert_eq!(out[0], vec![3.0, 2.0]);
+    }
+}

@@ -1,9 +1,14 @@
-//! The PJRT runtime: loads AOT-compiled HLO artifacts (produced once by
-//! `python/compile/aot.py` from the JAX/Pallas layers) and executes them
-//! from Rust. Python never runs on this path.
+//! The execution runtime: loads AOT-compiled HLO artifacts (produced
+//! once by `python/compile/aot.py` from the JAX/Pallas layers) and
+//! executes them from Rust. Python never runs on this path.
+//!
+//! - [`client`] — the runtime client surface (PJRT-shaped API).
+//! - [`interp`] — the dependency-free HLO-text interpreter backing it.
+//! - [`engine`] — the artifact registry serving compiled models by name.
 
 pub mod client;
 pub mod engine;
+pub mod interp;
 
 pub use client::Runtime;
 pub use engine::{Engine, LoadedModel};

@@ -8,17 +8,21 @@
 //! misses are filled from the analytical GPU model ([`crate::gpusim`])
 //! instead of a physical GPU — see DESIGN.md substitutions.
 
+use super::propagate::OpSchedule;
 use super::spec::{SchedType, Schedule};
+use super::tuning::TunedPlan;
 use crate::gpusim::cost::{kernel_exec_time_us, KernelDesc};
 use crate::gpusim::device::DeviceConfig;
 use crate::hlo::{Computation, InstrId, Opcode};
 use std::collections::HashMap;
 use std::path::Path;
 
-/// Persistent on-disk format.
+/// Persistent on-disk format: per-schedule kernel times plus whole
+/// tuned group plans keyed by fingerprint-derived keys.
 #[derive(Debug, Default)]
 struct Store {
     entries: HashMap<String, f64>,
+    tuned: HashMap<String, TunedPlan>,
 }
 
 /// The performance library. Cheap to clone-by-reference; interior state
@@ -29,28 +33,34 @@ pub struct PerfLibrary {
     dev: DeviceConfig,
     hits: u64,
     misses: u64,
+    tuned_hits: u64,
 }
 
 impl PerfLibrary {
     pub fn new(dev: DeviceConfig) -> Self {
-        PerfLibrary { store: Store::default(), dev, hits: 0, misses: 0 }
+        PerfLibrary { store: Store::default(), dev, hits: 0, misses: 0, tuned_hits: 0 }
     }
 
     /// Load from permanent storage (system initialization, §4.4).
     /// Missing file → empty library (warmup phase). Format: one
-    /// `key\tmicroseconds` entry per line.
+    /// `key\tmicroseconds` entry per line, plus `T\t…` lines carrying
+    /// persisted tuned plans (see [`PerfLibrary::tuned_insert`]).
     pub fn load(path: &Path, dev: DeviceConfig) -> Self {
         let mut store = Store::default();
         if let Ok(text) = std::fs::read_to_string(path) {
             for line in text.lines() {
-                if let Some((k, v)) = line.rsplit_once('\t') {
+                if let Some(rest) = line.strip_prefix("T\t") {
+                    if let Some((key, plan)) = parse_tuned_line(rest) {
+                        store.tuned.insert(key, plan);
+                    }
+                } else if let Some((k, v)) = line.rsplit_once('\t') {
                     if let Ok(t) = v.parse::<f64>() {
                         store.entries.insert(k.to_string(), t);
                     }
                 }
             }
         }
-        PerfLibrary { store, dev, hits: 0, misses: 0 }
+        PerfLibrary { store, dev, hits: 0, misses: 0, tuned_hits: 0 }
     }
 
     /// Persist for repeated usage across compilations.
@@ -64,8 +74,58 @@ impl PerfLibrary {
             out.push_str(&self.store.entries[k].to_string());
             out.push('\n');
         }
+        let mut tuned_keys: Vec<&String> = self.store.tuned.keys().collect();
+        tuned_keys.sort();
+        for k in tuned_keys {
+            out.push_str(&format_tuned_line(k, &self.store.tuned[k]));
+            out.push('\n');
+        }
         std::fs::write(path, out)?;
         Ok(())
+    }
+
+    // ---- tuned-plan persistence (compile-once serving) ----
+
+    /// Look up a persisted tuned plan under an opaque key (the driver
+    /// derives keys from the module [`crate::hlo::Fingerprint`], fusion
+    /// mode, config digest and group identity). Returns a clone — plans
+    /// are small — and counts the hit. Callers that validate a plan
+    /// before trusting it should use [`PerfLibrary::tuned_peek`] +
+    /// [`PerfLibrary::tuned_mark_reused`] instead, so rejected plans do
+    /// not inflate the hit counter.
+    pub fn tuned_lookup(&mut self, key: &str) -> Option<TunedPlan> {
+        let plan = self.store.tuned.get(key).cloned();
+        if plan.is_some() {
+            self.tuned_hits += 1;
+        }
+        plan
+    }
+
+    /// Borrow a persisted tuned plan without touching the hit counter.
+    pub fn tuned_peek(&self, key: &str) -> Option<&TunedPlan> {
+        self.store.tuned.get(key)
+    }
+
+    /// Record that a peeked plan passed validation and was reused.
+    pub fn tuned_mark_reused(&mut self) {
+        self.tuned_hits += 1;
+    }
+
+    /// Record a tuned group plan for reuse across compilations and —
+    /// after [`PerfLibrary::save`] / [`PerfLibrary::load`] — across
+    /// processes.
+    pub fn tuned_insert(&mut self, key: String, plan: TunedPlan) {
+        self.store.tuned.insert(key, plan);
+    }
+
+    /// Number of persisted tuned plans.
+    pub fn tuned_len(&self) -> usize {
+        self.store.tuned.len()
+    }
+
+    /// How many tuned-plan lookups were answered from the store.
+    pub fn tuned_hits(&self) -> u64 {
+        self.tuned_hits
     }
 
     pub fn device(&self) -> &DeviceConfig {
@@ -133,6 +193,95 @@ impl PerfLibrary {
         }
         key
     }
+}
+
+// ---------------------------------------------------------------------
+// Tuned-plan text (de)serialization
+// ---------------------------------------------------------------------
+//
+// One line per plan:
+//   T\t<key>\t<blocks>\t<threads>\t<est_us>\t<roots>\t<assignment>
+// where <roots> and <assignment> are `;`-joined items. A root item is
+// `id=split:sword:R|C`; an assignment item is the same or `id=I` for
+// inlined ops. `-` stands for an empty list.
+
+fn sched_to_text(s: &Schedule) -> String {
+    let ty = match s.sched_type {
+        SchedType::Row => "R",
+        SchedType::Column => "C",
+    };
+    format!("{}:{}:{}", s.split_dim, s.sword, ty)
+}
+
+fn sched_from_text(t: &str) -> Option<Schedule> {
+    let mut it = t.split(':');
+    let split_dim = it.next()?.parse().ok()?;
+    let sword = it.next()?.parse().ok()?;
+    let sched_type = match it.next()? {
+        "R" => SchedType::Row,
+        "C" => SchedType::Column,
+        _ => return None,
+    };
+    Some(Schedule { split_dim, sword, sched_type })
+}
+
+fn format_tuned_line(key: &str, plan: &TunedPlan) -> String {
+    let roots = if plan.root_schedules.is_empty() {
+        "-".to_string()
+    } else {
+        plan.root_schedules
+            .iter()
+            .map(|(id, s)| format!("{}={}", id.0, sched_to_text(s)))
+            .collect::<Vec<_>>()
+            .join(";")
+    };
+    let assignment = if plan.assignment.is_empty() {
+        "-".to_string()
+    } else {
+        plan.assignment
+            .iter()
+            .map(|(id, st)| match st {
+                OpSchedule::Scheduled(s) => format!("{}={}", id.0, sched_to_text(s)),
+                OpSchedule::Inlined => format!("{}=I", id.0),
+            })
+            .collect::<Vec<_>>()
+            .join(";")
+    };
+    format!(
+        "T\t{key}\t{}\t{}\t{}\t{roots}\t{assignment}",
+        plan.blocks, plan.threads, plan.est_exec_us
+    )
+}
+
+fn parse_tuned_line(rest: &str) -> Option<(String, TunedPlan)> {
+    let mut f = rest.split('\t');
+    let key = f.next()?.to_string();
+    let blocks = f.next()?.parse().ok()?;
+    let threads = f.next()?.parse().ok()?;
+    let est_exec_us = f.next()?.parse().ok()?;
+    let roots_text = f.next()?;
+    let assign_text = f.next()?;
+
+    let mut root_schedules = Vec::new();
+    if roots_text != "-" {
+        for item in roots_text.split(';') {
+            let (id, s) = item.split_once('=')?;
+            root_schedules.push((InstrId(id.parse().ok()?), sched_from_text(s)?));
+        }
+    }
+    let mut assignment = std::collections::BTreeMap::new();
+    if assign_text != "-" {
+        for item in assign_text.split(';') {
+            let (id, s) = item.split_once('=')?;
+            let st = if s == "I" {
+                OpSchedule::Inlined
+            } else {
+                OpSchedule::Scheduled(sched_from_text(s)?)
+            };
+            assignment.insert(InstrId(id.parse().ok()?), st);
+        }
+    }
+    Some((key, TunedPlan { root_schedules, assignment, blocks, threads, est_exec_us }))
 }
 
 /// Build the resource descriptor of a standalone kernel computing `id`
@@ -254,6 +403,43 @@ mod tests {
         let t2 = lib2.lookup(&c, r, Schedule::new(0, 4, SchedType::Row), 128);
         assert_eq!(t, t2);
         assert_eq!(lib2.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn tuned_plan_roundtrips_through_disk() {
+        use crate::schedule::propagate::OpSchedule;
+        let dir = crate::testutil::TempDir::new("tuned");
+        let path = dir.path().join("perf.tsv");
+        let plan = TunedPlan {
+            root_schedules: vec![(InstrId(3), Schedule::new(1, 8, SchedType::Column))],
+            assignment: [
+                (InstrId(2), OpSchedule::Inlined),
+                (InstrId(3), OpSchedule::Scheduled(Schedule::new(1, 8, SchedType::Column))),
+            ]
+            .into_iter()
+            .collect(),
+            blocks: 64,
+            threads: 256,
+            est_exec_us: 12.5,
+        };
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        lib.tuned_insert("fp123|FusionStitching|g0".to_string(), plan.clone());
+        // also one ordinary perf entry, to prove the formats coexist
+        let (c, r) = reduce_graph();
+        lib.lookup(&c, r, Schedule::new(0, 4, SchedType::Row), 128);
+        lib.save(&path).unwrap();
+
+        let mut lib2 = PerfLibrary::load(&path, DeviceConfig::pascal());
+        assert_eq!(lib2.len(), 1);
+        assert_eq!(lib2.tuned_len(), 1);
+        let got = lib2.tuned_lookup("fp123|FusionStitching|g0").unwrap();
+        assert_eq!(got.blocks, plan.blocks);
+        assert_eq!(got.threads, plan.threads);
+        assert_eq!(got.est_exec_us, plan.est_exec_us);
+        assert_eq!(got.root_schedules, plan.root_schedules);
+        assert_eq!(got.assignment, plan.assignment);
+        assert_eq!(lib2.tuned_hits(), 1);
+        assert!(lib2.tuned_lookup("missing").is_none());
     }
 
     #[test]

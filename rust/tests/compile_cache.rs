@@ -1,0 +1,230 @@
+//! Integration tests for compile-once serving: structural fingerprints,
+//! the compilation cache (hit/miss/LRU), tuned-plan persistence, and
+//! the cache on the live serving loop.
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::cache::{CacheKey, CompileCache, CompileService};
+use fusion_stitching::coordinator::pipeline::{FusionMode, PipelineConfig};
+use fusion_stitching::coordinator::server::CompileOptions;
+use fusion_stitching::coordinator::{compile_module_traced, ServerConfig, ServingCoordinator};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::{fingerprint_module, GraphBuilder, Module, Shape};
+use fusion_stitching::models;
+use fusion_stitching::schedule::PerfLibrary;
+use fusion_stitching::testutil::TempDir;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[test]
+fn benchmark_fingerprints_are_stable_and_distinct() {
+    let first: Vec<_> = models::all_benchmarks()
+        .iter()
+        .map(|(meta, m)| (meta.name, fingerprint_module(m)))
+        .collect();
+    let second: Vec<_> = models::all_benchmarks()
+        .iter()
+        .map(|(meta, m)| (meta.name, fingerprint_module(m)))
+        .collect();
+    assert_eq!(first, second, "rebuilding a benchmark must reproduce its fingerprint");
+    for (i, (na, fa)) in first.iter().enumerate() {
+        for (nb, fb) in &first[i + 1..] {
+            assert_ne!(fa, fb, "{na} and {nb} must not collide");
+        }
+    }
+}
+
+#[test]
+fn renumbered_graph_same_fingerprint_changed_graph_different() {
+    // Same dataflow, different construction order → same hash.
+    let mut b1 = GraphBuilder::new("e");
+    let x = b1.param("x", Shape::f32(&[8, 32]));
+    let y = b1.param("y", Shape::f32(&[8, 32]));
+    let e = b1.exp(x);
+    let t = b1.tanh(y);
+    let s = b1.add(e, t);
+    let m1 = Module::new("m1", b1.finish(s));
+
+    let mut b2 = GraphBuilder::new("e");
+    let x = b2.param("x", Shape::f32(&[8, 32]));
+    let y = b2.param("y", Shape::f32(&[8, 32]));
+    let t = b2.tanh(y); // swapped construction order
+    let e = b2.exp(x);
+    let s = b2.add(e, t);
+    let m2 = Module::new("m2_other_name", b2.finish(s));
+
+    assert_eq!(fingerprint_module(&m1), fingerprint_module(&m2));
+
+    // Any shape change must change the hash.
+    let mut b3 = GraphBuilder::new("e");
+    let x = b3.param("x", Shape::f32(&[8, 64]));
+    let y = b3.param("y", Shape::f32(&[8, 64]));
+    let e = b3.exp(x);
+    let t = b3.tanh(y);
+    let s = b3.add(e, t);
+    let m3 = Module::new("m3", b3.finish(s));
+    assert_ne!(fingerprint_module(&m1), fingerprint_module(&m3));
+
+    // Any opcode change must change the hash.
+    let mut b4 = GraphBuilder::new("e");
+    let x = b4.param("x", Shape::f32(&[8, 32]));
+    let y = b4.param("y", Shape::f32(&[8, 32]));
+    let e = b4.exp(x);
+    let t = b4.sigmoid(y);
+    let s = b4.add(e, t);
+    let m4 = Module::new("m4", b4.finish(s));
+    assert_ne!(fingerprint_module(&m1), fingerprint_module(&m4));
+}
+
+#[test]
+fn cached_compile_skips_the_pipeline() {
+    let mut svc = CompileService::new(PipelineConfig::default());
+    let (_, module) = models::by_name("LR").unwrap();
+    let (cold, hit0) = svc.compile(&module, FusionMode::FusionStitching).unwrap();
+    assert!(!hit0);
+    let tuned_after_cold = svc.perf_library().tuned_len();
+    let (warm, hit1) = svc.compile(&module, FusionMode::FusionStitching).unwrap();
+    assert!(hit1, "identical module must hit");
+    assert!(Arc::ptr_eq(&cold, &warm), "hit returns the same artifact");
+    // a hit runs no pass at all, so the tuned store cannot have grown
+    assert_eq!(svc.perf_library().tuned_len(), tuned_after_cold);
+    assert_eq!(svc.stats().hits, 1);
+    assert_eq!(svc.stats().misses, 1);
+}
+
+#[test]
+fn cache_key_separates_modes_and_devices() {
+    let cfg = PipelineConfig::default();
+    let (_, module) = models::by_name("LR").unwrap();
+    let k1 = CacheKey::new(&module, FusionMode::FusionStitching, &cfg);
+    let k2 = CacheKey::new(&module, FusionMode::XlaBaseline, &cfg);
+    assert_ne!(k1, k2);
+    let mut cfg2 = cfg.clone();
+    cfg2.deep.device.name = "sim-volta".into();
+    let k3 = CacheKey::new(&module, FusionMode::FusionStitching, &cfg2);
+    assert_ne!(k1, k3);
+}
+
+#[test]
+fn lru_eviction_bounds_residency() {
+    let mut svc = CompileService::with_capacity(PipelineConfig::default(), 2);
+    let (_, lr) = models::by_name("LR").unwrap();
+    let (_, w2v) = models::by_name("W2V").unwrap();
+    let (_, rnn) = models::by_name("RNN").unwrap();
+    svc.compile(&lr, FusionMode::FusionStitching).unwrap();
+    svc.compile(&w2v, FusionMode::FusionStitching).unwrap();
+    svc.compile(&rnn, FusionMode::FusionStitching).unwrap(); // evicts LR
+    assert_eq!(svc.cache().len(), 2);
+    assert_eq!(svc.stats().evictions, 1);
+    let (_, hit_rnn) = svc.compile(&rnn, FusionMode::FusionStitching).unwrap();
+    assert!(hit_rnn);
+    let (_, hit_lr) = svc.compile(&lr, FusionMode::FusionStitching).unwrap();
+    assert!(!hit_lr, "evicted entry must recompile");
+}
+
+#[test]
+fn direct_cache_api_counts_evictions() {
+    let cfg = PipelineConfig::default();
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let mut cache = CompileCache::new(1);
+    let (_, lr) = models::by_name("LR").unwrap();
+    let (_, w2v) = models::by_name("W2V").unwrap();
+    let (a, _) = compile_module_traced(&lr, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+    let (b, _) = compile_module_traced(&w2v, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+    let ka = CacheKey::new(&lr, FusionMode::FusionStitching, &cfg);
+    let kb = CacheKey::new(&w2v, FusionMode::FusionStitching, &cfg);
+    cache.insert(ka.clone(), Arc::new(a));
+    cache.insert(kb.clone(), Arc::new(b));
+    assert_eq!(cache.len(), 1);
+    let stats = cache.stats();
+    assert_eq!(stats.evictions, 1);
+    assert!(cache.get(&ka).is_none());
+    assert!(cache.get(&kb).is_some());
+}
+
+/// Identity-ish artifact the serving loop executes while the compile
+/// service exercises the cache.
+const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+
+#[test]
+fn serving_loop_reports_cache_hits_for_repeated_nmt_requests() {
+    let dir = TempDir::new("cc-serve");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+
+    let (meta, nmt) = models::by_name("NMT").unwrap();
+    let mut pipeline = PipelineConfig::default();
+    pipeline.deep.fuse_batch_dot = meta.fuse_batch_dot;
+
+    let cfg = ServerConfig {
+        artifact: "double".into(),
+        batch: 4,
+        in_elems_per_request: 3,
+        out_elems_per_request: 3,
+        input_dims: vec![4, 3],
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        compile: Some(CompileOptions {
+            module: nmt,
+            mode: FusionMode::FusionStitching,
+            pipeline,
+        }),
+    };
+    let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
+    for i in 0..4 {
+        let (out, _) = srv.infer(vec![1.0 + i as f32, 0.0, -1.0]).unwrap();
+        assert_eq!(out, vec![2.0 + 2.0 * i as f32, 0.0, -2.0]);
+    }
+    let stats = srv.shutdown().unwrap();
+    assert_eq!(stats.cache_misses, 1, "NMT compiles exactly once");
+    assert!(stats.cache_hits >= 3, "repeated requests must hit: {stats:?}");
+    assert!(stats.cache_hit_rate() > 0.0);
+    // warm compile latency collapses vs the cold compile
+    assert!(stats.compile_us.len() >= 4);
+    let cold = stats.compile_us[0];
+    let warm_best = stats.compile_us[1..].iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(
+        warm_best < cold,
+        "cache hit ({warm_best} us) should be cheaper than cold compile ({cold} us)"
+    );
+}
+
+#[test]
+fn shared_service_amortizes_across_serving_loops() {
+    let dir = TempDir::new("cc-share");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+    let (_, lr) = models::by_name("LR").unwrap();
+    let service = Arc::new(std::sync::Mutex::new(CompileService::new(PipelineConfig::default())));
+    let cfg = ServerConfig {
+        artifact: "double".into(),
+        batch: 4,
+        in_elems_per_request: 3,
+        out_elems_per_request: 3,
+        input_dims: vec![4, 3],
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        compile: Some(CompileOptions {
+            module: lr,
+            mode: FusionMode::FusionStitching,
+            pipeline: PipelineConfig::default(),
+        }),
+    };
+
+    let srv1 = ServingCoordinator::start_with_service(dir.path(), cfg.clone(), service.clone())
+        .unwrap();
+    srv1.infer(vec![0.0; 3]).unwrap();
+    let s1 = srv1.shutdown().unwrap();
+    assert_eq!(s1.cache_misses, 1);
+
+    // A second loop over the same service: its first batch already hits.
+    let srv2 =
+        ServingCoordinator::start_with_service(dir.path(), cfg, service.clone()).unwrap();
+    srv2.infer(vec![0.0; 3]).unwrap();
+    let s2 = srv2.shutdown().unwrap();
+    assert_eq!(s2.cache_misses, 0, "warm service: no cold compile in loop 2");
+    assert!(s2.cache_hits >= 1);
+    assert!(service.lock().unwrap().stats().hits >= 1);
+}

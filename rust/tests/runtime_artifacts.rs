@@ -84,6 +84,7 @@ fn serving_loop_runs_real_artifact() {
             out_elems_per_request: SEQ * DIM,
             input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
             policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(1) },
+            compile: None,
         },
     )
     .unwrap();
