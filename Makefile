@@ -1,6 +1,6 @@
 # Convenience targets; everything also works via plain cargo / python.
 
-.PHONY: build test bench artifacts doc
+.PHONY: build test bench bench-launches artifacts doc
 
 build:
 	cargo build --release
@@ -10,6 +10,11 @@ test:
 
 bench:
 	cargo bench
+
+# Executed launch-reduction bench (smoke mode): runs every plan on the
+# stitched VM and writes BENCH_launch_reduction.json at the repo root.
+bench-launches:
+	BENCH_SMOKE=1 cargo bench --bench launch_reduction
 
 doc:
 	cargo doc --no-deps

@@ -2,8 +2,9 @@
 //! compose on a real workload:
 //!
 //!   L1 (Pallas stitched softmax→BMM kernel) → L2 (JAX attention block)
-//!   → `make artifacts` (AOT HLO text) → Rust runtime (PJRT CPU) →
-//!   L3 serving coordinator (dynamic batching), fused vs unfused.
+//!   → `make artifacts` (AOT HLO text) → Rust runtime (the HLO-text
+//!   interpreter behind the PJRT-shaped client) → L3 serving
+//!   coordinator (dynamic batching), fused vs unfused.
 //!
 //! It serves batched translation-style requests against both artifact
 //! variants, checks the numerics agree between them (the stitched kernel
@@ -45,7 +46,7 @@ fn serve(artifact: &str) -> anyhow::Result<(Vec<Vec<f32>>, LatencyRecorder, f64)
         compile: None,
     };
     let srv = ServingCoordinator::start(Path::new("artifacts"), cfg)?;
-    let _ = srv.infer(request(0))?; // warmup: first execute pays PJRT JIT
+    let _ = srv.infer(request(0))?; // warmup: first execute touches cold buffers
 
     let mut lat = LatencyRecorder::default();
     let mut outputs = Vec::new();

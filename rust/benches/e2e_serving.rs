@@ -1,13 +1,14 @@
 //! E2E serving bench — the paper's latency-critical online NMT use case
-//! (§6.1) on the *real* runtime: AOT-compiled JAX/Pallas artifacts
-//! executed by the Rust coordinator over PJRT CPU, fused (stitched
+//! (§6.1) on the real runtime: AOT-compiled JAX/Pallas artifacts
+//! executed by the Rust coordinator over the HLO-text interpreter
+//! (`runtime::interp`, the PJRT-shaped CPU backend), fused (stitched
 //! Pallas attention) vs unfused (op-by-op) variants, batched requests.
 //!
 //! Run `make artifacts` first. Reports per-variant latency percentiles
-//! and throughput. Note: on the CPU backend both variants compile
-//! through the same XLA CPU pipeline, so this validates *numerics and
-//! the serving path*, not GPU-style kernel-launch savings (those are
-//! the simulator benches).
+//! and throughput. Note: both artifact variants execute on the same
+//! host interpreter, so this validates *numerics and the serving
+//! path*; executed kernel-launch savings are measured by the
+//! `launch_reduction` bench on the stitched VM (`exec`).
 
 #[path = "bench_util.rs"]
 mod bench_util;
@@ -36,7 +37,7 @@ fn bench_variant(artifact: &str) -> Option<(f64, f64, f64, usize)> {
         compile: None,
     };
     let srv = ServingCoordinator::start(dir, cfg).ok()?;
-    // warmup (first execution pays XLA JIT inside PJRT)
+    // warmup (first execution touches every buffer cold)
     let _ = srv.infer(vec![0.1; SEQ * MODEL]).ok()?;
 
     let mut lat = LatencyRecorder::default();

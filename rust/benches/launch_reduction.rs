@@ -1,0 +1,272 @@
+//! Launch-reduction bench — the paper's Fig. 7 *executed*, not
+//! estimated.
+//!
+//! For every Table 2 benchmark the module is compiled under both
+//! fusion modes, lowered to the stitched VM and **run**; the
+//! `LaunchLedger` then reports how many kernel launches each plan
+//! actually paid. A corpus section additionally measures deep fusion
+//! against the true per-op baseline (the op-by-op interpreter) on
+//! synthetic graphs. Results, including the geometric-mean ratio, are
+//! persisted to `BENCH_launch_reduction.json` at the repo root.
+//!
+//! Smoke mode (`BENCH_SMOKE=1`, used by `make bench-launches` and CI)
+//! restricts to the light models and a smaller corpus.
+
+use fusion_stitching::coordinator::pipeline::{
+    compile_module, geomean, FusionMode, PipelineConfig,
+};
+use fusion_stitching::corpus::generator::{generate_models, CorpusConfig};
+use fusion_stitching::exec::{LaunchLedger, StitchedExecutable};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::printer::xla_text;
+use fusion_stitching::hlo::Module;
+use fusion_stitching::models;
+use fusion_stitching::runtime::interp::HloProgram;
+use fusion_stitching::schedule::PerfLibrary;
+use std::path::PathBuf;
+
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 1000) as f32) / 1000.0 - 0.5
+        })
+        .collect()
+}
+
+fn inputs_for(module: &Module, seed: u64) -> Vec<Vec<f32>> {
+    module
+        .entry
+        .parameters()
+        .into_iter()
+        .enumerate()
+        .map(|(k, id)| {
+            let elems = module.entry.get(id).shape.num_elements() as usize;
+            fill(elems, seed + k as u64)
+        })
+        .collect()
+}
+
+/// Compile + lower one module; `Err` carries the reason (kept in the
+/// JSON so skips are visible, never silent).
+fn lower(
+    module: &Module,
+    mode: FusionMode,
+    fuse_batch_dot: bool,
+) -> Result<StitchedExecutable, String> {
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let mut cfg = PipelineConfig::default();
+    cfg.deep.fuse_batch_dot = fuse_batch_dot;
+    let compiled = compile_module(module, mode, &mut lib, &cfg)
+        .map_err(|e| format!("compile: {e:#}"))?;
+    match compiled.executable {
+        Some(exe) => Ok((*exe).clone()),
+        None => Err(compiled.exec_error.unwrap_or_else(|| "did not lower".into())),
+    }
+}
+
+struct ModelRow {
+    name: String,
+    per_op_kernels: usize,
+    baseline: Option<LaunchLedger>,
+    fs: Option<LaunchLedger>,
+    error: Option<String>,
+}
+
+fn run_model(name: &str, module: &Module, fuse_batch_dot: bool, seed: u64) -> ModelRow {
+    let per_op_kernels = module.entry.unfused_kernel_count();
+    let inputs = inputs_for(module, seed);
+    let mut row = ModelRow {
+        name: name.to_string(),
+        per_op_kernels,
+        baseline: None,
+        fs: None,
+        error: None,
+    };
+    for (mode, slot) in [(FusionMode::XlaBaseline, 0usize), (FusionMode::FusionStitching, 1)] {
+        let out = lower(module, mode, fuse_batch_dot)
+            .and_then(|exe| exe.run(&inputs).map_err(|e| format!("run: {e:#}")));
+        match out {
+            Ok((_, ledger)) => {
+                if slot == 0 {
+                    row.baseline = Some(ledger);
+                } else {
+                    row.fs = Some(ledger);
+                }
+            }
+            Err(e) => row.error = Some(format!("{mode:?}: {e}")),
+        }
+    }
+    row
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok()
+        || std::env::args().any(|a| a == "--smoke");
+    let mode_name = if smoke { "smoke" } else { "full" };
+    println!("== Launch reduction (executed): one launch per fused group ==");
+    println!(
+        "{:<8} {:>8} {:>10} {:>10} {:>8} {:>8} {:>8}",
+        "model", "per-op", "baseline", "stitched", "gen", "lib", "ratio"
+    );
+
+    let wanted: &[&str] =
+        if smoke { &["LR", "W2V", "Speech"] } else { &["LR", "W2V", "RNN", "BiRNN", "Speech", "NMT"] };
+    let mut rows: Vec<ModelRow> = Vec::new();
+    for (meta, module) in models::all_benchmarks() {
+        if !wanted.contains(&meta.name) {
+            continue;
+        }
+        let row = run_model(meta.name, &module, meta.fuse_batch_dot, 42);
+        match (&row.baseline, &row.fs) {
+            (Some(b), Some(f)) => {
+                let ratio = f.total_launches() as f64 / b.total_launches().max(1) as f64;
+                println!(
+                    "{:<8} {:>8} {:>10} {:>10} {:>8} {:>8} {:>8.2}",
+                    row.name,
+                    row.per_op_kernels,
+                    b.total_launches(),
+                    f.total_launches(),
+                    f.generated,
+                    f.library,
+                    ratio
+                );
+                assert!(
+                    f.total_launches() <= b.total_launches(),
+                    "{}: deep fusion must not launch more",
+                    row.name
+                );
+            }
+            _ => println!(
+                "{:<8} — not executed: {}",
+                row.name,
+                row.error.as_deref().unwrap_or("unknown")
+            ),
+        }
+        rows.push(row);
+    }
+
+    let ratios: Vec<f64> = rows
+        .iter()
+        .filter_map(|r| match (&r.baseline, &r.fs) {
+            (Some(b), Some(f)) => {
+                Some(f.total_launches() as f64 / b.total_launches().max(1) as f64)
+            }
+            _ => None,
+        })
+        .collect();
+    let g = geomean(ratios.iter().copied());
+    println!(
+        "geomean stitched/baseline: {g:.3}  ({:.0}% launch reduction; paper Fig. 7: ~55%)",
+        (1.0 - g) * 100.0
+    );
+
+    // ---- corpus section: deep fusion vs the true per-op baseline ----
+    let corpus_cfg = CorpusConfig {
+        seed: 946,
+        models: if smoke { 8 } else { 24 },
+        ops_per_model: (8, 24),
+        max_width_log2: 6,
+    };
+    let mut per_op_total = 0u64;
+    let mut fs_total = 0u64;
+    let mut corpus_ratios: Vec<f64> = Vec::new();
+    let mut corpus_graphs = 0usize;
+    for (i, comp) in generate_models(&corpus_cfg).into_iter().enumerate() {
+        let module = Module::new(comp.name.clone(), comp);
+        let prog = match HloProgram::parse(&xla_text(&module)) {
+            Ok(p) => p,
+            Err(e) => {
+                println!("corpus graph {i}: interpreter rejected: {e:#}");
+                continue;
+            }
+        };
+        let inputs = inputs_for(&module, 7000 + i as u64);
+        if prog.execute(&inputs).is_err() {
+            continue;
+        }
+        let per_op = prog.kernel_launches();
+        let exe = match lower(&module, FusionMode::FusionStitching, false) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("corpus graph {i}: {e}");
+                continue;
+            }
+        };
+        let (_, ledger) = match exe.run(&inputs) {
+            Ok(r) => r,
+            Err(e) => {
+                println!("corpus graph {i}: run failed: {e:#}");
+                continue;
+            }
+        };
+        per_op_total += per_op;
+        fs_total += ledger.total_launches();
+        corpus_ratios.push(ledger.total_launches() as f64 / per_op.max(1) as f64);
+        corpus_graphs += 1;
+    }
+    let corpus_g = geomean(corpus_ratios.iter().copied());
+    println!(
+        "corpus ({corpus_graphs} graphs): per-op {per_op_total} launches -> stitched {fs_total} \
+         (geomean ratio {corpus_g:.3})"
+    );
+    assert!(corpus_graphs > 0, "corpus section must execute");
+    assert!(
+        fs_total < per_op_total,
+        "deep fusion must strictly reduce launches vs per-op: {fs_total} vs {per_op_total}"
+    );
+
+    // ---- persist ----
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"launch_reduction\",\n");
+    json.push_str(&format!("  \"mode\": \"{mode_name}\",\n"));
+    json.push_str("  \"models\": [\n");
+    for (k, r) in rows.iter().enumerate() {
+        let (bl, fs, gen, lib, ratio, executed) = match (&r.baseline, &r.fs) {
+            (Some(b), Some(f)) => (
+                b.total_launches(),
+                f.total_launches(),
+                f.generated,
+                f.library,
+                f.total_launches() as f64 / b.total_launches().max(1) as f64,
+                true,
+            ),
+            _ => (0, 0, 0, 0, 0.0, false),
+        };
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"per_op_kernels\": {}, \"baseline_launches\": {}, \
+             \"fs_launches\": {}, \"generated\": {}, \"library\": {}, \"ratio\": {:.4}, \
+             \"executed\": {}{}}}{}\n",
+            r.name,
+            r.per_op_kernels,
+            bl,
+            fs,
+            gen,
+            lib,
+            ratio,
+            executed,
+            match &r.error {
+                Some(e) => format!(", \"error\": \"{}\"", e.replace('"', "'").replace('\n', " ")),
+                None => String::new(),
+            },
+            if k + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"geomean_ratio\": {g:.4},\n"));
+    json.push_str(&format!("  \"reduction_pct\": {:.1},\n", (1.0 - g) * 100.0));
+    json.push_str(&format!(
+        "  \"corpus\": {{\"graphs\": {corpus_graphs}, \"per_op_launches\": {per_op_total}, \
+         \"fs_launches\": {fs_total}, \"geomean_ratio\": {corpus_g:.4}}}\n"
+    ));
+    json.push_str("}\n");
+
+    let out_path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => PathBuf::from(dir).join("..").join("BENCH_launch_reduction.json"),
+        Err(_) => PathBuf::from("BENCH_launch_reduction.json"),
+    };
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out_path.display()),
+    }
+}

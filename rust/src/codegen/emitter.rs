@@ -239,6 +239,44 @@ mod tests {
     }
 
     #[test]
+    fn every_shared_read_is_fenced_by_a_barrier() {
+        // Block composition's ordering contract: a shared region may
+        // only be read after its write has been fenced by
+        // __syncthreads. Scan the emitted IR in order: stores mark the
+        // offset pending, a barrier publishes all pending offsets, and
+        // every load must hit a published offset.
+        let (_, _, plan) = emit_fig3();
+        let off_of = |line: &str| -> usize {
+            let start = line.find("[off=").expect("offset tag") + 5;
+            line[start..]
+                .split_whitespace()
+                .next()
+                .unwrap()
+                .parse()
+                .expect("offset value")
+        };
+        let mut pending: Vec<usize> = Vec::new();
+        let mut published: Vec<usize> = Vec::new();
+        let mut loads = 0usize;
+        for line in plan.ir_text().lines() {
+            if line.contains("store shared") {
+                pending.push(off_of(line));
+            } else if line.contains("__syncthreads") {
+                published.append(&mut pending);
+            } else if line.contains("load shared") {
+                loads += 1;
+                let off = off_of(line);
+                assert!(
+                    published.contains(&off),
+                    "shared load at offset {off} before its write was fenced:\n{}",
+                    plan.ir_text()
+                );
+            }
+        }
+        assert!(loads >= 3, "fig3 must read shared memory repeatedly ({loads})");
+    }
+
+    #[test]
     fn pure_elementwise_group_uses_single_loop() {
         let mut b = GraphBuilder::new("ew");
         let x = b.param("x", Shape::f32(&[1024]));

@@ -375,6 +375,37 @@ mod tests {
     }
 
     #[test]
+    fn exceeded_when_mandatory_buffers_overflow() {
+        // An interior reduce is a Mandatory buffer (never dropped): with
+        // no droppable candidates and a budget below the reduce's chunk,
+        // planning must reject the group with ShmError::Exceeded — the
+        // feedback signal fusion uses to give up on a candidate.
+        let mut b = GraphBuilder::new("exceed");
+        let x = b.param("x", Shape::f32(&[4, 4096]));
+        let e = b.exp(x); // single user: not a candidate itself
+        let r = b.reduce(e, &[1], ReduceKind::Sum); // interior -> Mandatory
+        let rb = b.broadcast(r, &[4, 4096], &[0]);
+        let y = b.param("y", Shape::f32(&[4, 4096]));
+        let o = b.sub(rb, y);
+        let comp = b.finish(o);
+        let members: HashSet<InstrId> = [e, r, rb, o].into_iter().collect();
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let tuned = tune(&comp, &members, &[o], &mut lib, &TuningConfig::default()).unwrap();
+        let tiny = DeviceConfig { shared_mem_kernel_limit: 2, ..DeviceConfig::pascal() };
+        match plan_shared_memory(&comp, &members, &[o], &tuned, &tiny) {
+            Err(ShmError::Exceeded { required, limit }) => {
+                assert_eq!(limit, 2);
+                assert!(required > limit, "required {required} must exceed limit {limit}");
+            }
+            other => panic!("expected ShmError::Exceeded, got {other:?}"),
+        }
+        // The same group fits a real device.
+        assert!(
+            plan_shared_memory(&comp, &members, &[o], &tuned, &DeviceConfig::pascal()).is_ok()
+        );
+    }
+
+    #[test]
     fn feeds_batch_dot_through_shape_ops() {
         let (comp, ids, out) = fig3();
         let mut members: HashSet<InstrId> = ids.iter().copied().collect();

@@ -25,12 +25,14 @@
 
 use crate::codegen::emitter::emit_group;
 use crate::codegen::KernelPlan;
+use crate::exec::{lower_to_exec, StitchedExecutable};
 use crate::fusion::{deep_fusion, xla_baseline_fusion, FusionPlan, GroupKind};
 use crate::gpusim::executor::{simulate_module, ModuleTiming, SimKernel};
 use crate::hlo::{fingerprint_module, Computation, Fingerprint, InstrId, Module, Opcode};
 use crate::schedule::{tune, PerfLibrary, Schedule, TunedPlan, TuningConfig};
 use anyhow::anyhow;
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::Instant;
 
 use super::metrics::PassTrace;
@@ -51,6 +53,10 @@ pub enum Pass {
     ScheduleAndEmit,
     /// Project all kernels onto the analytical GPU model.
     Simulate,
+    /// Lower the emitted kernel plans into the stitched VM's executable
+    /// (one launch per fused group). Modules using ops outside the VM's
+    /// subset compile without an executable (the reason is recorded).
+    LowerToExec,
 }
 
 impl Pass {
@@ -61,6 +67,7 @@ impl Pass {
             Pass::ValidatePlan => "validate-plan",
             Pass::ScheduleAndEmit => "schedule-emit",
             Pass::Simulate => "simulate",
+            Pass::LowerToExec => "lower-exec",
         }
     }
 }
@@ -73,6 +80,8 @@ struct CompileState {
     generated_group_ids: Vec<usize>,
     sim: Vec<SimKernel>,
     timing: Option<ModuleTiming>,
+    executable: Option<Arc<StitchedExecutable>>,
+    exec_error: Option<String>,
 }
 
 /// Runs a pass sequence over one module, recording a [`PassTrace`].
@@ -91,6 +100,7 @@ impl PassManager {
                 Pass::ValidatePlan,
                 Pass::ScheduleAndEmit,
                 Pass::Simulate,
+                Pass::LowerToExec,
             ],
         }
     }
@@ -117,6 +127,8 @@ impl PassManager {
             generated_group_ids: Vec::new(),
             sim: Vec::new(),
             timing: None,
+            executable: None,
+            exec_error: None,
         };
         let mut trace = PassTrace::default();
 
@@ -142,6 +154,13 @@ impl PassManager {
                 Pass::Simulate => {
                     st.timing = Some(simulate_module(&st.sim, &cfg.deep.device, cfg.lib_efficiency));
                 }
+                Pass::LowerToExec => {
+                    let plan = self.plan_of(&st)?;
+                    match lower_to_exec(module, plan, &st.kernels, &st.generated_group_ids) {
+                        Ok(exe) => st.executable = Some(Arc::new(exe)),
+                        Err(e) => st.exec_error = Some(format!("{e:#}")),
+                    }
+                }
             }
             let wall_us = t0.elapsed().as_secs_f64() * 1e6;
             let after = self.units(pass, &st, comp, false);
@@ -158,6 +177,8 @@ impl PassManager {
             kernels: st.kernels,
             generated_group_ids: st.generated_group_ids,
             timing: st.timing.ok_or_else(|| anyhow!("pipeline ran without the simulate pass"))?,
+            executable: st.executable,
+            exec_error: st.exec_error,
         };
         Ok((compiled, trace))
     }
@@ -188,6 +209,13 @@ impl PassManager {
                 }
             }
             Pass::Simulate => st.sim.len(),
+            Pass::LowerToExec => {
+                if before {
+                    st.kernels.len()
+                } else {
+                    st.executable.as_ref().map_or(0, |e| e.launches.len())
+                }
+            }
         }
     }
 
@@ -443,12 +471,23 @@ mod tests {
         let names: Vec<&str> = trace.records.iter().map(|r| r.name).collect();
         assert_eq!(
             names,
-            vec!["fingerprint", "fusion", "validate-plan", "schedule-emit", "simulate"]
+            vec![
+                "fingerprint",
+                "fusion",
+                "validate-plan",
+                "schedule-emit",
+                "simulate",
+                "lower-exec"
+            ]
         );
         assert!(trace.records.iter().all(|r| r.wall_us >= 0.0));
         assert!(trace.total_us() > 0.0);
         assert_eq!(compiled.fingerprint, crate::hlo::fingerprint_module(&module));
         assert!(!compiled.kernels.is_empty());
+        let exe = compiled.executable.as_ref().unwrap_or_else(|| {
+            panic!("LR must lower to an executable: {:?}", compiled.exec_error)
+        });
+        assert!(exe.launches.len() >= compiled.kernels.len());
     }
 
     #[test]

@@ -1,9 +1,25 @@
 //! Latency/throughput accounting for the serving loop, plus the
 //! per-pass compile-time instrumentation recorded by
-//! [`crate::coordinator::driver::PassManager`].
+//! [`crate::coordinator::driver::PassManager`] and the launch-count
+//! accounting of the execution backends.
 
 use std::fmt;
 use std::time::Duration;
+
+/// Executed kernel-launch counters, re-exported here because serving
+/// stats ([`crate::coordinator::server::WorkerStats`]) report them next
+/// to latency: `generated` vs `library` launches per Fig. 7.
+pub use crate::exec::LaunchLedger;
+
+/// One serving run's launch efficiency: executed launches per request —
+/// the quantity deep fusion shrinks (Fig. 7, measured not estimated).
+pub fn launches_per_request(ledger: &LaunchLedger, requests: usize) -> f64 {
+    if requests == 0 {
+        0.0
+    } else {
+        ledger.total_launches() as f64 / requests as f64
+    }
+}
 
 /// One instrumented pipeline pass execution: wall time plus the number
 /// of work units (kernel-granularity items) before and after. For the
@@ -148,6 +164,13 @@ mod tests {
         let b = rec(&[3.0]);
         a.merge(&b);
         assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn launches_per_request_basics() {
+        let ledger = LaunchLedger { generated: 6, library: 2, ..Default::default() };
+        assert!((launches_per_request(&ledger, 4) - 2.0).abs() < 1e-12);
+        assert_eq!(launches_per_request(&ledger, 0), 0.0);
     }
 
     #[test]

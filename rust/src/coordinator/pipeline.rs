@@ -10,11 +10,13 @@
 //! (shared-memory statistics).
 
 use crate::codegen::KernelPlan;
+use crate::exec::StitchedExecutable;
 use crate::fusion::{DeepFusionConfig, FusionPlan};
 use crate::gpusim::executor::ModuleTiming;
 use crate::hlo::{Fingerprint, Module};
 use crate::models::ModelMeta;
 use crate::schedule::PerfLibrary;
+use std::sync::Arc;
 
 /// Which fusion pass compiles the module.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -53,6 +55,13 @@ pub struct CompiledModule {
     pub kernels: Vec<KernelPlan>,
     pub generated_group_ids: Vec<usize>,
     pub timing: ModuleTiming,
+    /// The lowered stitched-VM executable — one launch per fused group
+    /// (`None` when the module uses ops outside the VM's subset; see
+    /// `exec_error`). Cached artifacts carry it, so cache hits skip
+    /// lowering along with everything else.
+    pub executable: Option<Arc<StitchedExecutable>>,
+    /// Why lowering was skipped, when it was.
+    pub exec_error: Option<String>,
 }
 
 impl CompiledModule {

@@ -19,9 +19,10 @@
 use super::batcher::{next_batch_keyed, BatchPolicy, Request};
 use super::cache::CompileService;
 use super::pipeline::{FusionMode, PipelineConfig};
+use crate::exec::{LaunchLedger, StitchedExecutable};
 use crate::hlo::Module;
 use crate::runtime::Engine;
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Mutex};
@@ -42,6 +43,14 @@ pub struct CompileOptions {
     /// service's* config governs every compile (a shared cache must be
     /// keyed against one config) and this field is ignored.
     pub pipeline: PipelineConfig,
+    /// Execute batches on the compiled module's stitched-VM executable
+    /// (one launch per fused group) instead of the text artifact's
+    /// op-by-op interpreter. Requires the module's entry signature to
+    /// match the serving contract: exactly one parameter of
+    /// `batch × in_elems_per_request` elements, and a root of
+    /// `batch × out_elems_per_request` elements — validated when the
+    /// first batch compiles.
+    pub use_stitched_backend: bool,
 }
 
 /// Server configuration: which artifact to serve and its baked shapes.
@@ -90,6 +99,13 @@ pub struct WorkerStats {
     /// worker stops retrying (a failing module would otherwise re-run
     /// the whole cold pipeline on every batch).
     pub compile_failures: usize,
+    /// Kernel launches executed on the serving path (generated vs
+    /// library), accumulated over every batch — the Fig. 7 counts as
+    /// the serving loop actually paid them.
+    pub launches: LaunchLedger,
+    /// Batches executed on the stitched-VM backend (vs the op-by-op
+    /// artifact interpreter).
+    pub stitched_batches: usize,
 }
 
 impl WorkerStats {
@@ -102,6 +118,32 @@ impl WorkerStats {
             self.cache_hits as f64 / total as f64
         }
     }
+}
+
+/// Check a compiled artifact's executable against the serving
+/// contract before dispatching batches onto the stitched VM.
+fn validate_stitched(
+    plan: &std::sync::Arc<super::pipeline::CompiledModule>,
+    in_elems: usize,
+    out_elems: usize,
+) -> Result<Arc<StitchedExecutable>> {
+    let exe = plan.executable.clone().ok_or_else(|| {
+        anyhow!("module did not lower: {}", plan.exec_error.clone().unwrap_or_default())
+    })?;
+    if exe.params.len() != 1 {
+        bail!("stitched serving needs exactly 1 parameter, module has {}", exe.params.len());
+    }
+    if exe.params[0].elems != in_elems {
+        bail!(
+            "module parameter has {} elements, serving batch carries {}",
+            exe.params[0].elems,
+            in_elems
+        );
+    }
+    if exe.root_elems != out_elems {
+        bail!("module root has {} elements, serving expects {}", exe.root_elems, out_elems);
+    }
+    Ok(exe)
 }
 
 impl ServingCoordinator {
@@ -158,8 +200,13 @@ impl ServingCoordinator {
             };
             let model = engine.get(&wcfg.artifact).expect("loaded above");
             let batch_elems = wcfg.batch * wcfg.in_elems_per_request;
+            let out_elems = wcfg.batch * wcfg.out_elems_per_request;
             let mut carry = None;
             let mut compile_failed = false;
+            // Stitched-VM dispatch: resolved from the first successful
+            // compile when requested (and signature-compatible).
+            let mut stitched: Option<Arc<StitchedExecutable>> = None;
+            let mut stitched_rejected = false;
             while let Some(batch) = next_batch_keyed(&rx, &wcfg.policy, &mut carry) {
                 // Compile-once serving: make sure the kernel plans for
                 // this module are resident before touching the batch.
@@ -171,12 +218,27 @@ impl ServingCoordinator {
                             .expect("compile service poisoned")
                             .compile(&opts.module, opts.mode)
                         {
-                            Ok((_plan, hit)) => {
+                            Ok((plan, hit)) => {
                                 stats.compile_us.push(t0.elapsed().as_secs_f64() * 1e6);
                                 if hit {
                                     stats.cache_hits += 1;
                                 } else {
                                     stats.cache_misses += 1;
+                                }
+                                if opts.use_stitched_backend
+                                    && stitched.is_none()
+                                    && !stitched_rejected
+                                {
+                                    match validate_stitched(&plan, batch_elems, out_elems) {
+                                        Ok(exe) => stitched = Some(exe),
+                                        Err(e) => {
+                                            stitched_rejected = true;
+                                            eprintln!(
+                                                "stitched backend unavailable, serving \
+                                                 the artifact instead: {e:#}"
+                                            );
+                                        }
+                                    }
                                 }
                             }
                             Err(e) => {
@@ -199,7 +261,21 @@ impl ServingCoordinator {
                         .copy_from_slice(&row[..row.len().min(wcfg.in_elems_per_request)]);
                 }
                 let t0 = Instant::now();
-                let result = model.run_f32(&[(&input, &wcfg.input_dims)]);
+                let result = match &stitched {
+                    Some(exe) => {
+                        stats.stitched_batches += 1;
+                        exe.run(std::slice::from_ref(&input)).map(|(out, ledger)| {
+                            stats.launches.merge(&ledger);
+                            vec![out]
+                        })
+                    }
+                    None => {
+                        let before = model.launch_ledger();
+                        let r = model.run_f32(&[(&input, &wcfg.input_dims)]);
+                        stats.launches.merge(&model.launch_ledger().since(&before));
+                        r
+                    }
+                };
                 stats.exec_us.push(t0.elapsed().as_secs_f64() * 1e6);
                 stats.batches += 1;
                 stats.requests += batch.len();
@@ -378,6 +454,7 @@ ENTRY main {
             module,
             mode: FusionMode::FusionStitching,
             pipeline: PipelineConfig::default(),
+            use_stitched_backend: false,
         });
         let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
 
@@ -396,5 +473,47 @@ ENTRY main {
         // the service agrees with the worker's view
         let s = service.lock().unwrap().stats();
         assert_eq!((s.hits, s.misses), (2, 1));
+        // op-by-op artifact serving records per-op launches
+        assert!(stats.launches.generated >= 3, "{}", stats.launches);
+        assert_eq!(stats.stitched_batches, 0);
+    }
+
+    #[test]
+    fn stitched_backend_serves_the_compiled_module() {
+        use crate::hlo::{GraphBuilder, Module, Shape};
+
+        let dir = TempDir::new("srv5");
+        std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+
+        // The served module: tanh(exp(x)) over the whole [4, 3] batch —
+        // signature-compatible with the serving contract.
+        let mut b = GraphBuilder::new("entry");
+        let x = b.param("x", Shape::f32(&[4, 3]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let module = Module::new("served", b.finish(t));
+
+        let mut cfg = config();
+        cfg.compile = Some(CompileOptions {
+            module,
+            mode: FusionMode::FusionStitching,
+            pipeline: PipelineConfig::default(),
+            use_stitched_backend: true,
+        });
+        let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
+        for i in 0..2 {
+            let (out, _) = srv.infer(vec![0.1 * i as f32; 3]).unwrap();
+            // batches execute the *module* on the stitched VM now
+            let want = (0.1f32 * i as f32).exp().tanh();
+            assert!((out[0] - want).abs() < 1e-6, "{} vs {want}", out[0]);
+        }
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.stitched_batches, stats.batches);
+        // exp∘tanh fuses: exactly one generated launch per batch
+        assert_eq!(stats.launches.generated as usize, stats.batches);
+        assert_eq!(stats.launches.library, 0);
+        // one request per batch here, so one launch per request
+        let lpr = super::super::metrics::launches_per_request(&stats.launches, stats.requests);
+        assert!((lpr - 1.0).abs() < 1e-9, "launches/request = {lpr}");
     }
 }

@@ -54,11 +54,16 @@ pub struct CorpusConfig {
     pub models: usize,
     /// Ops per model, min/max.
     pub ops_per_model: (usize, usize),
+    /// Cap on the heavy-tailed layer-width distribution (widths are
+    /// `2^(3..=max_width_log2)`). The default reproduces Figure 1; the
+    /// stitched-execution differential harness caps it low so every
+    /// graph executes in test time.
+    pub max_width_log2: u32,
 }
 
 impl Default for CorpusConfig {
     fn default() -> Self {
-        CorpusConfig { seed: 1701, models: 800, ops_per_model: (24, 96) }
+        CorpusConfig { seed: 1701, models: 800, ops_per_model: (24, 96), max_width_log2: 13 }
     }
 }
 
@@ -95,14 +100,19 @@ impl CorpusStats {
 
 /// Generate the corpus and collect footprint statistics.
 pub fn generate(cfg: &CorpusConfig) -> CorpusStats {
-    let mut rng = Rng::new(cfg.seed);
     let mut stats = CorpusStats::default();
-    for i in 0..cfg.models {
-        let comp = gen_model(&mut rng, i, cfg);
+    for comp in generate_models(cfg) {
         stats.record(&comp);
     }
     stats.finalize();
     stats
+}
+
+/// Generate the corpus graphs themselves (same stream as [`generate`]):
+/// the workload set of the stitched-execution differential harness.
+pub fn generate_models(cfg: &CorpusConfig) -> Vec<Computation> {
+    let mut rng = Rng::new(cfg.seed);
+    (0..cfg.models).map(|i| gen_model(&mut rng, i, cfg)).collect()
 }
 
 /// Accumulated-percentile curve of a sorted series at the given
@@ -122,17 +132,18 @@ pub fn percentiles(sorted: &[i64], log2_cuts: &[u32]) -> Vec<f64> {
 /// One synthetic model: a stack of layers whose widths follow a
 /// heavy-tailed distribution — mostly small (embedding/update tails),
 /// occasionally large (wide dense layers).
-fn gen_model(rng: &mut Rng, idx: usize, _cfg: &CorpusConfig) -> Computation {
+fn gen_model(rng: &mut Rng, idx: usize, cfg: &CorpusConfig) -> Computation {
     let mut b = GraphBuilder::new(format!("corpus_{idx}"));
     // Heavy-tailed width: 2^(3..14) weighted toward the low end
-    // (quadratic bias).
-    fn width(rng: &mut Rng) -> i64 {
+    // (quadratic bias), capped by the config.
+    let cap = cfg.max_width_log2.max(3);
+    fn width(rng: &mut Rng, cap: u32) -> i64 {
         let exp = 3 + (rng.f64() * rng.f64() * 11.0) as u32;
-        1i64 << exp
+        1i64 << exp.min(cap)
     }
     let batch = [1i64, 8, 32, 128][rng.below(4)];
 
-    let d0 = width(rng);
+    let d0 = width(rng, cap);
     let x0 = b.param("x", Shape::f32(&[batch, d0]));
     let mut cur = x0;
     let layers = rng.range(2, 6);
@@ -142,7 +153,7 @@ fn gen_model(rng: &mut Rng, idx: usize, _cfg: &CorpusConfig) -> Computation {
         match rng.below(8) {
             // dense layer (matmul + bias/activation elementwise tail)
             0 | 1 => {
-                let d_out = width(rng);
+                let d_out = width(rng, cap);
                 let w = b.param("w", Shape::f32(&[d_in, d_out]));
                 let y = b.dot(cur, w);
                 let bias = b.param("bias", Shape::f32(&[d_out]));
@@ -185,6 +196,17 @@ fn gen_model(rng: &mut Rng, idx: usize, _cfg: &CorpusConfig) -> Computation {
             }
         }
     }
+    // Gated-update tail (no rng draws, so the Figure 1 stream above is
+    // untouched): power/compare/select — the opcodes the op-by-op
+    // interpreter must also cover for the stitched differential harness.
+    // sigmoid keeps the power base strictly positive.
+    let tail_dims = b.peek().get(cur).shape.dims.clone();
+    let gate = b.param("gate", Shape::f32(&tail_dims));
+    let sg = b.sigmoid(cur);
+    let pw = b.pow(sg, gate);
+    let cmp = b.compare(pw, gate);
+    cur = b.select(cmp, pw, cur);
+
     let dims = b.peek().get(cur).shape.dims.clone();
     let all: Vec<usize> = (0..dims.len()).collect();
     let out = b.reduce(cur, &all, ReduceKind::Mean);
@@ -196,7 +218,7 @@ mod tests {
     use super::*;
 
     fn small() -> CorpusStats {
-        generate(&CorpusConfig { seed: 7, models: 120, ops_per_model: (8, 32) })
+        generate(&CorpusConfig { seed: 7, models: 120, ops_per_model: (8, 32), ..Default::default() })
     }
 
     #[test]

@@ -1,0 +1,495 @@
+//! The stitched-kernel bytecode: what a [`crate::codegen::KernelPlan`]
+//! lowers to and what the VM ([`super::machine`]) executes.
+//!
+//! One fused group becomes one [`KernelProgram`] — a single launch. The
+//! program models the GPU grid explicitly:
+//!
+//! - the **block loop** runs every [`BlockStep`] once per thread block
+//!   (grid size = the tuned `blocks`);
+//! - each [`BlockStep::Loop`] is one stitched parallel loop (Algorithm
+//!   2's `StitchedEmitter`): it walks the op's per-block chunk of its
+//!   work space under the op's tuned [`Schedule`] with a **thread
+//!   loop** striding by `threads`;
+//! - per output element a [`ThreadProg`] runs — straight-line register
+//!   bytecode with the elemental (thread-composed) producers inlined,
+//!   shared-memory operands read from the block's shared regions and
+//!   out-of-group operands read from global buffers;
+//! - [`BlockStep::Barrier`] marks the `__syncthreads` the emitter
+//!   placed after every shared-memory write.
+//!
+//! Index arithmetic is explicit: every load carries an [`IndexMap`] —
+//! the composed shape-modulation chain (broadcast/reshape/transpose/
+//! slice) between the loop's index space and the source buffer.
+
+use crate::hlo::instruction::ReduceKind;
+use crate::hlo::InstrId;
+use crate::schedule::{SchedType, Schedule};
+use std::fmt;
+
+/// A virtual scalar register inside a [`ThreadProg`].
+pub type Reg = u16;
+
+/// Fill value the VM materializes for IR `Constant` instructions (the
+/// in-memory IR carries no constant payload; 1.0 is neutral for the
+/// mul/div scaling constants the benchmark graphs use it for, and both
+/// the stitched VM and the op-by-op interpreter agree on it).
+pub const CONST_FILL: f32 = 1.0;
+
+// ---------------------------------------------------------------------
+// Index arithmetic
+// ---------------------------------------------------------------------
+
+/// Row-major linear offset of `idx` within `dims`.
+pub fn linearize(idx: &[i64], dims: &[i64]) -> i64 {
+    let mut lin = 0i64;
+    for (i, &d) in dims.iter().enumerate() {
+        lin = lin * d.max(1) + idx.get(i).copied().unwrap_or(0);
+    }
+    lin
+}
+
+/// Row-major multi-index of linear offset `lin` within `dims`.
+pub fn delinearize(mut lin: i64, dims: &[i64]) -> Vec<i64> {
+    let mut idx = vec![0i64; dims.len()];
+    for k in (0..dims.len()).rev() {
+        let d = dims[k].max(1);
+        idx[k] = lin % d;
+        lin /= d;
+    }
+    idx
+}
+
+/// One shape-modulation hop of an operand access path.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum IndexStep {
+    /// `Broadcast`: operand index `i` is the current index at output
+    /// dim `dims[i]` (XLA `broadcast_dimensions`).
+    Gather { dims: Vec<usize> },
+    /// `Reshape`/`Bitcast`: linearize row-major in `from`, delinearize
+    /// in `to`.
+    Relinearize { from: Vec<i64>, to: Vec<i64> },
+    /// `Transpose`: operand index at dim `perm[k]` is the current index
+    /// at dim `k` (output dim `k` reads input dim `perm[k]`).
+    Permute { perm: Vec<usize> },
+    /// `Slice`: operand index is the current index plus `starts`.
+    Offset { starts: Vec<i64> },
+}
+
+/// A composed chain of [`IndexStep`]s, applied in order.
+#[derive(Debug, Clone, Default, PartialEq, Eq, Hash)]
+pub struct IndexMap {
+    pub steps: Vec<IndexStep>,
+}
+
+impl IndexMap {
+    pub fn identity() -> Self {
+        IndexMap::default()
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// This map followed by one more step.
+    pub fn then(&self, step: IndexStep) -> Self {
+        let mut steps = self.steps.clone();
+        steps.push(step);
+        IndexMap { steps }
+    }
+
+    /// Transform a multi-index through the chain.
+    pub fn apply(&self, idx: &[i64]) -> Vec<i64> {
+        let mut cur: Vec<i64> = idx.to_vec();
+        for step in &self.steps {
+            cur = match step {
+                IndexStep::Gather { dims } => dims.iter().map(|&d| cur[d]).collect(),
+                IndexStep::Relinearize { from, to } => delinearize(linearize(&cur, from), to),
+                IndexStep::Permute { perm } => {
+                    let mut out = vec![0i64; cur.len()];
+                    for (k, &p) in perm.iter().enumerate() {
+                        out[p] = cur[k];
+                    }
+                    out
+                }
+                IndexStep::Offset { starts } => {
+                    cur.iter().zip(starts).map(|(&i, &s)| i + s).collect()
+                }
+            };
+        }
+        cur
+    }
+}
+
+// ---------------------------------------------------------------------
+// Grid / chunk model
+// ---------------------------------------------------------------------
+
+/// Grid size `sched` launches over a work space of `dims` — mirrors
+/// [`Schedule::blocks`] without constructing a [`crate::hlo::Shape`].
+pub fn sched_blocks(sched: Schedule, dims: &[i64]) -> i64 {
+    if dims.is_empty() {
+        return 1;
+    }
+    let p: i64 = match sched.sched_type {
+        SchedType::Row => dims[..sched.split_dim].iter().product(),
+        SchedType::Column => dims[sched.split_dim + 1..].iter().product(),
+    };
+    (p * sched.sword).max(1)
+}
+
+/// Elements each block's chunk holds under `sched`.
+pub fn sched_chunk(sched: Schedule, dims: &[i64]) -> i64 {
+    let total: i64 = dims.iter().product::<i64>().max(1);
+    (total / sched_blocks(sched, dims)).max(1)
+}
+
+/// Global multi-index of element `e` of `block`'s chunk: a `Row`
+/// schedule partitions the row-major linear element space into
+/// contiguous per-block chunks; `Column` mirrors this on the reversed
+/// dims (column-major contiguity) — Fig. 5's two loop structures.
+pub fn chunk_index(sched: Schedule, dims: &[i64], block: i64, e: i64) -> Vec<i64> {
+    let lin = block * sched_chunk(sched, dims) + e;
+    match sched.sched_type {
+        SchedType::Row => delinearize(lin, dims),
+        SchedType::Column => {
+            let rev: Vec<i64> = dims.iter().rev().copied().collect();
+            let mut idx = delinearize(lin, &rev);
+            idx.reverse();
+            idx
+        }
+    }
+}
+
+/// Chunk-local offset of global index `idx` inside `block`'s chunk, or
+/// `None` when the element belongs to a different block — reading
+/// `None` through shared memory is a stitching-invariant violation.
+pub fn chunk_offset(sched: Schedule, dims: &[i64], block: i64, idx: &[i64]) -> Option<i64> {
+    let lin = match sched.sched_type {
+        SchedType::Row => linearize(idx, dims),
+        SchedType::Column => {
+            let rev_idx: Vec<i64> = idx.iter().rev().copied().collect();
+            let rev_dims: Vec<i64> = dims.iter().rev().copied().collect();
+            linearize(&rev_idx, &rev_dims)
+        }
+    };
+    let chunk = sched_chunk(sched, dims);
+    let start = block * chunk;
+    if lin >= start && lin < start + chunk {
+        Some(lin - start)
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thread-level register bytecode
+// ---------------------------------------------------------------------
+
+/// Unary scalar operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Exp,
+    Log,
+    Tanh,
+    Sigmoid,
+    Sqrt,
+    Rsqrt,
+    Neg,
+    Abs,
+    Erf,
+    Sign,
+    Floor,
+    Ceil,
+    Not,
+    Id,
+}
+
+impl UnOp {
+    pub fn apply(self, x: f32) -> f32 {
+        match self {
+            UnOp::Exp => x.exp(),
+            UnOp::Log => x.ln(),
+            UnOp::Tanh => x.tanh(),
+            UnOp::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            UnOp::Sqrt => x.sqrt(),
+            UnOp::Rsqrt => 1.0 / x.sqrt(),
+            UnOp::Neg => -x,
+            UnOp::Abs => x.abs(),
+            UnOp::Erf => erf(x),
+            UnOp::Sign => {
+                if x > 0.0 {
+                    1.0
+                } else if x < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                }
+            }
+            UnOp::Floor => x.floor(),
+            UnOp::Ceil => x.ceil(),
+            UnOp::Not => {
+                if x == 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            UnOp::Id => x,
+        }
+    }
+}
+
+/// Abramowitz–Stegun 7.1.26 polynomial approximation (|err| < 1.5e-7),
+/// matching what a device intrinsic would deliver within f32 tolerance.
+pub fn erf(x: f32) -> f32 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592 + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Binary scalar operators. `Gt` backs `Compare` (0.0 / 1.0 result).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Min,
+    Pow,
+    Rem,
+    Gt,
+}
+
+impl BinOp {
+    pub fn apply(self, a: f32, b: f32) -> f32 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+            BinOp::Max => a.max(b),
+            BinOp::Min => a.min(b),
+            BinOp::Pow => a.powf(b),
+            BinOp::Rem => a % b,
+            BinOp::Gt => {
+                if a > b {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+}
+
+/// One bytecode instruction of a [`ThreadProg`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum TInstr {
+    /// Load an immediate.
+    Const { dst: Reg, value: f32 },
+    /// Read a global (DRAM) buffer: map the current index into `src`'s
+    /// index space, then row-major linearize over `dims`.
+    LoadGlobal { dst: Reg, src: InstrId, dims: Vec<i64>, map: IndexMap },
+    /// Read this block's shared-memory region at `offset`. The region
+    /// holds `owner`'s per-block chunk under `owner_sched`; the mapped
+    /// index must fall inside the executing block's chunk.
+    LoadShared {
+        dst: Reg,
+        offset: usize,
+        owner: InstrId,
+        owner_dims: Vec<i64>,
+        owner_sched: Schedule,
+        map: IndexMap,
+    },
+    /// Read a fusion root's global output written earlier in the SAME
+    /// launch. Only the executing block's own chunk of the owner is
+    /// visible (a real kernel has no cross-block synchronization), so
+    /// the mapped index is chunk-checked like a shared read.
+    LoadOwned { dst: Reg, src: InstrId, dims: Vec<i64>, owner_sched: Schedule, map: IndexMap },
+    Unary { dst: Reg, a: Reg, op: UnOp },
+    Binary { dst: Reg, a: Reg, b: Reg, op: BinOp },
+    Select { dst: Reg, pred: Reg, on_true: Reg, on_false: Reg },
+    /// `Concatenate` dispatch: map into the concat's output space, pick
+    /// the case whose slab of `dim` contains the index (cumulative
+    /// `limits`), rebase the index into the operand and evaluate that
+    /// case's sub-program.
+    Branch { dst: Reg, map: IndexMap, dim: usize, limits: Vec<i64>, cases: Vec<ThreadProg> },
+}
+
+/// Straight-line register program computing one scalar, evaluated at a
+/// multi-index of its index space.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ThreadProg {
+    pub n_regs: Reg,
+    pub code: Vec<TInstr>,
+    pub out: Reg,
+}
+
+// ---------------------------------------------------------------------
+// Block-level program
+// ---------------------------------------------------------------------
+
+/// How a stitched loop combines its inputs per output element.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LoopKind {
+    /// Elementwise / shape-modulation loop: one [`ThreadProg`] per
+    /// output element (thread-composed producers inlined).
+    Map { prog: ThreadProg },
+    /// Reduction loop: per output element, fold the operand program
+    /// over the reduced dims of `in_dims` (row-major, dims ascending).
+    Reduce { kind: ReduceKind, dims: Vec<usize>, in_dims: Vec<i64>, operand: ThreadProg },
+    /// Batched-matmul loop: per output element `[..., m, n]`,
+    /// accumulate `lhs[..., m, k] * rhs[..., k, n]` over `k` ascending.
+    Dot { lhs: ThreadProg, rhs: ThreadProg, lhs_dims: Vec<i64>, rhs_dims: Vec<i64> },
+}
+
+/// Where a stitched loop deposits its chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteTarget {
+    /// `EmitWriteSharedArray` — the block's shared region at `offset`.
+    Shared { offset: usize },
+    /// `EmitWriteOutputArray` — the op's global output buffer.
+    Output,
+}
+
+/// One per-block step of a kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlockStep {
+    /// A stitched parallel loop over `op`'s per-block chunk of `dims`
+    /// under `sched`.
+    Loop { op: InstrId, dims: Vec<i64>, sched: Schedule, kind: LoopKind, write: WriteTarget },
+    /// `__syncthreads` after a shared write (block composition fence).
+    Barrier,
+}
+
+/// One fused group, lowered: a single launch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelProgram {
+    pub name: String,
+    /// Fusion-plan group this kernel implements.
+    pub group_id: usize,
+    /// Launch dimensions (the tuned grid).
+    pub blocks: u64,
+    pub threads: u32,
+    /// Peak shared memory modeled per block.
+    pub shm_bytes: usize,
+    pub steps: Vec<BlockStep>,
+    /// Global output buffers this kernel writes: `(root, elems)`.
+    pub outputs: Vec<(InstrId, usize)>,
+}
+
+impl KernelProgram {
+    /// Human-readable disassembly (the executable counterpart of
+    /// [`crate::codegen::KernelPlan::ir_text`]).
+    pub fn disasm(&self) -> String {
+        let mut out = format!(
+            "kernel {} <<<{}, {}>>> smem={}B group={}\n",
+            self.name, self.blocks, self.threads, self.shm_bytes, self.group_id
+        );
+        for step in &self.steps {
+            match step {
+                BlockStep::Barrier => out.push_str("  barrier\n"),
+                BlockStep::Loop { op, sched, kind, write, .. } => {
+                    let kind_s = match kind {
+                        LoopKind::Map { prog } => format!("map[{} instrs]", prog.code.len()),
+                        LoopKind::Reduce { kind, dims, .. } => {
+                            format!("reduce.{kind:?} dims={dims:?}")
+                        }
+                        LoopKind::Dot { .. } => "batch_dot".to_string(),
+                    };
+                    let write_s = match write {
+                        WriteTarget::Shared { offset } => format!("shared@{offset}"),
+                        WriteTarget::Output => "output".to_string(),
+                    };
+                    out.push_str(&format!(
+                        "  loop %{} {} sched={} -> {}\n",
+                        op.0, kind_s, sched, write_s
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl fmt::Display for KernelProgram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.disasm())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hlo::Shape;
+
+    #[test]
+    fn linearize_delinearize_roundtrip() {
+        let dims = [2i64, 3, 4];
+        for lin in 0..24 {
+            let idx = delinearize(lin, &dims);
+            assert_eq!(linearize(&idx, &dims), lin);
+        }
+        assert_eq!(delinearize(0, &[]), Vec::<i64>::new());
+        assert_eq!(linearize(&[], &[]), 0);
+    }
+
+    #[test]
+    fn chunk_partition_covers_every_element_once() {
+        let dims = vec![4i64, 6, 8];
+        let shape = Shape::f32(&dims);
+        for sched in Schedule::enumerate(&shape) {
+            let blocks = sched_blocks(sched, &dims);
+            assert_eq!(blocks as u64, sched.blocks(&shape), "{sched}");
+            let chunk = sched_chunk(sched, &dims);
+            let mut seen = vec![false; 192];
+            for b in 0..blocks {
+                for e in 0..chunk {
+                    let idx = chunk_index(sched, &dims, b, e);
+                    let lin = linearize(&idx, &dims) as usize;
+                    assert!(!seen[lin], "{sched}: element {lin} visited twice");
+                    seen[lin] = true;
+                    // chunk_offset inverts chunk_index
+                    assert_eq!(chunk_offset(sched, &dims, b, &idx), Some(e), "{sched}");
+                    // and the element belongs to no other block
+                    let other = (b + 1) % blocks;
+                    if blocks > 1 {
+                        assert_eq!(chunk_offset(sched, &dims, other, &idx), None, "{sched}");
+                    }
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{sched}: partition incomplete");
+        }
+    }
+
+    #[test]
+    fn index_map_composition() {
+        // broadcast [64] -> [8, 64] on dim 1, then transpose-like identity
+        let m = IndexMap::identity().then(IndexStep::Gather { dims: vec![1] });
+        assert_eq!(m.apply(&[3, 17]), vec![17]);
+        // reshape [8, 64] -> [512]
+        let m2 = IndexMap::identity()
+            .then(IndexStep::Relinearize { from: vec![8, 64], to: vec![512] });
+        assert_eq!(m2.apply(&[2, 5]), vec![133]);
+        // transpose perm [0, 2, 1]: out[k] reads in[perm[k]]
+        let m3 = IndexMap::identity().then(IndexStep::Permute { perm: vec![0, 2, 1] });
+        assert_eq!(m3.apply(&[1, 2, 3]), vec![1, 3, 2]);
+        // slice offset
+        let m4 = IndexMap::identity().then(IndexStep::Offset { starts: vec![1, 2] });
+        assert_eq!(m4.apply(&[0, 0]), vec![1, 2]);
+    }
+
+    #[test]
+    fn scalar_ops_match_std() {
+        assert_eq!(BinOp::Gt.apply(2.0, 1.0), 1.0);
+        assert_eq!(BinOp::Gt.apply(1.0, 2.0), 0.0);
+        assert_eq!(UnOp::Not.apply(0.0), 1.0);
+        assert_eq!(UnOp::Sign.apply(-3.0), -1.0);
+        assert!((erf(1.0) - 0.8427007).abs() < 1e-5);
+        assert!((erf(-1.0) + 0.8427007).abs() < 1e-5);
+    }
+}

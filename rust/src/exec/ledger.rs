@@ -1,0 +1,88 @@
+//! The launch ledger: what a served request actually cost in kernel
+//! launches.
+//!
+//! The paper's headline claim (Fig. 7) is a reduction in *GPU kernel
+//! launches*; everything upstream of this module only predicted that
+//! number. The ledger records launches as they are executed by the
+//! stitched VM ([`crate::exec::machine`]) or by the op-by-op
+//! interpreter, so the reduction can be measured on real runs instead
+//! of estimated from the fusion plan.
+
+use std::fmt;
+
+/// Counters accumulated while executing a compiled program.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LaunchLedger {
+    /// Generated (stitched or loop) kernel launches — one per fused
+    /// group per execution.
+    pub generated: u64,
+    /// Vendor-library call launches (`Dot`/`Convolution` class).
+    pub library: u64,
+    /// `__syncthreads`-style barriers executed across all blocks.
+    pub barriers: u64,
+    /// Block iterations simulated (grid size summed over launches).
+    pub block_iters: u64,
+    /// Output elements produced by thread loops (work volume).
+    pub thread_elems: u64,
+}
+
+impl LaunchLedger {
+    /// Total kernel launches, the Fig. 7 numerator/denominator
+    /// (generated kernels plus library calls).
+    pub fn total_launches(&self) -> u64 {
+        self.generated + self.library
+    }
+
+    /// Accumulate another ledger into this one.
+    pub fn merge(&mut self, other: &LaunchLedger) {
+        self.generated += other.generated;
+        self.library += other.library;
+        self.barriers += other.barriers;
+        self.block_iters += other.block_iters;
+        self.thread_elems += other.thread_elems;
+    }
+
+    /// Field-wise difference (`self - earlier`), for deriving the cost
+    /// of one execution from two cumulative snapshots.
+    pub fn since(&self, earlier: &LaunchLedger) -> LaunchLedger {
+        LaunchLedger {
+            generated: self.generated.saturating_sub(earlier.generated),
+            library: self.library.saturating_sub(earlier.library),
+            barriers: self.barriers.saturating_sub(earlier.barriers),
+            block_iters: self.block_iters.saturating_sub(earlier.block_iters),
+            thread_elems: self.thread_elems.saturating_sub(earlier.thread_elems),
+        }
+    }
+}
+
+impl fmt::Display for LaunchLedger {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "launches: {} generated + {} library (barriers {}, blocks {}, elems {})",
+            self.generated, self.library, self.barriers, self.block_iters, self.thread_elems
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_and_since_roundtrip() {
+        let mut a = LaunchLedger { generated: 3, library: 1, barriers: 5, block_iters: 8, thread_elems: 100 };
+        let b = LaunchLedger { generated: 2, library: 2, barriers: 1, block_iters: 4, thread_elems: 50 };
+        let before = a;
+        a.merge(&b);
+        assert_eq!(a.total_launches(), 8);
+        assert_eq!(a.since(&before), b);
+    }
+
+    #[test]
+    fn display_mentions_both_kinds() {
+        let l = LaunchLedger { generated: 2, library: 3, ..Default::default() };
+        let s = l.to_string();
+        assert!(s.contains("2 generated") && s.contains("3 library"));
+    }
+}

@@ -1,0 +1,632 @@
+//! Lowering: `KernelPlan`s → executable stitched bytecode.
+//!
+//! This is the pass that turns the *plans* produced by §4/§5 of the
+//! paper into something that runs. Per fused group it follows exactly
+//! the decisions the emitter (Algorithm 2) recorded:
+//!
+//! - ops the emitter gave their own parallel loop **and** a write
+//!   (shared or output) become [`BlockStep::Loop`]s under their tuned
+//!   schedule, followed by a [`BlockStep::Barrier`] for shared writes;
+//! - elemental (thread-composed) ops are inlined into their consumers'
+//!   [`ThreadProg`]s — they have no loop of their own, which is the
+//!   whole point of thread composition;
+//! - shared-memory operands compile to [`TInstr::LoadShared`] against
+//!   the block's region at the planner's offset; out-of-group operands
+//!   compile to [`TInstr::LoadGlobal`];
+//! - `Reduce`/`BatchDot` get dedicated loop kinds (they have no
+//!   single-lane form, mirroring the Table 1 propagation rule).
+//!
+//! Library-call groups (`Dot`/`Convolution`) lower to
+//! [`LibraryCall`]s — separate launches, counted separately by the
+//! [`super::LaunchLedger`] like the paper's Fig. 7 excludes them from
+//! the generated-kernel ratio.
+
+use super::bytecode::{
+    BlockStep, IndexMap, IndexStep, KernelProgram, LoopKind, Reg, TInstr, ThreadProg, UnOp,
+    WriteTarget, CONST_FILL,
+};
+use super::machine::{BufRead, Launch, LibKind, LibraryCall, ParamSpec, StitchedExecutable};
+use crate::codegen::kernel_plan::EmitterKind;
+use crate::codegen::KernelPlan;
+use crate::fusion::{FusionGroup, FusionPlan, GroupKind};
+use crate::hlo::{Computation, InstrId, Module, Opcode};
+use crate::schedule::Schedule;
+use anyhow::{anyhow, bail};
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+/// Lower a compiled module (fusion plan + emitted kernel plans) into a
+/// [`StitchedExecutable`]: one launch per fused group, topologically
+/// ordered, plus one launch per library call.
+pub fn lower_to_exec(
+    module: &Module,
+    plan: &FusionPlan,
+    kernels: &[KernelPlan],
+    generated_group_ids: &[usize],
+) -> crate::Result<StitchedExecutable> {
+    let comp = &module.entry;
+    for instr in comp.instructions() {
+        ensure_supported(instr.opcode).map_err(|e| anyhow!("%{} ({}): {e}", instr.id.0, instr.name))?;
+    }
+
+    let order = toposort_groups(comp, plan)?;
+    let kmap: HashMap<usize, &KernelPlan> =
+        generated_group_ids.iter().copied().zip(kernels.iter()).collect();
+
+    let mut launches: Vec<Launch> = Vec::new();
+    for gid in order {
+        let group = &plan.groups[gid];
+        match group.kind {
+            GroupKind::Library => {
+                launches.push(Launch::Library(lower_library(comp, group)?));
+            }
+            _ => {
+                if let Some(&kplan) = kmap.get(&gid) {
+                    launches.push(Launch::Kernel(lower_kernel(comp, group, kplan)?));
+                }
+                // groups without a kernel plan contain only free ops;
+                // their values resolve through the free-op chain.
+            }
+        }
+    }
+
+    let params: Vec<ParamSpec> = comp
+        .parameters()
+        .into_iter()
+        .map(|id| {
+            let instr = comp.get(id);
+            ParamSpec {
+                id,
+                name: instr.name.clone(),
+                elems: instr.shape.num_elements() as usize,
+            }
+        })
+        .collect();
+    let consts: Vec<(InstrId, usize)> = comp
+        .instructions()
+        .filter(|i| i.opcode == Opcode::Constant)
+        .map(|i| (i.id, i.shape.num_elements() as usize))
+        .collect();
+
+    let root = resolve_flat(comp, comp.root())?;
+    Ok(StitchedExecutable {
+        name: module.name.clone(),
+        params,
+        consts,
+        launches,
+        root,
+        root_elems: comp.get(comp.root()).shape.num_elements() as usize,
+        n_values: comp.len(),
+    })
+}
+
+/// Opcodes the stitched VM can execute. Everything else fails loudly at
+/// lowering time (same policy as the op-by-op interpreter).
+fn ensure_supported(op: Opcode) -> crate::Result<()> {
+    use Opcode::*;
+    match op {
+        Parameter | Constant | Abs | Negate | Sign | Floor | Ceil | Not | Copy | Exp | Log
+        | Sqrt | Rsqrt | Tanh | Sigmoid | Erf | Add | Subtract | Multiply | Maximum | Minimum
+        | Compare | Divide | Power | Remainder | Select | Reshape | Bitcast | Transpose
+        | Broadcast | Slice | Concatenate | Reduce | BatchDot | Dot | Convolution => Ok(()),
+        other => bail!("opcode {other} is outside the stitched VM's executable subset"),
+    }
+}
+
+/// Kahn toposort over the contracted group DAG (deterministic:
+/// smallest-ready-id first).
+fn toposort_groups(comp: &Computation, plan: &FusionPlan) -> crate::Result<Vec<usize>> {
+    let n = plan.groups.len();
+    let mut edges: HashSet<(usize, usize)> = HashSet::new();
+    for id in comp.ids() {
+        let Some(gu) = plan.group_of(id) else { continue };
+        for &op in &comp.get(id).operands {
+            // Dependency edges may flow through ungrouped free ops
+            // (bitcast chains): resolve to the grouped producer, or the
+            // producer group's launch could be ordered after its
+            // consumer's.
+            let mut src = op;
+            while plan.group_of(src).is_none() && comp.get(src).opcode == Opcode::Bitcast {
+                src = comp.get(src).operands[0];
+            }
+            if let Some(gp) = plan.group_of(src) {
+                if gp.id != gu.id {
+                    edges.insert((gp.id, gu.id));
+                }
+            }
+        }
+    }
+    let mut indeg = vec![0usize; n];
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for &(a, b) in &edges {
+        adj[a].push(b);
+        indeg[b] += 1;
+    }
+    let mut ready: BTreeSet<usize> = (0..n).filter(|&g| indeg[g] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    loop {
+        let g = match ready.iter().next() {
+            Some(&g) => g,
+            None => break,
+        };
+        ready.remove(&g);
+        order.push(g);
+        for &b in &adj[g] {
+            indeg[b] -= 1;
+            if indeg[b] == 0 {
+                ready.insert(b);
+            }
+        }
+    }
+    if order.len() != n {
+        bail!("fusion plan has an inter-group cycle; cannot lower");
+    }
+    Ok(order)
+}
+
+/// Resolve an instruction to the flat buffer that actually holds its
+/// value (following zero-cost `Bitcast` aliases).
+fn resolve_flat(comp: &Computation, mut id: InstrId) -> crate::Result<InstrId> {
+    loop {
+        let instr = comp.get(id);
+        match instr.opcode {
+            Opcode::Bitcast => id = instr.operands[0],
+            Opcode::Tuple | Opcode::GetTupleElement | Opcode::While => {
+                bail!("value of %{} ({}) is not a dense buffer", id.0, instr.opcode)
+            }
+            _ => return Ok(id),
+        }
+    }
+}
+
+fn lower_library(comp: &Computation, group: &FusionGroup) -> crate::Result<LibraryCall> {
+    let id = *group.members.iter().next().expect("library groups are singletons");
+    let instr = comp.get(id);
+    let kind = match instr.opcode {
+        Opcode::Dot => LibKind::Dot {
+            lhs: buf_read(comp, instr.operands[0])?,
+            rhs: buf_read(comp, instr.operands[1])?,
+        },
+        Opcode::Convolution => LibKind::Conv2d {
+            input: buf_read(comp, instr.operands[0])?,
+            filter: buf_read(comp, instr.operands[1])?,
+        },
+        op => bail!("library call {op} (%{}) cannot be executed by the stitched VM", id.0),
+    };
+    Ok(LibraryCall {
+        op: id,
+        out_dims: instr.shape.dims.clone(),
+        out_elems: instr.shape.num_elements() as usize,
+        kind,
+    })
+}
+
+fn buf_read(comp: &Computation, id: InstrId) -> crate::Result<BufRead> {
+    let dims = comp.get(id).shape.dims.clone();
+    let src = resolve_flat(comp, id)?;
+    Ok(BufRead { src, dims })
+}
+
+/// Shared-slot metadata: where the owner's chunk lives and under which
+/// schedule it was deposited.
+struct SlotMeta {
+    offset: usize,
+    sched: Schedule,
+    dims: Vec<i64>,
+}
+
+struct ExprCtx<'a> {
+    comp: &'a Computation,
+    members: &'a HashSet<InstrId>,
+    slots: &'a HashMap<InstrId, SlotMeta>,
+    /// Fusion roots (globally materialized this launch) and the
+    /// schedules their output loops run under — the visibility contract
+    /// for same-launch reads of a root's output.
+    root_scheds: &'a HashMap<InstrId, Schedule>,
+}
+
+/// Builder for one straight-line [`ThreadProg`], memoizing repeated
+/// `(value, index-map)` subexpressions so diamonds in the fused DAG do
+/// not blow up the register file.
+#[derive(Default)]
+struct ProgBuilder {
+    code: Vec<TInstr>,
+    next: Reg,
+    memo: HashMap<(InstrId, IndexMap), Reg>,
+}
+
+impl ProgBuilder {
+    fn reg(&mut self) -> Reg {
+        let r = self.next;
+        self.next += 1;
+        r
+    }
+
+    fn finish(self, out: Reg) -> ThreadProg {
+        ThreadProg { n_regs: self.next, code: self.code, out }
+    }
+}
+
+fn lower_kernel(
+    comp: &Computation,
+    group: &FusionGroup,
+    kplan: &KernelPlan,
+) -> crate::Result<KernelProgram> {
+    let members = &group.members;
+    // The VM only materializes roots globally: every member whose value
+    // escapes the group must be a root, or the plan is unsound.
+    for &m in members.iter() {
+        let escapes = comp.users(m).iter().any(|u| !members.contains(u));
+        if escapes && !group.roots.contains(&m) {
+            bail!("group {}: member %{} escapes but is not a fusion root", group.id, m.0);
+        }
+    }
+
+    let mut slots: HashMap<InstrId, SlotMeta> = HashMap::new();
+    for (id, slot) in &kplan.shm.slots {
+        let eop = kplan
+            .ops
+            .iter()
+            .find(|o| o.id == *id)
+            .ok_or_else(|| anyhow!("shared slot for %{} has no emitted op", id.0))?;
+        let sched = match &eop.emitter {
+            EmitterKind::Stitched(s) => *s,
+            EmitterKind::Elemental => {
+                bail!("shared-buffer op %{} was emitted elementally", id.0)
+            }
+        };
+        slots.insert(
+            *id,
+            SlotMeta { offset: slot.offset, sched, dims: comp.get(*id).shape.dims.clone() },
+        );
+    }
+
+    let mut root_scheds: HashMap<InstrId, Schedule> = HashMap::new();
+    for eop in &kplan.ops {
+        if eop.writes_output {
+            let sched = match &eop.emitter {
+                EmitterKind::Stitched(s) => *s,
+                EmitterKind::Elemental => Schedule::fallback(),
+            };
+            root_scheds.insert(eop.id, sched);
+        }
+    }
+
+    let ctx = ExprCtx { comp, members, slots: &slots, root_scheds: &root_scheds };
+    let mut steps: Vec<BlockStep> = Vec::new();
+    let mut outputs: Vec<(InstrId, usize)> = Vec::new();
+    for eop in &kplan.ops {
+        if !eop.writes_shared && !eop.writes_output {
+            continue; // generator: thread-composed into consumers
+        }
+        let instr = comp.get(eop.id);
+        let sched = match &eop.emitter {
+            EmitterKind::Stitched(s) => *s,
+            // Defensive: an inlined root still materializes its output;
+            // one block covers the whole space.
+            EmitterKind::Elemental => Schedule::fallback(),
+        };
+        let kind = lower_loop(&ctx, eop.id)?;
+        let write = if eop.writes_shared {
+            let meta = slots
+                .get(&eop.id)
+                .ok_or_else(|| anyhow!("%{} writes shared but has no slot", eop.id.0))?;
+            WriteTarget::Shared { offset: meta.offset }
+        } else {
+            WriteTarget::Output
+        };
+        steps.push(BlockStep::Loop {
+            op: eop.id,
+            dims: instr.shape.dims.clone(),
+            sched,
+            kind,
+            write,
+        });
+        if eop.writes_shared {
+            steps.push(BlockStep::Barrier);
+        }
+        if eop.writes_output {
+            outputs.push((eop.id, instr.shape.num_elements() as usize));
+        }
+    }
+
+    Ok(KernelProgram {
+        name: kplan.name.clone(),
+        group_id: group.id,
+        blocks: kplan.blocks,
+        threads: kplan.threads,
+        shm_bytes: kplan.shm.total_bytes,
+        steps,
+        outputs,
+    })
+}
+
+fn lower_loop(ctx: &ExprCtx<'_>, id: InstrId) -> crate::Result<LoopKind> {
+    let instr = ctx.comp.get(id);
+    match instr.opcode {
+        Opcode::Reduce => {
+            let operand = instr.operands[0];
+            let in_dims = ctx.comp.get(operand).shape.dims.clone();
+            let dims = instr
+                .attrs
+                .reduce_dims
+                .clone()
+                .ok_or_else(|| anyhow!("reduce %{} missing dims", id.0))?;
+            let kind = instr
+                .attrs
+                .reduce_kind
+                .ok_or_else(|| anyhow!("reduce %{} missing kind", id.0))?;
+            let mut pb = ProgBuilder::default();
+            let out = emit_expr(ctx, &mut pb, operand, IndexMap::identity(), true)?;
+            Ok(LoopKind::Reduce { kind, dims, in_dims, operand: pb.finish(out) })
+        }
+        Opcode::BatchDot => {
+            let (l, r) = (instr.operands[0], instr.operands[1]);
+            let lhs_dims = ctx.comp.get(l).shape.dims.clone();
+            let rhs_dims = ctx.comp.get(r).shape.dims.clone();
+            let mut pl = ProgBuilder::default();
+            let lo = emit_expr(ctx, &mut pl, l, IndexMap::identity(), true)?;
+            let mut pr = ProgBuilder::default();
+            let ro = emit_expr(ctx, &mut pr, r, IndexMap::identity(), true)?;
+            Ok(LoopKind::Dot { lhs: pl.finish(lo), rhs: pr.finish(ro), lhs_dims, rhs_dims })
+        }
+        _ => {
+            let mut pb = ProgBuilder::default();
+            let out = emit_expr(ctx, &mut pb, id, IndexMap::identity(), false)?;
+            Ok(LoopKind::Map { prog: pb.finish(out) })
+        }
+    }
+}
+
+/// Emit bytecode computing `id`'s value at the current evaluation index
+/// transformed through `map`. With `allow_materialized`, shared-memory
+/// and global buffers are read instead of recomputing (the normal case
+/// for operands); the top-level op of a loop passes `false` so its own
+/// expression is emitted.
+fn emit_expr(
+    ctx: &ExprCtx<'_>,
+    pb: &mut ProgBuilder,
+    id: InstrId,
+    map: IndexMap,
+    allow_materialized: bool,
+) -> crate::Result<Reg> {
+    if allow_materialized {
+        if let Some(&r) = pb.memo.get(&(id, map.clone())) {
+            return Ok(r);
+        }
+        let r = emit_expr_uncached(ctx, pb, id, map.clone(), true)?;
+        pb.memo.insert((id, map), r);
+        return Ok(r);
+    }
+    emit_expr_uncached(ctx, pb, id, map, false)
+}
+
+fn emit_expr_uncached(
+    ctx: &ExprCtx<'_>,
+    pb: &mut ProgBuilder,
+    id: InstrId,
+    map: IndexMap,
+    allow_materialized: bool,
+) -> crate::Result<Reg> {
+    let instr = ctx.comp.get(id);
+    if allow_materialized {
+        if !ctx.members.contains(&id) {
+            return emit_global(ctx, pb, id, map);
+        }
+        // Shared memory only serves chunk-aligned access paths. A slice
+        // (`Offset`) crosses block chunks outright (Table 1 marks slice
+        // operands recompute-per-block). A broadcast (`Gather`) path is
+        // aligned when propagation *demanded* the owner's schedule
+        // through it — guaranteed for reduce/batch-dot owners (they
+        // cannot be recomputed, so propagation would have rejected a
+        // misaligned edge) but not for elementwise owners, whose
+        // unaligned broadcast edges propagation marks
+        // recompute-per-block. Fall through to thread composition
+        // whenever alignment is not guaranteed.
+        let offset_free = !map.steps.iter().any(|s| matches!(s, IndexStep::Offset { .. }));
+        let gather_free = !map.steps.iter().any(|s| matches!(s, IndexStep::Gather { .. }));
+        let owner_mandatory = matches!(
+            instr.opcode,
+            Opcode::Reduce | Opcode::ReduceWindow | Opcode::BatchDot
+        );
+        let chunk_aligned = offset_free && (gather_free || owner_mandatory);
+        if chunk_aligned {
+            if let Some(meta) = ctx.slots.get(&id) {
+                let dst = pb.reg();
+                pb.code.push(TInstr::LoadShared {
+                    dst,
+                    offset: meta.offset,
+                    owner: id,
+                    owner_dims: meta.dims.clone(),
+                    owner_sched: meta.sched,
+                    map,
+                });
+                return Ok(dst);
+            }
+        }
+    }
+    use Opcode::*;
+    match instr.opcode {
+        Parameter => emit_global(ctx, pb, id, map),
+        Constant => {
+            let dst = pb.reg();
+            pb.code.push(TInstr::Const { dst, value: CONST_FILL });
+            Ok(dst)
+        }
+        Abs | Negate | Sign | Floor | Ceil | Not | Copy | Exp | Log | Sqrt | Rsqrt | Tanh
+        | Sigmoid | Erf => {
+            let a = emit_expr(ctx, pb, instr.operands[0], map, true)?;
+            let dst = pb.reg();
+            pb.code.push(TInstr::Unary { dst, a, op: unop_of(instr.opcode) });
+            Ok(dst)
+        }
+        Add | Subtract | Multiply | Divide | Maximum | Minimum | Power | Remainder | Compare => {
+            let a = emit_expr(ctx, pb, instr.operands[0], map.clone(), true)?;
+            let b = emit_expr(ctx, pb, instr.operands[1], map, true)?;
+            let dst = pb.reg();
+            pb.code.push(TInstr::Binary { dst, a, b, op: binop_of(instr.opcode) });
+            Ok(dst)
+        }
+        Select => {
+            let p = emit_expr(ctx, pb, instr.operands[0], map.clone(), true)?;
+            let t = emit_expr(ctx, pb, instr.operands[1], map.clone(), true)?;
+            let f = emit_expr(ctx, pb, instr.operands[2], map, true)?;
+            let dst = pb.reg();
+            pb.code.push(TInstr::Select { dst, pred: p, on_true: t, on_false: f });
+            Ok(dst)
+        }
+        Broadcast => {
+            let bdims = instr
+                .attrs
+                .broadcast_dims
+                .clone()
+                .ok_or_else(|| anyhow!("broadcast %{} missing dims", id.0))?;
+            emit_expr(ctx, pb, instr.operands[0], map.then(IndexStep::Gather { dims: bdims }), true)
+        }
+        Reshape | Bitcast => {
+            let from = instr.shape.dims.clone();
+            let to = ctx.comp.get(instr.operands[0]).shape.dims.clone();
+            emit_expr(
+                ctx,
+                pb,
+                instr.operands[0],
+                map.then(IndexStep::Relinearize { from, to }),
+                true,
+            )
+        }
+        Transpose => {
+            let perm = instr
+                .attrs
+                .transpose_perm
+                .clone()
+                .ok_or_else(|| anyhow!("transpose %{} missing perm", id.0))?;
+            emit_expr(ctx, pb, instr.operands[0], map.then(IndexStep::Permute { perm }), true)
+        }
+        Slice => {
+            let starts = instr
+                .attrs
+                .slice_starts
+                .clone()
+                .ok_or_else(|| anyhow!("slice %{} missing starts", id.0))?;
+            emit_expr(ctx, pb, instr.operands[0], map.then(IndexStep::Offset { starts }), true)
+        }
+        Concatenate => {
+            let cdim =
+                instr.attrs.concat_dim.ok_or_else(|| anyhow!("concat %{} missing dim", id.0))?;
+            let mut limits: Vec<i64> = Vec::new();
+            let mut cases: Vec<ThreadProg> = Vec::new();
+            let mut total = 0i64;
+            for &o in &instr.operands {
+                total += ctx.comp.get(o).shape.dims[cdim];
+                limits.push(total);
+                let mut sub = ProgBuilder::default();
+                let r = emit_expr(ctx, &mut sub, o, IndexMap::identity(), true)?;
+                cases.push(sub.finish(r));
+            }
+            let dst = pb.reg();
+            pb.code.push(TInstr::Branch { dst, map, dim: cdim, limits, cases });
+            Ok(dst)
+        }
+        Reduce | BatchDot => {
+            // A reduction/contraction cannot be thread-composed; the
+            // only remaining legal source is a fusion root's own global
+            // output, readable within the executing block's chunk.
+            if let Some(&owner_sched) = ctx.root_scheds.get(&id) {
+                let dst = pb.reg();
+                pb.code.push(TInstr::LoadOwned {
+                    dst,
+                    src: id,
+                    dims: instr.shape.dims.clone(),
+                    owner_sched,
+                    map,
+                });
+                return Ok(dst);
+            }
+            bail!(
+                "%{} ({}) is consumed in-group without a shared buffer — \
+                 reductions/contractions cannot be thread-composed",
+                id.0,
+                instr.opcode
+            )
+        }
+        op => bail!("opcode {op} is not executable by the stitched VM"),
+    }
+}
+
+fn emit_global(
+    ctx: &ExprCtx<'_>,
+    pb: &mut ProgBuilder,
+    id: InstrId,
+    map: IndexMap,
+) -> crate::Result<Reg> {
+    let mut id = id;
+    let mut map = map;
+    loop {
+        if ctx.members.contains(&id) {
+            // bounced back into the group through an out-of-group bitcast
+            return emit_expr(ctx, pb, id, map, true);
+        }
+        let instr = ctx.comp.get(id);
+        match instr.opcode {
+            Opcode::Bitcast => {
+                let from = instr.shape.dims.clone();
+                let to = ctx.comp.get(instr.operands[0]).shape.dims.clone();
+                map = map.then(IndexStep::Relinearize { from, to });
+                id = instr.operands[0];
+            }
+            Opcode::Constant => {
+                let dst = pb.reg();
+                pb.code.push(TInstr::Const { dst, value: CONST_FILL });
+                return Ok(dst);
+            }
+            Opcode::Tuple | Opcode::GetTupleElement | Opcode::While => {
+                bail!("value of %{} ({}) is not a dense buffer", id.0, instr.opcode)
+            }
+            _ => {
+                let dst = pb.reg();
+                pb.code.push(TInstr::LoadGlobal {
+                    dst,
+                    src: id,
+                    dims: instr.shape.dims.clone(),
+                    map,
+                });
+                return Ok(dst);
+            }
+        }
+    }
+}
+
+fn unop_of(op: Opcode) -> UnOp {
+    match op {
+        Opcode::Abs => UnOp::Abs,
+        Opcode::Negate => UnOp::Neg,
+        Opcode::Sign => UnOp::Sign,
+        Opcode::Floor => UnOp::Floor,
+        Opcode::Ceil => UnOp::Ceil,
+        Opcode::Not => UnOp::Not,
+        Opcode::Copy => UnOp::Id,
+        Opcode::Exp => UnOp::Exp,
+        Opcode::Log => UnOp::Log,
+        Opcode::Sqrt => UnOp::Sqrt,
+        Opcode::Rsqrt => UnOp::Rsqrt,
+        Opcode::Tanh => UnOp::Tanh,
+        Opcode::Sigmoid => UnOp::Sigmoid,
+        Opcode::Erf => UnOp::Erf,
+        _ => unreachable!("not a unary opcode: {op}"),
+    }
+}
+
+fn binop_of(op: Opcode) -> super::bytecode::BinOp {
+    use super::bytecode::BinOp;
+    match op {
+        Opcode::Add => BinOp::Add,
+        Opcode::Subtract => BinOp::Sub,
+        Opcode::Multiply => BinOp::Mul,
+        Opcode::Divide => BinOp::Div,
+        Opcode::Maximum => BinOp::Max,
+        Opcode::Minimum => BinOp::Min,
+        Opcode::Power => BinOp::Pow,
+        Opcode::Remainder => BinOp::Rem,
+        Opcode::Compare => BinOp::Gt,
+        _ => unreachable!("not a binary opcode: {op}"),
+    }
+}

@@ -1,0 +1,674 @@
+//! The stitched VM: executes lowered bytecode with an explicit grid.
+//!
+//! A [`StitchedExecutable`] runs a whole compiled module as **one
+//! launch per fused group** (plus one per library call), recording a
+//! [`LaunchLedger`]. Each kernel launch iterates its grid: per block,
+//! the block's shared-memory regions are materialized as buffers; per
+//! stitched loop, a thread loop strides the block's chunk computing one
+//! output element per [`ThreadProg`] evaluation.
+//!
+//! The VM deliberately enforces the stitching invariants instead of
+//! papering over them:
+//!
+//! - a [`TInstr::LoadShared`] whose mapped index falls outside the
+//!   executing block's chunk of the owner is an error (schedule
+//!   propagation should have made chunks line up — §4.2);
+//! - a shared region read while a different op owns it is an error (the
+//!   §5.1.3 dominance rule should have prevented the reuse);
+//! - kernel outputs only ever come from fusion roots — in-group
+//!   consumers recompute or read shared memory, never global output
+//!   written in the same launch (no cross-block synchronization).
+
+use super::bytecode::{
+    chunk_index, chunk_offset, linearize, sched_blocks, sched_chunk, BlockStep, KernelProgram,
+    LoopKind, TInstr, ThreadProg, WriteTarget, CONST_FILL,
+};
+use super::ledger::LaunchLedger;
+use crate::hlo::instruction::ReduceKind;
+use crate::hlo::InstrId;
+use anyhow::{anyhow, bail};
+use std::collections::HashMap;
+
+/// One entry parameter of the executable.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub id: InstrId,
+    pub name: String,
+    pub elems: usize,
+}
+
+/// A flat-buffer read: the resolved source instruction and the dims the
+/// reader sees (bitcast aliases resolved at lowering).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BufRead {
+    pub src: InstrId,
+    pub dims: Vec<i64>,
+}
+
+/// A vendor-library launch (cuBLAS/cuDNN class — LC-layer ops).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LibKind {
+    /// `[..., m, k] x [..., k, n] -> [..., m, n]`, k ascending.
+    Dot { lhs: BufRead, rhs: BufRead },
+    /// NHWC input, HWIO filter, stride 1, SAME padding.
+    Conv2d { input: BufRead, filter: BufRead },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LibraryCall {
+    pub op: InstrId,
+    pub out_dims: Vec<i64>,
+    pub out_elems: usize,
+    pub kind: LibKind,
+}
+
+/// One launch of the compiled module.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Launch {
+    Kernel(KernelProgram),
+    Library(LibraryCall),
+}
+
+/// A whole lowered module, ready to run: the compiler's executable
+/// artifact. Launches are in dependency (topological group) order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StitchedExecutable {
+    pub name: String,
+    /// Entry parameters in parameter-number order.
+    pub params: Vec<ParamSpec>,
+    /// Valueless IR constants, materialized as `CONST_FILL`.
+    pub consts: Vec<(InstrId, usize)>,
+    pub launches: Vec<Launch>,
+    /// Buffer holding the module's result (bitcasts resolved).
+    pub root: InstrId,
+    pub root_elems: usize,
+    /// Size of the value arena (instruction count of the source module).
+    pub n_values: usize,
+}
+
+impl StitchedExecutable {
+    /// Generated-kernel launches per execution (the Fig. 7 count).
+    pub fn generated_launches(&self) -> u64 {
+        self.launches.iter().filter(|l| matches!(l, Launch::Kernel(_))).count() as u64
+    }
+
+    /// Library-call launches per execution.
+    pub fn library_launches(&self) -> u64 {
+        self.launches.iter().filter(|l| matches!(l, Launch::Library(_))).count() as u64
+    }
+
+    /// Disassembly of every kernel launch (diagnostics / tests).
+    pub fn disasm(&self) -> String {
+        let mut out = String::new();
+        for launch in &self.launches {
+            match launch {
+                Launch::Kernel(k) => out.push_str(&k.disasm()),
+                Launch::Library(l) => {
+                    let kind = match l.kind {
+                        LibKind::Dot { .. } => "dot",
+                        LibKind::Conv2d { .. } => "conv2d",
+                    };
+                    out.push_str(&format!("library %{} {}\n", l.op.0, kind));
+                }
+            }
+        }
+        out
+    }
+
+    /// Execute with one flattened f32 buffer per parameter; returns the
+    /// module result and the launch ledger of this run.
+    pub fn run(&self, inputs: &[Vec<f32>]) -> crate::Result<(Vec<f32>, LaunchLedger)> {
+        if inputs.len() != self.params.len() {
+            bail!("{}: expected {} inputs, got {}", self.name, self.params.len(), inputs.len());
+        }
+        let mut values: Vec<Option<Vec<f32>>> = vec![None; self.n_values];
+        for (spec, buf) in self.params.iter().zip(inputs) {
+            if buf.len() != spec.elems {
+                bail!(
+                    "{}: parameter {} expects {} elements, got {}",
+                    self.name,
+                    spec.name,
+                    spec.elems,
+                    buf.len()
+                );
+            }
+            values[spec.id.0] = Some(buf.clone());
+        }
+        for &(id, elems) in &self.consts {
+            values[id.0] = Some(vec![CONST_FILL; elems.max(1)]);
+        }
+
+        let mut ledger = LaunchLedger::default();
+        for launch in &self.launches {
+            match launch {
+                Launch::Kernel(k) => {
+                    run_kernel(k, &mut values, &mut ledger)?;
+                    ledger.generated += 1;
+                }
+                Launch::Library(l) => {
+                    run_library(l, &mut values)?;
+                    ledger.library += 1;
+                }
+            }
+        }
+
+        let out = values[self.root.0]
+            .clone()
+            .ok_or_else(|| anyhow!("{}: root value was never produced", self.name))?;
+        Ok((out, ledger))
+    }
+}
+
+/// Per-block evaluation context handed to thread programs.
+struct EvalCtx<'a> {
+    values: &'a [Option<Vec<f32>>],
+    shm: &'a HashMap<usize, (InstrId, Vec<f32>)>,
+    block: i64,
+}
+
+fn run_kernel(
+    k: &KernelProgram,
+    values: &mut [Option<Vec<f32>>],
+    ledger: &mut LaunchLedger,
+) -> crate::Result<()> {
+    for &(root, elems) in &k.outputs {
+        values[root.0] = Some(vec![0f32; elems]);
+    }
+    let threads = k.threads.max(1) as i64;
+    for b in 0..k.blocks.max(1) as i64 {
+        // Shared memory: byte-offset-keyed regions; a SHARE rewrite
+        // replaces the previous owner (space sharing, §5.1.3).
+        let mut shm: HashMap<usize, (InstrId, Vec<f32>)> = HashMap::new();
+        for step in &k.steps {
+            match step {
+                BlockStep::Barrier => ledger.barriers += 1,
+                BlockStep::Loop { op, dims, sched, kind, write } => {
+                    let grid = sched_blocks(*sched, dims);
+                    if b >= grid {
+                        continue; // guarded-off block for this loop
+                    }
+                    let chunk = sched_chunk(*sched, dims);
+                    let mut vals = vec![0f32; chunk as usize];
+                    {
+                        let ctx = EvalCtx { values: &values[..], shm: &shm, block: b };
+                        for t in 0..threads {
+                            let mut e = t;
+                            while e < chunk {
+                                let idx = chunk_index(*sched, dims, b, e);
+                                vals[e as usize] = compute_element(kind, &idx, &ctx)
+                                    .map_err(|err| anyhow!("kernel {} %{}: {err}", k.name, op.0))?;
+                                ledger.thread_elems += 1;
+                                e += threads;
+                            }
+                        }
+                    }
+                    match write {
+                        WriteTarget::Shared { offset } => {
+                            shm.insert(*offset, (*op, vals));
+                        }
+                        WriteTarget::Output => {
+                            let buf = values[op.0]
+                                .as_mut()
+                                .ok_or_else(|| anyhow!("output %{} not allocated", op.0))?;
+                            for e in 0..chunk {
+                                let idx = chunk_index(*sched, dims, b, e);
+                                let lin = linearize(&idx, dims) as usize;
+                                buf[lin] = vals[e as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        ledger.block_iters += 1;
+    }
+    Ok(())
+}
+
+fn compute_element(kind: &LoopKind, idx: &[i64], ctx: &EvalCtx<'_>) -> crate::Result<f32> {
+    match kind {
+        LoopKind::Map { prog } => eval_prog(prog, idx, ctx),
+        LoopKind::Reduce { kind, dims, in_dims, operand } => {
+            // Rebuild the input index: kept dims take the output index,
+            // reduced dims iterate row-major (dims ascending) — the same
+            // order the op-by-op interpreter uses, so accumulation is
+            // bit-identical.
+            let kept: Vec<usize> = (0..in_dims.len()).filter(|d| !dims.contains(d)).collect();
+            let mut in_idx = vec![0i64; in_dims.len()];
+            for (k, &d) in kept.iter().enumerate() {
+                in_idx[d] = idx[k];
+            }
+            let sizes: Vec<i64> = dims.iter().map(|&d| in_dims[d]).collect();
+            let n: i64 = sizes.iter().product::<i64>().max(1);
+            let mut acc = reduce_init(*kind);
+            for it in 0..n {
+                let sub = super::bytecode::delinearize(it, &sizes);
+                for (j, &d) in dims.iter().enumerate() {
+                    in_idx[d] = sub[j];
+                }
+                let v = eval_prog(operand, &in_idx, ctx)?;
+                acc = reduce_combine(*kind, acc, v);
+            }
+            Ok(reduce_finish(*kind, acc, n))
+        }
+        LoopKind::Dot { lhs, rhs, lhs_dims, rhs_dims } => {
+            let r = idx.len();
+            debug_assert!(r >= 2);
+            let kk = lhs_dims[r - 1];
+            debug_assert_eq!(kk, rhs_dims[r - 2]);
+            let mut lhs_idx = idx.to_vec();
+            let mut rhs_idx = idx.to_vec();
+            let mut acc = 0f32;
+            for k in 0..kk {
+                lhs_idx[r - 1] = k;
+                rhs_idx[r - 2] = k;
+                acc += eval_prog(lhs, &lhs_idx, ctx)? * eval_prog(rhs, &rhs_idx, ctx)?;
+            }
+            Ok(acc)
+        }
+    }
+}
+
+pub(crate) fn reduce_init(kind: ReduceKind) -> f32 {
+    match kind {
+        ReduceKind::Sum | ReduceKind::Mean => 0.0,
+        ReduceKind::Max => f32::NEG_INFINITY,
+        ReduceKind::Min => f32::INFINITY,
+        ReduceKind::Prod => 1.0,
+    }
+}
+
+pub(crate) fn reduce_combine(kind: ReduceKind, acc: f32, v: f32) -> f32 {
+    match kind {
+        ReduceKind::Sum | ReduceKind::Mean => acc + v,
+        ReduceKind::Max => acc.max(v),
+        ReduceKind::Min => acc.min(v),
+        ReduceKind::Prod => acc * v,
+    }
+}
+
+pub(crate) fn reduce_finish(kind: ReduceKind, acc: f32, n: i64) -> f32 {
+    match kind {
+        ReduceKind::Mean => acc / n as f32,
+        _ => acc,
+    }
+}
+
+fn eval_prog(prog: &ThreadProg, idx: &[i64], ctx: &EvalCtx<'_>) -> crate::Result<f32> {
+    let mut regs = vec![0f32; prog.n_regs.max(1) as usize];
+    for ins in &prog.code {
+        match ins {
+            TInstr::Const { dst, value } => regs[*dst as usize] = *value,
+            TInstr::LoadGlobal { dst, src, dims, map } => {
+                let j = map.apply(idx);
+                let lin = linearize(&j, dims);
+                let buf = ctx.values[src.0]
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("value %{} read before it was produced", src.0))?;
+                regs[*dst as usize] = *buf.get(lin as usize).ok_or_else(|| {
+                    anyhow!("%{}: index {j:?} out of bounds for dims {dims:?}", src.0)
+                })?;
+            }
+            TInstr::LoadShared { dst, offset, owner, owner_dims, owner_sched, map } => {
+                let j = map.apply(idx);
+                let (holder, buf) = ctx.shm.get(offset).ok_or_else(|| {
+                    anyhow!("shared region at offset {offset} read before any write")
+                })?;
+                if holder != owner {
+                    bail!(
+                        "shared region at offset {offset} holds %{} but %{} was expected \
+                         (space-sharing violation)",
+                        holder.0,
+                        owner.0
+                    );
+                }
+                let local = chunk_offset(*owner_sched, owner_dims, ctx.block, &j).ok_or_else(
+                    || {
+                        anyhow!(
+                            "block {} reads %{} at {j:?}, outside its shared chunk \
+                             (stitching invariant violated)",
+                            ctx.block,
+                            owner.0
+                        )
+                    },
+                )?;
+                regs[*dst as usize] = buf[local as usize];
+            }
+            TInstr::LoadOwned { dst, src, dims, owner_sched, map } => {
+                let j = map.apply(idx);
+                if chunk_offset(*owner_sched, dims, ctx.block, &j).is_none() {
+                    bail!(
+                        "block {} reads root %{} at {j:?}, outside its own chunk \
+                         (no cross-block synchronization exists)",
+                        ctx.block,
+                        src.0
+                    );
+                }
+                let lin = linearize(&j, dims) as usize;
+                let buf = ctx.values[src.0]
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("root %{} output not allocated", src.0))?;
+                regs[*dst as usize] = buf[lin];
+            }
+            TInstr::Unary { dst, a, op } => {
+                regs[*dst as usize] = op.apply(regs[*a as usize]);
+            }
+            TInstr::Binary { dst, a, b, op } => {
+                regs[*dst as usize] = op.apply(regs[*a as usize], regs[*b as usize]);
+            }
+            TInstr::Select { dst, pred, on_true, on_false } => {
+                regs[*dst as usize] = if regs[*pred as usize] != 0.0 {
+                    regs[*on_true as usize]
+                } else {
+                    regs[*on_false as usize]
+                };
+            }
+            TInstr::Branch { dst, map, dim, limits, cases } => {
+                let mut j = map.apply(idx);
+                let x = j[*dim];
+                let mut case = None;
+                let mut prev = 0i64;
+                for (i, &l) in limits.iter().enumerate() {
+                    if x < l {
+                        case = Some((i, prev));
+                        break;
+                    }
+                    prev = l;
+                }
+                let (ci, start) =
+                    case.ok_or_else(|| anyhow!("concat index {x} out of range {limits:?}"))?;
+                j[*dim] = x - start;
+                regs[*dst as usize] = eval_prog(&cases[ci], &j, ctx)?;
+            }
+        }
+    }
+    Ok(regs[prog.out as usize])
+}
+
+fn read_buf<'a>(
+    values: &'a [Option<Vec<f32>>],
+    r: &BufRead,
+) -> crate::Result<&'a [f32]> {
+    values[r.src.0]
+        .as_deref()
+        .ok_or_else(|| anyhow!("library operand %{} not yet produced", r.src.0))
+}
+
+fn run_library(l: &LibraryCall, values: &mut [Option<Vec<f32>>]) -> crate::Result<()> {
+    let out = match &l.kind {
+        LibKind::Dot { lhs, rhs } => {
+            let a = read_buf(&values[..], lhs)?;
+            let b = read_buf(&values[..], rhs)?;
+            dot(a, &lhs.dims, b, &rhs.dims, &l.out_dims)
+        }
+        LibKind::Conv2d { input, filter } => {
+            let x = read_buf(&values[..], input)?;
+            let w = read_buf(&values[..], filter)?;
+            conv2d_same(x, &input.dims, w, &filter.dims, &l.out_dims)
+        }
+    };
+    values[l.op.0] = Some(out);
+    Ok(())
+}
+
+/// Batched matmul `[..., m, k] x [..., k, n] -> [..., m, n]`; the exact
+/// loop order (k innermost, ascending) is shared with the interpreter
+/// so results are bit-identical.
+pub(crate) fn dot(
+    a: &[f32],
+    a_dims: &[i64],
+    b: &[f32],
+    b_dims: &[i64],
+    out_dims: &[i64],
+) -> Vec<f32> {
+    let r = out_dims.len();
+    let batch: i64 = out_dims[..r - 2].iter().product::<i64>().max(1);
+    let m = out_dims[r - 2];
+    let n = out_dims[r - 1];
+    let k = a_dims[r - 1];
+    debug_assert_eq!(k, b_dims[r - 2]);
+    let mut out = vec![0f32; (batch * m * n) as usize];
+    for bi in 0..batch {
+        let ao = (bi * m * k) as usize;
+        let bo = (bi * k * n) as usize;
+        let oo = (bi * m * n) as usize;
+        for i in 0..m as usize {
+            for j in 0..n as usize {
+                let mut acc = 0f32;
+                for kk in 0..k as usize {
+                    acc += a[ao + i * k as usize + kk] * b[bo + kk * n as usize + j];
+                }
+                out[oo + i * n as usize + j] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// NHWC x HWIO convolution, stride 1, SAME padding (zero fill), the
+/// shape contract of [`crate::hlo::GraphBuilder::conv2d`].
+pub(crate) fn conv2d_same(
+    x: &[f32],
+    x_dims: &[i64],
+    w: &[f32],
+    w_dims: &[i64],
+    out_dims: &[i64],
+) -> Vec<f32> {
+    let (n, h, wd, c) = (x_dims[0], x_dims[1], x_dims[2], x_dims[3]);
+    let (kh, kw, _ci, co) = (w_dims[0], w_dims[1], w_dims[2], w_dims[3]);
+    let pad_h = (kh - 1) / 2;
+    let pad_w = (kw - 1) / 2;
+    let mut out = vec![0f32; out_dims.iter().product::<i64>() as usize];
+    let xi = |ni: i64, hi: i64, wi: i64, ci2: i64| -> f32 {
+        if hi < 0 || hi >= h || wi < 0 || wi >= wd {
+            0.0
+        } else {
+            x[(((ni * h + hi) * wd + wi) * c + ci2) as usize]
+        }
+    };
+    let mut o = 0usize;
+    for ni in 0..n {
+        for hi in 0..h {
+            for wi in 0..wd {
+                for oi in 0..co {
+                    let mut acc = 0f32;
+                    for khi in 0..kh {
+                        for kwi in 0..kw {
+                            for ci2 in 0..c {
+                                let xv = xi(ni, hi + khi - pad_h, wi + kwi - pad_w, ci2);
+                                let wv = w[(((khi * kw + kwi) * c + ci2) * co + oi) as usize];
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    out[o] = acc;
+                    o += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::{compile_module, FusionMode, PipelineConfig};
+    use crate::exec::lower::lower_to_exec;
+    use crate::gpusim::DeviceConfig;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Module, Shape};
+    use crate::schedule::PerfLibrary;
+
+    fn compile_and_lower(module: &Module, mode: FusionMode) -> StitchedExecutable {
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let cfg = PipelineConfig::default();
+        let compiled = compile_module(module, mode, &mut lib, &cfg).unwrap();
+        lower_to_exec(module, &compiled.plan, &compiled.kernels, &compiled.generated_group_ids)
+            .unwrap()
+    }
+
+    fn fill(n: usize, seed: u64) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed * 97);
+                ((h % 1000) as f32) / 1000.0 - 0.5
+            })
+            .collect()
+    }
+
+    /// Reference softmax(scores) @ v over the last dim of [b, s, s].
+    fn softmax_bmm_ref(scores: &[f32], v: &[f32], b: usize, s: usize, d: usize) -> Vec<f32> {
+        let mut out = vec![0f32; b * s * d];
+        for bi in 0..b {
+            for i in 0..s {
+                let row = &scores[bi * s * s + i * s..bi * s * s + (i + 1) * s];
+                let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let e: Vec<f32> = row.iter().map(|&x| (x - m).exp()).collect();
+                let sum: f32 = e.iter().sum();
+                for j in 0..d {
+                    let mut acc = 0f32;
+                    for kk in 0..s {
+                        acc += (e[kk] / sum) * v[bi * s * d + kk * d + j];
+                    }
+                    out[bi * s * d + i * d + j] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn figure3_kernel_executes_softmax_bmm() {
+        // The paper's motivating pattern as ONE launch.
+        let (bs, s, d) = (4usize, 16usize, 8usize);
+        let mut b = GraphBuilder::new("fig3");
+        let scores = b.param("scores", Shape::f32(&[bs as i64, s as i64, s as i64]));
+        let v = b.param("v", Shape::f32(&[bs as i64, s as i64, d as i64]));
+        let m = b.reduce(scores, &[2], ReduceKind::Max);
+        let mb = b.broadcast(m, &[bs as i64, s as i64, s as i64], &[0, 1]);
+        let sh = b.sub(scores, mb);
+        let e = b.exp(sh);
+        let sm = b.reduce(e, &[2], ReduceKind::Sum);
+        let sb = b.broadcast(sm, &[bs as i64, s as i64, s as i64], &[0, 1]);
+        let p = b.div(e, sb);
+        let out = b.batch_dot(p, v);
+        let module = Module::new("fig3", b.finish(out));
+
+        let mut cfg = PipelineConfig::default();
+        cfg.deep.fuse_batch_dot = true;
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let compiled =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        let exe = lower_to_exec(
+            &module,
+            &compiled.plan,
+            &compiled.kernels,
+            &compiled.generated_group_ids,
+        )
+        .unwrap();
+
+        let scores_v = fill(bs * s * s, 1);
+        let v_v = fill(bs * s * d, 2);
+        let (got, ledger) = exe.run(&[scores_v.clone(), v_v.clone()]).unwrap();
+        let want = softmax_bmm_ref(&scores_v, &v_v, bs, s, d);
+        let max_diff = got
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_diff < 1e-5, "stitched softmax-bmm diverged: {max_diff}");
+        // With batch-dot fusion on, the whole pattern is few launches —
+        // far fewer than the 8 per-op kernels.
+        assert!(ledger.total_launches() < 8, "{ledger}");
+        assert!(ledger.generated >= 1);
+        assert!(ledger.barriers > 0, "shared-memory stitching must fence: {ledger}");
+    }
+
+    #[test]
+    fn baseline_and_stitched_agree_on_elementwise_chain() {
+        let mut b = GraphBuilder::new("chain");
+        let x = b.param("x", Shape::f32(&[32, 24]));
+        let y = b.param("y", Shape::f32(&[32, 24]));
+        let e = b.exp(x);
+        let a = b.add(e, y);
+        let t = b.tanh(a);
+        let g = b.compare(t, y);
+        let sel = b.select(g, t, y);
+        let r = b.reduce(sel, &[1], ReduceKind::Mean);
+        let module = Module::new("chain", b.finish(r));
+
+        let base = compile_and_lower(&module, FusionMode::XlaBaseline);
+        let fs = compile_and_lower(&module, FusionMode::FusionStitching);
+        let xs = fill(32 * 24, 3);
+        let ys = fill(32 * 24, 4);
+        let (ob, lb) = base.run(&[xs.clone(), ys.clone()]).unwrap();
+        let (of, lf) = fs.run(&[xs, ys]).unwrap();
+        assert_eq!(ob.len(), 32);
+        let max_diff =
+            ob.iter().zip(&of).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(max_diff < 1e-5, "modes diverged: {max_diff}");
+        assert!(
+            lf.total_launches() <= lb.total_launches(),
+            "deep fusion must not launch more: {lf} vs {lb}"
+        );
+    }
+
+    #[test]
+    fn library_dot_and_conv_execute() {
+        let mut b = GraphBuilder::new("lib");
+        let x = b.param("x", Shape::f32(&[2, 3]));
+        let w = b.param("w", Shape::f32(&[3, 2]));
+        let d = b.dot(x, w);
+        let t = b.tanh(d);
+        let module = Module::new("lib", b.finish(t));
+        let exe = compile_and_lower(&module, FusionMode::FusionStitching);
+        let (out, ledger) = exe
+            .run(&[vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]])
+            .unwrap();
+        // row0: [1,2,3] x cols [1,0,1]^T etc: [1*1+2*0+3*1, 1*0+2*1+3*1] = [4, 5]
+        assert!((out[0] - (4.0f32).tanh()).abs() < 1e-6);
+        assert!((out[1] - (5.0f32).tanh()).abs() < 1e-6);
+        assert_eq!(ledger.library, 1);
+        assert!(ledger.generated >= 1);
+    }
+
+    #[test]
+    fn conv2d_same_matches_manual() {
+        // 1x3x3x1 input, 3x3x1x1 filter of ones: each output = sum of
+        // the 3x3 neighborhood (zero padded).
+        let x: Vec<f32> = (1..=9).map(|v| v as f32).collect();
+        let w = vec![1.0f32; 9];
+        let out = conv2d_same(&x, &[1, 3, 3, 1], &w, &[3, 3, 1, 1], &[1, 3, 3, 1]);
+        // center = sum(1..9) = 45; corner (0,0) = 1+2+4+5 = 12
+        assert_eq!(out[4], 45.0);
+        assert_eq!(out[0], 12.0);
+    }
+
+    #[test]
+    fn arity_and_size_checked() {
+        let mut b = GraphBuilder::new("m");
+        let x = b.param("x", Shape::f32(&[4]));
+        let t = b.tanh(x);
+        let module = Module::new("m", b.finish(t));
+        let exe = compile_and_lower(&module, FusionMode::FusionStitching);
+        assert!(exe.run(&[]).is_err());
+        assert!(exe.run(&[vec![0.0; 3]]).is_err());
+        assert!(exe.run(&[vec![0.0; 4]]).is_ok());
+    }
+
+    #[test]
+    fn disasm_shows_loops_and_barriers() {
+        let mut b = GraphBuilder::new("d");
+        let x = b.param("x", Shape::f32(&[8, 32]));
+        let e = b.exp(x);
+        let r = b.reduce(e, &[1], ReduceKind::Sum);
+        let rb = b.broadcast(r, &[8, 32], &[0]);
+        let o = b.div(e, rb);
+        let module = Module::new("d", b.finish(o));
+        let exe = compile_and_lower(&module, FusionMode::FusionStitching);
+        let text = exe.disasm();
+        assert!(text.contains("reduce.Sum"), "{text}");
+        assert!(text.contains("-> output"), "{text}");
+    }
+}

@@ -1,0 +1,32 @@
+//! Stitched execution — the compiler's output, actually run.
+//!
+//! Everything upstream (fusion §3, schedule planning §4, codegen §5)
+//! produces *plans*; this subsystem executes them. A compiled module
+//! lowers ([`lower`]) into a [`StitchedExecutable`] — register bytecode
+//! ([`bytecode`]) modeling the GPU grid explicitly — and the VM
+//! ([`machine`]) runs the whole module as **one launch per fused
+//! group**, with per-block shared-memory regions, barrier fences and
+//! thread loops. A [`LaunchLedger`] ([`ledger`]) records
+//! generated-kernel vs library-call launches, so the paper's headline
+//! launch-reduction claim (Fig. 7) is measured on real executions
+//! instead of estimated from the partition.
+//!
+//! Paper §5 ↔ module map:
+//!
+//! | paper | here |
+//! |---|---|
+//! | Algorithm 2 emitter dispatch | [`lower`] (follows the `KernelPlan`'s records) |
+//! | per-op parallel loops (Fig. 5) | [`bytecode::BlockStep::Loop`] + chunk model |
+//! | thread composition | inlined [`bytecode::ThreadProg`] expressions |
+//! | block composition via shared memory | per-block regions + [`bytecode::BlockStep::Barrier`] |
+//! | kernel launch counts (Fig. 7) | [`LaunchLedger`] |
+
+pub mod bytecode;
+pub mod ledger;
+pub mod lower;
+pub mod machine;
+
+pub use bytecode::KernelProgram;
+pub use ledger::LaunchLedger;
+pub use lower::lower_to_exec;
+pub use machine::{Launch, LibKind, LibraryCall, StitchedExecutable};

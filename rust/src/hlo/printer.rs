@@ -83,6 +83,73 @@ pub fn print_instruction(i: &Instruction) -> String {
     s
 }
 
+/// Print `m` in the XLA-flavoured text dialect the op-by-op runtime
+/// interpreter executes ([`crate::runtime::interp::HloProgram`]): an
+/// `ENTRY` block of `name = shape opcode(operands)` lines with
+/// `dimensions={...}` / `kind=` attributes. This is the bridge that
+/// lets any in-memory graph (e.g. the corpus generator's) run on the
+/// interpreter as the per-op baseline of the stitched-execution
+/// differential harness.
+///
+/// Valueless IR constants print as `constant(1)` — the same 1.0 fill
+/// the stitched VM materializes, so both backends agree.
+pub fn xla_text(m: &Module) -> String {
+    let name: String = m
+        .name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    let mut out = format!("HloModule {name}\n\nENTRY main {{\n");
+    let c = &m.entry;
+    let root = if c.has_root() { Some(c.root()) } else { None };
+    for instr in c.instructions() {
+        let prefix = if root == Some(instr.id) { "ROOT " } else { "" };
+        let mut line = format!(
+            "  {prefix}v{} = {} {}(",
+            instr.id.0,
+            instr.shape,
+            opcode_keyword(instr.opcode)
+        );
+        match instr.opcode {
+            Opcode::Parameter => {
+                line.push_str(&instr.attrs.parameter_number.unwrap_or(0).to_string());
+            }
+            Opcode::Constant => line.push('1'),
+            _ => {
+                let ops: Vec<String> =
+                    instr.operands.iter().map(|o| format!("v{}", o.0)).collect();
+                line.push_str(&ops.join(", "));
+            }
+        }
+        line.push(')');
+        let mut attrs: Vec<String> = Vec::new();
+        if let Some(d) = &instr.attrs.reduce_dims {
+            attrs.push(format!("dimensions={{{}}}", join_usize(d)));
+        }
+        if let Some(k) = &instr.attrs.reduce_kind {
+            attrs.push(format!("kind={k}"));
+        }
+        if let Some(d) = &instr.attrs.broadcast_dims {
+            attrs.push(format!("dimensions={{{}}}", join_usize(d)));
+        }
+        if let Some(p) = &instr.attrs.transpose_perm {
+            attrs.push(format!("dimensions={{{}}}", join_usize(p)));
+        }
+        for a in attrs {
+            line.push_str(", ");
+            line.push_str(&a);
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn join_usize(xs: &[usize]) -> String {
+    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+}
+
 pub(crate) fn opcode_keyword(op: Opcode) -> &'static str {
     use Opcode::*;
     match op {
@@ -212,6 +279,28 @@ mod tests {
         assert!(text.contains("reduce"));
         assert!(text.contains("dims=[1]"));
         assert!(text.contains("root %1"));
+    }
+
+    #[test]
+    fn xla_text_executes_on_the_interpreter() {
+        let mut b = GraphBuilder::new("roundtrip");
+        let x = b.param("x", Shape::f32(&[2, 4]));
+        let bias = b.param("bias", Shape::f32(&[4]));
+        let bb = b.broadcast(bias, &[2, 4], &[1]);
+        let a = b.add(x, bb);
+        let t = b.tanh(a);
+        let r = b.reduce(t, &[1], ReduceKind::Sum);
+        let m = Module::new("roundtrip", b.finish(r));
+        let text = xla_text(&m);
+        assert!(text.contains("ENTRY main"), "{text}");
+        assert!(text.contains("dimensions={1}"), "{text}");
+        assert!(text.contains("kind=Sum"), "{text}");
+        let prog = crate::runtime::interp::HloProgram::parse(&text).unwrap();
+        let out = prog
+            .execute(&[vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], vec![0.5; 4]])
+            .unwrap();
+        let expect: f32 = (0..4).map(|i| (i as f32 + 0.5).tanh()).sum();
+        assert!((out[0][0] - expect).abs() < 1e-6);
     }
 
     #[test]

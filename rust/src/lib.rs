@@ -27,6 +27,10 @@
 //!   kernel plans (Algorithm 2, §5).
 //! - [`gpusim`] — an analytical Pascal-class GPU cost model standing in
 //!   for the paper's physical GPU + nvprof (see DESIGN.md substitutions).
+//! - [`exec`] — the stitched VM: compiled modules lowered to register
+//!   bytecode with an explicit grid model and executed as one launch
+//!   per fused group, with a launch ledger measuring the paper's
+//!   kernel-launch reduction on real runs.
 //! - [`models`] — the six benchmark graphs of Table 2.
 //! - [`corpus`] — synthetic model corpus regenerating Figure 1.
 //! - [`runtime`] — the execution runtime for AOT-lowered JAX/Pallas
@@ -44,6 +48,7 @@ pub mod analysis;
 pub mod codegen;
 pub mod coordinator;
 pub mod corpus;
+pub mod exec;
 pub mod fusion;
 pub mod gpusim;
 pub mod hlo;

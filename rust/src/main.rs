@@ -253,7 +253,12 @@ fn cmd_serve(args: &[String]) -> i32 {
     let compile = models::by_name("NMT").map(|(meta, module)| {
         let mut pipeline = PipelineConfig::default();
         pipeline.deep.fuse_batch_dot = meta.fuse_batch_dot;
-        CompileOptions { module, mode: FusionMode::FusionStitching, pipeline }
+        CompileOptions {
+            module,
+            mode: FusionMode::FusionStitching,
+            pipeline,
+            use_stitched_backend: false,
+        }
     });
 
     // Shapes baked by python/compile/aot.py for the NMT attention block.
@@ -301,6 +306,17 @@ fn cmd_serve(args: &[String]) -> i32 {
         lat.percentile_us(95.0) / 1e3,
         lat.throughput_rps(wall),
     );
+    if stats.launches.total_launches() > 0 {
+        println!(
+            "executed {} ({:.1} launches/request{})",
+            stats.launches,
+            fusion_stitching::coordinator::metrics::launches_per_request(
+                &stats.launches,
+                stats.requests
+            ),
+            if stats.stitched_batches > 0 { ", stitched backend" } else { "" },
+        );
+    }
     if stats.cache_hits + stats.cache_misses > 0 {
         let cold = stats.compile_us.first().copied().unwrap_or(0.0);
         let warm = if stats.compile_us.len() > 1 {

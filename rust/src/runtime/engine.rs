@@ -1,20 +1,46 @@
 //! Artifact registry + typed execution wrapper over compiled models.
+//!
+//! The engine serves models behind one `run_f32` surface and
+//! dispatches per program between two backends:
+//!
+//! - the **op-by-op interpreter** ([`super::interp::HloProgram`]) for
+//!   `*.hlo.txt` artifacts — one kernel launch per instruction, the
+//!   paper's fine-granularity baseline;
+//! - the **stitched VM** ([`crate::exec::StitchedExecutable`]) for
+//!   compiled modules registered via [`Engine::register_stitched`] —
+//!   one launch per fused group.
+//!
+//! Either way a cumulative [`LaunchLedger`] is kept per model, so the
+//! serving loop can report real launch counts
+//! ([`crate::coordinator::server::WorkerStats`]).
 
 use super::client::Runtime;
 use super::interp::HloProgram;
+use crate::exec::{LaunchLedger, StitchedExecutable};
 use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Which executor backs a loaded model.
+enum Backend {
+    /// Op-by-op HLO-text interpreter (per-op launches).
+    Interp(HloProgram),
+    /// Stitched VM executable (one launch per fused group).
+    Stitched(Arc<StitchedExecutable>),
+}
 
 /// A compiled artifact ready to execute.
 pub struct LoadedModel {
     pub name: String,
-    exe: HloProgram,
+    backend: Backend,
+    ledger: RefCell<LaunchLedger>,
 }
 
 impl LoadedModel {
     /// Execute with f32 inputs given as `(data, dims)` pairs; returns the
-    /// flattened f32 outputs (artifacts are lowered with
+    /// flattened f32 outputs (text artifacts are lowered with
     /// `return_tuple=True`, so the root is usually a tuple; each tuple
     /// element becomes one output buffer).
     pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
@@ -28,12 +54,40 @@ impl LoadedModel {
                 Ok(data.to_vec())
             })
             .collect::<Result<_>>()?;
-        self.exe.execute(&buffers)
+        match &self.backend {
+            Backend::Interp(prog) => {
+                let out = prog.execute(&buffers)?;
+                let (generated, library) = prog.launch_profile();
+                let mut ledger = self.ledger.borrow_mut();
+                ledger.generated += generated;
+                ledger.library += library;
+                Ok(out)
+            }
+            Backend::Stitched(exe) => {
+                let (out, run_ledger) = exe.run(&buffers)?;
+                self.ledger.borrow_mut().merge(&run_ledger);
+                Ok(vec![out])
+            }
+        }
+    }
+
+    /// Which executor backs this model.
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Interp(_) => "interp",
+            Backend::Stitched(_) => "stitched",
+        }
+    }
+
+    /// Cumulative launch counts across every `run_f32` on this model.
+    pub fn launch_ledger(&self) -> LaunchLedger {
+        *self.ledger.borrow()
     }
 }
 
-/// The artifact registry: loads every `*.hlo.txt` under `artifacts/` and
-/// serves compiled executables by stem name (e.g. `attention_fused`).
+/// The artifact registry: loads every `*.hlo.txt` under `artifacts/`
+/// (interpreter backend) and serves compiled executables by stem name
+/// (e.g. `attention_fused`); stitched executables register directly.
 pub struct Engine {
     rt: Runtime,
     models: HashMap<String, LoadedModel>,
@@ -49,14 +103,35 @@ impl Engine {
         self.rt.platform()
     }
 
-    /// Load (and compile) one artifact by stem; idempotent.
+    /// Load (and compile) one text artifact by stem; idempotent.
     pub fn load(&mut self, stem: &str) -> Result<&LoadedModel> {
         if !self.models.contains_key(stem) {
             let path = self.dir.join(format!("{stem}.hlo.txt"));
             let exe = self.rt.load_hlo_text(&path)?;
-            self.models.insert(stem.to_string(), LoadedModel { name: stem.to_string(), exe });
+            self.models.insert(
+                stem.to_string(),
+                LoadedModel {
+                    name: stem.to_string(),
+                    backend: Backend::Interp(exe),
+                    ledger: RefCell::new(LaunchLedger::default()),
+                },
+            );
         }
         Ok(&self.models[stem])
+    }
+
+    /// Register a stitched-VM executable under `stem` (replacing any
+    /// artifact of the same name): subsequent `run_f32` calls execute
+    /// one launch per fused group instead of one per op.
+    pub fn register_stitched(&mut self, stem: &str, exe: Arc<StitchedExecutable>) {
+        self.models.insert(
+            stem.to_string(),
+            LoadedModel {
+                name: stem.to_string(),
+                backend: Backend::Stitched(exe),
+                ledger: RefCell::new(LaunchLedger::default()),
+            },
+        );
     }
 
     pub fn get(&self, stem: &str) -> Option<&LoadedModel> {
@@ -107,9 +182,14 @@ ENTRY main {
         let stems = engine.load_all().unwrap();
         assert_eq!(stems, vec!["add_self"]);
         let model = engine.get("add_self").unwrap();
+        assert_eq!(model.backend_name(), "interp");
         let out = model.run_f32(&[(&[1.5f32, -2.0], &[2])]).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0], vec![3.0f32, -4.0]);
+        // one generated launch (the add) recorded per execution
+        assert_eq!(model.launch_ledger().generated, 1);
+        model.run_f32(&[(&[0.0f32, 0.0], &[2])]).unwrap();
+        assert_eq!(model.launch_ledger().generated, 2);
     }
 
     #[test]
@@ -120,5 +200,41 @@ ENTRY main {
         engine.load("add_self").unwrap();
         let model = engine.get("add_self").unwrap();
         assert!(model.run_f32(&[(&[1.0f32, 2.0, 3.0], &[2])]).is_err());
+    }
+
+    #[test]
+    fn stitched_backend_dispatches_and_counts_launches() {
+        use crate::coordinator::pipeline::{compile_module, FusionMode, PipelineConfig};
+        use crate::gpusim::DeviceConfig;
+        use crate::hlo::{GraphBuilder, Module, Shape};
+        use crate::schedule::PerfLibrary;
+
+        let mut b = GraphBuilder::new("entry");
+        let x = b.param("x", Shape::f32(&[4, 3]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let module = Module::new("served", b.finish(t));
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let compiled = compile_module(
+            &module,
+            FusionMode::FusionStitching,
+            &mut lib,
+            &PipelineConfig::default(),
+        )
+        .unwrap();
+        let exe = compiled.executable.clone().expect("must lower");
+
+        let dir = TempDir::new("engine3");
+        let mut engine = Engine::new(dir.path()).unwrap();
+        engine.register_stitched("served", exe);
+        let model = engine.get("served").unwrap();
+        assert_eq!(model.backend_name(), "stitched");
+        let input: Vec<f32> = (0..12).map(|i| i as f32 * 0.1).collect();
+        let out = model.run_f32(&[(&input, &[4, 3])]).unwrap();
+        assert!((out[0][0] - (0.0f32).exp().tanh()).abs() < 1e-6);
+        let ledger = model.launch_ledger();
+        // exp∘tanh fuses into one generated kernel launch
+        assert_eq!(ledger.generated, 1);
+        assert_eq!(ledger.library, 0);
     }
 }

@@ -1,24 +1,34 @@
-//! A minimal interpreter for XLA HLO **text** artifacts.
+//! A minimal interpreter for XLA HLO **text** artifacts — the op-by-op
+//! execution baseline.
 //!
 //! The original runtime layer wrapped a PJRT CPU client through the
 //! `xla` (xla_extension) bindings. That crate needs a multi-gigabyte
 //! C++ `xla_extension` install at build time, which the offline image
 //! does not carry — so the numeric hot path is served by this small,
-//! dependency-free interpreter instead. It understands the subset of
-//! HLO text that `python/compile/aot.py` emits for the paper's
-//! artifacts (flat f32 graphs of parameters, elementwise ops, tuples)
-//! and executes them exactly; anything outside the subset fails loudly
-//! at load time. Swapping a real PJRT backend back in only touches
-//! [`super::client`] — the [`HloProgram`] API is shaped like a loaded
-//! executable on purpose.
+//! dependency-free interpreter instead. Swapping a real PJRT backend
+//! back in only touches [`super::client`] — the [`HloProgram`] API is
+//! shaped like a loaded executable on purpose.
 //!
-//! Scope note: full-size artifacts freshly lowered by jax (the
-//! attention/layernorm pairs) use a wider opcode set (`dot`, `reduce`
-//! with regions, `call`, `convert`, …) than this interpreter carries —
-//! executing those requires the real PJRT backend, which is why the
-//! artifact-dependent tests/benches skip cleanly when `artifacts/` is
-//! absent. The serving-loop and engine tests here use artifacts within
-//! the subset.
+//! Besides serving artifacts, the interpreter is the **per-op
+//! baseline** of the stitched execution subsystem
+//! ([`crate::exec`]): it executes one instruction at a time — the
+//! kernel-per-op world of the paper's §1 — and
+//! [`HloProgram::launch_profile`] reports how many kernel launches
+//! that costs, which the differential harness compares against the
+//! stitched VM's [`crate::exec::LaunchLedger`].
+//!
+//! Supported subset (everything dense f32; `pred` values are 0.0/1.0):
+//! parameters, constants, the elementwise set (add/sub/mul/div/max/min/
+//! power/exp/log/tanh/sigmoid/sqrt/rsqrt/negate/abs/copy), `compare`
+//! (greater-than), `select`, dimension-mapped `broadcast`, `reshape`,
+//! `reduce` (sum/max/min/mean/prod over explicit dims), `dot`,
+//! `convolution` (NHWC/HWIO, stride 1, SAME) and `tuple` roots — the
+//! full opcode set the corpus generator emits
+//! ([`crate::corpus::generator`], printed via
+//! [`crate::hlo::printer::xla_text`]). Anything else fails loudly at
+//! load time, as before. The numeric kernels (`dot`, `conv`, reduce
+//! combiners) are shared with the stitched VM so both backends are
+//! bit-identical where they overlap.
 //!
 //! ```
 //! use fusion_stitching::runtime::interp::HloProgram;
@@ -28,6 +38,8 @@
 //! assert_eq!(out, vec![vec![2.0, 5.0]]);
 //! ```
 
+use crate::exec::machine::{conv2d_same, dot, reduce_combine, reduce_finish, reduce_init};
+use crate::hlo::instruction::ReduceKind;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 
@@ -42,16 +54,27 @@ enum Op {
     Divide,
     Maximum,
     Minimum,
+    Power,
     Exp,
     Log,
     Tanh,
+    Sigmoid,
     Sqrt,
     Rsqrt,
     Negate,
     Abs,
     Copy,
-    /// Splat a scalar (or pass an equal-sized operand through).
+    /// Greater-than comparison (0.0 / 1.0 result).
+    Compare,
+    Select,
+    /// Dimension-mapped broadcast when `dimensions={...}` is given;
+    /// otherwise splat a scalar / pass an equal-sized operand through.
     Broadcast,
+    Reshape,
+    /// Reduce over `Instr::reduce_dims` with `Instr::reduce_kind`.
+    Reduce,
+    Dot,
+    Convolution,
     Tuple,
 }
 
@@ -61,7 +84,16 @@ struct Instr {
     op: Op,
     /// Output element count; 0 for tuples (their shape is the operands').
     elems: usize,
+    /// Output dims; empty for scalars and tuples.
+    dims: Vec<i64>,
     operands: Vec<usize>,
+    /// `reduce`: dims being collapsed (ascending).
+    reduce_dims: Vec<usize>,
+    /// `reduce`: combiner.
+    reduce_kind: Option<ReduceKind>,
+    /// `broadcast`: XLA `broadcast_dimensions` (operand dim i → output
+    /// dim `bcast_dims[i]`), when given.
+    bcast_dims: Option<Vec<usize>>,
 }
 
 /// A parsed, executable HLO-text module.
@@ -83,6 +115,28 @@ impl HloProgram {
     /// Number of entry parameters.
     pub fn param_count(&self) -> usize {
         self.params.len()
+    }
+
+    /// Kernel launches one execution costs in the op-by-op world:
+    /// `(generated, library)` — every non-free instruction is one
+    /// launch, `dot`/`convolution` go to the vendor library.
+    pub fn launch_profile(&self) -> (u64, u64) {
+        let mut generated = 0u64;
+        let mut library = 0u64;
+        for i in &self.instrs {
+            match i.op {
+                Op::Parameter(_) | Op::Constant(_) | Op::Tuple => {}
+                Op::Dot | Op::Convolution => library += 1,
+                _ => generated += 1,
+            }
+        }
+        (generated, library)
+    }
+
+    /// Total launches per execution (generated + library).
+    pub fn kernel_launches(&self) -> u64 {
+        let (g, l) = self.launch_profile();
+        g + l
     }
 
     /// Parse the ENTRY computation of an HLO text module.
@@ -175,6 +229,10 @@ impl HloProgram {
         }
     }
 
+    fn operand_dims(&self, instr: &Instr, k: usize) -> &[i64] {
+        &self.instrs[instr.operands[k]].dims
+    }
+
     fn eval(&self, instr: &Instr, values: &[Option<Vec<f32>>]) -> Result<Vec<f32>> {
         let arg = |k: usize| -> Result<&Vec<f32>> {
             let ix = *instr
@@ -197,26 +255,57 @@ impl HloProgram {
         };
         match instr.op {
             Op::Parameter(_) => bail!("parameter {} was not bound", instr.name),
-            Op::Constant(c) => {
-                Ok(vec![c; instr.elems.max(1)])
-            }
+            Op::Constant(c) => Ok(vec![c; instr.elems.max(1)]),
             Op::Add => binary(|x, y| x + y),
             Op::Subtract => binary(|x, y| x - y),
             Op::Multiply => binary(|x, y| x * y),
             Op::Divide => binary(|x, y| x / y),
             Op::Maximum => binary(f32::max),
             Op::Minimum => binary(f32::min),
+            Op::Power => binary(f32::powf),
+            Op::Compare => binary(|x, y| if x > y { 1.0 } else { 0.0 }),
             Op::Exp => unary(f32::exp),
             Op::Log => unary(f32::ln),
             Op::Tanh => unary(f32::tanh),
+            Op::Sigmoid => unary(|x| 1.0 / (1.0 + (-x).exp())),
             Op::Sqrt => unary(f32::sqrt),
             Op::Rsqrt => unary(|x| 1.0 / x.sqrt()),
             Op::Negate => unary(|x| -x),
             Op::Abs => unary(f32::abs),
             Op::Copy => Ok(arg(0)?.clone()),
+            Op::Select => {
+                let (p, t, f) = (arg(0)?, arg(1)?, arg(2)?);
+                if p.len() != t.len() || t.len() != f.len() {
+                    bail!("{}: select operand length mismatch", instr.name);
+                }
+                Ok(p.iter()
+                    .zip(t.iter().zip(f))
+                    .map(|(&c, (&x, &y))| if c != 0.0 { x } else { y })
+                    .collect())
+            }
+            Op::Reshape => {
+                let a = arg(0)?;
+                if instr.elems != 0 && a.len() != instr.elems {
+                    bail!("{}: reshape element mismatch {} -> {}", instr.name, a.len(), instr.elems);
+                }
+                Ok(a.clone())
+            }
             Op::Broadcast => {
                 let a = arg(0)?;
-                if instr.elems != 0 && a.len() == instr.elems {
+                if let Some(bdims) = &instr.bcast_dims {
+                    let in_dims = self.operand_dims(instr, 0).to_vec();
+                    let out_dims = &instr.dims;
+                    let mut out = vec![0f32; instr.elems.max(1)];
+                    for (lin, slot) in out.iter_mut().enumerate() {
+                        let out_idx = delinearize(lin as i64, out_dims);
+                        let in_idx: Vec<i64> = bdims.iter().map(|&d| out_idx[d]).collect();
+                        let src = linearize(&in_idx, &in_dims) as usize;
+                        *slot = *a.get(src).ok_or_else(|| {
+                            anyhow!("{}: broadcast source index out of range", instr.name)
+                        })?;
+                    }
+                    Ok(out)
+                } else if instr.elems != 0 && a.len() == instr.elems {
                     Ok(a.clone())
                 } else if a.len() == 1 {
                     Ok(vec![a[0]; instr.elems.max(1)])
@@ -229,9 +318,73 @@ impl HloProgram {
                     )
                 }
             }
+            Op::Reduce => {
+                let a = arg(0)?;
+                let in_dims = self.operand_dims(instr, 0).to_vec();
+                let kind = instr
+                    .reduce_kind
+                    .ok_or_else(|| anyhow!("{}: reduce without kind", instr.name))?;
+                let dims = &instr.reduce_dims;
+                if dims.is_empty() {
+                    bail!("{}: reduce without dimensions", instr.name);
+                }
+                let kept: Vec<usize> =
+                    (0..in_dims.len()).filter(|d| !dims.contains(d)).collect();
+                let out_dims: Vec<i64> = kept.iter().map(|&d| in_dims[d]).collect();
+                let out_elems: i64 = out_dims.iter().product::<i64>().max(1);
+                let sizes: Vec<i64> = dims.iter().map(|&d| in_dims[d]).collect();
+                let n: i64 = sizes.iter().product::<i64>().max(1);
+                let mut out = vec![0f32; out_elems as usize];
+                let mut in_idx = vec![0i64; in_dims.len()];
+                for (lin, slot) in out.iter_mut().enumerate() {
+                    let out_idx = delinearize(lin as i64, &out_dims);
+                    for (k, &d) in kept.iter().enumerate() {
+                        in_idx[d] = out_idx[k];
+                    }
+                    let mut acc = reduce_init(kind);
+                    for it in 0..n {
+                        let sub = delinearize(it, &sizes);
+                        for (j, &d) in dims.iter().enumerate() {
+                            in_idx[d] = sub[j];
+                        }
+                        let v = a[linearize(&in_idx, &in_dims) as usize];
+                        acc = reduce_combine(kind, acc, v);
+                    }
+                    *slot = reduce_finish(kind, acc, n);
+                }
+                Ok(out)
+            }
+            Op::Dot => {
+                let (a, b) = (arg(0)?, arg(1)?);
+                let a_dims = self.operand_dims(instr, 0).to_vec();
+                let b_dims = self.operand_dims(instr, 1).to_vec();
+                if instr.dims.len() < 2 {
+                    bail!("{}: dot needs rank >= 2", instr.name);
+                }
+                Ok(dot(a, &a_dims, b, &b_dims, &instr.dims))
+            }
+            Op::Convolution => {
+                let (x, w) = (arg(0)?, arg(1)?);
+                let x_dims = self.operand_dims(instr, 0).to_vec();
+                let w_dims = self.operand_dims(instr, 1).to_vec();
+                if x_dims.len() != 4 || w_dims.len() != 4 {
+                    bail!("{}: convolution expects NHWC x HWIO", instr.name);
+                }
+                Ok(conv2d_same(x, &x_dims, w, &w_dims, &instr.dims))
+            }
             Op::Tuple => bail!("tuple {} is not a value", instr.name),
         }
     }
+}
+
+/// Row-major linear offset of `idx` within `dims` (shared convention
+/// with the stitched VM's [`crate::exec::bytecode::linearize`]).
+fn linearize(idx: &[i64], dims: &[i64]) -> i64 {
+    crate::exec::bytecode::linearize(idx, dims)
+}
+
+fn delinearize(lin: i64, dims: &[i64]) -> Vec<i64> {
+    crate::exec::bytecode::delinearize(lin, dims)
 }
 
 /// Opcode keywords recognised in artifact text, longest-match first.
@@ -244,19 +397,27 @@ const OPCODES: &[(&str, fn(&str) -> Result<Op>)] = &[
     ("divide", |_| Ok(Op::Divide)),
     ("maximum", |_| Ok(Op::Maximum)),
     ("minimum", |_| Ok(Op::Minimum)),
+    ("power", |_| Ok(Op::Power)),
     ("exponential", |_| Ok(Op::Exp)),
     ("log", |_| Ok(Op::Log)),
     ("tanh", |_| Ok(Op::Tanh)),
+    ("sigmoid", |_| Ok(Op::Sigmoid)),
     ("sqrt", |_| Ok(Op::Sqrt)),
     ("rsqrt", |_| Ok(Op::Rsqrt)),
     ("negate", |_| Ok(Op::Negate)),
     ("abs", |_| Ok(Op::Abs)),
     ("copy", |_| Ok(Op::Copy)),
+    ("compare", |_| Ok(Op::Compare)),
+    ("select", |_| Ok(Op::Select)),
     ("broadcast", |_| Ok(Op::Broadcast)),
+    ("reshape", |_| Ok(Op::Reshape)),
+    ("reduce", |_| Ok(Op::Reduce)),
+    ("dot", |_| Ok(Op::Dot)),
+    ("convolution", |_| Ok(Op::Convolution)),
     ("tuple", |_| Ok(Op::Tuple)),
 ];
 
-/// Parse one `name = shape opcode(operands)[, metadata]` line.
+/// Parse one `name = shape opcode(operands)[, attributes]` line.
 fn parse_instruction(line: &str, index: &HashMap<String, usize>) -> Result<(bool, Instr)> {
     let (lhs, rhs) = line.split_once('=').ok_or_else(|| anyhow!("no '='"))?;
     let lhs = lhs.trim();
@@ -288,7 +449,8 @@ fn parse_instruction(line: &str, index: &HashMap<String, usize>) -> Result<(bool
     let (pos, kw, build) = found.ok_or_else(|| anyhow!("no supported opcode found"))?;
 
     let shape_text = rhs[..pos].trim();
-    let elems = shape_elements(shape_text);
+    let dims = shape_dims(shape_text);
+    let elems = shape_elems(shape_text, &dims);
 
     let args_start = pos + kw.len() + 1;
     let args_end = rhs[args_start..]
@@ -296,6 +458,7 @@ fn parse_instruction(line: &str, index: &HashMap<String, usize>) -> Result<(bool
         .map(|r| args_start + r)
         .ok_or_else(|| anyhow!("unclosed operand list"))?;
     let args = &rhs[args_start..args_end];
+    let attrs_text = &rhs[args_end + 1..];
 
     let op = build(args)?;
     let operands: Vec<usize> = match op {
@@ -315,24 +478,84 @@ fn parse_instruction(line: &str, index: &HashMap<String, usize>) -> Result<(bool
             .collect::<Result<_>>()?,
     };
 
-    Ok((is_root, Instr { name: name.to_string(), op, elems, operands }))
+    let attr_dims = parse_dimensions(attrs_text);
+    let mut instr = Instr {
+        name: name.to_string(),
+        op: op.clone(),
+        elems,
+        dims,
+        operands,
+        reduce_dims: Vec::new(),
+        reduce_kind: None,
+        bcast_dims: None,
+    };
+    match op {
+        Op::Reduce => {
+            instr.reduce_dims = attr_dims
+                .ok_or_else(|| anyhow!("reduce needs a dimensions={{...}} attribute"))?;
+            instr.reduce_kind = Some(parse_kind(attrs_text)?);
+        }
+        Op::Broadcast => instr.bcast_dims = attr_dims,
+        _ => {}
+    }
+    Ok((is_root, instr))
 }
 
-/// Element count of an `f32[...]`-style shape string; 0 when the shape is
-/// a tuple or malformed (then the operands' sizes govern).
-fn shape_elements(shape: &str) -> usize {
-    let Some(open) = shape.find('[') else { return 0 };
-    if shape.starts_with('(') {
-        return 0; // tuple shape
-    }
-    let Some(close) = shape[open..].find(']').map(|r| open + r) else { return 0 };
-    let body = &shape[open + 1..close];
+/// Extract `dimensions={a,b,...}` from the attribute tail, if present.
+fn parse_dimensions(attrs: &str) -> Option<Vec<usize>> {
+    let start = attrs.find("dimensions={")? + "dimensions={".len();
+    let end = attrs[start..].find('}')? + start;
+    let body = &attrs[start..end];
     if body.trim().is_empty() {
-        return 1; // scalar f32[]
+        return Some(Vec::new());
     }
     body.split(',')
-        .map(|d| d.trim().parse::<usize>().unwrap_or(0))
-        .product()
+        .map(|t| t.trim().parse::<usize>().ok())
+        .collect::<Option<Vec<usize>>>()
+}
+
+/// Extract the reduce combiner from a `kind=Xxx` attribute.
+fn parse_kind(attrs: &str) -> Result<ReduceKind> {
+    let start = attrs.find("kind=").ok_or_else(|| anyhow!("reduce needs kind="))? + 5;
+    let word: String = attrs[start..]
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric())
+        .collect();
+    match word.as_str() {
+        "Sum" | "sum" => Ok(ReduceKind::Sum),
+        "Max" | "max" => Ok(ReduceKind::Max),
+        "Min" | "min" => Ok(ReduceKind::Min),
+        "Mean" | "mean" => Ok(ReduceKind::Mean),
+        "Prod" | "prod" => Ok(ReduceKind::Prod),
+        other => bail!("unknown reduce kind {other}"),
+    }
+}
+
+/// Dims of an `f32[...]`-style shape string; empty when the shape is a
+/// scalar, a tuple, or malformed.
+fn shape_dims(shape: &str) -> Vec<i64> {
+    if shape.starts_with('(') {
+        return Vec::new(); // tuple shape
+    }
+    let Some(open) = shape.find('[') else { return Vec::new() };
+    let Some(close) = shape[open..].find(']').map(|r| open + r) else { return Vec::new() };
+    let body = &shape[open + 1..close];
+    if body.trim().is_empty() {
+        return Vec::new(); // scalar f32[]
+    }
+    body.split(',').map(|d| d.trim().parse::<i64>().unwrap_or(0)).collect()
+}
+
+/// Element count of the shape; 0 when the shape is a tuple or malformed
+/// (then the operands' sizes govern).
+fn shape_elems(shape: &str, dims: &[i64]) -> usize {
+    if shape.starts_with('(') || !shape.contains('[') {
+        return 0;
+    }
+    if dims.is_empty() {
+        return 1; // scalar
+    }
+    dims.iter().product::<i64>().max(0) as usize
 }
 
 #[cfg(test)]
@@ -357,6 +580,8 @@ ENTRY main {
         let out = prog.execute(&[input.clone()]).unwrap();
         assert_eq!(out.len(), 1);
         assert_eq!(out[0], input.iter().map(|x| 2.0 * x).collect::<Vec<f32>>());
+        // op-by-op: the add is one generated launch
+        assert_eq!(prog.launch_profile(), (1, 0));
     }
 
     #[test]
@@ -386,7 +611,7 @@ ENTRY main {
 
     #[test]
     fn unsupported_opcode_rejected() {
-        let text = "HloModule m\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT d = f32[2,2]{1,0} dot(p0, p0)\n}\n";
+        let text = "HloModule m\nENTRY e {\n  p0 = f32[2]{0} parameter(0)\n  ROOT d = f32[2,2]{1,0} batch-dot(p0, p0)\n}\n";
         assert!(HloProgram::parse(text).is_err());
     }
 
@@ -396,5 +621,68 @@ ENTRY main {
         let prog = HloProgram::parse(text).unwrap();
         let out = prog.execute(&[vec![5.0, 5.0], vec![2.0, 3.0]]).unwrap();
         assert_eq!(out[0], vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn power_select_compare() {
+        let text = "HloModule m\nENTRY e {\n  a = f32[3] parameter(0)\n  b = f32[3] parameter(1)\n  p = f32[3] power(a, b)\n  g = pred[3] compare(p, b)\n  ROOT s = f32[3] select(g, p, a)\n}\n";
+        let prog = HloProgram::parse(text).unwrap();
+        let out =
+            prog.execute(&[vec![2.0, 3.0, 0.5], vec![2.0, 1.0, 2.0]]).unwrap();
+        // p = [4, 3, 0.25]; g = p > b = [1, 1, 0]; s = [4, 3, 0.5]
+        assert_eq!(out[0], vec![4.0, 3.0, 0.5]);
+    }
+
+    #[test]
+    fn dimension_mapped_broadcast() {
+        // [3] broadcast into [2, 3] along dim 1
+        let text = "HloModule m\nENTRY e {\n  a = f32[3] parameter(0)\n  ROOT b = f32[2,3] broadcast(a), dimensions={1}\n}\n";
+        let prog = HloProgram::parse(text).unwrap();
+        let out = prog.execute(&[vec![1.0, 2.0, 3.0]]).unwrap();
+        assert_eq!(out[0], vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        // [2] broadcast into [2, 3] along dim 0
+        let text2 = "HloModule m\nENTRY e {\n  a = f32[2] parameter(0)\n  ROOT b = f32[2,3] broadcast(a), dimensions={0}\n}\n";
+        let prog2 = HloProgram::parse(text2).unwrap();
+        let out2 = prog2.execute(&[vec![5.0, 7.0]]).unwrap();
+        assert_eq!(out2[0], vec![5.0, 5.0, 5.0, 7.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn reduce_kinds() {
+        let text = "HloModule m\nENTRY e {\n  a = f32[2,3] parameter(0)\n  ROOT r = f32[2] reduce(a), dimensions={1}, kind=Sum\n}\n";
+        let prog = HloProgram::parse(text).unwrap();
+        let out = prog.execute(&[vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]]).unwrap();
+        assert_eq!(out[0], vec![6.0, 15.0]);
+        let text2 = "HloModule m\nENTRY e {\n  a = f32[2,3] parameter(0)\n  ROOT r = f32[3] reduce(a), dimensions={0}, kind=Max\n}\n";
+        let out2 = HloProgram::parse(text2)
+            .unwrap()
+            .execute(&[vec![1.0, 5.0, 3.0, 4.0, 2.0, 6.0]])
+            .unwrap();
+        assert_eq!(out2[0], vec![4.0, 5.0, 6.0]);
+        let text3 = "HloModule m\nENTRY e {\n  a = f32[4] parameter(0)\n  ROOT r = f32[] reduce(a), dimensions={0}, kind=Mean\n}\n";
+        let out3 =
+            HloProgram::parse(text3).unwrap().execute(&[vec![1.0, 2.0, 3.0, 6.0]]).unwrap();
+        assert_eq!(out3[0], vec![3.0]);
+    }
+
+    #[test]
+    fn dot_and_reshape() {
+        let text = "HloModule m\nENTRY e {\n  a = f32[2,3] parameter(0)\n  b = f32[3,2] parameter(1)\n  d = f32[2,2] dot(a, b)\n  ROOT r = f32[4] reshape(d)\n}\n";
+        let prog = HloProgram::parse(text).unwrap();
+        let out = prog
+            .execute(&[
+                vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+                vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0],
+            ])
+            .unwrap();
+        // row0 = [1+3, 2+3] = [4, 5]; row1 = [4+6, 5+6] = [10, 11]
+        assert_eq!(out[0], vec![4.0, 5.0, 10.0, 11.0]);
+        assert_eq!(prog.launch_profile(), (1, 1));
+    }
+
+    #[test]
+    fn reduce_without_dimensions_fails_loudly() {
+        let text = "HloModule m\nENTRY e {\n  a = f32[2,3] parameter(0)\n  ROOT r = f32[2] reduce(a)\n}\n";
+        assert!(HloProgram::parse(text).is_err());
     }
 }

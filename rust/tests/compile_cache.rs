@@ -172,6 +172,7 @@ fn serving_loop_reports_cache_hits_for_repeated_nmt_requests() {
             module: nmt,
             mode: FusionMode::FusionStitching,
             pipeline,
+            use_stitched_backend: false,
         }),
     };
     let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
@@ -210,6 +211,7 @@ fn shared_service_amortizes_across_serving_loops() {
             module: lr,
             mode: FusionMode::FusionStitching,
             pipeline: PipelineConfig::default(),
+            use_stitched_backend: false,
         }),
     };
 

@@ -1,5 +1,9 @@
-//! Runtime integration against the real AOT artifacts (skipped cleanly
-//! when `make artifacts` has not run — CI runs it first via `make test`).
+//! Runtime integration against the real AOT artifacts, executed by the
+//! HLO-text interpreter behind `runtime::Engine` (skipped cleanly when
+//! `make artifacts` has not run — lowering the artifacts needs jax,
+//! which CI does not carry). `compile: None` below means the serving
+//! loop runs without the compile-once cache; the compile-path variants
+//! live in `tests/compile_cache.rs`.
 
 use fusion_stitching::coordinator::batcher::BatchPolicy;
 use fusion_stitching::coordinator::{ServerConfig, ServingCoordinator};
