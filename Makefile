@@ -1,6 +1,6 @@
 # Convenience targets; everything also works via plain cargo / python.
 
-.PHONY: build test bench bench-launches artifacts doc
+.PHONY: build test bench bench-launches bench-serving artifacts doc
 
 build:
 	cargo build --release
@@ -15,6 +15,11 @@ bench:
 # stitched VM and writes BENCH_launch_reduction.json at the repo root.
 bench-launches:
 	BENCH_SMOKE=1 cargo bench --bench launch_reduction
+
+# Multi-worker serving throughput bench (smoke mode): sharded pool at
+# 1/2/4 workers, writes BENCH_serving_throughput.json at the repo root.
+bench-serving:
+	BENCH_SMOKE=1 cargo bench --bench serving_throughput
 
 doc:
 	cargo doc --no-deps

@@ -17,7 +17,7 @@
 
 use fusion_stitching::coordinator::batcher::BatchPolicy;
 use fusion_stitching::coordinator::metrics::LatencyRecorder;
-use fusion_stitching::coordinator::{ServerConfig, ServingCoordinator};
+use fusion_stitching::coordinator::{PoolConfig, ServerConfig, ServingCoordinator, ServingPool};
 use std::path::Path;
 use std::time::{Duration, Instant};
 
@@ -36,16 +36,7 @@ fn request(i: usize) -> Vec<f32> {
 }
 
 fn serve(artifact: &str) -> anyhow::Result<(Vec<Vec<f32>>, LatencyRecorder, f64)> {
-    let cfg = ServerConfig {
-        artifact: artifact.to_string(),
-        batch: BATCH,
-        in_elems_per_request: SEQ * MODEL,
-        out_elems_per_request: SEQ * DIM,
-        input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
-        policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
-        compile: None,
-    };
-    let srv = ServingCoordinator::start(Path::new("artifacts"), cfg)?;
+    let srv = ServingCoordinator::start(Path::new("artifacts"), config(artifact))?;
     let _ = srv.infer(request(0))?; // warmup: first execute touches cold buffers
 
     let mut lat = LatencyRecorder::default();
@@ -68,6 +59,52 @@ fn serve(artifact: &str) -> anyhow::Result<(Vec<Vec<f32>>, LatencyRecorder, f64)
     let rps = lat.throughput_rps(t0.elapsed());
     srv.shutdown().ok();
     Ok((outputs, lat, rps))
+}
+
+fn config(artifact: &str) -> ServerConfig {
+    ServerConfig {
+        artifact: artifact.to_string(),
+        batch: BATCH,
+        in_elems_per_request: SEQ * MODEL,
+        out_elems_per_request: SEQ * DIM,
+        input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
+        policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
+        compile: None,
+    }
+}
+
+/// Serve the same request stream through the sharded multi-worker pool:
+/// four client-side shape keys spread the traffic over the shards
+/// (sticky routing keeps each shard's batches shape-pure).
+fn serve_pooled(artifact: &str, workers: usize) -> anyhow::Result<(LatencyRecorder, f64)> {
+    let pool = ServingPool::start(
+        Path::new("artifacts"),
+        config(artifact),
+        PoolConfig { workers, ..PoolConfig::default() },
+    )?;
+    for key in 0..4u64 {
+        pool.infer_keyed(key, request(0))?; // warmup per shard
+    }
+    let mut lat = LatencyRecorder::default();
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..REQUESTS {
+        let key = (i % 4) as u64;
+        pending.push((Instant::now(), pool.infer_keyed_async(key, request(i))?));
+        if pending.len() == BATCH {
+            for (t, rx) in pending.drain(..) {
+                rx.recv()??;
+                lat.record(t.elapsed());
+            }
+        }
+    }
+    for (t, rx) in pending.drain(..) {
+        rx.recv()??;
+        lat.record(t.elapsed());
+    }
+    let rps = lat.throughput_rps(t0.elapsed());
+    pool.shutdown().ok();
+    Ok((lat, rps))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -99,5 +136,19 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("({REQUESTS} requests, batch {BATCH}, seq {SEQ}, model {MODEL})");
+
+    // The same fused artifact behind the sharded multi-worker pool:
+    // sticky shape-key routing + per-shard bounded queues.
+    println!("\n== Sharded serving pool (fused artifact, 4-key traffic) ==");
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2);
+    for n in [1, workers] {
+        let (lat, rps) = serve_pooled("attention_fused", n)?;
+        println!(
+            "{n} worker(s): p50 {:.2} ms | p95 {:.2} ms | {:.0} req/s",
+            lat.percentile_us(50.0) / 1e3,
+            lat.percentile_us(95.0) / 1e3,
+            rps,
+        );
+    }
     Ok(())
 }

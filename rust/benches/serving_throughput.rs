@@ -1,0 +1,287 @@
+//! Serving-throughput bench — the multi-worker sharded pool vs the
+//! single-stream serving loop, on an NMT-style latency-critical
+//! workload (§6.1: small batches, heavy traffic).
+//!
+//! Four client threads stream requests under four distinct shape keys
+//! (multi-tenant traffic) into a [`ServingPool`] at 1, 2 and 4 workers.
+//! Sticky shape-key sharding keeps each worker's batches shape-pure, so
+//! scaling comes from two places the single-worker loop cannot reach:
+//! real parallelism across cores, and un-fragmented batches (one worker
+//! fed interleaved shapes closes a batch at every key flip). Compile-once
+//! serving stays on: every batch routes through the shared
+//! [`SharedCompileService`], whose cache hits are concurrent and whose
+//! one cold compile is single-flight.
+//!
+//! Results (aggregate requests/sec and p50/p95/p99 end-to-end latency
+//! per worker count) are persisted to `BENCH_serving_throughput.json`
+//! at the repo root. Smoke mode (`BENCH_SMOKE=1`, used by
+//! `make bench-serving` and CI) shrinks the request volume.
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::metrics::LatencyRecorder;
+use fusion_stitching::coordinator::server::CompileOptions;
+use fusion_stitching::coordinator::{
+    FusionMode, PipelineConfig, PoolConfig, ServerConfig, ServingPool,
+};
+use fusion_stitching::models;
+use fusion_stitching::testutil::TempDir;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+const BATCH: usize = 4;
+const IN_ELEMS: usize = 256;
+const DEPTH: usize = 48;
+const CLIENTS: usize = 4;
+/// Requests submitted per client (per worker-count measurement).
+const REQUESTS_FULL: usize = 2000;
+const REQUESTS_SMOKE: usize = 300;
+/// In-flight requests a client keeps open before collecting responses.
+const WINDOW: usize = 16;
+
+/// Write a deep elementwise-chain artifact: `DEPTH` ops over
+/// `f32[BATCH, IN_ELEMS]`, cycling exp → tanh → add (numerically stable
+/// under repetition). Executed op-by-op by the interpreter, each batch
+/// costs real CPU work — the stand-in for the NMT attention block that
+/// `make artifacts` would bake (this bench cannot assume jax).
+fn write_chain_artifact(dir: &std::path::Path) -> std::io::Result<()> {
+    let shape = format!("f32[{BATCH},{IN_ELEMS}]{{1,0}}");
+    let mut body = String::new();
+    body.push_str(&format!("  p0 = {shape} parameter(0)\n"));
+    let mut prev = "p0".to_string();
+    for i in 0..DEPTH {
+        let name = format!("t{i}");
+        let line = match i % 3 {
+            0 => format!("  {name} = {shape} exponential({prev})\n"),
+            1 => format!("  {name} = {shape} tanh({prev})\n"),
+            _ => format!("  {name} = {shape} add({prev}, {prev})\n"),
+        };
+        body.push_str(&line);
+        prev = name;
+    }
+    body.push_str(&format!("  ROOT t = ({shape}) tuple({prev})\n"));
+    let text = format!(
+        "HloModule chain{DEPTH}, entry_computation_layout={{({shape})->({shape})}}\n\n\
+         ENTRY main {{\n{body}}}\n"
+    );
+    std::fs::write(dir.join("chain.hlo.txt"), text)
+}
+
+fn server_config() -> ServerConfig {
+    // Compile-once serving over the NMT benchmark module, as the CLI's
+    // serve command does; the pool's shared service answers every batch
+    // after the single cold compile.
+    let compile = models::by_name("NMT").map(|(meta, module)| {
+        let mut pipeline = PipelineConfig::default();
+        pipeline.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        CompileOptions {
+            module,
+            mode: FusionMode::FusionStitching,
+            pipeline,
+            use_stitched_backend: false,
+        }
+    });
+    ServerConfig {
+        artifact: "chain".into(),
+        batch: BATCH,
+        in_elems_per_request: IN_ELEMS,
+        out_elems_per_request: IN_ELEMS,
+        input_dims: vec![BATCH as i64, IN_ELEMS as i64],
+        policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(1) },
+        compile,
+    }
+}
+
+struct Measurement {
+    workers: usize,
+    rps: f64,
+    p50_us: f64,
+    p95_us: f64,
+    p99_us: f64,
+    batches: usize,
+    requests: usize,
+    cache_hits: u64,
+    cache_misses: u64,
+    cold_compiles: u64,
+}
+
+/// Keys whose sticky routes cover as many shards as possible, one per
+/// client — so at 4 workers each client stream owns a shard, and at 1
+/// worker all four streams interleave into the same queue.
+fn client_keys(pool: &ServingPool, n: usize) -> Vec<u64> {
+    let mut keys = Vec::new();
+    let mut shards_seen = std::collections::HashSet::new();
+    for key in 0..4096u64 {
+        if shards_seen.insert(pool.route(key)) {
+            keys.push(key);
+            if keys.len() == n {
+                return keys;
+            }
+        }
+    }
+    // fewer shards than clients: reuse keys round-robin
+    while keys.len() < n {
+        keys.push(keys[keys.len() % shards_seen.len().max(1)]);
+    }
+    keys
+}
+
+fn run_one(dir: &std::path::Path, workers: usize, requests: usize) -> Measurement {
+    let pool = ServingPool::start(
+        dir,
+        server_config(),
+        PoolConfig { workers, queue_depth: 64 },
+    )
+    .expect("pool start");
+    let keys = client_keys(&pool, CLIENTS);
+
+    // Warmup: one round-trip per key pays the cold compile (single
+    // flight) and touches every shard's buffers outside the window.
+    for &key in &keys {
+        pool.infer_keyed(key, vec![0.1; IN_ELEMS]).expect("warmup");
+    }
+    // Baseline snapshot so warmup traffic is excluded from the
+    // reported aggregates (keeps the JSON internally consistent with
+    // clients x requests_per_client).
+    let warm = pool.stats();
+
+    let t0 = Instant::now();
+    let lat = std::thread::scope(|scope| {
+        let handles: Vec<_> = keys
+            .iter()
+            .map(|&key| {
+                let pool = &pool;
+                scope.spawn(move || {
+                    let mut lat = LatencyRecorder::default();
+                    let mut pending = Vec::with_capacity(WINDOW);
+                    for i in 0..requests {
+                        let input = vec![0.01 * (i % 17) as f32; IN_ELEMS];
+                        let submitted = Instant::now();
+                        let rx = pool.infer_keyed_async(key, input).expect("submit");
+                        pending.push((submitted, rx));
+                        if pending.len() == WINDOW {
+                            for (t, rx) in pending.drain(..) {
+                                rx.recv().expect("response").expect("execution");
+                                lat.record(t.elapsed());
+                            }
+                        }
+                    }
+                    for (t, rx) in pending.drain(..) {
+                        rx.recv().expect("response").expect("execution");
+                        lat.record(t.elapsed());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        let mut merged = LatencyRecorder::default();
+        for h in handles {
+            merged.merge(&h.join().expect("client thread"));
+        }
+        merged
+    });
+    let wall = t0.elapsed();
+    let stats = pool.shutdown().expect("shutdown");
+    Measurement {
+        workers,
+        rps: lat.throughput_rps(wall),
+        p50_us: lat.percentile_us(50.0),
+        p95_us: lat.percentile_us(95.0),
+        p99_us: lat.percentile_us(99.0),
+        batches: stats.aggregate.batches - warm.aggregate.batches,
+        requests: stats.aggregate.requests - warm.aggregate.requests,
+        cache_hits: stats.cache.map(|c| c.hits).unwrap_or(0)
+            - warm.cache.map(|c| c.hits).unwrap_or(0),
+        cache_misses: stats.cache.map(|c| c.misses).unwrap_or(0)
+            - warm.cache.map(|c| c.misses).unwrap_or(0),
+        cold_compiles: stats.cold_compiles.unwrap_or(0),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let requests = if smoke { REQUESTS_SMOKE } else { REQUESTS_FULL };
+    let dir = TempDir::new("serving-throughput");
+    write_chain_artifact(dir.path()).expect("writing chain artifact");
+
+    println!(
+        "== Serving throughput: sharded pool, {CLIENTS} client streams x {requests} requests \
+         (chain depth {DEPTH}, batch {BATCH}) =="
+    );
+    println!(
+        "{:<8} {:>12} {:>10} {:>10} {:>10} {:>9} {:>10}",
+        "workers", "req/s", "p50_us", "p95_us", "p99_us", "batches", "cold"
+    );
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4] {
+        let m = run_one(dir.path(), workers, requests);
+        println!(
+            "{:<8} {:>12.0} {:>10.1} {:>10.1} {:>10.1} {:>9} {:>10}",
+            m.workers, m.rps, m.p50_us, m.p95_us, m.p99_us, m.batches, m.cold_compiles
+        );
+        rows.push(m);
+    }
+    let speedup = rows[2].rps / rows[0].rps.max(1e-9);
+    let single_flight = rows.iter().all(|m| m.cold_compiles <= 1);
+    println!("aggregate speedup 4 workers vs 1: {speedup:.2}x");
+    println!(
+        "single-flight cold compiles held: {} (per-run cold counts: {:?})",
+        single_flight,
+        rows.iter().map(|m| m.cold_compiles).collect::<Vec<_>>()
+    );
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"workload\": {{\"artifact\": \"chain{DEPTH}\", \"batch\": {BATCH}, \
+         \"in_elems_per_request\": {IN_ELEMS}, \"clients\": {CLIENTS}, \
+         \"requests_per_client\": {requests}, \"compile_once\": true, \
+         \"smoke\": {smoke}}},\n"
+    ));
+    json.push_str("  \"results\": [\n");
+    for (k, m) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"workers\": {}, \"rps\": {:.1}, \"p50_us\": {:.1}, \"p95_us\": {:.1}, \
+             \"p99_us\": {:.1}, \"batches\": {}, \"requests\": {}, \"cache_hits\": {}, \
+             \"cache_misses\": {}, \"cold_compiles\": {}}}{}\n",
+            m.workers,
+            m.rps,
+            m.p50_us,
+            m.p95_us,
+            m.p99_us,
+            m.batches,
+            m.requests,
+            m.cache_hits,
+            m.cache_misses,
+            m.cold_compiles,
+            if k + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"speedup_4v1\": {speedup:.3},\n"));
+    json.push_str(&format!("  \"single_flight_cold_compiles\": {single_flight}\n"));
+    json.push_str("}\n");
+
+    let out_path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => PathBuf::from(dir).join("..").join("BENCH_serving_throughput.json"),
+        Err(_) => PathBuf::from("BENCH_serving_throughput.json"),
+    };
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out_path.display()),
+    }
+
+    // Acceptance gate (full runs only): 4 workers must deliver >= 2x
+    // the single worker's aggregate throughput. Smoke runs report
+    // without gating — CI runners may have fewer than 4 cores, where
+    // the parallelism half of the win physically cannot materialize.
+    if speedup < 2.0 {
+        if smoke {
+            eprintln!(
+                "NOTE: speedup {speedup:.2}x below the 2x target (smoke mode, not gated); \
+                 see the JSON for the measured curve"
+            );
+        } else {
+            eprintln!("FAIL: aggregate speedup {speedup:.2}x at 4 workers, need >= 2x");
+            std::process::exit(1);
+        }
+    }
+}

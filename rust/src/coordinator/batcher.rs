@@ -178,6 +178,63 @@ mod tests {
         assert!(next_batch_keyed(&rx, &policy, &mut carry).is_none());
     }
 
+    /// A carried request whose `max_wait` budget was already consumed
+    /// while it sat behind the previous batch must still ship — as a
+    /// singleton batch, immediately — never be dropped or stall.
+    #[test]
+    fn carried_request_with_spent_budget_ships_as_singleton() {
+        let (tx, rx) = mpsc::channel();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let (r, _keep) = keyed_req(1.0, 42);
+        // Let the request sit past its whole window, as if it had been
+        // carried behind a long previous batch.
+        std::thread::sleep(Duration::from_millis(10));
+        let mut carry = Some(r);
+        let start = Instant::now();
+        let batch = next_batch_keyed(&rx, &policy, &mut carry).unwrap();
+        assert_eq!(batch.len(), 1, "spent-budget carry ships alone");
+        assert_eq!(batch[0].shape_key, 42);
+        assert!(carry.is_none());
+        // no fresh max_wait window was granted
+        assert!(start.elapsed() < Duration::from_millis(5), "{:?}", start.elapsed());
+        drop(tx);
+    }
+
+    /// Carrying across shape keys preserves arrival order within each
+    /// key and loses nothing, even when keys alternate every request
+    /// (the worst case for the carry slot).
+    #[test]
+    fn alternating_keys_preserve_order_and_drop_nothing() {
+        let (tx, rx) = mpsc::channel();
+        let mut receivers = Vec::new();
+        // keys alternate A/B/A/B… with increasing payloads per key
+        for i in 0..8 {
+            let (r, rr) = keyed_req(i as f32, 100 + (i % 2) as u64);
+            receivers.push(rr);
+            tx.send(r).unwrap();
+        }
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let mut carry = None;
+        let mut seen: Vec<(u64, Vec<f32>)> = Vec::new();
+        while let Some(batch) = next_batch_keyed(&rx, &policy, &mut carry) {
+            let key = batch[0].shape_key;
+            assert!(batch.iter().all(|r| r.shape_key == key), "batches stay shape-pure");
+            seen.push((key, batch.iter().map(|r| r.input[0]).collect()));
+        }
+        assert!(carry.is_none(), "nothing may remain in the carry slot");
+        let total: usize = seen.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(total, 8, "no request may be dropped: {seen:?}");
+        // within each key, payloads must come out in arrival order
+        for key in [100u64, 101] {
+            let ordered: Vec<f32> =
+                seen.iter().filter(|(k, _)| *k == key).flat_map(|(_, v)| v.clone()).collect();
+            let mut sorted = ordered.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            assert_eq!(ordered, sorted, "key {key} reordered: {ordered:?}");
+        }
+    }
+
     #[test]
     fn carry_survives_channel_close() {
         let (tx, rx) = mpsc::channel();

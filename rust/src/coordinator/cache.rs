@@ -33,7 +33,8 @@
 use crate::hlo::{fingerprint_module, Fingerprint, Module};
 use crate::schedule::PerfLibrary;
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
 
 use super::driver::compile_module_traced;
 use super::metrics::PassTrace;
@@ -88,21 +89,62 @@ impl CacheStats {
     }
 }
 
+/// Hit/miss/eviction counters behind atomics, so the read-mostly hit
+/// path ([`CompileCache::get`] takes `&self`) can count under a shared
+/// `RwLock` read guard.
+#[derive(Debug, Default)]
+struct AtomicCacheStats {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    insertions: AtomicU64,
+}
+
+impl AtomicCacheStats {
+    fn snapshot(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            insertions: self.insertions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One resident artifact plus its LRU recency stamp. The stamp is an
+/// atomic so a *hit* — the serving hot path — needs no exclusive access
+/// to the cache.
+#[derive(Debug)]
+struct Entry {
+    value: Arc<CompiledModule>,
+    last_used: AtomicU64,
+}
+
 /// A bounded LRU cache of compiled modules. Values are `Arc`s so the
 /// serving loop can hold an artifact while the cache evicts it.
+///
+/// Lookups take `&self` (recency/stats are atomics): behind an
+/// `RwLock`, any number of serving workers hit concurrently while
+/// insertions alone need the write guard — see
+/// [`SharedCompileService`].
 #[derive(Debug)]
 pub struct CompileCache {
-    map: HashMap<CacheKey, (Arc<CompiledModule>, u64)>,
+    map: HashMap<CacheKey, Entry>,
     capacity: usize,
-    tick: u64,
-    stats: CacheStats,
+    tick: AtomicU64,
+    stats: AtomicCacheStats,
 }
 
 impl CompileCache {
     /// `capacity` is the maximum number of resident artifacts (≥ 1).
     pub fn new(capacity: usize) -> Self {
         assert!(capacity >= 1, "cache capacity must be at least 1");
-        CompileCache { map: HashMap::new(), capacity, tick: 0, stats: CacheStats::default() }
+        CompileCache {
+            map: HashMap::new(),
+            capacity,
+            tick: AtomicU64::new(0),
+            stats: AtomicCacheStats::default(),
+        }
     }
 
     pub fn capacity(&self) -> usize {
@@ -118,46 +160,61 @@ impl CompileCache {
     }
 
     pub fn stats(&self) -> CacheStats {
-        self.stats
+        self.stats.snapshot()
     }
 
     /// Look up an artifact, refreshing its recency on hit.
-    pub fn get(&mut self, key: &CacheKey) -> Option<Arc<CompiledModule>> {
-        self.tick += 1;
-        match self.map.get_mut(key) {
-            Some((value, last_used)) => {
-                *last_used = self.tick;
-                self.stats.hits += 1;
-                Some(value.clone())
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<CompiledModule>> {
+        match self.probe(key) {
+            Some(value) => {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                Some(value)
             }
             None => {
-                self.stats.misses += 1;
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
         }
     }
 
+    /// Like [`CompileCache::get`], but without touching the hit/miss
+    /// counters — for double-checks inside the single-flight protocol,
+    /// which would otherwise count one request several times.
+    pub fn probe(&self, key: &CacheKey) -> Option<Arc<CompiledModule>> {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        self.map.get(key).map(|entry| {
+            entry.last_used.store(tick, Ordering::Relaxed);
+            entry.value.clone()
+        })
+    }
+
     /// Insert an artifact, evicting the least-recently-used entry when
     /// the cache is full.
     pub fn insert(&mut self, key: CacheKey, value: Arc<CompiledModule>) {
-        self.tick += 1;
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
         if !self.map.contains_key(&key) && self.map.len() >= self.capacity {
             if let Some(victim) = self
                 .map
                 .iter()
-                .min_by_key(|(_, (_, last_used))| *last_used)
+                .min_by_key(|(_, entry)| entry.last_used.load(Ordering::Relaxed))
                 .map(|(k, _)| k.clone())
             {
                 self.map.remove(&victim);
-                self.stats.evictions += 1;
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
-        self.stats.insertions += 1;
-        self.map.insert(key, (value, self.tick));
+        self.stats.insertions.fetch_add(1, Ordering::Relaxed);
+        self.map.insert(key, Entry { value, last_used: AtomicU64::new(tick) });
     }
 
+    /// Drop every resident artifact. Each dropped entry counts as an
+    /// eviction, and the hit/miss/insertion counters *survive* — a
+    /// clear resets residency, not history, so hit-rate dashboards stay
+    /// truthful across cache flushes.
     pub fn clear(&mut self) {
+        let dropped = self.map.len() as u64;
         self.map.clear();
+        self.stats.evictions.fetch_add(dropped, Ordering::Relaxed);
     }
 }
 
@@ -238,6 +295,207 @@ impl CompileService {
     }
 }
 
+/// Mutable compiler state: only *cold* compiles touch it, so it sits
+/// behind its own mutex that the hit path never takes.
+#[derive(Debug)]
+struct CompilerState {
+    lib: PerfLibrary,
+    last_trace: Option<PassTrace>,
+}
+
+/// One in-flight cold compile: waiters block on the condvar until the
+/// leader flips the flag.
+type InflightSlot = Arc<(Mutex<bool>, Condvar)>;
+
+/// Panic-safe cleanup for the single-flight leader: whatever way the
+/// leader exits — success, compile error, or a panic inside the
+/// pipeline — the in-flight entry is removed and every waiter is
+/// released (on failure one of them retries as the new leader). Without
+/// this, a panicking compile would leave waiters blocked on the condvar
+/// forever and their shards permanently stuck.
+struct FlightGuard<'a> {
+    svc: &'a SharedCompileService,
+    key: CacheKey,
+    slot: InflightSlot,
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        let mut inflight =
+            self.svc.inflight.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        inflight.remove(&self.key);
+        drop(inflight);
+        let (done, cv) = &*self.slot;
+        *done.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = true;
+        cv.notify_all();
+    }
+}
+
+/// The concurrent compile front end for the multi-worker serving pool
+/// ([`crate::coordinator::pool::ServingPool`]).
+///
+/// [`CompileService`] serializes *every* request — including cache
+/// hits — behind whatever mutex the caller wraps it in, which caps
+/// serving throughput at one core. This service splits the paths:
+///
+/// - **Hits** take only the `RwLock` *read* guard (recency and
+///   counters are atomics inside [`CompileCache`]), so any number of
+///   workers fetch the same hot artifact concurrently and share it by
+///   `Arc` clone.
+/// - **Cold compiles** are *single-flight per key*: the first worker to
+///   miss becomes the leader and runs the pipeline; every other worker
+///   that misses the same key blocks on the leader's slot and then
+///   reads the freshly inserted artifact — two workers can never
+///   redundantly cold-compile one fingerprint.
+/// - The pipeline itself (which mutates the [`PerfLibrary`]) runs under
+///   a separate compiler mutex that the hit path never touches.
+#[derive(Debug)]
+pub struct SharedCompileService {
+    cache: RwLock<CompileCache>,
+    inflight: Mutex<HashMap<CacheKey, InflightSlot>>,
+    compiler: Mutex<CompilerState>,
+    cfg: PipelineConfig,
+    /// Cold pipeline runs actually executed (≤ misses under
+    /// contention — the single-flight test gates on this).
+    cold_compiles: AtomicU64,
+}
+
+impl SharedCompileService {
+    pub fn new(cfg: PipelineConfig) -> Self {
+        Self::with_capacity(cfg, DEFAULT_CACHE_CAPACITY)
+    }
+
+    pub fn with_capacity(cfg: PipelineConfig, capacity: usize) -> Self {
+        let lib = PerfLibrary::new(cfg.deep.device.clone());
+        SharedCompileService {
+            cache: RwLock::new(CompileCache::new(capacity)),
+            inflight: Mutex::new(HashMap::new()),
+            compiler: Mutex::new(CompilerState { lib, last_trace: None }),
+            cfg,
+            cold_compiles: AtomicU64::new(0),
+        }
+    }
+
+    /// Compile (or fetch) `module` under `mode`. Returns the artifact
+    /// and whether it was served from the cache. Safe to call from any
+    /// number of threads; see the type docs for the locking discipline.
+    pub fn compile(
+        &self,
+        module: &Module,
+        mode: FusionMode,
+    ) -> crate::Result<(Arc<CompiledModule>, bool)> {
+        let key = CacheKey::new(module, mode, &self.cfg);
+        // Hot path: a shared read guard and an Arc clone, nothing else.
+        if let Some(hit) = self.cache.read().expect("cache poisoned").get(&key) {
+            return Ok((hit, true));
+        }
+        loop {
+            enum Role {
+                Leader(InflightSlot),
+                Waiter(InflightSlot),
+            }
+            let role = {
+                let mut inflight = self.inflight.lock().expect("inflight poisoned");
+                // Double-check under the inflight lock: a leader may
+                // have inserted the artifact since our miss.
+                if let Some(hit) = self.cache.read().expect("cache poisoned").probe(&key) {
+                    return Ok((hit, true));
+                }
+                match inflight.get(&key) {
+                    Some(slot) => Role::Waiter(slot.clone()),
+                    None => {
+                        let slot: InflightSlot = Arc::new((Mutex::new(false), Condvar::new()));
+                        inflight.insert(key.clone(), slot.clone());
+                        Role::Leader(slot)
+                    }
+                }
+            };
+            match role {
+                Role::Leader(slot) => {
+                    // The guard's Drop removes the in-flight entry and
+                    // wakes every waiter *whatever happens* — success,
+                    // compile error, or a panic inside the pipeline.
+                    // It runs after the cache insert below, so waiters
+                    // re-probing find the artifact (or retry as the new
+                    // leader on failure).
+                    let _guard = FlightGuard { svc: self, key: key.clone(), slot };
+                    let result = {
+                        // Recover from poisoning: a previous leader's
+                        // panic must not take every future compile
+                        // down with it (the perf library only carries
+                        // advisory tuning data).
+                        let mut state = self
+                            .compiler
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
+                        self.cold_compiles.fetch_add(1, Ordering::Relaxed);
+                        compile_module_traced(module, mode, &mut state.lib, &self.cfg).map(
+                            |(compiled, trace)| {
+                                state.last_trace = Some(trace);
+                                Arc::new(compiled)
+                            },
+                        )
+                    };
+                    if let Ok(artifact) = &result {
+                        self.cache
+                            .write()
+                            .expect("cache poisoned")
+                            .insert(key.clone(), artifact.clone());
+                    }
+                    return result.map(|artifact| (artifact, false));
+                }
+                Role::Waiter(slot) => {
+                    let (done, cv) = &*slot;
+                    let mut finished =
+                        done.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                    while !*finished {
+                        finished = cv
+                            .wait(finished)
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    }
+                    // Loop: the artifact is now resident (or the leader
+                    // failed and this thread takes over the compile).
+                }
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.cache.read().expect("cache poisoned").stats()
+    }
+
+    /// Number of cold pipeline runs actually executed — under
+    /// single-flight this stays at one per distinct key no matter how
+    /// many workers race on it.
+    pub fn cold_compiles(&self) -> u64 {
+        self.cold_compiles.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.read().expect("cache poisoned").len()
+    }
+
+    /// Drop every resident artifact (see [`CompileCache::clear`] for
+    /// the stats semantics).
+    pub fn clear(&self) {
+        self.cache.write().expect("cache poisoned").clear();
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Pass trace of the most recent cold compile (cloned out of the
+    /// compiler mutex; tolerant of a previous leader's panic).
+    pub fn last_trace(&self) -> Option<PassTrace> {
+        self.compiler
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .last_trace
+            .clone()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -306,6 +564,91 @@ mod tests {
         let (_, h2) = svc.compile(&m2, FusionMode::FusionStitching).unwrap();
         assert!(h1, "m1 must have survived");
         assert!(!h2, "m2 must have been evicted");
+    }
+
+    #[test]
+    fn clear_counts_evictions_and_keeps_stats() {
+        let mut svc = CompileService::new(PipelineConfig::default());
+        let (m1, m2) = (tiny_module(4), tiny_module(8));
+        svc.compile(&m1, FusionMode::FusionStitching).unwrap();
+        svc.compile(&m2, FusionMode::FusionStitching).unwrap();
+        svc.compile(&m1, FusionMode::FusionStitching).unwrap(); // hit
+        let before = svc.stats();
+        assert_eq!((before.hits, before.misses, before.insertions), (1, 2, 2));
+
+        svc.cache_mut().clear();
+        assert!(svc.cache().is_empty());
+        let after = svc.stats();
+        // dropped residents count as evictions; history survives
+        assert_eq!(after.evictions, before.evictions + 2);
+        assert_eq!((after.hits, after.misses, after.insertions), (1, 2, 2));
+
+        // post-clear lookups keep counting against the same history
+        let (_, hit) = svc.compile(&m1, FusionMode::FusionStitching).unwrap();
+        assert!(!hit, "cleared entries must recompile");
+        assert_eq!(svc.stats().misses, 3);
+        assert!(svc.stats().hit_rate() > 0.0, "hit-rate must not reset to zero");
+    }
+
+    #[test]
+    fn shared_service_hits_without_exclusive_access() {
+        let svc = SharedCompileService::new(PipelineConfig::default());
+        let m = tiny_module(8);
+        let (cold, hit_a) = svc.compile(&m, FusionMode::FusionStitching).unwrap();
+        let (warm, hit_b) = svc.compile(&m, FusionMode::FusionStitching).unwrap();
+        assert!(!hit_a && hit_b);
+        assert!(Arc::ptr_eq(&cold, &warm));
+        assert_eq!(svc.cold_compiles(), 1);
+        assert_eq!(svc.stats().hits, 1);
+        assert!(svc.last_trace().is_some());
+    }
+
+    #[test]
+    fn shared_service_single_flight_under_contention() {
+        // N threads race on one fingerprint through a barrier: exactly
+        // one cold compile may run; everyone shares the same Arc.
+        let svc = Arc::new(SharedCompileService::new(PipelineConfig::default()));
+        let n = 8;
+        let barrier = Arc::new(std::sync::Barrier::new(n));
+        let results: Vec<_> = (0..n)
+            .map(|_| {
+                let svc = svc.clone();
+                let barrier = barrier.clone();
+                std::thread::spawn(move || {
+                    let m = tiny_module(16);
+                    barrier.wait();
+                    svc.compile(&m, FusionMode::FusionStitching).unwrap()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect();
+        assert_eq!(svc.cold_compiles(), 1, "single-flight: one pipeline run total");
+        let cold_count = results.iter().filter(|(_, hit)| !hit).count();
+        assert_eq!(cold_count, 1, "exactly one caller observes the miss");
+        for (artifact, _) in &results[1..] {
+            assert!(Arc::ptr_eq(artifact, &results[0].0), "all callers share the artifact");
+        }
+    }
+
+    #[test]
+    fn shared_service_distinct_keys_compile_independently() {
+        let svc = Arc::new(SharedCompileService::new(PipelineConfig::default()));
+        let handles: Vec<_> = [4i64, 8, 16, 32]
+            .into_iter()
+            .map(|dim| {
+                let svc = svc.clone();
+                std::thread::spawn(move || {
+                    svc.compile(&tiny_module(dim), FusionMode::FusionStitching).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(svc.cold_compiles(), 4);
+        assert_eq!(svc.cache_len(), 4);
     }
 
     #[test]

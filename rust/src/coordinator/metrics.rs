@@ -69,6 +69,192 @@ impl fmt::Display for PassTrace {
     }
 }
 
+/// Reservoir capacity of a [`StreamingSummary`] — enough samples for
+/// stable p99 estimates while bounding a long-lived server's memory.
+pub const SUMMARY_RESERVOIR: usize = 512;
+
+/// Nearest-rank percentile (`p` in [0, 100]) over an unsorted sample
+/// set — the one implementation behind both [`LatencyRecorder`] and
+/// [`StreamingSummary`].
+fn percentile_nearest_rank(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
+    v[rank.min(v.len()) - 1]
+}
+
+/// SplitMix64 finalizer: the one integer mixer behind both the
+/// summary reservoir's deterministic sampling and the pool's sticky
+/// shard routing ([`crate::coordinator::pool::ServingPool::route`]).
+pub(crate) fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Bounded streaming summary of a latency series: exact count/sum/
+/// first/min/max plus a fixed-size reservoir for percentile estimates.
+///
+/// The serving workers used to push every per-batch latency into an
+/// unbounded `Vec<f64>`, which grows forever on a long-lived server;
+/// this keeps O(1) memory no matter how many batches are served. The
+/// reservoir uses Vitter's Algorithm R with a deterministic SplitMix64
+/// step (the offline image carries no rand crate, and determinism keeps
+/// tests stable): every sample has an equal chance of residency once
+/// the reservoir is full.
+#[derive(Debug, Clone)]
+pub struct StreamingSummary {
+    count: u64,
+    sum_us: f64,
+    first_us: f64,
+    min_us: f64,
+    max_us: f64,
+    reservoir: Vec<f64>,
+    rng: u64,
+}
+
+impl Default for StreamingSummary {
+    fn default() -> Self {
+        StreamingSummary {
+            count: 0,
+            sum_us: 0.0,
+            first_us: 0.0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+            reservoir: Vec::new(),
+            rng: 0x9e37_79b9_7f4a_7c15,
+        }
+    }
+}
+
+impl StreamingSummary {
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        if self.count == 0 {
+            self.first_us = us;
+        }
+        self.count += 1;
+        self.sum_us += us;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+        if self.reservoir.len() < SUMMARY_RESERVOIR {
+            self.reservoir.push(us);
+        } else {
+            // Algorithm R: replace a random slot with probability k/n.
+            let slot = (self.next_rng() % self.count) as usize;
+            if slot < SUMMARY_RESERVOIR {
+                self.reservoir[slot] = us;
+            }
+        }
+    }
+
+    fn next_rng(&mut self) -> u64 {
+        // Deterministic, no external dependency: advance the state and
+        // finalize with the shared mixer.
+        self.rng = self.rng.wrapping_add(1);
+        splitmix64(self.rng)
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum_us(&self) -> f64 {
+        self.sum_us
+    }
+
+    /// The very first recorded sample (the cold compile, for the
+    /// serving path's compile-latency series).
+    pub fn first_us(&self) -> f64 {
+        self.first_us
+    }
+
+    pub fn min_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_us
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// Mean of every sample after the first — the warm tail of a series
+    /// whose head is a cold outlier.
+    pub fn warm_mean_us(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            (self.sum_us - self.first_us) / (self.count - 1) as f64
+        }
+    }
+
+    /// Percentile in [0, 100], nearest-rank over the reservoir.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        percentile_nearest_rank(&self.reservoir, p)
+    }
+
+    /// Fold `other` into `self` (pool shutdown merges worker summaries).
+    /// Exact moments combine exactly. When the combined reservoirs
+    /// exceed [`SUMMARY_RESERVOIR`], each side's share of the merged
+    /// reservoir is proportional to its true *sample count* — not its
+    /// reservoir length — so a low-traffic worker cannot skew the
+    /// aggregate percentiles (sticky sharding makes uneven worker
+    /// loads the normal case).
+    pub fn merge(&mut self, other: &StreamingSummary) {
+        if other.count == 0 {
+            return;
+        }
+        let self_count = self.count;
+        if self_count == 0 {
+            self.first_us = other.first_us;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+        if self.reservoir.len() + other.reservoir.len() <= SUMMARY_RESERVOIR {
+            self.reservoir.extend_from_slice(&other.reservoir);
+            return;
+        }
+        fn take_strided(v: &[f64], n: usize) -> Vec<f64> {
+            if v.len() <= n {
+                return v.to_vec();
+            }
+            (0..n).map(|i| v[i * v.len() / n]).collect()
+        }
+        let total = (self_count + other.count) as f64;
+        let want_other = ((SUMMARY_RESERVOIR as f64 * other.count as f64 / total).round()
+            as usize)
+            .min(other.reservoir.len());
+        let want_self = (SUMMARY_RESERVOIR - want_other).min(self.reservoir.len());
+        let mut merged = take_strided(&self.reservoir, want_self);
+        merged.extend(take_strided(&other.reservoir, want_other));
+        self.reservoir = merged;
+    }
+}
+
 /// Collects request latencies and derives the usual percentiles.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyRecorder {
@@ -101,13 +287,7 @@ impl LatencyRecorder {
 
     /// Percentile in [0, 100], nearest-rank.
     pub fn percentile_us(&self, p: f64) -> f64 {
-        if self.samples_us.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.samples_us.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
-        v[rank.min(v.len()) - 1]
+        percentile_nearest_rank(&self.samples_us, p)
     }
 
     /// Requests per second given the wall-clock window of the run.
@@ -171,6 +351,82 @@ mod tests {
         let ledger = LaunchLedger { generated: 6, library: 2, ..Default::default() };
         assert!((launches_per_request(&ledger, 4) - 2.0).abs() < 1e-12);
         assert_eq!(launches_per_request(&ledger, 0), 0.0);
+    }
+
+    #[test]
+    fn streaming_summary_is_bounded_and_accurate() {
+        let mut s = StreamingSummary::default();
+        for i in 0..10_000u64 {
+            s.record_us(i as f64);
+        }
+        assert_eq!(s.count(), 10_000);
+        assert_eq!(s.first_us(), 0.0);
+        assert_eq!(s.min_us(), 0.0);
+        assert_eq!(s.max_us(), 9999.0);
+        assert!((s.mean_us() - 4999.5).abs() < 1e-9);
+        // memory stays bounded no matter how many samples stream in
+        assert!(s.reservoir.len() <= SUMMARY_RESERVOIR);
+        // reservoir percentiles track the true distribution loosely
+        let p50 = s.percentile_us(50.0);
+        assert!((2000.0..8000.0).contains(&p50), "p50 = {p50}");
+        let p99 = s.percentile_us(99.0);
+        assert!(p99 > s.percentile_us(50.0));
+    }
+
+    #[test]
+    fn streaming_summary_empty_and_warm_mean() {
+        let s = StreamingSummary::default();
+        assert_eq!((s.count(), s.mean_us(), s.percentile_us(50.0)), (0, 0.0, 0.0));
+        assert_eq!(s.min_us(), 0.0);
+        let mut s = StreamingSummary::default();
+        s.record_us(1000.0); // cold
+        s.record_us(10.0);
+        s.record_us(20.0);
+        assert_eq!(s.first_us(), 1000.0);
+        assert!((s.warm_mean_us() - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn streaming_summary_merge_combines_exact_moments() {
+        let mut a = StreamingSummary::default();
+        let mut b = StreamingSummary::default();
+        for i in 0..100 {
+            a.record_us(i as f64);
+        }
+        for i in 100..300 {
+            b.record_us(i as f64);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 300);
+        assert_eq!(a.min_us(), 0.0);
+        assert_eq!(a.max_us(), 299.0);
+        assert!((a.mean_us() - 149.5).abs() < 1e-9);
+        assert!(a.reservoir.len() <= SUMMARY_RESERVOIR);
+        // merging into an empty summary adopts the donor's cold sample
+        let mut c = StreamingSummary::default();
+        c.merge(&a);
+        assert_eq!(c.first_us(), a.first_us());
+    }
+
+    #[test]
+    fn merge_weights_reservoir_by_sample_count() {
+        // A heavy worker (100k samples near 1000µs) absorbs a light one
+        // (600 samples at 5µs): the light side's residency must track
+        // its ~0.6% traffic share, not its reservoir length.
+        let mut heavy = StreamingSummary::default();
+        for i in 0..100_000u64 {
+            heavy.record_us(1000.0 + (i % 100) as f64);
+        }
+        let mut light = StreamingSummary::default();
+        for _ in 0..600 {
+            light.record_us(5.0);
+        }
+        heavy.merge(&light);
+        assert_eq!(heavy.count(), 100_600);
+        let light_slots = heavy.reservoir.iter().filter(|v| **v < 100.0).count();
+        assert!(light_slots <= 16, "light worker holds {light_slots}/512 slots");
+        // percentiles stay in the heavy worker's range
+        assert!(heavy.percentile_us(50.0) >= 1000.0);
     }
 
     #[test]

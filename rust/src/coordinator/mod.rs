@@ -13,6 +13,9 @@
 //! - [`server`] / [`batcher`] — the latency-critical online NMT use case
 //!   (§6.1): a thread-based serving loop with shape-keyed dynamic
 //!   batching over the runtime.
+//! - [`pool`] — the sharded multi-worker serving engine: N workers with
+//!   sticky shape-key routing, bounded-queue backpressure, and the
+//!   concurrent single-flight compile service.
 //! - [`metrics`] — latency/throughput accounting for the serving loop
 //!   plus the per-pass compile-time trace types.
 
@@ -21,10 +24,12 @@ pub mod cache;
 pub mod driver;
 pub mod metrics;
 pub mod pipeline;
+pub mod pool;
 pub mod server;
 
-pub use cache::{CacheKey, CacheStats, CompileCache, CompileService};
+pub use cache::{CacheKey, CacheStats, CompileCache, CompileService, SharedCompileService};
 pub use driver::{compile_module_traced, Pass, PassManager};
-pub use metrics::{PassRecord, PassTrace};
+pub use metrics::{PassRecord, PassTrace, StreamingSummary};
 pub use pipeline::{compile_module, evaluate, CompiledModule, FusionMode, ModuleReport, PipelineConfig};
-pub use server::{CompileOptions, ServerConfig, ServingCoordinator};
+pub use pool::{PoolConfig, ServingPool, ServingStats};
+pub use server::{CompileBackend, CompileOptions, ServerConfig, ServingCoordinator, WorkerStats};

@@ -17,14 +17,15 @@
 //! serving loop's cache hit-rate is directly observable.
 
 use super::batcher::{next_batch_keyed, BatchPolicy, Request};
-use super::cache::CompileService;
-use super::pipeline::{FusionMode, PipelineConfig};
+use super::cache::{CompileService, SharedCompileService};
+use super::metrics::StreamingSummary;
+use super::pipeline::{CompiledModule, FusionMode, PipelineConfig};
 use crate::exec::{LaunchLedger, StitchedExecutable};
 use crate::hlo::Module;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, LoadedModel};
 use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
-use std::sync::mpsc::{self, Sender};
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -73,6 +74,41 @@ pub struct ServerConfig {
     pub compile: Option<CompileOptions>,
 }
 
+impl ServerConfig {
+    /// Reject degenerate configurations before a worker thread ever
+    /// spawns. Notably `policy.max_batch` *may* exceed `batch`: the
+    /// worker splits an oversized collected batch into artifact-sized
+    /// chunks instead of panicking on batch assembly (the defaults used
+    /// to disagree — `BatchPolicy::max_batch = 8` vs test configs'
+    /// `batch = 4` — and the old assembly sliced out of range).
+    pub fn validate(&self) -> Result<()> {
+        if self.batch == 0 {
+            bail!("batch must be >= 1");
+        }
+        if self.in_elems_per_request == 0 || self.out_elems_per_request == 0 {
+            bail!("per-request element counts must be >= 1");
+        }
+        if self.policy.max_batch == 0 {
+            bail!("policy.max_batch must be >= 1");
+        }
+        if self.policy.max_wait.is_zero() {
+            bail!("policy.max_wait must be non-zero");
+        }
+        let dims_product: i64 = self.input_dims.iter().product();
+        let expect = (self.batch * self.in_elems_per_request) as i64;
+        if dims_product != expect {
+            bail!(
+                "input_dims {:?} (product {dims_product}) disagree with \
+                 batch {} x in_elems_per_request {} = {expect}",
+                self.input_dims,
+                self.batch,
+                self.in_elems_per_request
+            );
+        }
+        Ok(())
+    }
+}
+
 /// Handle to the serving loop.
 pub struct ServingCoordinator {
     tx: Option<Sender<Request>>,
@@ -81,20 +117,25 @@ pub struct ServingCoordinator {
     service: Option<Arc<Mutex<CompileService>>>,
 }
 
-/// Worker-side counters.
+/// Worker-side counters. Latency series are bounded
+/// [`StreamingSummary`]s, so a long-lived server's stats stay O(1) in
+/// memory no matter how many batches it serves.
 #[derive(Debug, Default, Clone)]
 pub struct WorkerStats {
     pub batches: usize,
     pub requests: usize,
+    /// Requests rejected before execution (e.g. rows longer than the
+    /// serving contract's `in_elems_per_request`).
+    pub rejected: usize,
     /// Execution time spent inside the runtime, per batch, microseconds.
-    pub exec_us: Vec<f64>,
+    pub exec_us: StreamingSummary,
     /// Compilation-cache hits observed on the serving path.
     pub cache_hits: usize,
     /// Compilation-cache misses (cold compiles) on the serving path.
     pub cache_misses: usize,
     /// Time spent obtaining the compiled plan, per batch, microseconds
     /// (cache hits make this collapse after the first batch).
-    pub compile_us: Vec<f64>,
+    pub compile_us: StreamingSummary,
     /// Serving-path compiles that errored. After the first failure the
     /// worker stops retrying (a failing module would otherwise re-run
     /// the whole cold pipeline on every batch).
@@ -116,6 +157,47 @@ impl WorkerStats {
             0.0
         } else {
             self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Fold another worker's counters into this one (the pool's
+    /// aggregate view).
+    pub fn merge(&mut self, other: &WorkerStats) {
+        self.batches += other.batches;
+        self.requests += other.requests;
+        self.rejected += other.rejected;
+        self.exec_us.merge(&other.exec_us);
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.compile_us.merge(&other.compile_us);
+        self.compile_failures += other.compile_failures;
+        self.launches.merge(&other.launches);
+        self.stitched_batches += other.stitched_batches;
+    }
+}
+
+/// The compile front end a serving worker talks to: either the legacy
+/// single-threaded [`CompileService`] behind one mutex (hits and cold
+/// compiles both serialize), or the pool's [`SharedCompileService`]
+/// whose hit path is concurrent and whose cold compiles are
+/// single-flight per key.
+#[derive(Clone)]
+pub enum CompileBackend {
+    Legacy(Arc<Mutex<CompileService>>),
+    Shared(Arc<SharedCompileService>),
+}
+
+impl CompileBackend {
+    fn compile(
+        &self,
+        module: &Module,
+        mode: FusionMode,
+    ) -> crate::Result<(Arc<CompiledModule>, bool)> {
+        match self {
+            CompileBackend::Legacy(svc) => {
+                svc.lock().expect("compile service poisoned").compile(module, mode)
+            }
+            CompileBackend::Shared(svc) => svc.compile(module, mode),
         }
     }
 }
@@ -144,6 +226,154 @@ fn validate_stitched(
         bail!("module root has {} elements, serving expects {}", exe.root_elems, out_elems);
     }
     Ok(exe)
+}
+
+/// The serving loop body, shared by the single-worker
+/// [`ServingCoordinator`] and every worker of a
+/// [`super::pool::ServingPool`]: collect a shape-pure batch, make the
+/// compiled plan resident (through whichever [`CompileBackend`] the
+/// caller wired up), assemble, execute, reply.
+///
+/// Oversized *rows* (longer than `in_elems_per_request`) are rejected
+/// on their own response channel before assembly — the old code
+/// silently truncated them and served corrupted output. Oversized
+/// *batches* (the policy may collect more than the artifact's baked
+/// `batch`) are split into artifact-sized chunks — the old code
+/// panicked on a slice out of range.
+///
+/// When `live` is given, a snapshot of the counters is published after
+/// every batch so the pool can report aggregate stats while serving.
+pub(crate) fn run_worker(
+    model: &LoadedModel,
+    rx: &Receiver<Request>,
+    cfg: &ServerConfig,
+    service: Option<&CompileBackend>,
+    live: Option<&Mutex<WorkerStats>>,
+) -> WorkerStats {
+    let mut stats = WorkerStats::default();
+    let batch_elems = cfg.batch * cfg.in_elems_per_request;
+    let out_elems = cfg.batch * cfg.out_elems_per_request;
+    let mut carry = None;
+    let mut compile_failed = false;
+    // Stitched-VM dispatch: resolved from the first successful compile
+    // when requested (and signature-compatible).
+    let mut stitched: Option<Arc<StitchedExecutable>> = None;
+    let mut stitched_rejected = false;
+    while let Some(batch) = next_batch_keyed(rx, &cfg.policy, &mut carry) {
+        // Compile-once serving: make sure the kernel plans for this
+        // module are resident before touching the batch.
+        if let (Some(opts), Some(svc)) = (&cfg.compile, service) {
+            if !compile_failed {
+                let t0 = Instant::now();
+                match svc.compile(&opts.module, opts.mode) {
+                    Ok((plan, hit)) => {
+                        stats.compile_us.record_us(t0.elapsed().as_secs_f64() * 1e6);
+                        if hit {
+                            stats.cache_hits += 1;
+                        } else {
+                            stats.cache_misses += 1;
+                        }
+                        if opts.use_stitched_backend && stitched.is_none() && !stitched_rejected
+                        {
+                            match validate_stitched(&plan, batch_elems, out_elems) {
+                                Ok(exe) => stitched = Some(exe),
+                                Err(e) => {
+                                    stitched_rejected = true;
+                                    eprintln!(
+                                        "stitched backend unavailable, serving \
+                                         the artifact instead: {e:#}"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // Don't re-pay the full cold pipeline on every
+                        // batch for a module that cannot compile; serve
+                        // uncompiled and report.
+                        stats.compile_failures += 1;
+                        compile_failed = true;
+                        eprintln!("serving-path compile failed (disabling): {e:#}");
+                    }
+                }
+            }
+        }
+        // Reject rows that exceed the serving contract up front: the
+        // truncated execution would silently return corrupted output.
+        let (rejected, accepted): (Vec<Request>, Vec<Request>) =
+            batch.into_iter().partition(|req| req.input.len() > cfg.in_elems_per_request);
+        if !rejected.is_empty() {
+            stats.rejected += rejected.len();
+            // Count before replying, so a live-stats read right after
+            // the error response already sees the rejection.
+            if let Some(live) = live {
+                *live.lock().expect("live stats poisoned") = stats.clone();
+            }
+            for req in rejected {
+                let row = req.input.len();
+                let _ = req.respond.send(Err(anyhow!(
+                    "request row has {row} elements but the serving contract \
+                     carries {} per request",
+                    cfg.in_elems_per_request
+                )));
+            }
+        }
+        // The policy may collect more requests than the artifact's
+        // baked batch dimension: execute in artifact-sized chunks.
+        for chunk in accepted.chunks(cfg.batch) {
+            // Assemble the padded chunk input.
+            let mut input = vec![0f32; batch_elems];
+            for (i, req) in chunk.iter().enumerate() {
+                let start = i * cfg.in_elems_per_request;
+                input[start..start + req.input.len()].copy_from_slice(&req.input);
+            }
+            let t0 = Instant::now();
+            let result = match &stitched {
+                Some(exe) => {
+                    stats.stitched_batches += 1;
+                    exe.run(std::slice::from_ref(&input)).map(|(out, ledger)| {
+                        stats.launches.merge(&ledger);
+                        vec![out]
+                    })
+                }
+                None => {
+                    let before = model.launch_ledger();
+                    let r = model.run_f32(&[(&input, &cfg.input_dims)]);
+                    stats.launches.merge(&model.launch_ledger().since(&before));
+                    r
+                }
+            };
+            stats.exec_us.record_us(t0.elapsed().as_secs_f64() * 1e6);
+            stats.batches += 1;
+            stats.requests += chunk.len();
+            // Publish the snapshot *before* replying: a client that
+            // reads pool stats right after its response must already
+            // see its own request counted.
+            if let Some(live) = live {
+                *live.lock().expect("live stats poisoned") = stats.clone();
+            }
+            match result {
+                Ok(outputs) => {
+                    let out = &outputs[0];
+                    for (i, req) in chunk.iter().enumerate() {
+                        let start = i * cfg.out_elems_per_request;
+                        let end = start + cfg.out_elems_per_request;
+                        let slice = out
+                            .get(start..end)
+                            .map(<[f32]>::to_vec)
+                            .ok_or_else(|| anyhow!("output shorter than expected"));
+                        let _ = req.respond.send(slice);
+                    }
+                }
+                Err(e) => {
+                    for req in chunk {
+                        let _ = req.respond.send(Err(anyhow!("execution failed: {e:#}")));
+                    }
+                }
+            }
+        }
+    }
+    stats
 }
 
 impl ServingCoordinator {
@@ -178,13 +408,13 @@ impl ServingCoordinator {
         cfg: ServerConfig,
         service: Option<Arc<Mutex<CompileService>>>,
     ) -> Result<Self> {
+        cfg.validate()?;
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let wcfg = cfg.clone();
-        let wservice = service.clone();
+        let backend = service.clone().map(CompileBackend::Legacy);
         let dir = artifact_dir.to_path_buf();
         let worker = std::thread::spawn(move || {
-            let mut stats = WorkerStats::default();
             let engine = match Engine::new(&dir).and_then(|mut e| {
                 e.load(&wcfg.artifact)?;
                 Ok(e)
@@ -195,111 +425,11 @@ impl ServingCoordinator {
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
-                    return stats;
+                    return WorkerStats::default();
                 }
             };
             let model = engine.get(&wcfg.artifact).expect("loaded above");
-            let batch_elems = wcfg.batch * wcfg.in_elems_per_request;
-            let out_elems = wcfg.batch * wcfg.out_elems_per_request;
-            let mut carry = None;
-            let mut compile_failed = false;
-            // Stitched-VM dispatch: resolved from the first successful
-            // compile when requested (and signature-compatible).
-            let mut stitched: Option<Arc<StitchedExecutable>> = None;
-            let mut stitched_rejected = false;
-            while let Some(batch) = next_batch_keyed(&rx, &wcfg.policy, &mut carry) {
-                // Compile-once serving: make sure the kernel plans for
-                // this module are resident before touching the batch.
-                if let (Some(opts), Some(svc)) = (&wcfg.compile, &wservice) {
-                    if !compile_failed {
-                        let t0 = Instant::now();
-                        match svc
-                            .lock()
-                            .expect("compile service poisoned")
-                            .compile(&opts.module, opts.mode)
-                        {
-                            Ok((plan, hit)) => {
-                                stats.compile_us.push(t0.elapsed().as_secs_f64() * 1e6);
-                                if hit {
-                                    stats.cache_hits += 1;
-                                } else {
-                                    stats.cache_misses += 1;
-                                }
-                                if opts.use_stitched_backend
-                                    && stitched.is_none()
-                                    && !stitched_rejected
-                                {
-                                    match validate_stitched(&plan, batch_elems, out_elems) {
-                                        Ok(exe) => stitched = Some(exe),
-                                        Err(e) => {
-                                            stitched_rejected = true;
-                                            eprintln!(
-                                                "stitched backend unavailable, serving \
-                                                 the artifact instead: {e:#}"
-                                            );
-                                        }
-                                    }
-                                }
-                            }
-                            Err(e) => {
-                                // Don't re-pay the full cold pipeline on
-                                // every batch for a module that cannot
-                                // compile; serve uncompiled and report.
-                                stats.compile_failures += 1;
-                                compile_failed = true;
-                                eprintln!("serving-path compile failed (disabling): {e:#}");
-                            }
-                        }
-                    }
-                }
-                // Assemble the padded batch input.
-                let mut input = vec![0f32; batch_elems];
-                for (i, req) in batch.iter().enumerate() {
-                    let start = i * wcfg.in_elems_per_request;
-                    let row = &req.input;
-                    input[start..start + row.len().min(wcfg.in_elems_per_request)]
-                        .copy_from_slice(&row[..row.len().min(wcfg.in_elems_per_request)]);
-                }
-                let t0 = Instant::now();
-                let result = match &stitched {
-                    Some(exe) => {
-                        stats.stitched_batches += 1;
-                        exe.run(std::slice::from_ref(&input)).map(|(out, ledger)| {
-                            stats.launches.merge(&ledger);
-                            vec![out]
-                        })
-                    }
-                    None => {
-                        let before = model.launch_ledger();
-                        let r = model.run_f32(&[(&input, &wcfg.input_dims)]);
-                        stats.launches.merge(&model.launch_ledger().since(&before));
-                        r
-                    }
-                };
-                stats.exec_us.push(t0.elapsed().as_secs_f64() * 1e6);
-                stats.batches += 1;
-                stats.requests += batch.len();
-                match result {
-                    Ok(outputs) => {
-                        let out = &outputs[0];
-                        for (i, req) in batch.iter().enumerate() {
-                            let start = i * wcfg.out_elems_per_request;
-                            let end = start + wcfg.out_elems_per_request;
-                            let slice = out
-                                .get(start..end)
-                                .map(<[f32]>::to_vec)
-                                .ok_or_else(|| anyhow!("output shorter than expected"));
-                            let _ = req.respond.send(slice);
-                        }
-                    }
-                    Err(e) => {
-                        for req in &batch {
-                            let _ = req.respond.send(Err(anyhow!("execution failed: {e:#}")));
-                        }
-                    }
-                }
-            }
-            stats
+            run_worker(model, &rx, &wcfg, backend.as_ref(), None)
         });
         // Fail fast if the artifact is missing/bad.
         ready_rx
@@ -434,6 +564,65 @@ ENTRY main {
         assert_eq!(rx.recv().unwrap().unwrap(), vec![10.0, 10.0, 10.0]);
     }
 
+    /// Regression: `BatchPolicy::max_batch > ServerConfig::batch` (the
+    /// *defaults* disagree: policy default 8 vs artifact batch 4) used
+    /// to panic with a slice out of range in batch assembly. The worker
+    /// must split the collected batch into artifact-sized chunks and
+    /// answer every request.
+    #[test]
+    fn oversized_policy_splits_batches_instead_of_panicking() {
+        let dir = TempDir::new("srv-split");
+        std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+        let mut cfg = config();
+        // default-policy shape of the bug: collect up to 8, artifact batches 4
+        cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) };
+        let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
+        let pending: Vec<_> = (0..8)
+            .map(|i| srv.infer_async(vec![i as f32, 1.0, 2.0]).unwrap())
+            .collect();
+        for (i, rx) in pending.into_iter().enumerate() {
+            let out = rx.recv().expect("worker must not die").unwrap();
+            assert_eq!(out, vec![2.0 * i as f32, 2.0, 4.0]);
+        }
+        let stats = srv.shutdown().expect("worker must not panic");
+        assert_eq!(stats.requests, 8);
+        // an 8-request collection executes as two artifact-sized chunks
+        assert!(stats.batches >= 2, "batches = {}", stats.batches);
+    }
+
+    /// Regression: rows longer than `in_elems_per_request` were silently
+    /// truncated and served corrupted output; they must be rejected on
+    /// their own channel while the rest of the batch still serves.
+    #[test]
+    fn oversized_row_is_rejected_not_truncated() {
+        let dir = TempDir::new("srv-row");
+        let srv = server(&dir);
+        let too_long = srv.infer_async(vec![9.0, 9.0, 9.0, 9.0, 9.0]).unwrap();
+        let ok = srv.infer_async(vec![1.0, 2.0, 3.0]).unwrap();
+        let err = too_long.recv().unwrap().expect_err("oversized row must error");
+        assert!(err.to_string().contains("5 elements"), "got: {err:#}");
+        assert_eq!(ok.recv().unwrap().unwrap(), vec![2.0, 4.0, 6.0]);
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.requests, 1, "rejected rows are not served requests");
+    }
+
+    #[test]
+    fn degenerate_configs_fail_at_startup() {
+        let dir = TempDir::new("srv-val");
+        std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+        let mut zero_batch = config();
+        zero_batch.batch = 0;
+        assert!(ServingCoordinator::start(dir.path(), zero_batch).is_err());
+        let mut bad_dims = config();
+        bad_dims.input_dims = vec![2, 3];
+        let err = ServingCoordinator::start(dir.path(), bad_dims).unwrap_err();
+        assert!(err.to_string().contains("input_dims"), "got: {err:#}");
+        let mut zero_policy = config();
+        zero_policy.policy.max_batch = 0;
+        assert!(ServingCoordinator::start(dir.path(), zero_policy).is_err());
+    }
+
     #[test]
     fn compile_once_serving_hits_cache_after_first_batch() {
         use crate::hlo::{GraphBuilder, Module, Shape};
@@ -469,7 +658,7 @@ ENTRY main {
         assert_eq!(stats.cache_misses, 1, "only the first batch compiles cold");
         assert_eq!(stats.cache_hits, 2);
         assert!(stats.cache_hit_rate() > 0.6);
-        assert_eq!(stats.compile_us.len(), 3);
+        assert_eq!(stats.compile_us.count(), 3);
         // the service agrees with the worker's view
         let s = service.lock().unwrap().stats();
         assert_eq!((s.hits, s.misses), (2, 1));

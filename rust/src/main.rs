@@ -247,6 +247,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
     let artifact = flag_value(args, "--artifact").unwrap_or("attention_fused").to_string();
     let dir = PathBuf::from(flag_value(args, "--artifacts-dir").unwrap_or("artifacts"));
+    // --workers N routes through the sharded ServingPool (N=0: one per
+    // available core); absent, the single-worker coordinator serves.
+    let workers: Option<usize> = flag_value(args, "--workers").and_then(|v| v.parse().ok());
 
     // Compile-once serving: every batch routes through the compilation
     // cache for the NMT module; the first pays fusion+tuning, the rest hit.
@@ -272,6 +275,9 @@ fn cmd_serve(args: &[String]) -> i32 {
         policy: BatchPolicy::default(),
         compile,
     };
+    if let Some(n) = workers {
+        return serve_pool(&dir, cfg, n, requests);
+    }
     let srv = match ServingCoordinator::start(&dir, cfg.clone()) {
         Ok(s) => s,
         Err(e) => {
@@ -318,19 +324,75 @@ fn cmd_serve(args: &[String]) -> i32 {
         );
     }
     if stats.cache_hits + stats.cache_misses > 0 {
-        let cold = stats.compile_us.first().copied().unwrap_or(0.0);
-        let warm = if stats.compile_us.len() > 1 {
-            stats.compile_us[1..].iter().sum::<f64>() / (stats.compile_us.len() - 1) as f64
-        } else {
-            0.0
-        };
         println!(
             "compile cache: {} hits / {} misses (hit-rate {:.0}%), cold {:.0} us, warm {:.1} us",
             stats.cache_hits,
             stats.cache_misses,
             100.0 * stats.cache_hit_rate(),
-            cold,
-            warm,
+            stats.compile_us.first_us(),
+            stats.compile_us.warm_mean_us(),
+        );
+    }
+    0
+}
+
+/// `serve --workers N`: the sharded multi-worker pool. Requests cycle
+/// over a few shape keys so the sticky router exercises every shard.
+fn serve_pool(
+    dir: &std::path::Path,
+    cfg: fusion_stitching::coordinator::ServerConfig,
+    workers: usize,
+    requests: usize,
+) -> i32 {
+    use fusion_stitching::coordinator::metrics::LatencyRecorder;
+    use fusion_stitching::coordinator::{PoolConfig, ServingPool};
+
+    let (in_elems, batch) = (cfg.in_elems_per_request, cfg.batch);
+    let pool = match ServingPool::start(
+        dir,
+        cfg,
+        PoolConfig { workers, ..PoolConfig::default() },
+    ) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("starting pool (run `make artifacts` first?): {e:#}");
+            return 1;
+        }
+    };
+    let mut lat = LatencyRecorder::default();
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..requests {
+        let input = vec![0.01 * (i % 7) as f32; in_elems];
+        // cycle a few shape keys so the sticky router exercises shards
+        let key = (i % 8) as u64;
+        pending.push((std::time::Instant::now(), pool.infer_keyed_async(key, input).unwrap()));
+        if pending.len() >= batch {
+            for (t, rx) in pending.drain(..) {
+                rx.recv().unwrap().unwrap();
+                lat.record(t.elapsed());
+            }
+        }
+    }
+    for (t, rx) in pending.drain(..) {
+        rx.recv().unwrap().unwrap();
+        lat.record(t.elapsed());
+    }
+    let wall = t0.elapsed();
+    let stats = pool.shutdown().unwrap();
+    println!(
+        "pool({} workers) served {} requests in {} batches: p50 {:.2} ms, p95 {:.2} ms, {:.0} req/s",
+        stats.workers(),
+        stats.aggregate.requests,
+        stats.aggregate.batches,
+        lat.percentile_us(50.0) / 1e3,
+        lat.percentile_us(95.0) / 1e3,
+        lat.throughput_rps(wall),
+    );
+    if let (Some(cache), Some(cold)) = (&stats.cache, stats.cold_compiles) {
+        println!(
+            "shared compile cache: {} hits / {} misses, {} cold pipeline runs (single-flight)",
+            cache.hits, cache.misses, cold
         );
     }
     0

@@ -23,10 +23,13 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-/// Which executor backs a loaded model.
+/// Which executor backs a loaded model. Both backends are immutable
+/// and `Arc`-shared: a multi-worker serving pool parses/compiles an
+/// artifact once and registers the same program into every worker's
+/// engine ([`Engine::register_program`]).
 enum Backend {
     /// Op-by-op HLO-text interpreter (per-op launches).
-    Interp(HloProgram),
+    Interp(Arc<HloProgram>),
     /// Stitched VM executable (one launch per fused group).
     Stitched(Arc<StitchedExecutable>),
 }
@@ -108,16 +111,35 @@ impl Engine {
         if !self.models.contains_key(stem) {
             let path = self.dir.join(format!("{stem}.hlo.txt"));
             let exe = self.rt.load_hlo_text(&path)?;
-            self.models.insert(
-                stem.to_string(),
-                LoadedModel {
-                    name: stem.to_string(),
-                    backend: Backend::Interp(exe),
-                    ledger: RefCell::new(LaunchLedger::default()),
-                },
-            );
+            self.register_program(stem, Arc::new(exe));
         }
         Ok(&self.models[stem])
+    }
+
+    /// Parse one text artifact into a shareable program *without*
+    /// registering it anywhere: a serving pool parses once up front
+    /// (failing fast before any worker spawns) and registers the same
+    /// `Arc` into every worker's engine via [`Engine::register_program`],
+    /// instead of re-parsing the artifact N times.
+    pub fn parse_artifact(artifact_dir: &Path, stem: &str) -> Result<Arc<HloProgram>> {
+        let rt = Runtime::cpu()?;
+        let path = artifact_dir.join(format!("{stem}.hlo.txt"));
+        Ok(Arc::new(rt.load_hlo_text(&path)?))
+    }
+
+    /// Register an already-parsed interpreter program under `stem`
+    /// (replacing any model of the same name). The per-model
+    /// [`LaunchLedger`] stays local to this engine even when the
+    /// program `Arc` is shared across engines.
+    pub fn register_program(&mut self, stem: &str, prog: Arc<HloProgram>) {
+        self.models.insert(
+            stem.to_string(),
+            LoadedModel {
+                name: stem.to_string(),
+                backend: Backend::Interp(prog),
+                ledger: RefCell::new(LaunchLedger::default()),
+            },
+        );
     }
 
     /// Register a stitched-VM executable under `stem` (replacing any
@@ -200,6 +222,23 @@ ENTRY main {
         engine.load("add_self").unwrap();
         let model = engine.get("add_self").unwrap();
         assert!(model.run_f32(&[(&[1.0f32, 2.0, 3.0], &[2])]).is_err());
+    }
+
+    #[test]
+    fn shared_program_keeps_per_engine_ledgers() {
+        let dir = TempDir::new("engine-share");
+        std::fs::write(dir.path().join("add_self.hlo.txt"), ADD_HLO).unwrap();
+        let prog = Engine::parse_artifact(dir.path(), "add_self").unwrap();
+        let mut e1 = Engine::new(dir.path()).unwrap();
+        let mut e2 = Engine::new(dir.path()).unwrap();
+        e1.register_program("add_self", prog.clone());
+        e2.register_program("add_self", prog);
+        e1.get("add_self").unwrap().run_f32(&[(&[1.0f32, 2.0], &[2])]).unwrap();
+        e1.get("add_self").unwrap().run_f32(&[(&[1.0f32, 2.0], &[2])]).unwrap();
+        e2.get("add_self").unwrap().run_f32(&[(&[3.0f32, 4.0], &[2])]).unwrap();
+        // one shared program, independent launch accounting per engine
+        assert_eq!(e1.get("add_self").unwrap().launch_ledger().generated, 2);
+        assert_eq!(e2.get("add_self").unwrap().launch_ledger().generated, 1);
     }
 
     #[test]

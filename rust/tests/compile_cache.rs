@@ -185,9 +185,9 @@ fn serving_loop_reports_cache_hits_for_repeated_nmt_requests() {
     assert!(stats.cache_hits >= 3, "repeated requests must hit: {stats:?}");
     assert!(stats.cache_hit_rate() > 0.0);
     // warm compile latency collapses vs the cold compile
-    assert!(stats.compile_us.len() >= 4);
-    let cold = stats.compile_us[0];
-    let warm_best = stats.compile_us[1..].iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(stats.compile_us.count() >= 4);
+    let cold = stats.compile_us.first_us();
+    let warm_best = stats.compile_us.min_us();
     assert!(
         warm_best < cold,
         "cache hit ({warm_best} us) should be cheaper than cold compile ({cold} us)"

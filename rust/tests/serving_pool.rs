@@ -1,0 +1,178 @@
+//! Integration tests for the sharded multi-worker serving engine:
+//! concurrent compile-once serving (single-flight cold compiles across
+//! live workers), aggregate stats, and the oversized-batch/-row
+//! regressions end to end.
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::server::CompileOptions;
+use fusion_stitching::coordinator::{
+    FusionMode, PipelineConfig, PoolConfig, ServerConfig, ServingPool, SharedCompileService,
+};
+use fusion_stitching::models;
+use fusion_stitching::testutil::TempDir;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Identity-ish artifact: doubles a [4, 3] batch.
+const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+
+fn base_config() -> ServerConfig {
+    ServerConfig {
+        artifact: "double".into(),
+        batch: 4,
+        in_elems_per_request: 3,
+        out_elems_per_request: 3,
+        input_dims: vec![4, 3],
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+        compile: None,
+    }
+}
+
+fn compile_config() -> ServerConfig {
+    let (meta, nmt) = models::by_name("NMT").unwrap();
+    let mut pipeline = PipelineConfig::default();
+    pipeline.deep.fuse_batch_dot = meta.fuse_batch_dot;
+    let mut cfg = base_config();
+    cfg.compile = Some(CompileOptions {
+        module: nmt,
+        mode: FusionMode::FusionStitching,
+        pipeline,
+        use_stitched_backend: false,
+    });
+    cfg
+}
+
+/// The acceptance gate for the concurrent cache: multiple live workers
+/// fetch the same fingerprint simultaneously on their very first batch,
+/// and exactly one cold compile runs — the rest wait on the in-flight
+/// slot and hit.
+#[test]
+fn concurrent_workers_share_one_cold_compile() {
+    let dir = TempDir::new("pool-sf");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+    let pool = ServingPool::start(
+        dir.path(),
+        compile_config(),
+        PoolConfig { workers: 4, queue_depth: 16 },
+    )
+    .unwrap();
+
+    // Fire one request per shard *concurrently*: every worker's first
+    // batch races into the shared service for the same NMT fingerprint.
+    let mut keys = Vec::new();
+    for key in 0..4096u64 {
+        if keys.iter().all(|&k| pool.route(k) != pool.route(key)) {
+            keys.push(key);
+            if keys.len() == 4 {
+                break;
+            }
+        }
+    }
+    let pending: Vec<_> = keys
+        .iter()
+        .map(|&k| pool.infer_keyed_async(k, vec![1.0, 2.0, 3.0]).unwrap())
+        .collect();
+    for rx in pending {
+        assert_eq!(rx.recv().unwrap().unwrap(), vec![2.0, 4.0, 6.0]);
+    }
+
+    let service = pool.compile_service().unwrap().clone();
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(
+        service.cold_compiles(),
+        1,
+        "N workers racing on one fingerprint must run exactly one cold pipeline"
+    );
+    assert_eq!(stats.aggregate.cache_misses, 1, "one worker observed the miss");
+    assert!(
+        stats.aggregate.cache_hits >= stats.aggregate.batches - 1,
+        "everyone else hit: {:?}",
+        stats.aggregate
+    );
+    assert_eq!(stats.cold_compiles, Some(1));
+}
+
+/// A pre-warmed shared service serves every pool worker's first batch
+/// from the cache — no cold compile at all on the serving path.
+#[test]
+fn prewarmed_shared_service_skips_cold_compiles() {
+    let dir = TempDir::new("pool-warm");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+    let cfg = compile_config();
+    let opts = cfg.compile.as_ref().unwrap();
+    let service = Arc::new(SharedCompileService::new(opts.pipeline.clone()));
+    // warmup job: pay the compile before serving starts
+    service.compile(&opts.module, opts.mode).unwrap();
+    assert_eq!(service.cold_compiles(), 1);
+
+    let pool = ServingPool::start_with_service(
+        dir.path(),
+        cfg,
+        PoolConfig { workers: 2, queue_depth: 16 },
+        service.clone(),
+    )
+    .unwrap();
+    for i in 0..6u64 {
+        let (out, _) = pool.infer_keyed(i, vec![i as f32, 0.0, 1.0]).unwrap();
+        assert_eq!(out, vec![2.0 * i as f32, 0.0, 2.0]);
+    }
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(stats.aggregate.cache_misses, 0, "warm cache: no cold compile while serving");
+    assert!(stats.aggregate.cache_hits >= 1);
+    assert_eq!(service.cold_compiles(), 1, "still just the warmup compile");
+}
+
+/// End-to-end regression for the oversized batch policy: the pool's
+/// default-config shape (`BatchPolicy::max_batch = 8` against an
+/// artifact batch of 4) must split, serve every request, and never
+/// panic a worker.
+#[test]
+fn pool_survives_policy_larger_than_artifact_batch() {
+    let dir = TempDir::new("pool-split");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+    let mut cfg = base_config();
+    cfg.policy = BatchPolicy::default(); // max_batch 8 > batch 4: the bug's shape
+    assert!(cfg.policy.max_batch > cfg.batch);
+    let pool =
+        ServingPool::start(dir.path(), cfg, PoolConfig { workers: 2, queue_depth: 32 }).unwrap();
+    let pending: Vec<_> = (0..24)
+        .map(|i| pool.infer_keyed_async(7, vec![i as f32, 0.5, 1.5]).unwrap())
+        .collect();
+    for (i, rx) in pending.into_iter().enumerate() {
+        assert_eq!(
+            rx.recv().expect("worker alive").unwrap(),
+            vec![2.0 * i as f32, 1.0, 3.0]
+        );
+    }
+    let stats = pool.shutdown().expect("no worker panicked");
+    assert_eq!(stats.aggregate.requests, 24);
+}
+
+/// Aggregate stats merge bounded latency summaries from every worker.
+#[test]
+fn aggregate_stats_fold_worker_summaries() {
+    let dir = TempDir::new("pool-agg");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+    let pool = ServingPool::start(
+        dir.path(),
+        base_config(),
+        PoolConfig { workers: 2, queue_depth: 16 },
+    )
+    .unwrap();
+    for i in 0..10u64 {
+        pool.infer_keyed(i, vec![0.5; 3]).unwrap();
+    }
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(stats.aggregate.requests, 10);
+    let total_batches: usize = stats.per_worker.iter().map(|w| w.batches).sum();
+    assert_eq!(stats.aggregate.batches, total_batches);
+    assert_eq!(stats.aggregate.exec_us.count(), total_batches as u64);
+    assert!(stats.aggregate.exec_us.max_us() >= stats.per_worker[0].exec_us.max_us());
+}
