@@ -1,6 +1,6 @@
 # Convenience targets; everything also works via plain cargo / python.
 
-.PHONY: build test bench bench-launches bench-serving artifacts doc
+.PHONY: build test bench bench-launches bench-serving bench-fusion artifacts doc
 
 build:
 	cargo build --release
@@ -20,6 +20,12 @@ bench-launches:
 # 1/2/4 workers, writes BENCH_serving_throughput.json at the repo root.
 bench-serving:
 	BENCH_SMOKE=1 cargo bench --bench serving_throughput
+
+# Fusion-profit bench (smoke mode): greedy vs cost-guided fusion on the
+# six Table 2 models, executed on the stitched VM; writes
+# BENCH_fusion_profit.json at the repo root.
+bench-fusion:
+	BENCH_SMOKE=1 cargo bench --bench fusion_profit
 
 doc:
 	cargo doc --no-deps

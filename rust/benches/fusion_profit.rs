@@ -1,0 +1,186 @@
+//! Fusion-profit bench: greedy vs cost-guided fusion over the six
+//! Table 2 workloads.
+//!
+//! Each model is compiled twice under FusionStitching — once with the
+//! greedy Algorithm 1 plan (`--no-cost-fusion`) and once with the
+//! cost-guided explorer refining it — then both plans are **executed**
+//! on the stitched VM so the `LaunchLedger` reports real launches, not
+//! estimates. Acceptance bar (enforced here): on every model the
+//! cost-guided plan's modeled total time is ≤ greedy's and it executes
+//! at most as many launches. Results go to `BENCH_fusion_profit.json`
+//! at the repo root.
+//!
+//! `BENCH_SMOKE=1` (used by `make bench-fusion` and CI) keeps the same
+//! six models — they are cheap — and only tags the output mode.
+
+use fusion_stitching::coordinator::pipeline::{
+    compile_module, geomean, FusionMode, PipelineConfig,
+};
+use fusion_stitching::exec::LaunchLedger;
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::Module;
+use fusion_stitching::models;
+use fusion_stitching::schedule::PerfLibrary;
+use std::path::PathBuf;
+
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 1000) as f32) / 1000.0 - 0.5
+        })
+        .collect()
+}
+
+fn inputs_for(module: &Module, seed: u64) -> Vec<Vec<f32>> {
+    module
+        .entry
+        .parameters()
+        .into_iter()
+        .enumerate()
+        .map(|(k, id)| {
+            let elems = module.entry.get(id).shape.num_elements() as usize;
+            fill(elems, seed + k as u64)
+        })
+        .collect()
+}
+
+struct ModeRow {
+    modeled_us: f64,
+    kernels: usize,
+    ledger: LaunchLedger,
+    merges: usize,
+    splits: usize,
+    memo_hits: u64,
+}
+
+fn compile_and_run(
+    module: &Module,
+    fuse_batch_dot: bool,
+    cost_fusion: bool,
+    lib: &mut PerfLibrary,
+) -> ModeRow {
+    let mut cfg = PipelineConfig::default();
+    cfg.deep.fuse_batch_dot = fuse_batch_dot;
+    cfg.deep.cost_fusion = cost_fusion;
+    let compiled = compile_module(module, FusionMode::FusionStitching, lib, &cfg)
+        .unwrap_or_else(|e| panic!("{}: compile failed: {e:#}", module.name));
+    let exe = compiled
+        .executable
+        .as_ref()
+        .unwrap_or_else(|| panic!("{}: did not lower: {:?}", module.name, compiled.exec_error));
+    let inputs = inputs_for(module, 42);
+    let (_, ledger) = exe
+        .run(&inputs)
+        .unwrap_or_else(|e| panic!("{}: run failed: {e:#}", module.name));
+    let (merges, splits, memo_hits) = compiled
+        .explore
+        .as_ref()
+        .map(|x| (x.merges_accepted, x.splits_accepted, x.memo_hits))
+        .unwrap_or((0, 0, 0));
+    ModeRow {
+        modeled_us: compiled.timing.total_us(),
+        kernels: compiled.plan.generated_kernel_count(&module.entry),
+        ledger,
+        merges,
+        splits,
+        memo_hits,
+    }
+}
+
+fn main() {
+    let smoke =
+        std::env::var("BENCH_SMOKE").is_ok() || std::env::args().any(|a| a == "--smoke");
+    let mode_name = if smoke { "smoke" } else { "full" };
+    println!("== Fusion profit: greedy vs cost-guided (executed on the stitched VM) ==");
+    println!(
+        "{:<8} {:>12} {:>12} {:>9} {:>9} {:>7} {:>7} {:>8}",
+        "model", "greedy_us", "guided_us", "g_launch", "c_launch", "merges", "splits", "ratio"
+    );
+
+    let mut rows: Vec<(String, ModeRow, ModeRow)> = Vec::new();
+    for (meta, module) in models::all_benchmarks() {
+        // One shared library per model; the two modes key their tuned
+        // plans separately (the config digest carries the explore flag).
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let greedy = compile_and_run(&module, meta.fuse_batch_dot, false, &mut lib);
+        let guided = compile_and_run(&module, meta.fuse_batch_dot, true, &mut lib);
+
+        assert!(
+            guided.modeled_us <= greedy.modeled_us + 1e-6,
+            "{}: cost-guided modeled time regressed: {} vs {}",
+            meta.name,
+            guided.modeled_us,
+            greedy.modeled_us
+        );
+        assert!(
+            guided.ledger.total_launches() <= greedy.ledger.total_launches(),
+            "{}: cost-guided launched more: {} vs {}",
+            meta.name,
+            guided.ledger.total_launches(),
+            greedy.ledger.total_launches()
+        );
+
+        let ratio = guided.modeled_us / greedy.modeled_us.max(1e-9);
+        println!(
+            "{:<8} {:>12.1} {:>12.1} {:>9} {:>9} {:>7} {:>7} {:>8.3}",
+            meta.name,
+            greedy.modeled_us,
+            guided.modeled_us,
+            greedy.ledger.total_launches(),
+            guided.ledger.total_launches(),
+            guided.merges,
+            guided.splits,
+            ratio
+        );
+        rows.push((meta.name.to_string(), greedy, guided));
+    }
+
+    let g_time = geomean(rows.iter().map(|(_, g, c)| c.modeled_us / g.modeled_us.max(1e-9)));
+    let g_launch = geomean(rows.iter().map(|(_, g, c)| {
+        c.ledger.total_launches() as f64 / g.ledger.total_launches().max(1) as f64
+    }));
+    println!(
+        "geomean modeled-time ratio (guided/greedy): {g_time:.3}, launch ratio: {g_launch:.3}"
+    );
+
+    // ---- persist ----
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"fusion_profit\",\n");
+    json.push_str(&format!("  \"mode\": \"{mode_name}\",\n"));
+    json.push_str("  \"models\": [\n");
+    for (k, (name, g, c)) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{name}\", \
+             \"greedy\": {{\"modeled_us\": {:.3}, \"kernels\": {}, \"launches\": {}}}, \
+             \"cost_guided\": {{\"modeled_us\": {:.3}, \"kernels\": {}, \"launches\": {}, \
+             \"merges\": {}, \"splits\": {}, \"memo_hits\": {}}}, \
+             \"modeled_ratio\": {:.4}, \"launch_ratio\": {:.4}}}{}\n",
+            g.modeled_us,
+            g.kernels,
+            g.ledger.total_launches(),
+            c.modeled_us,
+            c.kernels,
+            c.ledger.total_launches(),
+            c.merges,
+            c.splits,
+            c.memo_hits,
+            c.modeled_us / g.modeled_us.max(1e-9),
+            c.ledger.total_launches() as f64 / g.ledger.total_launches().max(1) as f64,
+            if k + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"geomean_modeled_ratio\": {g_time:.4},\n"));
+    json.push_str(&format!("  \"geomean_launch_ratio\": {g_launch:.4}\n"));
+    json.push_str("}\n");
+
+    let out_path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => PathBuf::from(dir).join("..").join("BENCH_fusion_profit.json"),
+        Err(_) => PathBuf::from("BENCH_fusion_profit.json"),
+    };
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out_path.display()),
+    }
+}

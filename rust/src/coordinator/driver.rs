@@ -26,7 +26,9 @@
 use crate::codegen::emitter::emit_group;
 use crate::codegen::KernelPlan;
 use crate::exec::{lower_to_exec, StitchedExecutable};
-use crate::fusion::{deep_fusion, xla_baseline_fusion, FusionPlan, GroupKind};
+use crate::fusion::{
+    deep_fusion, explore_fusion, xla_baseline_fusion, ExploreStats, FusionPlan, GroupKind,
+};
 use crate::gpusim::executor::{simulate_module, ModuleTiming, SimKernel};
 use crate::hlo::{fingerprint_module, Computation, Fingerprint, InstrId, Module, Opcode};
 use crate::schedule::{tune, PerfLibrary, Schedule, TunedPlan, TuningConfig};
@@ -46,6 +48,11 @@ pub enum Pass {
     Fingerprint,
     /// Partition the graph into kernel groups (baseline or deep fusion).
     Fusion,
+    /// Cost-guided refinement of the greedy plan: merge/split moves are
+    /// kept only when the modeled time improves, within the greedy
+    /// plan's launch budget. Runs for `FusionStitching` unless
+    /// `cost_fusion` is off (`--no-cost-fusion`); a no-op otherwise.
+    FusionExplore,
     /// Check the partition covers every instruction acyclically.
     ValidatePlan,
     /// Tune each generated group (reusing persisted tuned plans where
@@ -64,6 +71,7 @@ impl Pass {
         match self {
             Pass::Fingerprint => "fingerprint",
             Pass::Fusion => "fusion",
+            Pass::FusionExplore => "fusion-explore",
             Pass::ValidatePlan => "validate-plan",
             Pass::ScheduleAndEmit => "schedule-emit",
             Pass::Simulate => "simulate",
@@ -76,6 +84,7 @@ impl Pass {
 struct CompileState {
     fingerprint: Option<Fingerprint>,
     plan: Option<FusionPlan>,
+    explore: Option<ExploreStats>,
     kernels: Vec<KernelPlan>,
     generated_group_ids: Vec<usize>,
     sim: Vec<SimKernel>,
@@ -91,12 +100,13 @@ pub struct PassManager {
 }
 
 impl PassManager {
-    /// The standard five-pass pipeline.
+    /// The standard pass pipeline.
     pub fn standard() -> Self {
         PassManager {
             passes: vec![
                 Pass::Fingerprint,
                 Pass::Fusion,
+                Pass::FusionExplore,
                 Pass::ValidatePlan,
                 Pass::ScheduleAndEmit,
                 Pass::Simulate,
@@ -123,6 +133,7 @@ impl PassManager {
         let mut st = CompileState {
             fingerprint: None,
             plan: None,
+            explore: None,
             kernels: Vec::new(),
             generated_group_ids: Vec::new(),
             sim: Vec::new(),
@@ -144,6 +155,17 @@ impl PassManager {
                         FusionMode::XlaBaseline => xla_baseline_fusion(comp),
                         FusionMode::FusionStitching => deep_fusion(comp, lib, &cfg.deep).0,
                     });
+                }
+                Pass::FusionExplore => {
+                    if mode == FusionMode::FusionStitching && cfg.deep.cost_fusion {
+                        let plan = st
+                            .plan
+                            .take()
+                            .ok_or_else(|| anyhow!("fusion-explore needs the fusion pass"))?;
+                        let (refined, stats) = explore_fusion(comp, &plan, lib, &cfg.deep);
+                        st.plan = Some(refined);
+                        st.explore = Some(stats);
+                    }
                 }
                 Pass::ValidatePlan => {
                     self.plan_of(&st)?.validate(comp)?;
@@ -174,6 +196,7 @@ impl PassManager {
                 .fingerprint
                 .ok_or_else(|| anyhow!("pipeline ran without the fingerprint pass"))?,
             plan: st.plan.ok_or_else(|| anyhow!("pipeline ran without the fusion pass"))?,
+            explore: st.explore,
             kernels: st.kernels,
             generated_group_ids: st.generated_group_ids,
             timing: st.timing.ok_or_else(|| anyhow!("pipeline ran without the simulate pass"))?,
@@ -198,6 +221,7 @@ impl PassManager {
                     st.plan.as_ref().map_or(0, |p| p.groups.len())
                 }
             }
+            Pass::FusionExplore => st.plan.as_ref().map_or(0, |p| p.groups.len()),
             Pass::ValidatePlan => st.plan.as_ref().map_or(0, |p| p.groups.len()),
             Pass::ScheduleAndEmit => {
                 if before {
@@ -341,32 +365,30 @@ fn tuned_key(
 /// [`crate::coordinator::cache::CacheKey`], so plans tuned under one
 /// configuration are never adopted under another.
 pub(crate) fn config_digest(cfg: &PipelineConfig) -> u64 {
-    let text = format!(
-        "{:?}|{:?}|{}|{:?}",
-        cfg.deep.tuning, cfg.deep.elementwise, cfg.lib_efficiency, cfg.deep.device
-    );
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in text.as_bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01B3);
-    }
-    h
+    crate::schedule::perf_library::fnv1a(
+        format!(
+            "{:?}|{:?}|{}|{:?}|xf{}",
+            cfg.deep.tuning,
+            cfg.deep.elementwise,
+            cfg.lib_efficiency,
+            cfg.deep.device,
+            cfg.deep.cost_fusion as u8
+        )
+        .as_bytes(),
+    )
 }
 
 /// FNV-1a over the group's member instructions *including their ids and
 /// operand ids* — deliberately not renumbering-invariant (see
 /// [`tuned_key`]).
 fn group_digest(comp: &Computation, members: &HashSet<InstrId>) -> u64 {
-    fn mix(mut h: u64, v: u64) -> u64 {
-        for b in v.to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01B3);
-        }
-        h
+    use crate::schedule::perf_library::{fnv1a_fold, FNV_SEED};
+    fn mix(h: u64, v: u64) -> u64 {
+        fnv1a_fold(h, &v.to_le_bytes())
     }
     let mut ordered: Vec<InstrId> = members.iter().copied().collect();
     ordered.sort_unstable();
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h: u64 = FNV_SEED;
     for id in ordered {
         let i = comp.get(id);
         h = mix(h, id.0 as u64);
@@ -474,6 +496,7 @@ mod tests {
             vec![
                 "fingerprint",
                 "fusion",
+                "fusion-explore",
                 "validate-plan",
                 "schedule-emit",
                 "simulate",
@@ -569,6 +592,35 @@ mod tests {
             compile_module_traced(&m2, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
         assert_eq!(a.fingerprint, b.fingerprint, "twins share the structural fingerprint");
         assert_eq!(lib.tuned_hits(), 0, "but tuned plans must not transfer across numberings");
+    }
+
+    #[test]
+    fn explore_pass_runs_by_default_and_respects_the_escape_hatch() {
+        let (mut lib, cfg) = setup();
+        let (_, module) = models::by_name("Speech").unwrap();
+        let (on, _) =
+            compile_module_traced(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        assert!(on.explore.is_some(), "cost-guided exploration is on by default");
+
+        let mut off_cfg = cfg.clone();
+        off_cfg.deep.cost_fusion = false;
+        let (off, _) =
+            compile_module_traced(&module, FusionMode::FusionStitching, &mut lib, &off_cfg)
+                .unwrap();
+        assert!(off.explore.is_none(), "--no-cost-fusion must skip exploration");
+
+        // The acceptance bar, per module: modeled time never worse, and
+        // never more generated kernels than greedy.
+        assert!(on.timing.total_us() <= off.timing.total_us() + 1e-6);
+        assert!(
+            on.plan.generated_kernel_count(&module.entry)
+                <= off.plan.generated_kernel_count(&module.entry)
+        );
+
+        // Baseline mode never explores.
+        let (base, _) =
+            compile_module_traced(&module, FusionMode::XlaBaseline, &mut lib, &cfg).unwrap();
+        assert!(base.explore.is_none());
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use crate::codegen::KernelPlan;
 use crate::exec::StitchedExecutable;
-use crate::fusion::{DeepFusionConfig, FusionPlan};
+use crate::fusion::{DeepFusionConfig, ExploreStats, FusionPlan};
 use crate::gpusim::executor::ModuleTiming;
 use crate::hlo::{Fingerprint, Module};
 use crate::models::ModelMeta;
@@ -50,6 +50,9 @@ pub struct CompiledModule {
     /// Structural fingerprint of the source module — the cache identity.
     pub fingerprint: Fingerprint,
     pub plan: FusionPlan,
+    /// What cost-guided exploration did to the greedy plan (`None` when
+    /// the pass was skipped: baseline mode or `--no-cost-fusion`).
+    pub explore: Option<ExploreStats>,
     /// Kernel plans for generated (non-library) groups, aligned with
     /// `generated_group_ids`.
     pub kernels: Vec<KernelPlan>,

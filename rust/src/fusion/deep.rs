@@ -11,6 +11,7 @@ use super::consistency::ScheduleConsistencyChecker;
 use super::elementwise::{elementwise_fusion, eligible, ElementwiseFusionConfig};
 use super::plan::FusionPlan;
 use crate::analysis::{FramePartition, SpanAnalysis};
+use crate::codegen::shm_planner::plan_shared_memory;
 use crate::gpusim::DeviceConfig;
 use crate::hlo::{Computation, InstrId, Opcode};
 use crate::schedule::{PerfLibrary, TuningConfig};
@@ -22,6 +23,9 @@ pub struct DeepFusionConfig {
     /// Whether BatchMatMul ops join fused kernels — workload-dependent
     /// and left to the user in the paper (§2.1).
     pub fuse_batch_dot: bool,
+    /// Run the cost-guided exploration pass ([`super::explore`]) over
+    /// the greedy plan (on by default; `--no-cost-fusion` disables).
+    pub cost_fusion: bool,
     pub elementwise: ElementwiseFusionConfig,
     pub tuning: TuningConfig,
     pub device: DeviceConfig,
@@ -31,6 +35,7 @@ impl Default for DeepFusionConfig {
     fn default() -> Self {
         DeepFusionConfig {
             fuse_batch_dot: true,
+            cost_fusion: true,
             elementwise: ElementwiseFusionConfig::default(),
             tuning: TuningConfig::default(),
             device: DeviceConfig::pascal(),
@@ -46,6 +51,15 @@ pub struct DeepFusionStats {
     pub given_up: usize,
     pub schedule_rejections: usize,
     pub shm_rejections: usize,
+    /// With cost-guided fusion on, every completed multi-op group is
+    /// scored fused-vs-unfused through `gpusim::cost`: modeled time of
+    /// the stitched kernels…
+    pub modeled_fused_us: f64,
+    /// …vs the same members launched as standalone baseline kernels
+    /// (tuned per op, launch overhead each). The gap is the modeled
+    /// profit greedy fusion claims; the exploration pass then audits it
+    /// group by group.
+    pub modeled_unfused_us: f64,
 }
 
 /// Run deep fusion over `comp`, producing the kernel partition.
@@ -89,7 +103,7 @@ pub fn deep_fusion(
                     comp, &spans, frame, roof, seed.clone(), members, seed_cost,
                     &mut checker, &claimed, cfg, &mut stats,
                 );
-                finalize(comp, fused, &mut claimed, &mut groups);
+                finalize(comp, fused, &mut claimed, &mut groups, &mut checker, cfg, &mut stats);
             }
 
             // Step 2: every remaining fusable instruction in the layer
@@ -110,7 +124,7 @@ pub fn deep_fusion(
                     &claimed, cfg, &mut stats,
                 );
                 if fused.len() >= 2 {
-                    finalize(comp, fused, &mut claimed, &mut groups);
+                    finalize(comp, fused, &mut claimed, &mut groups, &mut checker, cfg, &mut stats);
                 } else {
                     // A seed that grew nothing stays a singleton kernel;
                     // leaving it unclaimed lets a *later* root layer pull
@@ -225,12 +239,17 @@ fn grow(
 }
 
 /// Claim the grown group and record it with its final root set (members
-/// whose values escape the group).
+/// whose values escape the group). When cost-guided fusion is on, every
+/// completed multi-op group is also scored fused-vs-unfused through
+/// `gpusim::cost` — the modeled profit the exploration pass audits.
 fn finalize(
     comp: &Computation,
     fused: HashSet<InstrId>,
     claimed: &mut HashSet<InstrId>,
     groups: &mut Vec<(Vec<InstrId>, Vec<InstrId>)>,
+    checker: &mut ScheduleConsistencyChecker<'_>,
+    cfg: &DeepFusionConfig,
+    stats: &mut DeepFusionStats,
 ) {
     let roots: Vec<InstrId> = {
         let mut r: Vec<InstrId> = fused
@@ -243,6 +262,32 @@ fn finalize(
         r.sort_unstable();
         r
     };
+    if fused.len() >= 2 && cfg.cost_fusion {
+        // Stats-only scoring, with the same model the explorer uses
+        // (tuned schedule + shared-memory residency) so the two report
+        // comparable numbers. The re-tune (against the final root set)
+        // must not leak into the candidate-rejection counters, which
+        // count *fusion decisions*, not bookkeeping.
+        let (sched_rej, shm_rej) = (checker.schedule_rejections, checker.shm_rejections);
+        let scored = checker.check_group(comp, &fused, &roots).and_then(|plan| {
+            plan_shared_memory(comp, &fused, &roots, &plan, &checker.dev)
+                .ok()
+                .map(|shm| (plan, shm.total_bytes))
+        });
+        checker.schedule_rejections = sched_rej;
+        checker.shm_rejections = shm_rej;
+        if let Some((plan, smem_bytes)) = scored {
+            let mut desc =
+                crate::codegen::kernel_plan::fused_kernel_desc(comp, &fused, &plan);
+            desc.smem_bytes = smem_bytes;
+            stats.modeled_fused_us += crate::gpusim::cost::kernel_time_us(&desc, &checker.dev);
+            stats.modeled_unfused_us += fused
+                .iter()
+                .filter(|&&id| !comp.get(id).opcode.is_free())
+                .map(|&id| checker.standalone_cost(comp, id))
+                .sum::<f64>();
+        }
+    }
     claimed.extend(fused.iter().copied());
     let mut members: Vec<InstrId> = fused.into_iter().collect();
     members.sort_unstable();
@@ -279,13 +324,22 @@ mod tests {
         let out = b.batch_dot(bc, v);
         let comp = b.finish(out);
 
-        let (plan, _) = run(&comp);
+        let (plan, stats) = run(&comp);
         plan.validate(&comp).unwrap();
         let deep_kernels = plan.generated_kernel_count(&comp);
         let baseline = xla_baseline_fusion(&comp);
         let base_kernels = baseline.generated_kernel_count(&comp);
         assert_eq!(deep_kernels, 1, "FusionStitching should stitch the whole pattern");
         assert!(base_kernels >= 3, "baseline needs several kernels, got {base_kernels}");
+        // Completed groups are scored fused-vs-unfused through the cost
+        // model; stitching the whole pattern must model as profitable.
+        assert!(stats.modeled_fused_us > 0.0);
+        assert!(
+            stats.modeled_fused_us < stats.modeled_unfused_us,
+            "fused {} !< unfused {}",
+            stats.modeled_fused_us,
+            stats.modeled_unfused_us
+        );
     }
 
     #[test]

@@ -1,0 +1,563 @@
+//! Cost-guided fusion exploration — profitability-driven refinement of
+//! the greedy deep-fusion plan.
+//!
+//! Algorithm 1 grows groups greedily: it admits an instruction whenever
+//! `SchdConsistent` accepts it. The follow-up FusionStitching work
+//! (arXiv:2009.10924) makes fusion decisions cost-driven instead: every
+//! candidate grouping is scored fused-vs-unfused through the analytical
+//! GPU model, and the plan is refined until the modeled time stops
+//! improving. This module implements that exploration loop over a
+//! completed greedy plan:
+//!
+//! - **merge**: adjacent producer/consumer groups are merged when the
+//!   merged kernel's modeled time (launch overhead + tuned
+//!   `kernel_exec_time_us`, shared-memory residency included) beats the
+//!   two separate kernels;
+//! - **split**: a group is split at a span-layer boundary when the two
+//!   halves are modeled faster than the whole — but only while the plan
+//!   stays within the greedy plan's launch budget, so a cost-guided
+//!   plan never executes more kernel launches than the greedy one;
+//! - **memoization**: every evaluated grouping's modeled cost is stored
+//!   in the [`PerfLibrary`] keyed by the group's structural fingerprint
+//!   (device signature folded in by the library), so serving recompiles
+//!   replay exploration verdicts instead of re-tuning every candidate.
+//!
+//! The refined plan is re-validated by the driver's `validate-plan`
+//! pass; moves are constructed to preserve the partition invariants
+//! (same-frame groups, inter-group acyclicity) by themselves.
+
+use super::deep::DeepFusionConfig;
+use super::plan::{FusionPlan, GroupKind};
+use crate::analysis::SpanAnalysis;
+use crate::codegen::kernel_plan::fused_kernel_desc;
+use crate::codegen::shm_planner::plan_shared_memory;
+use crate::gpusim::cost::kernel_time_us;
+use crate::gpusim::DeviceConfig;
+use crate::hlo::{Computation, InstrId, Opcode};
+use crate::schedule::{tune, PerfLibrary, TuningConfig};
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+/// Bound on refinement rounds: each round retries merges and splits over
+/// the whole plan; small graphs converge in one or two.
+const MAX_ROUNDS: usize = 3;
+
+/// What exploration did to the greedy plan.
+#[derive(Debug, Clone, Default)]
+pub struct ExploreStats {
+    pub merges_tried: usize,
+    pub merges_accepted: usize,
+    pub splits_tried: usize,
+    pub splits_accepted: usize,
+    /// Group-cost evaluations answered by the perf-library memo.
+    pub memo_hits: u64,
+    /// Modeled time of the plan's generated kernels before/after
+    /// refinement (groups the model cannot schedule are excluded from
+    /// both sums, so the two are comparable).
+    pub modeled_before_us: f64,
+    pub modeled_after_us: f64,
+}
+
+/// Structural fingerprint of a fused group: member opcodes, shapes,
+/// frames and internal/external connectivity, independent of absolute
+/// instruction ids (members are canonicalized to their sorted-id rank).
+/// Two structurally identical groups — e.g. the same attention block
+/// recompiled in a serving process — share a fingerprint, which is what
+/// lets the exploration memo carry across compilations.
+pub fn group_fingerprint(comp: &Computation, members: &HashSet<InstrId>) -> u64 {
+    use crate::schedule::perf_library::{fnv1a_fold, FNV_SEED};
+    fn mix(h: u64, v: u64) -> u64 {
+        fnv1a_fold(h, &v.to_le_bytes())
+    }
+    let mut ordered: Vec<InstrId> = members.iter().copied().collect();
+    ordered.sort_unstable();
+    let rank: HashMap<InstrId, u64> =
+        ordered.iter().enumerate().map(|(k, &id)| (id, k as u64)).collect();
+    let mut h: u64 = FNV_SEED;
+    for &id in &ordered {
+        let i = comp.get(id);
+        h = mix(h, i.opcode as u64);
+        h = mix(h, i.frame as u64);
+        // Attrs (reduce dims/kind, transpose perm, broadcast dims, …)
+        // change how a group schedules and costs — twins differing only
+        // in attrs must not share a memo entry.
+        h = mix(h, crate::schedule::perf_library::fnv1a(format!("{:?}", i.attrs).as_bytes()));
+        h = mix(h, i.shape.dtype as u64);
+        h = mix(h, i.shape.dims.len() as u64);
+        for &d in &i.shape.dims {
+            h = mix(h, d as u64);
+        }
+        for &op in &i.operands {
+            match rank.get(&op) {
+                Some(&k) => {
+                    h = mix(h, 1);
+                    h = mix(h, k);
+                }
+                None => {
+                    let o = comp.get(op);
+                    h = mix(h, 2);
+                    h = mix(h, o.shape.dtype as u64);
+                    h = mix(h, o.shape.dims.len() as u64);
+                    for &d in &o.shape.dims {
+                        h = mix(h, d as u64);
+                    }
+                }
+            }
+        }
+        // Root-ness (whether the value escapes) changes the kernel's
+        // DRAM traffic, so it is part of the identity.
+        let escapes =
+            comp.users(id).iter().any(|u| !members.contains(u)) || comp.users(id).is_empty();
+        h = mix(h, escapes as u64);
+    }
+    h
+}
+
+/// Output-producing members of a member set (values that escape).
+fn roots_of(comp: &Computation, members: &HashSet<InstrId>) -> Vec<InstrId> {
+    let mut r: Vec<InstrId> = members
+        .iter()
+        .copied()
+        .filter(|&id| {
+            comp.users(id).iter().any(|u| !members.contains(u)) || comp.users(id).is_empty()
+        })
+        .collect();
+    r.sort_unstable();
+    r
+}
+
+/// The exploration engine: owns the tuning resources and the per-run
+/// cost cache layered over the persistent perf-library memo.
+struct Explorer<'a> {
+    lib: &'a mut PerfLibrary,
+    tuning: TuningConfig,
+    cfg_sig: u64,
+    dev: DeviceConfig,
+    stats: ExploreStats,
+    /// In-process cache: fingerprint → modeled cost (INFINITY when the
+    /// grouping is unschedulable).
+    cache: HashMap<u64, f64>,
+}
+
+impl<'a> Explorer<'a> {
+    fn new(lib: &'a mut PerfLibrary, cfg: &DeepFusionConfig) -> Self {
+        // The modeled cost depends on the tuning space AND on the
+        // device the pipeline models with (`cfg.device`), which need
+        // not be the device the library was constructed under — so the
+        // memo key carries digests of both alongside the fingerprint.
+        let sig = crate::schedule::perf_library::fnv1a(
+            format!("{:?}|{:?}", cfg.tuning, cfg.device).as_bytes(),
+        );
+        Explorer {
+            lib,
+            tuning: cfg.tuning.clone(),
+            cfg_sig: sig,
+            dev: cfg.device.clone(),
+            stats: ExploreStats::default(),
+            cache: HashMap::new(),
+        }
+    }
+
+    /// Modeled wall time of `members` as one fused kernel: one launch
+    /// overhead plus the tuned schedule's execution time with the
+    /// group's shared-memory residency. `f64::INFINITY` when no
+    /// schedule (or shared-memory plan) exists — such groupings are
+    /// never created and existing ones are left untouched (the driver
+    /// falls back to per-op baseline kernels for them).
+    fn cost_of(&mut self, comp: &Computation, members: &HashSet<InstrId>) -> f64 {
+        let fp = group_fingerprint(comp, members);
+        if let Some(&v) = self.cache.get(&fp) {
+            return v;
+        }
+        let key = format!("xg{:016x}|t{:016x}", fp, self.cfg_sig);
+        if let Some(v) = self.lib.explore_lookup(&key) {
+            self.stats.memo_hits += 1;
+            self.cache.insert(fp, v);
+            return v;
+        }
+        let roots = roots_of(comp, members);
+        let v = match tune(comp, members, &roots, self.lib, &self.tuning) {
+            Some(plan) => match plan_shared_memory(comp, members, &roots, &plan, &self.dev) {
+                Ok(shm) => {
+                    let mut desc = fused_kernel_desc(comp, members, &plan);
+                    desc.smem_bytes = shm.total_bytes;
+                    kernel_time_us(&desc, &self.dev)
+                }
+                Err(_) => f64::INFINITY,
+            },
+            None => f64::INFINITY,
+        };
+        self.lib.explore_insert(&key, v);
+        self.cache.insert(fp, v);
+        v
+    }
+}
+
+/// Can this group participate in merge/split moves at all?
+fn movable(comp: &Computation, members: &HashSet<InstrId>, cfg: &DeepFusionConfig) -> bool {
+    members.iter().all(|&id| {
+        let op = comp.get(id).opcode;
+        op.is_fusable() && (op != Opcode::BatchDot || cfg.fuse_batch_dot)
+    })
+}
+
+/// Would merging producer group `gi` into consumer group `gj` close a
+/// dependency cycle through a third group? True when some external
+/// operand of `gj` transitively depends on a member of `gi`.
+fn merge_creates_cycle(
+    comp: &Computation,
+    gi: &HashSet<InstrId>,
+    gj: &HashSet<InstrId>,
+) -> bool {
+    let producers: Vec<InstrId> = gi.iter().copied().collect();
+    for &m in gj {
+        for &op in &comp.get(m).operands {
+            if gi.contains(&op) || gj.contains(&op) {
+                continue;
+            }
+            if producers.iter().any(|&a| comp.depends_on(op, a)) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Refine `plan` (the greedy deep-fusion output) with cost-guided
+/// merge/split moves. The returned plan launches at most as many
+/// generated kernels as the input and never models slower.
+pub fn explore_fusion(
+    comp: &Computation,
+    plan: &FusionPlan,
+    lib: &mut PerfLibrary,
+    cfg: &DeepFusionConfig,
+) -> (FusionPlan, ExploreStats) {
+    let spans = SpanAnalysis::run(comp);
+    let mut ex = Explorer::new(lib, cfg);
+
+    // Working set: every non-library group (library calls are pinned —
+    // they are the roofs fusion may not cross). `None` = merged away.
+    let mut groups: Vec<Option<HashSet<InstrId>>> = plan
+        .groups
+        .iter()
+        .filter(|g| g.kind != GroupKind::Library)
+        .map(|g| Some(g.members.clone()))
+        .collect();
+    // The launch budget: cost-guided plans must never execute more
+    // generated launches than the greedy plan.
+    let budget = groups.iter().flatten().count();
+    let mut live = budget;
+
+    for members in groups.iter().flatten() {
+        let c = ex.cost_of(comp, members);
+        if c.is_finite() {
+            ex.stats.modeled_before_us += c;
+        }
+    }
+
+    for _round in 0..MAX_ROUNDS {
+        let mut changed = false;
+
+        // ---- merge pass: producer/consumer adjacency ----
+        //
+        // Each sweep walks every consumer group once; an accepted merge
+        // updates the owner map in place and moves on (the enlarged
+        // group is revisited on the next sweep), so the pass costs
+        // O(sweeps × pairs) instead of restarting the scan per merge.
+        loop {
+            let mut merged_one = false;
+            let mut owner: HashMap<InstrId, usize> = groups
+                .iter()
+                .enumerate()
+                .flat_map(|(gi, g)| {
+                    g.iter().flat_map(move |m| m.iter().map(move |&id| (id, gi)))
+                })
+                .collect();
+            let mut order: Vec<usize> = (0..groups.len()).filter(|&g| groups[g].is_some()).collect();
+            order.sort_by_key(|&g| groups[g].as_ref().unwrap().iter().min().copied());
+            for &j in &order {
+                let Some(gj) = groups[j].clone() else { continue };
+                if !movable(comp, &gj, cfg) {
+                    continue;
+                }
+                let mut consumed: Vec<InstrId> = gj.iter().copied().collect();
+                consumed.sort_unstable();
+                let mut feeders: BTreeSet<usize> = BTreeSet::new();
+                for &m in &consumed {
+                    for &op in &comp.get(m).operands {
+                        if let Some(&i) = owner.get(&op) {
+                            if i != j {
+                                feeders.insert(i);
+                            }
+                        }
+                    }
+                }
+                for i in feeders {
+                    let Some(gi) = groups[i].clone() else { continue };
+                    if !movable(comp, &gi, cfg) {
+                        continue;
+                    }
+                    let fi = comp.get(*gi.iter().next().unwrap()).frame;
+                    let fj = comp.get(*gj.iter().next().unwrap()).frame;
+                    if fi != fj {
+                        continue;
+                    }
+                    ex.stats.merges_tried += 1;
+                    if merge_creates_cycle(comp, &gi, &gj) {
+                        continue;
+                    }
+                    // Both sides must themselves be schedulable: a group
+                    // the tuner rejects runs on the driver's fallback
+                    // plan, whose simulated time the model never saw —
+                    // comparing against `∞` would accept any merge and
+                    // could regress the real modeled total.
+                    let c_apart = ex.cost_of(comp, &gi) + ex.cost_of(comp, &gj);
+                    if !c_apart.is_finite() {
+                        continue;
+                    }
+                    let merged: HashSet<InstrId> = gi.union(&gj).copied().collect();
+                    let c_merged = ex.cost_of(comp, &merged);
+                    if c_merged + 1e-9 < c_apart {
+                        for &id in &gi {
+                            owner.insert(id, j);
+                        }
+                        groups[j] = Some(merged);
+                        groups[i] = None;
+                        live -= 1;
+                        ex.stats.merges_accepted += 1;
+                        merged_one = true;
+                        changed = true;
+                        // This consumer's member set changed — move on;
+                        // further feeders are picked up next sweep.
+                        break;
+                    }
+                }
+            }
+            if !merged_one {
+                break;
+            }
+        }
+
+        // ---- split pass: span-layer cuts, within the launch budget ----
+        for g in 0..groups.len() {
+            if live >= budget {
+                break; // no headroom: a split would exceed greedy's launches
+            }
+            let Some(members) = groups[g].clone() else { continue };
+            if members.len() < 2 || !movable(comp, &members, cfg) {
+                continue;
+            }
+            let whole = ex.cost_of(comp, &members);
+            if !whole.is_finite() {
+                continue;
+            }
+            // Candidate cuts: between distinct span layers. Producers
+            // carry strictly larger spans than their users, so every
+            // cross-cut edge points high→low and both halves stay
+            // acyclic against the rest of the plan.
+            let cuts: BTreeSet<u32> = members.iter().map(|&id| spans.span_of(id)).collect();
+            for &cut in cuts.iter().skip(1) {
+                ex.stats.splits_tried += 1;
+                let hi: HashSet<InstrId> =
+                    members.iter().copied().filter(|&id| spans.span_of(id) >= cut).collect();
+                let lo: HashSet<InstrId> =
+                    members.iter().copied().filter(|&id| spans.span_of(id) < cut).collect();
+                let has_kernel = |part: &HashSet<InstrId>| {
+                    part.iter().any(|&id| !comp.get(id).opcode.is_free())
+                };
+                if hi.is_empty() || lo.is_empty() || !has_kernel(&hi) || !has_kernel(&lo) {
+                    continue;
+                }
+                // Spans order edges within one frame only; a detour
+                // through another frame (lo → X → hi) would still close
+                // a cycle against the internal hi → lo edges, so run
+                // the same external-dependency check merges use.
+                if merge_creates_cycle(comp, &lo, &hi) {
+                    continue;
+                }
+                let c_hi = ex.cost_of(comp, &hi);
+                let c_lo = ex.cost_of(comp, &lo);
+                if c_hi.is_finite() && c_lo.is_finite() && c_hi + c_lo + 1e-9 < whole {
+                    groups[g] = Some(hi);
+                    groups.push(Some(lo));
+                    live += 1;
+                    ex.stats.splits_accepted += 1;
+                    changed = true;
+                    break;
+                }
+            }
+        }
+
+        if !changed {
+            break;
+        }
+    }
+
+    let final_groups: Vec<(Vec<InstrId>, Vec<InstrId>)> = {
+        let mut with_key: Vec<(InstrId, Vec<InstrId>, Vec<InstrId>)> = groups
+            .into_iter()
+            .flatten()
+            .map(|members| {
+                let roots = roots_of(comp, &members);
+                let mut m: Vec<InstrId> = members.iter().copied().collect();
+                m.sort_unstable();
+                (m[0], m, roots)
+            })
+            .collect();
+        // Deterministic group ids: order by least member.
+        with_key.sort_by_key(|(k, _, _)| *k);
+        with_key.into_iter().map(|(_, m, r)| (m, r)).collect()
+    };
+    for (members, _) in &final_groups {
+        let set: HashSet<InstrId> = members.iter().copied().collect();
+        let c = ex.cost_of(comp, &set);
+        if c.is_finite() {
+            ex.stats.modeled_after_us += c;
+        }
+    }
+    let stats = ex.stats;
+    let refined = FusionPlan::from_groups(comp, final_groups);
+    debug_assert!(refined.validate(comp).is_ok());
+    (refined, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fusion::deep::deep_fusion;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Shape};
+
+    fn cfg() -> DeepFusionConfig {
+        DeepFusionConfig::default()
+    }
+
+    #[test]
+    fn merges_adjacent_singletons_when_profitable() {
+        // Two launch-bound singleton kernels in a chain: one merged
+        // kernel saves a launch and the boundary round trip.
+        let mut b = GraphBuilder::new("chain");
+        let x = b.param("x", Shape::f32(&[64, 64]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let comp = b.finish(t);
+        // Hand-build the unfused plan (each op its own kernel).
+        let plan = FusionPlan::from_groups(&comp, vec![]);
+        assert_eq!(plan.generated_kernel_count(&comp), 2);
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let (refined, stats) = explore_fusion(&comp, &plan, &mut lib, &cfg());
+        refined.validate(&comp).unwrap();
+        assert_eq!(refined.generated_kernel_count(&comp), 1, "chain should merge");
+        assert!(stats.merges_accepted >= 1);
+        assert!(stats.modeled_after_us < stats.modeled_before_us);
+    }
+
+    #[test]
+    fn never_exceeds_greedy_launch_budget() {
+        // Whatever exploration does, the refined plan may not launch
+        // more generated kernels than its input.
+        let mut b = GraphBuilder::new("mix");
+        let x = b.param("x", Shape::f32(&[4096, 64]));
+        let e = b.exp(x);
+        let r = b.reduce(e, &[0, 1], ReduceKind::Sum); // scalar root
+        let t = b.tanh(r);
+        let comp = b.finish(t);
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let (greedy, _) = deep_fusion(&comp, &mut lib, &cfg());
+        let before = greedy.generated_kernel_count(&comp);
+        let (refined, _) = explore_fusion(&comp, &greedy, &mut lib, &cfg());
+        refined.validate(&comp).unwrap();
+        assert!(
+            refined.generated_kernel_count(&comp) <= before,
+            "{} > {}",
+            refined.generated_kernel_count(&comp),
+            before
+        );
+    }
+
+    #[test]
+    fn split_rescues_a_serialized_group_when_budget_allows() {
+        // A scalar-rooted reduce pins its group to one block; with a
+        // heavy transcendental chain fused in, all that compute runs at
+        // ~2% occupancy and the modeled time explodes. Splitting the
+        // chain off lets it run at full occupancy for one extra launch.
+        // A disconnected mergeable chain provides the launch headroom
+        // (the budget guarantees refined launches ≤ greedy launches).
+        let mut b = GraphBuilder::new("rescue");
+        let x = b.param("x", Shape::f32(&[2048, 2048]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let g = b.sigmoid(t);
+        let r = b.reduce(g, &[0, 1], ReduceKind::Sum); // scalar sink
+        let _ = r;
+        let y = b.param("y", Shape::f32(&[64]));
+        let a1 = b.exp(y);
+        let a2 = b.tanh(a1);
+        let out = b.add(a2, a2);
+        let comp = b.finish(out);
+
+        // Hand-build a bad plan: {e, t, g, r} fused at one block; the
+        // a1/a2/out chain left as singletons (merge fodder).
+        let members = vec![(vec![e, t, g, r], vec![r])];
+        let plan = FusionPlan::from_groups(&comp, members);
+        let before = plan.generated_kernel_count(&comp);
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let (refined, stats) = explore_fusion(&comp, &plan, &mut lib, &cfg());
+        refined.validate(&comp).unwrap();
+        assert!(refined.generated_kernel_count(&comp) <= before);
+        assert!(stats.merges_accepted >= 1, "chain should merge: {stats:?}");
+        // The serialized group should be split once merge headroom
+        // exists (the one-block kernel dominates the modeled time).
+        assert!(stats.splits_accepted >= 1, "serialized group should split: {stats:?}");
+        assert!(stats.modeled_after_us < stats.modeled_before_us);
+    }
+
+    #[test]
+    fn exploration_memoizes_group_costs() {
+        let mut b = GraphBuilder::new("memo");
+        let x = b.param("x", Shape::f32(&[64, 64]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        let comp = b.finish(t);
+        let plan = FusionPlan::from_groups(&comp, vec![]);
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let (_, first) = explore_fusion(&comp, &plan, &mut lib, &cfg());
+        assert_eq!(first.memo_hits, 0, "cold run misses the memo");
+        assert!(lib.explore_len() > 0, "cold run must populate the memo");
+        let (_, second) = explore_fusion(&comp, &plan, &mut lib, &cfg());
+        assert!(second.memo_hits > 0, "recompile must replay memoized verdicts");
+    }
+
+    #[test]
+    fn group_fingerprint_is_id_invariant() {
+        // Structural twins with different instruction numbering share a
+        // group fingerprint — the property the serving memo relies on.
+        let mut b1 = GraphBuilder::new("a");
+        let x = b1.param("x", Shape::f32(&[32, 16]));
+        let e1 = b1.exp(x);
+        let t1 = b1.tanh(e1);
+        let c1 = b1.finish(t1);
+
+        let mut b2 = GraphBuilder::new("b");
+        let p = b2.param("p", Shape::f32(&[8]));
+        let pad = b2.exp(p); // shift ids
+        let x2 = b2.param("x", Shape::f32(&[32, 16]));
+        let e2 = b2.exp(x2);
+        let t2 = b2.tanh(e2);
+        let a = b2.add(pad, pad);
+        let _ = a;
+        let c2 = b2.finish(t2);
+
+        let g1: HashSet<InstrId> = [e1, t1].into_iter().collect();
+        let g2: HashSet<InstrId> = [e2, t2].into_iter().collect();
+        assert_eq!(group_fingerprint(&c1, &g1), group_fingerprint(&c2, &g2));
+
+        // and a different shape changes it
+        let mut b3 = GraphBuilder::new("c");
+        let x3 = b3.param("x", Shape::f32(&[32, 32]));
+        let e3 = b3.exp(x3);
+        let t3 = b3.tanh(e3);
+        let c3 = b3.finish(t3);
+        let g3: HashSet<InstrId> = [e3, t3].into_iter().collect();
+        assert_ne!(group_fingerprint(&c1, &g1), group_fingerprint(&c3, &g3));
+    }
+}

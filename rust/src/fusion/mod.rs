@@ -10,14 +10,19 @@
 //!   feasibility gate, including the §5.1.2 feedback loop.
 //! - [`deep`] — the layered subgraph fusion of Algorithm 1 driven by
 //!   Work/Span layers.
+//! - [`explore`] — cost-guided merge/split refinement of the greedy
+//!   plan (the arXiv:2009.10924 exploration loop), memoized in the
+//!   performance library.
 
 pub mod baseline;
 pub mod consistency;
 pub mod deep;
 pub mod elementwise;
+pub mod explore;
 pub mod plan;
 
 pub use baseline::xla_baseline_fusion;
 pub use consistency::ScheduleConsistencyChecker;
-pub use deep::{deep_fusion, DeepFusionConfig};
+pub use deep::{deep_fusion, DeepFusionConfig, DeepFusionStats};
+pub use explore::{explore_fusion, group_fingerprint, ExploreStats};
 pub use plan::{FusionGroup, FusionPlan, GroupKind};

@@ -36,7 +36,7 @@ impl KernelDesc {
 /// Execution-only time (no launch overhead) — the quantity the paper's
 /// performance library stores per schedule key.
 pub fn kernel_exec_time_us(desc: &KernelDesc, dev: &DeviceConfig) -> f64 {
-    let occ = dev.occupancy(desc.blocks, desc.threads);
+    let occ = dev.occupancy(desc.blocks, desc.threads, desc.smem_bytes);
     let mem_bytes = (desc.bytes_read + desc.bytes_written) as f64;
     let eff_bw = dev.dram_bw_bytes_per_us * dev.bw_efficiency * desc.coalescing.clamp(0.05, 1.0);
     // Memory system saturates only with enough parallelism in flight:
@@ -111,6 +111,18 @@ mod tests {
         d.coalescing = 0.4;
         let bad = kernel_exec_time_us(&d, &dev);
         assert!(bad > 2.0 * good);
+    }
+
+    #[test]
+    fn smem_heavy_kernels_cost_more() {
+        // The occupancy clamp must reach the cost: same traffic, same
+        // grid, but 20 KB/block strangles residency (3 blocks/SM).
+        let dev = DeviceConfig::pascal();
+        let mut d = desc(64 * 1024 * 1024, 4096);
+        let light = kernel_exec_time_us(&d, &dev);
+        d.smem_bytes = 20 * 1024;
+        let heavy = kernel_exec_time_us(&d, &dev);
+        assert!(heavy > light, "heavy {heavy} vs light {light}");
     }
 
     #[test]

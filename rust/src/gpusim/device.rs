@@ -63,19 +63,37 @@ impl DeviceConfig {
         self.sm_count * self.cores_per_sm
     }
 
+    /// How many blocks of a kernel using `smem_bytes` of shared memory
+    /// can be resident on one SM at once. Shared memory is the limiter
+    /// FusionStitching actually stresses: stitched kernels trade DRAM
+    /// traffic for per-block shared buffers.
+    pub fn resident_blocks_per_sm(&self, smem_bytes: usize) -> u64 {
+        let by_smem = if smem_bytes == 0 {
+            self.max_blocks_per_sm as u64
+        } else {
+            ((self.shared_mem_per_sm / smem_bytes) as u64).max(1)
+        };
+        by_smem.min(self.max_blocks_per_sm as u64)
+    }
+
     /// Fraction of the machine kept busy by `blocks` thread blocks of
-    /// `threads` threads each. Small grids underutilize (the motivation
-    /// for enlarging kernel granularity).
+    /// `threads` threads each, each holding `smem_bytes` of shared
+    /// memory. Small grids underutilize (the motivation for enlarging
+    /// kernel granularity).
     ///
     /// Model: SM *coverage* (each resident block occupies one SM) scaled
     /// by a latency-hiding bonus (more resident warps per SM hide more
     /// memory latency, up to the 64-slot limit) and a thread-count
     /// efficiency (blocks below ~4 warps cannot fill the FP32 pipes).
-    pub fn occupancy(&self, blocks: u64, threads: u32) -> f64 {
+    /// Shared memory caps how many blocks an SM can host concurrently,
+    /// so smem-heavy kernels keep fewer warps in flight.
+    pub fn occupancy(&self, blocks: u64, threads: u32, smem_bytes: usize) -> f64 {
         let coverage = (blocks as f64 / self.sm_count as f64).min(1.0);
         let warps_per_block = (threads.max(1)).div_ceil(self.warp_size) as f64;
+        let resident =
+            blocks.min(self.sm_count as u64 * self.resident_blocks_per_sm(smem_bytes));
         let warp_slots = (self.sm_count as f64) * 64.0;
-        let warp_occ = ((blocks as f64 * warps_per_block) / warp_slots).min(1.0);
+        let warp_occ = ((resident as f64 * warps_per_block) / warp_slots).min(1.0);
         let thread_eff = (threads as f64 / 128.0).clamp(0.25, 1.0);
         (coverage * (0.5 + 0.5 * warp_occ) * thread_eff).clamp(1e-4, 1.0)
     }
@@ -96,12 +114,37 @@ mod tests {
     #[test]
     fn occupancy_monotone_in_blocks() {
         let d = DeviceConfig::pascal();
-        let o1 = d.occupancy(1, 256);
-        let o8 = d.occupancy(8, 256);
-        let o1000 = d.occupancy(1000, 256);
-        let o100k = d.occupancy(100_000, 256);
+        let o1 = d.occupancy(1, 256, 0);
+        let o8 = d.occupancy(8, 256, 0);
+        let o1000 = d.occupancy(1000, 256, 0);
+        let o100k = d.occupancy(100_000, 256, 0);
         assert!(o1 < o8 && o8 < o1000);
         assert!(o1000 <= o100k);
         assert!(o100k <= 1.0);
+    }
+
+    #[test]
+    fn high_smem_kernel_scores_lower_occupancy_than_low_smem_twin() {
+        // Regression: `KernelDesc.smem_bytes` must constrain occupancy.
+        // At 20 KB/block only 3 blocks fit a 64 KB SM, so a large grid
+        // keeps far fewer warps in flight than its smem-free twin.
+        let d = DeviceConfig::pascal();
+        let low = d.occupancy(4096, 64, 0);
+        let high = d.occupancy(4096, 64, 20 * 1024);
+        assert!(
+            high < low,
+            "smem-heavy kernel must lose occupancy: {high} vs {low}"
+        );
+        // tiny allocations leave residency unconstrained
+        assert_eq!(d.occupancy(4096, 64, 512), low);
+    }
+
+    #[test]
+    fn resident_blocks_capped_by_smem() {
+        let d = DeviceConfig::pascal();
+        assert_eq!(d.resident_blocks_per_sm(0), d.max_blocks_per_sm as u64);
+        assert_eq!(d.resident_blocks_per_sm(20 * 1024), 3);
+        // a block demanding more than the SM holds still "runs" alone
+        assert_eq!(d.resident_blocks_per_sm(128 * 1024), 1);
     }
 }

@@ -1,11 +1,15 @@
 //! FusionStitching CLI — the leader entrypoint.
 //!
 //! ```text
-//! fusion-stitching report [--perf-lib <path>]        # Figs 6/7/8 + Table 3 over Table 2
-//! fusion-stitching compile <model|file.hlo> [--mode baseline|stitching] [--ir]
+//! fusion-stitching report [--perf-lib <path>] [--no-cost-fusion]
+//! fusion-stitching compile <model|file.hlo> [--mode baseline|stitching] [--ir] [--no-cost-fusion]
 //! fusion-stitching corpus [--models N]               # Fig. 1 percentile table
 //! fusion-stitching serve [--requests N]              # NMT online serving demo
 //! ```
+//!
+//! `--no-cost-fusion` disables the cost-guided fusion-exploration pass
+//! (merge/split refinement of the greedy plan), reverting to pure
+//! greedy deep fusion.
 //!
 //! (Hand-rolled argument parsing: the offline image carries no clap.)
 
@@ -51,9 +55,16 @@ fn perf_library(args: &[String]) -> PerfLibrary {
     }
 }
 
+/// The shared pipeline configuration, honoring `--no-cost-fusion`.
+fn pipeline_config(args: &[String]) -> PipelineConfig {
+    let mut cfg = PipelineConfig::default();
+    cfg.deep.cost_fusion = !args.iter().any(|a| a == "--no-cost-fusion");
+    cfg
+}
+
 fn cmd_report(args: &[String]) -> i32 {
     let mut lib = perf_library(args);
-    let cfg = PipelineConfig::default();
+    let cfg = pipeline_config(args);
     let mut reports = Vec::new();
     for (meta, module) in models::all_benchmarks() {
         match evaluate(&meta, &module, &mut lib, &cfg) {
@@ -162,7 +173,7 @@ fn cmd_compile(args: &[String]) -> i32 {
         &module,
         mode,
         &mut lib,
-        &PipelineConfig::default(),
+        &pipeline_config(args),
     ) {
         Ok((compiled, trace)) => {
             println!(
@@ -174,6 +185,18 @@ fn cmd_compile(args: &[String]) -> i32 {
                 compiled.timing.total_us()
             );
             println!("fingerprint: {}", compiled.fingerprint);
+            if let Some(x) = &compiled.explore {
+                println!(
+                    "explore: {} merges + {} splits accepted ({} / {} tried), modeled {:.1} -> {:.1} us, memo hits {}",
+                    x.merges_accepted,
+                    x.splits_accepted,
+                    x.merges_tried,
+                    x.splits_tried,
+                    x.modeled_before_us,
+                    x.modeled_after_us,
+                    x.memo_hits
+                );
+            }
             if args.iter().any(|a| a == "--passes") {
                 println!("{trace}");
             }
@@ -254,7 +277,7 @@ fn cmd_serve(args: &[String]) -> i32 {
     // Compile-once serving: every batch routes through the compilation
     // cache for the NMT module; the first pays fusion+tuning, the rest hit.
     let compile = models::by_name("NMT").map(|(meta, module)| {
-        let mut pipeline = PipelineConfig::default();
+        let mut pipeline = pipeline_config(args);
         pipeline.deep.fuse_batch_dot = meta.fuse_batch_dot;
         CompileOptions {
             module,

@@ -17,12 +17,42 @@ use crate::hlo::{Computation, InstrId, Opcode};
 use std::collections::HashMap;
 use std::path::Path;
 
-/// Persistent on-disk format: per-schedule kernel times plus whole
-/// tuned group plans keyed by fingerprint-derived keys.
+/// Persistent on-disk format: per-schedule kernel times, whole tuned
+/// group plans keyed by fingerprint-derived keys, and memoized fusion-
+/// exploration group costs.
 #[derive(Debug, Default)]
 struct Store {
     entries: HashMap<String, f64>,
     tuned: HashMap<String, TunedPlan>,
+    explored: HashMap<String, f64>,
+}
+
+/// FNV-1a offset basis — the seed every cache/memo key in the pipeline
+/// hashes from.
+pub const FNV_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// One FNV-1a folding step over a byte string, continuing from `h`.
+/// Centralized (with [`fnv1a`]) so the fold can never diverge between
+/// key producers: config digests, device signatures, group fingerprints.
+pub fn fnv1a_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// FNV-1a over a byte string, from the standard seed.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_fold(FNV_SEED, bytes)
+}
+
+/// Signature of the device a library entry was produced under. Folded
+/// into every persisted key: a library saved under one [`DeviceConfig`]
+/// must never silently serve schedules or costs after a device change —
+/// mismatched entries simply read as misses.
+pub fn device_signature(dev: &DeviceConfig) -> u64 {
+    fnv1a(format!("{dev:?}").as_bytes())
 }
 
 /// The performance library. Cheap to clone-by-reference; interior state
@@ -31,20 +61,35 @@ struct Store {
 pub struct PerfLibrary {
     store: Store,
     dev: DeviceConfig,
+    dev_sig: u64,
     hits: u64,
     misses: u64,
     tuned_hits: u64,
+    explore_hits: u64,
 }
 
 impl PerfLibrary {
     pub fn new(dev: DeviceConfig) -> Self {
-        PerfLibrary { store: Store::default(), dev, hits: 0, misses: 0, tuned_hits: 0 }
+        let dev_sig = device_signature(&dev);
+        PerfLibrary {
+            store: Store::default(),
+            dev,
+            dev_sig,
+            hits: 0,
+            misses: 0,
+            tuned_hits: 0,
+            explore_hits: 0,
+        }
     }
 
     /// Load from permanent storage (system initialization, §4.4).
     /// Missing file → empty library (warmup phase). Format: one
     /// `key\tmicroseconds` entry per line, plus `T\t…` lines carrying
-    /// persisted tuned plans (see [`PerfLibrary::tuned_insert`]).
+    /// persisted tuned plans (see [`PerfLibrary::tuned_insert`]) and
+    /// `E\t…` lines carrying memoized exploration costs. Every key
+    /// embeds the [`device_signature`] it was produced under, so a file
+    /// written for a different device loads cleanly but answers every
+    /// lookup with a miss.
     pub fn load(path: &Path, dev: DeviceConfig) -> Self {
         let mut store = Store::default();
         if let Ok(text) = std::fs::read_to_string(path) {
@@ -53,6 +98,12 @@ impl PerfLibrary {
                     if let Some((key, plan)) = parse_tuned_line(rest) {
                         store.tuned.insert(key, plan);
                     }
+                } else if let Some(rest) = line.strip_prefix("E\t") {
+                    if let Some((key, us)) = rest.rsplit_once('\t') {
+                        if let Ok(t) = us.parse::<f64>() {
+                            store.explored.insert(key.to_string(), t);
+                        }
+                    }
                 } else if let Some((k, v)) = line.rsplit_once('\t') {
                     if let Ok(t) = v.parse::<f64>() {
                         store.entries.insert(k.to_string(), t);
@@ -60,7 +111,22 @@ impl PerfLibrary {
                 }
             }
         }
-        PerfLibrary { store, dev, hits: 0, misses: 0, tuned_hits: 0 }
+        let dev_sig = device_signature(&dev);
+        PerfLibrary {
+            store,
+            dev,
+            dev_sig,
+            hits: 0,
+            misses: 0,
+            tuned_hits: 0,
+            explore_hits: 0,
+        }
+    }
+
+    /// Prefix `key` with the signature of the device this library is
+    /// bound to — the namespace all three stores live under.
+    fn sigged(&self, key: &str) -> String {
+        format!("d{:016x}|{key}", self.dev_sig)
     }
 
     /// Persist for repeated usage across compilations.
@@ -80,6 +146,11 @@ impl PerfLibrary {
             out.push_str(&format_tuned_line(k, &self.store.tuned[k]));
             out.push('\n');
         }
+        let mut explore_keys: Vec<&String> = self.store.explored.keys().collect();
+        explore_keys.sort();
+        for k in explore_keys {
+            out.push_str(&format!("E\t{k}\t{}\n", self.store.explored[k]));
+        }
         std::fs::write(path, out)?;
         Ok(())
     }
@@ -94,7 +165,7 @@ impl PerfLibrary {
     /// [`PerfLibrary::tuned_mark_reused`] instead, so rejected plans do
     /// not inflate the hit counter.
     pub fn tuned_lookup(&mut self, key: &str) -> Option<TunedPlan> {
-        let plan = self.store.tuned.get(key).cloned();
+        let plan = self.store.tuned.get(&self.sigged(key)).cloned();
         if plan.is_some() {
             self.tuned_hits += 1;
         }
@@ -103,7 +174,7 @@ impl PerfLibrary {
 
     /// Borrow a persisted tuned plan without touching the hit counter.
     pub fn tuned_peek(&self, key: &str) -> Option<&TunedPlan> {
-        self.store.tuned.get(key)
+        self.store.tuned.get(&self.sigged(key))
     }
 
     /// Record that a peeked plan passed validation and was reused.
@@ -115,7 +186,37 @@ impl PerfLibrary {
     /// after [`PerfLibrary::save`] / [`PerfLibrary::load`] — across
     /// processes.
     pub fn tuned_insert(&mut self, key: String, plan: TunedPlan) {
-        self.store.tuned.insert(key, plan);
+        let k = self.sigged(&key);
+        self.store.tuned.insert(k, plan);
+    }
+
+    // ---- fusion-exploration memo (cost-guided fusion) ----
+
+    /// Memoized modeled cost (us) of a fused group, keyed by the group's
+    /// structural fingerprint. Lets serving recompiles reuse exploration
+    /// verdicts instead of re-tuning every merge/split candidate.
+    pub fn explore_lookup(&mut self, key: &str) -> Option<f64> {
+        let v = self.store.explored.get(&self.sigged(key)).copied();
+        if v.is_some() {
+            self.explore_hits += 1;
+        }
+        v
+    }
+
+    /// Record a group's modeled cost for future explorations.
+    pub fn explore_insert(&mut self, key: &str, modeled_us: f64) {
+        let k = self.sigged(key);
+        self.store.explored.insert(k, modeled_us);
+    }
+
+    /// Number of memoized exploration entries.
+    pub fn explore_len(&self) -> usize {
+        self.store.explored.len()
+    }
+
+    /// How many exploration lookups were answered from the memo.
+    pub fn explore_hits(&self) -> u64 {
+        self.explore_hits
     }
 
     /// Number of persisted tuned plans.
@@ -181,8 +282,8 @@ impl PerfLibrary {
     fn key(&self, comp: &Computation, id: InstrId, sched: Schedule, threads: u32) -> String {
         let i = comp.get(id);
         let mut key = format!(
-            "{}|{}|{}|{}|{}|{}",
-            i.opcode, i.shape, sched.split_dim, sched.sword, sched.sched_type, threads
+            "d{:016x}|{}|{}|{}|{}|{}|{}",
+            self.dev_sig, i.opcode, i.shape, sched.split_dim, sched.sword, sched.sched_type, threads
         );
         // operand shapes disambiguate e.g. reduce input sizes
         for s in comp.operand_shapes(id) {
@@ -440,6 +541,64 @@ mod tests {
         assert_eq!(got.assignment, plan.assignment);
         assert_eq!(lib2.tuned_hits(), 1);
         assert!(lib2.tuned_lookup("missing").is_none());
+    }
+
+    #[test]
+    fn device_change_invalidates_persisted_entries() {
+        // A library saved under one DeviceConfig must not serve stale
+        // schedules/costs after a device change — every store keys on
+        // the device signature, so mismatches read as misses.
+        let (c, r) = reduce_graph();
+        let dir = crate::testutil::TempDir::new("devsig");
+        let path = dir.path().join("perf.tsv");
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        lib.lookup(&c, r, Schedule::new(0, 4, SchedType::Row), 128);
+        lib.tuned_insert(
+            "fp|g0".to_string(),
+            TunedPlan {
+                root_schedules: vec![(InstrId(1), Schedule::fallback())],
+                assignment: std::collections::BTreeMap::new(),
+                blocks: 1,
+                threads: 128,
+                est_exec_us: 3.0,
+            },
+        );
+        lib.explore_insert("xg1", 7.5);
+        lib.save(&path).unwrap();
+
+        // Same name, different constants: still a different device.
+        let mut other = DeviceConfig::pascal();
+        other.launch_overhead_us = 9.0;
+        let mut lib2 = PerfLibrary::load(&path, other);
+        assert!(lib2.tuned_lookup("fp|g0").is_none(), "tuned plan must miss");
+        assert!(lib2.explore_lookup("xg1").is_none(), "explore memo must miss");
+        lib2.lookup(&c, r, Schedule::new(0, 4, SchedType::Row), 128);
+        assert_eq!(lib2.hit_rate(), 0.0, "schedule entry must re-derive, not hit");
+
+        // The original device keeps hitting its own entries.
+        let mut lib3 = PerfLibrary::load(&path, DeviceConfig::pascal());
+        assert!(lib3.tuned_lookup("fp|g0").is_some());
+        assert_eq!(lib3.explore_lookup("xg1"), Some(7.5));
+        lib3.lookup(&c, r, Schedule::new(0, 4, SchedType::Row), 128);
+        assert_eq!(lib3.hit_rate(), 1.0);
+    }
+
+    #[test]
+    fn explore_memo_roundtrips_through_disk() {
+        let dir = crate::testutil::TempDir::new("explore");
+        let path = dir.path().join("perf.tsv");
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        assert_eq!(lib.explore_len(), 0);
+        assert!(lib.explore_lookup("xg42").is_none());
+        assert_eq!(lib.explore_hits(), 0);
+        lib.explore_insert("xg42", 12.25);
+        assert_eq!(lib.explore_lookup("xg42"), Some(12.25));
+        assert_eq!(lib.explore_hits(), 1);
+        lib.save(&path).unwrap();
+
+        let mut lib2 = PerfLibrary::load(&path, DeviceConfig::pascal());
+        assert_eq!(lib2.explore_len(), 1);
+        assert_eq!(lib2.explore_lookup("xg42"), Some(12.25));
     }
 
     #[test]

@@ -107,6 +107,11 @@ fn tune_multi_root(
     lib: &mut PerfLibrary,
     cfg: &TuningConfig,
 ) -> Option<TunedPlan> {
+    // No roots → nothing to pair schedules over (also keeps the max()
+    // below total, should a future caller bypass `tune`'s own guard).
+    if roots.is_empty() {
+        return None;
+    }
     // Stage 1: valid blocks set per root, then intersect (§4.3).
     let mut per_root: Vec<Vec<(u64, Schedule)>> = Vec::with_capacity(roots.len());
     let mut common: Option<BTreeSet<u64>> = None;
@@ -140,13 +145,21 @@ fn tune_multi_root(
         if lists.iter().any(|l: &Vec<Schedule>| l.is_empty()) {
             continue;
         }
-        let max_len = lists.iter().map(Vec::len).max().unwrap();
+        let max_len = lists.iter().map(Vec::len).max().unwrap_or(0);
+        // Positional pairing clamps short lists to their last schedule,
+        // which re-creates the same combo once per excess index when
+        // roots have unequal candidate counts — dedup before the
+        // expensive propagate + scoring.
+        let mut seen: HashSet<Vec<(InstrId, Schedule)>> = HashSet::new();
         for k in 0..max_len {
             let combo: Vec<(InstrId, Schedule)> = roots
                 .iter()
                 .zip(&lists)
                 .map(|(&r, l)| (r, l[k.min(l.len() - 1)]))
                 .collect();
+            if !seen.insert(combo.clone()) {
+                continue;
+            }
             let Ok(prop) = propagate(comp, members, &combo) else {
                 continue;
             };
@@ -337,6 +350,45 @@ mod tests {
             // Inlined in the plan)
             assert_eq!(p.assignment.get(&e), Some(&OpSchedule::Inlined));
         }
+    }
+
+    #[test]
+    fn empty_root_set_is_rejected_not_a_panic() {
+        let mut b = GraphBuilder::new("empty");
+        let x = b.param("x", Shape::f32(&[64]));
+        let e = b.exp(x);
+        let comp = b.finish(e);
+        let members: HashSet<InstrId> = [e].into_iter().collect();
+        let plan = tune(
+            &comp,
+            &members,
+            &[],
+            &mut PerfLibrary::new(DeviceConfig::pascal()),
+            &TuningConfig::default(),
+        );
+        assert!(plan.is_none());
+    }
+
+    #[test]
+    fn unequal_candidate_counts_tune_deterministically() {
+        // Roots with different shapes have different-length candidate
+        // lists at a shared grid; the clamped pairing must dedup the
+        // repeated combos and still land on one best plan, stably.
+        let mut b = GraphBuilder::new("uneq");
+        let x = b.param("x", Shape::f32(&[96, 8]));
+        let y = b.param("y", Shape::f32(&[64, 32]));
+        let e = b.exp(x);
+        let t = b.tanh(y);
+        let comp = b.finish(t);
+        let members: HashSet<InstrId> = [e, t].into_iter().collect();
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let a = tune(&comp, &members, &[e, t], &mut lib, &TuningConfig::default())
+            .expect("shared grids exist");
+        let b2 = tune(&comp, &members, &[e, t], &mut lib, &TuningConfig::default()).unwrap();
+        assert_eq!(a.blocks, b2.blocks);
+        assert_eq!(a.threads, b2.threads);
+        assert_eq!(a.root_schedules, b2.root_schedules);
+        assert!(a.est_exec_us > 0.0);
     }
 
     #[test]

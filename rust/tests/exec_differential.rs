@@ -64,8 +64,13 @@ fn inputs_for(module: &Module, seed: u64) -> Vec<Vec<f32>> {
 }
 
 fn lower(module: &Module, mode: FusionMode) -> StitchedExecutable {
+    lower_cfg(module, mode, true)
+}
+
+fn lower_cfg(module: &Module, mode: FusionMode, cost_fusion: bool) -> StitchedExecutable {
     let mut lib = PerfLibrary::new(DeviceConfig::pascal());
-    let cfg = PipelineConfig::default();
+    let mut cfg = PipelineConfig::default();
+    cfg.deep.cost_fusion = cost_fusion;
     let compiled = compile_module(module, mode, &mut lib, &cfg)
         .unwrap_or_else(|e| panic!("{}: compile failed: {e:#}", module.name));
     match compiled.executable {
@@ -153,6 +158,50 @@ fn stitched_execution_matches_interpreter_on_corpus() {
         fs_total <= baseline_total,
         "deep fusion must not exceed the XLA baseline: {fs_total} vs {baseline_total}"
     );
+}
+
+#[test]
+fn cost_guided_plans_stay_bit_identical_and_never_launch_more_than_greedy() {
+    // The fusion-explore acceptance bar: whatever merges/splits the
+    // cost-guided pass performs, execution must stay *bit-identical* to
+    // the greedy plan (the VM computes each element in a fixed order
+    // regardless of grouping) and must never pay more kernel launches.
+    let mut corpus_modules = mini_corpus();
+    for name in ["LR", "W2V", "Speech"] {
+        let (_, module) = fusion_stitching::models::by_name(name).unwrap();
+        corpus_modules.push(module);
+    }
+    for (i, module) in corpus_modules.iter().enumerate() {
+        let inputs = inputs_for(module, 4000 + i as u64);
+        let greedy = lower_cfg(module, FusionMode::FusionStitching, false);
+        let explored = lower_cfg(module, FusionMode::FusionStitching, true);
+        let (g_out, g_ledger) = greedy
+            .run(&inputs)
+            .unwrap_or_else(|e| panic!("{}: greedy run failed: {e:#}", module.name));
+        let (x_out, x_ledger) = explored
+            .run(&inputs)
+            .unwrap_or_else(|e| panic!("{}: explored run failed: {e:#}", module.name));
+        assert_eq!(g_out.len(), x_out.len(), "{}: output size changed", module.name);
+        for (k, (a, b)) in g_out.iter().zip(&x_out).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{}: element {k} differs: {a} vs {b}",
+                module.name
+            );
+        }
+        assert!(
+            x_ledger.total_launches() <= g_ledger.total_launches(),
+            "{}: cost-guided launched {} vs greedy {}",
+            module.name,
+            x_ledger.total_launches(),
+            g_ledger.total_launches()
+        );
+        assert_eq!(
+            x_ledger.library, g_ledger.library,
+            "{}: exploration must not touch library calls",
+            module.name
+        );
+    }
 }
 
 #[test]

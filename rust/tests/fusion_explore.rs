@@ -1,0 +1,108 @@
+//! Property-style tests for the cost-guided fusion explorer
+//! (`fusion::explore`): over the synthetic corpus, every refined plan
+//! must be a valid partition, respect while-frame boundaries, and —
+//! executed on the stitched VM — never pay more kernel launches than
+//! the greedy plan it refined.
+
+use fusion_stitching::coordinator::pipeline::{compile_module, FusionMode, PipelineConfig};
+use fusion_stitching::corpus::generator::{generate_models, CorpusConfig};
+use fusion_stitching::fusion::{deep_fusion, explore_fusion, DeepFusionConfig};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::Module;
+use fusion_stitching::schedule::PerfLibrary;
+
+fn corpus() -> Vec<Module> {
+    let cfg = CorpusConfig { seed: 946, models: 16, ops_per_model: (8, 24), max_width_log2: 6 };
+    generate_models(&cfg)
+        .into_iter()
+        .map(|c| {
+            let name = c.name.clone();
+            Module::new(name, c)
+        })
+        .collect()
+}
+
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 1000) as f32) / 1000.0 - 0.5
+        })
+        .collect()
+}
+
+fn inputs_for(module: &Module, seed: u64) -> Vec<Vec<f32>> {
+    module
+        .entry
+        .parameters()
+        .into_iter()
+        .enumerate()
+        .map(|(k, id)| {
+            let elems = module.entry.get(id).shape.num_elements() as usize;
+            fill(elems, seed + k as u64)
+        })
+        .collect()
+}
+
+#[test]
+fn prop_explored_plans_are_valid_and_frame_pure() {
+    let cfg = DeepFusionConfig::default();
+    for (case, module) in corpus().iter().enumerate() {
+        let comp = &module.entry;
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let (greedy, _) = deep_fusion(comp, &mut lib, &cfg);
+        let greedy_kernels = greedy.generated_kernel_count(comp);
+        let (refined, _) = explore_fusion(comp, &greedy, &mut lib, &cfg);
+        refined.validate(comp).unwrap_or_else(|e| panic!("case {case}: {e:#}"));
+        // Frame discipline: a kernel never straddles while-loop bodies.
+        for group in &refined.groups {
+            let mut frames: Vec<u32> =
+                group.members.iter().map(|&id| comp.get(id).frame).collect();
+            frames.sort_unstable();
+            frames.dedup();
+            assert!(
+                frames.len() <= 1,
+                "case {case}: group {} spans frames {frames:?}",
+                group.id
+            );
+        }
+        // Planned launches within the greedy budget.
+        assert!(
+            refined.generated_kernel_count(comp) <= greedy_kernels,
+            "case {case}: {} > {}",
+            refined.generated_kernel_count(comp),
+            greedy_kernels
+        );
+        assert_eq!(refined.library_call_count(), greedy.library_call_count(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_explored_execution_never_increases_ledger_counts() {
+    for (case, module) in corpus().iter().enumerate() {
+        let inputs = inputs_for(module, 9000 + case as u64);
+        let run = |cost_fusion: bool| {
+            let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+            let mut cfg = PipelineConfig::default();
+            cfg.deep.cost_fusion = cost_fusion;
+            let compiled = compile_module(module, FusionMode::FusionStitching, &mut lib, &cfg)
+                .unwrap_or_else(|e| panic!("case {case}: compile failed: {e:#}"));
+            let exe = compiled
+                .executable
+                .unwrap_or_else(|| panic!("case {case}: did not lower: {:?}", compiled.exec_error));
+            let (_, ledger) = exe
+                .run(&inputs)
+                .unwrap_or_else(|e| panic!("case {case}: run failed: {e:#}"));
+            ledger
+        };
+        let greedy = run(false);
+        let explored = run(true);
+        assert!(
+            explored.total_launches() <= greedy.total_launches(),
+            "case {case}: explored launched {} vs greedy {}",
+            explored.total_launches(),
+            greedy.total_launches()
+        );
+        assert_eq!(explored.library, greedy.library, "case {case}: library calls changed");
+    }
+}
