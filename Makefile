@@ -1,6 +1,6 @@
 # Convenience targets; everything also works via plain cargo / python.
 
-.PHONY: build test bench bench-launches bench-serving bench-fusion artifacts doc
+.PHONY: build test bench bench-launches bench-serving bench-fusion bench-vm artifacts doc
 
 build:
 	cargo build --release
@@ -26,6 +26,13 @@ bench-serving:
 # BENCH_fusion_profit.json at the repo root.
 bench-fusion:
 	BENCH_SMOKE=1 cargo bench --bench fusion_profit
+
+# VM wall-clock bench (smoke mode): boxed PR-2 VM vs the memory-planned
+# block-parallel VM on all six models, bit-identity checked; writes
+# BENCH_vm_wallclock.json at the repo root. FUSION_VM_THREADS is pinned
+# so the speedup gate is reproducible across machines.
+bench-vm:
+	BENCH_SMOKE=1 FUSION_VM_THREADS=2 cargo bench --bench vm_wallclock
 
 doc:
 	cargo doc --no-deps

@@ -1,0 +1,205 @@
+//! VM wall-clock bench — the execute path itself, before vs after
+//! memory planning.
+//!
+//! For every Table 2 benchmark the module is compiled once under
+//! FusionStitching and executed two ways:
+//!
+//! - **boxed**: the PR-2 reference VM (`run_boxed`) — one `Vec<f32>`
+//!   per value, tree-walking index arithmetic, single-threaded;
+//! - **pooled**: the memory-planned VM (`run_into`) — flat arena with
+//!   lifetime-disjoint reuse, compiled affine loads, block-parallel
+//!   grid loops.
+//!
+//! Outputs must be bit-identical and the launch ledgers unchanged;
+//! the headline gate is a geometric-mean wall-clock speedup across all
+//! six models (>= 3x full, >= 2x smoke — CI pins `FUSION_VM_THREADS`
+//! so the number is reproducible). Results are persisted to
+//! `BENCH_vm_wallclock.json` at the repo root (uploaded as a CI
+//! artifact by `make bench-vm`).
+
+use fusion_stitching::coordinator::pipeline::{
+    compile_module, geomean, FusionMode, PipelineConfig,
+};
+use fusion_stitching::exec::{ExecArena, StitchedExecutable};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::Module;
+use fusion_stitching::models;
+use fusion_stitching::schedule::PerfLibrary;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 1000) as f32) / 1000.0 - 0.5
+        })
+        .collect()
+}
+
+fn inputs_for(module: &Module, seed: u64) -> Vec<Vec<f32>> {
+    module
+        .entry
+        .parameters()
+        .into_iter()
+        .enumerate()
+        .map(|(k, id)| {
+            let elems = module.entry.get(id).shape.num_elements() as usize;
+            fill(elems, seed + k as u64)
+        })
+        .collect()
+}
+
+fn lower(module: &Module, fuse_batch_dot: bool) -> StitchedExecutable {
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let mut cfg = PipelineConfig::default();
+    cfg.deep.fuse_batch_dot = fuse_batch_dot;
+    let compiled = compile_module(module, FusionMode::FusionStitching, &mut lib, &cfg)
+        .unwrap_or_else(|e| panic!("{}: compile failed: {e:#}", module.name));
+    match compiled.executable {
+        Some(exe) => (*exe).clone(),
+        None => panic!("{}: did not lower: {:?}", module.name, compiled.exec_error),
+    }
+}
+
+struct Row {
+    name: String,
+    boxed_us: f64,
+    pooled_us: f64,
+    speedup: f64,
+    launches: u64,
+    arena_bytes: usize,
+    value_bytes: usize,
+    reuse_ratio: f64,
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok()
+        || std::env::args().any(|a| a == "--smoke");
+    let mode_name = if smoke { "smoke" } else { "full" };
+    let iters = if smoke { 2usize } else { 5 };
+    let threads = fusion_stitching::exec::par::default_threads();
+    println!("== VM wall-clock: boxed (PR-2) vs memory-planned/parallel ({threads} VM threads) ==");
+    println!(
+        "{:<8} {:>12} {:>12} {:>8} {:>9} {:>10} {:>7}",
+        "model", "boxed_us", "pooled_us", "speedup", "launches", "arena_KiB", "reuse"
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for (meta, module) in models::all_benchmarks() {
+        let exe = lower(&module, meta.fuse_batch_dot);
+        let inputs = inputs_for(&module, 42);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+        // Warmup both sides; the warmup runs double as the bit-identity
+        // and ledger-equality check.
+        let (boxed_out, boxed_ledger) = exe
+            .run_boxed(&inputs)
+            .unwrap_or_else(|e| panic!("{}: boxed run failed: {e:#}", meta.name));
+        let mut arena = ExecArena::default();
+        let mut pooled_out = Vec::new();
+        let pooled_ledger = exe
+            .run_into(&refs, &mut arena, &mut pooled_out)
+            .unwrap_or_else(|e| panic!("{}: pooled run failed: {e:#}", meta.name));
+        assert_eq!(
+            pooled_ledger, boxed_ledger,
+            "{}: the launch ledger must be unchanged",
+            meta.name
+        );
+        assert_eq!(pooled_out.len(), boxed_out.len(), "{}: output size changed", meta.name);
+        for (i, (a, b)) in pooled_out.iter().zip(&boxed_out).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{}: element {i} differs: {a} vs {b}",
+                meta.name
+            );
+        }
+
+        // Best-of-N timing for each side (min is the stablest estimator
+        // for cold-cache-free wall clock).
+        let mut boxed_us = f64::INFINITY;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let _ = exe.run_boxed(&inputs).unwrap();
+            boxed_us = boxed_us.min(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        let mut pooled_us = f64::INFINITY;
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            let _ = exe.run_into(&refs, &mut arena, &mut pooled_out).unwrap();
+            pooled_us = pooled_us.min(t0.elapsed().as_secs_f64() * 1e6);
+        }
+        // Steady state really was allocation-free.
+        assert_eq!(arena.grows(), 1, "{}: pooled arena must not grow after warmup", meta.name);
+
+        let stats = exe.mem.stats();
+        let speedup = boxed_us / pooled_us.max(1e-9);
+        println!(
+            "{:<8} {:>12.0} {:>12.0} {:>7.2}x {:>9} {:>10.1} {:>6.2}x",
+            meta.name,
+            boxed_us,
+            pooled_us,
+            speedup,
+            pooled_ledger.total_launches(),
+            stats.arena_bytes as f64 / 1024.0,
+            stats.reuse_ratio()
+        );
+        rows.push(Row {
+            name: meta.name.to_string(),
+            boxed_us,
+            pooled_us,
+            speedup,
+            launches: pooled_ledger.total_launches(),
+            arena_bytes: stats.arena_bytes,
+            value_bytes: stats.value_bytes,
+            reuse_ratio: stats.reuse_ratio(),
+        });
+    }
+
+    let g = geomean(rows.iter().map(|r| r.speedup));
+    println!("geomean speedup: {g:.2}x over the boxed PR-2 VM ({mode_name} mode)");
+
+    // ---- persist ----
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"vm_wallclock\",\n");
+    json.push_str(&format!("  \"mode\": \"{mode_name}\",\n"));
+    json.push_str(&format!("  \"vm_threads\": {threads},\n"));
+    json.push_str("  \"models\": [\n");
+    for (k, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"boxed_us\": {:.1}, \"pooled_us\": {:.1}, \
+             \"speedup\": {:.3}, \"launches\": {}, \"arena_bytes\": {}, \
+             \"value_bytes\": {}, \"reuse_ratio\": {:.3}, \"bit_identical\": true}}{}\n",
+            r.name,
+            r.boxed_us,
+            r.pooled_us,
+            r.speedup,
+            r.launches,
+            r.arena_bytes,
+            r.value_bytes,
+            r.reuse_ratio,
+            if k + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"geomean_speedup\": {g:.3}\n"));
+    json.push_str("}\n");
+
+    let out_path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => PathBuf::from(dir).join("..").join("BENCH_vm_wallclock.json"),
+        Err(_) => PathBuf::from("BENCH_vm_wallclock.json"),
+    };
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out_path.display()),
+    }
+
+    // The acceptance gate: the memory-planned VM must be decisively
+    // faster across the whole model suite. Smoke mode (CI runners,
+    // pinned low thread count) gates a lower bar.
+    let bar = if smoke { 2.0 } else { 3.0 };
+    assert!(
+        g >= bar,
+        "geomean wall-clock speedup {g:.2}x is below the {bar}x bar ({mode_name} mode)"
+    );
+}

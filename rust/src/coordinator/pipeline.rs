@@ -68,6 +68,14 @@ pub struct CompiledModule {
 }
 
 impl CompiledModule {
+    /// The executable's memory-plan compression: arena bytes actually
+    /// planned vs. the sum of all value sizes (what the boxed VM
+    /// allocated per run), plus the derived reuse ratio. `None` when
+    /// the module did not lower.
+    pub fn arena_stats(&self) -> Option<crate::exec::ArenaStats> {
+        self.executable.as_ref().map(|e| e.mem.stats())
+    }
+
     /// Table 3 row: (avg shm bytes, max shm bytes, #kernels that shrank,
     /// average shared ratio over kernels that allocate).
     pub fn shm_stats(&self) -> (f64, usize, usize, f64) {
@@ -220,6 +228,11 @@ mod tests {
         assert!(fs.plan.generated_kernel_count(&module.entry)
             <= base.plan.generated_kernel_count(&module.entry));
         assert_eq!(base.timing.library_kernels, fs.timing.library_kernels);
+        // the memory plan's compression is observable on the artifact
+        let stats = fs.arena_stats().expect("LR lowers to an executable");
+        assert!(stats.arena_bytes > 0);
+        assert!(stats.value_bytes >= stats.arena_bytes);
+        assert!(stats.reuse_ratio() >= 1.0);
     }
 
     #[test]

@@ -133,6 +133,10 @@ impl ServingPool {
             return Err(anyhow!("queue_depth must be >= 1"));
         }
         let n = pool.resolved_workers();
+        // Divide the machine between the shards: each worker's stitched
+        // VM gets its share of the cores, so N shards × T VM threads
+        // never oversubscribes (a lone worker still goes wide).
+        let vm_threads = (crate::exec::par::default_threads() / n).max(1);
         // Parse the artifact exactly once; every worker shares it. This
         // also fails fast — before any thread spawns — on a missing or
         // malformed artifact.
@@ -164,7 +168,14 @@ impl ServingPool {
                 engine.register_program(&wcfg.artifact, wprog);
                 let _ = wready.send(Ok(()));
                 let model = engine.get(&wcfg.artifact).expect("registered above");
-                run_worker(model, &rx, &wcfg, wbackend.as_ref(), Some(wsnapshot.as_ref()))
+                run_worker(
+                    model,
+                    &rx,
+                    &wcfg,
+                    wbackend.as_ref(),
+                    Some(wsnapshot.as_ref()),
+                    vm_threads,
+                )
             }));
             txs.push(tx);
             live.push(snapshot);

@@ -20,7 +20,7 @@ use super::batcher::{next_batch_keyed, BatchPolicy, Request};
 use super::cache::{CompileService, SharedCompileService};
 use super::metrics::StreamingSummary;
 use super::pipeline::{CompiledModule, FusionMode, PipelineConfig};
-use crate::exec::{LaunchLedger, StitchedExecutable};
+use crate::exec::{ArenaStats, ExecArena, LaunchLedger, StitchedExecutable};
 use crate::hlo::Module;
 use crate::runtime::{Engine, LoadedModel};
 use anyhow::{anyhow, bail, Context, Result};
@@ -147,6 +147,15 @@ pub struct WorkerStats {
     /// Batches executed on the stitched-VM backend (vs the op-by-op
     /// artifact interpreter).
     pub stitched_batches: usize,
+    /// Stitched batches served from the pooled arena without any arena
+    /// allocation — the steady-state zero-allocation gate. After the
+    /// pooled arena reaches its plan's high-water mark (the first
+    /// batch), every subsequent batch increments this.
+    pub arena_reuses: u64,
+    /// The served executable's memory-plan compression (arena bytes
+    /// planned vs. the boxed VM's per-value footprint), set once the
+    /// stitched backend resolves.
+    pub arena: Option<ArenaStats>,
 }
 
 impl WorkerStats {
@@ -173,6 +182,10 @@ impl WorkerStats {
         self.compile_failures += other.compile_failures;
         self.launches.merge(&other.launches);
         self.stitched_batches += other.stitched_batches;
+        self.arena_reuses += other.arena_reuses;
+        if self.arena.is_none() {
+            self.arena = other.arena;
+        }
     }
 }
 
@@ -243,12 +256,17 @@ fn validate_stitched(
 ///
 /// When `live` is given, a snapshot of the counters is published after
 /// every batch so the pool can report aggregate stats while serving.
+///
+/// `vm_threads` caps the stitched VM's block-parallel fan-out for this
+/// worker (`0` = process default) — a pool divides cores between its
+/// shards so shards × VM threads never oversubscribes the machine.
 pub(crate) fn run_worker(
     model: &LoadedModel,
     rx: &Receiver<Request>,
     cfg: &ServerConfig,
     service: Option<&CompileBackend>,
     live: Option<&Mutex<WorkerStats>>,
+    vm_threads: usize,
 ) -> WorkerStats {
     let mut stats = WorkerStats::default();
     let batch_elems = cfg.batch * cfg.in_elems_per_request;
@@ -259,6 +277,13 @@ pub(crate) fn run_worker(
     // when requested (and signature-compatible).
     let mut stitched: Option<Arc<StitchedExecutable>> = None;
     let mut stitched_rejected = false;
+    // Pooled per-worker execution state: the batch-assembly buffer, the
+    // planned value arena and the output buffer all live for the
+    // worker's lifetime, so the steady-state serving path performs zero
+    // per-request allocations on the stitched backend.
+    let mut arena = ExecArena::with_threads(vm_threads);
+    let mut input: Vec<f32> = Vec::new();
+    let mut stitched_out: Vec<f32> = Vec::new();
     while let Some(batch) = next_batch_keyed(rx, &cfg.policy, &mut carry) {
         // Compile-once serving: make sure the kernel plans for this
         // module are resident before touching the batch.
@@ -276,7 +301,10 @@ pub(crate) fn run_worker(
                         if opts.use_stitched_backend && stitched.is_none() && !stitched_rejected
                         {
                             match validate_stitched(&plan, batch_elems, out_elems) {
-                                Ok(exe) => stitched = Some(exe),
+                                Ok(exe) => {
+                                    stats.arena = Some(exe.mem.stats());
+                                    stitched = Some(exe);
+                                }
                                 Err(e) => {
                                     stitched_rejected = true;
                                     eprintln!(
@@ -321,26 +349,39 @@ pub(crate) fn run_worker(
         // The policy may collect more requests than the artifact's
         // baked batch dimension: execute in artifact-sized chunks.
         for chunk in accepted.chunks(cfg.batch) {
-            // Assemble the padded chunk input.
-            let mut input = vec![0f32; batch_elems];
+            // Assemble the padded chunk into the reused buffer (clear +
+            // resize re-zeroes without reallocating).
+            input.clear();
+            input.resize(batch_elems, 0f32);
             for (i, req) in chunk.iter().enumerate() {
                 let start = i * cfg.in_elems_per_request;
                 input[start..start + req.input.len()].copy_from_slice(&req.input);
             }
             let t0 = Instant::now();
-            let result = match &stitched {
+            let mut artifact_out: Vec<Vec<f32>> = Vec::new();
+            let result: Result<&[f32]> = match &stitched {
                 Some(exe) => {
                     stats.stitched_batches += 1;
-                    exe.run(std::slice::from_ref(&input)).map(|(out, ledger)| {
-                        stats.launches.merge(&ledger);
-                        vec![out]
-                    })
+                    match exe.run_into(&[input.as_slice()], &mut arena, &mut stitched_out) {
+                        Ok(ledger) => {
+                            stats.launches.merge(&ledger);
+                            stats.arena_reuses = arena.reuses();
+                            Ok(stitched_out.as_slice())
+                        }
+                        Err(e) => Err(e),
+                    }
                 }
                 None => {
                     let before = model.launch_ledger();
                     let r = model.run_f32(&[(&input, &cfg.input_dims)]);
                     stats.launches.merge(&model.launch_ledger().since(&before));
-                    r
+                    match r {
+                        Ok(o) => {
+                            artifact_out = o;
+                            Ok(artifact_out[0].as_slice())
+                        }
+                        Err(e) => Err(e),
+                    }
                 }
             };
             stats.exec_us.record_us(t0.elapsed().as_secs_f64() * 1e6);
@@ -353,8 +394,7 @@ pub(crate) fn run_worker(
                 *live.lock().expect("live stats poisoned") = stats.clone();
             }
             match result {
-                Ok(outputs) => {
-                    let out = &outputs[0];
+                Ok(out) => {
                     for (i, req) in chunk.iter().enumerate() {
                         let start = i * cfg.out_elems_per_request;
                         let end = start + cfg.out_elems_per_request;
@@ -429,7 +469,8 @@ impl ServingCoordinator {
                 }
             };
             let model = engine.get(&wcfg.artifact).expect("loaded above");
-            run_worker(model, &rx, &wcfg, backend.as_ref(), None)
+            // Single worker: the VM may use the whole machine.
+            run_worker(model, &rx, &wcfg, backend.as_ref(), None, 0)
         });
         // Fail fast if the artifact is missing/bad.
         ready_rx
@@ -690,7 +731,7 @@ ENTRY main {
             use_stitched_backend: true,
         });
         let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
-        for i in 0..2 {
+        for i in 0..4 {
             let (out, _) = srv.infer(vec![0.1 * i as f32; 3]).unwrap();
             // batches execute the *module* on the stitched VM now
             let want = (0.1f32 * i as f32).exp().tanh();
@@ -698,6 +739,17 @@ ENTRY main {
         }
         let stats = srv.shutdown().unwrap();
         assert_eq!(stats.stitched_batches, stats.batches);
+        // Steady-state zero-allocation gate: after the first batch grew
+        // the pooled arena, every later batch reused it.
+        assert_eq!(
+            stats.arena_reuses,
+            stats.stitched_batches as u64 - 1,
+            "every post-warmup batch must be served from the pooled arena"
+        );
+        // the memory plan's compression is surfaced in serving stats
+        let arena = stats.arena.expect("stitched serving reports its arena plan");
+        assert!(arena.arena_bytes > 0);
+        assert!(arena.reuse_ratio() >= 1.0);
         // exp∘tanh fuses: exactly one generated launch per batch
         assert_eq!(stats.launches.generated as usize, stats.batches);
         assert_eq!(stats.launches.library, 0);

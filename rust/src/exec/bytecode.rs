@@ -59,6 +59,38 @@ pub fn delinearize(mut lin: i64, dims: &[i64]) -> Vec<i64> {
     idx
 }
 
+/// [`delinearize`] into a reused buffer (the VM's allocation-free path).
+pub fn delinearize_into(mut lin: i64, dims: &[i64], out: &mut Vec<i64>) {
+    out.clear();
+    out.resize(dims.len(), 0);
+    for k in (0..dims.len()).rev() {
+        let d = dims[k].max(1);
+        out[k] = lin % d;
+        lin /= d;
+    }
+}
+
+/// Linear offset of `idx` in `sched_type` order: `Row` is row-major
+/// [`linearize`]; `Column` linearizes the reversed index over the
+/// reversed dims — the allocation-free equivalent of the temporary
+/// vectors [`chunk_offset`] builds.
+pub fn sched_linearize(sched_type: SchedType, dims: &[i64], idx: &[i64]) -> i64 {
+    match sched_type {
+        SchedType::Row => linearize(idx, dims),
+        SchedType::Column => {
+            let n = dims.len();
+            let mut lin = 0i64;
+            for i in 0..n {
+                // reversed dims/idx, walked forward
+                let d = dims[n - 1 - i].max(1);
+                let x = idx.get(n - 1 - i).copied().unwrap_or(0);
+                lin = lin * d + x;
+            }
+            lin
+        }
+    }
+}
+
 /// One shape-modulation hop of an operand access path.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum IndexStep {
@@ -118,6 +150,221 @@ impl IndexMap {
         }
         cur
     }
+
+    /// [`IndexMap::apply`] into reused buffers: the result lands in
+    /// `out`, `tmp` is ping-pong scratch. Step semantics are identical
+    /// to `apply` (same truncation/padding rules), with zero
+    /// allocations once the buffers have grown to the chain's widest
+    /// rank.
+    pub fn apply_into(&self, idx: &[i64], out: &mut Vec<i64>, tmp: &mut Vec<i64>) {
+        out.clear();
+        out.extend_from_slice(idx);
+        for step in &self.steps {
+            tmp.clear();
+            match step {
+                IndexStep::Gather { dims } => {
+                    tmp.extend(dims.iter().map(|&d| out[d]));
+                }
+                IndexStep::Relinearize { from, to } => {
+                    delinearize_into(linearize(out, from), to, tmp);
+                }
+                IndexStep::Permute { perm } => {
+                    tmp.resize(out.len(), 0);
+                    for (k, &p) in perm.iter().enumerate() {
+                        tmp[p] = out[k];
+                    }
+                }
+                IndexStep::Offset { starts } => {
+                    tmp.extend(out.iter().zip(starts).map(|(&i, &s)| i + s));
+                }
+            }
+            std::mem::swap(out, tmp);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Affine specialization of index chains
+// ---------------------------------------------------------------------
+
+/// A linear offset as an affine function of the evaluation index:
+/// `lin(idx) = base + Σ coeffs[k] * idx[k]`. Compiled at lowering time
+/// from an [`IndexMap`], it turns the VM's per-element
+/// `map.apply` + [`linearize`] vector churn into a handful of
+/// multiply-adds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AffineRow {
+    pub base: i64,
+    /// One coefficient per evaluation-index dimension.
+    pub coeffs: Vec<i64>,
+}
+
+impl AffineRow {
+    #[inline]
+    pub fn apply(&self, idx: &[i64]) -> i64 {
+        let mut lin = self.base;
+        for (c, &i) in self.coeffs.iter().zip(idx) {
+            lin += c * i;
+        }
+        lin
+    }
+
+    fn zero(rank: usize) -> Self {
+        AffineRow { base: 0, coeffs: vec![0; rank] }
+    }
+
+    fn add_scaled(&mut self, other: &AffineRow, scale: i64) {
+        self.base += other.base * scale;
+        for (a, b) in self.coeffs.iter_mut().zip(&other.coeffs) {
+            *a += b * scale;
+        }
+    }
+}
+
+/// Row-major strides of `dims`, matching [`linearize`]'s `d.max(1)`
+/// convention: `lin = Σ idx[k] * strides[k]`.
+fn row_strides(dims: &[i64]) -> Vec<i64> {
+    let mut s = vec![1i64; dims.len()];
+    for k in (0..dims.len().saturating_sub(1)).rev() {
+        s[k] = s[k + 1] * dims[k + 1].max(1);
+    }
+    s
+}
+
+/// Symbolic state while walking an [`IndexMap`]: either every current
+/// index dimension is affine in the evaluation index, or the chain has
+/// collapsed to a single linear offset in `space` (after a
+/// `Relinearize` — delinearizing symbolically is not affine, but a
+/// later linearize over the same space cancels it exactly).
+enum AffState {
+    Multi(Vec<AffineRow>),
+    Scalar { lin: AffineRow, space: Vec<i64> },
+}
+
+fn affine_state(map: &IndexMap, in_rank: usize) -> Option<AffState> {
+    let mut st = AffState::Multi(
+        (0..in_rank)
+            .map(|k| {
+                let mut r = AffineRow::zero(in_rank);
+                r.coeffs[k] = 1;
+                r
+            })
+            .collect(),
+    );
+    for step in &map.steps {
+        st = match (st, step) {
+            (AffState::Multi(rows), IndexStep::Gather { dims }) => {
+                let mut next = Vec::with_capacity(dims.len());
+                for &d in dims {
+                    next.push(rows.get(d)?.clone());
+                }
+                AffState::Multi(next)
+            }
+            (AffState::Multi(rows), IndexStep::Permute { perm }) => {
+                if perm.len() > rows.len() {
+                    return None; // apply would index out of bounds
+                }
+                let mut next = vec![AffineRow::zero(in_rank); rows.len()];
+                for (k, &p) in perm.iter().enumerate() {
+                    if p >= next.len() {
+                        return None;
+                    }
+                    next[p] = rows[k].clone();
+                }
+                AffState::Multi(next)
+            }
+            (AffState::Multi(mut rows), IndexStep::Offset { starts }) => {
+                // apply zips, so the result is truncated to the shorter
+                rows.truncate(rows.len().min(starts.len()));
+                for (r, &s) in rows.iter_mut().zip(starts) {
+                    r.base += s;
+                }
+                AffState::Multi(rows)
+            }
+            (AffState::Multi(rows), IndexStep::Relinearize { from, to }) => {
+                let strides = row_strides(from);
+                let mut lin = AffineRow::zero(in_rank);
+                for (k, &stride) in strides.iter().enumerate() {
+                    if let Some(row) = rows.get(k) {
+                        lin.add_scaled(row, stride);
+                    }
+                }
+                AffState::Scalar { lin, space: to.clone() }
+            }
+            (AffState::Scalar { lin, space }, IndexStep::Relinearize { from, to })
+                if *from == space =>
+            {
+                // linearize(delinearize(lin, space), space) == lin for
+                // in-range offsets, so back-to-back reshapes collapse.
+                AffState::Scalar { lin, space: to.clone() }
+            }
+            _ => return None,
+        };
+    }
+    Some(st)
+}
+
+/// Compile `map` (evaluated over an `in_rank`-dimensional index) into
+/// the **row-major** linear offset into `dst_dims` — what every global
+/// load computes per element. `None` when the chain is not affine (the
+/// VM falls back to the general path).
+pub fn compile_affine(map: &IndexMap, in_rank: usize, dst_dims: &[i64]) -> Option<AffineRow> {
+    match affine_state(map, in_rank)? {
+        AffState::Multi(rows) => {
+            let strides = row_strides(dst_dims);
+            let mut lin = AffineRow::zero(in_rank);
+            for (k, &stride) in strides.iter().enumerate() {
+                if let Some(row) = rows.get(k) {
+                    lin.add_scaled(row, stride);
+                }
+            }
+            Some(lin)
+        }
+        AffState::Scalar { lin, space } => {
+            if space == dst_dims {
+                Some(lin)
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Compile `map` into the **schedule-order** linear offset into `dims`
+/// (what [`chunk_offset`] computes): `Row` is row-major, `Column`
+/// linearizes the reversed index over the reversed dims.
+pub fn compile_affine_sched(
+    map: &IndexMap,
+    in_rank: usize,
+    dims: &[i64],
+    sched_type: SchedType,
+) -> Option<AffineRow> {
+    match sched_type {
+        SchedType::Row => compile_affine(map, in_rank, dims),
+        SchedType::Column => match affine_state(map, in_rank)? {
+            AffState::Multi(rows) => {
+                let n = dims.len();
+                let rev_dims: Vec<i64> = dims.iter().rev().copied().collect();
+                let strides = row_strides(&rev_dims);
+                let mut lin = AffineRow::zero(in_rank);
+                for (i, &stride) in strides.iter().enumerate() {
+                    if let Some(row) = rows.get(n - 1 - i) {
+                        lin.add_scaled(row, stride);
+                    }
+                }
+                Some(lin)
+            }
+            // A collapsed scalar is a row-major offset; only rank <= 1
+            // spaces have identical row/column orders.
+            AffState::Scalar { lin, space } => {
+                if space == dims && dims.len() <= 1 {
+                    Some(lin)
+                } else {
+                    None
+                }
+            }
+        },
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -156,6 +403,24 @@ pub fn chunk_index(sched: Schedule, dims: &[i64], block: i64, e: i64) -> Vec<i64
             let mut idx = delinearize(lin, &rev);
             idx.reverse();
             idx
+        }
+    }
+}
+
+/// [`chunk_index`] into a reused buffer — no temporary reversed-dims
+/// vectors (`Column` digits fall out of walking `dims` forward).
+pub fn chunk_index_into(sched: Schedule, dims: &[i64], block: i64, e: i64, out: &mut Vec<i64>) {
+    let mut lin = block * sched_chunk(sched, dims) + e;
+    match sched.sched_type {
+        SchedType::Row => delinearize_into(lin, dims, out),
+        SchedType::Column => {
+            out.clear();
+            out.resize(dims.len(), 0);
+            for i in 0..dims.len() {
+                let d = dims[i].max(1);
+                out[i] = lin % d;
+                lin /= d;
+            }
         }
     }
 }
@@ -287,13 +552,30 @@ impl BinOp {
 }
 
 /// One bytecode instruction of a [`ThreadProg`].
+///
+/// The load variants carry two layers: the *portable* form (`map` plus
+/// shapes — what the PR-2 boxed reference path interprets) and the
+/// *specialized* form filled in at lowering/planning time — compiled
+/// [`AffineRow`] offsets and the operand's resolved arena range
+/// ([`crate::exec::memplan::BufSlot`]). The fast path uses the
+/// specialized fields and falls back to interpreting `map` when a
+/// chain is not affine.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TInstr {
     /// Load an immediate.
     Const { dst: Reg, value: f32 },
     /// Read a global (DRAM) buffer: map the current index into `src`'s
     /// index space, then row-major linearize over `dims`.
-    LoadGlobal { dst: Reg, src: InstrId, dims: Vec<i64>, map: IndexMap },
+    LoadGlobal {
+        dst: Reg,
+        src: InstrId,
+        dims: Vec<i64>,
+        map: IndexMap,
+        /// Compiled row-major offset (`None`: interpret `map`).
+        lin: Option<AffineRow>,
+        /// `src`'s arena range, baked by the memory planner.
+        buf: Option<crate::exec::memplan::BufSlot>,
+    },
     /// Read this block's shared-memory region at `offset`. The region
     /// holds `owner`'s per-block chunk under `owner_sched`; the mapped
     /// index must fall inside the executing block's chunk.
@@ -304,12 +586,32 @@ pub enum TInstr {
         owner_dims: Vec<i64>,
         owner_sched: Schedule,
         map: IndexMap,
+        /// Index of the region in [`KernelProgram::shm_regions`].
+        slot: usize,
+        /// `owner`'s per-block chunk size (elements).
+        chunk: i64,
+        /// Compiled schedule-order offset for the chunk check.
+        sched_lin: Option<AffineRow>,
     },
     /// Read a fusion root's global output written earlier in the SAME
     /// launch. Only the executing block's own chunk of the owner is
     /// visible (a real kernel has no cross-block synchronization), so
     /// the mapped index is chunk-checked like a shared read.
-    LoadOwned { dst: Reg, src: InstrId, dims: Vec<i64>, owner_sched: Schedule, map: IndexMap },
+    LoadOwned {
+        dst: Reg,
+        src: InstrId,
+        dims: Vec<i64>,
+        owner_sched: Schedule,
+        map: IndexMap,
+        /// `owner_sched`'s per-block chunk size (elements).
+        chunk: i64,
+        /// Compiled row-major offset into `src`'s buffer.
+        lin: Option<AffineRow>,
+        /// Compiled schedule-order offset for the chunk check.
+        sched_lin: Option<AffineRow>,
+        /// `src`'s arena range, baked by the memory planner.
+        buf: Option<crate::exec::memplan::BufSlot>,
+    },
     Unary { dst: Reg, a: Reg, op: UnOp },
     Binary { dst: Reg, a: Reg, b: Reg, op: BinOp },
     Select { dst: Reg, pred: Reg, on_true: Reg, on_false: Reg },
@@ -341,7 +643,18 @@ pub enum LoopKind {
     Map { prog: ThreadProg },
     /// Reduction loop: per output element, fold the operand program
     /// over the reduced dims of `in_dims` (row-major, dims ascending).
-    Reduce { kind: ReduceKind, dims: Vec<usize>, in_dims: Vec<i64>, operand: ThreadProg },
+    /// `kept` (the non-reduced dims, ascending) and `sizes` (the
+    /// reduced extents, aligned with `dims`) are precomputed at
+    /// lowering so the fast path rebuilds input indices without
+    /// per-element allocation.
+    Reduce {
+        kind: ReduceKind,
+        dims: Vec<usize>,
+        in_dims: Vec<i64>,
+        operand: ThreadProg,
+        kept: Vec<usize>,
+        sizes: Vec<i64>,
+    },
     /// Batched-matmul loop: per output element `[..., m, n]`,
     /// accumulate `lhs[..., m, k] * rhs[..., k, n]` over `k` ascending.
     Dot { lhs: ThreadProg, rhs: ThreadProg, lhs_dims: Vec<i64>, rhs_dims: Vec<i64> },
@@ -350,10 +663,22 @@ pub enum LoopKind {
 /// Where a stitched loop deposits its chunk.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WriteTarget {
-    /// `EmitWriteSharedArray` — the block's shared region at `offset`.
-    Shared { offset: usize },
+    /// `EmitWriteSharedArray` — the block's shared region at byte
+    /// `offset` (`slot` indexes [`KernelProgram::shm_regions`]).
+    Shared { offset: usize, slot: usize },
     /// `EmitWriteOutputArray` — the op's global output buffer.
     Output,
+}
+
+/// One shared-memory region of a kernel's per-block scratch, in the
+/// flat f32 layout the fast path uses (`base..base + elems` inside the
+/// block's shared buffer). Distinct byte offsets of the shm planner
+/// become distinct regions; space-sharing owners rotate through the
+/// same region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShmRegion {
+    pub base: usize,
+    pub elems: usize,
 }
 
 /// One per-block step of a kernel.
@@ -377,6 +702,9 @@ pub struct KernelProgram {
     pub threads: u32,
     /// Peak shared memory modeled per block.
     pub shm_bytes: usize,
+    /// Flat layout of the block's shared regions (indexed by the
+    /// `slot` fields of shared writes/reads).
+    pub shm_regions: Vec<ShmRegion>,
     pub steps: Vec<BlockStep>,
     /// Global output buffers this kernel writes: `(root, elems)`.
     pub outputs: Vec<(InstrId, usize)>,
@@ -402,7 +730,7 @@ impl KernelProgram {
                         LoopKind::Dot { .. } => "batch_dot".to_string(),
                     };
                     let write_s = match write {
-                        WriteTarget::Shared { offset } => format!("shared@{offset}"),
+                        WriteTarget::Shared { offset, .. } => format!("shared@{offset}"),
                         WriteTarget::Output => "output".to_string(),
                     };
                     out.push_str(&format!(
@@ -481,6 +809,170 @@ mod tests {
         // slice offset
         let m4 = IndexMap::identity().then(IndexStep::Offset { starts: vec![1, 2] });
         assert_eq!(m4.apply(&[0, 0]), vec![1, 2]);
+    }
+
+    /// Deterministic pseudo-random step chains for exercising the
+    /// affine compiler against the reference interpreter.
+    fn test_maps() -> Vec<(IndexMap, usize, Vec<i64>)> {
+        let mut cases = Vec::new();
+        // identity into various spaces
+        cases.push((IndexMap::identity(), 3, vec![4, 5, 6]));
+        cases.push((IndexMap::identity(), 0, vec![]));
+        // broadcast [5] -> [4, 5]
+        cases.push((
+            IndexMap::identity().then(IndexStep::Gather { dims: vec![1] }),
+            2,
+            vec![5],
+        ));
+        // broadcast scalar -> [4, 5]
+        cases.push((IndexMap::identity().then(IndexStep::Gather { dims: vec![] }), 2, vec![]));
+        // transpose [4, 5, 6] reading [4, 6, 5]
+        cases.push((
+            IndexMap::identity().then(IndexStep::Permute { perm: vec![0, 2, 1] }),
+            3,
+            vec![4, 6, 5],
+        ));
+        // slice into [8, 9] with starts [1, 2]
+        cases.push((
+            IndexMap::identity().then(IndexStep::Offset { starts: vec![1, 2] }),
+            2,
+            vec![8, 9],
+        ));
+        // reshape [4, 6] -> [24] then read flat
+        cases.push((
+            IndexMap::identity()
+                .then(IndexStep::Relinearize { from: vec![4, 6], to: vec![24] }),
+            2,
+            vec![24],
+        ));
+        // reshape [4, 6] -> [2, 12] -> [24]: back-to-back collapse
+        cases.push((
+            IndexMap::identity()
+                .then(IndexStep::Relinearize { from: vec![4, 6], to: vec![2, 12] })
+                .then(IndexStep::Relinearize { from: vec![2, 12], to: vec![24] }),
+            2,
+            vec![24],
+        ));
+        // broadcast + transpose + offset composed
+        cases.push((
+            IndexMap::identity()
+                .then(IndexStep::Gather { dims: vec![1, 0] })
+                .then(IndexStep::Offset { starts: vec![2, 3] }),
+            2,
+            vec![9, 8],
+        ));
+        // gather then reshape to flat
+        cases.push((
+            IndexMap::identity()
+                .then(IndexStep::Gather { dims: vec![0] })
+                .then(IndexStep::Relinearize { from: vec![4], to: vec![4] }),
+            2,
+            vec![4],
+        ));
+        cases
+    }
+
+    /// Index grids of the evaluation space (small exhaustive sweep).
+    fn eval_indices(rank: usize) -> Vec<Vec<i64>> {
+        match rank {
+            0 => vec![vec![]],
+            1 => (0..4).map(|i| vec![i]).collect(),
+            2 => (0..4).flat_map(|i| (0..5).map(move |j| vec![i, j])).collect(),
+            _ => (0..3)
+                .flat_map(|i| {
+                    (0..4).flat_map(move |j| (0..5).map(move |k| vec![i, j, k]))
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn affine_compile_matches_reference() {
+        for (map, rank, dims) in test_maps() {
+            let affine = compile_affine(&map, rank, &dims)
+                .unwrap_or_else(|| panic!("{map:?} over rank {rank} should be affine"));
+            for idx in eval_indices(rank) {
+                let j = map.apply(&idx);
+                let want = linearize(&j, &dims);
+                assert_eq!(
+                    affine.apply(&idx),
+                    want,
+                    "{map:?} at {idx:?} (mapped {j:?}, dims {dims:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affine_sched_matches_chunk_offset_linearization() {
+        for (map, rank, dims) in test_maps() {
+            for ty in [SchedType::Row, SchedType::Column] {
+                let Some(affine) = compile_affine_sched(&map, rank, &dims, ty) else {
+                    continue; // column scalar collapse legitimately bails
+                };
+                for idx in eval_indices(rank) {
+                    let j = map.apply(&idx);
+                    assert_eq!(
+                        affine.apply(&idx),
+                        sched_linearize(ty, &dims, &j),
+                        "{map:?} {ty:?} at {idx:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn non_affine_chains_fall_back() {
+        // reshape followed by a permute in the reshaped space: not
+        // affine (the delinearize cannot be cancelled).
+        let m = IndexMap::identity()
+            .then(IndexStep::Relinearize { from: vec![4, 6], to: vec![2, 12] })
+            .then(IndexStep::Permute { perm: vec![1, 0] });
+        assert!(compile_affine(&m, 2, &[12, 2]).is_none());
+        // ... but the general apply_into path still evaluates it.
+        let mut out = Vec::new();
+        let mut tmp = Vec::new();
+        for idx in eval_indices(2) {
+            m.apply_into(&idx, &mut out, &mut tmp);
+            assert_eq!(out, m.apply(&idx), "{m:?} at {idx:?}");
+        }
+    }
+
+    #[test]
+    fn apply_into_matches_apply_everywhere() {
+        let mut out = Vec::new();
+        let mut tmp = Vec::new();
+        for (map, rank, _) in test_maps() {
+            for idx in eval_indices(rank) {
+                map.apply_into(&idx, &mut out, &mut tmp);
+                assert_eq!(out, map.apply(&idx), "{map:?} at {idx:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_index_into_and_sched_linearize_match_reference() {
+        let dims = vec![4i64, 6, 8];
+        let shape = Shape::f32(&dims);
+        let mut buf = Vec::new();
+        for sched in Schedule::enumerate(&shape) {
+            let blocks = sched_blocks(sched, &dims);
+            let chunk = sched_chunk(sched, &dims);
+            for b in 0..blocks {
+                for e in 0..chunk {
+                    let want = chunk_index(sched, &dims, b, e);
+                    chunk_index_into(sched, &dims, b, e, &mut buf);
+                    assert_eq!(buf, want, "{sched} block {b} elem {e}");
+                    // sched_linearize inverts the chunk walk
+                    assert_eq!(
+                        sched_linearize(sched.sched_type, &dims, &want),
+                        b * chunk + e,
+                        "{sched}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -22,10 +22,11 @@
 //! the generated-kernel ratio.
 
 use super::bytecode::{
-    BlockStep, IndexMap, IndexStep, KernelProgram, LoopKind, Reg, TInstr, ThreadProg, UnOp,
-    WriteTarget, CONST_FILL,
+    compile_affine, compile_affine_sched, sched_chunk, BlockStep, IndexMap, IndexStep,
+    KernelProgram, LoopKind, Reg, ShmRegion, TInstr, ThreadProg, UnOp, WriteTarget, CONST_FILL,
 };
 use super::machine::{BufRead, Launch, LibKind, LibraryCall, ParamSpec, StitchedExecutable};
+use super::memplan;
 use crate::codegen::kernel_plan::EmitterKind;
 use crate::codegen::KernelPlan;
 use crate::fusion::{FusionGroup, FusionPlan, GroupKind};
@@ -88,7 +89,7 @@ pub fn lower_to_exec(
         .collect();
 
     let root = resolve_flat(comp, comp.root())?;
-    Ok(StitchedExecutable {
+    let mut exe = StitchedExecutable {
         name: module.name.clone(),
         params,
         consts,
@@ -96,7 +97,13 @@ pub fn lower_to_exec(
         root,
         root_elems: comp.get(comp.root()).shape.num_elements() as usize,
         n_values: comp.len(),
-    })
+        mem: memplan::MemoryPlan::unresolved(comp.len()),
+    };
+    // Static buffer assignment: liveness over the launch sequence,
+    // lifetime-disjoint arena ranges, operand ranges baked into every
+    // load (see `exec/memplan.rs`).
+    memplan::resolve(&mut exe);
+    Ok(exe)
 }
 
 /// Opcodes the stitched VM can execute. Everything else fails loudly at
@@ -197,13 +204,14 @@ fn lower_library(comp: &Computation, group: &FusionGroup) -> crate::Result<Libra
         out_dims: instr.shape.dims.clone(),
         out_elems: instr.shape.num_elements() as usize,
         kind,
+        out_slot: None, // baked by the memory planner
     })
 }
 
 fn buf_read(comp: &Computation, id: InstrId) -> crate::Result<BufRead> {
     let dims = comp.get(id).shape.dims.clone();
     let src = resolve_flat(comp, id)?;
-    Ok(BufRead { src, dims })
+    Ok(BufRead { src, dims, slot: None })
 }
 
 /// Shared-slot metadata: where the owner's chunk lives and under which
@@ -218,6 +226,9 @@ struct ExprCtx<'a> {
     comp: &'a Computation,
     members: &'a HashSet<InstrId>,
     slots: &'a HashMap<InstrId, SlotMeta>,
+    /// Byte offset → index into the kernel's flat shared-region layout
+    /// ([`KernelProgram::shm_regions`]).
+    slot_of: &'a HashMap<usize, usize>,
     /// Fusion roots (globally materialized this launch) and the
     /// schedules their output loops run under — the visibility contract
     /// for same-launch reads of a root's output.
@@ -226,15 +237,21 @@ struct ExprCtx<'a> {
 
 /// Builder for one straight-line [`ThreadProg`], memoizing repeated
 /// `(value, index-map)` subexpressions so diamonds in the fused DAG do
-/// not blow up the register file.
-#[derive(Default)]
+/// not blow up the register file. `rank` is the dimensionality of the
+/// index space the program is evaluated in — the affine specializer
+/// compiles every load's index chain against it.
 struct ProgBuilder {
     code: Vec<TInstr>,
     next: Reg,
     memo: HashMap<(InstrId, IndexMap), Reg>,
+    rank: usize,
 }
 
 impl ProgBuilder {
+    fn new(rank: usize) -> Self {
+        ProgBuilder { code: Vec::new(), next: 0, memo: HashMap::new(), rank }
+    }
+
     fn reg(&mut self) -> Reg {
         let r = self.next;
         self.next += 1;
@@ -291,7 +308,26 @@ fn lower_kernel(
         }
     }
 
-    let ctx = ExprCtx { comp, members, slots: &slots, root_scheds: &root_scheds };
+    // Flat shared-memory layout for the fast path: one region per
+    // distinct planner byte-offset, sized for the largest per-block
+    // chunk deposited there (space-sharing owners rotate through the
+    // same region, exactly like the byte offsets they share).
+    let mut region_elems: std::collections::BTreeMap<usize, usize> = Default::default();
+    for meta in slots.values() {
+        let chunk = sched_chunk(meta.sched, &meta.dims).max(1) as usize;
+        let e = region_elems.entry(meta.offset).or_insert(0);
+        *e = (*e).max(chunk);
+    }
+    let mut shm_regions: Vec<ShmRegion> = Vec::with_capacity(region_elems.len());
+    let mut slot_of: HashMap<usize, usize> = HashMap::new();
+    let mut shm_base = 0usize;
+    for (&off, &elems) in &region_elems {
+        slot_of.insert(off, shm_regions.len());
+        shm_regions.push(ShmRegion { base: shm_base, elems });
+        shm_base += elems;
+    }
+
+    let ctx = ExprCtx { comp, members, slots: &slots, slot_of: &slot_of, root_scheds: &root_scheds };
     let mut steps: Vec<BlockStep> = Vec::new();
     let mut outputs: Vec<(InstrId, usize)> = Vec::new();
     for eop in &kplan.ops {
@@ -310,7 +346,7 @@ fn lower_kernel(
             let meta = slots
                 .get(&eop.id)
                 .ok_or_else(|| anyhow!("%{} writes shared but has no slot", eop.id.0))?;
-            WriteTarget::Shared { offset: meta.offset }
+            WriteTarget::Shared { offset: meta.offset, slot: slot_of[&meta.offset] }
         } else {
             WriteTarget::Output
         };
@@ -335,6 +371,7 @@ fn lower_kernel(
         blocks: kplan.blocks,
         threads: kplan.threads,
         shm_bytes: kplan.shm.total_bytes,
+        shm_regions,
         steps,
         outputs,
     })
@@ -355,22 +392,26 @@ fn lower_loop(ctx: &ExprCtx<'_>, id: InstrId) -> crate::Result<LoopKind> {
                 .attrs
                 .reduce_kind
                 .ok_or_else(|| anyhow!("reduce %{} missing kind", id.0))?;
-            let mut pb = ProgBuilder::default();
+            // Precomputed for the fast path's in-place index odometer.
+            let kept: Vec<usize> = (0..in_dims.len()).filter(|d| !dims.contains(d)).collect();
+            let sizes: Vec<i64> = dims.iter().map(|&d| in_dims[d]).collect();
+            let mut pb = ProgBuilder::new(in_dims.len());
             let out = emit_expr(ctx, &mut pb, operand, IndexMap::identity(), true)?;
-            Ok(LoopKind::Reduce { kind, dims, in_dims, operand: pb.finish(out) })
+            Ok(LoopKind::Reduce { kind, dims, in_dims, operand: pb.finish(out), kept, sizes })
         }
         Opcode::BatchDot => {
             let (l, r) = (instr.operands[0], instr.operands[1]);
             let lhs_dims = ctx.comp.get(l).shape.dims.clone();
             let rhs_dims = ctx.comp.get(r).shape.dims.clone();
-            let mut pl = ProgBuilder::default();
+            let rank = instr.shape.dims.len();
+            let mut pl = ProgBuilder::new(rank);
             let lo = emit_expr(ctx, &mut pl, l, IndexMap::identity(), true)?;
-            let mut pr = ProgBuilder::default();
+            let mut pr = ProgBuilder::new(rank);
             let ro = emit_expr(ctx, &mut pr, r, IndexMap::identity(), true)?;
             Ok(LoopKind::Dot { lhs: pl.finish(lo), rhs: pr.finish(ro), lhs_dims, rhs_dims })
         }
         _ => {
-            let mut pb = ProgBuilder::default();
+            let mut pb = ProgBuilder::new(instr.shape.dims.len());
             let out = emit_expr(ctx, &mut pb, id, IndexMap::identity(), false)?;
             Ok(LoopKind::Map { prog: pb.finish(out) })
         }
@@ -432,12 +473,17 @@ fn emit_expr_uncached(
         if chunk_aligned {
             if let Some(meta) = ctx.slots.get(&id) {
                 let dst = pb.reg();
+                let sched_lin =
+                    compile_affine_sched(&map, pb.rank, &meta.dims, meta.sched.sched_type);
                 pb.code.push(TInstr::LoadShared {
                     dst,
                     offset: meta.offset,
                     owner: id,
                     owner_dims: meta.dims.clone(),
                     owner_sched: meta.sched,
+                    slot: ctx.slot_of[&meta.offset],
+                    chunk: sched_chunk(meta.sched, &meta.dims),
+                    sched_lin,
                     map,
                 });
                 return Ok(dst);
@@ -518,7 +564,9 @@ fn emit_expr_uncached(
             for &o in &instr.operands {
                 total += ctx.comp.get(o).shape.dims[cdim];
                 limits.push(total);
-                let mut sub = ProgBuilder::default();
+                // Case programs evaluate at the rebased operand index,
+                // whose rank equals the concat's.
+                let mut sub = ProgBuilder::new(ctx.comp.get(o).shape.dims.len());
                 let r = emit_expr(ctx, &mut sub, o, IndexMap::identity(), true)?;
                 cases.push(sub.finish(r));
             }
@@ -532,11 +580,19 @@ fn emit_expr_uncached(
             // output, readable within the executing block's chunk.
             if let Some(&owner_sched) = ctx.root_scheds.get(&id) {
                 let dst = pb.reg();
+                let dims = instr.shape.dims.clone();
+                let lin = compile_affine(&map, pb.rank, &dims);
+                let sched_lin =
+                    compile_affine_sched(&map, pb.rank, &dims, owner_sched.sched_type);
                 pb.code.push(TInstr::LoadOwned {
                     dst,
                     src: id,
-                    dims: instr.shape.dims.clone(),
+                    chunk: sched_chunk(owner_sched, &dims),
+                    dims,
                     owner_sched,
+                    lin,
+                    sched_lin,
+                    buf: None, // baked by the memory planner
                     map,
                 });
                 return Ok(dst);
@@ -583,10 +639,14 @@ fn emit_global(
             }
             _ => {
                 let dst = pb.reg();
+                let dims = instr.shape.dims.clone();
+                let lin = compile_affine(&map, pb.rank, &dims);
                 pb.code.push(TInstr::LoadGlobal {
                     dst,
                     src: id,
-                    dims: instr.shape.dims.clone(),
+                    dims,
+                    lin,
+                    buf: None, // baked by the memory planner
                     map,
                 });
                 return Ok(dst);

@@ -20,10 +20,12 @@
 //!   written in the same launch (no cross-block synchronization).
 
 use super::bytecode::{
-    chunk_index, chunk_offset, linearize, sched_blocks, sched_chunk, BlockStep, KernelProgram,
-    LoopKind, TInstr, ThreadProg, WriteTarget, CONST_FILL,
+    chunk_index, chunk_index_into, chunk_offset, linearize, sched_blocks, sched_chunk,
+    sched_linearize, BlockStep, KernelProgram, LoopKind, ShmRegion, TInstr, ThreadProg,
+    WriteTarget, CONST_FILL,
 };
 use super::ledger::LaunchLedger;
+use super::memplan::{BufSlot, MemoryPlan};
 use crate::hlo::instruction::ReduceKind;
 use crate::hlo::InstrId;
 use anyhow::{anyhow, bail};
@@ -38,11 +40,13 @@ pub struct ParamSpec {
 }
 
 /// A flat-buffer read: the resolved source instruction and the dims the
-/// reader sees (bitcast aliases resolved at lowering).
+/// reader sees (bitcast aliases resolved at lowering). `slot` is the
+/// source's arena range, baked by the memory planner.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BufRead {
     pub src: InstrId,
     pub dims: Vec<i64>,
+    pub slot: Option<BufSlot>,
 }
 
 /// A vendor-library launch (cuBLAS/cuDNN class — LC-layer ops).
@@ -60,6 +64,8 @@ pub struct LibraryCall {
     pub out_dims: Vec<i64>,
     pub out_elems: usize,
     pub kind: LibKind,
+    /// The output's arena range, baked by the memory planner.
+    pub out_slot: Option<BufSlot>,
 }
 
 /// One launch of the compiled module.
@@ -84,6 +90,10 @@ pub struct StitchedExecutable {
     pub root_elems: usize,
     /// Size of the value arena (instruction count of the source module).
     pub n_values: usize,
+    /// The static buffer assignment: one flat-arena range per
+    /// materialized value, lifetime-disjoint ranges reused
+    /// ([`crate::exec::memplan`]).
+    pub mem: MemoryPlan,
 }
 
 impl StitchedExecutable {
@@ -116,8 +126,97 @@ impl StitchedExecutable {
     }
 
     /// Execute with one flattened f32 buffer per parameter; returns the
-    /// module result and the launch ledger of this run.
+    /// module result and the launch ledger of this run. Convenience
+    /// wrapper over [`StitchedExecutable::run_into`] with a throwaway
+    /// arena — serving paths keep a pooled [`ExecArena`] instead so
+    /// steady-state runs allocate nothing.
     pub fn run(&self, inputs: &[Vec<f32>]) -> crate::Result<(Vec<f32>, LaunchLedger)> {
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut arena = ExecArena::default();
+        let mut out = Vec::new();
+        let ledger = self.run_into(&refs, &mut arena, &mut out)?;
+        Ok((out, ledger))
+    }
+
+    /// The fast execute path: memory-planned, specialized,
+    /// block-parallel. Inputs are written into the pooled arena exactly
+    /// once; every intermediate lives at its planned arena range; the
+    /// grid loop of each launch fans out over the arena's VM threads
+    /// when the launch is big enough to pay for it. The result lands in
+    /// `out` (cleared and reused). Outputs and the launch ledger are
+    /// bit-identical to [`StitchedExecutable::run_boxed`] at any thread
+    /// count — the corpus-wide differential suite gates on it.
+    pub fn run_into(
+        &self,
+        inputs: &[&[f32]],
+        arena: &mut ExecArena,
+        out: &mut Vec<f32>,
+    ) -> crate::Result<LaunchLedger> {
+        if inputs.len() != self.params.len() {
+            bail!("{}: expected {} inputs, got {}", self.name, self.params.len(), inputs.len());
+        }
+        for (spec, buf) in self.params.iter().zip(inputs) {
+            if buf.len() != spec.elems {
+                bail!(
+                    "{}: parameter {} expects {} elements, got {}",
+                    self.name,
+                    spec.name,
+                    spec.elems,
+                    buf.len()
+                );
+            }
+        }
+        if arena.data.len() < self.mem.arena_elems {
+            arena.data.resize(self.mem.arena_elems, 0.0);
+            arena.grows += 1;
+        } else {
+            arena.reuses += 1;
+        }
+        let threads = arena.resolved_threads();
+        // Inputs are written into the arena exactly once per run — no
+        // per-parameter clone, no re-copy downstream.
+        for (spec, buf) in self.params.iter().zip(inputs) {
+            if let Some(slot) = self.mem.slots[spec.id.0] {
+                arena.data[slot.off..slot.off + buf.len()].copy_from_slice(buf);
+            }
+        }
+        for &(id, elems) in &self.consts {
+            if let Some(slot) = self.mem.slots[id.0] {
+                arena.data[slot.off..slot.off + elems.max(1)].fill(CONST_FILL);
+            }
+        }
+
+        let mut ledger = LaunchLedger::default();
+        let ExecArena { data, scratch, .. } = arena;
+        for launch in &self.launches {
+            match launch {
+                Launch::Kernel(k) => {
+                    run_kernel_fast(k, &self.mem, data, scratch, threads, &mut ledger)?;
+                    ledger.generated += 1;
+                }
+                Launch::Library(l) => {
+                    run_library_fast(l, data)?;
+                    ledger.library += 1;
+                }
+            }
+        }
+
+        let root = self.mem.slots[self.root.0]
+            .ok_or_else(|| anyhow!("{}: root value was never produced", self.name))?;
+        out.clear();
+        // `root_elems` is the true element count — the planner pads
+        // zero-sized values to one arena element, and a degenerate
+        // (0-element) root must still come back empty like the boxed
+        // path's `vec![0f32; 0]`.
+        out.extend_from_slice(&data[root.off..root.off + root.elems.min(self.root_elems)]);
+        Ok(ledger)
+    }
+
+    /// The PR-2 reference path: every value in its own boxed buffer,
+    /// tree-walking evaluation, single-threaded. Kept verbatim as the
+    /// bit-identity baseline for the memory-planned VM (differential
+    /// tests and `benches/vm_wallclock.rs` compare against it).
+    pub fn run_boxed(&self, inputs: &[Vec<f32>]) -> crate::Result<(Vec<f32>, LaunchLedger)> {
         if inputs.len() != self.params.len() {
             bail!("{}: expected {} inputs, got {}", self.name, self.params.len(), inputs.len());
         }
@@ -157,6 +256,586 @@ impl StitchedExecutable {
             .ok_or_else(|| anyhow!("{}: root value was never produced", self.name))?;
         Ok((out, ledger))
     }
+}
+
+// ---------------------------------------------------------------------
+// Pooled execution state (the fast path)
+// ---------------------------------------------------------------------
+
+/// Don't fan a launch out unless its total element work clears this —
+/// scoped-thread startup costs tens of microseconds, which tiny
+/// kernels cannot amortize.
+const PAR_MIN_ELEMS: i64 = 16_384;
+
+/// Pooled per-worker execution state: the flat value arena plus one
+/// scratch set per VM thread. A serving worker keeps one `ExecArena`
+/// for its lifetime; after the first run on a model the arena has
+/// reached the plan's high-water mark and steady-state execution
+/// performs **zero arena allocations** — `reuses()` counts exactly
+/// those runs (surfaced in serving stats).
+#[derive(Debug, Default)]
+pub struct ExecArena {
+    data: Vec<f32>,
+    scratch: Vec<ThreadScratch>,
+    /// VM thread cap; 0 = the process default
+    /// ([`crate::exec::par::default_threads`]).
+    threads: usize,
+    grows: u64,
+    reuses: u64,
+}
+
+impl ExecArena {
+    pub fn new() -> Self {
+        ExecArena::default()
+    }
+
+    /// An arena capped at `threads` VM threads (`0` = process default).
+    /// A serving pool divides cores between its workers this way so
+    /// shards times VM threads never oversubscribes the machine.
+    pub fn with_threads(threads: usize) -> Self {
+        ExecArena { threads, ..ExecArena::default() }
+    }
+
+    fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            super::par::default_threads()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Times the arena buffer had to grow (at most once per distinct
+    /// plan size served by this arena).
+    pub fn grows(&self) -> u64 {
+        self.grows
+    }
+
+    /// Runs served entirely from resident memory — the steady-state
+    /// counter behind the serving-path zero-allocation gate.
+    pub fn reuses(&self) -> u64 {
+        self.reuses
+    }
+}
+
+/// Per-VM-thread scratch: the block's shared-memory buffer and owner
+/// table, the chunk staging buffer, the register stack and reusable
+/// index buffers. Everything grows to its high-water mark once and is
+/// then reused across blocks, launches and runs.
+#[derive(Debug, Default)]
+struct ThreadScratch {
+    shm: Vec<f32>,
+    owners: Vec<Option<InstrId>>,
+    vals: Vec<f32>,
+    regs: Vec<f32>,
+    pool: IdxPool,
+    idx: Vec<i64>,
+    idx_a: Vec<i64>,
+    idx_b: Vec<i64>,
+}
+
+/// A checkout pool of index buffers for the (rare) non-affine paths
+/// and `Branch` dispatch — recursion-safe, allocation-free once warm.
+#[derive(Debug, Default)]
+struct IdxPool {
+    bufs: Vec<Vec<i64>>,
+}
+
+impl IdxPool {
+    fn take(&mut self) -> Vec<i64> {
+        self.bufs.pop().unwrap_or_default()
+    }
+
+    fn put(&mut self, buf: Vec<i64>) {
+        self.bufs.push(buf);
+    }
+}
+
+/// Raw-pointer view over the value arena, shared by the VM threads of
+/// one launch.
+///
+/// SAFETY invariants (upheld by construction, tested by the
+/// differential suite):
+/// - concurrent blocks write *disjoint* element sets of each output
+///   buffer (the chunk partition theorem — see
+///   `chunk_partition_covers_every_element_once`);
+/// - during a launch, reads target either values produced by earlier
+///   launches (no writer this launch) or the executing block's own
+///   chunk of a same-launch output (written by the same thread);
+/// - all access goes through `get`/`set` (no `&`/`&mut` slices are
+///   formed over concurrently-written memory).
+#[derive(Clone, Copy)]
+struct ArenaView<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _marker: std::marker::PhantomData<&'a mut f32>,
+}
+
+unsafe impl Send for ArenaView<'_> {}
+unsafe impl Sync for ArenaView<'_> {}
+
+impl<'a> ArenaView<'a> {
+    fn new(data: &'a mut [f32]) -> Self {
+        ArenaView { ptr: data.as_mut_ptr(), len: data.len(), _marker: std::marker::PhantomData }
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> f32 {
+        assert!(i < self.len, "arena read out of range");
+        unsafe { *self.ptr.add(i) }
+    }
+
+    #[inline]
+    fn set(&self, i: usize, v: f32) {
+        assert!(i < self.len, "arena write out of range");
+        unsafe { *self.ptr.add(i) = v }
+    }
+}
+
+/// Immutable per-block context for fast thread-program evaluation.
+/// `'v` is the arena borrow (the whole launch), `'a` the per-step
+/// borrows of the block's scratch.
+struct FastCtx<'v, 'a> {
+    view: &'a ArenaView<'v>,
+    shm: &'a [f32],
+    owners: &'a [Option<InstrId>],
+    regions: &'a [ShmRegion],
+    block: i64,
+}
+
+fn run_kernel_fast(
+    k: &KernelProgram,
+    mem: &MemoryPlan,
+    data: &mut Vec<f32>,
+    scratch: &mut Vec<ThreadScratch>,
+    max_threads: usize,
+    ledger: &mut LaunchLedger,
+) -> crate::Result<()> {
+    // Fresh zeroed outputs, matching the boxed path's per-run
+    // allocation (arena reuse may leave stale bytes behind).
+    for &(root, _) in &k.outputs {
+        let slot = mem.slots[root.0]
+            .ok_or_else(|| anyhow!("output %{} has no arena slot", root.0))?;
+        data[slot.off..slot.off + slot.elems].fill(0.0);
+    }
+    let blocks = k.blocks.max(1) as i64;
+    let per_block: i64 = k
+        .steps
+        .iter()
+        .map(|s| match s {
+            BlockStep::Loop { dims, sched, .. } => sched_chunk(*sched, dims),
+            BlockStep::Barrier => 0,
+        })
+        .sum();
+    let shm_elems = k.shm_regions.iter().map(|r| r.base + r.elems).max().unwrap_or(0);
+    let workers = if max_threads > 1
+        && blocks > 1
+        && per_block.saturating_mul(blocks) >= PAR_MIN_ELEMS
+    {
+        max_threads.min(blocks as usize)
+    } else {
+        1
+    };
+    while scratch.len() < workers {
+        scratch.push(ThreadScratch::default());
+    }
+    for s in scratch[..workers].iter_mut() {
+        if s.shm.len() < shm_elems {
+            s.shm.resize(shm_elems, 0.0);
+        }
+    }
+    let view = ArenaView::new(data);
+    let results = super::par::fan_out(&mut scratch[..workers], |t, s| {
+        let mut lg = LaunchLedger::default();
+        for b in super::par::block_range(blocks, workers, t) {
+            exec_block(k, mem, &view, b, s, &mut lg)?;
+        }
+        Ok::<LaunchLedger, anyhow::Error>(lg)
+    });
+    // Fold per-worker ledgers in worker order: u64 sums are
+    // order-independent, so counts match the boxed path exactly; the
+    // first error in worker (= block) order wins.
+    for r in results {
+        ledger.merge(&r?);
+    }
+    Ok(())
+}
+
+fn exec_block(
+    k: &KernelProgram,
+    mem: &MemoryPlan,
+    view: &ArenaView<'_>,
+    b: i64,
+    s: &mut ThreadScratch,
+    lg: &mut LaunchLedger,
+) -> crate::Result<()> {
+    let ThreadScratch { shm, owners, vals, regs, pool, idx, idx_a, idx_b } = s;
+    owners.clear();
+    owners.resize(k.shm_regions.len(), None);
+    for step in &k.steps {
+        match step {
+            BlockStep::Barrier => lg.barriers += 1,
+            BlockStep::Loop { op, dims, sched, kind, write } => {
+                let grid = sched_blocks(*sched, dims);
+                if b >= grid {
+                    continue; // guarded-off block for this loop
+                }
+                let chunk = sched_chunk(*sched, dims);
+                match write {
+                    WriteTarget::Shared { slot, .. } => {
+                        // Stage the chunk, then publish region + owner
+                        // atomically — an op whose region space-shares
+                        // with an operand's must not see its own partial
+                        // writes (same contract as the boxed path).
+                        vals.clear();
+                        vals.resize(chunk as usize, 0.0);
+                        {
+                            let ctx = FastCtx {
+                                view,
+                                shm: shm.as_slice(),
+                                owners: owners.as_slice(),
+                                regions: &k.shm_regions,
+                                block: b,
+                            };
+                            for e in 0..chunk {
+                                chunk_index_into(*sched, dims, b, e, idx);
+                                vals[e as usize] =
+                                    compute_element_fast(kind, idx, &ctx, regs, pool, idx_a, idx_b)
+                                        .map_err(|err| {
+                                            anyhow!("kernel {} %{}: {err}", k.name, op.0)
+                                        })?;
+                                lg.thread_elems += 1;
+                            }
+                        }
+                        let region = k.shm_regions[*slot];
+                        shm[region.base..region.base + chunk as usize]
+                            .copy_from_slice(&vals[..chunk as usize]);
+                        owners[*slot] = Some(*op);
+                    }
+                    WriteTarget::Output => {
+                        let out_slot = mem.slots[op.0]
+                            .ok_or_else(|| anyhow!("output %{} not allocated", op.0))?;
+                        let ctx = FastCtx {
+                            view,
+                            shm: shm.as_slice(),
+                            owners: owners.as_slice(),
+                            regions: &k.shm_regions,
+                            block: b,
+                        };
+                        for e in 0..chunk {
+                            chunk_index_into(*sched, dims, b, e, idx);
+                            let v =
+                                compute_element_fast(kind, idx, &ctx, regs, pool, idx_a, idx_b)
+                                    .map_err(|err| anyhow!("kernel {} %{}: {err}", k.name, op.0))?;
+                            lg.thread_elems += 1;
+                            let lin = linearize(idx, dims) as usize;
+                            view.set(out_slot.off + lin, v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    lg.block_iters += 1;
+    Ok(())
+}
+
+fn compute_element_fast(
+    kind: &LoopKind,
+    idx: &[i64],
+    ctx: &FastCtx<'_, '_>,
+    regs: &mut Vec<f32>,
+    pool: &mut IdxPool,
+    idx_a: &mut Vec<i64>,
+    idx_b: &mut Vec<i64>,
+) -> crate::Result<f32> {
+    match kind {
+        LoopKind::Map { prog } => eval_prog_fast(prog, idx, ctx, regs, pool, 0),
+        LoopKind::Reduce { kind, dims, in_dims, operand, kept, sizes } => {
+            // Same input-index walk as the boxed path (kept dims take
+            // the output index, reduced dims count up row-major, dims
+            // ascending), but with an in-place odometer instead of a
+            // per-step delinearize.
+            idx_a.clear();
+            idx_a.resize(in_dims.len(), 0);
+            for (kdim, &d) in kept.iter().enumerate() {
+                idx_a[d] = idx[kdim];
+            }
+            let n: i64 = sizes.iter().product::<i64>().max(1);
+            let mut acc = reduce_init(*kind);
+            for _ in 0..n {
+                let v = eval_prog_fast(operand, idx_a, ctx, regs, pool, 0)?;
+                acc = reduce_combine(*kind, acc, v);
+                for j in (0..dims.len()).rev() {
+                    let d = dims[j];
+                    idx_a[d] += 1;
+                    if idx_a[d] < sizes[j] {
+                        break;
+                    }
+                    idx_a[d] = 0;
+                }
+            }
+            Ok(reduce_finish(*kind, acc, n))
+        }
+        LoopKind::Dot { lhs, rhs, lhs_dims, rhs_dims } => {
+            let r = idx.len();
+            debug_assert!(r >= 2);
+            let kk = lhs_dims[r - 1];
+            debug_assert_eq!(kk, rhs_dims[r - 2]);
+            idx_a.clear();
+            idx_a.extend_from_slice(idx);
+            idx_b.clear();
+            idx_b.extend_from_slice(idx);
+            let mut acc = 0f32;
+            for kdim in 0..kk {
+                idx_a[r - 1] = kdim;
+                idx_b[r - 2] = kdim;
+                acc += eval_prog_fast(lhs, idx_a, ctx, regs, pool, 0)?
+                    * eval_prog_fast(rhs, idx_b, ctx, regs, pool, 0)?;
+            }
+            Ok(acc)
+        }
+    }
+}
+
+fn eval_prog_fast(
+    prog: &ThreadProg,
+    idx: &[i64],
+    ctx: &FastCtx<'_, '_>,
+    regs: &mut Vec<f32>,
+    pool: &mut IdxPool,
+    base: usize,
+) -> crate::Result<f32> {
+    let need = base + prog.n_regs.max(1) as usize;
+    if regs.len() < need {
+        regs.resize(need, 0.0);
+    }
+    for ins in &prog.code {
+        match ins {
+            TInstr::Const { dst, value } => regs[base + *dst as usize] = *value,
+            TInstr::LoadGlobal { dst, src, dims, map, lin, buf } => {
+                let slot = buf
+                    .ok_or_else(|| anyhow!("load of %{} is unresolved (no memory plan)", src.0))?;
+                let off = match lin {
+                    Some(a) => {
+                        let l = a.apply(idx);
+                        debug_assert_eq!(
+                            l,
+                            linearize(&map.apply(idx), dims),
+                            "affine load of %{} diverged from the interpreted map",
+                            src.0
+                        );
+                        l
+                    }
+                    None => {
+                        let mut j = pool.take();
+                        let mut t = pool.take();
+                        map.apply_into(idx, &mut j, &mut t);
+                        let l = linearize(&j, dims);
+                        pool.put(t);
+                        pool.put(j);
+                        l
+                    }
+                };
+                if off < 0 || off as usize >= slot.elems {
+                    bail!("%{}: offset {off} out of bounds for dims {dims:?}", src.0);
+                }
+                regs[base + *dst as usize] = ctx.view.get(slot.off + off as usize);
+            }
+            TInstr::LoadShared {
+                dst,
+                offset,
+                owner,
+                owner_dims,
+                owner_sched,
+                map,
+                slot,
+                chunk,
+                sched_lin,
+            } => {
+                match ctx.owners[*slot] {
+                    Some(h) if h == *owner => {}
+                    Some(h) => bail!(
+                        "shared region at offset {offset} holds %{} but %{} was expected \
+                         (space-sharing violation)",
+                        h.0,
+                        owner.0
+                    ),
+                    None => {
+                        bail!("shared region at offset {offset} read before any write")
+                    }
+                }
+                let l = match sched_lin {
+                    Some(a) => {
+                        let l = a.apply(idx);
+                        debug_assert_eq!(
+                            l,
+                            sched_linearize(owner_sched.sched_type, owner_dims, &map.apply(idx)),
+                            "affine shared read of %{} diverged",
+                            owner.0
+                        );
+                        l
+                    }
+                    None => {
+                        let mut j = pool.take();
+                        let mut t = pool.take();
+                        map.apply_into(idx, &mut j, &mut t);
+                        let l = sched_linearize(owner_sched.sched_type, owner_dims, &j);
+                        pool.put(t);
+                        pool.put(j);
+                        l
+                    }
+                };
+                let start = ctx.block * chunk;
+                if l < start || l >= start + chunk {
+                    bail!(
+                        "block {} reads %{} outside its shared chunk \
+                         (stitching invariant violated)",
+                        ctx.block,
+                        owner.0
+                    );
+                }
+                let region = ctx.regions[*slot];
+                regs[base + *dst as usize] = ctx.shm[region.base + (l - start) as usize];
+            }
+            TInstr::LoadOwned { dst, src, dims, owner_sched, map, chunk, lin, sched_lin, buf } => {
+                let slot = buf
+                    .ok_or_else(|| anyhow!("load of %{} is unresolved (no memory plan)", src.0))?;
+                let (l_row, l_sched) = match (lin, sched_lin) {
+                    (Some(a), Some(sa)) => {
+                        let lr = a.apply(idx);
+                        let ls = sa.apply(idx);
+                        debug_assert_eq!(lr, linearize(&map.apply(idx), dims));
+                        debug_assert_eq!(
+                            ls,
+                            sched_linearize(owner_sched.sched_type, dims, &map.apply(idx))
+                        );
+                        (lr, ls)
+                    }
+                    _ => {
+                        let mut j = pool.take();
+                        let mut t = pool.take();
+                        map.apply_into(idx, &mut j, &mut t);
+                        let lr = linearize(&j, dims);
+                        let ls = sched_linearize(owner_sched.sched_type, dims, &j);
+                        pool.put(t);
+                        pool.put(j);
+                        (lr, ls)
+                    }
+                };
+                let start = ctx.block * chunk;
+                if l_sched < start || l_sched >= start + chunk {
+                    bail!(
+                        "block {} reads root %{} outside its own chunk \
+                         (no cross-block synchronization exists)",
+                        ctx.block,
+                        src.0
+                    );
+                }
+                if l_row < 0 || l_row as usize >= slot.elems {
+                    bail!("%{}: offset {l_row} out of bounds for dims {dims:?}", src.0);
+                }
+                regs[base + *dst as usize] = ctx.view.get(slot.off + l_row as usize);
+            }
+            TInstr::Unary { dst, a, op } => {
+                regs[base + *dst as usize] = op.apply(regs[base + *a as usize]);
+            }
+            TInstr::Binary { dst, a, b, op } => {
+                regs[base + *dst as usize] =
+                    op.apply(regs[base + *a as usize], regs[base + *b as usize]);
+            }
+            TInstr::Select { dst, pred, on_true, on_false } => {
+                regs[base + *dst as usize] = if regs[base + *pred as usize] != 0.0 {
+                    regs[base + *on_true as usize]
+                } else {
+                    regs[base + *on_false as usize]
+                };
+            }
+            TInstr::Branch { dst, map, dim, limits, cases } => {
+                let mut j = pool.take();
+                let mut t = pool.take();
+                map.apply_into(idx, &mut j, &mut t);
+                pool.put(t);
+                let x = j[*dim];
+                let mut case = None;
+                let mut prev = 0i64;
+                for (i, &l) in limits.iter().enumerate() {
+                    if x < l {
+                        case = Some((i, prev));
+                        break;
+                    }
+                    prev = l;
+                }
+                let Some((ci, start)) = case else {
+                    bail!("concat index {x} out of range {limits:?}")
+                };
+                j[*dim] = x - start;
+                // Sub-program registers live above this frame, so the
+                // shared register stack never reallocates per element.
+                let sub =
+                    eval_prog_fast(&cases[ci], &j, ctx, regs, pool, base + prog.n_regs as usize);
+                pool.put(j);
+                regs[base + *dst as usize] = sub?;
+            }
+        }
+    }
+    Ok(regs[base + prog.out as usize])
+}
+
+/// Split the arena into two read views and one write view with the
+/// planner's guarantee (output disjoint from inputs) verified at
+/// runtime — a violation is a planner bug and fails loudly.
+fn split_read2_write1(
+    data: &mut [f32],
+    a: BufSlot,
+    b: BufSlot,
+    o: BufSlot,
+) -> crate::Result<(&[f32], &[f32], &mut [f32])> {
+    let disjoint =
+        |x: BufSlot, y: BufSlot| x.off + x.elems <= y.off || y.off + y.elems <= x.off;
+    if !disjoint(a, o) || !disjoint(b, o) {
+        bail!("memory plan violation: library output range overlaps an input range");
+    }
+    let n = data.len();
+    if a.off + a.elems > n || b.off + b.elems > n || o.off + o.elems > n {
+        bail!("memory plan violation: range exceeds the arena");
+    }
+    // SAFETY: the output range is disjoint from both input ranges
+    // (checked above), so the mutable slice never aliases the shared
+    // ones; the inputs may alias each other, which is fine for shared
+    // references. All ranges are in bounds (checked above).
+    let ptr = data.as_mut_ptr();
+    unsafe {
+        Ok((
+            std::slice::from_raw_parts(ptr.add(a.off), a.elems),
+            std::slice::from_raw_parts(ptr.add(b.off), b.elems),
+            std::slice::from_raw_parts_mut(ptr.add(o.off), o.elems),
+        ))
+    }
+}
+
+fn run_library_fast(l: &LibraryCall, data: &mut [f32]) -> crate::Result<()> {
+    let out_slot = l
+        .out_slot
+        .ok_or_else(|| anyhow!("library %{} output is unresolved (no memory plan)", l.op.0))?;
+    let unresolved =
+        |r: &BufRead| anyhow!("library operand %{} is unresolved (no memory plan)", r.src.0);
+    match &l.kind {
+        LibKind::Dot { lhs, rhs } => {
+            let a = lhs.slot.ok_or_else(|| unresolved(lhs))?;
+            let b = rhs.slot.ok_or_else(|| unresolved(rhs))?;
+            let (av, bv, ov) = split_read2_write1(data, a, b, out_slot)?;
+            ov.fill(0.0);
+            dot_into(ov, av, &lhs.dims, bv, &rhs.dims, &l.out_dims);
+        }
+        LibKind::Conv2d { input, filter } => {
+            let x = input.slot.ok_or_else(|| unresolved(input))?;
+            let w = filter.slot.ok_or_else(|| unresolved(filter))?;
+            let (xv, wv, ov) = split_read2_write1(data, x, w, out_slot)?;
+            ov.fill(0.0);
+            conv2d_same_into(ov, xv, &input.dims, wv, &filter.dims);
+        }
+    }
+    Ok(())
 }
 
 /// Per-block evaluation context handed to thread programs.
@@ -203,7 +882,7 @@ fn run_kernel(
                         }
                     }
                     match write {
-                        WriteTarget::Shared { offset } => {
+                        WriteTarget::Shared { offset, .. } => {
                             shm.insert(*offset, (*op, vals));
                         }
                         WriteTarget::Output => {
@@ -228,7 +907,7 @@ fn run_kernel(
 fn compute_element(kind: &LoopKind, idx: &[i64], ctx: &EvalCtx<'_>) -> crate::Result<f32> {
     match kind {
         LoopKind::Map { prog } => eval_prog(prog, idx, ctx),
-        LoopKind::Reduce { kind, dims, in_dims, operand } => {
+        LoopKind::Reduce { kind, dims, in_dims, operand, .. } => {
             // Rebuild the input index: kept dims take the output index,
             // reduced dims iterate row-major (dims ascending) — the same
             // order the op-by-op interpreter uses, so accumulation is
@@ -299,7 +978,7 @@ fn eval_prog(prog: &ThreadProg, idx: &[i64], ctx: &EvalCtx<'_>) -> crate::Result
     for ins in &prog.code {
         match ins {
             TInstr::Const { dst, value } => regs[*dst as usize] = *value,
-            TInstr::LoadGlobal { dst, src, dims, map } => {
+            TInstr::LoadGlobal { dst, src, dims, map, .. } => {
                 let j = map.apply(idx);
                 let lin = linearize(&j, dims);
                 let buf = ctx.values[src.0]
@@ -309,7 +988,7 @@ fn eval_prog(prog: &ThreadProg, idx: &[i64], ctx: &EvalCtx<'_>) -> crate::Result
                     anyhow!("%{}: index {j:?} out of bounds for dims {dims:?}", src.0)
                 })?;
             }
-            TInstr::LoadShared { dst, offset, owner, owner_dims, owner_sched, map } => {
+            TInstr::LoadShared { dst, offset, owner, owner_dims, owner_sched, map, .. } => {
                 let j = map.apply(idx);
                 let (holder, buf) = ctx.shm.get(offset).ok_or_else(|| {
                     anyhow!("shared region at offset {offset} read before any write")
@@ -334,7 +1013,7 @@ fn eval_prog(prog: &ThreadProg, idx: &[i64], ctx: &EvalCtx<'_>) -> crate::Result
                 )?;
                 regs[*dst as usize] = buf[local as usize];
             }
-            TInstr::LoadOwned { dst, src, dims, owner_sched, map } => {
+            TInstr::LoadOwned { dst, src, dims, owner_sched, map, .. } => {
                 let j = map.apply(idx);
                 if chunk_offset(*owner_sched, dims, ctx.block, &j).is_none() {
                     bail!(
@@ -412,8 +1091,8 @@ fn run_library(l: &LibraryCall, values: &mut [Option<Vec<f32>>]) -> crate::Resul
 }
 
 /// Batched matmul `[..., m, k] x [..., k, n] -> [..., m, n]`; the exact
-/// loop order (k innermost, ascending) is shared with the interpreter
-/// so results are bit-identical.
+/// accumulation order (k ascending per output element) is shared with
+/// the interpreter so results are bit-identical.
 pub(crate) fn dot(
     a: &[f32],
     a_dims: &[i64],
@@ -423,26 +1102,47 @@ pub(crate) fn dot(
 ) -> Vec<f32> {
     let r = out_dims.len();
     let batch: i64 = out_dims[..r - 2].iter().product::<i64>().max(1);
-    let m = out_dims[r - 2];
-    let n = out_dims[r - 1];
-    let k = a_dims[r - 1];
-    debug_assert_eq!(k, b_dims[r - 2]);
-    let mut out = vec![0f32; (batch * m * n) as usize];
-    for bi in 0..batch {
-        let ao = (bi * m * k) as usize;
-        let bo = (bi * k * n) as usize;
-        let oo = (bi * m * n) as usize;
-        for i in 0..m as usize {
-            for j in 0..n as usize {
-                let mut acc = 0f32;
-                for kk in 0..k as usize {
-                    acc += a[ao + i * k as usize + kk] * b[bo + kk * n as usize + j];
+    let mut out = vec![0f32; (batch * out_dims[r - 2] * out_dims[r - 1]) as usize];
+    dot_into(&mut out, a, a_dims, b, b_dims, out_dims);
+    out
+}
+
+/// [`dot`] into a pre-zeroed output slice, cache-blocked: the loops run
+/// i-k-j so the inner loop streams one row of `b` and one row of `out`
+/// at unit stride (instead of striding `b` by `n` per term). Each
+/// `out[i, j]` still receives its `k` terms in ascending order starting
+/// from `0.0`, so the float addition sequence — and therefore the bits
+/// — match the naive j-inner form exactly (asserted by
+/// `dot_blocked_is_bit_identical_to_naive`).
+pub(crate) fn dot_into(
+    out: &mut [f32],
+    a: &[f32],
+    a_dims: &[i64],
+    b: &[f32],
+    b_dims: &[i64],
+    out_dims: &[i64],
+) {
+    let r = out_dims.len();
+    let batch: i64 = out_dims[..r - 2].iter().product::<i64>().max(1);
+    let m = out_dims[r - 2] as usize;
+    let n = out_dims[r - 1] as usize;
+    let k = a_dims[r - 1] as usize;
+    debug_assert_eq!(a_dims[r - 1], b_dims[r - 2]);
+    for bi in 0..batch as usize {
+        let ao = bi * m * k;
+        let bo = bi * k * n;
+        let oo = bi * m * n;
+        for i in 0..m {
+            let arow = &a[ao + i * k..ao + (i + 1) * k];
+            let orow = &mut out[oo + i * n..oo + (i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[bo + kk * n..bo + (kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
                 }
-                out[oo + i * n as usize + j] = acc;
             }
         }
     }
-    out
 }
 
 /// NHWC x HWIO convolution, stride 1, SAME padding (zero fill), the
@@ -454,18 +1154,31 @@ pub(crate) fn conv2d_same(
     w_dims: &[i64],
     out_dims: &[i64],
 ) -> Vec<f32> {
+    let mut out = vec![0f32; out_dims.iter().product::<i64>() as usize];
+    conv2d_same_into(&mut out, x, x_dims, w, w_dims);
+    out
+}
+
+/// [`conv2d_same`] into an output slice, with the invariant index
+/// arithmetic hoisted out of the channel loop: the input row base and
+/// the filter tap base are computed once per `(kh, kw)` tap instead of
+/// re-deriving `(((khi*kw + kwi)*c + ci2)*co + oi)` per channel. The
+/// loop nesting and every float operation (including the `0.0 * w`
+/// products of zero-padded taps) are unchanged, so outputs are
+/// bit-identical to the naive form (asserted by
+/// `conv2d_hoisted_is_bit_identical_to_naive`).
+pub(crate) fn conv2d_same_into(
+    out: &mut [f32],
+    x: &[f32],
+    x_dims: &[i64],
+    w: &[f32],
+    w_dims: &[i64],
+) {
     let (n, h, wd, c) = (x_dims[0], x_dims[1], x_dims[2], x_dims[3]);
     let (kh, kw, _ci, co) = (w_dims[0], w_dims[1], w_dims[2], w_dims[3]);
     let pad_h = (kh - 1) / 2;
     let pad_w = (kw - 1) / 2;
-    let mut out = vec![0f32; out_dims.iter().product::<i64>() as usize];
-    let xi = |ni: i64, hi: i64, wi: i64, ci2: i64| -> f32 {
-        if hi < 0 || hi >= h || wi < 0 || wi >= wd {
-            0.0
-        } else {
-            x[(((ni * h + hi) * wd + wi) * c + ci2) as usize]
-        }
-    };
+    let (c_u, co_u) = (c as usize, co as usize);
     let mut o = 0usize;
     for ni in 0..n {
         for hi in 0..h {
@@ -473,11 +1186,26 @@ pub(crate) fn conv2d_same(
                 for oi in 0..co {
                     let mut acc = 0f32;
                     for khi in 0..kh {
+                        let ih = hi + khi - pad_h;
+                        let row_ok = ih >= 0 && ih < h;
+                        let x_row = ((ni * h + ih) * wd) * c;
+                        let w_row = khi * kw;
                         for kwi in 0..kw {
-                            for ci2 in 0..c {
-                                let xv = xi(ni, hi + khi - pad_h, wi + kwi - pad_w, ci2);
-                                let wv = w[(((khi * kw + kwi) * c + ci2) * co + oi) as usize];
-                                acc += xv * wv;
+                            let iw = wi + kwi - pad_w;
+                            // filter tap base: w[w_tap + ci2 * co]
+                            let w_tap = ((w_row + kwi) * c * co + oi) as usize;
+                            if row_ok && iw >= 0 && iw < wd {
+                                let xb = (x_row + iw * c) as usize;
+                                for ci2 in 0..c_u {
+                                    acc += x[xb + ci2] * w[w_tap + ci2 * co_u];
+                                }
+                            } else {
+                                // Zero-padded tap: keep the 0.0 * w
+                                // products so NaN/Inf filters propagate
+                                // exactly as in the naive form.
+                                for ci2 in 0..c_u {
+                                    acc += 0.0 * w[w_tap + ci2 * co_u];
+                                }
                             }
                         }
                     }
@@ -487,7 +1215,6 @@ pub(crate) fn conv2d_same(
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -631,6 +1358,167 @@ mod tests {
         assert!((out[1] - (5.0f32).tanh()).abs() < 1e-6);
         assert_eq!(ledger.library, 1);
         assert!(ledger.generated >= 1);
+    }
+
+    /// The pre-PR j-inner matmul, transcribed verbatim: the bitwise
+    /// reference for the cache-blocked [`dot_into`].
+    fn dot_naive(a: &[f32], a_dims: &[i64], b: &[f32], b_dims: &[i64], out_dims: &[i64]) -> Vec<f32> {
+        let r = out_dims.len();
+        let batch: i64 = out_dims[..r - 2].iter().product::<i64>().max(1);
+        let m = out_dims[r - 2];
+        let n = out_dims[r - 1];
+        let k = a_dims[r - 1];
+        assert_eq!(k, b_dims[r - 2]);
+        let mut out = vec![0f32; (batch * m * n) as usize];
+        for bi in 0..batch {
+            let ao = (bi * m * k) as usize;
+            let bo = (bi * k * n) as usize;
+            let oo = (bi * m * n) as usize;
+            for i in 0..m as usize {
+                for j in 0..n as usize {
+                    let mut acc = 0f32;
+                    for kk in 0..k as usize {
+                        acc += a[ao + i * k as usize + kk] * b[bo + kk * n as usize + j];
+                    }
+                    out[oo + i * n as usize + j] = acc;
+                }
+            }
+        }
+        out
+    }
+
+    /// The pre-PR closure-per-tap convolution, transcribed verbatim:
+    /// the bitwise reference for the hoisted [`conv2d_same_into`].
+    fn conv2d_naive(x: &[f32], x_dims: &[i64], w: &[f32], w_dims: &[i64], out_dims: &[i64]) -> Vec<f32> {
+        let (n, h, wd, c) = (x_dims[0], x_dims[1], x_dims[2], x_dims[3]);
+        let (kh, kw, _ci, co) = (w_dims[0], w_dims[1], w_dims[2], w_dims[3]);
+        let pad_h = (kh - 1) / 2;
+        let pad_w = (kw - 1) / 2;
+        let mut out = vec![0f32; out_dims.iter().product::<i64>() as usize];
+        let xi = |ni: i64, hi: i64, wi: i64, ci2: i64| -> f32 {
+            if hi < 0 || hi >= h || wi < 0 || wi >= wd {
+                0.0
+            } else {
+                x[(((ni * h + hi) * wd + wi) * c + ci2) as usize]
+            }
+        };
+        let mut o = 0usize;
+        for ni in 0..n {
+            for hi in 0..h {
+                for wi in 0..wd {
+                    for oi in 0..co {
+                        let mut acc = 0f32;
+                        for khi in 0..kh {
+                            for kwi in 0..kw {
+                                for ci2 in 0..c {
+                                    let xv = xi(ni, hi + khi - pad_h, wi + kwi - pad_w, ci2);
+                                    let wv = w[(((khi * kw + kwi) * c + ci2) * co + oi) as usize];
+                                    acc += xv * wv;
+                                }
+                            }
+                        }
+                        out[o] = acc;
+                        o += 1;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn dot_blocked_is_bit_identical_to_naive() {
+        for (batch, m, k, n, seed) in
+            [(1i64, 7i64, 13i64, 9i64, 1u64), (3, 4, 17, 5, 2), (2, 1, 31, 1, 3), (1, 16, 16, 16, 4)]
+        {
+            let a = fill((batch * m * k) as usize, seed);
+            let b = fill((batch * k * n) as usize, seed + 10);
+            let a_dims = [batch, m, k];
+            let b_dims = [batch, k, n];
+            let out_dims = [batch, m, n];
+            let fast = dot(&a, &a_dims, &b, &b_dims, &out_dims);
+            let naive = dot_naive(&a, &a_dims, &b, &b_dims, &out_dims);
+            assert_eq!(fast.len(), naive.len());
+            for (i, (x, y)) in fast.iter().zip(&naive).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "element {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv2d_hoisted_is_bit_identical_to_naive() {
+        for (n, h, wd, c, kh, kw, co, seed) in
+            [(1i64, 5i64, 5i64, 3i64, 3i64, 3i64, 4i64, 1u64), (2, 7, 4, 2, 5, 3, 1, 2), (1, 1, 1, 1, 1, 1, 1, 3)]
+        {
+            let x = fill((n * h * wd * c) as usize, seed);
+            let w = fill((kh * kw * c * co) as usize, seed + 7);
+            let x_dims = [n, h, wd, c];
+            let w_dims = [kh, kw, c, co];
+            let out_dims = [n, h, wd, co];
+            let fast = conv2d_same(&x, &x_dims, &w, &w_dims, &out_dims);
+            let naive = conv2d_naive(&x, &x_dims, &w, &w_dims, &out_dims);
+            assert_eq!(fast.len(), naive.len());
+            for (i, (a, b)) in fast.iter().zip(&naive).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "element {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_is_bit_identical_to_boxed_and_reuses_the_arena() {
+        // The Fig. 3 pattern again — shared-memory stitching, barriers,
+        // batch-dot — executed on the planned/parallel path vs the
+        // boxed PR-2 reference, at a forced multi-thread count.
+        let (bs, s, d) = (4usize, 16usize, 8usize);
+        let mut b = GraphBuilder::new("fig3");
+        let scores = b.param("scores", Shape::f32(&[bs as i64, s as i64, s as i64]));
+        let v = b.param("v", Shape::f32(&[bs as i64, s as i64, d as i64]));
+        let m = b.reduce(scores, &[2], ReduceKind::Max);
+        let mb = b.broadcast(m, &[bs as i64, s as i64, s as i64], &[0, 1]);
+        let sh = b.sub(scores, mb);
+        let e = b.exp(sh);
+        let sm = b.reduce(e, &[2], ReduceKind::Sum);
+        let sb = b.broadcast(sm, &[bs as i64, s as i64, s as i64], &[0, 1]);
+        let p = b.div(e, sb);
+        let out = b.batch_dot(p, v);
+        let module = Module::new("fig3", b.finish(out));
+        let mut cfg = PipelineConfig::default();
+        cfg.deep.fuse_batch_dot = true;
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let compiled =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+        let exe = lower_to_exec(
+            &module,
+            &compiled.plan,
+            &compiled.kernels,
+            &compiled.generated_group_ids,
+        )
+        .unwrap();
+
+        let inputs = vec![fill(bs * s * s, 11), fill(bs * s * d, 12)];
+        let (boxed_out, boxed_ledger) = exe.run_boxed(&inputs).unwrap();
+
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut arena = ExecArena::with_threads(4);
+        let mut fast_out = Vec::new();
+        let fast_ledger = exe.run_into(&refs, &mut arena, &mut fast_out).unwrap();
+        assert_eq!(fast_ledger, boxed_ledger, "launch ledger must be unchanged");
+        assert_eq!(fast_out.len(), boxed_out.len());
+        for (i, (a, b)) in fast_out.iter().zip(&boxed_out).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "element {i}: {a} vs {b}");
+        }
+
+        // Steady state: the pooled arena never grows again.
+        assert_eq!(arena.grows(), 1);
+        for _ in 0..3 {
+            let l = exe.run_into(&refs, &mut arena, &mut fast_out).unwrap();
+            assert_eq!(l, boxed_ledger);
+        }
+        assert_eq!(arena.grows(), 1, "steady-state runs must not allocate arena memory");
+        assert_eq!(arena.reuses(), 3);
+        // The plan actually packed values tighter than the boxed VM's
+        // one-buffer-per-value layout.
+        assert!(exe.mem.arena_elems <= exe.mem.total_value_elems);
     }
 
     #[test]

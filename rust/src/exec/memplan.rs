@@ -1,0 +1,474 @@
+//! Static buffer assignment for the stitched VM — the memory-planning
+//! pass that makes the hot execute path allocation-free.
+//!
+//! The PR-2 VM materialized every value as its own `Vec<f32>` inside a
+//! `Vec<Option<Vec<f32>>>`, re-allocated on every run; the follow-up
+//! FusionStitching work (arXiv 1911.11576) and the XLA fusion study
+//! (arXiv 2301.13062) both attribute much of fusion's win to buffer
+//! reuse, and a serving worker that mallocs per instruction burns its
+//! core on the allocator instead of the kernel. This pass runs once at
+//! lowering time:
+//!
+//! 1. **Liveness** ([`liveness`]): the launch sequence of a
+//!    [`StitchedExecutable`] is a straight line, so each materialized
+//!    value (parameter, constant, kernel root, library output) has an
+//!    interval `[def, last_use]` over launch points — point `0` is
+//!    entry (parameters/constants), point `i + 1` is launch `i`, and
+//!    the module root is pinned live to the end.
+//! 2. **Assignment** ([`MemoryPlan::compute`]): a deterministic
+//!    first-fit free-list walks the defs in launch order and packs
+//!    every value into one flat `f32` arena; two values share bytes
+//!    only when their lifetimes are disjoint (asserted by unit tests
+//!    and the corpus-wide differential suite).
+//! 3. **Resolution** ([`resolve`]): every per-element load in the
+//!    bytecode gets its operand's `(offset, len)` baked in
+//!    ([`BufSlot`]), so the VM's inner loop does strided address math
+//!    instead of chasing `Option<Vec<f32>>`s.
+//!
+//! At run time a pooled [`super::machine::ExecArena`] holds the arena;
+//! after the first run on a serving worker the plan's high-water mark
+//! is resident and steady-state execution performs **zero arena
+//! allocations** (counted by the arena's reuse counter and surfaced in
+//! serving stats).
+
+use super::bytecode::{BlockStep, LoopKind, TInstr, ThreadProg};
+use super::machine::{Launch, LibKind, LibraryCall, StitchedExecutable};
+
+/// A resolved arena range: where a materialized value lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufSlot {
+    /// Element offset of the value inside the arena.
+    pub off: usize,
+    /// Element length of the value's buffer.
+    pub elems: usize,
+}
+
+/// One value's lifetime over launch points (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ValueLife {
+    /// Launch point that materializes the value (0 = entry).
+    pub def: usize,
+    /// Last launch point that reads it (root: one past the last launch).
+    pub last_use: usize,
+    /// Buffer size in elements (at least 1).
+    pub elems: usize,
+}
+
+impl ValueLife {
+    /// Do two lifetimes overlap in time? Overlapping values must not
+    /// share arena ranges.
+    pub fn overlaps(&self, other: &ValueLife) -> bool {
+        self.def <= other.last_use && other.def <= self.last_use
+    }
+}
+
+/// What the planner decided for one executable: an arena range per
+/// materialized value plus the arena's total extent.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MemoryPlan {
+    /// Indexed by `InstrId.0`; `None` for values that are never
+    /// materialized (thread-composed ops live in registers).
+    pub slots: Vec<Option<BufSlot>>,
+    /// High-water mark of the arena, in elements.
+    pub arena_elems: usize,
+    /// Sum of every materialized value's size, in elements — what the
+    /// boxed VM allocated per run.
+    pub total_value_elems: usize,
+}
+
+/// Plan-level compression numbers, surfaced on `CompiledModule` and in
+/// serving stats so the buffer-reuse win is observable per model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArenaStats {
+    /// Bytes the plan actually reserves (arena high-water mark).
+    pub arena_bytes: usize,
+    /// Bytes the values would need without lifetime reuse.
+    pub value_bytes: usize,
+}
+
+impl ArenaStats {
+    /// How much bigger the un-reused footprint is than the arena
+    /// (`>= 1.0`; `1.0` means no range was ever reused).
+    pub fn reuse_ratio(&self) -> f64 {
+        if self.arena_bytes == 0 {
+            1.0
+        } else {
+            self.value_bytes as f64 / self.arena_bytes as f64
+        }
+    }
+}
+
+impl MemoryPlan {
+    /// An unresolved plan (used while the executable is being built).
+    pub fn unresolved(n_values: usize) -> Self {
+        MemoryPlan { slots: vec![None; n_values], arena_elems: 0, total_value_elems: 0 }
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            arena_bytes: self.arena_elems * std::mem::size_of::<f32>(),
+            value_bytes: self.total_value_elems * std::mem::size_of::<f32>(),
+        }
+    }
+
+    /// Assign every materialized value an arena range with
+    /// lifetime-disjoint reuse. Deterministic: values are placed in
+    /// launch order, first-fit over a coalescing free list.
+    pub fn compute(exe: &StitchedExecutable) -> MemoryPlan {
+        let lives = liveness(exe);
+        let mut slots: Vec<Option<BufSlot>> = vec![None; lives.len()];
+        let mut free = FreeList::default();
+        let mut total = 0usize;
+
+        // Values sorted by def point, stable in id order within a point
+        // — the same order `liveness` assigned defs, so placement is
+        // reproducible across processes.
+        let mut order: Vec<usize> = (0..lives.len()).filter(|&v| lives[v].is_some()).collect();
+        order.sort_by_key(|&v| (lives[v].unwrap().def, v));
+
+        // Sweep: before placing the defs of point `p`, release every
+        // value whose last use is strictly before `p`.
+        let mut expiring: Vec<usize> = order.clone();
+        expiring.sort_by_key(|&v| (lives[v].unwrap().last_use, v));
+        let mut expire_cursor = 0usize;
+        for &v in &order {
+            let life = lives[v].unwrap();
+            while expire_cursor < expiring.len() {
+                let e = expiring[expire_cursor];
+                let el = lives[e].unwrap();
+                if el.last_use >= life.def {
+                    break;
+                }
+                if let Some(slot) = slots[e] {
+                    free.release(slot.off, slot.elems);
+                }
+                expire_cursor += 1;
+            }
+            let off = free.alloc(life.elems);
+            slots[v] = Some(BufSlot { off, elems: life.elems });
+            total += life.elems;
+        }
+
+        MemoryPlan { slots, arena_elems: free.high_water(), total_value_elems: total }
+    }
+}
+
+/// Lifetimes of every materialized value of `exe` over launch points.
+/// Public so the test suite can assert that overlapping lifetimes never
+/// share arena ranges.
+pub fn liveness(exe: &StitchedExecutable) -> Vec<Option<ValueLife>> {
+    let mut lives: Vec<Option<ValueLife>> = vec![None; exe.n_values];
+    let mut define = |id: usize, elems: usize, point: usize| {
+        lives[id] = Some(ValueLife { def: point, last_use: point, elems: elems.max(1) });
+    };
+    for p in &exe.params {
+        define(p.id.0, p.elems, 0);
+    }
+    for &(id, elems) in &exe.consts {
+        define(id.0, elems, 0);
+    }
+    for (li, launch) in exe.launches.iter().enumerate() {
+        let point = li + 1;
+        match launch {
+            Launch::Kernel(k) => {
+                for &(root, elems) in &k.outputs {
+                    lives[root.0] =
+                        Some(ValueLife { def: point, last_use: point, elems: elems.max(1) });
+                }
+                for_each_kernel_read(k, |src| {
+                    if let Some(life) = lives[src].as_mut() {
+                        life.last_use = life.last_use.max(point);
+                    }
+                });
+            }
+            Launch::Library(l) => {
+                lives[l.op.0] =
+                    Some(ValueLife { def: point, last_use: point, elems: l.out_elems.max(1) });
+                for r in library_reads(l) {
+                    if let Some(life) = lives[r].as_mut() {
+                        life.last_use = life.last_use.max(point);
+                    }
+                }
+            }
+        }
+    }
+    // The module result must survive to the end of the run.
+    let end = exe.launches.len() + 1;
+    if let Some(life) = lives[exe.root.0].as_mut() {
+        life.last_use = end;
+    }
+    lives
+}
+
+/// Bake resolved [`BufSlot`]s into every per-element load and library
+/// operand of `exe`, and store the computed plan on the executable.
+/// Called once at the end of lowering.
+pub fn resolve(exe: &mut StitchedExecutable) {
+    let plan = MemoryPlan::compute(exe);
+    for launch in &mut exe.launches {
+        match launch {
+            Launch::Kernel(k) => {
+                for step in &mut k.steps {
+                    if let BlockStep::Loop { kind, .. } = step {
+                        match kind {
+                            LoopKind::Map { prog } => resolve_prog(prog, &plan.slots),
+                            LoopKind::Reduce { operand, .. } => resolve_prog(operand, &plan.slots),
+                            LoopKind::Dot { lhs, rhs, .. } => {
+                                resolve_prog(lhs, &plan.slots);
+                                resolve_prog(rhs, &plan.slots);
+                            }
+                        }
+                    }
+                }
+            }
+            Launch::Library(l) => {
+                l.out_slot = plan.slots[l.op.0];
+                match &mut l.kind {
+                    LibKind::Dot { lhs, rhs } => {
+                        lhs.slot = plan.slots[lhs.src.0];
+                        rhs.slot = plan.slots[rhs.src.0];
+                    }
+                    LibKind::Conv2d { input, filter } => {
+                        input.slot = plan.slots[input.src.0];
+                        filter.slot = plan.slots[filter.src.0];
+                    }
+                }
+            }
+        }
+    }
+    exe.mem = plan;
+}
+
+fn resolve_prog(prog: &mut ThreadProg, slots: &[Option<BufSlot>]) {
+    for ins in &mut prog.code {
+        match ins {
+            TInstr::LoadGlobal { src, buf, .. } => *buf = slots[src.0],
+            TInstr::LoadOwned { src, buf, .. } => *buf = slots[src.0],
+            TInstr::Branch { cases, .. } => {
+                for case in cases {
+                    resolve_prog(case, slots);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Every arena value a kernel launch reads: global loads plus
+/// same-launch root reads (`LoadOwned` — the def and the use share the
+/// launch point, which keeps the range live through the launch).
+fn for_each_kernel_read(k: &super::bytecode::KernelProgram, mut f: impl FnMut(usize)) {
+    fn walk(prog: &ThreadProg, f: &mut impl FnMut(usize)) {
+        for ins in &prog.code {
+            match ins {
+                TInstr::LoadGlobal { src, .. } | TInstr::LoadOwned { src, .. } => f(src.0),
+                TInstr::Branch { cases, .. } => {
+                    for case in cases {
+                        walk(case, f);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    for step in &k.steps {
+        if let BlockStep::Loop { kind, .. } = step {
+            match kind {
+                LoopKind::Map { prog } => walk(prog, &mut f),
+                LoopKind::Reduce { operand, .. } => walk(operand, &mut f),
+                LoopKind::Dot { lhs, rhs, .. } => {
+                    walk(lhs, &mut f);
+                    walk(rhs, &mut f);
+                }
+            }
+        }
+    }
+}
+
+fn library_reads(l: &LibraryCall) -> impl Iterator<Item = usize> {
+    let (a, b) = match &l.kind {
+        LibKind::Dot { lhs, rhs } => (lhs.src.0, rhs.src.0),
+        LibKind::Conv2d { input, filter } => (input.src.0, filter.src.0),
+    };
+    [a, b].into_iter()
+}
+
+/// Deterministic first-fit allocator over one linear address space with
+/// coalescing frees — the whole arena layout is a pure function of the
+/// launch sequence.
+#[derive(Debug, Default)]
+struct FreeList {
+    /// Disjoint free ranges `(off, len)`, sorted by offset, coalesced.
+    free: Vec<(usize, usize)>,
+    high: usize,
+}
+
+impl FreeList {
+    fn alloc(&mut self, len: usize) -> usize {
+        debug_assert!(len > 0);
+        for i in 0..self.free.len() {
+            let (off, flen) = self.free[i];
+            if flen >= len {
+                if flen == len {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (off + len, flen - len);
+                }
+                return off;
+            }
+        }
+        let off = self.high;
+        self.high += len;
+        off
+    }
+
+    fn release(&mut self, off: usize, len: usize) {
+        debug_assert!(len > 0);
+        let i = self.free.partition_point(|&(o, _)| o < off);
+        self.free.insert(i, (off, len));
+        // Coalesce with the right neighbor, then the left.
+        if i + 1 < self.free.len() && self.free[i].0 + self.free[i].1 == self.free[i + 1].0 {
+            self.free[i].1 += self.free[i + 1].1;
+            self.free.remove(i + 1);
+        }
+        if i > 0 && self.free[i - 1].0 + self.free[i - 1].1 == self.free[i].0 {
+            self.free[i - 1].1 += self.free[i].1;
+            self.free.remove(i);
+        }
+    }
+
+    fn high_water(&self) -> usize {
+        self.high
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::pipeline::{compile_module, FusionMode, PipelineConfig};
+    use crate::gpusim::DeviceConfig;
+    use crate::hlo::instruction::ReduceKind;
+    use crate::hlo::{GraphBuilder, Module, Shape};
+    use crate::schedule::PerfLibrary;
+
+    fn lower(module: &Module) -> StitchedExecutable {
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let compiled =
+            compile_module(module, FusionMode::FusionStitching, &mut lib, &PipelineConfig::default())
+                .unwrap();
+        (*compiled.executable.expect("must lower")).clone()
+    }
+
+    #[test]
+    fn free_list_first_fit_and_coalesce() {
+        let mut fl = FreeList::default();
+        let a = fl.alloc(10);
+        let b = fl.alloc(20);
+        let c = fl.alloc(5);
+        assert_eq!((a, b, c), (0, 10, 30));
+        assert_eq!(fl.high_water(), 35);
+        fl.release(a, 10);
+        fl.release(c, 5);
+        // first fit prefers the lowest hole that fits
+        assert_eq!(fl.alloc(8), 0);
+        // release everything; coalescing must rebuild one hole
+        fl.release(0, 8);
+        fl.release(b, 20);
+        assert_eq!(fl.free.len(), 1);
+        assert_eq!(fl.free[0], (0, 35));
+        assert_eq!(fl.alloc(35), 0);
+        assert_eq!(fl.high_water(), 35);
+    }
+
+    #[test]
+    fn overlapping_lifetimes_never_share_ranges() {
+        // softmax-shaped chain: plenty of intermediates with staggered
+        // lifetimes, so both reuse and overlap occur.
+        let mut b = GraphBuilder::new("softmax");
+        let x = b.param("x", Shape::f32(&[32, 64]));
+        let m = b.reduce(x, &[1], ReduceKind::Max);
+        let mb = b.broadcast(m, &[32, 64], &[0]);
+        let sh = b.sub(x, mb);
+        let e = b.exp(sh);
+        let s = b.reduce(e, &[1], ReduceKind::Sum);
+        let sb = b.broadcast(s, &[32, 64], &[0]);
+        let o = b.div(e, sb);
+        let module = Module::new("softmax", b.finish(o));
+        let exe = lower(&module);
+
+        let lives = liveness(&exe);
+        let plan = &exe.mem;
+        assert_eq!(plan.slots.len(), lives.len());
+        for v in 0..lives.len() {
+            let (Some(lv), Some(sv)) = (lives[v], plan.slots[v]) else { continue };
+            assert_eq!(sv.elems, lv.elems);
+            assert!(sv.off + sv.elems <= plan.arena_elems);
+            for w in v + 1..lives.len() {
+                let (Some(lw), Some(sw)) = (lives[w], plan.slots[w]) else { continue };
+                if lv.overlaps(&lw) {
+                    let disjoint = sv.off + sv.elems <= sw.off || sw.off + sw.elems <= sv.off;
+                    assert!(
+                        disjoint,
+                        "values %{v} {lv:?}@{sv:?} and %{w} {lw:?}@{sw:?} overlap in time \
+                         and share arena bytes"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_chain_reuses_retired_ranges() {
+        // dot → tanh → dot → tanh → dot → tanh: library calls pin the
+        // launch boundaries (elementwise fusion cannot collapse them),
+        // and each stage's input dies as the next output is born — the
+        // arena must stay well below the sum of all value sizes.
+        let mut b = GraphBuilder::new("chain");
+        let x = b.param("x", Shape::f32(&[64, 64]));
+        let w = b.param("w", Shape::f32(&[64, 64]));
+        let mut cur = x;
+        for _ in 0..3 {
+            let d = b.dot(cur, w);
+            cur = b.tanh(d);
+        }
+        let module = Module::new("chain", b.finish(cur));
+        let exe = lower(&module);
+        let plan = &exe.mem;
+        assert!(
+            exe.launches.len() >= 6,
+            "3 library calls + 3 kernels expected, got {}",
+            exe.launches.len()
+        );
+        assert!(
+            plan.arena_elems < plan.total_value_elems,
+            "chain must reuse retired ranges: arena {} vs values {}",
+            plan.arena_elems,
+            plan.total_value_elems
+        );
+        assert!(plan.stats().reuse_ratio() > 1.5, "ratio = {}", plan.stats().reuse_ratio());
+    }
+
+    #[test]
+    fn every_load_is_resolved() {
+        let (_, module) = crate::models::by_name("LR").unwrap();
+        let exe = lower(&module);
+        for launch in &exe.launches {
+            match launch {
+                Launch::Kernel(k) => for_each_kernel_read(k, |src| {
+                    assert!(exe.mem.slots[src].is_some(), "read of %{src} has no arena slot");
+                }),
+                Launch::Library(l) => {
+                    assert!(l.out_slot.is_some());
+                    for r in library_reads(l) {
+                        assert!(exe.mem.slots[r].is_some());
+                    }
+                }
+            }
+        }
+        // the root always has a slot, pinned live to the end
+        let lives = liveness(&exe);
+        let root_life = lives[exe.root.0].expect("root must be materialized");
+        assert_eq!(root_life.last_use, exe.launches.len() + 1);
+        assert!(exe.mem.slots[exe.root.0].is_some());
+    }
+}

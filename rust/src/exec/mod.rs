@@ -21,12 +21,24 @@
 //! | block composition via shared memory | per-block regions + [`bytecode::BlockStep::Barrier`] |
 //! | kernel launch counts (Fig. 7) | [`LaunchLedger`] |
 
+//!
+//! Since the memory-planning PR the execute path itself is fast: a
+//! static buffer-assignment pass ([`memplan`]) packs every value into
+//! one flat arena with lifetime-disjoint reuse, loads carry compiled
+//! affine offsets and resolved arena ranges, and each launch's grid
+//! loop fans out over cores ([`par`]) — with outputs and ledgers
+//! bit-identical to the boxed reference path
+//! ([`StitchedExecutable::run_boxed`]) at any thread count.
+
 pub mod bytecode;
 pub mod ledger;
 pub mod lower;
 pub mod machine;
+pub mod memplan;
+pub mod par;
 
 pub use bytecode::KernelProgram;
 pub use ledger::LaunchLedger;
 pub use lower::lower_to_exec;
-pub use machine::{Launch, LibKind, LibraryCall, StitchedExecutable};
+pub use machine::{ExecArena, Launch, LibKind, LibraryCall, StitchedExecutable};
+pub use memplan::{ArenaStats, BufSlot, MemoryPlan};

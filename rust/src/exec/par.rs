@@ -1,0 +1,130 @@
+//! Block-parallel fan-out for the stitched VM.
+//!
+//! Thread blocks of one launch are independent by construction — the VM
+//! enforces the no-cross-block-synchronization invariant (a block only
+//! reads its own shared chunk and its own slice of same-launch
+//! outputs), so the grid loop can spread over cores with no
+//! coordination beyond the join. This module is the rayon-shaped core
+//! of that fan-out, implemented on `std::thread::scope` because the
+//! offline build image carries no external crates (the repo's only
+//! dependency is `anyhow`); swapping a real rayon pool in later only
+//! changes this file.
+//!
+//! Determinism: the partition of blocks over workers is a pure function
+//! of `(blocks, workers)`, every block computes its elements
+//! identically regardless of which worker runs it, and the per-worker
+//! ledgers are folded in worker order — so results and launch ledgers
+//! are bit-identical at any thread count.
+//!
+//! The worker count resolves once per process from `FUSION_VM_THREADS`
+//! (CI pins it so bench gates are reproducible) and defaults to the
+//! machine's available parallelism. A [`super::machine::ExecArena`] can
+//! override it per arena — the serving pool divides cores between
+//! workers so N serving shards × T VM threads never oversubscribes.
+
+use std::sync::OnceLock;
+
+/// Process-wide default VM thread count: `FUSION_VM_THREADS` when set
+/// (any value `>= 1`), else available parallelism.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("FUSION_VM_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Run `f(worker_index, &mut scratch[worker_index])` once per scratch
+/// slot, concurrently, returning the results in worker order. Slot 0
+/// runs on the calling thread (no spawn for the single-worker case);
+/// the rest run on scoped threads. Panics in `f` propagate.
+pub fn fan_out<S: Send, R: Send>(
+    scratch: &mut [S],
+    f: impl Fn(usize, &mut S) -> R + Sync,
+) -> Vec<R> {
+    let n = scratch.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![f(0, &mut scratch[0])];
+    }
+    std::thread::scope(|sc| {
+        let mut iter = scratch.iter_mut().enumerate();
+        let (t0, s0) = iter.next().expect("n >= 1");
+        let handles: Vec<_> = iter
+            .map(|(t, s)| {
+                let f = &f;
+                sc.spawn(move || f(t, s))
+            })
+            .collect();
+        let mut out = Vec::with_capacity(n);
+        out.push(f(t0, s0));
+        for h in handles {
+            out.push(h.join().expect("VM block worker panicked"));
+        }
+        out
+    })
+}
+
+/// Contiguous block range worker `t` of `workers` owns out of `blocks`
+/// total: the canonical `[t*B/W, (t+1)*B/W)` split — every block in
+/// exactly one range, ranges in ascending block order.
+pub fn block_range(blocks: i64, workers: usize, t: usize) -> std::ops::Range<i64> {
+    let w = workers.max(1) as i64;
+    let t = t as i64;
+    (t * blocks / w)..((t + 1) * blocks / w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_ranges_partition() {
+        for blocks in [0i64, 1, 2, 7, 64, 1000] {
+            for workers in [1usize, 2, 3, 8, 13] {
+                let mut covered = 0i64;
+                let mut next = 0i64;
+                for t in 0..workers {
+                    let r = block_range(blocks, workers, t);
+                    assert_eq!(r.start, next, "ranges must be contiguous");
+                    assert!(r.end >= r.start);
+                    covered += r.end - r.start;
+                    next = r.end;
+                }
+                assert_eq!(covered, blocks, "{blocks} blocks / {workers} workers");
+                assert_eq!(next, blocks);
+            }
+        }
+    }
+
+    #[test]
+    fn fan_out_runs_every_slot_once() {
+        let mut scratch = vec![0u64; 5];
+        let out = fan_out(&mut scratch, |t, s| {
+            *s += 1;
+            t * 10
+        });
+        assert_eq!(out, vec![0, 10, 20, 30, 40]);
+        assert!(scratch.iter().all(|&s| s == 1));
+    }
+
+    #[test]
+    fn fan_out_empty_and_single() {
+        let mut none: Vec<u8> = Vec::new();
+        assert!(fan_out(&mut none, |_, _| 1).is_empty());
+        let mut one = vec![7u8];
+        assert_eq!(fan_out(&mut one, |t, s| (t, *s)), vec![(0, 7)]);
+    }
+
+    #[test]
+    fn default_threads_is_at_least_one() {
+        assert!(default_threads() >= 1);
+    }
+}

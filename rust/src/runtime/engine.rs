@@ -16,7 +16,7 @@
 
 use super::client::Runtime;
 use super::interp::HloProgram;
-use crate::exec::{LaunchLedger, StitchedExecutable};
+use crate::exec::{ExecArena, LaunchLedger, StitchedExecutable};
 use anyhow::{bail, Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
@@ -39,6 +39,10 @@ pub struct LoadedModel {
     pub name: String,
     backend: Backend,
     ledger: RefCell<LaunchLedger>,
+    /// Pooled execution state for the stitched backend: the planned
+    /// value arena plus per-thread scratch, reused across `run_f32`
+    /// calls so steady-state execution performs no arena allocations.
+    arena: RefCell<ExecArena>,
 }
 
 impl LoadedModel {
@@ -47,18 +51,16 @@ impl LoadedModel {
     /// `return_tuple=True`, so the root is usually a tuple; each tuple
     /// element becomes one output buffer).
     pub fn run_f32(&self, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let buffers: Vec<Vec<f32>> = inputs
-            .iter()
-            .map(|(data, dims)| -> Result<Vec<f32>> {
-                let expect: i64 = dims.iter().product();
-                if expect != data.len() as i64 {
-                    bail!("input length {} does not match dims {dims:?}", data.len());
-                }
-                Ok(data.to_vec())
-            })
-            .collect::<Result<_>>()?;
+        for (data, dims) in inputs {
+            let expect: i64 = dims.iter().product();
+            if expect != data.len() as i64 {
+                bail!("input length {} does not match dims {dims:?}", data.len());
+            }
+        }
         match &self.backend {
             Backend::Interp(prog) => {
+                let buffers: Vec<Vec<f32>> =
+                    inputs.iter().map(|(data, _)| data.to_vec()).collect();
                 let out = prog.execute(&buffers)?;
                 let (generated, library) = prog.launch_profile();
                 let mut ledger = self.ledger.borrow_mut();
@@ -67,7 +69,12 @@ impl LoadedModel {
                 Ok(out)
             }
             Backend::Stitched(exe) => {
-                let (out, run_ledger) = exe.run(&buffers)?;
+                // No input clone: slices go straight into the pooled
+                // arena (written exactly once per run).
+                let refs: Vec<&[f32]> = inputs.iter().map(|(data, _)| *data).collect();
+                let mut arena = self.arena.borrow_mut();
+                let mut out = Vec::new();
+                let run_ledger = exe.run_into(&refs, &mut arena, &mut out)?;
                 self.ledger.borrow_mut().merge(&run_ledger);
                 Ok(vec![out])
             }
@@ -138,6 +145,7 @@ impl Engine {
                 name: stem.to_string(),
                 backend: Backend::Interp(prog),
                 ledger: RefCell::new(LaunchLedger::default()),
+                arena: RefCell::new(ExecArena::default()),
             },
         );
     }
@@ -152,6 +160,7 @@ impl Engine {
                 name: stem.to_string(),
                 backend: Backend::Stitched(exe),
                 ledger: RefCell::new(LaunchLedger::default()),
+                arena: RefCell::new(ExecArena::default()),
             },
         );
     }

@@ -1,0 +1,200 @@
+//! Memory-planner acceptance suite: the planned, specialized,
+//! block-parallel VM must be **bit-identical** to the PR-2 boxed VM —
+//! outputs and launch ledgers — on every corpus graph and benchmark
+//! model, while packing values into a strictly smaller arena wherever
+//! lifetimes allow, and never letting lifetime-overlapping values
+//! share arena bytes.
+
+use fusion_stitching::coordinator::pipeline::{compile_module, FusionMode, PipelineConfig};
+use fusion_stitching::corpus::generator::{generate_models, CorpusConfig};
+use fusion_stitching::exec::memplan;
+use fusion_stitching::exec::{ExecArena, StitchedExecutable};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::Module;
+use fusion_stitching::schedule::PerfLibrary;
+
+fn mini_corpus() -> Vec<Module> {
+    let cfg = CorpusConfig {
+        seed: 946,
+        models: 16,
+        ops_per_model: (8, 24),
+        max_width_log2: 6,
+    };
+    generate_models(&cfg)
+        .into_iter()
+        .map(|c| {
+            let name = c.name.clone();
+            Module::new(name, c)
+        })
+        .collect()
+}
+
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 1000) as f32) / 1000.0 - 0.5
+        })
+        .collect()
+}
+
+fn inputs_for(module: &Module, seed: u64) -> Vec<Vec<f32>> {
+    module
+        .entry
+        .parameters()
+        .into_iter()
+        .enumerate()
+        .map(|(k, id)| {
+            let elems = module.entry.get(id).shape.num_elements() as usize;
+            fill(elems, seed + k as u64)
+        })
+        .collect()
+}
+
+fn lower(module: &Module, mode: FusionMode, fuse_batch_dot: bool) -> StitchedExecutable {
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let mut cfg = PipelineConfig::default();
+    cfg.deep.fuse_batch_dot = fuse_batch_dot;
+    let compiled = compile_module(module, mode, &mut lib, &cfg)
+        .unwrap_or_else(|e| panic!("{}: compile failed: {e:#}", module.name));
+    match compiled.executable {
+        Some(exe) => (*exe).clone(),
+        None => panic!("{}: did not lower: {:?}", module.name, compiled.exec_error),
+    }
+}
+
+/// Execution sweep: the corpus plus the light Table 2 models (heavy
+/// library dots make NMT/RNN/BiRNN impractical to *run* repeatedly in
+/// debug builds — `make bench-vm` covers all six in release).
+fn suite() -> Vec<(Module, bool)> {
+    let mut all: Vec<(Module, bool)> = mini_corpus().into_iter().map(|m| (m, false)).collect();
+    for name in ["LR", "W2V", "Speech"] {
+        let (meta, module) = fusion_stitching::models::by_name(name).unwrap();
+        all.push((module, meta.fuse_batch_dot));
+    }
+    all
+}
+
+/// Planning-only sweep (no execution): the corpus plus all six
+/// benchmarks — compiling and planning NMT in debug is cheap.
+fn plan_suite() -> Vec<(Module, bool)> {
+    let mut all: Vec<(Module, bool)> = mini_corpus().into_iter().map(|m| (m, false)).collect();
+    for (meta, module) in fusion_stitching::models::all_benchmarks() {
+        all.push((module, meta.fuse_batch_dot));
+    }
+    all
+}
+
+#[test]
+fn planned_parallel_vm_is_bit_identical_to_boxed_vm() {
+    for (i, (module, fuse_bd)) in suite().into_iter().enumerate() {
+        let inputs = inputs_for(&module, 9000 + i as u64);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        for mode in [FusionMode::XlaBaseline, FusionMode::FusionStitching] {
+            let exe = lower(&module, mode, fuse_bd);
+            let (boxed_out, boxed_ledger) = exe
+                .run_boxed(&inputs)
+                .unwrap_or_else(|e| panic!("{}: boxed run failed: {e:#}", module.name));
+            // Force multi-threaded block execution even on small CI
+            // machines: determinism must not depend on the core count.
+            let mut arena = ExecArena::with_threads(4);
+            let mut fast_out = Vec::new();
+            let fast_ledger = exe
+                .run_into(&refs, &mut arena, &mut fast_out)
+                .unwrap_or_else(|e| panic!("{}: planned run failed: {e:#}", module.name));
+            assert_eq!(
+                fast_ledger, boxed_ledger,
+                "{} {mode:?}: launch ledger changed",
+                module.name
+            );
+            assert_eq!(fast_out.len(), boxed_out.len(), "{}: output size", module.name);
+            for (k, (a, b)) in fast_out.iter().zip(&boxed_out).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{} {mode:?}: element {k} differs: {a} vs {b}",
+                    module.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn overlapping_lifetimes_never_share_arena_ranges_corpus_wide() {
+    for (module, fuse_bd) in plan_suite() {
+        let exe = lower(&module, FusionMode::FusionStitching, fuse_bd);
+        let lives = memplan::liveness(&exe);
+        let plan = &exe.mem;
+        let live_slots: Vec<(usize, memplan::ValueLife, memplan::BufSlot)> = (0..lives.len())
+            .filter_map(|v| Some((v, lives[v]?, plan.slots[v]?)))
+            .collect();
+        for (a, (va, la, sa)) in live_slots.iter().enumerate() {
+            assert_eq!(sa.elems, la.elems, "{}: %{va} slot size", module.name);
+            assert!(
+                sa.off + sa.elems <= plan.arena_elems,
+                "{}: %{va} range exceeds the arena",
+                module.name
+            );
+            for (vb, lb, sb) in live_slots.iter().skip(a + 1) {
+                if la.overlaps(lb) {
+                    let disjoint = sa.off + sa.elems <= sb.off || sb.off + sb.elems <= sa.off;
+                    assert!(
+                        disjoint,
+                        "{}: live values %{va} and %{vb} share arena bytes",
+                        module.name
+                    );
+                }
+            }
+        }
+        // The plan never wastes space versus the boxed layout.
+        assert!(plan.arena_elems <= plan.total_value_elems, "{}", module.name);
+    }
+}
+
+#[test]
+fn arena_reuse_reaches_zero_allocation_steady_state() {
+    for (module, fuse_bd) in suite().into_iter().take(6) {
+        let exe = lower(&module, FusionMode::FusionStitching, fuse_bd);
+        let inputs = inputs_for(&module, 77);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut arena = ExecArena::default();
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            exe.run_into(&refs, &mut arena, &mut out).unwrap();
+        }
+        assert_eq!(arena.grows(), 1, "{}: arena grew after warmup", module.name);
+        assert_eq!(arena.reuses(), 3, "{}: reuse counter", module.name);
+        // The plan never exceeds the boxed VM's footprint; crafted
+        // graphs with genuine compression are unit-tested in
+        // `exec::memplan` (`sequential_chain_reuses_retired_ranges`).
+        assert!(exe.mem.arena_elems <= exe.mem.total_value_elems, "{}", module.name);
+    }
+}
+
+#[test]
+fn one_arena_serves_many_executables() {
+    // A serving worker's arena is shared across whatever executables
+    // its shard routes; growth is monotone, reuse kicks in per plan.
+    let mods = suite();
+    let mut arena = ExecArena::default();
+    let mut out = Vec::new();
+    let mut exes = Vec::new();
+    for (module, fuse_bd) in mods.into_iter().take(4) {
+        let inputs = inputs_for(&module, 5);
+        let exe = lower(&module, FusionMode::FusionStitching, fuse_bd);
+        exes.push((exe, inputs));
+    }
+    for (exe, inputs) in &exes {
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        exe.run_into(&refs, &mut arena, &mut out).unwrap();
+    }
+    let grows_first_pass = arena.grows();
+    // Second sweep: the arena already covers every plan's high-water
+    // mark, so no run allocates.
+    for (exe, inputs) in &exes {
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        exe.run_into(&refs, &mut arena, &mut out).unwrap();
+    }
+    assert_eq!(arena.grows(), grows_first_pass, "second sweep must be allocation-free");
+    assert!(arena.reuses() >= 4);
+}
