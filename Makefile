@@ -1,6 +1,6 @@
 # Convenience targets; everything also works via plain cargo / python.
 
-.PHONY: build test bench bench-launches bench-serving bench-fusion bench-vm artifacts doc
+.PHONY: build test bench bench-launches bench-serving bench-fusion bench-vm bench-global artifacts doc
 
 build:
 	cargo build --release
@@ -33,6 +33,12 @@ bench-fusion:
 # so the speedup gate is reproducible across machines.
 bench-vm:
 	BENCH_SMOKE=1 FUSION_VM_THREADS=2 cargo bench --bench vm_wallclock
+
+# Global-memory stitching bench: overflow corpus executed with the
+# third tier on vs off, bit-identity and strict launch reduction gated;
+# writes BENCH_global_stitch.json at the repo root.
+bench-global:
+	BENCH_SMOKE=1 cargo bench --bench global_stitch
 
 doc:
 	cargo doc --no-deps

@@ -1,0 +1,214 @@
+//! Global-memory stitching bench: launches saved by the third tier.
+//!
+//! The overflow corpus (interior reduce chunks provably over the
+//! shared-memory budget) is compiled with the global tier on and off,
+//! executed on the stitched VM, and the `LaunchLedger`s compared: the
+//! stitched plan must pay strictly fewer launches, attribute them to
+//! `tier_global`, and produce bit-identical outputs. A second section
+//! records the static launch plans of the Table 2 benchmarks under both
+//! settings. Results are persisted to `BENCH_global_stitch.json` at the
+//! repo root (`make bench-global`).
+//!
+//! Smoke mode (`BENCH_SMOKE=1`) is accepted for CI symmetry with the
+//! other benches; the overflow corpus is small enough to always run in
+//! full.
+
+use fusion_stitching::coordinator::pipeline::{
+    compile_module, geomean, FusionMode, PipelineConfig,
+};
+use fusion_stitching::corpus::generator::generate_overflow_models;
+use fusion_stitching::exec::StitchedExecutable;
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::Module;
+use fusion_stitching::models;
+use fusion_stitching::schedule::PerfLibrary;
+use std::path::PathBuf;
+
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 1000) as f32) / 1000.0 - 0.5
+        })
+        .collect()
+}
+
+fn inputs_for(module: &Module, seed: u64) -> Vec<Vec<f32>> {
+    module
+        .entry
+        .parameters()
+        .into_iter()
+        .enumerate()
+        .map(|(k, id)| {
+            let elems = module.entry.get(id).shape.num_elements() as usize;
+            fill(elems, seed + k as u64)
+        })
+        .collect()
+}
+
+fn lower_gs(
+    module: &Module,
+    fuse_batch_dot: bool,
+    global_stitch: bool,
+) -> Result<StitchedExecutable, String> {
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let mut cfg = PipelineConfig::default();
+    cfg.deep.fuse_batch_dot = fuse_batch_dot;
+    cfg.deep.global_stitch = global_stitch;
+    let compiled = compile_module(module, FusionMode::FusionStitching, &mut lib, &cfg)
+        .map_err(|e| format!("compile: {e:#}"))?;
+    match compiled.executable {
+        Some(exe) => Ok((*exe).clone()),
+        None => Err(compiled.exec_error.unwrap_or_else(|| "did not lower".into())),
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok()
+        || std::env::args().any(|a| a == "--smoke");
+    let mode_name = if smoke { "smoke" } else { "full" };
+
+    println!("== Global-memory stitching: launches saved by the third tier ==");
+    println!(
+        "{:<12} {:>8} {:>10} {:>8} {:>8} {:>8} {:>8}",
+        "model", "split", "stitched", "shm", "global", "fences", "ratio"
+    );
+
+    // ---- overflow corpus: executed, ledger-verified ----
+    struct Row {
+        name: String,
+        split: u64,
+        stitched: u64,
+        tier_shm: u64,
+        tier_global: u64,
+        fences: u64,
+    }
+    let mut rows: Vec<Row> = Vec::new();
+    for (i, comp) in generate_overflow_models().into_iter().enumerate() {
+        let module = Module::new(comp.name.clone(), comp);
+        let inputs = inputs_for(&module, 42 + i as u64);
+        let stitched = lower_gs(&module, false, true)
+            .unwrap_or_else(|e| panic!("{}: {e}", module.name));
+        let split = lower_gs(&module, false, false)
+            .unwrap_or_else(|e| panic!("{}: {e}", module.name));
+        let (s_out, s_ledger) = stitched
+            .run(&inputs)
+            .unwrap_or_else(|e| panic!("{}: stitched run: {e:#}", module.name));
+        let (p_out, p_ledger) = split
+            .run(&inputs)
+            .unwrap_or_else(|e| panic!("{}: split run: {e:#}", module.name));
+
+        // The gates the bench exists to hold.
+        assert_eq!(s_out.len(), p_out.len(), "{}: output size", module.name);
+        for (k, (a, b)) in s_out.iter().zip(&p_out).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{}: element {k} differs: {a} vs {b}",
+                module.name
+            );
+        }
+        assert!(
+            s_ledger.tier_global > 0,
+            "{}: global tier must fire, ledger: {s_ledger}",
+            module.name
+        );
+        assert!(s_ledger.fences > 0, "{}: fences must execute", module.name);
+        assert!(
+            s_ledger.total_launches() < p_ledger.total_launches(),
+            "{}: global stitching must strictly reduce launches: {} vs {}",
+            module.name,
+            s_ledger.total_launches(),
+            p_ledger.total_launches()
+        );
+
+        let ratio = s_ledger.total_launches() as f64 / p_ledger.total_launches().max(1) as f64;
+        println!(
+            "{:<12} {:>8} {:>10} {:>8} {:>8} {:>8} {:>8.2}",
+            module.name,
+            p_ledger.total_launches(),
+            s_ledger.total_launches(),
+            s_ledger.tier_shm,
+            s_ledger.tier_global,
+            s_ledger.fences,
+            ratio
+        );
+        rows.push(Row {
+            name: module.name.clone(),
+            split: p_ledger.total_launches(),
+            stitched: s_ledger.total_launches(),
+            tier_shm: s_ledger.tier_shm,
+            tier_global: s_ledger.tier_global,
+            fences: s_ledger.fences,
+        });
+    }
+    let g = geomean(
+        rows.iter().map(|r| r.stitched as f64 / (r.split.max(1)) as f64),
+    );
+    println!(
+        "geomean stitched/split: {g:.3}  ({:.0}% launch reduction on the overflow corpus)",
+        (1.0 - g) * 100.0
+    );
+
+    // ---- Table 2 benchmarks: static plans under both settings ----
+    struct Plan {
+        name: String,
+        split: u64,
+        stitched: u64,
+    }
+    let mut plans: Vec<Plan> = Vec::new();
+    for (meta, module) in models::all_benchmarks() {
+        let stitched = lower_gs(&module, meta.fuse_batch_dot, true)
+            .unwrap_or_else(|e| panic!("{}: {e}", meta.name));
+        let split = lower_gs(&module, meta.fuse_batch_dot, false)
+            .unwrap_or_else(|e| panic!("{}: {e}", meta.name));
+        let s = stitched.generated_launches() + stitched.library_launches();
+        let p = split.generated_launches() + split.library_launches();
+        assert!(s <= p, "{}: stitched plans more launches ({s} vs {p})", meta.name);
+        println!("{:<12} planned: split {p}, stitched {s}", meta.name);
+        plans.push(Plan { name: meta.name.to_string(), split: p, stitched: s });
+    }
+
+    // ---- persist ----
+    let mut json = String::from("{\n");
+    json.push_str("  \"bench\": \"global_stitch\",\n");
+    json.push_str(&format!("  \"mode\": \"{mode_name}\",\n"));
+    json.push_str("  \"overflow\": [\n");
+    for (k, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"split_launches\": {}, \"stitched_launches\": {}, \
+             \"tier_shm\": {}, \"tier_global\": {}, \"fences\": {}, \"ratio\": {:.4}}}{}\n",
+            r.name,
+            r.split,
+            r.stitched,
+            r.tier_shm,
+            r.tier_global,
+            r.fences,
+            r.stitched as f64 / r.split.max(1) as f64,
+            if k + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ],\n");
+    json.push_str(&format!("  \"geomean_ratio\": {g:.4},\n"));
+    json.push_str(&format!("  \"reduction_pct\": {:.1},\n", (1.0 - g) * 100.0));
+    json.push_str("  \"models\": [\n");
+    for (k, p) in plans.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"name\": \"{}\", \"split_planned\": {}, \"stitched_planned\": {}}}{}\n",
+            p.name,
+            p.split,
+            p.stitched,
+            if k + 1 < plans.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n");
+    json.push_str("}\n");
+
+    let out_path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => PathBuf::from(dir).join("..").join("BENCH_global_stitch.json"),
+        Err(_) => PathBuf::from("BENCH_global_stitch.json"),
+    };
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out_path.display()),
+    }
+}

@@ -136,6 +136,14 @@ fn main() {
                     "{}: deep fusion must not launch more",
                     row.name
                 );
+                // Stitch-tier attribution must account for every
+                // generated launch (plain + shm + global = generated).
+                assert_eq!(
+                    f.tier_plain + f.tier_shm + f.tier_global,
+                    f.generated,
+                    "{}: ledger tier attribution out of balance: {f}",
+                    row.name
+                );
             }
             _ => println!(
                 "{:<8} — not executed: {}",

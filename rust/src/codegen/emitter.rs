@@ -19,11 +19,10 @@
 //! and are fully implemented.
 
 use super::kernel_plan::{EmittedOp, EmitterKind, KernelPlan};
-use super::shm_planner::{plan_shared_memory, ShmError};
+use super::shm_planner::plan_shared_memory_spill;
 use crate::gpusim::DeviceConfig;
 use crate::hlo::{Computation, InstrId, Opcode};
 use crate::schedule::{OpSchedule, TunedPlan};
-use anyhow::anyhow;
 use std::collections::HashSet;
 
 /// Emit the kernel plan for one fused group.
@@ -35,11 +34,11 @@ pub fn emit_group(
     dev: &DeviceConfig,
     name: &str,
 ) -> crate::Result<KernelPlan> {
-    let shm = plan_shared_memory(comp, members, roots, tuned, dev).map_err(|e| match e {
-        ShmError::Exceeded { required, limit } => {
-            anyhow!("shared memory exceeded: {required} > {limit} (fusion feedback should have rejected this group)")
-        }
-    })?;
+    // The spill-capable planner never rejects a group: mandatory
+    // buffers that overflow the budget land in `shm.spilled` and are
+    // stitched through global memory (third tier) instead.
+    let shm = plan_shared_memory_spill(comp, members, roots, tuned, dev);
+    let spilled: HashSet<InstrId> = shm.spilled.iter().copied().collect();
     let root_set: HashSet<InstrId> = roots.iter().copied().collect();
 
     // Emission order: ascending id = topological.
@@ -68,6 +67,7 @@ pub fn emit_group(
                 emitter: EmitterKind::Elemental,
                 writes_shared: false,
                 writes_output: false,
+                writes_spill: false,
                 ir: vec![format!(
                     "  ; %{} {} -> generator (thread composition)",
                     id.0, instr.opcode
@@ -88,6 +88,7 @@ pub fn emit_group(
                     emitter: EmitterKind::Elemental,
                     writes_shared: false,
                     writes_output: is_root,
+                    writes_spill: false,
                     ir: vec![format!("  ; %{} {} -> elemental (inlined)", id.0, instr.opcode)],
                 });
                 continue;
@@ -104,10 +105,13 @@ pub fn emit_group(
             sched.sched_type,
             sched.chunk_elements(&instr.shape),
         ));
-        // Operand access: shared array, generator call, or global load.
+        // Operand access: shared array, spill region, generator call,
+        // or global load.
         for &op in &instr.operands {
             if let Some(slot) = shm.slots.get(&op) {
                 ir.push(format!("  %v{} = load shared [off={} {}B]", op.0, slot.offset, slot.bytes));
+            } else if spilled.contains(&op) {
+                ir.push(format!("  %v{} = load global %{} ; spill region (post-fence)", op.0, op.0));
             } else if generators.contains(&op) {
                 ir.push(format!("  %v{} = call generator_{}()", op.0, op.0));
             } else {
@@ -131,8 +135,15 @@ pub fn emit_group(
             // must see completed shared writes.
             ir.push("  barrier ; __syncthreads".to_string());
         }
+        let in_spill = spilled.contains(&id);
         if is_root {
             ir.push(format!("  store global %{} ; EmitWriteOutputArray", id.0));
+        } else if in_spill {
+            // Third tier: the whole value goes to a grid-visible
+            // arena region; every block must observe the completed
+            // write before any consumer phase starts.
+            ir.push(format!("  store global %{} ; EmitWriteSpillArray", id.0));
+            ir.push("  grid_fence ; grid.sync".to_string());
         } else if !writes_shared {
             generators.insert(id);
             ir.push(format!("  ; register generator_{} (EmitGenerator)", id.0));
@@ -143,6 +154,7 @@ pub fn emit_group(
             emitter: EmitterKind::Stitched(sched),
             writes_shared,
             writes_output: is_root,
+            writes_spill: in_spill,
             ir,
         });
     }
@@ -295,6 +307,32 @@ mod tests {
             .count();
         assert_eq!(stitched, 1);
         assert_eq!(plan.shm.total_bytes, 0);
+    }
+
+    #[test]
+    fn overflowing_group_emits_spill_store_and_grid_fence() {
+        // The consistency checker's overflow shape: a scalar root pins
+        // the grid to one block, so the interior reduce's 32 KB chunk
+        // exceeds pascal's 20 KB budget and must spill to the global
+        // tier instead of failing emission.
+        let mut b = GraphBuilder::new("ovf");
+        let x = b.param("x", Shape::f32(&[64, 8192]));
+        let e = b.exp(x);
+        let r = b.reduce(e, &[0], ReduceKind::Sum);
+        let t = b.tanh(r);
+        let rr = b.reduce(t, &[0], ReduceKind::Sum);
+        let comp = b.finish(rr);
+        let members: HashSet<InstrId> = [e, r, t, rr].into_iter().collect();
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let tuned = tune(&comp, &members, &[rr], &mut lib, &TuningConfig::default()).unwrap();
+        let plan =
+            emit_group(&comp, &members, &[rr], &tuned, &DeviceConfig::pascal(), "ovf").unwrap();
+        assert!(plan.shm.spilled.contains(&r), "interior reduce must spill");
+        let op = plan.ops.iter().find(|o| o.id == r).unwrap();
+        assert!(op.writes_spill && !op.writes_shared && !op.writes_output);
+        let text = plan.ir_text();
+        assert!(text.contains("EmitWriteSpillArray"));
+        assert!(text.contains("grid.sync"));
     }
 
     #[test]

@@ -25,6 +25,10 @@ pub struct EmittedOp {
     pub writes_shared: bool,
     /// Writes to global memory (`EmitWriteOutputArray` — fusion roots).
     pub writes_output: bool,
+    /// Writes its result to a grid-visible global-memory spill region
+    /// (`EmitWriteSpillArray` — the third stitching tier), followed by a
+    /// grid-wide fence before any consumer phase reads it.
+    pub writes_spill: bool,
     /// Pseudo-IR lines for this op (inspection/debugging; stands in for
     /// the LLVM IR the paper emits).
     pub ir: Vec<String>,
@@ -72,6 +76,13 @@ impl KernelPlan {
     ) -> KernelDesc {
         let mut d = fused_kernel_desc(comp, members, tuned);
         d.smem_bytes = self.shm.total_bytes;
+        // Spilled intermediates round-trip through DRAM: written once
+        // by the producer phase, read back by consumer phases.
+        for &id in &self.shm.spilled {
+            let bytes = comp.get(id).shape.byte_size() as u64;
+            d.bytes_written += bytes;
+            d.bytes_read += bytes;
+        }
         d
     }
 }

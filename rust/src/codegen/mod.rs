@@ -16,4 +16,4 @@ pub mod shm_planner;
 
 pub use emitter::emit_group;
 pub use kernel_plan::KernelPlan;
-pub use shm_planner::{plan_shared_memory, ShmError, ShmPlan};
+pub use shm_planner::{plan_shared_memory, plan_shared_memory_spill, ShmError, ShmPlan};

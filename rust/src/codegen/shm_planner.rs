@@ -47,6 +47,12 @@ pub struct ShmPlan {
     /// Bytes of allocated space reused by at least one later op — the
     /// numerator of Table 3's Shared Ratio.
     pub shared_bytes: usize,
+    /// Mandatory buffers that cannot fit even alone: the third
+    /// stitching tier materializes them in grid-visible global memory
+    /// (arena regions) with a grid-wide fence between producer and
+    /// consumer phases. Always empty for plans produced by
+    /// [`plan_shared_memory`]; filled by [`plan_shared_memory_spill`].
+    pub spilled: Vec<InstrId>,
 }
 
 impl ShmPlan {
@@ -94,6 +100,35 @@ pub fn plan_shared_memory(
     roots: &[InstrId],
     tuned: &TunedPlan,
     dev: &DeviceConfig,
+) -> Result<ShmPlan, ShmError> {
+    plan_impl(comp, members, roots, tuned, dev, false)
+}
+
+/// Plan shared memory with the global-memory fallback tier enabled:
+/// where [`plan_shared_memory`] would fail with [`ShmError::Exceeded`],
+/// the mandatory buffers that overflow the budget are moved into the
+/// plan's `spilled` set (largest chunk first) until the rest fits.
+/// Never fails — every group is representable once spilling is allowed.
+pub fn plan_shared_memory_spill(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    roots: &[InstrId],
+    tuned: &TunedPlan,
+    dev: &DeviceConfig,
+) -> ShmPlan {
+    match plan_impl(comp, members, roots, tuned, dev, true) {
+        Ok(plan) => plan,
+        Err(ShmError::Exceeded { .. }) => unreachable!("spill planning never fails"),
+    }
+}
+
+fn plan_impl(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    roots: &[InstrId],
+    tuned: &TunedPlan,
+    dev: &DeviceConfig,
+    spill: bool,
 ) -> Result<ShmPlan, ShmError> {
     let root_set: HashSet<InstrId> = roots.iter().copied().collect();
     let mut candidates: Vec<(InstrId, Class, usize)> = Vec::new(); // (id, class, bytes)
@@ -146,14 +181,16 @@ pub fn plan_shared_memory(
     let limit = dev.shared_mem_kernel_limit;
 
     let mut dropped: Vec<InstrId> = Vec::new();
+    let mut spilled: Vec<InstrId> = Vec::new();
     loop {
         let live: Vec<(InstrId, Class, usize)> = candidates
             .iter()
             .copied()
-            .filter(|(id, _, _)| !dropped.contains(id))
+            .filter(|(id, _, _)| !dropped.contains(id) && !spilled.contains(id))
             .collect();
-        let plan = allocate(comp, members, &live, domtree.as_ref(), &dropped);
+        let mut plan = allocate(comp, members, &live, domtree.as_ref(), &dropped);
         if plan.total_bytes <= limit {
+            plan.spilled = spilled;
             return Ok(plan);
         }
         // §5.1.2 shrinking: drop the lowest class first; within a class,
@@ -165,6 +202,17 @@ pub fn plan_shared_memory(
             .map(|(id, _, _)| *id);
         match victim {
             Some(v) => dropped.push(v),
+            None if spill => {
+                // Third tier: every remaining candidate is Mandatory,
+                // so move the largest chunk to a global-memory region
+                // (ties break to the earliest op) and retry the rest.
+                let v = live
+                    .iter()
+                    .max_by_key(|(id, _, bytes)| (*bytes, std::cmp::Reverse(*id)))
+                    .map(|(id, _, _)| *id)
+                    .expect("overflow with no live candidates");
+                spilled.push(v);
+            }
             None => return Err(ShmError::Exceeded { required: plan.total_bytes, limit }),
         }
     }
@@ -403,6 +451,33 @@ mod tests {
         assert!(
             plan_shared_memory(&comp, &members, &[o], &tuned, &DeviceConfig::pascal()).is_ok()
         );
+    }
+
+    #[test]
+    fn spill_planner_moves_mandatory_overflow_to_global_tier() {
+        // Same group that exceeded_when_mandatory_buffers_overflow
+        // rejects: with the global tier enabled the planner must
+        // succeed by spilling the interior reduce instead.
+        let mut b = GraphBuilder::new("spill");
+        let x = b.param("x", Shape::f32(&[4, 4096]));
+        let e = b.exp(x);
+        let r = b.reduce(e, &[1], ReduceKind::Sum);
+        let rb = b.broadcast(r, &[4, 4096], &[0]);
+        let y = b.param("y", Shape::f32(&[4, 4096]));
+        let o = b.sub(rb, y);
+        let comp = b.finish(o);
+        let members: HashSet<InstrId> = [e, r, rb, o].into_iter().collect();
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let tuned = tune(&comp, &members, &[o], &mut lib, &TuningConfig::default()).unwrap();
+        let tiny = DeviceConfig { shared_mem_kernel_limit: 2, ..DeviceConfig::pascal() };
+        let plan = plan_shared_memory_spill(&comp, &members, &[o], &tuned, &tiny);
+        assert!(plan.spilled.contains(&r), "interior reduce must spill");
+        assert!(plan.total_bytes <= tiny.shared_mem_kernel_limit);
+        assert!(!plan.slots.contains_key(&r), "spilled ops get no shm slot");
+        // On a real device the same group fits and nothing spills.
+        let fits =
+            plan_shared_memory_spill(&comp, &members, &[o], &tuned, &DeviceConfig::pascal());
+        assert!(fits.spilled.is_empty());
     }
 
     #[test]

@@ -367,12 +367,13 @@ fn tuned_key(
 pub(crate) fn config_digest(cfg: &PipelineConfig) -> u64 {
     crate::schedule::perf_library::fnv1a(
         format!(
-            "{:?}|{:?}|{}|{:?}|xf{}",
+            "{:?}|{:?}|{}|{:?}|xf{}|gs{}",
             cfg.deep.tuning,
             cfg.deep.elementwise,
             cfg.lib_efficiency,
             cfg.deep.device,
-            cfg.deep.cost_fusion as u8
+            cfg.deep.cost_fusion as u8,
+            cfg.deep.global_stitch as u8
         )
         .as_bytes(),
     )

@@ -115,6 +115,45 @@ pub fn generate_models(cfg: &CorpusConfig) -> Vec<Computation> {
     (0..cfg.models).map(|i| gen_model(&mut rng, i, cfg)).collect()
 }
 
+/// The corpus's large-intermediate tail: models whose interior reduce
+/// produces a per-block chunk provably over the default
+/// [`crate::gpusim::DeviceConfig`]'s shared-memory budget, so
+/// shared-memory stitching alone cannot fuse across it and the
+/// global-memory tier (spill + grid fence) is the only way to merge.
+///
+/// Each model is the chain
+///
+/// ```text
+/// x[b, r, w] → exp → reduce(dim 1, Sum) → [b, w] → tanh → reduce(dim 1, Sum) → [b]
+/// ```
+///
+/// Every legal schedule of the `[b]` root splits dim 0 into at most `b`
+/// blocks, so the interior `[b, w]` reduce deposits at least `w` f32s
+/// (`4w` bytes) per block — and every shape below keeps `4w` over the
+/// 20 KB default budget. Deterministic (no RNG draws): the shapes *are*
+/// the test vector.
+pub fn overflow_shapes() -> &'static [(i64, i64, i64)] {
+    &[(64, 2, 5376), (32, 2, 6144), (112, 2, 5376)]
+}
+
+/// Build the [`overflow_shapes`] models (see there for the shape
+/// argument): the workload that forces the global-memory stitching tier.
+pub fn generate_overflow_models() -> Vec<Computation> {
+    overflow_shapes()
+        .iter()
+        .enumerate()
+        .map(|(i, &(b_dim, r_dim, w_dim))| {
+            let mut b = GraphBuilder::new(format!("overflow_{i}"));
+            let x = b.param("x", Shape::f32(&[b_dim, r_dim, w_dim]));
+            let e = b.exp(x);
+            let r1 = b.reduce(e, &[1], ReduceKind::Sum); // [b, w] interior
+            let t = b.tanh(r1);
+            let r2 = b.reduce(t, &[1], ReduceKind::Sum); // [b] root
+            b.finish(r2)
+        })
+        .collect()
+}
+
 /// Accumulated-percentile curve of a sorted series at the given
 /// cut-points of log2(footprint): returns, per cut, the fraction of
 /// instances with footprint ≤ 2^cut — Figure 1's y-axis.
@@ -264,6 +303,43 @@ mod tests {
         let mm = median(&stats.samples[&OpClass::MatMul]);
         let add = median(&stats.samples[&OpClass::Add]);
         assert!(mm > add, "matmul median {mm} should exceed add median {add}");
+    }
+
+    #[test]
+    fn overflow_models_actually_overflow_shared_memory() {
+        // The whole point of the large-intermediate tail: on the default
+        // device, fusing the full chain overflows the shared-memory
+        // budget under *every* tuned schedule — the strict planner
+        // rejects the group, and the spill planner moves the interior
+        // reduce to the global tier.
+        use crate::codegen::{plan_shared_memory, plan_shared_memory_spill};
+        use crate::gpusim::DeviceConfig;
+        use crate::hlo::InstrId;
+        use crate::schedule::{tune, PerfLibrary, TuningConfig};
+        use std::collections::HashSet;
+
+        let models = generate_overflow_models();
+        assert_eq!(models.len(), overflow_shapes().len());
+        let dev = DeviceConfig::pascal();
+        let mut lib = PerfLibrary::new(dev.clone());
+        for comp in &models {
+            let members: HashSet<InstrId> = comp
+                .instructions()
+                .filter(|i| i.opcode != Opcode::Parameter)
+                .map(|i| i.id)
+                .collect();
+            let roots = [comp.root()];
+            let tuned = tune(comp, &members, &roots, &mut lib, &TuningConfig::default())
+                .expect("overflow chains must still be schedulable");
+            assert!(
+                plan_shared_memory(comp, &members, &roots, &tuned, &dev).is_err(),
+                "{}: interior reduce chunk must exceed the shm budget",
+                comp.name
+            );
+            let shm = plan_shared_memory_spill(comp, &members, &roots, &tuned, &dev);
+            assert!(!shm.spilled.is_empty(), "{}: spill planner must fire", comp.name);
+            assert!(shm.total_bytes <= dev.shared_mem_kernel_limit);
+        }
     }
 
     #[test]

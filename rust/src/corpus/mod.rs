@@ -12,4 +12,6 @@
 
 pub mod generator;
 
-pub use generator::{percentiles, CorpusConfig, CorpusStats, OpClass};
+pub use generator::{
+    generate_overflow_models, overflow_shapes, percentiles, CorpusConfig, CorpusStats, OpClass,
+};

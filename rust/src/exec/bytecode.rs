@@ -668,6 +668,10 @@ pub enum WriteTarget {
     Shared { offset: usize, slot: usize },
     /// `EmitWriteOutputArray` — the op's global output buffer.
     Output,
+    /// `EmitWriteSpillArray` — the op's grid-visible global spill
+    /// region (third stitching tier). Written exactly like `Output`;
+    /// a [`BlockStep::GridFence`] follows before any consumer reads.
+    Spill,
 }
 
 /// One shared-memory region of a kernel's per-block scratch, in the
@@ -689,6 +693,11 @@ pub enum BlockStep {
     Loop { op: InstrId, dims: Vec<i64>, sched: Schedule, kind: LoopKind, write: WriteTarget },
     /// `__syncthreads` after a shared write (block composition fence).
     Barrier,
+    /// Grid-wide fence after a spill write (`grid.sync`): every block
+    /// must finish all steps before this one before any block runs a
+    /// later step. The VM splits the step list into phases here and
+    /// joins all block threads between phases.
+    GridFence,
 }
 
 /// One fused group, lowered: a single launch.
@@ -708,9 +717,38 @@ pub struct KernelProgram {
     pub steps: Vec<BlockStep>,
     /// Global output buffers this kernel writes: `(root, elems)`.
     pub outputs: Vec<(InstrId, usize)>,
+    /// Grid-visible spill regions this kernel writes (third stitching
+    /// tier): `(op, elems)`. Packed into the value arena with the same
+    /// liveness discipline as outputs; live only within this launch.
+    pub spills: Vec<(InstrId, usize)>,
+}
+
+/// Which stitching tier a kernel executes under — attributed per
+/// launch in [`super::LaunchLedger`] so benches and serving stats can
+/// tell which tier earned a launch reduction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StitchTier {
+    /// No cross-emitter intermediates (plain / thread-composed kernel).
+    Plain,
+    /// Block composition through shared memory (§5.1).
+    Shm,
+    /// Global-memory stitching with grid-wide fences (third tier).
+    Global,
 }
 
 impl KernelProgram {
+    /// The stitching tier this kernel executes under — a static
+    /// property of the program, so both VM paths agree trivially.
+    pub fn stitch_tier(&self) -> StitchTier {
+        if !self.spills.is_empty() {
+            StitchTier::Global
+        } else if !self.shm_regions.is_empty() {
+            StitchTier::Shm
+        } else {
+            StitchTier::Plain
+        }
+    }
+
     /// Human-readable disassembly (the executable counterpart of
     /// [`crate::codegen::KernelPlan::ir_text`]).
     pub fn disasm(&self) -> String {
@@ -721,6 +759,7 @@ impl KernelProgram {
         for step in &self.steps {
             match step {
                 BlockStep::Barrier => out.push_str("  barrier\n"),
+                BlockStep::GridFence => out.push_str("  grid_fence\n"),
                 BlockStep::Loop { op, sched, kind, write, .. } => {
                     let kind_s = match kind {
                         LoopKind::Map { prog } => format!("map[{} instrs]", prog.code.len()),
@@ -732,6 +771,7 @@ impl KernelProgram {
                     let write_s = match write {
                         WriteTarget::Shared { offset, .. } => format!("shared@{offset}"),
                         WriteTarget::Output => "output".to_string(),
+                        WriteTarget::Spill => "spill".to_string(),
                     };
                     out.push_str(&format!(
                         "  loop %{} {} sched={} -> {}\n",

@@ -6,7 +6,10 @@
 //! number. The ledger records launches as they are executed by the
 //! stitched VM ([`crate::exec::machine`]) or by the op-by-op
 //! interpreter, so the reduction can be measured on real runs instead
-//! of estimated from the fusion plan.
+//! of estimated from the fusion plan. Generated launches are further
+//! attributed to the stitching tier that produced them (plain / shm /
+//! global), so benches and serving stats can tell which tier earned a
+//! launch reduction.
 
 use std::fmt;
 
@@ -20,10 +23,20 @@ pub struct LaunchLedger {
     pub library: u64,
     /// `__syncthreads`-style barriers executed across all blocks.
     pub barriers: u64,
+    /// Grid-wide fences executed across all blocks (one count per
+    /// block per `GridFence` step — the global-tier sync cost).
+    pub fences: u64,
     /// Block iterations simulated (grid size summed over launches).
     pub block_iters: u64,
     /// Output elements produced by thread loops (work volume).
     pub thread_elems: u64,
+    /// Generated launches with no cross-emitter intermediates.
+    pub tier_plain: u64,
+    /// Generated launches stitched through shared memory (§5.1).
+    pub tier_shm: u64,
+    /// Generated launches stitched through global-memory spill regions
+    /// with grid fences (the third tier).
+    pub tier_global: u64,
 }
 
 impl LaunchLedger {
@@ -38,8 +51,12 @@ impl LaunchLedger {
         self.generated += other.generated;
         self.library += other.library;
         self.barriers += other.barriers;
+        self.fences += other.fences;
         self.block_iters += other.block_iters;
         self.thread_elems += other.thread_elems;
+        self.tier_plain += other.tier_plain;
+        self.tier_shm += other.tier_shm;
+        self.tier_global += other.tier_global;
     }
 
     /// Field-wise difference (`self - earlier`), for deriving the cost
@@ -49,8 +66,12 @@ impl LaunchLedger {
             generated: self.generated.saturating_sub(earlier.generated),
             library: self.library.saturating_sub(earlier.library),
             barriers: self.barriers.saturating_sub(earlier.barriers),
+            fences: self.fences.saturating_sub(earlier.fences),
             block_iters: self.block_iters.saturating_sub(earlier.block_iters),
             thread_elems: self.thread_elems.saturating_sub(earlier.thread_elems),
+            tier_plain: self.tier_plain.saturating_sub(earlier.tier_plain),
+            tier_shm: self.tier_shm.saturating_sub(earlier.tier_shm),
+            tier_global: self.tier_global.saturating_sub(earlier.tier_global),
         }
     }
 }
@@ -59,8 +80,16 @@ impl fmt::Display for LaunchLedger {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "launches: {} generated + {} library (barriers {}, blocks {}, elems {})",
-            self.generated, self.library, self.barriers, self.block_iters, self.thread_elems
+            "launches: {} generated + {} library (barriers {}, fences {}, blocks {}, elems {}, tiers plain/shm/global {}/{}/{})",
+            self.generated,
+            self.library,
+            self.barriers,
+            self.fences,
+            self.block_iters,
+            self.thread_elems,
+            self.tier_plain,
+            self.tier_shm,
+            self.tier_global
         )
     }
 }
@@ -71,8 +100,28 @@ mod tests {
 
     #[test]
     fn merge_and_since_roundtrip() {
-        let mut a = LaunchLedger { generated: 3, library: 1, barriers: 5, block_iters: 8, thread_elems: 100 };
-        let b = LaunchLedger { generated: 2, library: 2, barriers: 1, block_iters: 4, thread_elems: 50 };
+        let mut a = LaunchLedger {
+            generated: 3,
+            library: 1,
+            barriers: 5,
+            fences: 2,
+            block_iters: 8,
+            thread_elems: 100,
+            tier_plain: 1,
+            tier_shm: 1,
+            tier_global: 1,
+        };
+        let b = LaunchLedger {
+            generated: 2,
+            library: 2,
+            barriers: 1,
+            fences: 1,
+            block_iters: 4,
+            thread_elems: 50,
+            tier_plain: 0,
+            tier_shm: 1,
+            tier_global: 1,
+        };
         let before = a;
         a.merge(&b);
         assert_eq!(a.total_launches(), 8);
@@ -84,5 +133,20 @@ mod tests {
         let l = LaunchLedger { generated: 2, library: 3, ..Default::default() };
         let s = l.to_string();
         assert!(s.contains("2 generated") && s.contains("3 library"));
+    }
+
+    #[test]
+    fn display_mentions_tiers_and_fences() {
+        let l = LaunchLedger {
+            generated: 3,
+            fences: 4,
+            tier_plain: 1,
+            tier_shm: 1,
+            tier_global: 1,
+            ..Default::default()
+        };
+        let s = l.to_string();
+        assert!(s.contains("fences 4"));
+        assert!(s.contains("tiers plain/shm/global 1/1/1"));
     }
 }

@@ -233,6 +233,10 @@ struct ExprCtx<'a> {
     /// schedules their output loops run under — the visibility contract
     /// for same-launch reads of a root's output.
     root_scheds: &'a HashMap<InstrId, Schedule>,
+    /// Ops materialized in grid-visible spill regions (third tier).
+    /// After the grid fence that follows the spill write, any block may
+    /// read any element — no chunk check, unlike shared/owned reads.
+    spilled: &'a HashSet<InstrId>,
 }
 
 /// Builder for one straight-line [`ThreadProg`], memoizing repeated
@@ -327,11 +331,20 @@ fn lower_kernel(
         shm_base += elems;
     }
 
-    let ctx = ExprCtx { comp, members, slots: &slots, slot_of: &slot_of, root_scheds: &root_scheds };
+    let spilled: HashSet<InstrId> = kplan.shm.spilled.iter().copied().collect();
+    let ctx = ExprCtx {
+        comp,
+        members,
+        slots: &slots,
+        slot_of: &slot_of,
+        root_scheds: &root_scheds,
+        spilled: &spilled,
+    };
     let mut steps: Vec<BlockStep> = Vec::new();
     let mut outputs: Vec<(InstrId, usize)> = Vec::new();
+    let mut spills: Vec<(InstrId, usize)> = Vec::new();
     for eop in &kplan.ops {
-        if !eop.writes_shared && !eop.writes_output {
+        if !eop.writes_shared && !eop.writes_output && !eop.writes_spill {
             continue; // generator: thread-composed into consumers
         }
         let instr = comp.get(eop.id);
@@ -347,6 +360,8 @@ fn lower_kernel(
                 .get(&eop.id)
                 .ok_or_else(|| anyhow!("%{} writes shared but has no slot", eop.id.0))?;
             WriteTarget::Shared { offset: meta.offset, slot: slot_of[&meta.offset] }
+        } else if eop.writes_spill {
+            WriteTarget::Spill
         } else {
             WriteTarget::Output
         };
@@ -359,6 +374,12 @@ fn lower_kernel(
         });
         if eop.writes_shared {
             steps.push(BlockStep::Barrier);
+        }
+        if eop.writes_spill {
+            // Third tier: no block may read the spill region until
+            // every block has deposited its chunk.
+            steps.push(BlockStep::GridFence);
+            spills.push((eop.id, instr.shape.num_elements() as usize));
         }
         if eop.writes_output {
             outputs.push((eop.id, instr.shape.num_elements() as usize));
@@ -374,6 +395,7 @@ fn lower_kernel(
         shm_regions,
         steps,
         outputs,
+        spills,
     })
 }
 
@@ -575,9 +597,27 @@ fn emit_expr_uncached(
             Ok(dst)
         }
         Reduce | BatchDot => {
-            // A reduction/contraction cannot be thread-composed; the
-            // only remaining legal source is a fusion root's own global
-            // output, readable within the executing block's chunk.
+            // A reduction/contraction cannot be thread-composed. A
+            // spilled op (third tier) is materialized in a grid-visible
+            // arena region before the grid fence, so any block may read
+            // any element — a plain global load, no chunk check.
+            if ctx.spilled.contains(&id) {
+                let dst = pb.reg();
+                let dims = instr.shape.dims.clone();
+                let lin = compile_affine(&map, pb.rank, &dims);
+                pb.code.push(TInstr::LoadGlobal {
+                    dst,
+                    src: id,
+                    dims,
+                    lin,
+                    buf: None, // baked by the memory planner
+                    map,
+                });
+                return Ok(dst);
+            }
+            // Otherwise the only remaining legal source is a fusion
+            // root's own global output, readable within the executing
+            // block's chunk.
             if let Some(&owner_sched) = ctx.root_scheds.get(&id) {
                 let dst = pb.reg();
                 let dims = instr.shape.dims.clone();

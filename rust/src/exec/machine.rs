@@ -17,12 +17,19 @@
 //!   §5.1.3 dominance rule should have prevented the reuse);
 //! - kernel outputs only ever come from fusion roots — in-group
 //!   consumers recompute or read shared memory, never global output
-//!   written in the same launch (no cross-block synchronization).
+//!   written in the same launch (no *implicit* cross-block
+//!   synchronization);
+//! - the one sanctioned exception is the global stitching tier: a
+//!   spilled intermediate ([`WriteTarget::Spill`]) is readable only
+//!   after the [`BlockStep::GridFence`] that follows its producer. The
+//!   VM splits the step list into phases at fences and joins every
+//!   block between phases, so post-fence reads see every block's
+//!   writes — the `grid.sync` model of a cooperative launch.
 
 use super::bytecode::{
     chunk_index, chunk_index_into, chunk_offset, linearize, sched_blocks, sched_chunk,
-    sched_linearize, BlockStep, KernelProgram, LoopKind, ShmRegion, TInstr, ThreadProg,
-    WriteTarget, CONST_FILL,
+    sched_linearize, BlockStep, KernelProgram, LoopKind, ShmRegion, StitchTier, TInstr,
+    ThreadProg, WriteTarget, CONST_FILL,
 };
 use super::ledger::LaunchLedger;
 use super::memplan::{BufSlot, MemoryPlan};
@@ -402,6 +409,34 @@ struct FastCtx<'v, 'a> {
     block: i64,
 }
 
+/// Per-block shared memory persisted across grid-fence phases: on a
+/// real device a cooperative launch keeps every block resident across
+/// `grid.sync`, so its shared buffer and region-owner table survive the
+/// fence. Only global-tier kernels (rare) allocate these; single-phase
+/// kernels reuse the pooled [`ThreadScratch`] buffers.
+#[derive(Debug, Default)]
+struct BlockShm {
+    shm: Vec<f32>,
+    owners: Vec<Option<InstrId>>,
+}
+
+/// Split a kernel's step list at grid fences: each [`BlockStep::GridFence`]
+/// begins the phase it gates (the fence is the phase's first step, so
+/// executing a phase counts its fence once per block), and the join
+/// between phases realizes the fence's grid-wide ordering.
+fn split_phases(steps: &[BlockStep]) -> Vec<&[BlockStep]> {
+    let mut phases = Vec::new();
+    let mut start = 0usize;
+    for (i, s) in steps.iter().enumerate() {
+        if matches!(s, BlockStep::GridFence) && i > start {
+            phases.push(&steps[start..i]);
+            start = i;
+        }
+    }
+    phases.push(&steps[start..]);
+    phases
+}
+
 fn run_kernel_fast(
     k: &KernelProgram,
     mem: &MemoryPlan,
@@ -417,13 +452,26 @@ fn run_kernel_fast(
             .ok_or_else(|| anyhow!("output %{} has no arena slot", root.0))?;
         data[slot.off..slot.off + slot.elems].fill(0.0);
     }
+    // Spill regions too — the global tier's intermediates live in the
+    // arena under the same liveness discipline as outputs.
+    for &(id, _) in &k.spills {
+        let slot = mem.slots[id.0]
+            .ok_or_else(|| anyhow!("spill %{} has no arena slot", id.0))?;
+        data[slot.off..slot.off + slot.elems].fill(0.0);
+    }
+    match k.stitch_tier() {
+        StitchTier::Global => ledger.tier_global += 1,
+        StitchTier::Shm => ledger.tier_shm += 1,
+        StitchTier::Plain => ledger.tier_plain += 1,
+    }
     let blocks = k.blocks.max(1) as i64;
+    ledger.block_iters += blocks as u64;
     let per_block: i64 = k
         .steps
         .iter()
         .map(|s| match s {
             BlockStep::Loop { dims, sched, .. } => sched_chunk(*sched, dims),
-            BlockStep::Barrier => 0,
+            BlockStep::Barrier | BlockStep::GridFence => 0,
         })
         .sum();
     let shm_elems = k.shm_regions.iter().map(|r| r.base + r.elems).max().unwrap_or(0);
@@ -444,22 +492,66 @@ fn run_kernel_fast(
         }
     }
     let view = ArenaView::new(data);
-    let results = super::par::fan_out(&mut scratch[..workers], |t, s| {
-        let mut lg = LaunchLedger::default();
-        for b in super::par::block_range(blocks, workers, t) {
-            exec_block(k, mem, &view, b, s, &mut lg)?;
+    let phases = split_phases(&k.steps);
+    if phases.len() == 1 {
+        let results = super::par::fan_out(&mut scratch[..workers], |t, s| {
+            let mut lg = LaunchLedger::default();
+            for b in super::par::block_range(blocks, workers, t) {
+                exec_block(k, mem, &view, b, s, &mut lg)?;
+            }
+            Ok::<LaunchLedger, anyhow::Error>(lg)
+        });
+        // Fold per-worker ledgers in worker order: u64 sums are
+        // order-independent, so counts match the boxed path exactly; the
+        // first error in worker (= block) order wins.
+        for r in results {
+            ledger.merge(&r?);
         }
-        Ok::<LaunchLedger, anyhow::Error>(lg)
-    });
-    // Fold per-worker ledgers in worker order: u64 sums are
-    // order-independent, so counts match the boxed path exactly; the
-    // first error in worker (= block) order wins.
-    for r in results {
-        ledger.merge(&r?);
+        return Ok(());
+    }
+    // Global tier: the grid fence joins every block between phases, so
+    // each block's shared memory and owner table must persist across
+    // the boundary — one `BlockShm` per block, held by the worker that
+    // owns the block (the block→worker map is a pure function of
+    // `(blocks, workers)`, identical in every phase).
+    let mut block_shms: Vec<Vec<BlockShm>> = (0..workers)
+        .map(|t| {
+            super::par::block_range(blocks, workers, t)
+                .map(|_| BlockShm {
+                    shm: vec![0.0; shm_elems],
+                    owners: vec![None; k.shm_regions.len()],
+                })
+                .collect()
+        })
+        .collect();
+    let mut pairs: Vec<(&mut ThreadScratch, &mut Vec<BlockShm>)> =
+        scratch[..workers].iter_mut().zip(block_shms.iter_mut()).collect();
+    for phase in &phases {
+        let results = super::par::fan_out(&mut pairs, |t, pair| {
+            let (s, shms) = pair;
+            let mut lg = LaunchLedger::default();
+            for (i, b) in super::par::block_range(blocks, workers, t).enumerate() {
+                let blk = &mut shms[i];
+                let ThreadScratch { vals, regs, pool, idx, idx_a, idx_b, .. } = &mut **s;
+                exec_steps(
+                    phase, k, mem, &view, b, &mut blk.shm, &mut blk.owners, vals, regs, pool,
+                    idx, idx_a, idx_b, &mut lg,
+                )?;
+            }
+            Ok::<LaunchLedger, anyhow::Error>(lg)
+        });
+        // The join of this fan-out IS the grid fence: no block enters
+        // the next phase until every block has finished this one.
+        for r in results {
+            ledger.merge(&r?);
+        }
     }
     Ok(())
 }
 
+/// Single-phase block execution over the pooled per-worker scratch —
+/// the common (fence-free) path: shared memory and owners reset per
+/// block and the whole step list runs as one phase.
 fn exec_block(
     k: &KernelProgram,
     mem: &MemoryPlan,
@@ -471,9 +563,33 @@ fn exec_block(
     let ThreadScratch { shm, owners, vals, regs, pool, idx, idx_a, idx_b } = s;
     owners.clear();
     owners.resize(k.shm_regions.len(), None);
-    for step in &k.steps {
+    exec_steps(&k.steps, k, mem, view, b, shm, owners, vals, regs, pool, idx, idx_a, idx_b, lg)
+}
+
+/// Run one phase's steps for one block. `shm`/`owners` belong to the
+/// block (persisting across phases in the multi-phase path); the rest
+/// is per-worker scratch.
+#[allow(clippy::too_many_arguments)]
+fn exec_steps(
+    steps: &[BlockStep],
+    k: &KernelProgram,
+    mem: &MemoryPlan,
+    view: &ArenaView<'_>,
+    b: i64,
+    shm: &mut [f32],
+    owners: &mut [Option<InstrId>],
+    vals: &mut Vec<f32>,
+    regs: &mut Vec<f32>,
+    pool: &mut IdxPool,
+    idx: &mut Vec<i64>,
+    idx_a: &mut Vec<i64>,
+    idx_b: &mut Vec<i64>,
+    lg: &mut LaunchLedger,
+) -> crate::Result<()> {
+    for step in steps {
         match step {
             BlockStep::Barrier => lg.barriers += 1,
+            BlockStep::GridFence => lg.fences += 1,
             BlockStep::Loop { op, dims, sched, kind, write } => {
                 let grid = sched_blocks(*sched, dims);
                 if b >= grid {
@@ -491,8 +607,8 @@ fn exec_block(
                         {
                             let ctx = FastCtx {
                                 view,
-                                shm: shm.as_slice(),
-                                owners: owners.as_slice(),
+                                shm: &*shm,
+                                owners: &*owners,
                                 regions: &k.shm_regions,
                                 block: b,
                             };
@@ -511,13 +627,13 @@ fn exec_block(
                             .copy_from_slice(&vals[..chunk as usize]);
                         owners[*slot] = Some(*op);
                     }
-                    WriteTarget::Output => {
+                    WriteTarget::Output | WriteTarget::Spill => {
                         let out_slot = mem.slots[op.0]
                             .ok_or_else(|| anyhow!("output %{} not allocated", op.0))?;
                         let ctx = FastCtx {
                             view,
-                            shm: shm.as_slice(),
-                            owners: owners.as_slice(),
+                            shm: &*shm,
+                            owners: &*owners,
                             regions: &k.shm_regions,
                             block: b,
                         };
@@ -535,7 +651,6 @@ fn exec_block(
             }
         }
     }
-    lg.block_iters += 1;
     Ok(())
 }
 
@@ -853,53 +968,73 @@ fn run_kernel(
     for &(root, elems) in &k.outputs {
         values[root.0] = Some(vec![0f32; elems]);
     }
+    for &(id, elems) in &k.spills {
+        values[id.0] = Some(vec![0f32; elems]);
+    }
+    match k.stitch_tier() {
+        StitchTier::Global => ledger.tier_global += 1,
+        StitchTier::Shm => ledger.tier_shm += 1,
+        StitchTier::Plain => ledger.tier_plain += 1,
+    }
     let threads = k.threads.max(1) as i64;
-    for b in 0..k.blocks.max(1) as i64 {
-        // Shared memory: byte-offset-keyed regions; a SHARE rewrite
-        // replaces the previous owner (space sharing, §5.1.3).
-        let mut shm: HashMap<usize, (InstrId, Vec<f32>)> = HashMap::new();
-        for step in &k.steps {
-            match step {
-                BlockStep::Barrier => ledger.barriers += 1,
-                BlockStep::Loop { op, dims, sched, kind, write } => {
-                    let grid = sched_blocks(*sched, dims);
-                    if b >= grid {
-                        continue; // guarded-off block for this loop
-                    }
-                    let chunk = sched_chunk(*sched, dims);
-                    let mut vals = vec![0f32; chunk as usize];
-                    {
-                        let ctx = EvalCtx { values: &values[..], shm: &shm, block: b };
-                        for t in 0..threads {
-                            let mut e = t;
-                            while e < chunk {
-                                let idx = chunk_index(*sched, dims, b, e);
-                                vals[e as usize] = compute_element(kind, &idx, &ctx)
-                                    .map_err(|err| anyhow!("kernel {} %{}: {err}", k.name, op.0))?;
-                                ledger.thread_elems += 1;
-                                e += threads;
+    let blocks = k.blocks.max(1) as i64;
+    ledger.block_iters += blocks as u64;
+    // Shared memory: byte-offset-keyed regions per block; a SHARE
+    // rewrite replaces the previous owner (space sharing, §5.1.3).
+    // The maps live outside the phase loop because shared memory
+    // survives a grid fence — and phases run blocks-INNER: block 0's
+    // post-fence phase may read spill elements written by every other
+    // block's pre-fence phase.
+    let mut shms: Vec<HashMap<usize, (InstrId, Vec<f32>)>> =
+        (0..blocks).map(|_| HashMap::new()).collect();
+    for phase in split_phases(&k.steps) {
+        for b in 0..blocks {
+            let shm = &mut shms[b as usize];
+            for step in phase {
+                match step {
+                    BlockStep::Barrier => ledger.barriers += 1,
+                    BlockStep::GridFence => ledger.fences += 1,
+                    BlockStep::Loop { op, dims, sched, kind, write } => {
+                        let grid = sched_blocks(*sched, dims);
+                        if b >= grid {
+                            continue; // guarded-off block for this loop
+                        }
+                        let chunk = sched_chunk(*sched, dims);
+                        let mut vals = vec![0f32; chunk as usize];
+                        {
+                            let ctx = EvalCtx { values: &values[..], shm: &*shm, block: b };
+                            for t in 0..threads {
+                                let mut e = t;
+                                while e < chunk {
+                                    let idx = chunk_index(*sched, dims, b, e);
+                                    vals[e as usize] = compute_element(kind, &idx, &ctx)
+                                        .map_err(|err| {
+                                            anyhow!("kernel {} %{}: {err}", k.name, op.0)
+                                        })?;
+                                    ledger.thread_elems += 1;
+                                    e += threads;
+                                }
                             }
                         }
-                    }
-                    match write {
-                        WriteTarget::Shared { offset, .. } => {
-                            shm.insert(*offset, (*op, vals));
-                        }
-                        WriteTarget::Output => {
-                            let buf = values[op.0]
-                                .as_mut()
-                                .ok_or_else(|| anyhow!("output %{} not allocated", op.0))?;
-                            for e in 0..chunk {
-                                let idx = chunk_index(*sched, dims, b, e);
-                                let lin = linearize(&idx, dims) as usize;
-                                buf[lin] = vals[e as usize];
+                        match write {
+                            WriteTarget::Shared { offset, .. } => {
+                                shm.insert(*offset, (*op, vals));
+                            }
+                            WriteTarget::Output | WriteTarget::Spill => {
+                                let buf = values[op.0]
+                                    .as_mut()
+                                    .ok_or_else(|| anyhow!("output %{} not allocated", op.0))?;
+                                for e in 0..chunk {
+                                    let idx = chunk_index(*sched, dims, b, e);
+                                    let lin = linearize(&idx, dims) as usize;
+                                    buf[lin] = vals[e as usize];
+                                }
                             }
                         }
                     }
                 }
             }
         }
-        ledger.block_iters += 1;
     }
     Ok(())
 }
@@ -1543,6 +1678,28 @@ mod tests {
         assert!(exe.run(&[]).is_err());
         assert!(exe.run(&[vec![0.0; 3]]).is_err());
         assert!(exe.run(&[vec![0.0; 4]]).is_ok());
+    }
+
+    #[test]
+    fn split_phases_fences_begin_phases() {
+        let steps = vec![
+            BlockStep::Barrier,
+            BlockStep::GridFence,
+            BlockStep::Barrier,
+            BlockStep::GridFence,
+            BlockStep::GridFence,
+            BlockStep::Barrier,
+        ];
+        let phases = split_phases(&steps);
+        assert_eq!(phases.len(), 4);
+        assert_eq!(phases[0].len(), 1);
+        for phase in &phases[1..] {
+            assert!(matches!(phase[0], BlockStep::GridFence), "fence must begin its phase");
+        }
+        assert_eq!(phases.iter().map(|p| p.len()).sum::<usize>(), steps.len());
+        // Fence-free step lists stay a single phase.
+        assert_eq!(split_phases(&[BlockStep::Barrier]).len(), 1);
+        assert_eq!(split_phases(&[]).len(), 1);
     }
 
     #[test]

@@ -175,6 +175,14 @@ pub fn liveness(exe: &StitchedExecutable) -> Vec<Option<ValueLife>> {
                     lives[root.0] =
                         Some(ValueLife { def: point, last_use: point, elems: elems.max(1) });
                 }
+                // Spill regions (global-tier stitching) are written and
+                // read back within this launch only; the same-launch
+                // `LoadGlobal` reads below keep `last_use == def`, so
+                // the range retires immediately after the launch.
+                for &(id, elems) in &k.spills {
+                    lives[id.0] =
+                        Some(ValueLife { def: point, last_use: point, elems: elems.max(1) });
+                }
                 for_each_kernel_read(k, |src| {
                     if let Some(life) = lives[src].as_mut() {
                         life.last_use = life.last_use.max(point);

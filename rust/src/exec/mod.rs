@@ -19,7 +19,8 @@
 //! | per-op parallel loops (Fig. 5) | [`bytecode::BlockStep::Loop`] + chunk model |
 //! | thread composition | inlined [`bytecode::ThreadProg`] expressions |
 //! | block composition via shared memory | per-block regions + [`bytecode::BlockStep::Barrier`] |
-//! | kernel launch counts (Fig. 7) | [`LaunchLedger`] |
+//! | global-memory stitching (third tier) | spill regions + [`bytecode::BlockStep::GridFence`] phases |
+//! | kernel launch counts (Fig. 7) | [`LaunchLedger`] (attributed per [`StitchTier`]) |
 
 //!
 //! Since the memory-planning PR the execute path itself is fast: a
@@ -37,7 +38,7 @@ pub mod machine;
 pub mod memplan;
 pub mod par;
 
-pub use bytecode::KernelProgram;
+pub use bytecode::{KernelProgram, StitchTier};
 pub use ledger::LaunchLedger;
 pub use lower::lower_to_exec;
 pub use machine::{ExecArena, Launch, LibKind, LibraryCall, StitchedExecutable};

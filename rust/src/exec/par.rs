@@ -4,7 +4,9 @@
 //! enforces the no-cross-block-synchronization invariant (a block only
 //! reads its own shared chunk and its own slice of same-launch
 //! outputs), so the grid loop can spread over cores with no
-//! coordination beyond the join. This module is the rayon-shaped core
+//! coordination beyond the join. The one sanctioned cross-block edge —
+//! the global tier's grid fence — is realized by running one fan-out
+//! per fence-delimited phase: the join between phases *is* the fence. This module is the rayon-shaped core
 //! of that fan-out, implemented on `std::thread::scope` because the
 //! offline build image carries no external crates (the repo's only
 //! dependency is `anyhow`); swapping a real rayon pool in later only

@@ -26,6 +26,12 @@ pub struct DeepFusionConfig {
     /// Run the cost-guided exploration pass ([`super::explore`]) over
     /// the greedy plan (on by default; `--no-cost-fusion` disables).
     pub cost_fusion: bool,
+    /// Allow the exploration pass to form global-tier groups: when a
+    /// merged group's intermediates overflow the shared-memory budget,
+    /// cost them as DRAM spills behind a grid fence instead of ruling
+    /// the merge out (on by default; the differential suite compares
+    /// both settings).
+    pub global_stitch: bool,
     pub elementwise: ElementwiseFusionConfig,
     pub tuning: TuningConfig,
     pub device: DeviceConfig,
@@ -36,6 +42,7 @@ impl Default for DeepFusionConfig {
         DeepFusionConfig {
             fuse_batch_dot: true,
             cost_fusion: true,
+            global_stitch: true,
             elementwise: ElementwiseFusionConfig::default(),
             tuning: TuningConfig::default(),
             device: DeviceConfig::pascal(),

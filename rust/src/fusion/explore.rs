@@ -12,7 +12,12 @@
 //! - **merge**: adjacent producer/consumer groups are merged when the
 //!   merged kernel's modeled time (launch overhead + tuned
 //!   `kernel_exec_time_us`, shared-memory residency included) beats the
-//!   two separate kernels;
+//!   two separate kernels. With global stitching on
+//!   ([`DeepFusionConfig::global_stitch`]), a merge whose intermediates
+//!   overflow shared memory is costed as DRAM spill traffic plus one
+//!   grid fence per spill ([`GLOBAL_FENCE_US`]) instead of being ruled
+//!   out — the third stitching tier, which beats a split whenever the
+//!   fence is cheaper than the saved launch;
 //! - **split**: a group is split at a span-layer boundary when the two
 //!   halves are modeled faster than the whole — but only while the plan
 //!   stays within the greedy plan's launch budget, so a cost-guided
@@ -30,7 +35,7 @@ use super::deep::DeepFusionConfig;
 use super::plan::{FusionPlan, GroupKind};
 use crate::analysis::SpanAnalysis;
 use crate::codegen::kernel_plan::fused_kernel_desc;
-use crate::codegen::shm_planner::plan_shared_memory;
+use crate::codegen::shm_planner::{plan_shared_memory, plan_shared_memory_spill};
 use crate::gpusim::cost::kernel_time_us;
 use crate::gpusim::DeviceConfig;
 use crate::hlo::{Computation, InstrId, Opcode};
@@ -40,6 +45,14 @@ use std::collections::{BTreeSet, HashMap, HashSet};
 /// Bound on refinement rounds: each round retries merges and splits over
 /// the whole plan; small graphs converge in one or two.
 const MAX_ROUNDS: usize = 3;
+
+/// Modeled cost of one grid-wide fence (cooperative-launch
+/// `grid.sync`), charged per spilled intermediate when costing a
+/// global-tier group. Cheaper than a kernel launch
+/// (`DeviceConfig::pascal` models 4.0us of launch overhead), so the
+/// model prefers one fenced kernel over two launches whenever the
+/// spill's DRAM round trip doesn't dominate.
+pub const GLOBAL_FENCE_US: f64 = 1.0;
 
 /// What exploration did to the greedy plan.
 #[derive(Debug, Clone, Default)]
@@ -132,6 +145,7 @@ struct Explorer<'a> {
     tuning: TuningConfig,
     cfg_sig: u64,
     dev: DeviceConfig,
+    global_stitch: bool,
     stats: ExploreStats,
     /// In-process cache: fingerprint → modeled cost (INFINITY when the
     /// grouping is unschedulable).
@@ -144,14 +158,17 @@ impl<'a> Explorer<'a> {
         // device the pipeline models with (`cfg.device`), which need
         // not be the device the library was constructed under — so the
         // memo key carries digests of both alongside the fingerprint.
+        // The global-stitch flag changes costs too (spill vs INFINITY),
+        // so it is part of the signature.
         let sig = crate::schedule::perf_library::fnv1a(
-            format!("{:?}|{:?}", cfg.tuning, cfg.device).as_bytes(),
+            format!("{:?}|{:?}|gs{}", cfg.tuning, cfg.device, cfg.global_stitch as u8).as_bytes(),
         );
         Explorer {
             lib,
             tuning: cfg.tuning.clone(),
             cfg_sig: sig,
             dev: cfg.device.clone(),
+            global_stitch: cfg.global_stitch,
             stats: ExploreStats::default(),
             cache: HashMap::new(),
         }
@@ -159,10 +176,13 @@ impl<'a> Explorer<'a> {
 
     /// Modeled wall time of `members` as one fused kernel: one launch
     /// overhead plus the tuned schedule's execution time with the
-    /// group's shared-memory residency. `f64::INFINITY` when no
-    /// schedule (or shared-memory plan) exists — such groupings are
-    /// never created and existing ones are left untouched (the driver
-    /// falls back to per-op baseline kernels for them).
+    /// group's shared-memory residency. With global stitching on,
+    /// overflowing intermediates cost DRAM spill traffic plus one grid
+    /// fence each instead of failing; with it off, `f64::INFINITY` when
+    /// no shared-memory plan exists. Unschedulable groupings are
+    /// `f64::INFINITY` either way — such groupings are never created
+    /// and existing ones are left untouched (the driver falls back to
+    /// per-op baseline kernels for them).
     fn cost_of(&mut self, comp: &Computation, members: &HashSet<InstrId>) -> f64 {
         let fp = group_fingerprint(comp, members);
         if let Some(&v) = self.cache.get(&fp) {
@@ -176,6 +196,20 @@ impl<'a> Explorer<'a> {
         }
         let roots = roots_of(comp, members);
         let v = match tune(comp, members, &roots, self.lib, &self.tuning) {
+            Some(plan) if self.global_stitch => {
+                let shm = plan_shared_memory_spill(comp, members, &roots, &plan, &self.dev);
+                let mut desc = fused_kernel_desc(comp, members, &plan);
+                desc.smem_bytes = shm.total_bytes;
+                // Spilled intermediates round-trip through DRAM and
+                // cost one grid-wide fence each (mirrors
+                // `KernelPlan::to_kernel_desc`).
+                for &id in &shm.spilled {
+                    let bytes = comp.get(id).shape.byte_size() as u64;
+                    desc.bytes_read += bytes;
+                    desc.bytes_written += bytes;
+                }
+                kernel_time_us(&desc, &self.dev) + shm.spilled.len() as f64 * GLOBAL_FENCE_US
+            }
             Some(plan) => match plan_shared_memory(comp, members, &roots, &plan, &self.dev) {
                 Ok(shm) => {
                     let mut desc = fused_kernel_desc(comp, members, &plan);
@@ -509,6 +543,41 @@ mod tests {
         // exists (the one-block kernel dominates the modeled time).
         assert!(stats.splits_accepted >= 1, "serialized group should split: {stats:?}");
         assert!(stats.modeled_after_us < stats.modeled_before_us);
+    }
+
+    #[test]
+    fn global_stitch_merges_an_overflowing_chain() {
+        // The overflow-corpus chains have an interior reduce whose
+        // per-block chunk exceeds pascal's 20KB budget under every legal
+        // schedule, so shared-memory stitching alone cannot merge across
+        // it. With global stitching on, the explorer costs the spill
+        // (the same DRAM round trip the split pays at the kernel
+        // boundary anyway) plus one grid fence (1us) against the saved
+        // launch (4us) and accepts the merge; with it off the
+        // overflowing merge costs INFINITY and is refused.
+        for comp in crate::corpus::generate_overflow_models() {
+            let plan = FusionPlan::from_groups(&comp, vec![]);
+            let before = plan.generated_kernel_count(&comp);
+
+            let mut lib_on = PerfLibrary::new(DeviceConfig::pascal());
+            let (on, on_stats) = explore_fusion(&comp, &plan, &mut lib_on, &cfg());
+            on.validate(&comp).unwrap();
+
+            let mut lib_off = PerfLibrary::new(DeviceConfig::pascal());
+            let off_cfg = DeepFusionConfig { global_stitch: false, ..Default::default() };
+            let (off, _) = explore_fusion(&comp, &plan, &mut lib_off, &off_cfg);
+            off.validate(&comp).unwrap();
+
+            assert!(
+                on.generated_kernel_count(&comp) < off.generated_kernel_count(&comp),
+                "{}: global tier must enable a merge shm stitching cannot: on={} off={}",
+                comp.name,
+                on.generated_kernel_count(&comp),
+                off.generated_kernel_count(&comp)
+            );
+            assert!(off.generated_kernel_count(&comp) <= before, "{}", comp.name);
+            assert!(on_stats.merges_accepted >= 1, "{}", comp.name);
+        }
     }
 
     #[test]

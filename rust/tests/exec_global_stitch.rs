@@ -1,0 +1,231 @@
+//! Global-memory stitching tier acceptance suite.
+//!
+//! The tentpole claim: when an intermediate's per-block chunk overflows
+//! the shared-memory budget, materializing it in a global-memory spill
+//! region behind a grid fence (instead of splitting the group) must be
+//! **bit-identical** to the split plan — boxed reference path and
+//! block-parallel fast path at every thread count — while the launch
+//! ledger shows no more, and on the overflow corpus strictly fewer,
+//! executed kernel launches.
+
+use fusion_stitching::coordinator::pipeline::{compile_module, FusionMode, PipelineConfig};
+use fusion_stitching::corpus::generator::{generate_models, generate_overflow_models, CorpusConfig};
+use fusion_stitching::exec::{ExecArena, StitchedExecutable};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::Module;
+use fusion_stitching::schedule::PerfLibrary;
+
+/// Same stream as the other differential harnesses: small widths so
+/// every graph executes in test time.
+fn mini_corpus() -> Vec<Module> {
+    let cfg = CorpusConfig {
+        seed: 946,
+        models: 16,
+        ops_per_model: (8, 24),
+        max_width_log2: 6,
+    };
+    generate_models(&cfg)
+        .into_iter()
+        .map(|c| {
+            let name = c.name.clone();
+            Module::new(name, c)
+        })
+        .collect()
+}
+
+/// The large-intermediate tail: every model's interior reduce overflows
+/// the default shared-memory budget under every legal schedule.
+fn overflow_modules() -> Vec<Module> {
+    generate_overflow_models()
+        .into_iter()
+        .map(|c| {
+            let name = c.name.clone();
+            Module::new(name, c)
+        })
+        .collect()
+}
+
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 1000) as f32) / 1000.0 - 0.5
+        })
+        .collect()
+}
+
+fn inputs_for(module: &Module, seed: u64) -> Vec<Vec<f32>> {
+    module
+        .entry
+        .parameters()
+        .into_iter()
+        .enumerate()
+        .map(|(k, id)| {
+            let elems = module.entry.get(id).shape.num_elements() as usize;
+            fill(elems, seed + k as u64)
+        })
+        .collect()
+}
+
+fn lower_gs(module: &Module, fuse_batch_dot: bool, global_stitch: bool) -> StitchedExecutable {
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let mut cfg = PipelineConfig::default();
+    cfg.deep.fuse_batch_dot = fuse_batch_dot;
+    cfg.deep.global_stitch = global_stitch;
+    let compiled = compile_module(module, FusionMode::FusionStitching, &mut lib, &cfg)
+        .unwrap_or_else(|e| panic!("{}: compile failed: {e:#}", module.name));
+    match compiled.executable {
+        Some(exe) => (*exe).clone(),
+        None => panic!("{}: did not lower: {:?}", module.name, compiled.exec_error),
+    }
+}
+
+fn assert_bit_identical(name: &str, a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{name}: {what}: output size");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{name}: {what}: element {k} differs: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn global_stitched_plans_are_bit_identical_to_split_plans() {
+    // Corpus + light benchmarks + the overflow tail, each compiled with
+    // the global tier on and off: outputs must agree bit-for-bit (the
+    // VM computes each element in a fixed order regardless of
+    // grouping), and the stitched plan never launches more kernels.
+    let mut suite: Vec<(Module, bool)> =
+        mini_corpus().into_iter().map(|m| (m, false)).collect();
+    for (meta, module) in [
+        fusion_stitching::models::by_name("LR").unwrap(),
+        fusion_stitching::models::by_name("W2V").unwrap(),
+        fusion_stitching::models::by_name("Speech").unwrap(),
+    ] {
+        suite.push((module, meta.fuse_batch_dot));
+    }
+    for m in overflow_modules() {
+        suite.push((m, false));
+    }
+
+    for (i, (module, fuse_bd)) in suite.iter().enumerate() {
+        let inputs = inputs_for(module, 6000 + i as u64);
+        let stitched = lower_gs(module, *fuse_bd, true);
+        let split = lower_gs(module, *fuse_bd, false);
+        let (s_out, s_ledger) = stitched
+            .run_boxed(&inputs)
+            .unwrap_or_else(|e| panic!("{}: stitched run failed: {e:#}", module.name));
+        let (p_out, p_ledger) = split
+            .run_boxed(&inputs)
+            .unwrap_or_else(|e| panic!("{}: split run failed: {e:#}", module.name));
+        assert_bit_identical(&module.name, &s_out, &p_out, "stitched vs split");
+        assert!(
+            s_ledger.total_launches() <= p_ledger.total_launches(),
+            "{}: global stitching launched {} vs split {}",
+            module.name,
+            s_ledger.total_launches(),
+            p_ledger.total_launches()
+        );
+        assert_eq!(
+            s_ledger.library, p_ledger.library,
+            "{}: the global tier must not touch library calls",
+            module.name
+        );
+    }
+}
+
+#[test]
+fn overflow_models_take_the_global_tier_and_strictly_save_launches() {
+    // The acceptance bar: on the overflow corpus the global tier
+    // actually fires (fenced launches attributed to `tier_global`) and
+    // the stitched plan executes *strictly fewer* launches than the
+    // split plan forced by `global_stitch = false`.
+    for (i, module) in overflow_modules().iter().enumerate() {
+        let inputs = inputs_for(module, 7000 + i as u64);
+        let stitched = lower_gs(module, false, true);
+        let split = lower_gs(module, false, false);
+        let (s_out, s_ledger) = stitched.run_boxed(&inputs).unwrap();
+        let (p_out, p_ledger) = split.run_boxed(&inputs).unwrap();
+        assert_bit_identical(&module.name, &s_out, &p_out, "stitched vs split");
+        assert!(
+            s_ledger.tier_global > 0,
+            "{}: expected a global-tier launch, ledger: {s_ledger}",
+            module.name
+        );
+        assert!(
+            s_ledger.fences > 0,
+            "{}: a global-tier launch must cross a grid fence",
+            module.name
+        );
+        assert_eq!(
+            p_ledger.tier_global, 0,
+            "{}: the split plan must not use the global tier",
+            module.name
+        );
+        assert_eq!(p_ledger.fences, 0, "{}: split plans have no fences", module.name);
+        assert!(
+            s_ledger.total_launches() < p_ledger.total_launches(),
+            "{}: global stitching must strictly reduce launches: {} vs {}",
+            module.name,
+            s_ledger.total_launches(),
+            p_ledger.total_launches()
+        );
+    }
+}
+
+#[test]
+fn fast_path_matches_boxed_on_global_stitched_plans_at_every_thread_count() {
+    // The fence model in the block-parallel path: one fan-out per
+    // fence-delimited phase, the join *is* the fence. Outputs and
+    // ledgers must be bit-identical to the boxed reference at 1, 2 and
+    // 4 VM threads.
+    for (i, module) in overflow_modules().iter().enumerate() {
+        let inputs = inputs_for(module, 8000 + i as u64);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let exe = lower_gs(module, false, true);
+        let (boxed_out, boxed_ledger) = exe.run_boxed(&inputs).unwrap();
+        assert!(boxed_ledger.fences > 0, "{}: suite must exercise fences", module.name);
+        for threads in [1usize, 2, 4] {
+            let mut arena = ExecArena::with_threads(threads);
+            let mut fast_out = Vec::new();
+            let fast_ledger = exe
+                .run_into(&refs, &mut arena, &mut fast_out)
+                .unwrap_or_else(|e| {
+                    panic!("{} @ {threads} threads: fast run failed: {e:#}", module.name)
+                });
+            assert_eq!(
+                fast_ledger, boxed_ledger,
+                "{} @ {threads} threads: launch ledger changed",
+                module.name
+            );
+            assert_bit_identical(
+                &module.name,
+                &fast_out,
+                &boxed_out,
+                &format!("fast @ {threads} threads vs boxed"),
+            );
+        }
+    }
+}
+
+#[test]
+fn all_benchmark_models_compile_under_both_settings() {
+    // Running NMT/RNN/BiRNN in debug is impractical, but every Table 2
+    // model must *compile* with the global tier on and off, and the
+    // stitched plan's static launch count may never exceed the split
+    // plan's.
+    for (meta, module) in fusion_stitching::models::all_benchmarks() {
+        let stitched = lower_gs(&module, meta.fuse_batch_dot, true);
+        let split = lower_gs(&module, meta.fuse_batch_dot, false);
+        let s = stitched.generated_launches() + stitched.library_launches();
+        let p = split.generated_launches() + split.library_launches();
+        assert!(
+            s <= p,
+            "{}: global stitching plans {} launches vs split {}",
+            meta.name,
+            s,
+            p
+        );
+    }
+}

@@ -6,7 +6,7 @@
 //! share arena bytes.
 
 use fusion_stitching::coordinator::pipeline::{compile_module, FusionMode, PipelineConfig};
-use fusion_stitching::corpus::generator::{generate_models, CorpusConfig};
+use fusion_stitching::corpus::generator::{generate_models, generate_overflow_models, CorpusConfig};
 use fusion_stitching::exec::memplan;
 use fusion_stitching::exec::{ExecArena, StitchedExecutable};
 use fusion_stitching::gpusim::DeviceConfig;
@@ -76,11 +76,17 @@ fn suite() -> Vec<(Module, bool)> {
 }
 
 /// Planning-only sweep (no execution): the corpus plus all six
-/// benchmarks — compiling and planning NMT in debug is cheap.
+/// benchmarks — compiling and planning NMT in debug is cheap — plus the
+/// overflow tail, whose kernels carry global-tier spill regions the
+/// planner must pack like any other value.
 fn plan_suite() -> Vec<(Module, bool)> {
     let mut all: Vec<(Module, bool)> = mini_corpus().into_iter().map(|m| (m, false)).collect();
     for (meta, module) in fusion_stitching::models::all_benchmarks() {
         all.push((module, meta.fuse_batch_dot));
+    }
+    for c in generate_overflow_models() {
+        let name = c.name.clone();
+        all.push((Module::new(name, c), false));
     }
     all
 }
@@ -148,6 +154,77 @@ fn overlapping_lifetimes_never_share_arena_ranges_corpus_wide() {
         }
         // The plan never wastes space versus the boxed layout.
         assert!(plan.arena_elems <= plan.total_value_elems, "{}", module.name);
+    }
+}
+
+#[test]
+fn spill_regions_get_planned_slots_and_fences_order_phases_at_any_thread_count() {
+    // Global-tier kernels materialize an intermediate in a spill region
+    // behind a grid fence. The memory planner must treat those regions
+    // like any other value (an arena slot, lifetime-disjoint from
+    // everything live — the corpus-wide overlap test covers that via
+    // `plan_suite`), and the block-parallel VM must keep producer and
+    // consumer phases ordered whatever the worker count.
+    use fusion_stitching::exec::bytecode::BlockStep;
+    use fusion_stitching::exec::Launch;
+
+    for c in generate_overflow_models() {
+        let name = c.name.clone();
+        let module = Module::new(name, c);
+        let exe = lower(&module, FusionMode::FusionStitching, false);
+        let lives = memplan::liveness(&exe);
+
+        let mut spill_kernels = 0usize;
+        for l in &exe.launches {
+            let Launch::Kernel(k) = l else { continue };
+            if k.spills.is_empty() {
+                continue;
+            }
+            spill_kernels += 1;
+            assert!(
+                k.steps.iter().any(|s| matches!(s, BlockStep::GridFence)),
+                "{}: a spilling kernel must fence its phases",
+                module.name
+            );
+            // A fence is never the first step: something must be
+            // produced before anything is ordered after it.
+            assert!(
+                !matches!(k.steps.first(), Some(BlockStep::GridFence)),
+                "{}: leading fence guards nothing",
+                module.name
+            );
+            for &(id, elems) in &k.spills {
+                let life = lives[id.0]
+                    .unwrap_or_else(|| panic!("{}: spill %{} has no lifetime", module.name, id.0));
+                assert_eq!(life.elems, elems.max(1), "{}: spill size", module.name);
+                let slot = exe.mem.slots[id.0]
+                    .unwrap_or_else(|| panic!("{}: spill %{} has no arena slot", module.name, id.0));
+                assert_eq!(slot.elems, life.elems, "{}: spill slot size", module.name);
+            }
+        }
+        assert!(spill_kernels > 0, "{}: overflow model must spill", module.name);
+
+        // Fence ordering is a parallel-execution property: the join
+        // between phases is the fence, so outputs and ledgers must not
+        // depend on how blocks spread over workers.
+        let inputs = inputs_for(&module, 321);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let (boxed_out, boxed_ledger) = exe.run_boxed(&inputs).unwrap();
+        assert!(boxed_ledger.fences > 0, "{}: fences must be executed", module.name);
+        for threads in [1usize, 2, 4] {
+            let mut arena = ExecArena::with_threads(threads);
+            let mut out = Vec::new();
+            let ledger = exe.run_into(&refs, &mut arena, &mut out).unwrap();
+            assert_eq!(ledger, boxed_ledger, "{} @ {threads} threads", module.name);
+            assert_eq!(out.len(), boxed_out.len(), "{}", module.name);
+            for (k, (a, b)) in out.iter().zip(&boxed_out).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{} @ {threads} threads: element {k}: {a} vs {b}",
+                    module.name
+                );
+            }
+        }
     }
 }
 
