@@ -1,6 +1,6 @@
 # Convenience targets; everything also works via plain cargo / python.
 
-.PHONY: build test bench bench-launches bench-serving bench-fusion bench-vm bench-global artifacts doc
+.PHONY: build test bench bench-launches bench-serving bench-fusion bench-vm bench-global bench-profile artifacts doc
 
 build:
 	cargo build --release
@@ -39,6 +39,13 @@ bench-vm:
 # writes BENCH_global_stitch.json at the repo root.
 bench-global:
 	BENCH_SMOKE=1 cargo bench --bench global_stitch
+
+# Flight-recorder overhead bench (smoke mode): tracing-on vs -off vs
+# baseline on all six models, plus the per-group modeled-vs-measured
+# divergence report; writes BENCH_profile_overhead.json at the repo
+# root. Full runs gate enabled overhead at <= 5% and disabled at ~0%.
+bench-profile:
+	BENCH_SMOKE=1 cargo bench --bench profile_overhead
 
 doc:
 	cargo doc --no-deps

@@ -16,8 +16,10 @@
 //! ```
 
 use fusion_stitching::coordinator::batcher::BatchPolicy;
-use fusion_stitching::coordinator::metrics::LatencyRecorder;
-use fusion_stitching::coordinator::{PoolConfig, ServerConfig, ServingCoordinator, ServingPool};
+use fusion_stitching::coordinator::metrics::throughput_rps;
+use fusion_stitching::coordinator::{
+    PoolConfig, ServerConfig, ServingCoordinator, ServingPool, StreamingSummary,
+};
 use std::path::Path;
 use std::time::{Duration, Instant};
 
@@ -35,11 +37,11 @@ fn request(i: usize) -> Vec<f32> {
         .collect()
 }
 
-fn serve(artifact: &str) -> anyhow::Result<(Vec<Vec<f32>>, LatencyRecorder, f64)> {
+fn serve(artifact: &str) -> anyhow::Result<(Vec<Vec<f32>>, StreamingSummary, f64)> {
     let srv = ServingCoordinator::start(Path::new("artifacts"), config(artifact))?;
     let _ = srv.infer(request(0))?; // warmup: first execute touches cold buffers
 
-    let mut lat = LatencyRecorder::default();
+    let mut lat = StreamingSummary::default();
     let mut outputs = Vec::new();
     let t0 = Instant::now();
     let mut pending = Vec::new();
@@ -56,7 +58,7 @@ fn serve(artifact: &str) -> anyhow::Result<(Vec<Vec<f32>>, LatencyRecorder, f64)
         outputs.push(rx.recv()??);
         lat.record(t.elapsed());
     }
-    let rps = lat.throughput_rps(t0.elapsed());
+    let rps = throughput_rps(lat.count() as usize, t0.elapsed());
     srv.shutdown().ok();
     Ok((outputs, lat, rps))
 }
@@ -70,13 +72,14 @@ fn config(artifact: &str) -> ServerConfig {
         input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
         policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
         compile: None,
+        trace: None,
     }
 }
 
 /// Serve the same request stream through the sharded multi-worker pool:
 /// four client-side shape keys spread the traffic over the shards
 /// (sticky routing keeps each shard's batches shape-pure).
-fn serve_pooled(artifact: &str, workers: usize) -> anyhow::Result<(LatencyRecorder, f64)> {
+fn serve_pooled(artifact: &str, workers: usize) -> anyhow::Result<(StreamingSummary, f64)> {
     let pool = ServingPool::start(
         Path::new("artifacts"),
         config(artifact),
@@ -85,7 +88,7 @@ fn serve_pooled(artifact: &str, workers: usize) -> anyhow::Result<(LatencyRecord
     for key in 0..4u64 {
         pool.infer_keyed(key, request(0))?; // warmup per shard
     }
-    let mut lat = LatencyRecorder::default();
+    let mut lat = StreamingSummary::default();
     let t0 = Instant::now();
     let mut pending = Vec::new();
     for i in 0..REQUESTS {
@@ -102,7 +105,7 @@ fn serve_pooled(artifact: &str, workers: usize) -> anyhow::Result<(LatencyRecord
         rx.recv()??;
         lat.record(t.elapsed());
     }
-    let rps = lat.throughput_rps(t0.elapsed());
+    let rps = throughput_rps(lat.count() as usize, t0.elapsed());
     pool.shutdown().ok();
     Ok((lat, rps))
 }

@@ -14,7 +14,7 @@
 mod bench_util;
 
 use fusion_stitching::coordinator::batcher::BatchPolicy;
-use fusion_stitching::coordinator::metrics::LatencyRecorder;
+use fusion_stitching::coordinator::metrics::{throughput_rps, StreamingSummary};
 use fusion_stitching::coordinator::{ServerConfig, ServingCoordinator};
 use std::path::Path;
 use std::time::{Duration, Instant};
@@ -35,12 +35,13 @@ fn bench_variant(artifact: &str) -> Option<(f64, f64, f64, usize)> {
         input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
         policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
         compile: None,
+        trace: None,
     };
     let srv = ServingCoordinator::start(dir, cfg).ok()?;
     // warmup (first execution touches every buffer cold)
     let _ = srv.infer(vec![0.1; SEQ * MODEL]).ok()?;
 
-    let mut lat = LatencyRecorder::default();
+    let mut lat = StreamingSummary::default();
     let t0 = Instant::now();
     let mut pending = Vec::new();
     for i in 0..REQUESTS {
@@ -59,12 +60,8 @@ fn bench_variant(artifact: &str) -> Option<(f64, f64, f64, usize)> {
     }
     let wall = t0.elapsed();
     let stats = srv.shutdown().unwrap();
-    Some((
-        lat.percentile_us(50.0) / 1e3,
-        lat.percentile_us(95.0) / 1e3,
-        lat.throughput_rps(wall),
-        stats.batches,
-    ))
+    let ps = lat.percentiles_us(&[50.0, 95.0]);
+    Some((ps[0] / 1e3, ps[1] / 1e3, throughput_rps(lat.count() as usize, wall), stats.batches))
 }
 
 fn main() {

@@ -18,7 +18,7 @@
 //! `make bench-serving` and CI) shrinks the request volume.
 
 use fusion_stitching::coordinator::batcher::BatchPolicy;
-use fusion_stitching::coordinator::metrics::LatencyRecorder;
+use fusion_stitching::coordinator::metrics::{throughput_rps, StreamingSummary};
 use fusion_stitching::coordinator::server::CompileOptions;
 use fusion_stitching::coordinator::{
     FusionMode, PipelineConfig, PoolConfig, ServerConfig, ServingPool,
@@ -88,6 +88,7 @@ fn server_config() -> ServerConfig {
         input_dims: vec![BATCH as i64, IN_ELEMS as i64],
         policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(1) },
         compile,
+        trace: None,
     }
 }
 
@@ -151,7 +152,7 @@ fn run_one(dir: &std::path::Path, workers: usize, requests: usize) -> Measuremen
             .map(|&key| {
                 let pool = &pool;
                 scope.spawn(move || {
-                    let mut lat = LatencyRecorder::default();
+                    let mut lat = StreamingSummary::default();
                     let mut pending = Vec::with_capacity(WINDOW);
                     for i in 0..requests {
                         let input = vec![0.01 * (i % 17) as f32; IN_ELEMS];
@@ -173,7 +174,7 @@ fn run_one(dir: &std::path::Path, workers: usize, requests: usize) -> Measuremen
                 })
             })
             .collect();
-        let mut merged = LatencyRecorder::default();
+        let mut merged = StreamingSummary::default();
         for h in handles {
             merged.merge(&h.join().expect("client thread"));
         }
@@ -181,12 +182,13 @@ fn run_one(dir: &std::path::Path, workers: usize, requests: usize) -> Measuremen
     });
     let wall = t0.elapsed();
     let stats = pool.shutdown().expect("shutdown");
+    let ps = lat.percentiles_us(&[50.0, 95.0, 99.0]);
     Measurement {
         workers,
-        rps: lat.throughput_rps(wall),
-        p50_us: lat.percentile_us(50.0),
-        p95_us: lat.percentile_us(95.0),
-        p99_us: lat.percentile_us(99.0),
+        rps: throughput_rps(lat.count() as usize, wall),
+        p50_us: ps[0],
+        p95_us: ps[1],
+        p99_us: ps[2],
         batches: stats.aggregate.batches - warm.aggregate.batches,
         requests: stats.aggregate.requests - warm.aggregate.requests,
         cache_hits: stats.cache.map(|c| c.hits).unwrap_or(0)

@@ -189,6 +189,18 @@ impl PassManager {
             trace.record(pass.name(), wall_us, before, after);
         }
 
+        // Seed the kernel profile with every lowered kernel's group
+        // fingerprint, tier and modeled cost, so the obs layer's
+        // modeled-vs-measured join is complete before the first launch.
+        let profile = crate::obs::KernelProfileHandle::new();
+        if let Some(exe) = &st.executable {
+            for launch in &exe.launches {
+                if let crate::exec::Launch::Kernel(k) = launch {
+                    profile.seed(k.group_fp, k.stitch_tier(), k.modeled_us);
+                }
+            }
+        }
+
         let compiled = CompiledModule {
             name: module.name.clone(),
             mode,
@@ -202,6 +214,7 @@ impl PassManager {
             timing: st.timing.ok_or_else(|| anyhow!("pipeline ran without the simulate pass"))?,
             executable: st.executable,
             exec_error: st.exec_error,
+            profile,
         };
         Ok((compiled, trace))
     }

@@ -73,17 +73,29 @@ impl fmt::Display for PassTrace {
 /// stable p99 estimates while bounding a long-lived server's memory.
 pub const SUMMARY_RESERVOIR: usize = 512;
 
-/// Nearest-rank percentile (`p` in [0, 100]) over an unsorted sample
-/// set — the one implementation behind both [`LatencyRecorder`] and
-/// [`StreamingSummary`].
-fn percentile_nearest_rank(samples: &[f64], p: f64) -> f64 {
-    if samples.is_empty() {
+/// Nearest-rank percentile (`p` in [0, 100]) over an **already sorted**
+/// sample set. Callers sort once per snapshot and then read as many
+/// percentiles as they need at O(1) each; the previous implementation
+/// re-cloned and re-sorted the samples on every call, so printing
+/// p50/p95/p99 per worker paid three clone+sorts.
+fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
         return 0.0;
     }
-    let mut v = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * v.len() as f64).ceil().max(1.0) as usize;
-    v[rank.min(v.len()) - 1]
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil().max(1.0) as usize;
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+/// Requests (or any completed unit) per second over a wall-clock
+/// window. Free function so bench harnesses and the serving CLI can
+/// derive throughput from a plain completion count — the bounded
+/// [`StreamingSummary`] replaced the unbounded `LatencyRecorder` that
+/// used to carry this as a method.
+pub fn throughput_rps(completed: usize, wall: Duration) -> f64 {
+    if wall.is_zero() {
+        return 0.0;
+    }
+    completed as f64 / wall.as_secs_f64()
 }
 
 /// SplitMix64 finalizer: the one integer mixer behind both the
@@ -211,8 +223,22 @@ impl StreamingSummary {
     }
 
     /// Percentile in [0, 100], nearest-rank over the reservoir.
+    ///
+    /// One-shot convenience that sorts a copy of the reservoir; reading
+    /// several percentiles of the same snapshot should go through
+    /// [`Self::percentiles_us`], which sorts once for the whole batch.
     pub fn percentile_us(&self, p: f64) -> f64 {
-        percentile_nearest_rank(&self.reservoir, p)
+        self.percentiles_us(&[p])[0]
+    }
+
+    /// Nearest-rank percentiles for every `p` in `ps`, sorting the
+    /// reservoir once. This is the snapshot-friendly read path: the
+    /// stats printers and the Prometheus exporter ask for a handful of
+    /// quantiles per series and pay a single O(n log n) sort.
+    pub fn percentiles_us(&self, ps: &[f64]) -> Vec<f64> {
+        let mut sorted = self.reservoir.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ps.iter().map(|&p| percentile_of_sorted(&sorted, p)).collect()
     }
 
     /// Fold `other` into `self` (pool shutdown merges worker summaries).
@@ -255,95 +281,29 @@ impl StreamingSummary {
     }
 }
 
-/// Collects request latencies and derives the usual percentiles.
-#[derive(Debug, Default, Clone)]
-pub struct LatencyRecorder {
-    samples_us: Vec<f64>,
-}
-
-impl LatencyRecorder {
-    pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_secs_f64() * 1e6);
-    }
-
-    pub fn record_us(&mut self, us: f64) {
-        self.samples_us.push(us);
-    }
-
-    pub fn len(&self) -> usize {
-        self.samples_us.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.samples_us.is_empty()
-    }
-
-    pub fn mean_us(&self) -> f64 {
-        if self.samples_us.is_empty() {
-            return 0.0;
-        }
-        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
-    }
-
-    /// Percentile in [0, 100], nearest-rank.
-    pub fn percentile_us(&self, p: f64) -> f64 {
-        percentile_nearest_rank(&self.samples_us, p)
-    }
-
-    /// Requests per second given the wall-clock window of the run.
-    pub fn throughput_rps(&self, wall: Duration) -> f64 {
-        if wall.is_zero() {
-            return 0.0;
-        }
-        self.samples_us.len() as f64 / wall.as_secs_f64()
-    }
-
-    pub fn merge(&mut self, other: &LatencyRecorder) {
-        self.samples_us.extend_from_slice(&other.samples_us);
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn rec(vals: &[f64]) -> LatencyRecorder {
-        let mut r = LatencyRecorder::default();
-        for &v in vals {
-            r.record_us(v);
-        }
-        r
-    }
-
     #[test]
     fn mean_and_percentiles() {
-        let r = rec(&[1.0, 2.0, 3.0, 4.0, 100.0]);
-        assert!((r.mean_us() - 22.0).abs() < 1e-9);
-        assert_eq!(r.percentile_us(50.0), 3.0);
-        assert_eq!(r.percentile_us(99.0), 100.0);
-        assert_eq!(r.percentile_us(100.0), 100.0);
+        let mut s = StreamingSummary::default();
+        for v in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            s.record_us(v);
+        }
+        assert!((s.mean_us() - 22.0).abs() < 1e-9);
+        assert_eq!(s.percentile_us(50.0), 3.0);
+        assert_eq!(s.percentile_us(99.0), 100.0);
+        assert_eq!(s.percentile_us(100.0), 100.0);
+        // the batched form sorts once and agrees with one-shot reads
+        assert_eq!(s.percentiles_us(&[50.0, 99.0, 100.0]), vec![3.0, 100.0, 100.0]);
     }
 
     #[test]
-    fn empty_is_safe() {
-        let r = LatencyRecorder::default();
-        assert_eq!(r.mean_us(), 0.0);
-        assert_eq!(r.percentile_us(50.0), 0.0);
-        assert!(r.is_empty());
-    }
-
-    #[test]
-    fn throughput() {
-        let r = rec(&[1.0; 10]);
-        assert!((r.throughput_rps(Duration::from_secs(2)) - 5.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn merge_combines() {
-        let mut a = rec(&[1.0, 2.0]);
-        let b = rec(&[3.0]);
-        a.merge(&b);
-        assert_eq!(a.len(), 3);
+    fn throughput_is_a_free_function() {
+        assert!((throughput_rps(10, Duration::from_secs(2)) - 5.0).abs() < 1e-9);
+        assert_eq!(throughput_rps(10, Duration::ZERO), 0.0);
+        assert_eq!(throughput_rps(0, Duration::from_secs(1)), 0.0);
     }
 
     #[test]

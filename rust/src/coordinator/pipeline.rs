@@ -65,6 +65,12 @@ pub struct CompiledModule {
     pub executable: Option<Arc<StitchedExecutable>>,
     /// Why lowering was skipped, when it was.
     pub exec_error: Option<String>,
+    /// Measured per-fused-group launch profile, seeded at compile time
+    /// with every lowered kernel's fingerprint + modeled cost and fed
+    /// by the VM on each launch (shared: every executor of this module
+    /// writes the same profile, so serving stats and the
+    /// modeled-vs-measured divergence report see all traffic).
+    pub profile: crate::obs::KernelProfileHandle,
 }
 
 impl CompiledModule {

@@ -86,6 +86,52 @@ impl ServingStats {
     pub fn workers(&self) -> usize {
         self.per_worker.len()
     }
+
+    /// Serialize with the shared JSON writer ([`crate::obs::Json`]):
+    /// aggregate + per-worker [`WorkerStats`] plus the shared cache's
+    /// counters, in one stable form for exporters, benches and `serve`.
+    pub fn write_json(&self, j: &mut crate::obs::Json) {
+        j.begin_obj();
+        j.field_uint("workers", self.per_worker.len() as u64);
+        j.key("aggregate");
+        self.aggregate.write_json(j);
+        j.key("per_worker").begin_arr();
+        for w in &self.per_worker {
+            w.write_json(j);
+        }
+        j.end_arr();
+        if let Some(cache) = &self.cache {
+            j.key("cache").begin_obj();
+            j.field_uint("hits", cache.hits);
+            j.field_uint("misses", cache.misses);
+            j.field_uint("evictions", cache.evictions);
+            j.field_uint("insertions", cache.insertions);
+            j.end_obj();
+        }
+        if let Some(cold) = self.cold_compiles {
+            j.field_uint("cold_compiles", cold);
+        }
+        j.end_obj();
+    }
+
+    /// [`ServingStats::write_json`] as a standalone document.
+    pub fn to_json(&self) -> String {
+        let mut j = crate::obs::Json::new();
+        self.write_json(&mut j);
+        j.finish()
+    }
+
+    /// Lift one worker's stats into a pool-shaped view (the single
+    /// worker [`super::server::ServingCoordinator`] reuses the pool's
+    /// exporters this way).
+    pub fn from_worker(stats: WorkerStats) -> ServingStats {
+        ServingStats {
+            per_worker: vec![stats.clone()],
+            aggregate: stats,
+            cache: None,
+            cold_compiles: None,
+        }
+    }
 }
 
 /// Handle to the sharded serving engine. See the module docs.
@@ -175,6 +221,7 @@ impl ServingPool {
                     wbackend.as_ref(),
                     Some(wsnapshot.as_ref()),
                     vm_threads,
+                    shard as u32,
                 )
             }));
             txs.push(tx);
@@ -330,6 +377,7 @@ ENTRY main {
             input_dims: vec![4, 3],
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
             compile: None,
+            trace: None,
         }
     }
 

@@ -72,6 +72,10 @@ pub struct ServerConfig {
     /// cache for this module. `None` serves the artifact without
     /// touching the compiler.
     pub compile: Option<CompileOptions>,
+    /// Flight recorder for this loop: when set, every worker installs
+    /// the sink and records queue/batch/compile/launch/reply spans
+    /// (see [`crate::obs`]). `None` serves untraced at zero cost.
+    pub trace: Option<Arc<crate::obs::TraceSink>>,
 }
 
 impl ServerConfig {
@@ -156,6 +160,14 @@ pub struct WorkerStats {
     /// planned vs. the boxed VM's per-value footprint), set once the
     /// stitched backend resolves.
     pub arena: Option<ArenaStats>,
+    /// Request queue wait (enqueue → batch drain), per request,
+    /// microseconds.
+    pub queue_us: StreamingSummary,
+    /// The served module's per-fused-group kernel profile, shared with
+    /// the compiled artifact (set once the first compile resolves).
+    /// Workers serving the same module share one profile, so `merge`
+    /// keeps the first handle rather than double-counting.
+    pub profile: Option<crate::obs::KernelProfileHandle>,
 }
 
 impl WorkerStats {
@@ -186,6 +198,67 @@ impl WorkerStats {
         if self.arena.is_none() {
             self.arena = other.arena;
         }
+        self.queue_us.merge(&other.queue_us);
+        if self.profile.is_none() {
+            self.profile = other.profile.clone();
+        }
+    }
+
+    /// Serialize with the shared JSON writer ([`crate::obs::Json`]) —
+    /// the one stable stats form the Prometheus exporter, the benches
+    /// and `serve` printing all read.
+    pub fn write_json(&self, j: &mut crate::obs::Json) {
+        j.begin_obj();
+        j.field_uint("batches", self.batches as u64);
+        j.field_uint("requests", self.requests as u64);
+        j.field_uint("rejected", self.rejected as u64);
+        j.field_uint("cache_hits", self.cache_hits as u64);
+        j.field_uint("cache_misses", self.cache_misses as u64);
+        j.field_uint("compile_failures", self.compile_failures as u64);
+        j.field_uint("stitched_batches", self.stitched_batches as u64);
+        j.field_uint("arena_reuses", self.arena_reuses);
+        if let Some(arena) = &self.arena {
+            j.key("arena").begin_obj();
+            j.field_uint("arena_bytes", arena.arena_bytes as u64);
+            j.field_uint("value_bytes", arena.value_bytes as u64);
+            j.field_num("reuse_ratio", arena.reuse_ratio());
+            j.end_obj();
+        }
+        j.key("launches").begin_obj();
+        j.field_uint("generated", self.launches.generated);
+        j.field_uint("library", self.launches.library);
+        j.field_uint("barriers", self.launches.barriers);
+        j.field_uint("fences", self.launches.fences);
+        j.field_uint("tier_plain", self.launches.tier_plain);
+        j.field_uint("tier_shm", self.launches.tier_shm);
+        j.field_uint("tier_global", self.launches.tier_global);
+        j.end_obj();
+        for (name, s) in [
+            ("exec_us", &self.exec_us),
+            ("compile_us", &self.compile_us),
+            ("queue_us", &self.queue_us),
+        ] {
+            let qs = s.percentiles_us(&[50.0, 95.0, 99.0]);
+            j.key(name).begin_obj();
+            j.field_uint("count", s.count());
+            j.field_num("mean", s.mean_us());
+            j.field_num("p50", qs[0]);
+            j.field_num("p95", qs[1]);
+            j.field_num("p99", qs[2]);
+            j.end_obj();
+        }
+        if let Some(profile) = &self.profile {
+            j.key("profile");
+            profile.snapshot().write_json(j);
+        }
+        j.end_obj();
+    }
+
+    /// [`WorkerStats::write_json`] as a standalone document.
+    pub fn to_json(&self) -> String {
+        let mut j = crate::obs::Json::new();
+        self.write_json(&mut j);
+        j.finish()
     }
 }
 
@@ -211,6 +284,17 @@ impl CompileBackend {
                 svc.lock().expect("compile service poisoned").compile(module, mode)
             }
             CompileBackend::Shared(svc) => svc.compile(module, mode),
+        }
+    }
+
+    /// The per-pass trace of the most recent cold compile (None until
+    /// one happened) — replayed as child spans of the compile span.
+    fn last_trace(&self) -> Option<super::metrics::PassTrace> {
+        match self {
+            CompileBackend::Legacy(svc) => {
+                svc.lock().expect("compile service poisoned").last_trace().cloned()
+            }
+            CompileBackend::Shared(svc) => svc.last_trace(),
         }
     }
 }
@@ -260,6 +344,9 @@ fn validate_stitched(
 /// `vm_threads` caps the stitched VM's block-parallel fan-out for this
 /// worker (`0` = process default) — a pool divides cores between its
 /// shards so shards × VM threads never oversubscribes the machine.
+///
+/// `shard` is this worker's id in the flight recorder's trace (one
+/// ring/track per worker when [`ServerConfig::trace`] is set).
 pub(crate) fn run_worker(
     model: &LoadedModel,
     rx: &Receiver<Request>,
@@ -267,7 +354,12 @@ pub(crate) fn run_worker(
     service: Option<&CompileBackend>,
     live: Option<&Mutex<WorkerStats>>,
     vm_threads: usize,
+    shard: u32,
 ) -> WorkerStats {
+    // Install the flight recorder for this worker thread: every layer
+    // below (compile service, stitched VM, interpreter) records spans
+    // through the thread-local context for the rest of the loop.
+    let _obs = cfg.trace.as_ref().map(|sink| crate::obs::install(sink, shard, None));
     let mut stats = WorkerStats::default();
     let batch_elems = cfg.batch * cfg.in_elems_per_request;
     let out_elems = cfg.batch * cfg.out_elems_per_request;
@@ -285,6 +377,19 @@ pub(crate) fn run_worker(
     let mut input: Vec<f32> = Vec::new();
     let mut stitched_out: Vec<f32> = Vec::new();
     while let Some(batch) = next_batch_keyed(rx, &cfg.policy, &mut carry) {
+        // Queue-wait accounting: every request waited from its enqueue
+        // to this drain.
+        let drained = Instant::now();
+        for req in &batch {
+            stats.queue_us.record(drained.saturating_duration_since(req.enqueued));
+            crate::obs::record_between(
+                crate::obs::SpanCat::Queue,
+                "queue-wait",
+                0,
+                req.enqueued,
+                drained,
+            );
+        }
         // Compile-once serving: make sure the kernel plans for this
         // module are resident before touching the batch.
         if let (Some(opts), Some(svc)) = (&cfg.compile, service) {
@@ -297,9 +402,28 @@ pub(crate) fn run_worker(
                             stats.cache_hits += 1;
                         } else {
                             stats.cache_misses += 1;
+                            // Replay the cold compile's per-pass trace
+                            // as child spans inside the compile window.
+                            if crate::obs::active() {
+                                if let Some(trace) = svc.last_trace() {
+                                    crate::obs::record_passes(&trace.records, t0);
+                                }
+                            }
                         }
-                        if opts.use_stitched_backend && stitched.is_none() && !stitched_rejected
-                        {
+                        crate::obs::record_between(
+                            crate::obs::SpanCat::Compile,
+                            if hit { "cache-hit" } else { "cold-compile" },
+                            0,
+                            t0,
+                            Instant::now(),
+                        );
+                        // Adopt the compiled module's kernel profile:
+                        // launch spans below feed measured times into it.
+                        if stats.profile.is_none() {
+                            stats.profile = Some(plan.profile.clone());
+                            crate::obs::set_profile(plan.profile.clone());
+                        }
+                        if opts.use_stitched_backend && stitched.is_none() && !stitched_rejected {
                             match validate_stitched(&plan, batch_elems, out_elems) {
                                 Ok(exe) => {
                                     stats.arena = Some(exe.mem.stats());
@@ -351,12 +475,14 @@ pub(crate) fn run_worker(
         for chunk in accepted.chunks(cfg.batch) {
             // Assemble the padded chunk into the reused buffer (clear +
             // resize re-zeroes without reallocating).
+            let asm = crate::obs::begin();
             input.clear();
             input.resize(batch_elems, 0f32);
             for (i, req) in chunk.iter().enumerate() {
                 let start = i * cfg.in_elems_per_request;
                 input[start..start + req.input.len()].copy_from_slice(&req.input);
             }
+            crate::obs::record(crate::obs::SpanCat::Batch, "assemble", 0, asm);
             let t0 = Instant::now();
             let mut artifact_out: Vec<Vec<f32>> = Vec::new();
             let result: Result<&[f32]> = match &stitched {
@@ -393,6 +519,7 @@ pub(crate) fn run_worker(
             if let Some(live) = live {
                 *live.lock().expect("live stats poisoned") = stats.clone();
             }
+            let reply = crate::obs::begin();
             match result {
                 Ok(out) => {
                     for (i, req) in chunk.iter().enumerate() {
@@ -411,6 +538,7 @@ pub(crate) fn run_worker(
                     }
                 }
             }
+            crate::obs::record(crate::obs::SpanCat::Reply, "reply", 0, reply);
         }
     }
     stats
@@ -470,7 +598,7 @@ impl ServingCoordinator {
             };
             let model = engine.get(&wcfg.artifact).expect("loaded above");
             // Single worker: the VM may use the whole machine.
-            run_worker(model, &rx, &wcfg, backend.as_ref(), None, 0)
+            run_worker(model, &rx, &wcfg, backend.as_ref(), None, 0, 0)
         });
         // Fail fast if the artifact is missing/bad.
         ready_rx
@@ -559,6 +687,7 @@ ENTRY main {
             input_dims: vec![4, 3],
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
             compile: None,
+            trace: None,
         }
     }
 

@@ -721,6 +721,14 @@ pub struct KernelProgram {
     /// tier): `(op, elems)`. Packed into the value arena with the same
     /// liveness discipline as outputs; live only within this launch.
     pub spills: Vec<(InstrId, usize)>,
+    /// Structural fingerprint of the fused group this kernel implements
+    /// ([`crate::fusion::group_fingerprint`]) — the identity the
+    /// explore pass memoizes modeled costs under, carried here so the
+    /// obs layer's measured launch times join 1:1 with the cost model.
+    pub group_fp: u64,
+    /// The explore/tuning pass's modeled execution time for this
+    /// kernel, µs (0 when the group was never priced).
+    pub modeled_us: f64,
 }
 
 /// Which stitching tier a kernel executes under — attributed per

@@ -396,6 +396,8 @@ fn lower_kernel(
         steps,
         outputs,
         spills,
+        group_fp: crate::fusion::group_fingerprint(comp, members),
+        modeled_us: kplan.est_exec_us,
     })
 }
 

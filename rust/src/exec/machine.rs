@@ -198,12 +198,23 @@ impl StitchedExecutable {
         for launch in &self.launches {
             match launch {
                 Launch::Kernel(k) => {
+                    let span = crate::obs::begin();
+                    let before = ledger;
                     run_kernel_fast(k, &self.mem, data, scratch, threads, &mut ledger)?;
                     ledger.generated += 1;
+                    crate::obs::launch(
+                        k.group_fp,
+                        k.stitch_tier(),
+                        k.modeled_us,
+                        &ledger.since(&before),
+                        span,
+                    );
                 }
                 Launch::Library(l) => {
+                    let span = crate::obs::begin();
                     run_library_fast(l, data)?;
                     ledger.library += 1;
+                    crate::obs::record(crate::obs::SpanCat::Launch, "library", 0, span);
                 }
             }
         }
@@ -248,12 +259,23 @@ impl StitchedExecutable {
         for launch in &self.launches {
             match launch {
                 Launch::Kernel(k) => {
+                    let span = crate::obs::begin();
+                    let before = ledger;
                     run_kernel(k, &mut values, &mut ledger)?;
                     ledger.generated += 1;
+                    crate::obs::launch(
+                        k.group_fp,
+                        k.stitch_tier(),
+                        k.modeled_us,
+                        &ledger.since(&before),
+                        span,
+                    );
                 }
                 Launch::Library(l) => {
+                    let span = crate::obs::begin();
                     run_library(l, &mut values)?;
                     ledger.library += 1;
+                    crate::obs::record(crate::obs::SpanCat::Launch, "library", 0, span);
                 }
             }
         }

@@ -40,6 +40,10 @@
 //!   with per-pass instrumentation), the fingerprint-keyed compilation
 //!   cache for compile-once serving, and the NMT online serving loop
 //!   (shape-keyed dynamic batching over the runtime).
+//! - [`obs`] — the observability layer: a bounded flight recorder
+//!   tracing the request life cycle (queue → batch → compile → launch →
+//!   reply), a per-fused-group kernel profiler joined against the
+//!   modeled costs, and Chrome-trace / Prometheus exporters.
 //!
 //! Architecture, the paper-section ↔ module map and every cost-model
 //! substitution are documented in `DESIGN.md` at the repository root.
@@ -53,6 +57,7 @@ pub mod fusion;
 pub mod gpusim;
 pub mod hlo;
 pub mod models;
+pub mod obs;
 pub mod runtime;
 pub mod schedule;
 pub mod testutil;

@@ -4,8 +4,17 @@
 //! fusion-stitching report [--perf-lib <path>] [--no-cost-fusion]
 //! fusion-stitching compile <model|file.hlo> [--mode baseline|stitching] [--ir] [--no-cost-fusion]
 //! fusion-stitching corpus [--models N]               # Fig. 1 percentile table
-//! fusion-stitching serve [--requests N]              # NMT online serving demo
+//! fusion-stitching serve [--requests N] [--demo] [--trace-out t.json] [--prom-out m.prom]
+//! fusion-stitching obs [--model NAME|--all] [--runs N] [--trace-out t.json] [--prom-out m.prom]
 //! ```
+//!
+//! `serve --trace-out` arms the flight recorder
+//! ([`fusion_stitching::obs`]) for the whole serving run and writes a
+//! Chrome trace-event JSON (load it in Perfetto / `chrome://tracing`);
+//! `--prom-out` writes a Prometheus text exposition of every serving
+//! counter. `obs` profiles the stitched VM offline: it compiles
+//! benchmark models, replays them under the recorder, and prints the
+//! modeled-vs-measured divergence per fused group.
 //!
 //! `--no-cost-fusion` disables the cost-guided fusion-exploration pass
 //! (merge/split refinement of the greedy plan), reverting to pure
@@ -30,13 +39,18 @@ fn main() {
         Some("compile") => cmd_compile(&args[1..]),
         Some("corpus") => cmd_corpus(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("obs") => cmd_obs(&args[1..]),
         _ => {
             eprintln!(
-                "usage: fusion-stitching <report|compile|corpus|serve> [options]\n\
+                "usage: fusion-stitching <report|compile|corpus|serve|obs> [options]\n\
                  \x20 report   — reproduce Figs 6/7/8 + Table 3 over the Table 2 benchmarks\n\
                  \x20 compile  — run one model/file through the pipeline\n\
                  \x20 corpus   — regenerate Fig. 1's footprint distribution\n\
-                 \x20 serve    — NMT online-serving demo over the PJRT runtime"
+                 \x20 serve    — NMT online-serving demo over the PJRT runtime\n\
+                 \x20            [--demo] serves a built-in module (no `make artifacts` needed)\n\
+                 \x20            [--trace-out t.json] [--prom-out m.prom] arm the flight recorder\n\
+                 \x20 obs      — offline kernel profiler: replay benchmark models under the\n\
+                 \x20            flight recorder, report modeled-vs-measured divergence"
             );
             2
         }
@@ -263,8 +277,9 @@ fn cmd_corpus(args: &[String]) -> i32 {
 
 fn cmd_serve(args: &[String]) -> i32 {
     use fusion_stitching::coordinator::batcher::BatchPolicy;
-    use fusion_stitching::coordinator::metrics::LatencyRecorder;
+    use fusion_stitching::coordinator::metrics::{throughput_rps, StreamingSummary};
     use fusion_stitching::coordinator::server::CompileOptions;
+    use fusion_stitching::obs::{TraceConfig, TraceSink};
 
     let requests: usize =
         flag_value(args, "--requests").and_then(|v| v.parse().ok()).unwrap_or(64);
@@ -273,33 +288,80 @@ fn cmd_serve(args: &[String]) -> i32 {
     // --workers N routes through the sharded ServingPool (N=0: one per
     // available core); absent, the single-worker coordinator serves.
     let workers: Option<usize> = flag_value(args, "--workers").and_then(|v| v.parse().ok());
+    // Arm the flight recorder only when an export was requested: the
+    // per-launch record path is cheap but not free.
+    let trace_out = flag_value(args, "--trace-out").map(str::to_string);
+    let prom_out = flag_value(args, "--prom-out").map(str::to_string);
+    let sink = (trace_out.is_some() || prom_out.is_some())
+        .then(|| TraceSink::new(TraceConfig::default()));
 
-    // Compile-once serving: every batch routes through the compilation
-    // cache for the NMT module; the first pays fusion+tuning, the rest hit.
-    let compile = models::by_name("NMT").map(|(meta, module)| {
-        let mut pipeline = pipeline_config(args);
-        pipeline.deep.fuse_batch_dot = meta.fuse_batch_dot;
-        CompileOptions {
-            module,
-            mode: FusionMode::FusionStitching,
-            pipeline,
-            use_stitched_backend: false,
+    // --demo: self-contained serving that needs no `make artifacts` —
+    // writes a tiny interpreter artifact and serves a stitched
+    // tanh(exp(x)) module on top, so a trace export exercises every
+    // span category (including tier-tagged VM launches). CI's
+    // Chrome-trace smoke validation runs exactly this.
+    let cfg = if args.iter().any(|a| a == "--demo") {
+        use fusion_stitching::hlo::{GraphBuilder, Module, Shape};
+        const DEMO_HLO: &str = "HloModule demo, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}\n\n\
+             ENTRY main {\n\
+             \x20 p0 = f32[4,3]{1,0} parameter(0)\n\
+             \x20 sum = f32[4,3]{1,0} add(p0, p0)\n\
+             \x20 ROOT t = (f32[4,3]{1,0}) tuple(sum)\n\
+             }\n";
+        if let Err(e) = std::fs::create_dir_all(&dir)
+            .and_then(|()| std::fs::write(dir.join("demo.hlo.txt"), DEMO_HLO))
+        {
+            eprintln!("writing demo artifact: {e}");
+            return 1;
         }
-    });
-
-    // Shapes baked by python/compile/aot.py for the NMT attention block.
-    let (batch, seq, model_d, out_d) = (8usize, 64usize, 512usize, 64usize);
-    let cfg = ServerConfig {
-        artifact,
-        batch,
-        in_elems_per_request: seq * model_d,
-        out_elems_per_request: seq * out_d,
-        input_dims: vec![(batch * seq) as i64, model_d as i64],
-        policy: BatchPolicy::default(),
-        compile,
+        let mut b = GraphBuilder::new("entry");
+        let x = b.param("x", Shape::f32(&[4, 3]));
+        let e = b.exp(x);
+        let t = b.tanh(e);
+        ServerConfig {
+            artifact: "demo".into(),
+            batch: 4,
+            in_elems_per_request: 3,
+            out_elems_per_request: 3,
+            input_dims: vec![4, 3],
+            policy: BatchPolicy::default(),
+            compile: Some(CompileOptions {
+                module: Module::new("demo", b.finish(t)),
+                mode: FusionMode::FusionStitching,
+                pipeline: pipeline_config(args),
+                use_stitched_backend: true,
+            }),
+            trace: sink.clone(),
+        }
+    } else {
+        // Compile-once serving: every batch routes through the
+        // compilation cache for the NMT module; the first pays
+        // fusion+tuning, the rest hit. Shapes baked by
+        // python/compile/aot.py for the NMT attention block.
+        let compile = models::by_name("NMT").map(|(meta, module)| {
+            let mut pipeline = pipeline_config(args);
+            pipeline.deep.fuse_batch_dot = meta.fuse_batch_dot;
+            CompileOptions {
+                module,
+                mode: FusionMode::FusionStitching,
+                pipeline,
+                use_stitched_backend: false,
+            }
+        });
+        let (batch, seq, model_d, out_d) = (8usize, 64usize, 512usize, 64usize);
+        ServerConfig {
+            artifact,
+            batch,
+            in_elems_per_request: seq * model_d,
+            out_elems_per_request: seq * out_d,
+            input_dims: vec![(batch * seq) as i64, model_d as i64],
+            policy: BatchPolicy::default(),
+            compile,
+            trace: sink.clone(),
+        }
     };
     if let Some(n) = workers {
-        return serve_pool(&dir, cfg, n, requests);
+        return serve_pool(&dir, cfg, n, requests, sink, trace_out, prom_out);
     }
     let srv = match ServingCoordinator::start(&dir, cfg.clone()) {
         Ok(s) => s,
@@ -308,7 +370,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             return 1;
         }
     };
-    let mut lat = LatencyRecorder::default();
+    let mut lat = StreamingSummary::default();
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..requests {
@@ -327,13 +389,14 @@ fn cmd_serve(args: &[String]) -> i32 {
     }
     let wall = t0.elapsed();
     let stats = srv.shutdown().unwrap();
+    let ps = lat.percentiles_us(&[50.0, 95.0]);
     println!(
         "served {} requests in {} batches: p50 {:.2} ms, p95 {:.2} ms, throughput {:.0} req/s",
         stats.requests,
         stats.batches,
-        lat.percentile_us(50.0) / 1e3,
-        lat.percentile_us(95.0) / 1e3,
-        lat.throughput_rps(wall),
+        ps[0] / 1e3,
+        ps[1] / 1e3,
+        throughput_rps(lat.count() as usize, wall),
     );
     if stats.launches.total_launches() > 0 {
         println!(
@@ -356,6 +419,8 @@ fn cmd_serve(args: &[String]) -> i32 {
             stats.compile_us.warm_mean_us(),
         );
     }
+    let agg = fusion_stitching::coordinator::ServingStats::from_worker(stats);
+    write_observability(sink.as_ref(), trace_out.as_deref(), prom_out.as_deref(), &agg);
     0
 }
 
@@ -366,23 +431,23 @@ fn serve_pool(
     cfg: fusion_stitching::coordinator::ServerConfig,
     workers: usize,
     requests: usize,
+    sink: Option<std::sync::Arc<fusion_stitching::obs::TraceSink>>,
+    trace_out: Option<String>,
+    prom_out: Option<String>,
 ) -> i32 {
-    use fusion_stitching::coordinator::metrics::LatencyRecorder;
+    use fusion_stitching::coordinator::metrics::{throughput_rps, StreamingSummary};
     use fusion_stitching::coordinator::{PoolConfig, ServingPool};
 
     let (in_elems, batch) = (cfg.in_elems_per_request, cfg.batch);
-    let pool = match ServingPool::start(
-        dir,
-        cfg,
-        PoolConfig { workers, ..PoolConfig::default() },
-    ) {
+    let pool_cfg = PoolConfig { workers, ..PoolConfig::default() };
+    let pool = match ServingPool::start(dir, cfg, pool_cfg) {
         Ok(p) => p,
         Err(e) => {
             eprintln!("starting pool (run `make artifacts` first?): {e:#}");
             return 1;
         }
     };
-    let mut lat = LatencyRecorder::default();
+    let mut lat = StreamingSummary::default();
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..requests {
@@ -403,14 +468,15 @@ fn serve_pool(
     }
     let wall = t0.elapsed();
     let stats = pool.shutdown().unwrap();
+    let ps = lat.percentiles_us(&[50.0, 95.0]);
     println!(
         "pool({} workers) served {} requests in {} batches: p50 {:.2} ms, p95 {:.2} ms, {:.0} req/s",
         stats.workers(),
         stats.aggregate.requests,
         stats.aggregate.batches,
-        lat.percentile_us(50.0) / 1e3,
-        lat.percentile_us(95.0) / 1e3,
-        lat.throughput_rps(wall),
+        ps[0] / 1e3,
+        ps[1] / 1e3,
+        throughput_rps(lat.count() as usize, wall),
     );
     if let (Some(cache), Some(cold)) = (&stats.cache, stats.cold_compiles) {
         println!(
@@ -418,5 +484,206 @@ fn serve_pool(
             cache.hits, cache.misses, cold
         );
     }
+    write_observability(sink.as_ref(), trace_out.as_deref(), prom_out.as_deref(), &stats);
+    0
+}
+
+/// Deterministic pseudo-random input buffers for a module's parameters
+/// (same scheme the VM benches use — values in [-0.5, 0.5)).
+fn inputs_for(module: &fusion_stitching::hlo::Module, seed: u64) -> Vec<Vec<f32>> {
+    module
+        .entry
+        .parameters()
+        .into_iter()
+        .enumerate()
+        .map(|(k, id)| {
+            let elems = module.entry.get(id).shape.num_elements() as usize;
+            (0..elems)
+                .map(|i| {
+                    let h = (i as u64)
+                        .wrapping_mul(2654435761)
+                        .wrapping_add((seed + k as u64).wrapping_mul(97));
+                    ((h % 1000) as f32) / 1000.0 - 0.5
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Shared exporter tail for `serve` / `serve --workers` / `obs`: write
+/// the Chrome trace and the Prometheus exposition where asked, check
+/// the launch spans against the ledger, and print the per-group
+/// modeled-vs-measured divergence.
+fn write_observability(
+    sink: Option<&std::sync::Arc<fusion_stitching::obs::TraceSink>>,
+    trace_out: Option<&str>,
+    prom_out: Option<&str>,
+    stats: &fusion_stitching::coordinator::ServingStats,
+) {
+    use fusion_stitching::obs;
+    let Some(sink) = sink else { return };
+    let snap = sink.snapshot();
+    if let Some(path) = trace_out {
+        match std::fs::write(path, obs::chrome_trace(&snap)) {
+            Ok(()) => println!(
+                "trace: {} spans ({} dropped) -> {path} (open in Perfetto / chrome://tracing)",
+                snap.events.len(),
+                snap.dropped
+            ),
+            Err(e) => eprintln!("writing {path}: {e}"),
+        }
+    }
+    if let Some(path) = prom_out {
+        match std::fs::write(path, obs::prometheus(stats, Some(sink.dropped_events()))) {
+            Ok(()) => println!("prometheus exposition -> {path}"),
+            Err(e) => eprintln!("writing {path}: {e}"),
+        }
+    }
+    // Every generated launch the workers counted must surface as exactly
+    // one tier-labelled span (short only when the ring dropped events).
+    let (plain, shm, global) = snap.launch_tier_counts();
+    let ledger = &stats.aggregate.launches;
+    if ledger.generated > 0 {
+        println!(
+            "launch spans: plain {plain} + shm {shm} + global {global} = {} vs ledger generated {} ({} dropped)",
+            plain + shm + global,
+            ledger.generated,
+            snap.dropped
+        );
+    }
+    print_divergence(stats);
+}
+
+/// Per-fused-group modeled-vs-measured table from the aggregate profile
+/// (workers serving one module share a single profile handle, so the
+/// aggregate covers all traffic without double counting).
+fn print_divergence(stats: &fusion_stitching::coordinator::ServingStats) {
+    use fusion_stitching::obs::tier_label;
+    let Some(profile) = &stats.aggregate.profile else { return };
+    let snap = profile.snapshot();
+    if snap.is_empty() {
+        return;
+    }
+    println!("== modeled vs measured, per fused group ==");
+    println!(
+        "{:<16}   {:>6} {:>9} {:>12} {:>12} {:>7}",
+        "fingerprint", "tier", "launches", "modeled_us", "measured_us", "ratio"
+    );
+    for row in snap.divergence() {
+        println!(
+            "{:016x}   {:>6} {:>9} {:>12.3} {:>12.3} {:>7.2}",
+            row.fp,
+            tier_label(row.tier),
+            row.launches,
+            row.modeled_us,
+            row.measured_mean_us,
+            row.ratio
+        );
+    }
+}
+
+/// `obs` — the offline kernel profiler: compile benchmark models to the
+/// stitched VM, replay them under the flight recorder, and report the
+/// modeled-vs-measured divergence per fused group (plus the optional
+/// Chrome-trace / Prometheus exports, one trace lane per model).
+fn cmd_obs(args: &[String]) -> i32 {
+    use fusion_stitching::coordinator::pipeline::compile_module;
+    use fusion_stitching::coordinator::{ServingStats, WorkerStats};
+    use fusion_stitching::exec::ExecArena;
+    use fusion_stitching::obs::{self, TraceConfig, TraceSink};
+
+    let runs: usize = flag_value(args, "--runs").and_then(|v| v.parse().ok()).unwrap_or(32);
+    let model_filter = flag_value(args, "--model");
+    let trace_out = flag_value(args, "--trace-out");
+    let prom_out = flag_value(args, "--prom-out");
+
+    let sink = TraceSink::new(TraceConfig::default());
+    let mut lib = perf_library(args);
+    let base_cfg = pipeline_config(args);
+    // One synthetic worker's counters feed the Prometheus exposition.
+    let mut stats = WorkerStats::default();
+    let mut profiled = 0usize;
+
+    println!("== kernel profiler: {runs} replay(s) per model, stitched VM ==");
+    for (lane, (meta, module)) in models::all_benchmarks().into_iter().enumerate() {
+        if let Some(want) = model_filter {
+            if !meta.name.eq_ignore_ascii_case(want) {
+                continue;
+            }
+        }
+        let mut cfg = base_cfg.clone();
+        cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        let compiled = match compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{}: compile failed: {e:#}", meta.name);
+                return 1;
+            }
+        };
+        let Some(exe) = compiled.executable.clone() else {
+            println!("{}: no stitched executable ({:?}), skipped", meta.name, compiled.exec_error);
+            continue;
+        };
+        let _g = obs::install(&sink, lane as u32, Some(compiled.profile.clone()));
+        let inputs = inputs_for(&module, 42);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut arena = ExecArena::default();
+        let mut out = Vec::new();
+        let mut ledger = fusion_stitching::exec::LaunchLedger::default();
+        for _ in 0..runs {
+            match exe.run_into(&refs, &mut arena, &mut out) {
+                Ok(run) => ledger.merge(&run),
+                Err(e) => {
+                    eprintln!("{}: execution failed: {e:#}", meta.name);
+                    return 1;
+                }
+            }
+        }
+        stats.requests += runs;
+        stats.batches += runs;
+        stats.stitched_batches += runs;
+        stats.launches.merge(&ledger);
+        stats.arena_reuses += arena.reuses();
+        if stats.arena.is_none() {
+            stats.arena = compiled.arena_stats();
+        }
+        if stats.profile.is_none() {
+            stats.profile = Some(compiled.profile.clone());
+        } else if let Some(p) = &stats.profile {
+            // fold later models into the first handle so the aggregate
+            // divergence table covers every replayed group
+            let snap = compiled.profile.snapshot();
+            p.merge_from(&snap);
+        }
+        profiled += 1;
+
+        let snap = compiled.profile.snapshot();
+        println!(
+            "{}: {} groups, {} generated launches (plain {} / shm {} / global {})",
+            meta.name,
+            snap.len(),
+            ledger.generated,
+            ledger.tier_plain,
+            ledger.tier_shm,
+            ledger.tier_global
+        );
+        for row in snap.divergence() {
+            println!(
+                "  {:016x} {:>6} x{:<5} modeled {:>9.3} us, measured {:>9.3} us, ratio {:.2}",
+                row.fp,
+                fusion_stitching::obs::tier_label(row.tier),
+                row.launches,
+                row.modeled_us,
+                row.measured_mean_us,
+                row.ratio
+            );
+        }
+    }
+    if profiled == 0 {
+        eprintln!("no model profiled (unknown --model name?)");
+        return 2;
+    }
+    let agg = ServingStats::from_worker(stats);
+    write_observability(Some(&sink), trace_out, prom_out, &agg);
     0
 }

@@ -1,0 +1,85 @@
+//! Chrome trace-event JSON exporter: renders a [`TraceSnapshot`] into
+//! the `chrome://tracing` / Perfetto "JSON Object Format" — an object
+//! with a `traceEvents` array of complete ("ph":"X") events, timestamps
+//! and durations in microseconds. Workers map to tracks via `tid`.
+
+use super::json::Json;
+use super::profile::tier_label;
+use super::recorder::TraceSnapshot;
+
+/// Render `snap` as a Perfetto-loadable trace-event JSON document.
+pub fn chrome_trace(snap: &TraceSnapshot) -> String {
+    let mut workers: Vec<u32> = snap.events.iter().map(|e| e.worker).collect();
+    workers.sort_unstable();
+    workers.dedup();
+
+    let mut j = Json::new();
+    j.begin_obj();
+    j.key("traceEvents").begin_arr();
+    // name the per-worker tracks
+    for &w in &workers {
+        j.begin_obj();
+        j.field_str("name", "thread_name");
+        j.field_str("ph", "M");
+        j.field_int("pid", 1);
+        j.field_uint("tid", w as u64);
+        j.key("args").begin_obj();
+        j.field_str("name", &format!("worker-{w}"));
+        j.end_obj();
+        j.end_obj();
+    }
+    for e in &snap.events {
+        j.begin_obj();
+        j.field_str("name", e.name);
+        j.field_str("cat", e.cat.label());
+        j.field_str("ph", "X");
+        j.field_num("ts", e.start_us);
+        j.field_num("dur", e.dur_us);
+        j.field_int("pid", 1);
+        j.field_uint("tid", e.worker as u64);
+        j.key("args").begin_obj();
+        if e.fp != 0 {
+            j.field_str("fp", &format!("{:016x}", e.fp));
+        }
+        if let Some(tier) = e.tier {
+            j.field_str("tier", tier_label(tier));
+        }
+        if e.fences > 0 {
+            j.field_uint("fences", e.fences as u64);
+        }
+        if e.barriers > 0 {
+            j.field_uint("barriers", e.barriers as u64);
+        }
+        j.end_obj();
+        j.end_obj();
+    }
+    j.end_arr();
+    j.field_str("displayTimeUnit", "ms");
+    j.key("otherData").begin_obj();
+    j.field_uint("dropped_events", snap.dropped);
+    j.end_obj();
+    j.end_obj();
+    j.finish()
+}
+
+#[cfg(all(test, feature = "trace"))]
+mod tests {
+    use super::super::recorder::{begin, install, record, SpanCat, TraceConfig, TraceSink};
+    use super::*;
+
+    #[test]
+    fn renders_events_and_metadata() {
+        let sink = TraceSink::new(TraceConfig::default());
+        {
+            let _g = install(&sink, 2, None);
+            record(SpanCat::Compile, "cache-hit", 0, begin());
+        }
+        let text = chrome_trace(&sink.snapshot());
+        assert!(text.starts_with("{\"traceEvents\":["));
+        assert!(text.contains("\"name\":\"worker-2\""));
+        assert!(text.contains("\"cat\":\"compile\""));
+        assert!(text.contains("\"ph\":\"X\""));
+        assert!(text.contains("\"displayTimeUnit\":\"ms\""));
+        assert!(text.contains("\"dropped_events\":0"));
+    }
+}

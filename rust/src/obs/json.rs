@@ -1,0 +1,191 @@
+//! Minimal hand-rolled JSON writer (the offline image carries no serde).
+//!
+//! One writer serves every JSON producer in the tree — the Chrome trace
+//! exporter, the serving-stats serializer, and the bench harnesses — so
+//! stats stop being formatted three different ways. The builder keeps a
+//! comma-needed flag per open container; callers emit structurally
+//! (begin/end + typed fields) and cannot produce a missing-comma or
+//! trailing-comma document.
+
+/// Streaming JSON builder. Values appended to an open object must go
+/// through [`Json::key`] (or the `field_*` helpers); values appended to
+/// an open array are written directly.
+#[derive(Debug, Default)]
+pub struct Json {
+    buf: String,
+    /// One entry per open container: `true` once the container holds at
+    /// least one element (so the next element is comma-prefixed).
+    stack: Vec<bool>,
+    /// Set between a `key(..)` and its value: the value belongs to the
+    /// key and must not be comma-prefixed again.
+    pending_key: bool,
+}
+
+impl Json {
+    pub fn new() -> Json {
+        Json::default()
+    }
+
+    fn comma(&mut self) {
+        if self.pending_key {
+            self.pending_key = false;
+            return;
+        }
+        if let Some(top) = self.stack.last_mut() {
+            if *top {
+                self.buf.push(',');
+            } else {
+                *top = true;
+            }
+        }
+    }
+
+    fn push_escaped(&mut self, s: &str) {
+        self.buf.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => self.buf.push_str("\\\""),
+                '\\' => self.buf.push_str("\\\\"),
+                '\n' => self.buf.push_str("\\n"),
+                '\r' => self.buf.push_str("\\r"),
+                '\t' => self.buf.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    self.buf.push_str(&format!("\\u{:04x}", c as u32));
+                }
+                c => self.buf.push(c),
+            }
+        }
+        self.buf.push('"');
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Json {
+        self.comma();
+        self.buf.push('{');
+        self.stack.push(false);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Json {
+        self.stack.pop();
+        self.buf.push('}');
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Json {
+        self.comma();
+        self.buf.push('[');
+        self.stack.push(false);
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Json {
+        self.stack.pop();
+        self.buf.push(']');
+        self
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Json {
+        self.comma();
+        self.push_escaped(k);
+        self.buf.push(':');
+        self.pending_key = true;
+        self
+    }
+
+    pub fn str_val(&mut self, s: &str) -> &mut Json {
+        self.comma();
+        self.push_escaped(s);
+        self
+    }
+
+    /// Finite floats print via Rust's shortest round-trip `Display`
+    /// (never exponent notation, always JSON-legal); non-finite values
+    /// have no JSON spelling and degrade to 0.
+    pub fn num(&mut self, v: f64) -> &mut Json {
+        self.comma();
+        if v.is_finite() {
+            self.buf.push_str(&format!("{v}"));
+        } else {
+            self.buf.push('0');
+        }
+        self
+    }
+
+    pub fn int(&mut self, v: i64) -> &mut Json {
+        self.comma();
+        self.buf.push_str(&format!("{v}"));
+        self
+    }
+
+    pub fn uint(&mut self, v: u64) -> &mut Json {
+        self.comma();
+        self.buf.push_str(&format!("{v}"));
+        self
+    }
+
+    pub fn bool_val(&mut self, v: bool) -> &mut Json {
+        self.comma();
+        self.buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    pub fn field_str(&mut self, k: &str, v: &str) -> &mut Json {
+        self.key(k).str_val(v)
+    }
+
+    pub fn field_num(&mut self, k: &str, v: f64) -> &mut Json {
+        self.key(k).num(v)
+    }
+
+    pub fn field_int(&mut self, k: &str, v: i64) -> &mut Json {
+        self.key(k).int(v)
+    }
+
+    pub fn field_uint(&mut self, k: &str, v: u64) -> &mut Json {
+        self.key(k).uint(v)
+    }
+
+    pub fn field_bool(&mut self, k: &str, v: bool) -> &mut Json {
+        self.key(k).bool_val(v)
+    }
+
+    pub fn finish(self) -> String {
+        debug_assert!(self.stack.is_empty(), "unbalanced JSON containers");
+        self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objects_arrays_and_commas() {
+        let mut j = Json::new();
+        j.begin_obj();
+        j.field_str("name", "a\"b\\c\n");
+        j.field_int("n", -3);
+        j.field_uint("u", 7);
+        j.field_bool("ok", true);
+        j.key("xs").begin_arr();
+        j.num(1.5).num(f64::NAN).uint(2);
+        j.end_arr();
+        j.key("inner").begin_obj();
+        j.end_obj();
+        j.end_obj();
+        assert_eq!(
+            j.finish(),
+            "{\"name\":\"a\\\"b\\\\c\\n\",\"n\":-3,\"u\":7,\"ok\":true,\
+             \"xs\":[1.5,0,2],\"inner\":{}}"
+        );
+    }
+
+    #[test]
+    fn floats_stay_json_legal() {
+        let mut j = Json::new();
+        j.begin_arr();
+        j.num(0.25).num(10.0).num(f64::INFINITY);
+        j.end_arr();
+        assert_eq!(j.finish(), "[0.25,10,0]");
+    }
+}

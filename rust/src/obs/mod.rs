@@ -1,0 +1,40 @@
+//! Observability layer: flight recorder, per-launch kernel profiler,
+//! and exporters.
+//!
+//! The paper's pipeline *models* cost (explore pass, PR 4) and the VM
+//! *counts* launches ([`crate::exec::LaunchLedger`]), but nothing
+//! measured where a served request's wall time actually went. This
+//! module closes that gap:
+//!
+//! - [`recorder`] — the [`TraceSink`] flight recorder: bounded
+//!   per-worker ring buffers of span events covering the whole request
+//!   life cycle (queue → batch → compile/passes → launch → reply), with
+//!   a thread-local install/record API so instrumentation sites stay
+//!   one line.
+//! - [`profile`] — [`KernelProfile`]: measured per-fused-group launch
+//!   times keyed by group fingerprint, joined against the explore
+//!   pass's modeled costs into a divergence report (the input the
+//!   ROADMAP's feedback-directed autotuning item needs).
+//! - [`chrome`] — Chrome trace-event JSON export (Perfetto-loadable).
+//! - [`prom`] — Prometheus text exposition of every serving counter.
+//! - [`json`] — the one hand-rolled JSON writer shared by exporters,
+//!   stats serialization, and bench harnesses.
+//!
+//! Disable the `trace` cargo feature to compile the record path out
+//! entirely; at runtime, [`TraceSink::set_enabled`] gates recording and
+//! an uninstalled thread never reads the clock.
+
+pub mod chrome;
+pub mod json;
+pub mod profile;
+pub mod prom;
+pub mod recorder;
+
+pub use chrome::chrome_trace;
+pub use json::Json;
+pub use profile::{tier_label, DivergenceRow, GroupProfile, KernelProfile, KernelProfileHandle};
+pub use prom::prometheus;
+pub use recorder::{
+    active, begin, install, launch, record, record_between, record_passes, set_profile, ObsGuard,
+    SpanCat, SpanEvent, SpanTimer, TraceConfig, TraceSink, TraceSnapshot, WorkerRing,
+};

@@ -1,0 +1,321 @@
+//! Per-group kernel profile: measured launch times keyed by group
+//! fingerprint, joined against the explore pass's modeled costs.
+//!
+//! Every stitched launch records its wall time under the fused group's
+//! structural fingerprint (the same `xg{fp:016x}` identity the explore
+//! pass memoizes modeled costs under, see
+//! [`crate::fusion::group_fingerprint`]), so a profile snapshot can be
+//! joined 1:1 with the cost model: the modeled-vs-measured divergence
+//! report is the artifact a future feedback-directed autotuner consumes
+//! (ROADMAP: "measured time replaces modeled time").
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::StreamingSummary;
+use crate::exec::StitchTier;
+
+/// Bound on distinct fingerprints per profile. Real modules have a few
+/// dozen fused groups; the cap only guards against a pathological
+/// many-module aggregate growing without bound.
+pub const PROFILE_MAX_GROUPS: usize = 256;
+
+/// Measured statistics for one fused group (one generated kernel).
+#[derive(Debug, Clone)]
+pub struct GroupProfile {
+    /// Stitching tier the group's kernel executes at.
+    pub tier: StitchTier,
+    /// The explore pass's modeled execution time (µs); 0 when the group
+    /// was never priced (e.g. cost-guided fusion disabled).
+    pub modeled_us: f64,
+    /// Measured wall time per launch, µs (bounded reservoir).
+    pub measured_us: StreamingSummary,
+    /// Total launches observed for this group.
+    pub launches: u64,
+    /// Grid fences executed across all launches (global tier only).
+    pub fences: u64,
+    /// Block barriers executed across all launches.
+    pub barriers: u64,
+}
+
+impl GroupProfile {
+    fn new(tier: StitchTier, modeled_us: f64) -> GroupProfile {
+        GroupProfile {
+            tier,
+            modeled_us,
+            measured_us: StreamingSummary::default(),
+            launches: 0,
+            fences: 0,
+            barriers: 0,
+        }
+    }
+}
+
+/// One row of the modeled-vs-measured join.
+#[derive(Debug, Clone)]
+pub struct DivergenceRow {
+    pub fp: u64,
+    pub tier: StitchTier,
+    pub launches: u64,
+    pub modeled_us: f64,
+    pub measured_mean_us: f64,
+    /// measured / modeled (0 when either side is missing): >1 means the
+    /// cost model is optimistic for this group, <1 pessimistic.
+    pub ratio: f64,
+}
+
+/// Bounded map of [`GroupProfile`]s keyed by group fingerprint.
+///
+/// Deterministically ordered (BTreeMap) so reports and serialized forms
+/// are stable across runs.
+#[derive(Debug, Clone, Default)]
+pub struct KernelProfile {
+    groups: BTreeMap<u64, GroupProfile>,
+    dropped_groups: u64,
+}
+
+impl KernelProfile {
+    /// Pre-register a group with its modeled cost at compile time, so
+    /// the divergence join works even before the first launch.
+    pub fn seed(&mut self, fp: u64, tier: StitchTier, modeled_us: f64) {
+        if let Some(g) = self.groups.get_mut(&fp) {
+            g.tier = tier;
+            g.modeled_us = modeled_us;
+            return;
+        }
+        if self.groups.len() >= PROFILE_MAX_GROUPS {
+            self.dropped_groups += 1;
+            return;
+        }
+        self.groups.insert(fp, GroupProfile::new(tier, modeled_us));
+    }
+
+    /// Record one measured launch of group `fp`.
+    pub fn record_launch(
+        &mut self,
+        fp: u64,
+        tier: StitchTier,
+        modeled_us: f64,
+        wall_us: f64,
+        fences: u64,
+        barriers: u64,
+    ) {
+        if !self.groups.contains_key(&fp) {
+            if self.groups.len() >= PROFILE_MAX_GROUPS {
+                self.dropped_groups += 1;
+                return;
+            }
+            self.groups.insert(fp, GroupProfile::new(tier, modeled_us));
+        }
+        let g = self.groups.get_mut(&fp).expect("group present");
+        g.measured_us.record_us(wall_us);
+        g.launches += 1;
+        g.fences += fences;
+        g.barriers += barriers;
+    }
+
+    /// Fold `other` into `self` (stats aggregation across workers or
+    /// models). Respects the group bound; collisions merge summaries.
+    pub fn merge(&mut self, other: &KernelProfile) {
+        for (fp, og) in &other.groups {
+            match self.groups.get_mut(fp) {
+                Some(g) => {
+                    g.measured_us.merge(&og.measured_us);
+                    g.launches += og.launches;
+                    g.fences += og.fences;
+                    g.barriers += og.barriers;
+                    if g.modeled_us == 0.0 {
+                        g.modeled_us = og.modeled_us;
+                    }
+                }
+                None => {
+                    if self.groups.len() >= PROFILE_MAX_GROUPS {
+                        self.dropped_groups += 1;
+                        continue;
+                    }
+                    self.groups.insert(*fp, og.clone());
+                }
+            }
+        }
+        self.dropped_groups += other.dropped_groups;
+    }
+
+    pub fn len(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    /// Groups dropped because the [`PROFILE_MAX_GROUPS`] bound was hit.
+    pub fn dropped_groups(&self) -> u64 {
+        self.dropped_groups
+    }
+
+    /// Fingerprint-ordered iteration over the profiled groups.
+    pub fn groups(&self) -> impl Iterator<Item = (u64, &GroupProfile)> {
+        self.groups.iter().map(|(fp, g)| (*fp, g))
+    }
+
+    /// Total measured launches across all groups — reconciles with
+    /// `LaunchLedger::generated` on the stitched path.
+    pub fn total_launches(&self) -> u64 {
+        self.groups.values().map(|g| g.launches).sum()
+    }
+
+    /// The modeled-vs-measured join, fingerprint-ordered. Groups that
+    /// never launched report a 0 measured mean and ratio.
+    pub fn divergence(&self) -> Vec<DivergenceRow> {
+        self.groups
+            .iter()
+            .map(|(fp, g)| {
+                let measured = g.measured_us.mean_us();
+                let ratio = if g.modeled_us > 0.0 && g.launches > 0 {
+                    measured / g.modeled_us
+                } else {
+                    0.0
+                };
+                DivergenceRow {
+                    fp: *fp,
+                    tier: g.tier,
+                    launches: g.launches,
+                    modeled_us: g.modeled_us,
+                    measured_mean_us: measured,
+                    ratio,
+                }
+            })
+            .collect()
+    }
+
+    /// Serialize with the shared JSON writer (stable, fp-ordered).
+    pub fn write_json(&self, j: &mut super::json::Json) {
+        j.begin_obj();
+        j.field_uint("groups", self.groups.len() as u64);
+        j.field_uint("dropped_groups", self.dropped_groups);
+        j.key("divergence").begin_arr();
+        for row in self.divergence() {
+            j.begin_obj();
+            j.field_str("fp", &format!("{:016x}", row.fp));
+            j.field_str("tier", tier_label(row.tier));
+            j.field_uint("launches", row.launches);
+            j.field_num("modeled_us", row.modeled_us);
+            j.field_num("measured_mean_us", row.measured_mean_us);
+            j.field_num("ratio", row.ratio);
+            j.end_obj();
+        }
+        j.end_arr();
+        j.end_obj();
+    }
+}
+
+/// Stable lowercase label for a stitching tier (spans, exports, docs).
+pub fn tier_label(tier: StitchTier) -> &'static str {
+    match tier {
+        StitchTier::Plain => "plain",
+        StitchTier::Shm => "shm",
+        StitchTier::Global => "global",
+    }
+}
+
+/// Shared handle to a [`KernelProfile`], carried on
+/// [`crate::coordinator::pipeline::CompiledModule`] and cloned into the
+/// serving workers: every executor of the same compiled module feeds
+/// the same profile. The mutex is uncontended in practice (one lock per
+/// kernel launch, microseconds apart).
+#[derive(Clone, Default)]
+pub struct KernelProfileHandle(Arc<Mutex<KernelProfile>>);
+
+impl KernelProfileHandle {
+    pub fn new() -> KernelProfileHandle {
+        KernelProfileHandle::default()
+    }
+
+    pub fn seed(&self, fp: u64, tier: StitchTier, modeled_us: f64) {
+        self.0.lock().expect("profile lock poisoned").seed(fp, tier, modeled_us);
+    }
+
+    pub fn record_launch(
+        &self,
+        fp: u64,
+        tier: StitchTier,
+        modeled_us: f64,
+        wall_us: f64,
+        fences: u64,
+        barriers: u64,
+    ) {
+        self.0
+            .lock()
+            .expect("profile lock poisoned")
+            .record_launch(fp, tier, modeled_us, wall_us, fences, barriers);
+    }
+
+    /// Owned copy of the current profile state.
+    pub fn snapshot(&self) -> KernelProfile {
+        self.0.lock().expect("profile lock poisoned").clone()
+    }
+
+    /// Fold another profile's groups into this handle (the CLI's
+    /// aggregate view across models — see [`KernelProfile::merge`]).
+    pub fn merge_from(&self, other: &KernelProfile) {
+        self.0.lock().expect("profile lock poisoned").merge(other);
+    }
+}
+
+impl fmt::Debug for KernelProfileHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let p = self.0.lock().expect("profile lock poisoned");
+        write!(f, "KernelProfileHandle({} groups, {} launches)", p.len(), p.total_launches())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seed_then_record_joins_modeled_and_measured() {
+        let p = KernelProfileHandle::new();
+        p.seed(0xabc, StitchTier::Shm, 10.0);
+        p.record_launch(0xabc, StitchTier::Shm, 10.0, 25.0, 2, 8);
+        p.record_launch(0xabc, StitchTier::Shm, 10.0, 15.0, 2, 8);
+        let snap = p.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap.total_launches(), 2);
+        let rows = snap.divergence();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].fp, 0xabc);
+        assert_eq!(rows[0].launches, 2);
+        assert!((rows[0].measured_mean_us - 20.0).abs() < 1e-9);
+        assert!((rows[0].ratio - 2.0).abs() < 1e-9);
+        let snap2 = p.snapshot();
+        let g = snap2.groups().next().expect("one group").1;
+        assert_eq!((g.fences, g.barriers), (4, 16));
+    }
+
+    #[test]
+    fn group_bound_counts_drops() {
+        let mut p = KernelProfile::default();
+        for fp in 0..(PROFILE_MAX_GROUPS as u64 + 5) {
+            p.record_launch(fp, StitchTier::Plain, 1.0, 1.0, 0, 0);
+        }
+        assert_eq!(p.len(), PROFILE_MAX_GROUPS);
+        assert_eq!(p.dropped_groups(), 5);
+    }
+
+    #[test]
+    fn merge_accumulates_groups() {
+        let mut a = KernelProfile::default();
+        a.record_launch(1, StitchTier::Plain, 2.0, 4.0, 0, 1);
+        let mut b = KernelProfile::default();
+        b.record_launch(1, StitchTier::Plain, 2.0, 6.0, 0, 1);
+        b.record_launch(2, StitchTier::Global, 9.0, 9.0, 3, 0);
+        a.merge(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.total_launches(), 3);
+        let rows = a.divergence();
+        assert!((rows[0].measured_mean_us - 5.0).abs() < 1e-9);
+        assert_eq!(rows[1].tier, StitchTier::Global);
+    }
+}

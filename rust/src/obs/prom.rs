@@ -1,0 +1,163 @@
+//! Prometheus text-exposition exporter: renders every counter the
+//! serving stack already owns (launch tiers, cache hits/misses/cold
+//! compiles, arena reuse, latency percentiles, per-group profile) in
+//! the `# TYPE`-annotated text format a Prometheus scrape endpoint (or
+//! a human) reads directly.
+
+use std::fmt::Write as _;
+
+use super::profile::tier_label;
+use crate::coordinator::metrics::StreamingSummary;
+use crate::coordinator::pool::ServingStats;
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
+}
+
+fn line(out: &mut String, name: &str, labels: &str, v: f64) {
+    if v.is_finite() {
+        let _ = writeln!(out, "{name}{labels} {v}");
+    } else {
+        let _ = writeln!(out, "{name}{labels} 0");
+    }
+}
+
+fn summary(out: &mut String, name: &str, help: &str, s: &StreamingSummary) {
+    header(out, name, "summary", help);
+    let qs = s.percentiles_us(&[50.0, 95.0, 99.0]);
+    line(out, name, "{quantile=\"0.5\"}", qs[0]);
+    line(out, name, "{quantile=\"0.95\"}", qs[1]);
+    line(out, name, "{quantile=\"0.99\"}", qs[2]);
+    line(out, &format!("{name}_sum"), "", s.sum_us());
+    line(out, &format!("{name}_count"), "", s.count() as f64);
+}
+
+/// Render a full exposition document for `stats`. `dropped_events` is
+/// the flight recorder's overflow counter when a sink was attached.
+pub fn prometheus(stats: &ServingStats, dropped_events: Option<u64>) -> String {
+    let mut out = String::new();
+    let a = &stats.aggregate;
+
+    header(&mut out, "fusion_workers", "gauge", "Serving workers in the pool.");
+    line(&mut out, "fusion_workers", "", stats.per_worker.len().max(1) as f64);
+
+    header(&mut out, "fusion_requests_total", "counter", "Requests served.");
+    line(&mut out, "fusion_requests_total", "", a.requests as f64);
+    header(&mut out, "fusion_batches_total", "counter", "Batches executed.");
+    line(&mut out, "fusion_batches_total", "", a.batches as f64);
+    header(&mut out, "fusion_stitched_batches_total", "counter", "Batches run on the stitched VM.");
+    line(&mut out, "fusion_stitched_batches_total", "", a.stitched_batches as f64);
+    header(&mut out, "fusion_rejected_total", "counter", "Requests rejected (oversized).");
+    line(&mut out, "fusion_rejected_total", "", a.rejected as f64);
+    header(&mut out, "fusion_compile_failures_total", "counter", "Pipeline compiles that failed.");
+    line(&mut out, "fusion_compile_failures_total", "", a.compile_failures as f64);
+
+    header(&mut out, "fusion_launches_total", "counter", "Kernel launches by kind.");
+    line(&mut out, "fusion_launches_total", "{kind=\"generated\"}", a.launches.generated as f64);
+    line(&mut out, "fusion_launches_total", "{kind=\"library\"}", a.launches.library as f64);
+    header(&mut out, "fusion_launch_tier_total", "counter", "Generated launches by stitch tier.");
+    line(&mut out, "fusion_launch_tier_total", "{tier=\"plain\"}", a.launches.tier_plain as f64);
+    line(&mut out, "fusion_launch_tier_total", "{tier=\"shm\"}", a.launches.tier_shm as f64);
+    line(&mut out, "fusion_launch_tier_total", "{tier=\"global\"}", a.launches.tier_global as f64);
+    header(&mut out, "fusion_launch_barriers_total", "counter", "Block barriers executed.");
+    line(&mut out, "fusion_launch_barriers_total", "", a.launches.barriers as f64);
+    header(&mut out, "fusion_launch_fences_total", "counter", "Grid fences executed.");
+    line(&mut out, "fusion_launch_fences_total", "", a.launches.fences as f64);
+
+    header(&mut out, "fusion_worker_cache_hits_total", "counter", "Worker-observed compile cache hits.");
+    line(&mut out, "fusion_worker_cache_hits_total", "", a.cache_hits as f64);
+    header(&mut out, "fusion_worker_cache_misses_total", "counter", "Worker-observed compile cache misses.");
+    line(&mut out, "fusion_worker_cache_misses_total", "", a.cache_misses as f64);
+    if let Some(cache) = &stats.cache {
+        header(&mut out, "fusion_compile_cache_hits_total", "counter", "Shared compile cache hits.");
+        line(&mut out, "fusion_compile_cache_hits_total", "", cache.hits as f64);
+        header(&mut out, "fusion_compile_cache_misses_total", "counter", "Shared compile cache misses.");
+        line(&mut out, "fusion_compile_cache_misses_total", "", cache.misses as f64);
+        header(&mut out, "fusion_compile_cache_evictions_total", "counter", "Shared compile cache evictions.");
+        line(&mut out, "fusion_compile_cache_evictions_total", "", cache.evictions as f64);
+        header(&mut out, "fusion_compile_cache_insertions_total", "counter", "Shared compile cache insertions.");
+        line(&mut out, "fusion_compile_cache_insertions_total", "", cache.insertions as f64);
+    }
+    if let Some(cold) = stats.cold_compiles {
+        header(&mut out, "fusion_cold_compiles_total", "counter", "Full pipeline compiles (single-flight).");
+        line(&mut out, "fusion_cold_compiles_total", "", cold as f64);
+    }
+
+    header(&mut out, "fusion_arena_reuses_total", "counter", "Allocation-free arena reuses.");
+    line(&mut out, "fusion_arena_reuses_total", "", a.arena_reuses as f64);
+    if let Some(arena) = &a.arena {
+        header(&mut out, "fusion_arena_bytes", "gauge", "Planned arena high-water mark, bytes.");
+        line(&mut out, "fusion_arena_bytes", "", arena.arena_bytes as f64);
+        header(&mut out, "fusion_arena_value_bytes", "gauge", "Unreused value footprint, bytes.");
+        line(&mut out, "fusion_arena_value_bytes", "", arena.value_bytes as f64);
+        header(&mut out, "fusion_arena_reuse_ratio", "gauge", "value_bytes / arena_bytes.");
+        line(&mut out, "fusion_arena_reuse_ratio", "", arena.reuse_ratio());
+    }
+
+    summary(&mut out, "fusion_exec_latency_us", "Per-batch execution latency, µs.", &a.exec_us);
+    summary(&mut out, "fusion_compile_latency_us", "Compile (cache lookup or cold) latency, µs.", &a.compile_us);
+    summary(&mut out, "fusion_queue_latency_us", "Request queue wait, µs.", &a.queue_us);
+
+    if let Some(dropped) = dropped_events {
+        header(&mut out, "fusion_trace_dropped_events_total", "counter", "Flight-recorder ring overflow drops.");
+        line(&mut out, "fusion_trace_dropped_events_total", "", dropped as f64);
+    }
+
+    if let Some(profile) = &a.profile {
+        let snap = profile.snapshot();
+        if !snap.is_empty() {
+            header(&mut out, "fusion_group_launches_total", "counter", "Measured launches per fused group.");
+            for (fp, g) in snap.groups() {
+                let labels = format!("{{fp=\"{:016x}\",tier=\"{}\"}}", fp, tier_label(g.tier));
+                line(&mut out, "fusion_group_launches_total", &labels, g.launches as f64);
+            }
+            header(&mut out, "fusion_group_measured_us_mean", "gauge", "Measured mean launch wall time per fused group, µs.");
+            header(&mut out, "fusion_group_modeled_us", "gauge", "Explore-pass modeled launch time per fused group, µs.");
+            for (fp, g) in snap.groups() {
+                let labels = format!("{{fp=\"{:016x}\",tier=\"{}\"}}", fp, tier_label(g.tier));
+                line(&mut out, "fusion_group_measured_us_mean", &labels, g.measured_us.mean_us());
+                line(&mut out, "fusion_group_modeled_us", &labels, g.modeled_us);
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::WorkerStats;
+
+    #[test]
+    fn exposition_covers_core_counter_families() {
+        let mut w = WorkerStats::default();
+        w.requests = 12;
+        w.batches = 3;
+        w.launches.generated = 6;
+        w.launches.tier_plain = 4;
+        w.launches.tier_shm = 2;
+        w.exec_us.record_us(100.0);
+        w.queue_us.record_us(5.0);
+        let stats = ServingStats {
+            per_worker: vec![w.clone()],
+            aggregate: w,
+            cache: None,
+            cold_compiles: None,
+        };
+        let text = prometheus(&stats, Some(0));
+        for family in [
+            "fusion_requests_total 12",
+            "fusion_launches_total{kind=\"generated\"} 6",
+            "fusion_launch_tier_total{tier=\"plain\"} 4",
+            "fusion_arena_reuses_total 0",
+            "fusion_exec_latency_us{quantile=\"0.5\"} 100",
+            "fusion_queue_latency_us_count 1",
+            "fusion_trace_dropped_events_total 0",
+            "# TYPE fusion_launch_tier_total counter",
+        ] {
+            assert!(text.contains(family), "missing {family:?} in:\n{text}");
+        }
+    }
+}

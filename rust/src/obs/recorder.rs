@@ -1,0 +1,529 @@
+//! The flight recorder: a lock-light, bounded trace sink with
+//! per-worker ring buffers of timestamped span events.
+//!
+//! Design constraints (ROADMAP observability item):
+//! - **bounded**: each worker owns a fixed-capacity ring; overflow
+//!   drops the oldest event and counts it, so a long-lived server keeps
+//!   O(workers × capacity) memory no matter how much it serves.
+//! - **zero-allocation record path**: ring storage is reserved at
+//!   registration; recording a span copies one POD [`SpanEvent`] into
+//!   the ring under a per-worker mutex that only that worker contends.
+//! - **~0 overhead when off**: instrumentation sites call
+//!   [`begin`], which reads a thread-local and takes no timestamp when
+//!   no recorder is installed (or the sink is disabled); the whole
+//!   record path additionally compiles to nothing without the `trace`
+//!   cargo feature.
+//!
+//! Instrumentation is context-based: a worker thread [`install`]s a
+//! sink + worker id once, and every layer below it (batcher, compile
+//! cache, stitched VM) records through free functions without plumbing
+//! a recorder argument through the call tree.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::profile::KernelProfileHandle;
+use crate::coordinator::metrics::PassRecord;
+use crate::exec::{LaunchLedger, StitchTier};
+
+/// Whether the record path is compiled in at all. With
+/// `--no-default-features` every record function is statically dead and
+/// the instrumentation sites cost nothing.
+const TRACE_COMPILED: bool = cfg!(feature = "trace");
+
+/// Span taxonomy: one category per stage of a request's life, plus
+/// compile-pass child spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum SpanCat {
+    /// Request sat in the worker's queue (enqueue → batch drain).
+    Queue,
+    /// Batch tensor assembly from request rows.
+    Batch,
+    /// Compile-cache lookup / cold pipeline compile.
+    Compile,
+    /// One pipeline pass inside a cold compile (PassTrace child span).
+    Pass,
+    /// One kernel or library launch on the VM / interpreter.
+    Launch,
+    /// Result slicing + reply send.
+    Reply,
+}
+
+impl SpanCat {
+    pub const ALL: [SpanCat; 6] = [
+        SpanCat::Queue,
+        SpanCat::Batch,
+        SpanCat::Compile,
+        SpanCat::Pass,
+        SpanCat::Launch,
+        SpanCat::Reply,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanCat::Queue => "queue",
+            SpanCat::Batch => "batch",
+            SpanCat::Compile => "compile",
+            SpanCat::Pass => "pass",
+            SpanCat::Launch => "launch",
+            SpanCat::Reply => "reply",
+        }
+    }
+}
+
+/// One recorded span. POD (`Copy`) so the ring record path is a plain
+/// slot write.
+#[derive(Debug, Clone, Copy)]
+pub struct SpanEvent {
+    pub cat: SpanCat,
+    /// Static span name ("cache-hit", "shm", "fusion", ...). Static so
+    /// recording never allocates.
+    pub name: &'static str,
+    /// Worker/shard id that recorded the span.
+    pub worker: u32,
+    /// Start offset from the sink epoch, µs.
+    pub start_us: f64,
+    pub dur_us: f64,
+    /// Fused-group fingerprint for launch spans (0 when not applicable).
+    pub fp: u64,
+    /// Stitching tier for generated-kernel launch spans.
+    pub tier: Option<StitchTier>,
+    /// Grid fences executed during this launch.
+    pub fences: u32,
+    /// Block barriers executed during this launch.
+    pub barriers: u32,
+}
+
+/// Sink construction parameters.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Record events right away (a disabled sink still installs, so a
+    /// profile can collect without tracing).
+    pub enabled: bool,
+    /// Ring capacity per worker, in events (clamped to ≥ 1).
+    pub capacity_per_worker: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { enabled: true, capacity_per_worker: 16 * 1024 }
+    }
+}
+
+/// Fixed-capacity drop-oldest event ring.
+struct RingBuf {
+    buf: Vec<SpanEvent>,
+    /// Oldest slot once the ring is full; next slot to overwrite.
+    head: usize,
+    cap: usize,
+}
+
+/// One worker's ring plus its dropped-event counter.
+pub struct WorkerRing {
+    worker: u32,
+    dropped: AtomicU64,
+    inner: Mutex<RingBuf>,
+}
+
+impl WorkerRing {
+    fn new(worker: u32, cap: usize) -> WorkerRing {
+        let cap = cap.max(1);
+        WorkerRing {
+            worker,
+            dropped: AtomicU64::new(0),
+            inner: Mutex::new(RingBuf { buf: Vec::with_capacity(cap), head: 0, cap }),
+        }
+    }
+
+    pub fn worker(&self) -> u32 {
+        self.worker
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    fn push(&self, ev: SpanEvent) {
+        let mut ring = self.inner.lock().expect("trace ring poisoned");
+        if ring.buf.len() < ring.cap {
+            // still within the reservation made at registration: this
+            // push cannot reallocate
+            ring.buf.push(ev);
+        } else {
+            let h = ring.head;
+            ring.buf[h] = ev;
+            ring.head = (h + 1) % ring.cap;
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Events oldest-first.
+    fn drain_ordered(&self, out: &mut Vec<SpanEvent>) {
+        let ring = self.inner.lock().expect("trace ring poisoned");
+        out.extend_from_slice(&ring.buf[ring.head..]);
+        out.extend_from_slice(&ring.buf[..ring.head]);
+    }
+}
+
+/// Point-in-time copy of everything the sink holds.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSnapshot {
+    /// All events, grouped by worker id, oldest-first within a worker.
+    pub events: Vec<SpanEvent>,
+    /// Events lost to ring overflow across all workers.
+    pub dropped: u64,
+}
+
+impl TraceSnapshot {
+    pub fn count_by_cat(&self, cat: SpanCat) -> usize {
+        self.events.iter().filter(|e| e.cat == cat).count()
+    }
+
+    /// Generated-kernel launch spans per tier: (plain, shm, global) —
+    /// reconciles with the `LaunchLedger` tier counters.
+    pub fn launch_tier_counts(&self) -> (u64, u64, u64) {
+        let mut counts = (0u64, 0u64, 0u64);
+        for e in &self.events {
+            match e.tier {
+                Some(StitchTier::Plain) => counts.0 += 1,
+                Some(StitchTier::Shm) => counts.1 += 1,
+                Some(StitchTier::Global) => counts.2 += 1,
+                None => {}
+            }
+        }
+        counts
+    }
+}
+
+/// The flight recorder. Create once, share (`Arc`) with every worker;
+/// each worker registers its own ring so the hot record path never
+/// touches a global lock.
+pub struct TraceSink {
+    enabled: AtomicBool,
+    epoch: Instant,
+    capacity: usize,
+    rings: Mutex<Vec<Arc<WorkerRing>>>,
+}
+
+impl TraceSink {
+    pub fn new(cfg: TraceConfig) -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            enabled: AtomicBool::new(cfg.enabled),
+            epoch: Instant::now(),
+            capacity: cfg.capacity_per_worker.max(1),
+            rings: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        TRACE_COMPILED && self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Get-or-create the ring for `worker`. Threads sharing a worker id
+    /// share a ring (and its drop counter).
+    pub fn ring(&self, worker: u32) -> Arc<WorkerRing> {
+        let mut rings = self.rings.lock().expect("trace sink poisoned");
+        if let Some(r) = rings.iter().find(|r| r.worker == worker) {
+            return r.clone();
+        }
+        let r = Arc::new(WorkerRing::new(worker, self.capacity));
+        rings.push(r.clone());
+        r
+    }
+
+    /// Total events lost to ring overflow.
+    pub fn dropped_events(&self) -> u64 {
+        let rings = self.rings.lock().expect("trace sink poisoned");
+        rings.iter().map(|r| r.dropped()).sum()
+    }
+
+    pub fn snapshot(&self) -> TraceSnapshot {
+        let mut rings: Vec<Arc<WorkerRing>> =
+            self.rings.lock().expect("trace sink poisoned").clone();
+        rings.sort_by_key(|r| r.worker);
+        let mut snap = TraceSnapshot::default();
+        for r in &rings {
+            r.drain_ordered(&mut snap.events);
+            snap.dropped += r.dropped();
+        }
+        snap
+    }
+}
+
+impl fmt::Debug for TraceSink {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "TraceSink(enabled: {}, workers: {}, capacity: {})",
+            self.enabled(),
+            self.rings.lock().map(|r| r.len()).unwrap_or(0),
+            self.capacity
+        )
+    }
+}
+
+/// What one thread records into: its sink, its ring, and (optionally)
+/// the kernel profile of the module it is executing.
+struct ObsCtx {
+    sink: Arc<TraceSink>,
+    ring: Arc<WorkerRing>,
+    profile: Option<KernelProfileHandle>,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<ObsCtx>> = RefCell::new(None);
+}
+
+/// Uninstalls (restores the previous context) on drop. `!Send`: must be
+/// dropped on the installing thread.
+#[must_use = "dropping the guard uninstalls the recorder"]
+pub struct ObsGuard {
+    prev: Option<ObsCtx>,
+    _not_send: PhantomData<*const ()>,
+}
+
+impl Drop for ObsGuard {
+    fn drop(&mut self) {
+        let prev = self.prev.take();
+        CTX.with(|c| *c.borrow_mut() = prev);
+    }
+}
+
+/// Install `sink` as this thread's recorder under worker id `worker`,
+/// optionally attaching a kernel profile. Layers below the caller
+/// (batcher, compile cache, VM) then record through the free functions
+/// here. Returns a guard that restores the previous context.
+pub fn install(
+    sink: &Arc<TraceSink>,
+    worker: u32,
+    profile: Option<KernelProfileHandle>,
+) -> ObsGuard {
+    let ctx = ObsCtx { sink: sink.clone(), ring: sink.ring(worker), profile };
+    let prev = CTX.with(|c| c.borrow_mut().replace(ctx));
+    ObsGuard { prev, _not_send: PhantomData }
+}
+
+/// Attach (or replace) the kernel profile on the installed context —
+/// the serving worker learns its module's profile only after the first
+/// compile resolves, which happens after [`install`].
+pub fn set_profile(profile: KernelProfileHandle) {
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow_mut().as_mut() {
+            ctx.profile = Some(profile);
+        }
+    });
+}
+
+/// Whether any consumer (enabled sink or attached profile) would see a
+/// recorded span from this thread right now.
+pub fn active() -> bool {
+    if !TRACE_COMPILED {
+        return false;
+    }
+    CTX.with(|c| {
+        c.borrow()
+            .as_ref()
+            .map(|ctx| ctx.sink.enabled() || ctx.profile.is_some())
+            .unwrap_or(false)
+    })
+}
+
+/// A started span. Holds no timestamp when recording is inactive, so
+/// the disabled path never reads the clock.
+#[must_use = "finish the span with obs::record / obs::launch"]
+pub struct SpanTimer(Option<Instant>);
+
+/// Start a span (reads the clock only when a recorder is active).
+#[inline]
+pub fn begin() -> SpanTimer {
+    if active() {
+        SpanTimer(Some(Instant::now()))
+    } else {
+        SpanTimer(None)
+    }
+}
+
+fn dur_us(d: Duration) -> f64 {
+    d.as_secs_f64() * 1e6
+}
+
+fn with_active_ctx(f: impl FnOnce(&ObsCtx)) {
+    CTX.with(|c| {
+        let b = c.borrow();
+        if let Some(ctx) = b.as_ref() {
+            f(ctx);
+        }
+    });
+}
+
+/// Finish a generic span started with [`begin`].
+pub fn record(cat: SpanCat, name: &'static str, fp: u64, t: SpanTimer) {
+    let Some(t0) = t.0 else { return };
+    let elapsed = t0.elapsed();
+    with_active_ctx(|ctx| {
+        if !ctx.sink.enabled() {
+            return;
+        }
+        ctx.ring.push(SpanEvent {
+            cat,
+            name,
+            worker: ctx.ring.worker,
+            start_us: dur_us(t0.saturating_duration_since(ctx.sink.epoch)),
+            dur_us: dur_us(elapsed),
+            fp,
+            tier: None,
+            fences: 0,
+            barriers: 0,
+        });
+    });
+}
+
+/// Record a span from explicit endpoints (queue-wait spans start at the
+/// request's enqueue time, long before the worker sees it).
+pub fn record_between(cat: SpanCat, name: &'static str, fp: u64, start: Instant, end: Instant) {
+    if !TRACE_COMPILED {
+        return;
+    }
+    with_active_ctx(|ctx| {
+        if !ctx.sink.enabled() {
+            return;
+        }
+        ctx.ring.push(SpanEvent {
+            cat,
+            name,
+            worker: ctx.ring.worker,
+            start_us: dur_us(start.saturating_duration_since(ctx.sink.epoch)),
+            dur_us: dur_us(end.saturating_duration_since(start)),
+            fp,
+            tier: None,
+            fences: 0,
+            barriers: 0,
+        });
+    });
+}
+
+/// Finish a generated-kernel launch span: feeds both the trace ring
+/// (when the sink is enabled) and the kernel profile (when attached).
+/// `delta` is the `LaunchLedger` movement of exactly this launch, so
+/// fence/barrier counts and the tier tag come from measurement, not
+/// from re-deriving the program shape.
+pub fn launch(fp: u64, tier: StitchTier, modeled_us: f64, delta: &LaunchLedger, t: SpanTimer) {
+    let Some(t0) = t.0 else { return };
+    let elapsed = t0.elapsed();
+    with_active_ctx(|ctx| {
+        let wall_us = dur_us(elapsed);
+        if let Some(profile) = &ctx.profile {
+            profile.record_launch(fp, tier, modeled_us, wall_us, delta.fences, delta.barriers);
+        }
+        if ctx.sink.enabled() {
+            ctx.ring.push(SpanEvent {
+                cat: SpanCat::Launch,
+                name: super::profile::tier_label(tier),
+                worker: ctx.ring.worker,
+                start_us: dur_us(t0.saturating_duration_since(ctx.sink.epoch)),
+                dur_us: wall_us,
+                fp,
+                tier: Some(tier),
+                fences: delta.fences.min(u32::MAX as u64) as u32,
+                barriers: delta.barriers.min(u32::MAX as u64) as u32,
+            });
+        }
+    });
+}
+
+/// Replay a cold compile's `PassTrace` as child spans of the compile
+/// span that started at `t0`: pass wall times are laid out end-to-end
+/// from the compile start, which is exactly how `PassManager` ran them.
+pub fn record_passes(records: &[PassRecord], t0: Instant) {
+    if !TRACE_COMPILED {
+        return;
+    }
+    with_active_ctx(|ctx| {
+        if !ctx.sink.enabled() {
+            return;
+        }
+        let mut off = dur_us(t0.saturating_duration_since(ctx.sink.epoch));
+        for r in records {
+            ctx.ring.push(SpanEvent {
+                cat: SpanCat::Pass,
+                name: r.name,
+                worker: ctx.ring.worker,
+                start_us: off,
+                dur_us: r.wall_us,
+                fp: 0,
+                tier: None,
+                fences: 0,
+                barriers: 0,
+            });
+            off += r.wall_us;
+        }
+    });
+}
+
+#[cfg(all(test, feature = "trace"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let sink = TraceSink::new(TraceConfig { enabled: true, capacity_per_worker: 8 });
+        let _g = install(&sink, 0, None);
+        for _ in 0..20 {
+            record(SpanCat::Batch, "assemble", 0, begin());
+        }
+        let snap = sink.snapshot();
+        assert_eq!(snap.events.len(), 8);
+        assert_eq!(snap.dropped, 12);
+        assert_eq!(sink.dropped_events(), 12);
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing_but_profile_still_collects() {
+        let sink = TraceSink::new(TraceConfig { enabled: false, capacity_per_worker: 64 });
+        let profile = KernelProfileHandle::new();
+        let _g = install(&sink, 3, Some(profile.clone()));
+        record(SpanCat::Reply, "reply", 0, begin());
+        launch(7, StitchTier::Plain, 1.0, &LaunchLedger::default(), begin());
+        assert_eq!(sink.snapshot().events.len(), 0);
+        assert_eq!(profile.snapshot().total_launches(), 1);
+    }
+
+    #[test]
+    fn uninstalled_thread_is_inert() {
+        assert!(!active());
+        record(SpanCat::Queue, "queue-wait", 0, begin());
+        launch(1, StitchTier::Shm, 1.0, &LaunchLedger::default(), begin());
+    }
+
+    #[test]
+    fn guard_restores_previous_context() {
+        let outer = TraceSink::new(TraceConfig::default());
+        let inner = TraceSink::new(TraceConfig::default());
+        let _a = install(&outer, 0, None);
+        {
+            let _b = install(&inner, 1, None);
+            record(SpanCat::Batch, "assemble", 0, begin());
+        }
+        record(SpanCat::Reply, "reply", 0, begin());
+        assert_eq!(inner.snapshot().events.len(), 1);
+        let outer_snap = outer.snapshot();
+        assert_eq!(outer_snap.events.len(), 1);
+        assert_eq!(outer_snap.events[0].cat, SpanCat::Reply);
+    }
+}

@@ -59,6 +59,12 @@ impl LoadedModel {
         }
         match &self.backend {
             Backend::Interp(prog) => {
+                // One coarse launch span per interpreted run: the HLO
+                // interpreter executes op-at-a-time with no per-launch
+                // timing, so the whole batch is the smallest span the
+                // flight recorder can attribute here (the stitched
+                // backend records per-kernel spans inside `run_into`).
+                let span = crate::obs::begin();
                 let buffers: Vec<Vec<f32>> =
                     inputs.iter().map(|(data, _)| data.to_vec()).collect();
                 let out = prog.execute(&buffers)?;
@@ -66,6 +72,7 @@ impl LoadedModel {
                 let mut ledger = self.ledger.borrow_mut();
                 ledger.generated += generated;
                 ledger.library += library;
+                crate::obs::record(crate::obs::SpanCat::Launch, "interp-batch", 0, span);
                 Ok(out)
             }
             Backend::Stitched(exe) => {

@@ -174,6 +174,7 @@ fn serving_loop_reports_cache_hits_for_repeated_nmt_requests() {
             pipeline,
             use_stitched_backend: false,
         }),
+        trace: None,
     };
     let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
     for i in 0..4 {
@@ -213,6 +214,7 @@ fn shared_service_amortizes_across_serving_loops() {
             pipeline: PipelineConfig::default(),
             use_stitched_backend: false,
         }),
+        trace: None,
     };
 
     let srv1 = ServingCoordinator::start_with_service(dir.path(), cfg.clone(), service.clone())

@@ -1,0 +1,262 @@
+//! Flight-recorder integration tests: span-set determinism, bounded
+//! rings, and launch-span ↔ `LaunchLedger` reconciliation on both VM
+//! paths and through the serving loop.
+
+#![cfg(feature = "trace")]
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::server::CompileOptions;
+use fusion_stitching::coordinator::{
+    compile_module, CompiledModule, FusionMode, PipelineConfig, ServerConfig, ServingCoordinator,
+};
+use fusion_stitching::exec::{ExecArena, LaunchLedger};
+use fusion_stitching::gpusim::DeviceConfig;
+use fusion_stitching::hlo::Module;
+use fusion_stitching::models;
+use fusion_stitching::obs::{self, SpanCat, TraceConfig, TraceSink};
+use fusion_stitching::schedule::PerfLibrary;
+use fusion_stitching::testutil::TempDir;
+use std::time::Duration;
+
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 1000) as f32) / 1000.0 - 0.5
+        })
+        .collect()
+}
+
+fn inputs_for(module: &Module, seed: u64) -> Vec<Vec<f32>> {
+    module
+        .entry
+        .parameters()
+        .into_iter()
+        .enumerate()
+        .map(|(k, id)| {
+            let elems = module.entry.get(id).shape.num_elements() as usize;
+            fill(elems, seed + k as u64)
+        })
+        .collect()
+}
+
+fn lower(name: &str) -> (Module, CompiledModule) {
+    let (meta, module) = models::by_name(name).unwrap();
+    let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+    let mut cfg = PipelineConfig::default();
+    cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+    let compiled = compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg).unwrap();
+    assert!(compiled.executable.is_some(), "{name} must lower: {:?}", compiled.exec_error);
+    (module, compiled)
+}
+
+/// Timestamp-free identity of a span: everything the recorder captured
+/// except when it happened.
+fn span_key(e: &obs::SpanEvent) -> String {
+    format!(
+        "{:?}|{}|{}|{:016x}|{:?}|{}|{}",
+        e.cat, e.name, e.worker, e.fp, e.tier, e.fences, e.barriers
+    )
+}
+
+fn sorted_span_keys(snap: &obs::TraceSnapshot) -> Vec<String> {
+    let mut keys: Vec<String> = snap.events.iter().map(span_key).collect();
+    keys.sort();
+    keys
+}
+
+/// Replay `runs` fast-path executions under a fresh sink at a fixed VM
+/// thread count; returns (snapshot, cumulative ledger).
+fn replay_fast(
+    exe: &fusion_stitching::exec::StitchedExecutable,
+    module: &Module,
+    threads: usize,
+    runs: usize,
+) -> (obs::TraceSnapshot, LaunchLedger) {
+    let sink = TraceSink::new(TraceConfig::default());
+    let _g = obs::install(&sink, threads as u32, None);
+    let inputs = inputs_for(module, 42);
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let mut arena = ExecArena::with_threads(threads);
+    let mut out = Vec::new();
+    let mut ledger = LaunchLedger::default();
+    for _ in 0..runs {
+        let run = exe.run_into(&refs, &mut arena, &mut out).unwrap();
+        ledger.merge(&run);
+    }
+    (sink.snapshot(), ledger)
+}
+
+#[test]
+fn same_model_same_threads_means_identical_span_set() {
+    let (module, compiled) = lower("NMT");
+    let exe = compiled.executable.as_ref().unwrap();
+    let (snap_a, ledger_a) = replay_fast(exe, &module, 2, 3);
+    let (snap_b, ledger_b) = replay_fast(exe, &module, 2, 3);
+    assert_eq!(ledger_a, ledger_b, "replays must pay identical launches");
+    let keys_a = sorted_span_keys(&snap_a);
+    assert!(!keys_a.is_empty(), "replay must record launch spans");
+    assert_eq!(
+        keys_a,
+        sorted_span_keys(&snap_b),
+        "same model + same thread count must produce the same span set"
+    );
+}
+
+#[test]
+fn ring_overflow_drops_exactly() {
+    let sink = TraceSink::new(TraceConfig { enabled: true, capacity_per_worker: 4 });
+    let _g = obs::install(&sink, 0, None);
+    for _ in 0..10 {
+        obs::record(SpanCat::Batch, "assemble", 0, obs::begin());
+    }
+    let snap = sink.snapshot();
+    assert_eq!(snap.events.len(), 4, "ring holds exactly its capacity");
+    assert_eq!(snap.dropped, 6, "every overflowed event is counted");
+    assert_eq!(sink.dropped_events(), 6);
+}
+
+#[test]
+fn launch_spans_reconcile_with_ledger_on_both_paths() {
+    for name in ["LR", "NMT"] {
+        let (module, compiled) = lower(name);
+        let exe = compiled.executable.as_ref().unwrap();
+        let inputs = inputs_for(&module, 7);
+
+        // Fast path at 1/2/4 VM threads: the tier-tagged launch spans
+        // must match the ledger's tier counters exactly.
+        for threads in [1usize, 2, 4] {
+            let (snap, ledger) = replay_fast(exe, &module, threads, 2);
+            let (plain, shm, global) = snap.launch_tier_counts();
+            assert_eq!(
+                (plain, shm, global),
+                (ledger.tier_plain, ledger.tier_shm, ledger.tier_global),
+                "{name} fast path @ {threads} threads"
+            );
+            assert_eq!(
+                plain + shm + global,
+                ledger.generated,
+                "{name}: every generated launch is tier-tagged"
+            );
+        }
+
+        // Boxed path: same reconciliation, and the same tier split as
+        // the fast path (the partition does not depend on the executor).
+        let sink = TraceSink::new(TraceConfig::default());
+        let boxed_ledger = {
+            let _g = obs::install(&sink, 99, None);
+            exe.run_boxed(&inputs).unwrap().1
+        };
+        let snap = sink.snapshot();
+        let (plain, shm, global) = snap.launch_tier_counts();
+        assert_eq!(
+            (plain, shm, global),
+            (boxed_ledger.tier_plain, boxed_ledger.tier_shm, boxed_ledger.tier_global),
+            "{name} boxed path"
+        );
+        assert_eq!(plain + shm + global, boxed_ledger.generated);
+
+        let (_, fast_ledger) = replay_fast(exe, &module, 2, 1);
+        assert_eq!(
+            (fast_ledger.tier_plain, fast_ledger.tier_shm, fast_ledger.tier_global),
+            (boxed_ledger.tier_plain, boxed_ledger.tier_shm, boxed_ledger.tier_global),
+            "{name}: boxed and fast paths agree on the tier split"
+        );
+    }
+}
+
+#[test]
+fn profile_collects_with_sink_disabled() {
+    let (module, compiled) = lower("LR");
+    let exe = compiled.executable.as_ref().unwrap();
+    let sink = TraceSink::new(TraceConfig { enabled: false, capacity_per_worker: 64 });
+    let ledger = {
+        let _g = obs::install(&sink, 0, Some(compiled.profile.clone()));
+        let inputs = inputs_for(&module, 1);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut arena = ExecArena::default();
+        let mut out = Vec::new();
+        exe.run_into(&refs, &mut arena, &mut out).unwrap()
+    };
+    assert_eq!(sink.snapshot().events.len(), 0, "disabled sink records no spans");
+    let prof = compiled.profile.snapshot();
+    assert_eq!(prof.total_launches(), ledger.generated, "profile still measures every launch");
+    for (_, g) in prof.groups() {
+        assert!(g.measured_us.count() > 0);
+        assert!(g.modeled_us > 0.0, "compile-time seeding attaches the modeled cost");
+    }
+}
+
+#[test]
+fn serving_trace_covers_every_category_and_reconciles() {
+    use fusion_stitching::hlo::{GraphBuilder, Shape};
+
+    let dir = TempDir::new("obs-serve");
+    const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+
+    let mut b = GraphBuilder::new("entry");
+    let x = b.param("x", Shape::f32(&[4, 3]));
+    let e = b.exp(x);
+    let t = b.tanh(e);
+    let module = Module::new("served", b.finish(t));
+
+    let sink = TraceSink::new(TraceConfig::default());
+    let cfg = ServerConfig {
+        artifact: "double".into(),
+        batch: 4,
+        in_elems_per_request: 3,
+        out_elems_per_request: 3,
+        input_dims: vec![4, 3],
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+        compile: Some(CompileOptions {
+            module,
+            mode: FusionMode::FusionStitching,
+            pipeline: PipelineConfig::default(),
+            use_stitched_backend: true,
+        }),
+        trace: Some(sink.clone()),
+    };
+    let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
+    for i in 0..8 {
+        let (out, _) = srv.infer(vec![0.1 * i as f32; 3]).unwrap();
+        let want = (0.1f32 * i as f32).exp().tanh();
+        assert!((out[0] - want).abs() < 1e-6);
+    }
+    let stats = srv.shutdown().unwrap();
+    let snap = sink.snapshot();
+
+    // The request lifecycle leaves at least one span in every category:
+    // queue wait, batch assembly, compile (one cold + hits), the cold
+    // compile's pass children, the VM launch, and the reply.
+    for cat in SpanCat::ALL {
+        assert!(
+            snap.count_by_cat(cat) > 0,
+            "no {} spans in {} events",
+            cat.label(),
+            snap.events.len()
+        );
+    }
+    // One queue span per served request; one reply span per batch.
+    assert_eq!(snap.count_by_cat(SpanCat::Queue), stats.requests);
+    assert_eq!(snap.count_by_cat(SpanCat::Reply), stats.batches);
+    // Launch spans reconcile with the ledger's tier counters.
+    let (plain, shm, global) = snap.launch_tier_counts();
+    assert_eq!(plain + shm + global, stats.launches.generated);
+    assert_eq!(
+        (plain, shm, global),
+        (stats.launches.tier_plain, stats.launches.tier_shm, stats.launches.tier_global)
+    );
+    // The adopted kernel profile measured the same launches.
+    let profile = stats.profile.expect("stitched serving adopts the module profile");
+    assert_eq!(profile.snapshot().total_launches(), stats.launches.generated);
+    // Nothing overflowed at this traffic volume.
+    assert_eq!(snap.dropped, 0);
+}
