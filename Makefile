@@ -1,6 +1,6 @@
 # Convenience targets; everything also works via plain cargo / python.
 
-.PHONY: build test bench bench-launches bench-serving bench-fusion bench-vm bench-global bench-profile artifacts doc
+.PHONY: build test bench bench-launches bench-serving bench-fusion bench-vm bench-global bench-profile bench-autotune artifacts doc
 
 build:
 	cargo build --release
@@ -46,6 +46,13 @@ bench-global:
 # root. Full runs gate enabled overhead at <= 5% and disabled at ~0%.
 bench-profile:
 	BENCH_SMOKE=1 cargo bench --bench profile_overhead
+
+# Feedback-directed autotuning bench (smoke mode): per-epoch oracle
+# divergence on all six models (must shrink as measured write-backs
+# land) plus a live-pool hot-swap leg (zero request errors across the
+# swap); writes BENCH_autotune_convergence.json at the repo root.
+bench-autotune:
+	BENCH_SMOKE=1 cargo bench --bench autotune_convergence
 
 doc:
 	cargo doc --no-deps

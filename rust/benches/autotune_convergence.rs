@@ -1,0 +1,359 @@
+//! Feedback-directed autotuning bench — the convergence acceptance gate.
+//!
+//! Two legs, both landing in `BENCH_autotune_convergence.json`:
+//!
+//! - **convergence** — replays all six Table 2 models on the stitched VM
+//!   for several measurement epochs. Before each epoch the cost oracle
+//!   is rebuilt from the perf library's measured store; after it, the
+//!   epoch's wall-clock samples are written back. The per-epoch
+//!   divergence (mean `|ln(oracle_estimate / measured_p50)|` over the
+//!   launched groups) must *shrink*: epoch 0 compares the analytic GPU
+//!   model against CPU-VM wall time (large), later epochs compare the
+//!   measured overlay against fresh samples (noise floor).
+//! - **hot_swap** — a live serving pool with the autotune thread armed
+//!   and a seeded model/measurement contradiction: the background
+//!   re-explore must swap the served module mid-traffic at least once
+//!   with zero failed or rejected requests.
+//!
+//! Smoke mode (`BENCH_SMOKE=1`, used by `make bench-autotune` and CI)
+//! shrinks epochs/replays and reports without gating — short runs on
+//! noisy shared runners cannot hold the convergence bound honestly.
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::metrics::trimmed_stats;
+use fusion_stitching::coordinator::pipeline::geomean;
+use fusion_stitching::coordinator::server::CompileOptions;
+use fusion_stitching::coordinator::{
+    compile_module, AutotuneConfig, CompiledModule, FusionMode, PipelineConfig, PoolConfig,
+    ServerConfig, ServingPool, SharedCompileService,
+};
+use fusion_stitching::exec::ExecArena;
+use fusion_stitching::hlo::{GraphBuilder, Module, ReduceKind, Shape};
+use fusion_stitching::models;
+use fusion_stitching::obs::{
+    self, Json, KernelProfile, KernelProfileHandle, TraceConfig, TraceSink,
+};
+use fusion_stitching::schedule::{CostOracle, MeasuredCost, PerfLibrary};
+use fusion_stitching::testutil::TempDir;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Identity-ish artifact so the pool's engine has something to parse;
+/// batches execute on the stitched backend, never on this text.
+const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+
+fn fill(n: usize, seed: u64) -> Vec<f32> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 1000) as f32) / 1000.0 - 0.5
+        })
+        .collect()
+}
+
+fn inputs_for(module: &Module, seed: u64) -> Vec<Vec<f32>> {
+    module
+        .entry
+        .parameters()
+        .into_iter()
+        .enumerate()
+        .map(|(k, id)| {
+            let elems = module.entry.get(id).shape.num_elements() as usize;
+            fill(elems, seed + k as u64)
+        })
+        .collect()
+}
+
+/// Mean `|ln(estimate / measured_p50)|` over the groups this epoch
+/// actually launched and priced — the scalar the curve is made of.
+fn epoch_divergence(oracle: &MeasuredCost, snap: &KernelProfile) -> Option<f64> {
+    let mut sum = 0.0;
+    let mut n = 0usize;
+    for (fp, g) in snap.groups() {
+        if g.launches == 0 || g.modeled_us <= 0.0 {
+            continue;
+        }
+        let (_, p50, _) = trimmed_stats(g.measured_us.samples());
+        if p50 <= 0.0 {
+            continue;
+        }
+        let est = oracle.group_cost_us(fp, g.modeled_us).max(1e-9);
+        sum += (est / p50).ln().abs();
+        n += 1;
+    }
+    if n > 0 {
+        Some(sum / n as f64)
+    } else {
+        None
+    }
+}
+
+/// See `tests/autotune.rs`: the modeled-optimal plan keeps the wide
+/// elementwise producer out of the scalar-rooted reduce group, so a
+/// contradiction in the measured store forces a visibly different plan.
+fn swap_module() -> Module {
+    let mut b = GraphBuilder::new("entry");
+    let x = b.param("x", Shape::f32(&[1024, 256]));
+    let e = b.exp(x);
+    let r = b.reduce(e, &[0, 1], ReduceKind::Sum);
+    let t = b.tanh(r);
+    Module::new("swapdemo", b.finish(t))
+}
+
+fn contradiction(artifact: &CompiledModule, wall_us: f64) -> KernelProfile {
+    let seeded = artifact.profile.snapshot();
+    let mut fed = KernelProfile::default();
+    for (fp, g) in seeded.groups() {
+        for _ in 0..16 {
+            fed.record_launch(fp, g.tier, g.modeled_us, wall_us, 0, 0);
+        }
+    }
+    fed
+}
+
+struct ModelCurve {
+    name: &'static str,
+    groups: usize,
+    curve: Vec<(f64, usize)>, // (divergence, override count) per epoch
+}
+
+struct SwapResult {
+    requests: u64,
+    errors: u64,
+    rejected: usize,
+    generations: u64,
+    swap_wait_ms: f64,
+}
+
+/// Serve one module through a pool with the autotuner armed until the
+/// hot swap lands (or the deadline passes), then keep serving to prove
+/// the swapped module answers traffic.
+fn run_hot_swap_leg() -> SwapResult {
+    let dir = TempDir::new("autotune-bench");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).expect("artifact write");
+
+    let module = swap_module();
+    let in_elems = 1024 * 256;
+    let cfg = ServerConfig {
+        artifact: "double".into(),
+        batch: 1,
+        in_elems_per_request: in_elems,
+        out_elems_per_request: 1,
+        input_dims: vec![1024, 256],
+        policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) },
+        compile: Some(CompileOptions {
+            module: module.clone(),
+            mode: FusionMode::FusionStitching,
+            pipeline: PipelineConfig::default(),
+            use_stitched_backend: true,
+        }),
+        trace: None,
+    };
+
+    let service = Arc::new(SharedCompileService::new(PipelineConfig::default()));
+    let (base, _) =
+        service.compile(&module, FusionMode::FusionStitching).expect("warmup compile");
+    assert!(base.executable.is_some(), "stitched serving needs a lowered module");
+    assert!(service.absorb_profile(&contradiction(&base, 1e9)) > 0);
+
+    // min_launches = MAX keeps the live write-back from diluting the
+    // seeded contradiction mid-bench; the swap itself is the point here.
+    let pool = ServingPool::start_with_service(
+        dir.path(),
+        cfg,
+        PoolConfig {
+            workers: 2,
+            queue_depth: 16,
+            autotune: Some(AutotuneConfig {
+                interval: Duration::from_millis(5),
+                min_launches: u64::MAX,
+            }),
+        },
+        service.clone(),
+    )
+    .expect("pool start");
+
+    let input = vec![0.25f32; in_elems];
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs(30);
+    let mut requests = 0u64;
+    let mut errors = 0u64;
+    while service.generation() == 0 && Instant::now() < deadline {
+        if pool.infer_keyed(requests, input.clone()).is_err() {
+            errors += 1;
+        }
+        requests += 1;
+    }
+    let swap_wait_ms = t0.elapsed().as_secs_f64() * 1e3;
+    for k in 0..16u64 {
+        if pool.infer_keyed(1000 + k, input.clone()).is_err() {
+            errors += 1;
+        }
+        requests += 1;
+    }
+
+    let generations = service.generation();
+    let stats = pool.shutdown().expect("clean shutdown");
+    SwapResult { requests, errors, rejected: stats.aggregate.rejected, generations, swap_wait_ms }
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok() || std::env::args().any(|a| a == "--smoke");
+    let (epochs, replays) = if smoke { (3usize, 12usize) } else { (6, 40) };
+    let mode_name = if smoke { "smoke" } else { "full" };
+    println!(
+        "== feedback-directed autotuning: oracle convergence + hot swap \
+         ({mode_name}, {epochs} epochs x {replays} replays) =="
+    );
+
+    // Leg 1: measured write-back shrinks the oracle's divergence.
+    let mut curves: Vec<ModelCurve> = Vec::new();
+    for (meta, module) in models::all_benchmarks() {
+        let mut cfg = PipelineConfig::default();
+        cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        let mut lib = PerfLibrary::new(cfg.deep.device.clone());
+        let compiled = compile_module(&module, FusionMode::FusionStitching, &mut lib, &cfg)
+            .unwrap_or_else(|e| panic!("{}: compile failed: {e:#}", meta.name));
+        let exe = compiled
+            .executable
+            .clone()
+            .unwrap_or_else(|| panic!("{}: did not lower: {:?}", meta.name, compiled.exec_error));
+        let inputs = inputs_for(&module, 42);
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+        let mut cumulative = KernelProfile::default();
+        let mut curve = Vec::new();
+        for _ in 0..epochs {
+            // The oracle the compiler would use *right now*, from the
+            // samples written back so far (epoch 0: pure model).
+            let oracle = MeasuredCost::from_library(&lib);
+            let epoch_profile = KernelProfileHandle::new();
+            {
+                let sink = TraceSink::new(TraceConfig::default());
+                let _g = obs::install(&sink, 0, Some(epoch_profile.clone()));
+                let mut arena = ExecArena::default();
+                let mut out = Vec::new();
+                for _ in 0..replays {
+                    exe.run_into(&refs, &mut arena, &mut out).expect("replay failed");
+                }
+            }
+            let snap = epoch_profile.snapshot();
+            let d = epoch_divergence(&oracle, &snap).unwrap_or(0.0);
+            curve.push((d, oracle.override_count()));
+            // Write back: the *cumulative* profile carries the monotone
+            // launch counts the library's high-water absorb keys on.
+            cumulative.merge(&snap);
+            lib.absorb_profile(&cumulative);
+        }
+        let shown: Vec<String> = curve.iter().map(|(d, _)| format!("{d:.3}")).collect();
+        println!(
+            "{:<8} {:>2} groups  divergence/epoch: [{}]",
+            meta.name,
+            compiled.plan.generated_kernel_count(&module.entry),
+            shown.join(", ")
+        );
+        curves.push(ModelCurve {
+            name: meta.name,
+            groups: compiled.plan.generated_kernel_count(&module.entry),
+            curve,
+        });
+    }
+
+    let first_geo = geomean(curves.iter().map(|c| c.curve[0].0.max(1e-6)));
+    let last_geo = geomean(curves.iter().map(|c| c.curve[epochs - 1].0.max(1e-6)));
+    let converged = last_geo < first_geo;
+    println!(
+        "geomean divergence: epoch 0 = {first_geo:.3}, epoch {} = {last_geo:.3} \
+         ({})",
+        epochs - 1,
+        if converged { "shrinks" } else { "DID NOT SHRINK" }
+    );
+
+    // Leg 2: hot swap under live traffic.
+    let swap = run_hot_swap_leg();
+    println!(
+        "hot swap: {} requests, {} errors, {} rejected, {} swap(s), first swap after {:.0} ms",
+        swap.requests, swap.errors, swap.rejected, swap.generations, swap.swap_wait_ms
+    );
+
+    let swap_ok = swap.generations >= 1 && swap.errors == 0 && swap.rejected == 0;
+    let pass = converged && swap_ok;
+
+    let mut j = Json::new();
+    j.begin_obj();
+    j.field_str("bench", "autotune_convergence");
+    j.field_bool("smoke", smoke);
+    j.field_uint("epochs", epochs as u64);
+    j.field_uint("replays_per_epoch", replays as u64);
+    j.key("models").begin_arr();
+    for c in &curves {
+        j.begin_obj();
+        j.field_str("model", c.name);
+        j.field_uint("generated_kernels", c.groups as u64);
+        j.key("divergence_per_epoch").begin_arr();
+        for (d, overrides) in &c.curve {
+            j.begin_obj();
+            j.field_num("divergence", *d);
+            j.field_uint("oracle_overrides", *overrides as u64);
+            j.end_obj();
+        }
+        j.end_arr();
+        j.field_num("first_divergence", c.curve[0].0);
+        j.field_num("last_divergence", c.curve[epochs - 1].0);
+        j.end_obj();
+    }
+    j.end_arr();
+    j.field_num("geomean_first_divergence", first_geo);
+    j.field_num("geomean_last_divergence", last_geo);
+    j.key("hot_swap")
+        .begin_obj()
+        .field_uint("requests", swap.requests)
+        .field_uint("errors", swap.errors)
+        .field_uint("rejected", swap.rejected as u64)
+        .field_uint("generations", swap.generations)
+        .field_num("first_swap_ms", swap.swap_wait_ms)
+        .field_bool("pass", swap_ok)
+        .end_obj();
+    j.key("gate")
+        .begin_obj()
+        .field_bool("converged", converged)
+        .field_bool("enforced", !smoke)
+        .field_bool("pass", pass)
+        .end_obj();
+    j.end_obj();
+    let json = j.finish();
+
+    let out_path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => PathBuf::from(dir).join("..").join("BENCH_autotune_convergence.json"),
+        Err(_) => PathBuf::from("BENCH_autotune_convergence.json"),
+    };
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out_path.display()),
+    }
+
+    if !pass {
+        if smoke {
+            eprintln!(
+                "NOTE: gate not met (smoke mode, not gated): converged={converged} \
+                 swap_ok={swap_ok}"
+            );
+        } else {
+            eprintln!(
+                "FAIL: autotune gate: converged={converged} \
+                 (geomean {first_geo:.3} -> {last_geo:.3}), swap_ok={swap_ok} \
+                 ({} swaps, {} errors, {} rejected)",
+                swap.generations, swap.errors, swap.rejected
+            );
+            std::process::exit(1);
+        }
+    }
+}

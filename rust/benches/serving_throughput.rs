@@ -130,7 +130,7 @@ fn run_one(dir: &std::path::Path, workers: usize, requests: usize) -> Measuremen
     let pool = ServingPool::start(
         dir,
         server_config(),
-        PoolConfig { workers, queue_depth: 64 },
+        PoolConfig { workers, queue_depth: 64, autotune: None },
     )
     .expect("pool start");
     let keys = client_keys(&pool, CLIENTS);

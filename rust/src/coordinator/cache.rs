@@ -207,6 +207,29 @@ impl CompileCache {
         self.map.insert(key, Entry { value, last_used: AtomicU64::new(tick) });
     }
 
+    /// Replace the artifact under `key` in place — the hot-swap path.
+    /// Displacing a resident artifact counts as an *eviction* (the old
+    /// module leaves residency), never as a miss: no lookup failed, so
+    /// hit-rate dashboards must not dip when autotuning swaps a module.
+    pub fn replace(&mut self, key: CacheKey, value: Arc<CompiledModule>) {
+        let tick = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.map.contains_key(&key) {
+            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+        } else if self.map.len() >= self.capacity {
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, entry)| entry.last_used.load(Ordering::Relaxed))
+                .map(|(k, _)| k.clone())
+            {
+                self.map.remove(&victim);
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        self.stats.insertions.fetch_add(1, Ordering::Relaxed);
+        self.map.insert(key, Entry { value, last_used: AtomicU64::new(tick) });
+    }
+
     /// Drop every resident artifact. Each dropped entry counts as an
     /// eviction, and the hit/miss/insertion counters *survive* — a
     /// clear resets residency, not history, so hit-rate dashboards stay
@@ -356,8 +379,14 @@ pub struct SharedCompileService {
     compiler: Mutex<CompilerState>,
     cfg: PipelineConfig,
     /// Cold pipeline runs actually executed (≤ misses under
-    /// contention — the single-flight test gates on this).
+    /// contention — the single-flight test gates on this). Background
+    /// autotune recompiles count here exactly once each.
     cold_compiles: AtomicU64,
+    /// Bumped on every successful hot-swap
+    /// ([`SharedCompileService::reexplore_and_swap`]). Serving workers
+    /// watch this to invalidate per-worker derived state (resolved
+    /// stitched backends) without any lock on the hit path.
+    generation: AtomicU64,
 }
 
 impl SharedCompileService {
@@ -373,6 +402,7 @@ impl SharedCompileService {
             compiler: Mutex::new(CompilerState { lib, last_trace: None }),
             cfg,
             cold_compiles: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
         }
     }
 
@@ -473,6 +503,84 @@ impl SharedCompileService {
 
     pub fn cache_len(&self) -> usize {
         self.cache.read().expect("cache poisoned").len()
+    }
+
+    /// The hot-swap generation: how many times
+    /// [`Self::reexplore_and_swap`] replaced a resident module.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Relaxed)
+    }
+
+    /// Write a measured launch-span snapshot back into the perf
+    /// library's persistent measured store (keyed by device-signed group
+    /// fingerprint). Returns how many *new* launches the snapshot
+    /// contributed; absorbing the same snapshot twice is a no-op.
+    pub fn absorb_profile(&self, profile: &crate::obs::KernelProfile) -> u64 {
+        let mut state = self.compiler.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        state.lib.absorb_profile(profile)
+    }
+
+    /// Monotone counter of measured write-back activity (total launches
+    /// absorbed across all groups) — the autotune loop's cheap "is there
+    /// anything new to act on?" gate.
+    pub fn measured_epoch(&self) -> u64 {
+        let state = self.compiler.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        state.lib.measured_epoch()
+    }
+
+    /// Fetch the resident artifact for `module`/`mode` without touching
+    /// the hit/miss counters (the autotune loop polls with this).
+    pub fn probe(&self, module: &Module, mode: FusionMode) -> Option<Arc<CompiledModule>> {
+        let key = CacheKey::new(module, mode, &self.cfg);
+        self.cache.read().expect("cache poisoned").probe(&key)
+    }
+
+    /// Feedback-directed recompile + atomic hot-swap.
+    ///
+    /// Re-runs the full pipeline with
+    /// [`crate::schedule::CostSource::Measured`] — exploration consults
+    /// the perf library's wall-clock overlays instead of trusting the
+    /// analytic model — and, when the refined plan's
+    /// [`crate::fusion::FusionPlan::digest`] differs from the resident
+    /// artifact's, atomically replaces the cache entry *under the
+    /// original modeled key* and bumps the generation. Serving workers
+    /// pick the new module up on their next batch; in-flight batches
+    /// finish on the `Arc` they already hold, so nothing blocks or
+    /// drops.
+    ///
+    /// Returns `Ok(None)` when there is nothing to do (no resident
+    /// artifact, no measured data yet, or the measured plan is
+    /// unchanged); `Ok(Some(new))` after a swap.
+    pub fn reexplore_and_swap(
+        &self,
+        module: &Module,
+        mode: FusionMode,
+    ) -> crate::Result<Option<Arc<CompiledModule>>> {
+        let key = CacheKey::new(module, mode, &self.cfg);
+        let Some(current) = self.cache.read().expect("cache poisoned").probe(&key) else {
+            return Ok(None);
+        };
+        let mut measured_cfg = self.cfg.clone();
+        measured_cfg.cost_source = crate::schedule::CostSource::Measured;
+        let artifact = {
+            let mut state =
+                self.compiler.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            if state.lib.measured_len() == 0 {
+                return Ok(None); // no wall-clock feedback to act on yet
+            }
+            self.cold_compiles.fetch_add(1, Ordering::Relaxed);
+            let (compiled, trace) = compile_module_traced(module, mode, &mut state.lib, &measured_cfg)?;
+            state.last_trace = Some(trace);
+            Arc::new(compiled)
+        };
+        if artifact.plan.digest() == current.plan.digest() {
+            return Ok(None); // measured feedback agrees with the resident plan
+        }
+        // Swap under the *modeled* key: serving lookups keep using the
+        // unchanged key and atomically start receiving the new module.
+        self.cache.write().expect("cache poisoned").replace(key, artifact.clone());
+        self.generation.fetch_add(1, Ordering::Relaxed);
+        Ok(Some(artifact))
     }
 
     /// Drop every resident artifact (see [`CompileCache::clear`] for
@@ -649,6 +757,58 @@ mod tests {
         }
         assert_eq!(svc.cold_compiles(), 4);
         assert_eq!(svc.cache_len(), 4);
+    }
+
+    #[test]
+    fn replace_counts_eviction_not_miss() {
+        let svc = SharedCompileService::new(PipelineConfig::default());
+        let m = tiny_module(8);
+        let (artifact, _) = svc.compile(&m, FusionMode::FusionStitching).unwrap();
+        let key = CacheKey::new(&m, FusionMode::FusionStitching, svc.config());
+        let before = svc.stats();
+        svc.cache.write().unwrap().replace(key, artifact.clone());
+        let after = svc.stats();
+        assert_eq!(after.evictions, before.evictions + 1, "swap displaces the old artifact");
+        assert_eq!(after.misses, before.misses, "a swap is not a lookup failure");
+        assert_eq!(after.insertions, before.insertions + 1);
+        assert_eq!(svc.cache_len(), 1);
+    }
+
+    #[test]
+    fn reexplore_without_measured_data_is_a_no_op() {
+        let svc = SharedCompileService::new(PipelineConfig::default());
+        let m = tiny_module(8);
+        svc.compile(&m, FusionMode::FusionStitching).unwrap();
+        assert_eq!(svc.cold_compiles(), 1);
+        let swapped = svc.reexplore_and_swap(&m, FusionMode::FusionStitching).unwrap();
+        assert!(swapped.is_none());
+        assert_eq!(svc.cold_compiles(), 1, "no measured data → no background recompile");
+        assert_eq!(svc.generation(), 0);
+    }
+
+    #[test]
+    fn reexplore_with_agreeing_measurements_recompiles_once_without_swap() {
+        let svc = SharedCompileService::new(PipelineConfig::default());
+        let m = tiny_module(8);
+        let (artifact, _) = svc.compile(&m, FusionMode::FusionStitching).unwrap();
+        // Wall-clock samples that agree with the model: the measured
+        // re-explore must reach the same plan and swap nothing.
+        let seeded = artifact.profile.snapshot();
+        let mut fed = crate::obs::KernelProfile::default();
+        for (fp, g) in seeded.groups() {
+            for _ in 0..16 {
+                fed.record_launch(fp, g.tier, g.modeled_us, g.modeled_us.max(1.0), 0, 0);
+            }
+        }
+        assert!(svc.absorb_profile(&fed) > 0, "write-back must land");
+        let before = svc.stats();
+        let swapped = svc.reexplore_and_swap(&m, FusionMode::FusionStitching).unwrap();
+        assert!(swapped.is_none(), "agreeing measurements must not change the plan");
+        assert_eq!(svc.cold_compiles(), 2, "exactly one background recompile");
+        assert_eq!(svc.generation(), 0);
+        let after = svc.stats();
+        assert_eq!(after.misses, before.misses, "background recompile bypasses miss counting");
+        assert_eq!(after.evictions, before.evictions);
     }
 
     #[test]

@@ -27,11 +27,15 @@ use crate::codegen::emitter::emit_group;
 use crate::codegen::KernelPlan;
 use crate::exec::{lower_to_exec, StitchedExecutable};
 use crate::fusion::{
-    deep_fusion, explore_fusion, xla_baseline_fusion, ExploreStats, FusionPlan, GroupKind,
+    deep_fusion_with_oracle, explore_fusion_with_oracle, xla_baseline_fusion, ExploreStats,
+    FusionPlan, GroupKind,
 };
 use crate::gpusim::executor::{simulate_module, ModuleTiming, SimKernel};
 use crate::hlo::{fingerprint_module, Computation, Fingerprint, InstrId, Module, Opcode};
-use crate::schedule::{tune, PerfLibrary, Schedule, TunedPlan, TuningConfig};
+use crate::schedule::{
+    tune, CostOracle, CostSource, MeasuredCost, ModeledCost, PerfLibrary, Schedule, TunedPlan,
+    TuningConfig,
+};
 use anyhow::anyhow;
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -143,6 +147,18 @@ impl PassManager {
         };
         let mut trace = PassTrace::default();
 
+        // Resolve the cost seam once for the whole compile: the analytic
+        // model, or a measured overlay snapshot of the perf library's
+        // launch-span write-backs (the serving pool's autotune path).
+        let measured;
+        let oracle: &dyn CostOracle = match cfg.cost_source {
+            CostSource::Modeled => &ModeledCost,
+            CostSource::Measured => {
+                measured = MeasuredCost::from_library(lib);
+                &measured
+            }
+        };
+
         for &pass in &self.passes {
             let before = self.units(pass, &st, comp, true);
             let t0 = Instant::now();
@@ -153,7 +169,9 @@ impl PassManager {
                 Pass::Fusion => {
                     st.plan = Some(match mode {
                         FusionMode::XlaBaseline => xla_baseline_fusion(comp),
-                        FusionMode::FusionStitching => deep_fusion(comp, lib, &cfg.deep).0,
+                        FusionMode::FusionStitching => {
+                            deep_fusion_with_oracle(comp, lib, &cfg.deep, oracle).0
+                        }
                     });
                 }
                 Pass::FusionExplore => {
@@ -162,7 +180,8 @@ impl PassManager {
                             .plan
                             .take()
                             .ok_or_else(|| anyhow!("fusion-explore needs the fusion pass"))?;
-                        let (refined, stats) = explore_fusion(comp, &plan, lib, &cfg.deep);
+                        let (refined, stats) =
+                            explore_fusion_with_oracle(comp, &plan, lib, &cfg.deep, oracle);
                         st.plan = Some(refined);
                         st.explore = Some(stats);
                     }
@@ -380,13 +399,14 @@ fn tuned_key(
 pub(crate) fn config_digest(cfg: &PipelineConfig) -> u64 {
     crate::schedule::perf_library::fnv1a(
         format!(
-            "{:?}|{:?}|{}|{:?}|xf{}|gs{}",
+            "{:?}|{:?}|{}|{:?}|xf{}|gs{}|cs{:?}",
             cfg.deep.tuning,
             cfg.deep.elementwise,
             cfg.lib_efficiency,
             cfg.deep.device,
             cfg.deep.cost_fusion as u8,
-            cfg.deep.global_stitch as u8
+            cfg.deep.global_stitch as u8,
+            cfg.cost_source
         )
         .as_bytes(),
     )

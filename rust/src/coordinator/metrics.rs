@@ -241,6 +241,14 @@ impl StreamingSummary {
         ps.iter().map(|&p| percentile_of_sorted(&sorted, p)).collect()
     }
 
+    /// The raw reservoir — every retained sample, in arrival order.
+    /// The perf library's measured write-back store min-k-merges these
+    /// per fused group, and the divergence report derives its trimmed
+    /// spread from them.
+    pub fn samples(&self) -> &[f64] {
+        &self.reservoir
+    }
+
     /// Fold `other` into `self` (pool shutdown merges worker summaries).
     /// Exact moments combine exactly. When the combined reservoirs
     /// exceed [`SUMMARY_RESERVOIR`], each side's share of the merged
@@ -279,6 +287,22 @@ impl StreamingSummary {
         merged.extend(take_strided(&other.reservoir, want_other));
         self.reservoir = merged;
     }
+}
+
+/// Outlier-trimmed (min, p50, max) of a sample set: sort a copy, drop
+/// `len/8` from each end, report the spread of what remains. The same
+/// trim rule the perf library's measured estimates use, exposed here so
+/// the divergence report and the `obs` CLI describe samples the way the
+/// autotuner consumes them. Returns zeros on an empty set.
+pub fn trimmed_stats(samples: &[f64]) -> (f64, f64, f64) {
+    if samples.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let trim = sorted.len() / 8;
+    let kept = &sorted[trim..sorted.len() - trim];
+    (kept[0], kept[kept.len() / 2], kept[kept.len() - 1])
 }
 
 #[cfg(test)]
@@ -387,6 +411,20 @@ mod tests {
         assert!(light_slots <= 16, "light worker holds {light_slots}/512 slots");
         // percentiles stay in the heavy worker's range
         assert!(heavy.percentile_us(50.0) >= 1000.0);
+    }
+
+    #[test]
+    fn trimmed_stats_drop_the_tails() {
+        assert_eq!(trimmed_stats(&[]), (0.0, 0.0, 0.0));
+        assert_eq!(trimmed_stats(&[5.0]), (5.0, 5.0, 5.0));
+        // 16 samples: one crazy outlier each side gets trimmed (16/8 = 2)
+        let mut v: Vec<f64> = (0..14).map(|i| 10.0 + i as f64).collect();
+        v.push(0.001);
+        v.push(9999.0);
+        let (min, p50, max) = trimmed_stats(&v);
+        assert!(min >= 10.0, "low outlier must be trimmed, got {min}");
+        assert!(max <= 23.0, "high outlier must be trimmed, got {max}");
+        assert!((10.0..=23.0).contains(&p50));
     }
 
     #[test]

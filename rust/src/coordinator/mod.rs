@@ -31,5 +31,5 @@ pub use cache::{CacheKey, CacheStats, CompileCache, CompileService, SharedCompil
 pub use driver::{compile_module_traced, Pass, PassManager};
 pub use metrics::{PassRecord, PassTrace, StreamingSummary};
 pub use pipeline::{compile_module, evaluate, CompiledModule, FusionMode, ModuleReport, PipelineConfig};
-pub use pool::{PoolConfig, ServingPool, ServingStats};
+pub use pool::{AutotuneConfig, PoolConfig, ServingPool, ServingStats};
 pub use server::{CompileBackend, CompileOptions, ServerConfig, ServingCoordinator, WorkerStats};

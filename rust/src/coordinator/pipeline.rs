@@ -31,11 +31,21 @@ pub struct PipelineConfig {
     pub deep: DeepFusionConfig,
     /// Fraction of peak the vendor library achieves (cuBLAS/cuDNN class).
     pub lib_efficiency: f64,
+    /// Which [`crate::schedule::CostOracle`] fusion consumes: the
+    /// analytic model (default, bit-identical to the historical path) or
+    /// the measured overlay built from the perf library's launch-span
+    /// write-backs — the serving pool's background re-explore compiles
+    /// with `Measured`.
+    pub cost_source: crate::schedule::CostSource,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { deep: DeepFusionConfig::default(), lib_efficiency: 0.70 }
+        PipelineConfig {
+            deep: DeepFusionConfig::default(),
+            lib_efficiency: 0.70,
+            cost_source: crate::schedule::CostSource::Modeled,
+        }
     }
 }
 

@@ -35,10 +35,34 @@ use super::server::{run_worker, CompileBackend, ServerConfig, WorkerStats};
 use crate::runtime::Engine;
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Feedback-directed autotuning knobs (the `serve --autotune` path).
+///
+/// A background thread periodically writes the served module's measured
+/// launch times back into the shared service's perf library and, when
+/// the measured picture changed, re-runs cost-guided exploration under
+/// the measured oracle ([`SharedCompileService::reexplore_and_swap`]).
+/// A changed plan hot-swaps atomically: workers pick the new module up
+/// on their next batch, in-flight batches finish on the old one.
+#[derive(Debug, Clone)]
+pub struct AutotuneConfig {
+    /// How often the write-back/re-explore step wakes up.
+    pub interval: Duration,
+    /// Minimum launches a profile snapshot must carry before it is
+    /// written back (avoids steering on a handful of noisy samples).
+    pub min_launches: u64,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> Self {
+        AutotuneConfig { interval: Duration::from_millis(50), min_launches: 8 }
+    }
+}
 
 /// Pool sizing and backpressure knobs.
 #[derive(Debug, Clone)]
@@ -47,11 +71,14 @@ pub struct PoolConfig {
     pub workers: usize,
     /// Bound of each worker's request queue — the backpressure window.
     pub queue_depth: usize,
+    /// Run the feedback-directed autotuning thread (requires
+    /// [`ServerConfig::compile`]; ignored without it).
+    pub autotune: Option<AutotuneConfig>,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        PoolConfig { workers: 0, queue_depth: 64 }
+        PoolConfig { workers: 0, queue_depth: 64, autotune: None }
     }
 }
 
@@ -80,6 +107,9 @@ pub struct ServingStats {
     /// single-flight this stays at one per distinct module no matter
     /// how many workers raced on it.
     pub cold_compiles: Option<u64>,
+    /// The shared service's hot-swap generation: how many times the
+    /// autotuner replaced the served module (`None` without a service).
+    pub generation: Option<u64>,
 }
 
 impl ServingStats {
@@ -111,6 +141,9 @@ impl ServingStats {
         if let Some(cold) = self.cold_compiles {
             j.field_uint("cold_compiles", cold);
         }
+        if let Some(generation) = self.generation {
+            j.field_uint("generation", generation);
+        }
         j.end_obj();
     }
 
@@ -130,6 +163,7 @@ impl ServingStats {
             aggregate: stats,
             cache: None,
             cold_compiles: None,
+            generation: None,
         }
     }
 }
@@ -141,6 +175,8 @@ pub struct ServingPool {
     live: Vec<Arc<Mutex<WorkerStats>>>,
     cfg: ServerConfig,
     service: Option<Arc<SharedCompileService>>,
+    autotune_stop: Option<Arc<AtomicBool>>,
+    autotune_thread: Option<JoinHandle<()>>,
 }
 
 impl ServingPool {
@@ -234,7 +270,47 @@ impl ServingPool {
         for _ in 0..n {
             ready_rx.recv().map_err(|_| anyhow!("worker died during startup"))??;
         }
-        Ok(ServingPool { txs, workers, live, cfg, service })
+        // Feedback loop: a background thread writes measured launch
+        // times back into the perf library and re-explores under the
+        // measured oracle; a changed plan hot-swaps via the cache
+        // generation (workers re-resolve on their next batch).
+        let (autotune_stop, autotune_thread) = match (&pool.autotune, &service, &cfg.compile) {
+            (Some(at), Some(svc), Some(opts)) => {
+                let stop = Arc::new(AtomicBool::new(false));
+                let tstop = stop.clone();
+                let tsvc = svc.clone();
+                let module = opts.module.clone();
+                let mode = opts.mode;
+                let at = at.clone();
+                let handle = std::thread::spawn(move || {
+                    let mut seen_epoch = 0u64;
+                    while !tstop.load(Ordering::Relaxed) {
+                        std::thread::sleep(at.interval);
+                        if tstop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        // Write-back: fold the resident module's launch
+                        // spans into the library's measured entries.
+                        if let Some(current) = tsvc.probe(&module, mode) {
+                            let snap = current.profile.snapshot();
+                            if snap.total_launches() >= at.min_launches {
+                                tsvc.absorb_profile(&snap);
+                            }
+                        }
+                        // Re-explore only when the measured picture
+                        // actually moved since the last pass.
+                        let epoch = tsvc.measured_epoch();
+                        if epoch != 0 && epoch != seen_epoch {
+                            seen_epoch = epoch;
+                            let _ = tsvc.reexplore_and_swap(&module, mode);
+                        }
+                    }
+                });
+                (Some(stop), Some(handle))
+            }
+            _ => (None, None),
+        };
+        Ok(ServingPool { txs, workers, live, cfg, service, autotune_stop, autotune_thread })
     }
 
     pub fn config(&self) -> &ServerConfig {
@@ -337,12 +413,19 @@ impl ServingPool {
             aggregate,
             cache: service.map(SharedCompileService::stats),
             cold_compiles: service.map(SharedCompileService::cold_compiles),
+            generation: service.map(SharedCompileService::generation),
         }
     }
 
     /// Stop accepting requests, drain every shard, and return the
     /// final statistics.
     pub fn shutdown(self) -> Result<ServingStats> {
+        if let Some(stop) = &self.autotune_stop {
+            stop.store(true, Ordering::Relaxed);
+        }
+        if let Some(handle) = self.autotune_thread {
+            handle.join().map_err(|_| anyhow!("autotune thread panicked"))?;
+        }
         drop(self.txs);
         let mut per_worker = Vec::with_capacity(self.workers.len());
         for worker in self.workers {
@@ -451,7 +534,7 @@ ENTRY main {
         let p = ServingPool::start(
             dir.path(),
             cfg,
-            PoolConfig { workers: 1, queue_depth: 2 },
+            PoolConfig { workers: 1, queue_depth: 2, autotune: None },
         )
         .unwrap();
         // Flood one shard with try_send: the bounded queue must refuse

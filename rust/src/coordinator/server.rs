@@ -297,6 +297,15 @@ impl CompileBackend {
             CompileBackend::Shared(svc) => svc.last_trace(),
         }
     }
+
+    /// The hot-swap generation of the shared service (None for the
+    /// legacy backend, which never swaps modules underneath a worker).
+    fn generation(&self) -> Option<u64> {
+        match self {
+            CompileBackend::Legacy(_) => None,
+            CompileBackend::Shared(svc) => Some(svc.generation()),
+        }
+    }
 }
 
 /// Check a compiled artifact's executable against the serving
@@ -369,6 +378,10 @@ pub(crate) fn run_worker(
     // when requested (and signature-compatible).
     let mut stitched: Option<Arc<StitchedExecutable>> = None;
     let mut stitched_rejected = false;
+    // Hot-swap watch: the shared service bumps its generation when the
+    // background autotuner replaces the cached module; this worker then
+    // re-resolves its stitched executable from the fresh artifact.
+    let mut seen_generation: u64 = 0;
     // Pooled per-worker execution state: the batch-assembly buffer, the
     // planned value arena and the output buffer all live for the
     // worker's lifetime, so the steady-state serving path performs zero
@@ -417,6 +430,21 @@ pub(crate) fn run_worker(
                             t0,
                             Instant::now(),
                         );
+                        // Hot-swap invalidation: a generation bump means
+                        // the artifact this batch just fetched is a new
+                        // module — drop the resolved executable (and the
+                        // stale rejection verdict) so it re-resolves
+                        // below. Batches already executing elsewhere
+                        // finish on the old Arc; nothing blocks or drops.
+                        if let Some(generation) = svc.generation() {
+                            if generation != seen_generation {
+                                seen_generation = generation;
+                                stitched = None;
+                                stitched_rejected = false;
+                                stats.profile = Some(plan.profile.clone());
+                                crate::obs::set_profile(plan.profile.clone());
+                            }
+                        }
                         // Adopt the compiled module's kernel profile:
                         // launch spans below feed measured times into it.
                         if stats.profile.is_none() {

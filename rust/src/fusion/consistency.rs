@@ -14,7 +14,7 @@
 use crate::codegen::shm_planner::{plan_shared_memory, ShmError};
 use crate::gpusim::DeviceConfig;
 use crate::hlo::{Computation, InstrId};
-use crate::schedule::{tune, PerfLibrary, TunedPlan, TuningConfig};
+use crate::schedule::{tune_with_oracle, CostOracle, ModeledCost, PerfLibrary, TunedPlan, TuningConfig};
 use std::collections::HashSet;
 
 /// The checker owns the tuning resources shared across fusion decisions.
@@ -22,6 +22,9 @@ pub struct ScheduleConsistencyChecker<'a> {
     pub lib: &'a mut PerfLibrary,
     pub tuning: TuningConfig,
     pub dev: DeviceConfig,
+    /// The cost seam every estimate below routes through
+    /// ([`crate::schedule::oracle`]); [`ModeledCost`] by default.
+    pub oracle: &'a dyn CostOracle,
     /// Statistics: how many candidates the shared-memory feedback path
     /// rejected (visible in reports).
     pub shm_rejections: usize,
@@ -35,10 +38,23 @@ pub struct ScheduleConsistencyChecker<'a> {
 
 impl<'a> ScheduleConsistencyChecker<'a> {
     pub fn new(lib: &'a mut PerfLibrary, tuning: TuningConfig, dev: DeviceConfig) -> Self {
+        Self::with_oracle(lib, tuning, dev, &ModeledCost)
+    }
+
+    /// A checker whose cost estimates route through `oracle` (the
+    /// measured re-explore path); [`Self::new`] is this with
+    /// [`ModeledCost`].
+    pub fn with_oracle(
+        lib: &'a mut PerfLibrary,
+        tuning: TuningConfig,
+        dev: DeviceConfig,
+        oracle: &'a dyn CostOracle,
+    ) -> Self {
         ScheduleConsistencyChecker {
             lib,
             tuning,
             dev,
+            oracle,
             shm_rejections: 0,
             schedule_rejections: 0,
             profit_rejections: 0,
@@ -56,7 +72,7 @@ impl<'a> ScheduleConsistencyChecker<'a> {
         plan: &TunedPlan,
     ) -> f64 {
         let desc = crate::codegen::kernel_plan::fused_kernel_desc(comp, members, plan);
-        crate::gpusim::cost::kernel_time_us(&desc, &self.dev)
+        self.oracle.kernel_time_us(&desc, &self.dev)
     }
 
     /// Estimated cost of launching `id` as its own kernel (its tuned
@@ -66,10 +82,16 @@ impl<'a> ScheduleConsistencyChecker<'a> {
             return c;
         }
         let members: HashSet<InstrId> = [id].into_iter().collect();
-        let exec = tune(comp, &members, &[id], self.lib, &self.tuning)
+        let exec = tune_with_oracle(comp, &members, &[id], self.lib, &self.tuning, self.oracle)
             .map(|p| p.est_exec_us)
             .unwrap_or_else(|| {
-                self.lib.lookup(comp, id, crate::schedule::Schedule::fallback(), 128)
+                self.oracle.schedule_cost_us(
+                    self.lib,
+                    comp,
+                    id,
+                    crate::schedule::Schedule::fallback(),
+                    128,
+                )
             });
         let cost = exec + self.dev.launch_overhead_us;
         self.singleton_cost.insert(id, cost);
@@ -137,7 +159,8 @@ impl<'a> ScheduleConsistencyChecker<'a> {
         members: &HashSet<InstrId>,
         roots: &[InstrId],
     ) -> Option<TunedPlan> {
-        let plan = match tune(comp, members, roots, self.lib, &self.tuning) {
+        let plan = match tune_with_oracle(comp, members, roots, self.lib, &self.tuning, self.oracle)
+        {
             Some(p) => p,
             None => {
                 self.schedule_rejections += 1;

@@ -14,7 +14,7 @@ use crate::analysis::{FramePartition, SpanAnalysis};
 use crate::codegen::shm_planner::plan_shared_memory;
 use crate::gpusim::DeviceConfig;
 use crate::hlo::{Computation, InstrId, Opcode};
-use crate::schedule::{PerfLibrary, TuningConfig};
+use crate::schedule::{CostOracle, ModeledCost, PerfLibrary, TuningConfig};
 use std::collections::HashSet;
 
 /// Deep-fusion configuration.
@@ -75,10 +75,26 @@ pub fn deep_fusion(
     lib: &mut PerfLibrary,
     cfg: &DeepFusionConfig,
 ) -> (FusionPlan, DeepFusionStats) {
+    deep_fusion_with_oracle(comp, lib, cfg, &ModeledCost)
+}
+
+/// [`deep_fusion`] with every cost estimate routed through `oracle` —
+/// the serving path's measured re-explore runs this with a
+/// [`crate::schedule::MeasuredCost`] overlay.
+pub fn deep_fusion_with_oracle(
+    comp: &Computation,
+    lib: &mut PerfLibrary,
+    cfg: &DeepFusionConfig,
+    oracle: &dyn CostOracle,
+) -> (FusionPlan, DeepFusionStats) {
     let spans = SpanAnalysis::run(comp);
     let frames = FramePartition::build(comp);
-    let mut checker =
-        ScheduleConsistencyChecker::new(lib, cfg.tuning.clone(), cfg.device.clone());
+    let mut checker = ScheduleConsistencyChecker::with_oracle(
+        lib,
+        cfg.tuning.clone(),
+        cfg.device.clone(),
+        oracle,
+    );
     let mut stats = DeepFusionStats::default();
 
     let mut claimed: HashSet<InstrId> = HashSet::new();
@@ -287,7 +303,7 @@ fn finalize(
             let mut desc =
                 crate::codegen::kernel_plan::fused_kernel_desc(comp, &fused, &plan);
             desc.smem_bytes = smem_bytes;
-            stats.modeled_fused_us += crate::gpusim::cost::kernel_time_us(&desc, &checker.dev);
+            stats.modeled_fused_us += checker.oracle.kernel_time_us(&desc, &checker.dev);
             stats.modeled_unfused_us += fused
                 .iter()
                 .filter(|&&id| !comp.get(id).opcode.is_free())

@@ -36,10 +36,9 @@ use super::plan::{FusionPlan, GroupKind};
 use crate::analysis::SpanAnalysis;
 use crate::codegen::kernel_plan::fused_kernel_desc;
 use crate::codegen::shm_planner::{plan_shared_memory, plan_shared_memory_spill};
-use crate::gpusim::cost::kernel_time_us;
 use crate::gpusim::DeviceConfig;
 use crate::hlo::{Computation, InstrId, Opcode};
-use crate::schedule::{tune, PerfLibrary, TuningConfig};
+use crate::schedule::{tune_with_oracle, CostOracle, ModeledCost, PerfLibrary, TuningConfig};
 use std::collections::{BTreeSet, HashMap, HashSet};
 
 /// Bound on refinement rounds: each round retries merges and splits over
@@ -146,6 +145,9 @@ struct Explorer<'a> {
     cfg_sig: u64,
     dev: DeviceConfig,
     global_stitch: bool,
+    /// Cost seam: the analytic model, or a measured overlay during the
+    /// serving pool's feedback-directed re-explore.
+    oracle: &'a dyn CostOracle,
     stats: ExploreStats,
     /// In-process cache: fingerprint → modeled cost (INFINITY when the
     /// grouping is unschedulable).
@@ -153,7 +155,7 @@ struct Explorer<'a> {
 }
 
 impl<'a> Explorer<'a> {
-    fn new(lib: &'a mut PerfLibrary, cfg: &DeepFusionConfig) -> Self {
+    fn new(lib: &'a mut PerfLibrary, cfg: &DeepFusionConfig, oracle: &'a dyn CostOracle) -> Self {
         // The modeled cost depends on the tuning space AND on the
         // device the pipeline models with (`cfg.device`), which need
         // not be the device the library was constructed under — so the
@@ -169,6 +171,7 @@ impl<'a> Explorer<'a> {
             cfg_sig: sig,
             dev: cfg.device.clone(),
             global_stitch: cfg.global_stitch,
+            oracle,
             stats: ExploreStats::default(),
             cache: HashMap::new(),
         }
@@ -188,14 +191,25 @@ impl<'a> Explorer<'a> {
         if let Some(&v) = self.cache.get(&fp) {
             return v;
         }
-        let key = format!("xg{:016x}|t{:016x}", fp, self.cfg_sig);
+        // The cost-source tag (`m` for the model, `w<epoch>` for a
+        // measured overlay) is part of the memo identity: a verdict
+        // reached under measured feedback must not be replayed by a
+        // purely modeled compile, and each write-back epoch re-evaluates
+        // rather than inheriting stale overlays.
+        let key = format!(
+            "xg{:016x}|t{:016x}|c{}",
+            fp,
+            self.cfg_sig,
+            self.oracle.source_tag()
+        );
         if let Some(v) = self.lib.explore_lookup(&key) {
             self.stats.memo_hits += 1;
             self.cache.insert(fp, v);
             return v;
         }
         let roots = roots_of(comp, members);
-        let v = match tune(comp, members, &roots, self.lib, &self.tuning) {
+        let modeled = match tune_with_oracle(comp, members, &roots, self.lib, &self.tuning, self.oracle)
+        {
             Some(plan) if self.global_stitch => {
                 let shm = plan_shared_memory_spill(comp, members, &roots, &plan, &self.dev);
                 let mut desc = fused_kernel_desc(comp, members, &plan);
@@ -208,17 +222,26 @@ impl<'a> Explorer<'a> {
                     desc.bytes_read += bytes;
                     desc.bytes_written += bytes;
                 }
-                kernel_time_us(&desc, &self.dev) + shm.spilled.len() as f64 * GLOBAL_FENCE_US
+                self.oracle.kernel_time_us(&desc, &self.dev)
+                    + shm.spilled.len() as f64 * GLOBAL_FENCE_US
             }
             Some(plan) => match plan_shared_memory(comp, members, &roots, &plan, &self.dev) {
                 Ok(shm) => {
                     let mut desc = fused_kernel_desc(comp, members, &plan);
                     desc.smem_bytes = shm.total_bytes;
-                    kernel_time_us(&desc, &self.dev)
+                    self.oracle.kernel_time_us(&desc, &self.dev)
                 }
                 Err(_) => f64::INFINITY,
             },
             None => f64::INFINITY,
+        };
+        // Measured overlay applies at group granularity (that is the
+        // unit the VM launches and times); unschedulable groupings stay
+        // infinite no matter what was measured.
+        let v = if modeled.is_finite() {
+            self.oracle.group_cost_us(fp, modeled)
+        } else {
+            modeled
         };
         self.lib.explore_insert(&key, v);
         self.cache.insert(fp, v);
@@ -265,8 +288,23 @@ pub fn explore_fusion(
     lib: &mut PerfLibrary,
     cfg: &DeepFusionConfig,
 ) -> (FusionPlan, ExploreStats) {
+    explore_fusion_with_oracle(comp, plan, lib, cfg, &ModeledCost)
+}
+
+/// [`explore_fusion`] with every group cost routed through `oracle`.
+/// The serving pool's background autotune step re-runs this with a
+/// [`crate::schedule::MeasuredCost`] overlay built from launch-span
+/// write-backs, then hot-swaps the compiled module when the refined
+/// plan differs.
+pub fn explore_fusion_with_oracle(
+    comp: &Computation,
+    plan: &FusionPlan,
+    lib: &mut PerfLibrary,
+    cfg: &DeepFusionConfig,
+    oracle: &dyn CostOracle,
+) -> (FusionPlan, ExploreStats) {
     let spans = SpanAnalysis::run(comp);
-    let mut ex = Explorer::new(lib, cfg);
+    let mut ex = Explorer::new(lib, cfg, oracle);
 
     // Working set: every non-library group (library calls are pinned —
     // they are the roofs fusion may not cross). `None` = merged away.

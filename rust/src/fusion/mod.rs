@@ -23,6 +23,6 @@ pub mod plan;
 
 pub use baseline::xla_baseline_fusion;
 pub use consistency::ScheduleConsistencyChecker;
-pub use deep::{deep_fusion, DeepFusionConfig, DeepFusionStats};
-pub use explore::{explore_fusion, group_fingerprint, ExploreStats};
+pub use deep::{deep_fusion, deep_fusion_with_oracle, DeepFusionConfig, DeepFusionStats};
+pub use explore::{explore_fusion, explore_fusion_with_oracle, group_fingerprint, ExploreStats};
 pub use plan::{FusionGroup, FusionPlan, GroupKind};

@@ -110,6 +110,44 @@ impl FusionPlan {
         self.groups.iter().filter(|g| g.kind == GroupKind::Library).count()
     }
 
+    /// Order-independent identity of the partition itself: an FNV digest
+    /// over every group's sorted member and root ids (kind excluded — it
+    /// is derived from membership). Two plans partitioning the same
+    /// computation the same way share a digest regardless of group
+    /// numbering; the serving pool's hot-swap step compares digests to
+    /// decide whether a measured re-explore actually changed the plan.
+    pub fn digest(&self) -> u64 {
+        use crate::schedule::perf_library::{fnv1a_fold, FNV_SEED};
+        fn mix(h: u64, v: u64) -> u64 {
+            fnv1a_fold(h, &v.to_le_bytes())
+        }
+        let mut groups: Vec<(Vec<u64>, Vec<u64>)> = self
+            .groups
+            .iter()
+            .map(|g| {
+                let mut m: Vec<u64> = g.members.iter().map(|id| id.0 as u64).collect();
+                m.sort_unstable();
+                let mut r: Vec<u64> = g.roots.iter().map(|id| id.0 as u64).collect();
+                r.sort_unstable();
+                (m, r)
+            })
+            .collect();
+        groups.sort();
+        let mut h = FNV_SEED;
+        for (members, roots) in groups {
+            h = mix(h, 0x67); // group marker
+            h = mix(h, members.len() as u64);
+            for v in members {
+                h = mix(h, v);
+            }
+            h = mix(h, roots.len() as u64);
+            for v in roots {
+                h = mix(h, v);
+            }
+        }
+        h
+    }
+
     /// Partition sanity: every non-free instruction in exactly one group,
     /// all groups acyclic w.r.t. each other (no group both feeds and
     /// consumes another). Used by tests and debug assertions.

@@ -1,5 +1,14 @@
 //! Per-kernel analytical cost: a roofline with launch, occupancy and
 //! coalescing terms.
+//!
+//! Since the feedback-directed autotuning PR, no fusion/tuning pass
+//! calls these functions directly: every consumer goes through the
+//! [`crate::schedule::CostOracle`] seam, for which this module is the
+//! default ([`crate::schedule::ModeledCost`]) answer. Measured
+//! wall-clock overlays ([`crate::schedule::MeasuredCost`]) replace
+//! these estimates per fused group where the serving path has written
+//! back enough samples — the model remains the authority for cold
+//! fingerprints and per-(op, schedule) lookups.
 
 use super::device::DeviceConfig;
 

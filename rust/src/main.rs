@@ -4,8 +4,10 @@
 //! fusion-stitching report [--perf-lib <path>] [--no-cost-fusion]
 //! fusion-stitching compile <model|file.hlo> [--mode baseline|stitching] [--ir] [--no-cost-fusion]
 //! fusion-stitching corpus [--models N]               # Fig. 1 percentile table
-//! fusion-stitching serve [--requests N] [--demo] [--trace-out t.json] [--prom-out m.prom]
-//! fusion-stitching obs [--model NAME|--all] [--runs N] [--trace-out t.json] [--prom-out m.prom]
+//! fusion-stitching serve [--requests N] [--demo] [--workers N] [--autotune]
+//!                        [--trace-out t.json] [--prom-out m.prom]
+//! fusion-stitching obs [--model NAME|--all] [--runs N] [--replay-into-library]
+//!                      [--trace-out t.json] [--prom-out m.prom]
 //! ```
 //!
 //! `serve --trace-out` arms the flight recorder
@@ -16,9 +18,18 @@
 //! benchmark models, replays them under the recorder, and prints the
 //! modeled-vs-measured divergence per fused group.
 //!
+//! `serve --autotune` runs the feedback loop: a background thread
+//! writes measured VM launch times back into the perf library and
+//! re-explores fusion under the measured cost oracle, hot-swapping the
+//! served module when the plan changes. `obs --replay-into-library`
+//! does the offline equivalent — it folds the replayed profile into the
+//! perf library's measured entries (persist with `--perf-lib`).
+//!
 //! `--no-cost-fusion` disables the cost-guided fusion-exploration pass
 //! (merge/split refinement of the greedy plan), reverting to pure
-//! greedy deep fusion.
+//! greedy deep fusion. `--autotune` still measures and writes back
+//! under `--no-cost-fusion`, but without the exploration pass a
+//! re-explore cannot change the greedy plan, so no swap ever fires.
 //!
 //! (Hand-rolled argument parsing: the offline image carries no clap.)
 
@@ -49,8 +60,10 @@ fn main() {
                  \x20 serve    — NMT online-serving demo over the PJRT runtime\n\
                  \x20            [--demo] serves a built-in module (no `make artifacts` needed)\n\
                  \x20            [--trace-out t.json] [--prom-out m.prom] arm the flight recorder\n\
+                 \x20            [--autotune] measured write-back + re-explore + hot-swap\n\
                  \x20 obs      — offline kernel profiler: replay benchmark models under the\n\
-                 \x20            flight recorder, report modeled-vs-measured divergence"
+                 \x20            flight recorder, report modeled-vs-measured divergence\n\
+                 \x20            [--replay-into-library] fold measured times into --perf-lib"
             );
             2
         }
@@ -287,7 +300,13 @@ fn cmd_serve(args: &[String]) -> i32 {
     let dir = PathBuf::from(flag_value(args, "--artifacts-dir").unwrap_or("artifacts"));
     // --workers N routes through the sharded ServingPool (N=0: one per
     // available core); absent, the single-worker coordinator serves.
-    let workers: Option<usize> = flag_value(args, "--workers").and_then(|v| v.parse().ok());
+    let mut workers: Option<usize> = flag_value(args, "--workers").and_then(|v| v.parse().ok());
+    // --autotune arms the feedback loop; it lives on the pool, so the
+    // flag alone implies a one-worker pool.
+    let autotune = args.iter().any(|a| a == "--autotune");
+    if autotune && workers.is_none() {
+        workers = Some(1);
+    }
     // Arm the flight recorder only when an export was requested: the
     // per-launch record path is cheap but not free.
     let trace_out = flag_value(args, "--trace-out").map(str::to_string);
@@ -361,7 +380,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     if let Some(n) = workers {
-        return serve_pool(&dir, cfg, n, requests, sink, trace_out, prom_out);
+        return serve_pool(&dir, cfg, n, autotune, requests, sink, trace_out, prom_out);
     }
     let srv = match ServingCoordinator::start(&dir, cfg.clone()) {
         Ok(s) => s,
@@ -430,16 +449,21 @@ fn serve_pool(
     dir: &std::path::Path,
     cfg: fusion_stitching::coordinator::ServerConfig,
     workers: usize,
+    autotune: bool,
     requests: usize,
     sink: Option<std::sync::Arc<fusion_stitching::obs::TraceSink>>,
     trace_out: Option<String>,
     prom_out: Option<String>,
 ) -> i32 {
     use fusion_stitching::coordinator::metrics::{throughput_rps, StreamingSummary};
-    use fusion_stitching::coordinator::{PoolConfig, ServingPool};
+    use fusion_stitching::coordinator::{AutotuneConfig, PoolConfig, ServingPool};
 
     let (in_elems, batch) = (cfg.in_elems_per_request, cfg.batch);
-    let pool_cfg = PoolConfig { workers, ..PoolConfig::default() };
+    let pool_cfg = PoolConfig {
+        workers,
+        autotune: autotune.then(AutotuneConfig::default),
+        ..PoolConfig::default()
+    };
     let pool = match ServingPool::start(dir, cfg, pool_cfg) {
         Ok(p) => p,
         Err(e) => {
@@ -483,6 +507,11 @@ fn serve_pool(
             "shared compile cache: {} hits / {} misses, {} cold pipeline runs (single-flight)",
             cache.hits, cache.misses, cold
         );
+    }
+    if let Some(generation) = stats.generation {
+        if generation > 0 {
+            println!("autotune: hot-swapped the served module {generation} time(s)");
+        }
     }
     write_observability(sink.as_ref(), trace_out.as_deref(), prom_out.as_deref(), &stats);
     0
@@ -564,20 +593,25 @@ fn print_divergence(stats: &fusion_stitching::coordinator::ServingStats) {
     if snap.is_empty() {
         return;
     }
-    println!("== modeled vs measured, per fused group ==");
+    println!("== modeled vs measured, per fused group (worst divergence first) ==");
     println!(
-        "{:<16}   {:>6} {:>9} {:>12} {:>12} {:>7}",
-        "fingerprint", "tier", "launches", "modeled_us", "measured_us", "ratio"
+        "{:<16}   {:>6} {:>9} {:>12} {:>12} {:>7} {:>7} {:>10} {:>10} {:>10}",
+        "fingerprint", "tier", "launches", "modeled_us", "measured_us", "ratio", "samples",
+        "tmin_us", "tp50_us", "tmax_us"
     );
     for row in snap.divergence() {
         println!(
-            "{:016x}   {:>6} {:>9} {:>12.3} {:>12.3} {:>7.2}",
+            "{:016x}   {:>6} {:>9} {:>12.3} {:>12.3} {:>7.2} {:>7} {:>10.3} {:>10.3} {:>10.3}",
             row.fp,
             tier_label(row.tier),
             row.launches,
             row.modeled_us,
             row.measured_mean_us,
-            row.ratio
+            row.ratio,
+            row.samples,
+            row.trimmed_min_us,
+            row.trimmed_p50_us,
+            row.trimmed_max_us
         );
     }
 }
@@ -669,19 +703,48 @@ fn cmd_obs(args: &[String]) -> i32 {
         );
         for row in snap.divergence() {
             println!(
-                "  {:016x} {:>6} x{:<5} modeled {:>9.3} us, measured {:>9.3} us, ratio {:.2}",
+                "  {:016x} {:>6} x{:<5} modeled {:>9.3} us, measured {:>9.3} us, ratio {:.2} \
+                 ({} samples, trimmed {:.3}/{:.3}/{:.3} us)",
                 row.fp,
                 fusion_stitching::obs::tier_label(row.tier),
                 row.launches,
                 row.modeled_us,
                 row.measured_mean_us,
-                row.ratio
+                row.ratio,
+                row.samples,
+                row.trimmed_min_us,
+                row.trimmed_p50_us,
+                row.trimmed_max_us
             );
         }
     }
     if profiled == 0 {
         eprintln!("no model profiled (unknown --model name?)");
         return 2;
+    }
+    // --replay-into-library: fold the replayed profile into the perf
+    // library's measured entries, so a later compile (or `serve
+    // --autotune`) starts from these wall-clock samples instead of the
+    // cold analytic model.
+    if args.iter().any(|a| a == "--replay-into-library") {
+        if let Some(profile) = &stats.profile {
+            let snap = profile.snapshot();
+            let absorbed = lib.absorb_profile(&snap);
+            println!(
+                "replayed {} launches into the perf library ({} measured entries)",
+                absorbed,
+                lib.measured_len()
+            );
+        }
+        match flag_value(args, "--perf-lib") {
+            Some(p) => {
+                if let Err(e) = lib.save(std::path::Path::new(p)) {
+                    eprintln!("saving perf library: {e:#}");
+                    return 1;
+                }
+            }
+            None => eprintln!("--replay-into-library without --perf-lib: entries not persisted"),
+        }
     }
     let agg = ServingStats::from_worker(stats);
     write_observability(Some(&sink), trace_out, prom_out, &agg);

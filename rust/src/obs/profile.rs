@@ -58,11 +58,19 @@ pub struct DivergenceRow {
     pub fp: u64,
     pub tier: StitchTier,
     pub launches: u64,
+    /// Retained wall-clock samples backing the trimmed statistics below
+    /// (bounded by the summary's reservoir, ≤ launches).
+    pub samples: u64,
     pub modeled_us: f64,
     pub measured_mean_us: f64,
     /// measured / modeled (0 when either side is missing): >1 means the
     /// cost model is optimistic for this group, <1 pessimistic.
     pub ratio: f64,
+    /// Outlier-trimmed min/median/max of the retained samples (the same
+    /// trim the measured cost oracle applies), 0 when nothing launched.
+    pub trimmed_min_us: f64,
+    pub trimmed_p50_us: f64,
+    pub trimmed_max_us: f64,
 }
 
 /// Bounded map of [`GroupProfile`]s keyed by group fingerprint.
@@ -165,10 +173,13 @@ impl KernelProfile {
         self.groups.values().map(|g| g.launches).sum()
     }
 
-    /// The modeled-vs-measured join, fingerprint-ordered. Groups that
-    /// never launched report a 0 measured mean and ratio.
+    /// The modeled-vs-measured join, worst divergence first (largest
+    /// `|ratio - 1|`; ties and unjoined rows — never launched or never
+    /// priced, ratio 0 — order by fingerprint, unjoined last). Groups
+    /// that never launched report a 0 measured mean and ratio.
     pub fn divergence(&self) -> Vec<DivergenceRow> {
-        self.groups
+        let mut rows: Vec<DivergenceRow> = self
+            .groups
             .iter()
             .map(|(fp, g)| {
                 let measured = g.measured_us.mean_us();
@@ -177,16 +188,32 @@ impl KernelProfile {
                 } else {
                     0.0
                 };
+                let samples = g.measured_us.samples();
+                let (trimmed_min_us, trimmed_p50_us, trimmed_max_us) =
+                    crate::coordinator::metrics::trimmed_stats(samples);
                 DivergenceRow {
                     fp: *fp,
                     tier: g.tier,
                     launches: g.launches,
+                    samples: samples.len() as u64,
                     modeled_us: g.modeled_us,
                     measured_mean_us: measured,
                     ratio,
+                    trimmed_min_us,
+                    trimmed_p50_us,
+                    trimmed_max_us,
                 }
             })
-            .collect()
+            .collect();
+        rows.sort_by(|a, b| {
+            // Unjoined rows (ratio 0) sink below every real divergence.
+            let key = |r: &DivergenceRow| if r.ratio > 0.0 { (r.ratio - 1.0).abs() } else { -1.0 };
+            key(b)
+                .partial_cmp(&key(a))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.fp.cmp(&b.fp))
+        });
+        rows
     }
 
     /// Serialize with the shared JSON writer (stable, fp-ordered).
@@ -200,9 +227,13 @@ impl KernelProfile {
             j.field_str("fp", &format!("{:016x}", row.fp));
             j.field_str("tier", tier_label(row.tier));
             j.field_uint("launches", row.launches);
+            j.field_uint("samples", row.samples);
             j.field_num("modeled_us", row.modeled_us);
             j.field_num("measured_mean_us", row.measured_mean_us);
             j.field_num("ratio", row.ratio);
+            j.field_num("trimmed_min_us", row.trimmed_min_us);
+            j.field_num("trimmed_p50_us", row.trimmed_p50_us);
+            j.field_num("trimmed_max_us", row.trimmed_max_us);
             j.end_obj();
         }
         j.end_arr();
@@ -302,6 +333,22 @@ mod tests {
         }
         assert_eq!(p.len(), PROFILE_MAX_GROUPS);
         assert_eq!(p.dropped_groups(), 5);
+    }
+
+    #[test]
+    fn divergence_sorts_worst_first_with_unjoined_last() {
+        let mut p = KernelProfile::default();
+        p.record_launch(2, StitchTier::Plain, 9.0, 9.0, 0, 0); // ratio 1.0
+        p.record_launch(1, StitchTier::Plain, 2.0, 5.0, 0, 0); // ratio 2.5
+        p.seed(3, StitchTier::Plain, 4.0); // never launched → last
+        let rows = p.divergence();
+        assert_eq!(rows.iter().map(|r| r.fp).collect::<Vec<_>>(), vec![1, 2, 3]);
+        assert_eq!(rows[0].samples, 1);
+        assert!((rows[0].trimmed_min_us - 5.0).abs() < 1e-9);
+        assert!((rows[0].trimmed_p50_us - 5.0).abs() < 1e-9);
+        assert!((rows[0].trimmed_max_us - 5.0).abs() < 1e-9);
+        assert_eq!(rows[2].samples, 0);
+        assert_eq!(rows[2].trimmed_p50_us, 0.0);
     }
 
     #[test]

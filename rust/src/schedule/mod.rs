@@ -12,15 +12,20 @@
 //! - [`predictor`] — the paper's §4.4 future work: a learned model
 //!   predicting kernel time from key features, replacing synchronous
 //!   measurement on library misses.
+//! - [`oracle`] — the [`CostOracle`] seam between every cost consumer
+//!   and the numbers it consumes: the analytic model ([`ModeledCost`])
+//!   or serving-path wall-clock overlays ([`MeasuredCost`]).
 
+pub mod oracle;
 pub mod perf_library;
 pub mod predictor;
 pub mod propagate;
 pub mod spec;
 pub mod tuning;
 
+pub use oracle::{CostOracle, CostSource, MeasuredCost, ModeledCost};
 pub use perf_library::PerfLibrary;
 pub use predictor::PerfPredictor;
 pub use propagate::{propagate, OpSchedule, PropagationResult};
 pub use spec::{SchedType, Schedule};
-pub use tuning::{tune, TunedPlan, TuningConfig};
+pub use tuning::{tune, tune_with_oracle, TunedPlan, TuningConfig};

@@ -1,0 +1,172 @@
+//! The cost oracle — one seam between every fusion/tuning decision and
+//! the latency numbers those decisions stand on.
+//!
+//! The paper's passes (deep fusion §3.2, schedule tuning §4.3, the
+//! explore pass of PR 4) all consume *modeled* cost from
+//! [`crate::gpusim::cost`], and the XLA fusion study (arXiv 2301.13062)
+//! attributes most production mis-fusions to exactly that model error.
+//! [`CostOracle`] turns the five scattered call-sites into one trait:
+//!
+//! - [`ModeledCost`] reproduces today's analytic path bit-for-bit — it
+//!   is the identity overlay, so every pre-existing consumer produces
+//!   byte-identical plans under it (the differential test in
+//!   `tests/autotune.rs` pins this).
+//! - [`MeasuredCost`] overlays per-group wall-clock estimates written
+//!   back from the serving path ([`PerfLibrary`]'s measured store,
+//!   keyed by the device-signed group fingerprint). Groups without
+//!   enough samples fall through to the model, so the measured oracle
+//!   degrades gracefully to the modeled one on cold fingerprints.
+//!
+//! Later tuning work (SIMD tiers, mixed precision, shape buckets) plugs
+//! in as further `CostOracle` impls without touching the passes again.
+
+use super::perf_library::PerfLibrary;
+use super::spec::Schedule;
+use crate::gpusim::cost::{kernel_time_us, KernelDesc};
+use crate::gpusim::DeviceConfig;
+use crate::hlo::{Computation, InstrId};
+use std::collections::HashMap;
+
+/// Where a pipeline run's cost numbers come from. Part of
+/// [`crate::coordinator::PipelineConfig`]; folded into the compile-cache
+/// config digest so modeled and measured compiles never share a cache
+/// entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CostSource {
+    /// The analytic GPU model only — today's behavior, the default.
+    #[default]
+    Modeled,
+    /// Measured per-group wall-clock overlays from the perf library's
+    /// write-back store, falling back to the model where samples are
+    /// missing or too few.
+    Measured,
+}
+
+/// The one cost seam every fusion/tuning consumer queries.
+///
+/// Default methods forward to the analytic paths, so an oracle only
+/// overrides the granularity it actually has data for: the measured
+/// oracle overlays *group* costs (fingerprint-keyed wall clock) while
+/// per-schedule lookups stay modeled — measured samples are per fused
+/// group, not per (op, schedule) pair.
+pub trait CostOracle {
+    /// Cache/memo tag identifying this oracle's data generation: memo
+    /// entries written under one tag are invisible under another, so a
+    /// measured write-back (which bumps the epoch) can never be
+    /// shadowed by a stale modeled verdict.
+    fn source_tag(&self) -> String;
+
+    /// The cost of one fused group: `modeled_us` is what the analytic
+    /// path computed for it; an overlay may replace it.
+    fn group_cost_us(&self, group_fp: u64, modeled_us: f64) -> f64;
+
+    /// Per-(op, schedule) kernel time for the tuner's inner loop.
+    fn schedule_cost_us(
+        &self,
+        lib: &mut PerfLibrary,
+        comp: &Computation,
+        id: InstrId,
+        sched: Schedule,
+        threads: u32,
+    ) -> f64 {
+        lib.lookup(comp, id, sched, threads)
+    }
+
+    /// Raw kernel-descriptor time (the fused-kernel estimate of
+    /// `SchdConsistent` and the explore pass).
+    fn kernel_time_us(&self, desc: &KernelDesc, dev: &DeviceConfig) -> f64 {
+        kernel_time_us(desc, dev)
+    }
+}
+
+/// The analytic model, unchanged: every method is the default identity
+/// path. This is what all pre-existing entry points use.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ModeledCost;
+
+impl CostOracle for ModeledCost {
+    fn source_tag(&self) -> String {
+        "m".to_string()
+    }
+
+    fn group_cost_us(&self, _group_fp: u64, modeled_us: f64) -> f64 {
+        modeled_us
+    }
+}
+
+/// Measured overlay: an owned snapshot of the perf library's per-group
+/// wall-clock estimates (outlier-trimmed means over at least
+/// [`super::perf_library::MEASURED_MIN_SAMPLES`] samples). Owning the
+/// snapshot keeps the oracle usable alongside the `&mut PerfLibrary`
+/// the passes already thread through.
+#[derive(Debug, Clone, Default)]
+pub struct MeasuredCost {
+    overrides: HashMap<u64, f64>,
+    epoch: u64,
+}
+
+impl MeasuredCost {
+    /// Snapshot every group fingerprint with enough samples under the
+    /// library's device signature. The epoch (total measured sample
+    /// count) stamps the source tag so memo entries refresh as new
+    /// samples land.
+    pub fn from_library(lib: &PerfLibrary) -> Self {
+        MeasuredCost { overrides: lib.measured_overrides(), epoch: lib.measured_epoch() }
+    }
+
+    /// Number of group fingerprints this oracle overlays.
+    pub fn override_count(&self) -> usize {
+        self.overrides.len()
+    }
+
+    /// The measured estimate for one group, if this snapshot holds one.
+    pub fn override_for(&self, group_fp: u64) -> Option<f64> {
+        self.overrides.get(&group_fp).copied()
+    }
+}
+
+impl CostOracle for MeasuredCost {
+    fn source_tag(&self) -> String {
+        format!("w{:x}", self.epoch)
+    }
+
+    fn group_cost_us(&self, group_fp: u64, modeled_us: f64) -> f64 {
+        self.overrides.get(&group_fp).copied().unwrap_or(modeled_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_oracle_is_the_identity() {
+        let m = ModeledCost;
+        assert_eq!(m.source_tag(), "m");
+        assert_eq!(m.group_cost_us(0xdead, 42.5), 42.5);
+        let desc = KernelDesc {
+            bytes_read: 1 << 20,
+            bytes_written: 1 << 20,
+            flops: 1 << 20,
+            blocks: 64,
+            threads: 256,
+            smem_bytes: 0,
+            coalescing: 1.0,
+            op_weight: 1.0,
+        };
+        let dev = DeviceConfig::pascal();
+        assert_eq!(m.kernel_time_us(&desc, &dev), kernel_time_us(&desc, &dev));
+    }
+
+    #[test]
+    fn measured_oracle_overlays_and_falls_back() {
+        let mut o = MeasuredCost::default();
+        o.overrides.insert(7, 123.0);
+        o.epoch = 16;
+        assert_eq!(o.group_cost_us(7, 5.0), 123.0);
+        assert_eq!(o.group_cost_us(8, 5.0), 5.0, "unknown fingerprints fall back to the model");
+        assert_eq!(o.source_tag(), "w10");
+        assert_eq!(o.override_for(7), Some(123.0));
+        assert_eq!(o.override_count(), 1);
+    }
+}

@@ -18,13 +18,65 @@ use std::collections::HashMap;
 use std::path::Path;
 
 /// Persistent on-disk format: per-schedule kernel times, whole tuned
-/// group plans keyed by fingerprint-derived keys, and memoized fusion-
-/// exploration group costs.
+/// group plans keyed by fingerprint-derived keys, memoized fusion-
+/// exploration group costs, and measured per-group wall-clock entries
+/// written back from the serving path.
 #[derive(Debug, Default)]
 struct Store {
     entries: HashMap<String, f64>,
     tuned: HashMap<String, TunedPlan>,
     explored: HashMap<String, f64>,
+    measured: HashMap<String, MeasuredEntry>,
+}
+
+/// Wall-clock samples retained per measured group: the k *smallest*.
+/// Timing noise on a shared machine is one-sided (preemption only ever
+/// inflates a sample), so min-k retention is both outlier-robust and —
+/// unlike reservoir or strided subsampling — order-independent:
+/// `min_k(min_k(A) ∪ B) == min_k(A ∪ B)`, which is what makes merges of
+/// concurrent worker write-backs deterministic.
+pub const MEASURED_MAX_SAMPLES: usize = 64;
+
+/// Launches a group must accumulate before its measured estimate is
+/// allowed to override the analytic model (a couple of cold outliers
+/// must not re-steer fusion).
+pub const MEASURED_MIN_SAMPLES: u64 = 8;
+
+/// One group's measured wall-clock record: the write-back side of the
+/// feedback loop ([`crate::schedule::oracle::MeasuredCost`] snapshots
+/// these into per-fingerprint overrides).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredEntry {
+    /// The id-invariant group fingerprint
+    /// ([`crate::fusion::group_fingerprint`]) this entry describes.
+    pub fp: u64,
+    /// Total launches absorbed for this group — the write-back
+    /// high-water mark, and the sample-count gate's denominator.
+    pub count: u64,
+    /// Retained samples, ascending (the `MEASURED_MAX_SAMPLES`
+    /// smallest seen).
+    pub samples_us: Vec<f64>,
+}
+
+impl MeasuredEntry {
+    /// Min-k merge of new samples into the retained set.
+    fn absorb(&mut self, samples_us: &[f64]) {
+        self.samples_us.extend(samples_us.iter().copied().filter(|v| v.is_finite()));
+        self.samples_us.sort_by(|a, b| a.partial_cmp(b).expect("finite samples"));
+        self.samples_us.truncate(MEASURED_MAX_SAMPLES);
+    }
+
+    /// Outlier-trimmed running estimate: the mean of the retained
+    /// samples after dropping `len/8` from each end, available only
+    /// once [`MEASURED_MIN_SAMPLES`] launches accumulated.
+    pub fn estimate_us(&self) -> Option<f64> {
+        if self.count < MEASURED_MIN_SAMPLES || self.samples_us.is_empty() {
+            return None;
+        }
+        let trim = self.samples_us.len() / 8;
+        let kept = &self.samples_us[trim..self.samples_us.len() - trim];
+        Some(kept.iter().sum::<f64>() / kept.len() as f64)
+    }
 }
 
 /// FNV-1a offset basis — the seed every cache/memo key in the pipeline
@@ -104,6 +156,10 @@ impl PerfLibrary {
                             store.explored.insert(key.to_string(), t);
                         }
                     }
+                } else if let Some(rest) = line.strip_prefix("M\t") {
+                    if let Some((key, entry)) = parse_measured_line(rest) {
+                        store.measured.insert(key, entry);
+                    }
                 } else if let Some((k, v)) = line.rsplit_once('\t') {
                     if let Ok(t) = v.parse::<f64>() {
                         store.entries.insert(k.to_string(), t);
@@ -150,6 +206,12 @@ impl PerfLibrary {
         explore_keys.sort();
         for k in explore_keys {
             out.push_str(&format!("E\t{k}\t{}\n", self.store.explored[k]));
+        }
+        let mut measured_keys: Vec<&String> = self.store.measured.keys().collect();
+        measured_keys.sort();
+        for k in measured_keys {
+            out.push_str(&format_measured_line(k, &self.store.measured[k]));
+            out.push('\n');
         }
         std::fs::write(path, out)?;
         Ok(())
@@ -217,6 +279,108 @@ impl PerfLibrary {
     /// How many exploration lookups were answered from the memo.
     pub fn explore_hits(&self) -> u64 {
         self.explore_hits
+    }
+
+    // ---- measured write-back store (feedback-directed autotuning) ----
+
+    /// Inner key of a measured entry — the same `xm{fp:016x}` namespace
+    /// convention the explore memo uses (`xg…`), wrapped in the device
+    /// signature by [`PerfLibrary::sigged`] so a device change reads as
+    /// a miss.
+    fn measured_key(group_fp: u64) -> String {
+        format!("xm{group_fp:016x}")
+    }
+
+    /// This library's device-signed measured-key prefix.
+    fn measured_prefix(&self) -> String {
+        format!("d{:016x}|xm", self.dev_sig)
+    }
+
+    /// Record measured wall-clock samples for one group: min-k merge
+    /// into the retained set, `launches` added to the sample-count gate.
+    pub fn measured_record(&mut self, group_fp: u64, samples_us: &[f64], launches: u64) {
+        let key = self.sigged(&Self::measured_key(group_fp));
+        let entry = self
+            .store
+            .measured
+            .entry(key)
+            .or_insert(MeasuredEntry { fp: group_fp, count: 0, samples_us: Vec::new() });
+        entry.absorb(samples_us);
+        entry.count += launches;
+    }
+
+    /// Absorb a serving-path [`crate::obs::KernelProfile`] snapshot:
+    /// every group whose launch count grew past this library's
+    /// high-water mark contributes its reservoir samples. Idempotent
+    /// per snapshot — re-absorbing the same profile is a no-op, so the
+    /// background autotuner can poll freely. Returns the number of
+    /// newly absorbed launches.
+    pub fn absorb_profile(&mut self, profile: &crate::obs::KernelProfile) -> u64 {
+        let mut absorbed = 0;
+        for (fp, g) in profile.groups() {
+            if g.launches == 0 {
+                continue;
+            }
+            let key = self.sigged(&Self::measured_key(fp));
+            let entry = self
+                .store
+                .measured
+                .entry(key)
+                .or_insert(MeasuredEntry { fp, count: 0, samples_us: Vec::new() });
+            if g.launches <= entry.count {
+                continue;
+            }
+            absorbed += g.launches - entry.count;
+            entry.absorb(g.measured_us.samples());
+            entry.count = g.launches;
+        }
+        absorbed
+    }
+
+    /// The trimmed measured estimate for one group under this device
+    /// (None below the [`MEASURED_MIN_SAMPLES`] gate or on a device
+    /// mismatch).
+    pub fn measured_estimate(&self, group_fp: u64) -> Option<f64> {
+        self.store
+            .measured
+            .get(&self.sigged(&Self::measured_key(group_fp)))
+            .and_then(MeasuredEntry::estimate_us)
+    }
+
+    /// Borrow one group's full measured record (tests, reports).
+    pub fn measured_entry(&self, group_fp: u64) -> Option<&MeasuredEntry> {
+        self.store.measured.get(&self.sigged(&Self::measured_key(group_fp)))
+    }
+
+    /// Measured entries stored under this library's device signature.
+    pub fn measured_len(&self) -> usize {
+        let prefix = self.measured_prefix();
+        self.store.measured.keys().filter(|k| k.starts_with(&prefix)).count()
+    }
+
+    /// The measured-sample epoch: total launches absorbed under this
+    /// device signature. Monotone; stamps the measured oracle's memo
+    /// tag so stale verdicts refresh as new samples land.
+    pub fn measured_epoch(&self) -> u64 {
+        let prefix = self.measured_prefix();
+        self.store
+            .measured
+            .iter()
+            .filter(|(k, _)| k.starts_with(&prefix))
+            .map(|(_, e)| e.count)
+            .sum()
+    }
+
+    /// Every group fingerprint with a gate-passing estimate under this
+    /// device — the snapshot [`crate::schedule::MeasuredCost`] overlays.
+    pub fn measured_overrides(&self) -> HashMap<u64, f64> {
+        let prefix = self.measured_prefix();
+        self.store
+            .measured
+            .iter()
+            .filter(|(k, _)| k.starts_with(&prefix))
+            .filter_map(|(_, e)| e.estimate_us().map(|t| (e.fp, t)))
+            .collect()
     }
 
     /// Number of persisted tuned plans.
@@ -383,6 +547,39 @@ fn parse_tuned_line(rest: &str) -> Option<(String, TunedPlan)> {
         }
     }
     Some((key, TunedPlan { root_schedules, assignment, blocks, threads, est_exec_us }))
+}
+
+// ---------------------------------------------------------------------
+// Measured-entry text (de)serialization
+// ---------------------------------------------------------------------
+//
+// One line per group:
+//   M\t<key>\t<fp:016x>\t<count>\t<samples>
+// where <samples> is the retained min-k sample set, comma-joined in
+// ascending order (`-` when empty).
+
+fn format_measured_line(key: &str, e: &MeasuredEntry) -> String {
+    let samples = if e.samples_us.is_empty() {
+        "-".to_string()
+    } else {
+        e.samples_us.iter().map(f64::to_string).collect::<Vec<_>>().join(",")
+    };
+    format!("M\t{key}\t{:016x}\t{}\t{samples}", e.fp, e.count)
+}
+
+fn parse_measured_line(rest: &str) -> Option<(String, MeasuredEntry)> {
+    let mut f = rest.split('\t');
+    let key = f.next()?.to_string();
+    let fp = u64::from_str_radix(f.next()?, 16).ok()?;
+    let count = f.next()?.parse().ok()?;
+    let samples_text = f.next()?;
+    let mut samples_us = Vec::new();
+    if samples_text != "-" {
+        for s in samples_text.split(',') {
+            samples_us.push(s.parse().ok()?);
+        }
+    }
+    Some((key, MeasuredEntry { fp, count, samples_us }))
 }
 
 /// Build the resource descriptor of a standalone kernel computing `id`
@@ -599,6 +796,110 @@ mod tests {
         let mut lib2 = PerfLibrary::load(&path, DeviceConfig::pascal());
         assert_eq!(lib2.explore_len(), 1);
         assert_eq!(lib2.explore_lookup("xg42"), Some(12.25));
+    }
+
+    #[test]
+    fn measured_roundtrip_keeps_samples() {
+        let dir = crate::testutil::TempDir::new("measured");
+        let path = dir.path().join("perf.tsv");
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        let samples: Vec<f64> = (0..12).map(|i| 10.0 + i as f64).collect();
+        lib.measured_record(0xfeed, &samples, 12);
+        lib.measured_record(0xbeef, &[5.0, 6.0], 2); // below the gate
+        let est = lib.measured_estimate(0xfeed).expect("12 launches pass the gate");
+        assert!(lib.measured_estimate(0xbeef).is_none(), "2 launches stay gated");
+        assert_eq!(lib.measured_len(), 2);
+        assert_eq!(lib.measured_epoch(), 14);
+        lib.save(&path).unwrap();
+
+        let lib2 = PerfLibrary::load(&path, DeviceConfig::pascal());
+        assert_eq!(lib2.measured_len(), 2);
+        assert_eq!(lib2.measured_epoch(), 14);
+        assert_eq!(lib2.measured_estimate(0xfeed), Some(est));
+        let e = lib2.measured_entry(0xfeed).unwrap();
+        assert_eq!(e.count, 12);
+        assert_eq!(e.samples_us, samples, "round-trip keeps every retained sample");
+        let overrides = lib2.measured_overrides();
+        assert_eq!(overrides.len(), 1);
+        assert_eq!(overrides[&0xfeed], est);
+    }
+
+    #[test]
+    fn measured_device_mismatch_reads_as_miss() {
+        let dir = crate::testutil::TempDir::new("measured-dev");
+        let path = dir.path().join("perf.tsv");
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        lib.measured_record(0xfeed, &[1.0; 16], 16);
+        assert!(lib.measured_estimate(0xfeed).is_some());
+        lib.save(&path).unwrap();
+
+        let mut other = DeviceConfig::pascal();
+        other.launch_overhead_us = 9.0;
+        let lib2 = PerfLibrary::load(&path, other);
+        assert!(lib2.measured_estimate(0xfeed).is_none(), "other device must miss");
+        assert_eq!(lib2.measured_len(), 0);
+        assert_eq!(lib2.measured_epoch(), 0);
+        assert!(lib2.measured_overrides().is_empty());
+
+        // the original device still reads its own entries
+        let lib3 = PerfLibrary::load(&path, DeviceConfig::pascal());
+        assert!(lib3.measured_estimate(0xfeed).is_some());
+    }
+
+    #[test]
+    fn measured_merge_is_deterministic() {
+        // Concurrent workers write back the same sample multiset in
+        // arbitrary interleavings; min-k retention must make the final
+        // entry independent of arrival order and partitioning.
+        let all: Vec<f64> = (0..200).map(|i| 100.0 + ((i * 37) % 100) as f64).collect();
+        let mut forward = PerfLibrary::new(DeviceConfig::pascal());
+        for chunk in all.chunks(7) {
+            forward.measured_record(0xabc, chunk, chunk.len() as u64);
+        }
+        let mut backward = PerfLibrary::new(DeviceConfig::pascal());
+        let mut rev = all.clone();
+        rev.reverse();
+        for chunk in rev.chunks(31) {
+            backward.measured_record(0xabc, chunk, chunk.len() as u64);
+        }
+        let (a, b) =
+            (forward.measured_entry(0xabc).unwrap(), backward.measured_entry(0xabc).unwrap());
+        assert_eq!(a, b, "write-back merge must not depend on arrival order");
+        assert_eq!(a.samples_us.len(), MEASURED_MAX_SAMPLES);
+        assert_eq!(forward.measured_estimate(0xabc), backward.measured_estimate(0xabc));
+    }
+
+    #[test]
+    fn measured_estimate_trims_outliers() {
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        // 15 clean samples at ~10µs plus one preempted outlier
+        let mut samples = vec![10.0; 15];
+        samples.push(10_000.0);
+        lib.measured_record(1, &samples, 16);
+        let est = lib.measured_estimate(1).unwrap();
+        assert!((est - 10.0).abs() < 1e-9, "trimmed mean must drop the outlier, got {est}");
+    }
+
+    #[test]
+    fn absorb_profile_is_idempotent_per_snapshot() {
+        use crate::exec::StitchTier;
+        let mut profile = crate::obs::KernelProfile::default();
+        for i in 0..10 {
+            profile.record_launch(0x77, StitchTier::Plain, 2.0, 4.0 + i as f64, 0, 0);
+        }
+        let mut lib = PerfLibrary::new(DeviceConfig::pascal());
+        assert_eq!(lib.absorb_profile(&profile), 10);
+        assert_eq!(lib.measured_epoch(), 10);
+        // the same snapshot again: nothing new to absorb
+        assert_eq!(lib.absorb_profile(&profile), 0);
+        assert_eq!(lib.measured_epoch(), 10);
+        // four more launches: only the delta counts
+        for _ in 0..4 {
+            profile.record_launch(0x77, StitchTier::Plain, 2.0, 4.5, 0, 0);
+        }
+        assert_eq!(lib.absorb_profile(&profile), 4);
+        assert_eq!(lib.measured_epoch(), 14);
+        assert!(lib.measured_estimate(0x77).is_some());
     }
 
     #[test]

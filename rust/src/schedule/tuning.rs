@@ -17,6 +17,7 @@
 //! the valid `blocks` sets of all roots; stage two only scores schedule
 //! combinations whose grid lies in the intersection.
 
+use super::oracle::{CostOracle, ModeledCost};
 use super::perf_library::PerfLibrary;
 use super::propagate::{propagate, OpSchedule, PropagationResult};
 use super::spec::Schedule;
@@ -67,13 +68,29 @@ pub fn tune(
     lib: &mut PerfLibrary,
     cfg: &TuningConfig,
 ) -> Option<TunedPlan> {
+    tune_with_oracle(comp, members, roots, lib, cfg, &ModeledCost)
+}
+
+/// [`tune`] against an explicit [`CostOracle`]: the per-op scoring
+/// lookups route through `oracle.schedule_cost_us`, so a measured
+/// backend can overlay what it has data for while everything else
+/// stays the analytic path. `tune` itself is this with [`ModeledCost`]
+/// — bit-identical to the pre-oracle behavior.
+pub fn tune_with_oracle(
+    comp: &Computation,
+    members: &HashSet<InstrId>,
+    roots: &[InstrId],
+    lib: &mut PerfLibrary,
+    cfg: &TuningConfig,
+    oracle: &dyn CostOracle,
+) -> Option<TunedPlan> {
     if roots.is_empty() {
         return None;
     }
     if roots.len() == 1 {
-        tune_single_root(comp, members, roots[0], lib, cfg)
+        tune_single_root(comp, members, roots[0], lib, cfg, oracle)
     } else {
-        tune_multi_root(comp, members, roots, lib, cfg)
+        tune_multi_root(comp, members, roots, lib, cfg, oracle)
     }
 }
 
@@ -89,13 +106,14 @@ fn tune_single_root(
     root: InstrId,
     lib: &mut PerfLibrary,
     cfg: &TuningConfig,
+    oracle: &dyn CostOracle,
 ) -> Option<TunedPlan> {
     let mut best: Option<TunedPlan> = None;
     for sched in candidate_schedules(comp, root, cfg.max_schedules_per_root) {
         let Ok(prop) = propagate(comp, members, &[(root, sched)]) else {
             continue;
         };
-        score_and_keep(comp, &[(root, sched)], &prop, lib, cfg, &mut best);
+        score_and_keep(comp, &[(root, sched)], &prop, lib, cfg, oracle, &mut best);
     }
     best
 }
@@ -106,6 +124,7 @@ fn tune_multi_root(
     roots: &[InstrId],
     lib: &mut PerfLibrary,
     cfg: &TuningConfig,
+    oracle: &dyn CostOracle,
 ) -> Option<TunedPlan> {
     // No roots → nothing to pair schedules over (also keeps the max()
     // below total, should a future caller bypass `tune`'s own guard).
@@ -163,20 +182,23 @@ fn tune_multi_root(
             let Ok(prop) = propagate(comp, members, &combo) else {
                 continue;
             };
-            score_and_keep(comp, &combo, &prop, lib, cfg, &mut best);
+            score_and_keep(comp, &combo, &prop, lib, cfg, oracle, &mut best);
         }
     }
     best
 }
 
 /// Score one satisfiable plan across thread-candidate sizes, with the
-/// paper's best-so-far pruning, updating `best` in place.
+/// paper's best-so-far pruning, updating `best` in place. Per-op times
+/// come from the oracle's schedule seam (the modeled default is the
+/// perf-library lookup).
 fn score_and_keep(
     comp: &Computation,
     root_schedules: &[(InstrId, Schedule)],
     prop: &PropagationResult,
     lib: &mut PerfLibrary,
     cfg: &TuningConfig,
+    oracle: &dyn CostOracle,
     best: &mut Option<TunedPlan>,
 ) {
     for &threads in &cfg.thread_candidates {
@@ -190,7 +212,7 @@ fn score_and_keep(
                 if comp.get(id).opcode.is_trivially_inlinable() {
                     continue;
                 }
-                total += lib.lookup(comp, id, *s, threads);
+                total += oracle.schedule_cost_us(lib, comp, id, *s, threads);
                 if total >= budget {
                     pruned = true; // §4.3 optimization 2
                     break;

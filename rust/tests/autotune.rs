@@ -1,0 +1,281 @@
+//! Feedback-directed autotuning, end to end:
+//!
+//! - the [`CostOracle`] seam is cost-neutral — every pre-existing
+//!   consumer produces bit-identical plans under [`ModeledCost`], and a
+//!   measured overlay with no samples behaves exactly like the model;
+//! - measured write-backs that contradict the model change the plan:
+//!   `reexplore_and_swap` recompiles under [`CostSource::Measured`] and
+//!   atomically replaces the resident artifact (generation bump,
+//!   eviction-not-miss accounting);
+//! - a live [`ServingPool`] with the autotune thread hot-swaps the
+//!   served module mid-traffic with zero dropped or failed requests.
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::pipeline::compile_module;
+use fusion_stitching::coordinator::server::CompileOptions;
+use fusion_stitching::coordinator::{
+    AutotuneConfig, FusionMode, PipelineConfig, PoolConfig, ServerConfig, ServingPool,
+    SharedCompileService,
+};
+use fusion_stitching::fusion::{
+    deep_fusion, deep_fusion_with_oracle, explore_fusion, explore_fusion_with_oracle,
+};
+use fusion_stitching::hlo::{GraphBuilder, Module, ReduceKind, Shape};
+use fusion_stitching::models;
+use fusion_stitching::obs::KernelProfile;
+use fusion_stitching::schedule::{CostSource, MeasuredCost, ModeledCost, PerfLibrary};
+use fusion_stitching::testutil::TempDir;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Identity-ish artifact so the pool's engine has something to parse;
+/// batches execute on the stitched backend, never on this text.
+const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+
+/// A module whose modeled-optimal plan keeps >= 2 generated kernels:
+/// fusing the wide elementwise producer into the scalar-rooted reduce
+/// group would serialize it onto one block, so the model keeps them
+/// apart — until measured feedback says both standalone kernels are
+/// catastrophically slow.
+fn swap_module() -> Module {
+    let mut b = GraphBuilder::new("entry");
+    let x = b.param("x", Shape::f32(&[1024, 256]));
+    let e = b.exp(x);
+    let r = b.reduce(e, &[0, 1], ReduceKind::Sum); // scalar
+    let t = b.tanh(r);
+    Module::new("swapdemo", b.finish(t))
+}
+
+/// Feed `wall_us` as the measured time of every generated group of a
+/// compiled artifact — enough samples to clear the estimator's minimum.
+fn synthetic_feedback(artifact: &fusion_stitching::coordinator::CompiledModule, wall_us: f64) -> KernelProfile {
+    let seeded = artifact.profile.snapshot();
+    let mut fed = KernelProfile::default();
+    for (fp, g) in seeded.groups() {
+        for _ in 0..16 {
+            fed.record_launch(fp, g.tier, g.modeled_us, wall_us, 0, 0);
+        }
+    }
+    fed
+}
+
+/// The acceptance differential: the refactor routed every cost consumer
+/// through the oracle seam, and under [`ModeledCost`] (the default) the
+/// whole pipeline must be bit-for-bit what the direct calls produced —
+/// same greedy plan, same explore verdicts, same final partition.
+#[test]
+fn modeled_oracle_is_bit_identical_to_the_direct_path() {
+    for (meta, module) in models::all_benchmarks() {
+        let mut cfg = PipelineConfig::default();
+        cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+
+        let mut lib_a = PerfLibrary::new(cfg.deep.device.clone());
+        let (greedy_a, _) = deep_fusion(&module.entry, &mut lib_a, &cfg.deep);
+        let (plan_a, stats_a) = explore_fusion(&module.entry, &greedy_a, &mut lib_a, &cfg.deep);
+
+        let mut lib_b = PerfLibrary::new(cfg.deep.device.clone());
+        let (greedy_b, _) =
+            deep_fusion_with_oracle(&module.entry, &mut lib_b, &cfg.deep, &ModeledCost);
+        let (plan_b, stats_b) =
+            explore_fusion_with_oracle(&module.entry, &greedy_b, &mut lib_b, &cfg.deep, &ModeledCost);
+
+        assert_eq!(greedy_a.digest(), greedy_b.digest(), "{}: greedy plans differ", meta.name);
+        assert_eq!(plan_a.digest(), plan_b.digest(), "{}: explored plans differ", meta.name);
+        assert_eq!(
+            (stats_a.merges_accepted, stats_a.splits_accepted, stats_a.merges_tried, stats_a.splits_tried),
+            (stats_b.merges_accepted, stats_b.splits_accepted, stats_b.merges_tried, stats_b.splits_tried),
+            "{}: explore decisions differ",
+            meta.name
+        );
+        assert_eq!(
+            stats_a.modeled_after_us.to_bits(),
+            stats_b.modeled_after_us.to_bits(),
+            "{}: modeled totals differ",
+            meta.name
+        );
+    }
+}
+
+/// A measured overlay with no samples is the model: compiling under
+/// [`CostSource::Measured`] against an empty perf library must reach
+/// exactly the modeled plan (the oracle only ever *overrides* when a
+/// group has enough wall-clock samples).
+#[test]
+fn empty_measured_overlay_matches_the_model() {
+    let empty = PerfLibrary::new(PipelineConfig::default().deep.device.clone());
+    let overlay = MeasuredCost::from_library(&empty);
+    assert_eq!(overlay.override_count(), 0);
+
+    for (meta, module) in models::all_benchmarks() {
+        let mut cfg = PipelineConfig::default();
+        cfg.deep.fuse_batch_dot = meta.fuse_batch_dot;
+        let mut lib_m = PerfLibrary::new(cfg.deep.device.clone());
+        let modeled =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib_m, &cfg).unwrap();
+
+        let mut measured_cfg = cfg.clone();
+        measured_cfg.cost_source = CostSource::Measured;
+        let mut lib_w = PerfLibrary::new(cfg.deep.device.clone());
+        let measured =
+            compile_module(&module, FusionMode::FusionStitching, &mut lib_w, &measured_cfg)
+                .unwrap();
+
+        assert_eq!(
+            modeled.plan.digest(),
+            measured.plan.digest(),
+            "{}: empty overlay changed the plan",
+            meta.name
+        );
+        assert_eq!(modeled.fingerprint, measured.fingerprint, "{}", meta.name);
+    }
+}
+
+/// Measured feedback that contradicts the model changes the plan: with
+/// both resident kernels reported catastrophically slow, the measured
+/// re-explore accepts the merge the model refused, and the service
+/// swaps the artifact atomically — generation bump, eviction-not-miss.
+#[test]
+fn measured_overrides_change_the_plan_and_hot_swap() {
+    let svc = SharedCompileService::new(PipelineConfig::default());
+    let module = swap_module();
+    let (base, _) = svc.compile(&module, FusionMode::FusionStitching).unwrap();
+    let d0 = base.plan.digest();
+    assert!(
+        base.plan.generated_kernel_count(&module.entry) >= 2,
+        "scenario needs a modeled plan with a rejected merge: {:?}",
+        base.plan.generated_kernel_count(&module.entry)
+    );
+    assert_eq!(svc.cold_compiles(), 1);
+
+    // No feedback yet: the re-explore is a no-op and costs nothing.
+    assert!(svc.reexplore_and_swap(&module, FusionMode::FusionStitching).unwrap().is_none());
+    assert_eq!(svc.cold_compiles(), 1);
+
+    // Wall-clock write-back: every resident kernel measures 1e9 us.
+    let absorbed = svc.absorb_profile(&synthetic_feedback(&base, 1e9));
+    assert!(absorbed > 0, "write-back must absorb the synthetic launches");
+    assert!(svc.measured_epoch() > 0);
+
+    let before = svc.stats();
+    let swapped = svc
+        .reexplore_and_swap(&module, FusionMode::FusionStitching)
+        .unwrap()
+        .expect("contradicting measurements must change the plan");
+    assert_ne!(swapped.plan.digest(), d0, "swap requires a strictly changed plan");
+    assert!(
+        swapped.plan.generated_kernel_count(&module.entry)
+            < base.plan.generated_kernel_count(&module.entry),
+        "measured re-explore should merge the 'slow' kernels"
+    );
+    assert_eq!(svc.generation(), 1);
+    assert_eq!(svc.cold_compiles(), 2, "exactly one background recompile");
+
+    let after = svc.stats();
+    assert_eq!(after.misses, before.misses, "a hot swap is not a lookup failure");
+    assert_eq!(after.evictions, before.evictions + 1, "displaced artifact counts as eviction");
+
+    // The resident artifact under the original key IS the new plan.
+    let resident = svc.probe(&module, FusionMode::FusionStitching).unwrap();
+    assert!(Arc::ptr_eq(&resident, &swapped));
+
+    // Nothing new measured since: the next re-explore converges (the
+    // measured plan is already resident, digest unchanged, no swap).
+    assert!(svc.reexplore_and_swap(&module, FusionMode::FusionStitching).unwrap().is_none());
+    assert_eq!(svc.generation(), 1);
+}
+
+/// The live gate: a serving pool under continuous traffic hot-swaps the
+/// module mid-serve — every request before, during and after the swap
+/// answers successfully, and the final resident plan differs.
+#[test]
+fn live_pool_hot_swaps_mid_serve_without_dropping_requests() {
+    let dir = TempDir::new("autotune-live");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+
+    let module = swap_module();
+    let in_elems = 1024 * 256;
+    let cfg = ServerConfig {
+        artifact: "double".into(),
+        batch: 1,
+        in_elems_per_request: in_elems,
+        out_elems_per_request: 1,
+        input_dims: vec![1024, 256],
+        policy: BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(2) },
+        compile: Some(CompileOptions {
+            module: module.clone(),
+            mode: FusionMode::FusionStitching,
+            pipeline: PipelineConfig::default(),
+            use_stitched_backend: true,
+        }),
+        trace: None,
+    };
+
+    // Pre-warm the shared service so the baseline digest is known, and
+    // seed the contradiction before the autotuner's first tick.
+    let service = Arc::new(SharedCompileService::new(PipelineConfig::default()));
+    let (base, _) = service.compile(&module, FusionMode::FusionStitching).unwrap();
+    assert!(
+        base.executable.is_some(),
+        "stitched serving needs a lowered module: {:?}",
+        base.exec_error
+    );
+    let d0 = base.plan.digest();
+    assert!(service.absorb_profile(&synthetic_feedback(&base, 1e9)) > 0);
+
+    // min_launches = MAX: the live write-back path stays armed but
+    // never fires, so the synthetic overrides cannot be diluted by real
+    // (fast) samples while the test runs.
+    let pool = ServingPool::start_with_service(
+        dir.path(),
+        cfg,
+        PoolConfig {
+            workers: 2,
+            queue_depth: 16,
+            autotune: Some(AutotuneConfig {
+                interval: Duration::from_millis(5),
+                min_launches: u64::MAX,
+            }),
+        },
+        service.clone(),
+    )
+    .unwrap();
+
+    // Serve continuously until the swap lands (bounded), then keep
+    // serving to prove the new module answers traffic.
+    let input = vec![0.25f32; in_elems];
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut served = 0u64;
+    while service.generation() == 0 {
+        assert!(Instant::now() < deadline, "autotuner never swapped (served {served})");
+        let (out, _) = pool.infer_keyed(served, input.clone()).expect("request during swap window");
+        assert_eq!(out.len(), 1);
+        served += 1;
+    }
+    for k in 0..8u64 {
+        let (out, _) = pool.infer_keyed(1000 + k, input.clone()).expect("request after swap");
+        assert_eq!(out.len(), 1);
+        served += 1;
+    }
+
+    let swapped = service.probe(&module, FusionMode::FusionStitching).unwrap();
+    assert_ne!(swapped.plan.digest(), d0, "resident plan must have changed");
+    assert!(service.generation() >= 1);
+
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(stats.aggregate.requests as u64, served, "every submitted request was served");
+    assert_eq!(stats.aggregate.rejected, 0, "no request rejected across the swap");
+    assert_eq!(stats.aggregate.compile_failures, 0);
+    assert_eq!(stats.generation, Some(service.generation()));
+    assert_eq!(
+        stats.cold_compiles,
+        Some(2),
+        "warmup + one background re-explore; serving batches all hit"
+    );
+}

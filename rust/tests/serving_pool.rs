@@ -61,7 +61,7 @@ fn concurrent_workers_share_one_cold_compile() {
     let pool = ServingPool::start(
         dir.path(),
         compile_config(),
-        PoolConfig { workers: 4, queue_depth: 16 },
+        PoolConfig { workers: 4, queue_depth: 16, autotune: None },
     )
     .unwrap();
 
@@ -116,7 +116,7 @@ fn prewarmed_shared_service_skips_cold_compiles() {
     let pool = ServingPool::start_with_service(
         dir.path(),
         cfg,
-        PoolConfig { workers: 2, queue_depth: 16 },
+        PoolConfig { workers: 2, queue_depth: 16, autotune: None },
         service.clone(),
     )
     .unwrap();
@@ -142,7 +142,7 @@ fn pool_survives_policy_larger_than_artifact_batch() {
     cfg.policy = BatchPolicy::default(); // max_batch 8 > batch 4: the bug's shape
     assert!(cfg.policy.max_batch > cfg.batch);
     let pool =
-        ServingPool::start(dir.path(), cfg, PoolConfig { workers: 2, queue_depth: 32 }).unwrap();
+        ServingPool::start(dir.path(), cfg, PoolConfig { workers: 2, queue_depth: 32, autotune: None }).unwrap();
     let pending: Vec<_> = (0..24)
         .map(|i| pool.infer_keyed_async(7, vec![i as f32, 0.5, 1.5]).unwrap())
         .collect();
@@ -164,7 +164,7 @@ fn aggregate_stats_fold_worker_summaries() {
     let pool = ServingPool::start(
         dir.path(),
         base_config(),
-        PoolConfig { workers: 2, queue_depth: 16 },
+        PoolConfig { workers: 2, queue_depth: 16, autotune: None },
     )
     .unwrap();
     for i in 0..10u64 {
