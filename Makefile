@@ -1,6 +1,6 @@
 # Convenience targets; everything also works via plain cargo / python.
 
-.PHONY: build test bench bench-launches bench-serving bench-fusion bench-vm bench-global bench-profile bench-autotune artifacts doc
+.PHONY: build test bench bench-launches bench-serving bench-fusion bench-vm bench-global bench-profile bench-autotune bench-buckets artifacts doc
 
 build:
 	cargo build --release
@@ -53,6 +53,14 @@ bench-profile:
 # swap); writes BENCH_autotune_convergence.json at the repo root.
 bench-autotune:
 	BENCH_SMOKE=1 cargo bench --bench autotune_convergence
+
+# Shape-class bucketing bench (smoke mode): one heterogeneous trace
+# (24 distinct row lengths) served exact-shape vs bucketed; gates >= 4x
+# fewer cold compiles, strictly higher cache hit rate, bounded padding
+# waste and bitwise value identity; writes BENCH_shape_buckets.json at
+# the repo root.
+bench-buckets:
+	BENCH_SMOKE=1 cargo bench --bench shape_buckets
 
 doc:
 	cargo doc --no-deps

@@ -154,7 +154,9 @@ fn run_hot_swap_leg() -> SwapResult {
             mode: FusionMode::FusionStitching,
             pipeline: PipelineConfig::default(),
             use_stitched_backend: true,
+            specialize: None,
         }),
+        buckets: None,
         trace: None,
     };
 

@@ -35,6 +35,7 @@ fn bench_variant(artifact: &str) -> Option<(f64, f64, f64, usize)> {
         input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
         policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
         compile: None,
+        buckets: None,
         trace: None,
     };
     let srv = ServingCoordinator::start(dir, cfg).ok()?;

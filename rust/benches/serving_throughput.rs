@@ -78,6 +78,7 @@ fn server_config() -> ServerConfig {
             mode: FusionMode::FusionStitching,
             pipeline,
             use_stitched_backend: false,
+            specialize: None,
         }
     });
     ServerConfig {
@@ -88,6 +89,7 @@ fn server_config() -> ServerConfig {
         input_dims: vec![BATCH as i64, IN_ELEMS as i64],
         policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(1) },
         compile,
+        buckets: None,
         trace: None,
     }
 }

@@ -1,0 +1,230 @@
+//! Shape-class bucketing bench — the compile-amortization acceptance
+//! gate, landing in `BENCH_shape_buckets.json`.
+//!
+//! One shape-heterogeneous trace (≥16 distinct row lengths, the
+//! NMT-sequence-length scenario) is served twice through identical
+//! stitched serving loops:
+//!
+//! - **exact** — `BucketPolicy::Exact`: every distinct length is its own
+//!   shape class, so every new length pays a cold compile.
+//! - **bucketed** — `BucketPolicy::PowerOfTwo`: lengths share padded
+//!   canonical artifacts, so the whole trace compiles a handful of
+//!   buckets and the rest of the traffic hits the cache.
+//!
+//! Gates (deterministic, enforced in smoke mode too): the bucketed leg
+//! must pay at least [`COMPILE_REDUCTION`]× fewer cold compiles and
+//! reach a strictly higher cache hit rate, its padding-waste ratio must
+//! stay under [`WASTE_THRESHOLD`], and every request's live output
+//! region must match the exact-shape leg bit for bit.
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::buckets::BucketPolicy;
+use fusion_stitching::coordinator::metrics::StreamingSummary;
+use fusion_stitching::coordinator::pipeline::{FusionMode, PipelineConfig};
+use fusion_stitching::coordinator::server::{CompileOptions, ServerConfig, WorkerStats};
+use fusion_stitching::coordinator::ServingCoordinator;
+use fusion_stitching::hlo::{GraphBuilder, Module, Shape};
+use fusion_stitching::obs::Json;
+use fusion_stitching::testutil::TempDir;
+use std::path::PathBuf;
+use std::time::Duration;
+
+const BATCH: usize = 4;
+/// The serving contract's maximum row — the largest bucket.
+const MAX_LEN: usize = 128;
+/// Distinct concrete row lengths in the trace.
+const DISTINCT_LENGTHS: usize = 24;
+/// The bucketed leg must pay at least this factor fewer cold compiles.
+const COMPILE_REDUCTION: usize = 4;
+/// Hard cap on the bucketed leg's padding-waste ratio.
+const WASTE_THRESHOLD: f64 = 0.5;
+
+/// Identity-ish artifact so the engine has something to parse; every
+/// batch executes on the stitched backend, never on this text.
+const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+
+/// The specializer: `tanh(exp(x))` over a `[BATCH, len]` batch.
+fn chain(len: usize) -> Module {
+    let mut b = GraphBuilder::new("entry");
+    let x = b.param("x", Shape::f32(&[BATCH as i64, len as i64]));
+    let e = b.exp(x);
+    let t = b.tanh(e);
+    Module::new("chain", b.finish(t))
+}
+
+/// 24 distinct lengths spread over 17..=128 — every one below the
+/// PowerOfTwo floor of 32, between 32 and 64, or between 64 and 128.
+fn trace_lengths() -> Vec<usize> {
+    (0..DISTINCT_LENGTHS).map(|i| 17 + i * (MAX_LEN - 17) / (DISTINCT_LENGTHS - 1)).collect()
+}
+
+fn fill(len: usize, seed: u64) -> Vec<f32> {
+    (0..len)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(2654435761).wrapping_add(seed.wrapping_mul(97));
+            ((h % 1000) as f32) / 1000.0 - 0.5
+        })
+        .collect()
+}
+
+struct LegResult {
+    outputs: Vec<Vec<u32>>,
+    lat: StreamingSummary,
+    stats: WorkerStats,
+}
+
+/// Serve the whole trace (`passes` sequential sweeps over the length
+/// set) through one stitched serving loop under `policy`.
+fn run_leg(dir: &TempDir, policy: BucketPolicy, passes: usize) -> LegResult {
+    let mut pipeline = PipelineConfig::default();
+    pipeline.bucketing = policy.clone();
+    let cfg = ServerConfig {
+        artifact: "double".into(),
+        batch: BATCH,
+        in_elems_per_request: MAX_LEN,
+        out_elems_per_request: MAX_LEN,
+        input_dims: vec![BATCH as i64, MAX_LEN as i64],
+        policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(1) },
+        compile: Some(CompileOptions {
+            module: chain(MAX_LEN),
+            mode: FusionMode::FusionStitching,
+            pipeline,
+            use_stitched_backend: true,
+            specialize: Some(chain as fn(usize) -> Module),
+        }),
+        buckets: Some(policy),
+        trace: None,
+    };
+    let srv = ServingCoordinator::start(dir.path(), cfg).expect("serving loop start");
+    let mut outputs = Vec::new();
+    let mut lat = StreamingSummary::default();
+    for pass in 0..passes {
+        for (k, &len) in trace_lengths().iter().enumerate() {
+            let input = fill(len, (pass * DISTINCT_LENGTHS + k) as u64);
+            let (out, latency) = srv.infer(input).expect("infer");
+            assert_eq!(out.len(), len, "live region only");
+            lat.record(latency);
+            outputs.push(out.iter().map(|f| f.to_bits()).collect());
+        }
+    }
+    let stats = srv.shutdown().expect("clean shutdown");
+    LegResult { outputs, lat, stats }
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok() || std::env::args().any(|a| a == "--smoke");
+    let passes = if smoke { 2usize } else { 8 };
+    let mode_name = if smoke { "smoke" } else { "full" };
+    let requests = passes * DISTINCT_LENGTHS;
+    println!(
+        "== shape-class bucketing: {DISTINCT_LENGTHS} distinct lengths x {passes} passes \
+         ({requests} requests, {mode_name}) =="
+    );
+
+    let dir = TempDir::new("shape-buckets-bench");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).expect("artifact write");
+
+    let exact = run_leg(&dir, BucketPolicy::Exact, passes);
+    let bucketed = run_leg(&dir, BucketPolicy::PowerOfTwo { min: 32 }, passes);
+
+    let mismatches = exact
+        .outputs
+        .iter()
+        .zip(&bucketed.outputs)
+        .filter(|(a, b)| a != b)
+        .count();
+
+    let cold_exact = exact.stats.cache_misses;
+    let cold_bucketed = bucketed.stats.cache_misses;
+    let hit_rate_exact = exact.stats.cache_hit_rate();
+    let hit_rate_bucketed = bucketed.stats.cache_hit_rate();
+    let waste = bucketed.stats.padding_waste_ratio();
+    let p50_exact = exact.lat.percentiles_us(&[50.0])[0];
+    let p50_bucketed = bucketed.lat.percentiles_us(&[50.0])[0];
+
+    for (name, leg, p50) in
+        [("exact", &exact, p50_exact), ("bucketed", &bucketed, p50_bucketed)]
+    {
+        println!(
+            "{name:<9} cold compiles {:>3}  hits {:>3}  hit rate {:.3}  \
+             waste {:.3}  p50 {:.0} us",
+            leg.stats.cache_misses,
+            leg.stats.cache_hits,
+            leg.stats.cache_hit_rate(),
+            leg.stats.padding_waste_ratio(),
+            p50,
+        );
+    }
+
+    let compile_gate = cold_exact >= COMPILE_REDUCTION * cold_bucketed && cold_bucketed > 0;
+    let hit_gate = hit_rate_bucketed > hit_rate_exact;
+    let waste_gate = waste > 0.0 && waste <= WASTE_THRESHOLD;
+    let identity_gate = mismatches == 0;
+    let pass = compile_gate && hit_gate && waste_gate && identity_gate;
+    println!(
+        "cold compiles {cold_exact} -> {cold_bucketed} ({:.1}x), value mismatches {mismatches}",
+        cold_exact as f64 / cold_bucketed.max(1) as f64
+    );
+
+    let mut j = Json::new();
+    j.begin_obj();
+    j.field_str("bench", "shape_buckets");
+    j.field_bool("smoke", smoke);
+    j.field_uint("distinct_lengths", DISTINCT_LENGTHS as u64);
+    j.field_uint("requests_per_leg", requests as u64);
+    for (name, leg, p50) in
+        [("exact", &exact, p50_exact), ("bucketed", &bucketed, p50_bucketed)]
+    {
+        j.key(name).begin_obj();
+        j.field_uint("cold_compiles", leg.stats.cache_misses as u64);
+        j.field_uint("cache_hits", leg.stats.cache_hits as u64);
+        j.field_num("cache_hit_rate", leg.stats.cache_hit_rate());
+        j.field_uint("padded_elems", leg.stats.padded_elems);
+        j.field_uint("live_elems", leg.stats.live_elems);
+        j.field_num("padding_waste_ratio", leg.stats.padding_waste_ratio());
+        j.field_num("p50_latency_us", p50);
+        j.end_obj();
+    }
+    j.field_num(
+        "compile_reduction",
+        cold_exact as f64 / cold_bucketed.max(1) as f64,
+    );
+    j.field_uint("value_mismatches", mismatches as u64);
+    j.key("gate")
+        .begin_obj()
+        .field_bool("compile_reduction", compile_gate)
+        .field_bool("hit_rate", hit_gate)
+        .field_bool("waste_bounded", waste_gate)
+        .field_bool("value_identity", identity_gate)
+        .field_bool("pass", pass)
+        .end_obj();
+    j.end_obj();
+    let json = j.finish();
+
+    let out_path = match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(dir) => PathBuf::from(dir).join("..").join("BENCH_shape_buckets.json"),
+        Err(_) => PathBuf::from("BENCH_shape_buckets.json"),
+    };
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {}", out_path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out_path.display()),
+    }
+
+    if !pass {
+        eprintln!(
+            "FAIL: shape-bucket gate: compile_reduction={compile_gate} \
+             ({cold_exact} vs {cold_bucketed} cold compiles), hit_rate={hit_gate} \
+             ({hit_rate_exact:.3} vs {hit_rate_bucketed:.3}), \
+             waste_bounded={waste_gate} ({waste:.3} vs cap {WASTE_THRESHOLD}), \
+             value_identity={identity_gate} ({mismatches} mismatches)"
+        );
+        std::process::exit(1);
+    }
+}

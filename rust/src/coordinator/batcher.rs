@@ -5,12 +5,30 @@
 //! a batch closes when it reaches `max_batch` requests or when
 //! `max_wait` has elapsed since its first request.
 //!
-//! Every request carries a `shape_key` (derived from its input shape).
-//! The keyed collector [`next_batch_keyed`] never mixes keys inside one
-//! batch — mixed-shape batches would need separate compiled artifacts —
-//! and carries the first mismatched request over to seed the next
-//! batch, so nothing is dropped or reordered across shapes.
+//! Every request carries a `shape_key`. Since the shape-class bucketing
+//! refactor the key names a *bucket* (see
+//! [`crate::coordinator::buckets::BucketPolicy`]), not necessarily one
+//! exact shape: batches are **bucket-pure**, not shape-pure. Requests
+//! whose concrete lengths differ may share a batch as long as they fall
+//! in the same bucket; the serving loop pads each row with zeros up to
+//! the bucket's canonical length on the way into the batch buffer and
+//! slices each request's live output region back out on the way off, so
+//! mixed-length batches stay value-identical to exact-shape execution.
+//! The collectors ([`next_batch_keyed`], [`next_batch_bucketed`]) never
+//! mix *keys* inside one batch — different buckets need different
+//! compiled artifacts — and carry the first mismatched request over to
+//! seed the next batch, so nothing is dropped or reordered across
+//! buckets. With the degenerate one-shape-per-bucket policy
+//! (`BucketPolicy::Exact`, or no policy at all) keys are exact lengths
+//! and the historical shape-pure behavior holds bit-for-bit.
+//!
+//! [`next_batch_bucketed`] additionally applies a
+//! [`crate::coordinator::buckets::BucketAdmission`] check: a row whose
+//! modeled padding waste exceeds the cost of a separate launch is
+//! *demoted* — its key is rewritten to its exact length so it ships in
+//! its own exact-shape batch instead of being padded.
 
+use super::buckets::BucketAdmission;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -18,9 +36,11 @@ use std::time::{Duration, Instant};
 pub struct Request {
     /// Flattened input row(s) for this request.
     pub input: Vec<f32>,
-    /// Shape identity of the input: requests with different keys never
-    /// share a batch (the serving loop derives it from the input length;
-    /// anything stable per shape works, e.g. a truncated
+    /// Shape-class identity of the input: requests with different keys
+    /// never share a batch. Under a bucket policy this is the bucket
+    /// key ([`crate::coordinator::buckets::BucketPolicy::bucket_key`]);
+    /// without one the serving loop derives it from the input length
+    /// (anything stable per shape works, e.g. a truncated
     /// [`crate::hlo::Fingerprint`]).
     pub shape_key: u64,
     /// Where to send the flattened output.
@@ -47,7 +67,7 @@ impl Default for BatchPolicy {
 /// until `max_wait` expires. Returns `None` once the channel is closed
 /// and drained.
 pub fn next_batch(rx: &Receiver<Request>, policy: &BatchPolicy) -> Option<Vec<Request>> {
-    collect(rx, policy, &mut None, false)
+    collect_batch(rx, policy, &mut None, false, None)
 }
 
 /// Like [`next_batch`], but a batch only contains requests sharing one
@@ -59,19 +79,49 @@ pub fn next_batch_keyed(
     policy: &BatchPolicy,
     carry: &mut Option<Request>,
 ) -> Option<Vec<Request>> {
-    collect(rx, policy, carry, true)
+    collect_batch(rx, policy, carry, true, None)
 }
 
-fn collect(
+/// Like [`next_batch_keyed`], but for bucket keys: before a request
+/// joins (or seeds) a batch, `admission` decides whether padding it to
+/// its claimed bucket's canonical length is worth it. A row the check
+/// refuses is demoted — its `shape_key` is rewritten to its exact
+/// length, so the ordinary key-purity rule carries it into an
+/// exact-shape batch of its own. `admission: None` admits everything
+/// (pure bucket-purity collection).
+pub fn next_batch_bucketed(
+    rx: &Receiver<Request>,
+    policy: &BatchPolicy,
+    carry: &mut Option<Request>,
+    admission: Option<&BucketAdmission>,
+) -> Option<Vec<Request>> {
+    collect_batch(rx, policy, carry, true, admission)
+}
+
+/// Demote `req` to an exact-shape key if the admission check refuses to
+/// pad it to its claimed bucket. Demotion terminates: an exact key has
+/// zero padding waste, which every admission policy accepts.
+fn maybe_demote(req: &mut Request, admission: Option<&BucketAdmission>) {
+    if let Some(adm) = admission {
+        let len = req.input.len();
+        if !adm.admits(len, req.shape_key as usize) {
+            req.shape_key = len as u64;
+        }
+    }
+}
+
+fn collect_batch(
     rx: &Receiver<Request>,
     policy: &BatchPolicy,
     carry: &mut Option<Request>,
     keyed: bool,
+    admission: Option<&BucketAdmission>,
 ) -> Option<Vec<Request>> {
-    let (first, carried) = match carry.take() {
+    let (mut first, carried) = match carry.take() {
         Some(r) => (r, true),
         None => (rx.recv().ok()?, false),
     };
+    maybe_demote(&mut first, admission);
     let key = first.shape_key;
     let now = Instant::now();
     // A carried request already sat through the previous batch's window;
@@ -89,7 +139,8 @@ fn collect(
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(req) => {
+            Ok(mut req) => {
+                maybe_demote(&mut req, admission);
                 if keyed && req.shape_key != key {
                     *carry = Some(req);
                     break;
@@ -233,6 +284,117 @@ mod tests {
             sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
             assert_eq!(ordered, sorted, "key {key} reordered: {ordered:?}");
         }
+    }
+
+    /// Property test over deterministic pseudo-random interleavings of
+    /// >= 3 shape keys: whatever the arrival pattern, chained carries
+    /// must (a) keep every batch key-pure, (b) drop nothing, and
+    /// (c) preserve arrival order within each key.
+    #[test]
+    fn interleaved_keys_property_nothing_dropped_or_reordered() {
+        // splitmix64: deterministic sequences, no RNG dependency.
+        fn splitmix64(state: &mut u64) -> u64 {
+            *state = state.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = *state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        }
+        let keys = [300u64, 301, 302, 303];
+        for seed in 0..8u64 {
+            let mut state = seed.wrapping_mul(0x5851F42D4C957F2D) + 1;
+            let (tx, rx) = mpsc::channel();
+            let mut receivers = Vec::new();
+            let mut sent: Vec<(u64, f32)> = Vec::new();
+            for i in 0..40 {
+                let key = keys[(splitmix64(&mut state) % keys.len() as u64) as usize];
+                let (r, rr) = keyed_req(i as f32, key);
+                receivers.push(rr);
+                sent.push((key, i as f32));
+                tx.send(r).unwrap();
+            }
+            drop(tx);
+            let policy = BatchPolicy { max_batch: 5, max_wait: Duration::from_millis(10) };
+            let mut carry = None;
+            let mut got: Vec<(u64, f32)> = Vec::new();
+            while let Some(batch) = next_batch_keyed(&rx, &policy, &mut carry) {
+                let key = batch[0].shape_key;
+                assert!(
+                    batch.iter().all(|r| r.shape_key == key),
+                    "seed {seed}: batch mixes keys"
+                );
+                got.extend(batch.iter().map(|r| (key, r.input[0])));
+            }
+            assert!(carry.is_none(), "seed {seed}: carry slot not drained");
+            assert_eq!(got.len(), sent.len(), "seed {seed}: requests dropped");
+            for key in keys {
+                let sent_k: Vec<f32> =
+                    sent.iter().filter(|(k, _)| *k == key).map(|(_, v)| *v).collect();
+                let got_k: Vec<f32> =
+                    got.iter().filter(|(k, _)| *k == key).map(|(_, v)| *v).collect();
+                assert_eq!(got_k, sent_k, "seed {seed}: key {key} lost or reordered");
+            }
+        }
+    }
+
+    /// A bucketed collector with an aggressive admission policy demotes
+    /// a short row: its key is rewritten to the exact length, it leaves
+    /// the bucket batch, and it ships in its own exact-shape batch.
+    #[test]
+    fn admission_demotes_wasteful_rows_to_exact_batches() {
+        let (tx, rx) = mpsc::channel();
+        let mk = |vals: Vec<f32>, key: u64| {
+            let (resp, rr) = mpsc::channel();
+            (
+                Request { input: vals, shape_key: key, respond: resp, enqueued: Instant::now() },
+                rr,
+            )
+        };
+        // Both claim bucket 8; the 2-element row wastes 6/8 of its slot.
+        let (full, _r1) = mk(vec![0.0; 8], 8);
+        let (short, _r2) = mk(vec![1.0; 2], 8);
+        tx.send(full).unwrap();
+        tx.send(short).unwrap();
+        drop(tx);
+        // per_elem_us 1.0 vs launch 4.0: 6 wasted elements > 4us launch.
+        let adm =
+            BucketAdmission { launch_overhead_us: 4.0, per_elem_us: 1.0, max_waste_ratio: 1.0 };
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let mut carry = None;
+        let a = next_batch_bucketed(&rx, &policy, &mut carry, Some(&adm)).unwrap();
+        assert_eq!(a.len(), 1, "demoted row must not share the bucket batch");
+        assert_eq!(a[0].shape_key, 8);
+        let b = next_batch_bucketed(&rx, &policy, &mut carry, Some(&adm)).unwrap();
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].shape_key, 2, "demoted key is rewritten to the exact length");
+        assert!(next_batch_bucketed(&rx, &policy, &mut carry, Some(&adm)).is_none());
+    }
+
+    /// With a permissive admission policy, different lengths sharing a
+    /// bucket key mix into one batch (bucket purity, not shape purity).
+    #[test]
+    fn bucketed_batches_mix_lengths_within_one_bucket() {
+        let (tx, rx) = mpsc::channel();
+        let mk = |vals: Vec<f32>, key: u64| {
+            let (resp, rr) = mpsc::channel();
+            (
+                Request { input: vals, shape_key: key, respond: resp, enqueued: Instant::now() },
+                rr,
+            )
+        };
+        let (a, _r1) = mk(vec![0.0; 8], 8);
+        let (b, _r2) = mk(vec![1.0; 5], 8);
+        let (c, _r3) = mk(vec![2.0; 3], 8);
+        for r in [a, b, c] {
+            tx.send(r).unwrap();
+        }
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let mut carry = None;
+        let batch = next_batch_bucketed(&rx, &policy, &mut carry, None).unwrap();
+        assert_eq!(batch.len(), 3, "same-bucket lengths must share one batch");
+        let lens: Vec<usize> = batch.iter().map(|r| r.input.len()).collect();
+        assert_eq!(lens, vec![8, 5, 3]);
     }
 
     #[test]

@@ -1,0 +1,367 @@
+//! Shape-class bucketing: the shape-identity abstraction that lets one
+//! compiled artifact serve a whole *bucket* of nearby shapes.
+//!
+//! The exact-shape serving path compiles one artifact per concrete
+//! input length, so shape-heterogeneous traffic (NMT sequence lengths,
+//! speech frame counts) turns every new length into a cold compile and
+//! a shape-pure shard — the production fusion problem the XLA
+//! operator-fusion study (arXiv 2301.13062) flags as hardest. A
+//! [`BucketPolicy`] maps a concrete row length to a [`ShapeClass`]: a
+//! sticky bucket key plus the bucket's *canonical* (padded) length.
+//! Every layer of the serving stack then keys on the class instead of
+//! the raw length:
+//!
+//! - the [`crate::coordinator::pool::ServingPool`] routes on the bucket
+//!   key, so shards stay bucket-pure instead of shape-pure;
+//! - the batcher mixes same-bucket lengths into one batch
+//!   ([`crate::coordinator::batcher::next_batch_bucketed`]), padding
+//!   each row to the canonical length on the way in and slicing the
+//!   live region back out of the output on the way off;
+//! - the compile cache keys on the canonical module's fingerprint
+//!   ([`crate::hlo::fingerprint::fingerprint_shape_class`]), so all
+//!   lengths in a bucket hit one entry and one single-flight cold
+//!   compile, with the policy itself folded into the config digest.
+//!
+//! [`BucketPolicy::Exact`] is the degenerate one-shape-per-bucket
+//! policy: canonical length == concrete length, bit-for-bit the
+//! historical exact-shape behavior.
+//!
+//! Whether a shorter row should be *admitted* into a bucket batch (pay
+//! modeled padding compute) or demoted to its exact length (pay an
+//! extra launch, and possibly a cold compile, later) is the
+//! [`BucketAdmission`] check, derived through the
+//! [`crate::schedule::CostOracle`] seam.
+
+use crate::gpusim::cost::KernelDesc;
+use crate::gpusim::DeviceConfig;
+use crate::schedule::CostOracle;
+use anyhow::{bail, Result};
+use std::fmt;
+
+/// How concrete row lengths on the batch-varying dimension map to
+/// buckets. The bucket *key* is the bucket's canonical length, so keys
+/// stay meaningful across layers (routing, batching, validation) and
+/// the degenerate [`BucketPolicy::Exact`] reproduces the historical
+/// `shape_key = input.len()` convention exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BucketPolicy {
+    /// One shape per bucket: canonical length == concrete length. The
+    /// degenerate policy; exact-shape serving, bit for bit.
+    Exact,
+    /// Round the varying dimension up to the next power of two, with a
+    /// floor: lengths at or below `min` share the `min`-sized bucket
+    /// (`min` must itself be a power of two).
+    PowerOfTwo { min: usize },
+    /// Explicit ascending length boundaries: a length lands in the
+    /// first boundary that fits it. Lengths above the last boundary
+    /// fall back to exact (one-shape) buckets rather than truncating.
+    Boundaries(Vec<usize>),
+}
+
+impl BucketPolicy {
+    /// Reject malformed policies before a serving loop adopts them.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            BucketPolicy::Exact => Ok(()),
+            BucketPolicy::PowerOfTwo { min } => {
+                if *min == 0 || !min.is_power_of_two() {
+                    bail!("PowerOfTwo bucket floor must be a power of two >= 1, got {min}");
+                }
+                Ok(())
+            }
+            BucketPolicy::Boundaries(bs) => {
+                if bs.is_empty() {
+                    bail!("Boundaries bucket policy needs at least one boundary");
+                }
+                if bs.windows(2).any(|w| w[0] >= w[1]) {
+                    bail!("bucket boundaries must be strictly ascending, got {bs:?}");
+                }
+                if bs[0] == 0 {
+                    bail!("bucket boundaries must be >= 1");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// The canonical (padded) row length of the bucket containing
+    /// `len` — what the bucket's artifact is compiled at and what every
+    /// member row is padded to.
+    pub fn canonical_len(&self, len: usize) -> usize {
+        match self {
+            BucketPolicy::Exact => len,
+            BucketPolicy::PowerOfTwo { min } => len.max(*min).next_power_of_two(),
+            BucketPolicy::Boundaries(bs) => {
+                bs.iter().copied().find(|&b| b >= len).unwrap_or(len)
+            }
+        }
+    }
+
+    /// The sticky bucket key a request of `len` elements carries in
+    /// `Request::shape_key`: the canonical length itself, so routing,
+    /// batch purity and engine-side validation all read the same claim.
+    pub fn bucket_key(&self, len: usize) -> u64 {
+        self.canonical_len(len) as u64
+    }
+
+    /// The [`ShapeClass`] of a row of `len` elements, clamped to the
+    /// serving contract's maximum row (`max_len`).
+    pub fn class_of(&self, len: usize, max_len: usize) -> ShapeClass {
+        self.class_of_key(self.bucket_key(len), max_len)
+    }
+
+    /// Resolve a *claimed* bucket key (what a request carries — clients
+    /// may lie) into the class it names. The canonical length clamps to
+    /// the serving contract's maximum row; whether the row actually
+    /// fits the class is the engine's admissibility check
+    /// ([`crate::runtime::LoadedModel::validate_row`]).
+    pub fn class_of_key(&self, key: u64, max_len: usize) -> ShapeClass {
+        ShapeClass { bucket: key, canonical_len: (key as usize).min(max_len) }
+    }
+
+    /// Deterministic digest of the policy — folded into the compile
+    /// cache's config digest so artifacts compiled under different
+    /// bucketing never share an entry (see
+    /// [`crate::coordinator::cache::CacheKey`]).
+    pub fn digest(&self) -> u64 {
+        crate::schedule::perf_library::fnv1a(format!("{self:?}").as_bytes())
+    }
+}
+
+impl Default for BucketPolicy {
+    fn default() -> Self {
+        BucketPolicy::Exact
+    }
+}
+
+/// A request's shape identity under a bucket policy: the bucket it
+/// claims plus the canonical row length every member of that bucket
+/// executes at. The admissible range of the class is
+/// `0..=canonical_len` — rows are padded *up* to the canonical length,
+/// never truncated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeClass {
+    /// The sticky bucket key (what `Request::shape_key` carries and the
+    /// pool routes on).
+    pub bucket: u64,
+    /// Canonical row length the bucket's artifact is compiled at.
+    pub canonical_len: usize,
+}
+
+impl ShapeClass {
+    /// The degenerate one-shape class of exact-shape serving.
+    pub fn exact(len: usize) -> Self {
+        ShapeClass { bucket: len as u64, canonical_len: len }
+    }
+
+    /// Is a row of `len` elements admissible in this class?
+    pub fn admits(&self, len: usize) -> bool {
+        len <= self.canonical_len
+    }
+
+    /// Padding waste of a row of `len` elements executed at this
+    /// class's canonical length, in `[0, 1)`.
+    pub fn waste_ratio(&self, len: usize) -> f64 {
+        if self.canonical_len == 0 {
+            0.0
+        } else {
+            self.canonical_len.saturating_sub(len) as f64 / self.canonical_len as f64
+        }
+    }
+}
+
+impl fmt::Display for ShapeClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "bucket {} (canonical length {})", self.bucket, self.canonical_len)
+    }
+}
+
+/// The modeled padding-waste vs. launch/compile-cost check of the
+/// bucketed batcher: admit a shorter row into a bucket batch (pay
+/// `wasted_elems × per_elem_us` of modeled padding compute) or demote
+/// it to its exact length (pay one extra kernel launch — and possibly
+/// a cold compile — when its exact batch ships later)?
+///
+/// Derived through the [`CostOracle`] seam
+/// ([`BucketAdmission::from_oracle`]): the per-element cost comes from
+/// the oracle's kernel-time estimate for one canonical batch, the
+/// launch overhead from the device constants. The [`Default`] is fully
+/// permissive (zero modeled padding cost), matching a policy of
+/// "always pad" when no cost model is configured.
+#[derive(Debug, Clone)]
+pub struct BucketAdmission {
+    /// Modeled cost of serving a demoted row in its own batch later:
+    /// one kernel launch of overhead, µs.
+    pub launch_overhead_us: f64,
+    /// Modeled compute cost of one padded element, µs.
+    pub per_elem_us: f64,
+    /// Hard cap on an admitted row's padding-waste ratio, regardless of
+    /// the cost comparison.
+    pub max_waste_ratio: f64,
+}
+
+impl Default for BucketAdmission {
+    fn default() -> Self {
+        BucketAdmission { launch_overhead_us: 4.0, per_elem_us: 0.0, max_waste_ratio: 1.0 }
+    }
+}
+
+impl BucketAdmission {
+    /// Derive the admission constants from a cost oracle and device
+    /// model, for batches of `batch × canonical_len` f32 elements. Any
+    /// [`CostOracle`] works — the serving loop passes the modeled
+    /// oracle; a measured overlay sharpens the estimate where samples
+    /// exist.
+    pub fn from_oracle(
+        oracle: &dyn CostOracle,
+        dev: &DeviceConfig,
+        batch: usize,
+        canonical_len: usize,
+    ) -> Self {
+        let elems = (batch * canonical_len).max(1) as u64;
+        let desc = KernelDesc {
+            bytes_read: elems * 4,
+            bytes_written: elems * 4,
+            flops: elems,
+            blocks: elems.div_ceil(256).max(1),
+            threads: 256,
+            smem_bytes: 0,
+            coalescing: 1.0,
+            op_weight: 1.0,
+        };
+        let exec_us = (oracle.kernel_time_us(&desc, dev) - dev.launch_overhead_us).max(0.0);
+        BucketAdmission {
+            launch_overhead_us: dev.launch_overhead_us,
+            per_elem_us: exec_us / elems as f64,
+            max_waste_ratio: 1.0,
+        }
+    }
+
+    /// Admit a row of `len` elements into a batch executing at
+    /// `canonical_len`? Rows that fill the row (no waste) are always
+    /// admitted; otherwise padding must be modeled cheaper than the
+    /// extra launch a demotion costs, and under the waste cap.
+    pub fn admits(&self, len: usize, canonical_len: usize) -> bool {
+        let wasted = canonical_len.saturating_sub(len);
+        if wasted == 0 {
+            return true;
+        }
+        let ratio = wasted as f64 / canonical_len.max(1) as f64;
+        ratio <= self.max_waste_ratio && wasted as f64 * self.per_elem_us <= self.launch_overhead_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::ModeledCost;
+
+    #[test]
+    fn exact_policy_is_the_identity() {
+        let p = BucketPolicy::Exact;
+        p.validate().unwrap();
+        for len in [0usize, 1, 3, 17, 4096] {
+            assert_eq!(p.canonical_len(len), len);
+            assert_eq!(p.bucket_key(len), len as u64);
+        }
+        let class = p.class_of(17, 4096);
+        assert_eq!(class, ShapeClass::exact(17));
+        assert!(class.admits(17) && !class.admits(18));
+        assert_eq!(class.waste_ratio(17), 0.0);
+    }
+
+    #[test]
+    fn power_of_two_rounds_up_with_floor() {
+        let p = BucketPolicy::PowerOfTwo { min: 16 };
+        p.validate().unwrap();
+        assert_eq!(p.canonical_len(1), 16);
+        assert_eq!(p.canonical_len(16), 16);
+        assert_eq!(p.canonical_len(17), 32);
+        assert_eq!(p.canonical_len(32), 32);
+        assert_eq!(p.canonical_len(33), 64);
+        assert_eq!(p.canonical_len(100), 128);
+        // 17 and 23 share one bucket; 33 sits in the next
+        assert_eq!(p.bucket_key(17), p.bucket_key(23));
+        assert_ne!(p.bucket_key(17), p.bucket_key(33));
+    }
+
+    #[test]
+    fn boundaries_take_first_fit_and_fall_back_to_exact() {
+        let p = BucketPolicy::Boundaries(vec![8, 24, 48]);
+        p.validate().unwrap();
+        assert_eq!(p.canonical_len(5), 8);
+        assert_eq!(p.canonical_len(8), 8);
+        assert_eq!(p.canonical_len(9), 24);
+        assert_eq!(p.canonical_len(48), 48);
+        // beyond the last boundary: exact, never truncated
+        assert_eq!(p.canonical_len(50), 50);
+    }
+
+    #[test]
+    fn malformed_policies_rejected() {
+        assert!(BucketPolicy::PowerOfTwo { min: 0 }.validate().is_err());
+        assert!(BucketPolicy::PowerOfTwo { min: 12 }.validate().is_err());
+        assert!(BucketPolicy::Boundaries(vec![]).validate().is_err());
+        assert!(BucketPolicy::Boundaries(vec![8, 8]).validate().is_err());
+        assert!(BucketPolicy::Boundaries(vec![24, 8]).validate().is_err());
+        assert!(BucketPolicy::Boundaries(vec![0, 8]).validate().is_err());
+    }
+
+    #[test]
+    fn class_of_key_clamps_to_the_contract() {
+        let p = BucketPolicy::PowerOfTwo { min: 16 };
+        // a claimed bucket larger than the contract's maximum row clamps
+        let class = p.class_of_key(1 << 20, 128);
+        assert_eq!(class.canonical_len, 128);
+        assert_eq!(class.bucket, 1 << 20);
+        // honest keys resolve to their own bucket
+        let class = p.class_of(40, 128);
+        assert_eq!((class.bucket, class.canonical_len), (64, 64));
+        assert!((class.waste_ratio(40) - 24.0 / 64.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_digest_distinguishes_policies() {
+        let a = BucketPolicy::Exact.digest();
+        let b = BucketPolicy::PowerOfTwo { min: 16 }.digest();
+        let c = BucketPolicy::PowerOfTwo { min: 32 }.digest();
+        let d = BucketPolicy::Boundaries(vec![8, 24]).digest();
+        let all = [a, b, c, d];
+        for i in 0..all.len() {
+            for j in i + 1..all.len() {
+                assert_ne!(all[i], all[j], "digests {i} and {j} collide");
+            }
+        }
+        assert_eq!(a, BucketPolicy::Exact.digest(), "digest must be deterministic");
+    }
+
+    #[test]
+    fn admission_trades_padding_against_launch_overhead() {
+        // Permissive default: everything pads.
+        let free = BucketAdmission::default();
+        assert!(free.admits(1, 1 << 20));
+        // Expensive padding: a row wasting more than the launch
+        // overhead's worth of modeled compute is demoted.
+        let tight =
+            BucketAdmission { launch_overhead_us: 4.0, per_elem_us: 1.0, max_waste_ratio: 1.0 };
+        assert!(tight.admits(62, 64), "2 wasted elements cost 2us < 4us launch");
+        assert!(!tight.admits(32, 64), "32 wasted elements cost 32us > 4us launch");
+        assert!(tight.admits(64, 64), "full rows always admit");
+        // The hard waste cap binds even when padding is modeled cheap.
+        let capped =
+            BucketAdmission { launch_overhead_us: 4.0, per_elem_us: 0.0, max_waste_ratio: 0.25 };
+        assert!(capped.admits(48, 64));
+        assert!(!capped.admits(47, 64));
+    }
+
+    #[test]
+    fn oracle_derived_admission_is_finite_and_permissive_for_small_buckets() {
+        let dev = DeviceConfig::pascal();
+        let adm = BucketAdmission::from_oracle(&ModeledCost, &dev, 4, 128);
+        assert!(adm.per_elem_us.is_finite() && adm.per_elem_us >= 0.0);
+        assert_eq!(adm.launch_overhead_us, dev.launch_overhead_us);
+        // For small serving buckets the modeled padding cost of a few
+        // dozen elements is far below one launch — everything admits.
+        assert!(adm.admits(17, 128));
+    }
+}

@@ -11,6 +11,15 @@
 //! one-stop compile front end that the serving loop
 //! ([`crate::coordinator::server`]) talks to.
 //!
+//! Under shape-class bucketing
+//! ([`crate::coordinator::buckets::BucketPolicy`]) the cache is keyed
+//! on the *bucket's canonical* fingerprint — [`CacheKey::for_class`]
+//! fingerprints the module specialized to the bucket's canonical row
+//! length — so every concrete shape in a bucket hits one entry and one
+//! single-flight cold compile. The bucket policy itself is folded into
+//! `config_digest` (via [`PipelineConfig::bucketing`]), so two runs
+//! bucketing differently never share artifacts.
+//!
 //! ```
 //! use fusion_stitching::coordinator::cache::CompileService;
 //! use fusion_stitching::coordinator::pipeline::{FusionMode, PipelineConfig};
@@ -61,6 +70,33 @@ impl CacheKey {
     pub fn new(module: &Module, mode: FusionMode, cfg: &PipelineConfig) -> Self {
         CacheKey {
             fingerprint: fingerprint_module(module),
+            mode,
+            device: cfg.deep.device.name.clone(),
+            fuse_batch_dot: cfg.deep.fuse_batch_dot,
+            config_digest: super::driver::config_digest(cfg),
+        }
+    }
+
+    /// The key of a whole *shape class*: when a `specialize` builder is
+    /// available, the fingerprint is taken from the module specialized
+    /// to the class's canonical row length
+    /// ([`crate::hlo::fingerprint_shape_class`]), so every concrete
+    /// shape in the bucket maps to the one canonical entry. Without a
+    /// builder this degenerates to [`CacheKey::new`] on the concrete
+    /// module — exact-shape keying, bit for bit.
+    pub fn for_class(
+        module: &Module,
+        class: &super::buckets::ShapeClass,
+        specialize: Option<fn(usize) -> Module>,
+        mode: FusionMode,
+        cfg: &PipelineConfig,
+    ) -> Self {
+        let fingerprint = match specialize {
+            Some(spec) => crate::hlo::fingerprint_shape_class(spec, class.canonical_len),
+            None => fingerprint_module(module),
+        };
+        CacheKey {
+            fingerprint,
             mode,
             device: cfg.deep.device.name.clone(),
             fuse_batch_dot: cfg.deep.fuse_batch_dot,

@@ -392,21 +392,24 @@ fn tuned_key(
 
 /// FNV-1a digest of every remaining pipeline knob that shapes a
 /// compiled artifact: the tuning space, elementwise-fusion thresholds,
-/// library efficiency and the full device constants (not just the
-/// device name). Shared by [`tuned_key`] and
+/// library efficiency, the full device constants (not just the device
+/// name), and the shape-class bucket policy (two runs bucketing
+/// differently pad to different canonical shapes, so their artifacts
+/// must never share a key). Shared by [`tuned_key`] and
 /// [`crate::coordinator::cache::CacheKey`], so plans tuned under one
 /// configuration are never adopted under another.
 pub(crate) fn config_digest(cfg: &PipelineConfig) -> u64 {
     crate::schedule::perf_library::fnv1a(
         format!(
-            "{:?}|{:?}|{}|{:?}|xf{}|gs{}|cs{:?}",
+            "{:?}|{:?}|{}|{:?}|xf{}|gs{}|cs{:?}|bk{:?}",
             cfg.deep.tuning,
             cfg.deep.elementwise,
             cfg.lib_efficiency,
             cfg.deep.device,
             cfg.deep.cost_fusion as u8,
             cfg.deep.global_stitch as u8,
-            cfg.cost_source
+            cfg.cost_source,
+            cfg.bucketing
         )
         .as_bytes(),
     )

@@ -13,6 +13,10 @@
 //! - [`server`] / [`batcher`] — the latency-critical online NMT use case
 //!   (§6.1): a thread-based serving loop with shape-keyed dynamic
 //!   batching over the runtime.
+//! - [`buckets`] — shape-class bucketing: the policy that folds nearby
+//!   request shapes into one padded canonical shape so heterogeneous
+//!   traffic shares compiled artifacts, plus the cost-modeled padding
+//!   admission check.
 //! - [`pool`] — the sharded multi-worker serving engine: N workers with
 //!   sticky shape-key routing, bounded-queue backpressure, and the
 //!   concurrent single-flight compile service.
@@ -20,6 +24,7 @@
 //!   plus the per-pass compile-time trace types.
 
 pub mod batcher;
+pub mod buckets;
 pub mod cache;
 pub mod driver;
 pub mod metrics;
@@ -27,6 +32,7 @@ pub mod pipeline;
 pub mod pool;
 pub mod server;
 
+pub use buckets::{BucketAdmission, BucketPolicy, ShapeClass};
 pub use cache::{CacheKey, CacheStats, CompileCache, CompileService, SharedCompileService};
 pub use driver::{compile_module_traced, Pass, PassManager};
 pub use metrics::{PassRecord, PassTrace, StreamingSummary};

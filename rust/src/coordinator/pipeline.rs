@@ -37,6 +37,17 @@ pub struct PipelineConfig {
     /// write-backs — the serving pool's background re-explore compiles
     /// with `Measured`.
     pub cost_source: crate::schedule::CostSource,
+    /// Serving-level shape-class policy
+    /// ([`crate::coordinator::buckets::BucketPolicy`]), recorded here
+    /// so it participates in the compile-cache identity: artifacts
+    /// compiled for a bucket's canonical shape must never be shared
+    /// with a run under a different bucketing. Compilation itself stays
+    /// shape-driven by the module; the policy only changes *which*
+    /// canonical module gets compiled. The default (`Exact`) is the
+    /// degenerate one-shape-per-bucket policy and leaves the digest's
+    /// inputs — and hence all historical cache keys — unchanged in
+    /// meaning.
+    pub bucketing: super::buckets::BucketPolicy,
 }
 
 impl Default for PipelineConfig {
@@ -45,6 +56,7 @@ impl Default for PipelineConfig {
             deep: DeepFusionConfig::default(),
             lib_efficiency: 0.70,
             cost_source: crate::schedule::CostSource::Modeled,
+            bucketing: super::buckets::BucketPolicy::Exact,
         }
     }
 }

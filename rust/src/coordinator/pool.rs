@@ -9,9 +9,11 @@
 //! N workers and keeps them independent where it matters:
 //!
 //! - **Sticky sharding.** Requests route to a worker by `shape_key`
-//!   (deterministic hash), so one worker sees one shape stream: its
-//!   batches stay shape-pure (no carry churn from interleaved shapes)
-//!   and its stitched executable stays hot.
+//!   (deterministic hash) — under [`ServerConfig::buckets`] the key is
+//!   the *bucket* key, so one worker sees one shape-class stream: its
+//!   batches stay bucket-pure (shape-pure in the degenerate exact
+//!   policy; no carry churn from interleaved classes) and its stitched
+//!   executables stay hot.
 //! - **Backpressure.** Each worker has a *bounded* queue
 //!   ([`std::sync::mpsc::sync_channel`]): submission blocks (or
 //!   [`ServingPool::try_infer_async`] fails fast) when a shard falls
@@ -341,14 +343,20 @@ impl ServingPool {
 
     /// Submit one request and block for its output (backpressure: the
     /// submission itself blocks while the shard's queue is full).
-    /// Returns the output and the end-to-end latency.
+    /// Returns the output and the end-to-end latency. The shape key is
+    /// derived from the input length ([`ServerConfig::shape_key_for`]:
+    /// the bucket key under [`ServerConfig::buckets`], the exact length
+    /// otherwise).
     pub fn infer(&self, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
-        let key = input.len() as u64;
+        let key = self.cfg.shape_key_for(input.len());
         self.infer_keyed(key, input)
     }
 
     /// [`ServingPool::infer`] with an explicit shape key (e.g. a
-    /// truncated module fingerprint for multi-model traffic).
+    /// truncated module fingerprint for multi-model traffic). Under
+    /// [`ServerConfig::buckets`] the key is an explicit *bucket claim*
+    /// and is validated worker-side: a row longer than the claimed
+    /// bucket's canonical length is rejected, not trusted.
     pub fn infer_keyed(&self, shape_key: u64, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
         let enqueued = Instant::now();
         let rrx = self.infer_keyed_async(shape_key, input)?;
@@ -358,7 +366,7 @@ impl ServingPool {
 
     /// Submit asynchronously; the caller holds the response channel.
     pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
-        let key = input.len() as u64;
+        let key = self.cfg.shape_key_for(input.len());
         self.infer_keyed_async(key, input)
     }
 
@@ -461,6 +469,7 @@ ENTRY main {
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
             compile: None,
             trace: None,
+            buckets: None,
         }
     }
 

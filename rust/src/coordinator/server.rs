@@ -15,8 +15,17 @@
 //! from the [`super::cache::CompileCache`]. [`WorkerStats`] reports the
 //! resulting hit/miss counts and per-batch compile latencies, so the
 //! serving loop's cache hit-rate is directly observable.
+//!
+//! **Shape-class bucketing:** with [`ServerConfig::buckets`] set, shape
+//! identity is a [`ShapeClass`] rather than an exact length — batches
+//! are bucket-pure, rows are padded to the bucket's canonical length on
+//! assembly and the live output region is sliced back per request, and
+//! (with [`CompileOptions::specialize`]) each bucket compiles one
+//! canonical artifact shared by every length in the bucket. `None`
+//! keeps the historical exact-shape semantics bit-for-bit.
 
-use super::batcher::{next_batch_keyed, BatchPolicy, Request};
+use super::batcher::{next_batch_bucketed, next_batch_keyed, BatchPolicy, Request};
+use super::buckets::{BucketAdmission, BucketPolicy, ShapeClass};
 use super::cache::{CompileService, SharedCompileService};
 use super::metrics::StreamingSummary;
 use super::pipeline::{CompiledModule, FusionMode, PipelineConfig};
@@ -52,6 +61,15 @@ pub struct CompileOptions {
     /// `batch × out_elems_per_request` elements — validated when the
     /// first batch compiles.
     pub use_stitched_backend: bool,
+    /// Builds the served module at an arbitrary per-request row length
+    /// (the batch dimension stays the contract's `batch`). Required for
+    /// per-bucket artifacts under [`ServerConfig::buckets`]: each
+    /// bucket compiles `specialize(canonical_len)` once and serves
+    /// every length in the bucket from it. Must satisfy
+    /// `specialize(in_elems_per_request) == module` structurally. A
+    /// plain `fn` pointer (not a closure) so the options stay
+    /// `Debug + Clone`.
+    pub specialize: Option<fn(usize) -> Module>,
 }
 
 /// Server configuration: which artifact to serve and its baked shapes.
@@ -76,6 +94,14 @@ pub struct ServerConfig {
     /// the sink and records queue/batch/compile/launch/reply spans
     /// (see [`crate::obs`]). `None` serves untraced at zero cost.
     pub trace: Option<Arc<crate::obs::TraceSink>>,
+    /// Shape-class bucketing policy. `Some(policy)`: shape keys are
+    /// bucket keys, batches are bucket-pure, rows pad to the bucket's
+    /// canonical length and rows longer than their claimed bucket's
+    /// canonical length are rejected. `None`: historical opaque-key
+    /// semantics — keys are whatever the caller submits, batches are
+    /// key-pure, rows validate against `in_elems_per_request` — kept
+    /// bit-for-bit for existing deployments.
+    pub buckets: Option<BucketPolicy>,
 }
 
 impl ServerConfig {
@@ -109,7 +135,48 @@ impl ServerConfig {
                 self.in_elems_per_request
             );
         }
+        if let Some(policy) = &self.buckets {
+            policy.validate()?;
+            if let Some(opts) = &self.compile {
+                // The bucket policy is part of the compile-cache
+                // identity: a worker bucketing one way against a
+                // service digesting another would share artifacts
+                // across incompatible canonical shapes.
+                if opts.pipeline.bucketing != *policy {
+                    bail!(
+                        "ServerConfig.buckets ({policy:?}) disagrees with \
+                         CompileOptions.pipeline.bucketing ({:?}); the bucket \
+                         policy must be folded into the compile config digest",
+                        opts.pipeline.bucketing
+                    );
+                }
+            }
+        }
         Ok(())
+    }
+
+    /// The shape key a request of `len` input elements carries: its
+    /// bucket key under [`ServerConfig::buckets`], or (historical
+    /// semantics) the exact length.
+    pub fn shape_key_for(&self, len: usize) -> u64 {
+        match &self.buckets {
+            Some(policy) => policy.bucket_key(len),
+            None => len as u64,
+        }
+    }
+
+    /// Output elements owed to a request of `in_len` input elements.
+    /// The serving contract is proportional: a row carrying a fraction
+    /// of `in_elems_per_request` owes the same fraction of
+    /// `out_elems_per_request` (exactly the whole output when the
+    /// contract is elementwise, `in == out`). Callers only pass
+    /// `in_len` values the row validation already admitted.
+    pub fn out_elems_for(&self, in_len: usize) -> usize {
+        if self.in_elems_per_request == self.out_elems_per_request {
+            in_len
+        } else {
+            (in_len * self.out_elems_per_request) / self.in_elems_per_request
+        }
     }
 }
 
@@ -160,6 +227,15 @@ pub struct WorkerStats {
     /// planned vs. the boxed VM's per-value footprint), set once the
     /// stitched backend resolves.
     pub arena: Option<ArenaStats>,
+    /// Zero elements written into occupied batch rows to pad them up to
+    /// their bucket's canonical length (batch *under-fill* — empty rows
+    /// when fewer requests than `batch` arrive — is deliberately not
+    /// counted here; it predates bucketing and is visible as
+    /// `requests/batches`).
+    pub padded_elems: u64,
+    /// Request-supplied (live) elements assembled into batches — the
+    /// denominator's other half for [`WorkerStats::padding_waste_ratio`].
+    pub live_elems: u64,
     /// Request queue wait (enqueue → batch drain), per request,
     /// microseconds.
     pub queue_us: StreamingSummary,
@@ -181,6 +257,18 @@ impl WorkerStats {
         }
     }
 
+    /// Fraction of assembled row elements that were padding, in
+    /// `[0, 1)`: `padded / (padded + live)`. Zero under exact-shape
+    /// serving (nothing pads) and when nothing was served.
+    pub fn padding_waste_ratio(&self) -> f64 {
+        let total = self.padded_elems + self.live_elems;
+        if total == 0 {
+            0.0
+        } else {
+            self.padded_elems as f64 / total as f64
+        }
+    }
+
     /// Fold another worker's counters into this one (the pool's
     /// aggregate view).
     pub fn merge(&mut self, other: &WorkerStats) {
@@ -195,6 +283,8 @@ impl WorkerStats {
         self.launches.merge(&other.launches);
         self.stitched_batches += other.stitched_batches;
         self.arena_reuses += other.arena_reuses;
+        self.padded_elems += other.padded_elems;
+        self.live_elems += other.live_elems;
         if self.arena.is_none() {
             self.arena = other.arena;
         }
@@ -217,6 +307,9 @@ impl WorkerStats {
         j.field_uint("compile_failures", self.compile_failures as u64);
         j.field_uint("stitched_batches", self.stitched_batches as u64);
         j.field_uint("arena_reuses", self.arena_reuses);
+        j.field_uint("padded_elems", self.padded_elems);
+        j.field_uint("live_elems", self.live_elems);
+        j.field_num("padding_waste_ratio", self.padding_waste_ratio());
         if let Some(arena) = &self.arena {
             j.key("arena").begin_obj();
             j.field_uint("arena_bytes", arena.arena_bytes as u64);
@@ -336,11 +429,21 @@ fn validate_stitched(
 
 /// The serving loop body, shared by the single-worker
 /// [`ServingCoordinator`] and every worker of a
-/// [`super::pool::ServingPool`]: collect a shape-pure batch, make the
-/// compiled plan resident (through whichever [`CompileBackend`] the
-/// caller wired up), assemble, execute, reply.
+/// [`super::pool::ServingPool`]: collect a bucket-pure batch (shape-pure
+/// in the degenerate exact policy), make the compiled plan resident
+/// (through whichever [`CompileBackend`] the caller wired up),
+/// assemble, execute, reply.
 ///
-/// Oversized *rows* (longer than `in_elems_per_request`) are rejected
+/// Under [`ServerConfig::buckets`] the batch's key names a
+/// [`ShapeClass`]; rows pad with zeros to the class's canonical length
+/// on assembly and each request gets only its live output region back.
+/// With [`CompileOptions::specialize`] the worker keeps one compiled
+/// artifact per bucket (memoized in a per-worker map, invalidated on
+/// hot-swap generation bumps); without it every bucket pads to the
+/// contract length and executes the contract-shape backend.
+///
+/// Oversized *rows* (longer than their class's canonical length — the
+/// contract's `in_elems_per_request` when unbucketed) are rejected
 /// on their own response channel before assembly — the old code
 /// silently truncated them and served corrupted output. Oversized
 /// *batches* (the policy may collect more than the artifact's baked
@@ -382,6 +485,26 @@ pub(crate) fn run_worker(
     // background autotuner replaces the cached module; this worker then
     // re-resolves its stitched executable from the fresh artifact.
     let mut seen_generation: u64 = 0;
+    // Shape-class bucketing: the bucket policy, the admission check the
+    // batcher consults (oracle-derived when a compile config supplies
+    // the device model), and the per-bucket compiled state when a
+    // specializer builds canonical modules.
+    let buckets = cfg.buckets.as_ref();
+    let admission: Option<BucketAdmission> = buckets.map(|_| match &cfg.compile {
+        Some(opts) => BucketAdmission::from_oracle(
+            &crate::schedule::ModeledCost,
+            &opts.pipeline.deep.device,
+            cfg.batch,
+            cfg.in_elems_per_request,
+        ),
+        None => BucketAdmission::default(),
+    });
+    struct BucketSlot {
+        module: Module,
+        stitched: Option<Arc<StitchedExecutable>>,
+        rejected: bool,
+    }
+    let mut classes: std::collections::HashMap<u64, BucketSlot> = std::collections::HashMap::new();
     // Pooled per-worker execution state: the batch-assembly buffer, the
     // planned value arena and the output buffer all live for the
     // worker's lifetime, so the steady-state serving path performs zero
@@ -389,7 +512,16 @@ pub(crate) fn run_worker(
     let mut arena = ExecArena::with_threads(vm_threads);
     let mut input: Vec<f32> = Vec::new();
     let mut stitched_out: Vec<f32> = Vec::new();
-    while let Some(batch) = next_batch_keyed(rx, &cfg.policy, &mut carry) {
+    while let Some(batch) = match buckets {
+        Some(_) => next_batch_bucketed(rx, &cfg.policy, &mut carry, admission.as_ref()),
+        None => next_batch_keyed(rx, &cfg.policy, &mut carry),
+    } {
+        // The batch's shape class: under bucketing, the claimed bucket
+        // key resolved against the contract's maximum row; otherwise
+        // the degenerate one-shape class of the contract itself.
+        let class = buckets.map_or(ShapeClass::exact(cfg.in_elems_per_request), |p| {
+            p.class_of_key(batch[0].shape_key, cfg.in_elems_per_request)
+        });
         // Queue-wait accounting: every request waited from its enqueue
         // to this drain.
         let drained = Instant::now();
@@ -407,8 +539,45 @@ pub(crate) fn run_worker(
         // module are resident before touching the batch.
         if let (Some(opts), Some(svc)) = (&cfg.compile, service) {
             if !compile_failed {
+                // Hot-swap invalidation *before* resolving this batch's
+                // module: a generation bump means resident artifacts are
+                // new modules — drop every resolved executable (the
+                // contract-shape one and every bucket slot's) and the
+                // stale rejection verdicts, so they re-resolve from
+                // fresh plans below. Batches already executing elsewhere
+                // finish on the old Arc; nothing blocks or drops.
+                let mut generation_bumped = false;
+                if let Some(generation) = svc.generation() {
+                    if generation != seen_generation {
+                        seen_generation = generation;
+                        stitched = None;
+                        stitched_rejected = false;
+                        for slot in classes.values_mut() {
+                            slot.stitched = None;
+                            slot.rejected = false;
+                        }
+                        generation_bumped = true;
+                    }
+                }
+                // What this batch's shape class compiles: the bucket's
+                // canonical specialization (memoized per worker) when a
+                // specializer is configured, else the contract module.
+                let slot = match (opts.specialize, buckets) {
+                    (Some(spec), Some(_)) => Some(
+                        classes.entry(batch[0].shape_key).or_insert_with(|| BucketSlot {
+                            module: spec(class.canonical_len),
+                            stitched: None,
+                            rejected: false,
+                        }),
+                    ),
+                    _ => None,
+                };
+                let module: &Module = match &slot {
+                    Some(s) => &s.module,
+                    None => &opts.module,
+                };
                 let t0 = Instant::now();
-                match svc.compile(&opts.module, opts.mode) {
+                match svc.compile(module, opts.mode) {
                     Ok((plan, hit)) => {
                         stats.compile_us.record_us(t0.elapsed().as_secs_f64() * 1e6);
                         if hit {
@@ -430,40 +599,55 @@ pub(crate) fn run_worker(
                             t0,
                             Instant::now(),
                         );
-                        // Hot-swap invalidation: a generation bump means
-                        // the artifact this batch just fetched is a new
-                        // module — drop the resolved executable (and the
-                        // stale rejection verdict) so it re-resolves
-                        // below. Batches already executing elsewhere
-                        // finish on the old Arc; nothing blocks or drops.
-                        if let Some(generation) = svc.generation() {
-                            if generation != seen_generation {
-                                seen_generation = generation;
-                                stitched = None;
-                                stitched_rejected = false;
-                                stats.profile = Some(plan.profile.clone());
-                                crate::obs::set_profile(plan.profile.clone());
-                            }
-                        }
                         // Adopt the compiled module's kernel profile:
-                        // launch spans below feed measured times into it.
-                        if stats.profile.is_none() {
+                        // launch spans below feed measured times into
+                        // it. Re-adopt after a hot swap (the profile
+                        // handle belongs to the new artifact).
+                        if stats.profile.is_none() || generation_bumped {
                             stats.profile = Some(plan.profile.clone());
                             crate::obs::set_profile(plan.profile.clone());
                         }
-                        if opts.use_stitched_backend && stitched.is_none() && !stitched_rejected {
-                            match validate_stitched(&plan, batch_elems, out_elems) {
-                                Ok(exe) => {
-                                    stats.arena = Some(exe.mem.stats());
-                                    stitched = Some(exe);
+                        if opts.use_stitched_backend {
+                            match slot {
+                                Some(s) if s.stitched.is_none() && !s.rejected => {
+                                    // Bucket artifacts execute at the
+                                    // bucket's canonical row length.
+                                    let in_e = cfg.batch * class.canonical_len;
+                                    let out_e =
+                                        cfg.batch * cfg.out_elems_for(class.canonical_len);
+                                    match validate_stitched(&plan, in_e, out_e) {
+                                        Ok(exe) => {
+                                            if stats.arena.is_none() {
+                                                stats.arena = Some(exe.mem.stats());
+                                            }
+                                            s.stitched = Some(exe);
+                                        }
+                                        Err(e) => {
+                                            s.rejected = true;
+                                            eprintln!(
+                                                "stitched backend unavailable for \
+                                                 {class}, serving the artifact \
+                                                 instead: {e:#}"
+                                            );
+                                        }
+                                    }
                                 }
-                                Err(e) => {
-                                    stitched_rejected = true;
-                                    eprintln!(
-                                        "stitched backend unavailable, serving \
-                                         the artifact instead: {e:#}"
-                                    );
+                                None if stitched.is_none() && !stitched_rejected => {
+                                    match validate_stitched(&plan, batch_elems, out_elems) {
+                                        Ok(exe) => {
+                                            stats.arena = Some(exe.mem.stats());
+                                            stitched = Some(exe);
+                                        }
+                                        Err(e) => {
+                                            stitched_rejected = true;
+                                            eprintln!(
+                                                "stitched backend unavailable, serving \
+                                                 the artifact instead: {e:#}"
+                                            );
+                                        }
+                                    }
                                 }
+                                _ => {}
                             }
                         }
                     }
@@ -478,10 +662,28 @@ pub(crate) fn run_worker(
                 }
             }
         }
-        // Reject rows that exceed the serving contract up front: the
-        // truncated execution would silently return corrupted output.
+        // Which executable serves this batch, and at what row strides: a
+        // resolved bucket artifact executes at the class's canonical
+        // length; everything else pads to the contract stride and runs
+        // the contract-shape backend (stitched or interpreter) — so the
+        // interpreter, whose input dims are baked, never sees a
+        // non-contract buffer.
+        let bucket_exe = buckets
+            .and_then(|_| classes.get(&batch[0].shape_key))
+            .and_then(|s| s.stitched.clone());
+        let (active, row_in, row_out) = match bucket_exe {
+            Some(exe) => {
+                (Some(exe), class.canonical_len, cfg.out_elems_for(class.canonical_len))
+            }
+            None => (stitched.clone(), cfg.in_elems_per_request, cfg.out_elems_per_request),
+        };
+        // Reject rows that exceed the class's admissible range (the
+        // serving contract itself when unbucketed) up front: the
+        // truncated execution would silently return corrupted output,
+        // and under bucketing a lying/colliding `shape_key` must not be
+        // trusted.
         let (rejected, accepted): (Vec<Request>, Vec<Request>) =
-            batch.into_iter().partition(|req| req.input.len() > cfg.in_elems_per_request);
+            batch.into_iter().partition(|req| !class.admits(req.input.len()));
         if !rejected.is_empty() {
             stats.rejected += rejected.len();
             // Count before replying, so a live-stats read right after
@@ -491,29 +693,39 @@ pub(crate) fn run_worker(
             }
             for req in rejected {
                 let row = req.input.len();
-                let _ = req.respond.send(Err(anyhow!(
-                    "request row has {row} elements but the serving contract \
-                     carries {} per request",
-                    cfg.in_elems_per_request
-                )));
+                let _ = req.respond.send(Err(match buckets {
+                    Some(_) => model
+                        .validate_row(row, &class)
+                        .expect_err("partition admitted an oversized row"),
+                    None => anyhow!(
+                        "request row has {row} elements but the serving contract \
+                         carries {} per request",
+                        cfg.in_elems_per_request
+                    ),
+                }));
             }
         }
         // The policy may collect more requests than the artifact's
         // baked batch dimension: execute in artifact-sized chunks.
+        let chunk_elems = cfg.batch * row_in;
         for chunk in accepted.chunks(cfg.batch) {
             // Assemble the padded chunk into the reused buffer (clear +
-            // resize re-zeroes without reallocating).
+            // resize re-zeroes without reallocating). Rows shorter than
+            // the stride are zero-padded; the per-row shortfall is the
+            // padding-waste the bucket policy signed up for.
             let asm = crate::obs::begin();
             input.clear();
-            input.resize(batch_elems, 0f32);
+            input.resize(chunk_elems, 0f32);
             for (i, req) in chunk.iter().enumerate() {
-                let start = i * cfg.in_elems_per_request;
+                let start = i * row_in;
                 input[start..start + req.input.len()].copy_from_slice(&req.input);
+                stats.live_elems += req.input.len() as u64;
+                stats.padded_elems += (row_in - req.input.len()) as u64;
             }
             crate::obs::record(crate::obs::SpanCat::Batch, "assemble", 0, asm);
             let t0 = Instant::now();
             let mut artifact_out: Vec<Vec<f32>> = Vec::new();
-            let result: Result<&[f32]> = match &stitched {
+            let result: Result<&[f32]> = match &active {
                 Some(exe) => {
                     stats.stitched_batches += 1;
                     match exe.run_into(&[input.as_slice()], &mut arena, &mut stitched_out) {
@@ -551,8 +763,16 @@ pub(crate) fn run_worker(
             match result {
                 Ok(out) => {
                     for (i, req) in chunk.iter().enumerate() {
-                        let start = i * cfg.out_elems_per_request;
-                        let end = start + cfg.out_elems_per_request;
+                        let start = i * row_out;
+                        // Under bucketing each request gets only its
+                        // *live* output region back (the padded tail is
+                        // the bucket's, not the caller's); historical
+                        // semantics return the full contract row.
+                        let end = start
+                            + match buckets {
+                                Some(_) => cfg.out_elems_for(req.input.len()),
+                                None => row_out,
+                            };
                         let slice = out
                             .get(start..end)
                             .map(<[f32]>::to_vec)
@@ -650,11 +870,13 @@ impl ServingCoordinator {
     }
 
     /// Submit one request and block for its output. Returns the output
-    /// slice and the end-to-end latency.
+    /// slice and the end-to-end latency. The shape key is derived from
+    /// the input length ([`ServerConfig::shape_key_for`]: the bucket
+    /// key under [`ServerConfig::buckets`], the exact length otherwise).
     pub fn infer(&self, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
         let (rtx, rrx) = mpsc::channel();
         let enqueued = Instant::now();
-        let shape_key = input.len() as u64;
+        let shape_key = self.cfg.shape_key_for(input.len());
         self.tx
             .as_ref()
             .context("server stopped")?
@@ -670,7 +892,7 @@ impl ServingCoordinator {
         input: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
         let (rtx, rrx) = mpsc::channel();
-        let shape_key = input.len() as u64;
+        let shape_key = self.cfg.shape_key_for(input.len());
         self.tx
             .as_ref()
             .context("server stopped")?
@@ -716,6 +938,7 @@ ENTRY main {
             policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
             compile: None,
             trace: None,
+            buckets: None,
         }
     }
 
@@ -842,6 +1065,7 @@ ENTRY main {
             mode: FusionMode::FusionStitching,
             pipeline: PipelineConfig::default(),
             use_stitched_backend: false,
+            specialize: None,
         });
         let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
 
@@ -865,6 +1089,67 @@ ENTRY main {
         assert_eq!(stats.stitched_batches, 0);
     }
 
+    /// Bucketed stitched serving: heterogeneous row lengths share
+    /// per-bucket canonical artifacts, every request gets exactly its
+    /// live region back, and the values match the unpadded math.
+    #[test]
+    fn bucketed_serving_pads_and_slices_value_identically() {
+        use crate::hlo::{GraphBuilder, Module, Shape};
+
+        fn spec(len: usize) -> Module {
+            let mut b = GraphBuilder::new("entry");
+            let x = b.param("x", Shape::f32(&[4, len as i64]));
+            let e = b.exp(x);
+            let t = b.tanh(e);
+            Module::new("served", b.finish(t))
+        }
+
+        let dir = TempDir::new("srv-buckets");
+        std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+        let policy = BucketPolicy::PowerOfTwo { min: 2 };
+        let mut pipeline = PipelineConfig::default();
+        pipeline.bucketing = policy.clone();
+        let cfg = ServerConfig {
+            artifact: "double".into(),
+            batch: 4,
+            in_elems_per_request: 4,
+            out_elems_per_request: 4,
+            input_dims: vec![4, 4],
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+            compile: Some(CompileOptions {
+                module: spec(4),
+                mode: FusionMode::FusionStitching,
+                pipeline,
+                use_stitched_backend: true,
+                specialize: Some(spec as fn(usize) -> Module),
+            }),
+            trace: None,
+            buckets: Some(policy),
+        };
+        let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
+        // Lengths 3 and 4 share bucket 4; length 2 has its own bucket.
+        for len in [3usize, 4, 2, 3] {
+            let input: Vec<f32> = (0..len).map(|i| 0.1 * (i + 1) as f32).collect();
+            let (out, _) = srv.infer(input.clone()).unwrap();
+            assert_eq!(out.len(), len, "live region only, no padded tail");
+            for (i, (got, x)) in out.iter().zip(&input).enumerate() {
+                let want = x.exp().tanh();
+                assert!((got - want).abs() < 1e-6, "row[{i}]: {got} vs {want}");
+            }
+        }
+        let stats = srv.shutdown().unwrap();
+        assert_eq!(stats.requests, 4);
+        assert_eq!(stats.stitched_batches, stats.batches, "all batches ran bucket artifacts");
+        // Two buckets → two cold compiles; the other batches hit.
+        assert_eq!(stats.cache_misses, 2, "one cold compile per bucket");
+        assert_eq!(stats.cache_hits, 2);
+        // The two length-3 rows each padded one element in a canonical-4 row.
+        assert_eq!(stats.padded_elems, 2);
+        assert_eq!(stats.live_elems, 3 + 4 + 2 + 3);
+        let waste = stats.padding_waste_ratio();
+        assert!(waste > 0.0 && waste < 0.2, "waste = {waste}");
+    }
+
     #[test]
     fn stitched_backend_serves_the_compiled_module() {
         use crate::hlo::{GraphBuilder, Module, Shape};
@@ -886,6 +1171,7 @@ ENTRY main {
             mode: FusionMode::FusionStitching,
             pipeline: PipelineConfig::default(),
             use_stitched_backend: true,
+            specialize: None,
         });
         let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
         for i in 0..4 {

@@ -238,6 +238,28 @@ pub fn fingerprint_module(module: &Module) -> Fingerprint {
     fingerprint_computation(&module.entry)
 }
 
+/// The cache identity of a whole *shape class*: the fingerprint of the
+/// module specialized to the bucket's canonical row length.
+///
+/// Under shape-class bucketing
+/// ([`crate::coordinator::buckets::BucketPolicy`]) every concrete
+/// length in a bucket executes the one artifact compiled at the
+/// bucket's canonical length, so the cache must key on the *canonical*
+/// module's structure, not on whatever concrete shape a request
+/// happened to arrive with. A shape change propagates through the whole
+/// graph (shape inference re-derives every downstream dim), so the only
+/// faithful canonical fingerprint is the fingerprint of the actually
+/// specialized module — `specialize` builds it, exactly as the serving
+/// loop will for compilation, and this fingerprints it. Two lengths in
+/// one bucket therefore collide (same canonical module); lengths
+/// straddling a bucket boundary do not.
+pub fn fingerprint_shape_class(
+    specialize: impl FnOnce(usize) -> Module,
+    canonical_len: usize,
+) -> Fingerprint {
+    fingerprint_module(&specialize(canonical_len))
+}
+
 /// A canonical, id-independent instruction order: topological
 /// (operands first), with ties broken by structural hash. Two
 /// renumberings of the same graph produce the same *sequence of
@@ -386,6 +408,26 @@ mod tests {
             }
         }
         assert_eq!(order, canonical_order(&c));
+    }
+
+    #[test]
+    fn shape_class_fingerprint_collides_within_a_bucket() {
+        use crate::hlo::Module;
+        fn chain(len: usize) -> Module {
+            let mut b = GraphBuilder::new("chain");
+            let x = b.param("x", Shape::f32(&[4, len as i64]));
+            let e = b.exp(x);
+            let t = b.tanh(e);
+            Module::new("chain", b.finish(t))
+        }
+        // Two concrete lengths sharing a canonical length share the hash…
+        let a = fingerprint_shape_class(chain, 32);
+        let b = fingerprint_shape_class(chain, 32);
+        assert_eq!(a, b);
+        // …and it is exactly the canonical module's ordinary fingerprint.
+        assert_eq!(a, fingerprint_module(&chain(32)));
+        // Different canonical lengths are different classes.
+        assert_ne!(a, fingerprint_shape_class(chain, 64));
     }
 
     #[test]

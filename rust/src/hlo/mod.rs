@@ -19,7 +19,9 @@ pub mod verifier;
 
 pub use builder::GraphBuilder;
 pub use computation::{Computation, InstrId};
-pub use fingerprint::{fingerprint_computation, fingerprint_module, Fingerprint};
+pub use fingerprint::{
+    fingerprint_computation, fingerprint_module, fingerprint_shape_class, Fingerprint,
+};
 pub use instruction::{Instruction, ReduceKind};
 pub use module::Module;
 pub use opcode::Opcode;

@@ -349,7 +349,9 @@ fn cmd_serve(args: &[String]) -> i32 {
                 mode: FusionMode::FusionStitching,
                 pipeline: pipeline_config(args),
                 use_stitched_backend: true,
+                specialize: None,
             }),
+            buckets: None,
             trace: sink.clone(),
         }
     } else {
@@ -365,6 +367,7 @@ fn cmd_serve(args: &[String]) -> i32 {
                 mode: FusionMode::FusionStitching,
                 pipeline,
                 use_stitched_backend: false,
+                specialize: None,
             }
         });
         let (batch, seq, model_d, out_d) = (8usize, 64usize, 512usize, 64usize);
@@ -376,6 +379,7 @@ fn cmd_serve(args: &[String]) -> i32 {
             input_dims: vec![(batch * seq) as i64, model_d as i64],
             policy: BatchPolicy::default(),
             compile,
+            buckets: None,
             trace: sink.clone(),
         }
     };

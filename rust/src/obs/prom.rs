@@ -53,6 +53,13 @@ pub fn prometheus(stats: &ServingStats, dropped_events: Option<u64>) -> String {
     header(&mut out, "fusion_compile_failures_total", "counter", "Pipeline compiles that failed.");
     line(&mut out, "fusion_compile_failures_total", "", a.compile_failures as f64);
 
+    header(&mut out, "fusion_padded_elems_total", "counter", "Pad elements appended to reach bucket canonical lengths.");
+    line(&mut out, "fusion_padded_elems_total", "", a.padded_elems as f64);
+    header(&mut out, "fusion_live_elems_total", "counter", "Caller-supplied elements carried in occupied batch rows.");
+    line(&mut out, "fusion_live_elems_total", "", a.live_elems as f64);
+    header(&mut out, "fusion_padding_waste_ratio", "gauge", "padded / (padded + live) elements across occupied rows.");
+    line(&mut out, "fusion_padding_waste_ratio", "", a.padding_waste_ratio());
+
     header(&mut out, "fusion_launches_total", "counter", "Kernel launches by kind.");
     line(&mut out, "fusion_launches_total", "{kind=\"generated\"}", a.launches.generated as f64);
     line(&mut out, "fusion_launches_total", "{kind=\"library\"}", a.launches.library as f64);
@@ -140,11 +147,14 @@ mod tests {
         w.launches.tier_shm = 2;
         w.exec_us.record_us(100.0);
         w.queue_us.record_us(5.0);
+        w.padded_elems = 3;
+        w.live_elems = 9;
         let stats = ServingStats {
             per_worker: vec![w.clone()],
             aggregate: w,
             cache: None,
             cold_compiles: None,
+            generation: None,
         };
         let text = prometheus(&stats, Some(0));
         for family in [
@@ -152,6 +162,9 @@ mod tests {
             "fusion_launches_total{kind=\"generated\"} 6",
             "fusion_launch_tier_total{tier=\"plain\"} 4",
             "fusion_arena_reuses_total 0",
+            "fusion_padded_elems_total 3",
+            "fusion_live_elems_total 9",
+            "fusion_padding_waste_ratio 0.25",
             "fusion_exec_latency_us{quantile=\"0.5\"} 100",
             "fusion_queue_latency_us_count 1",
             "fusion_trace_dropped_events_total 0",

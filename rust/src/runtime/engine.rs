@@ -88,6 +88,28 @@ impl LoadedModel {
         }
     }
 
+    /// Engine-side admissibility check under shape-class bucketing: a
+    /// request may only execute if its row fits inside its claimed
+    /// bucket's canonical length (shorter rows are padded up; longer
+    /// rows would be silently truncated by the batch assembly, so a
+    /// lying or colliding `shape_key` must be rejected here, not
+    /// trusted). The serving loop counts the rejection in
+    /// [`crate::coordinator::server::WorkerStats::rejected`].
+    pub fn validate_row(
+        &self,
+        row_len: usize,
+        class: &crate::coordinator::buckets::ShapeClass,
+    ) -> Result<()> {
+        if !class.admits(row_len) {
+            bail!(
+                "request row has {row_len} elements but claims {class}; \
+                 admissible rows carry at most {} elements",
+                class.canonical_len
+            );
+        }
+        Ok(())
+    }
+
     /// Which executor backs this model.
     pub fn backend_name(&self) -> &'static str {
         match self.backend {
@@ -238,6 +260,22 @@ ENTRY main {
         engine.load("add_self").unwrap();
         let model = engine.get("add_self").unwrap();
         assert!(model.run_f32(&[(&[1.0f32, 2.0, 3.0], &[2])]).is_err());
+    }
+
+    #[test]
+    fn validate_row_rejects_rows_beyond_the_claimed_bucket() {
+        use crate::coordinator::buckets::ShapeClass;
+        let dir = TempDir::new("engine-validate");
+        std::fs::write(dir.path().join("add_self.hlo.txt"), ADD_HLO).unwrap();
+        let mut engine = Engine::new(dir.path()).unwrap();
+        engine.load("add_self").unwrap();
+        let model = engine.get("add_self").unwrap();
+        let class = ShapeClass { bucket: 32, canonical_len: 32 };
+        assert!(model.validate_row(32, &class).is_ok());
+        assert!(model.validate_row(5, &class).is_ok(), "short rows pad, never reject");
+        let err = model.validate_row(33, &class).unwrap_err().to_string();
+        assert!(err.contains("33 elements"), "{err}");
+        assert!(err.contains("bucket 32"), "{err}");
     }
 
     #[test]

@@ -213,7 +213,9 @@ fn live_pool_hot_swaps_mid_serve_without_dropping_requests() {
             mode: FusionMode::FusionStitching,
             pipeline: PipelineConfig::default(),
             use_stitched_backend: true,
+            specialize: None,
         }),
+        buckets: None,
         trace: None,
     };
 

@@ -173,7 +173,9 @@ fn serving_loop_reports_cache_hits_for_repeated_nmt_requests() {
             mode: FusionMode::FusionStitching,
             pipeline,
             use_stitched_backend: false,
+            specialize: None,
         }),
+        buckets: None,
         trace: None,
     };
     let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
@@ -213,7 +215,9 @@ fn shared_service_amortizes_across_serving_loops() {
             mode: FusionMode::FusionStitching,
             pipeline: PipelineConfig::default(),
             use_stitched_backend: false,
+            specialize: None,
         }),
+        buckets: None,
         trace: None,
     };
 

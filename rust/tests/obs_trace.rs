@@ -221,7 +221,9 @@ ENTRY main {
             mode: FusionMode::FusionStitching,
             pipeline: PipelineConfig::default(),
             use_stitched_backend: true,
+            specialize: None,
         }),
+        buckets: None,
         trace: Some(sink.clone()),
     };
     let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();

@@ -89,6 +89,7 @@ fn serving_loop_runs_real_artifact() {
             input_dims: vec![(BATCH * SEQ) as i64, MODEL as i64],
             policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(1) },
             compile: None,
+            buckets: None,
             trace: None,
         },
     )

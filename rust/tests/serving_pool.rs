@@ -32,6 +32,7 @@ fn base_config() -> ServerConfig {
         input_dims: vec![4, 3],
         policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
         compile: None,
+        buckets: None,
         trace: None,
     }
 }
@@ -46,6 +47,7 @@ fn compile_config() -> ServerConfig {
         mode: FusionMode::FusionStitching,
         pipeline,
         use_stitched_backend: false,
+        specialize: None,
     });
     cfg
 }

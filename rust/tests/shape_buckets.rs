@@ -1,0 +1,347 @@
+//! Integration tests for shape-class bucketing: cache re-keying on the
+//! bucket's canonical fingerprint, the bucket policy in the config
+//! digest, end-to-end padded serving vs exact-shape serving, the
+//! degenerate exact policy's invariance, and the worker-side defense
+//! against lying bucket claims.
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::buckets::BucketPolicy;
+use fusion_stitching::coordinator::cache::{CacheKey, SharedCompileService};
+use fusion_stitching::coordinator::pipeline::{FusionMode, PipelineConfig};
+use fusion_stitching::coordinator::pool::{PoolConfig, ServingPool};
+use fusion_stitching::coordinator::server::CompileOptions;
+use fusion_stitching::coordinator::{ServerConfig, ServingCoordinator};
+use fusion_stitching::hlo::{GraphBuilder, Module, Shape};
+use fusion_stitching::testutil::TempDir;
+use std::sync::Arc;
+use std::time::Duration;
+
+const BATCH: usize = 4;
+
+/// Doubles a [4, 3] batch — the interpreter artifact behind every
+/// serving loop here (stitched legs never execute it).
+const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+
+/// The specializer: `tanh(exp(x))` over a `[BATCH, len]` batch. One
+/// bucket's canonical module is `chain(canonical_len)`.
+fn chain(len: usize) -> Module {
+    let mut b = GraphBuilder::new("entry");
+    let x = b.param("x", Shape::f32(&[BATCH as i64, len as i64]));
+    let e = b.exp(x);
+    let t = b.tanh(e);
+    Module::new("chain", b.finish(t))
+}
+
+#[test]
+fn two_shapes_in_one_bucket_pay_one_cold_compile() {
+    let policy = BucketPolicy::PowerOfTwo { min: 16 };
+    let mut cfg = PipelineConfig::default();
+    cfg.bucketing = policy.clone();
+    let svc = SharedCompileService::new(cfg);
+    // Lengths 17 and 23 both canonicalize to 32: the second request
+    // must hit the first's entry, not compile again.
+    let (a, hit_a) = svc
+        .compile(&chain(policy.canonical_len(17)), FusionMode::FusionStitching)
+        .unwrap();
+    let (b, hit_b) = svc
+        .compile(&chain(policy.canonical_len(23)), FusionMode::FusionStitching)
+        .unwrap();
+    assert!(!hit_a, "first shape in the bucket compiles cold");
+    assert!(hit_b, "second shape in the bucket must hit");
+    assert!(Arc::ptr_eq(&a, &b), "bucket members share one artifact");
+    assert_eq!(svc.cold_compiles(), 1);
+    assert_eq!(svc.cache_len(), 1, "one bucket, one resident entry");
+}
+
+#[test]
+fn shapes_straddling_a_bucket_boundary_compile_separately() {
+    let policy = BucketPolicy::PowerOfTwo { min: 16 };
+    assert_eq!(policy.canonical_len(17), 32);
+    assert_eq!(policy.canonical_len(40), 64);
+    let mut cfg = PipelineConfig::default();
+    cfg.bucketing = policy.clone();
+    let svc = SharedCompileService::new(cfg);
+    let (a, _) = svc
+        .compile(&chain(policy.canonical_len(17)), FusionMode::FusionStitching)
+        .unwrap();
+    let (b, _) = svc
+        .compile(&chain(policy.canonical_len(40)), FusionMode::FusionStitching)
+        .unwrap();
+    assert!(!Arc::ptr_eq(&a, &b));
+    assert_eq!(svc.cold_compiles(), 2, "distinct buckets compile independently");
+    assert_eq!(svc.cache_len(), 2);
+}
+
+#[test]
+fn racing_bucket_members_are_single_flight() {
+    // Eight threads, eight distinct concrete lengths, one bucket: the
+    // shared service must run exactly one cold pipeline.
+    let policy = BucketPolicy::PowerOfTwo { min: 16 };
+    let mut cfg = PipelineConfig::default();
+    cfg.bucketing = policy.clone();
+    let svc = Arc::new(SharedCompileService::new(cfg));
+    let barrier = Arc::new(std::sync::Barrier::new(8));
+    let handles: Vec<_> = (17usize..=24)
+        .map(|len| {
+            let svc = svc.clone();
+            let barrier = barrier.clone();
+            let policy = policy.clone();
+            std::thread::spawn(move || {
+                let m = chain(policy.canonical_len(len));
+                barrier.wait();
+                svc.compile(&m, FusionMode::FusionStitching).unwrap()
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(svc.cold_compiles(), 1, "one bucket, one pipeline run");
+    for (artifact, _) in &results[1..] {
+        assert!(Arc::ptr_eq(artifact, &results[0].0));
+    }
+}
+
+#[test]
+fn bucket_policy_is_part_of_the_cache_identity() {
+    let m = chain(32);
+    let exact = PipelineConfig::default();
+    let mut bucketed = PipelineConfig::default();
+    bucketed.bucketing = BucketPolicy::PowerOfTwo { min: 16 };
+
+    let k_exact = CacheKey::new(&m, FusionMode::FusionStitching, &exact);
+    let k_bucketed = CacheKey::new(&m, FusionMode::FusionStitching, &bucketed);
+    assert_eq!(
+        k_exact.fingerprint, k_bucketed.fingerprint,
+        "the module itself is unchanged"
+    );
+    assert_ne!(
+        k_exact.config_digest, k_bucketed.config_digest,
+        "changing the bucket policy must change the config digest"
+    );
+    assert_ne!(k_exact, k_bucketed, "runs bucketing differently never share artifacts");
+
+    // Boundary sets are distinguished too, not just the policy kind.
+    let mut coarse = PipelineConfig::default();
+    coarse.bucketing = BucketPolicy::Boundaries(vec![32, 128]);
+    let mut fine = PipelineConfig::default();
+    fine.bucketing = BucketPolicy::Boundaries(vec![32, 64, 128]);
+    assert_ne!(
+        CacheKey::new(&m, FusionMode::FusionStitching, &coarse).config_digest,
+        CacheKey::new(&m, FusionMode::FusionStitching, &fine).config_digest
+    );
+}
+
+#[test]
+fn for_class_collapses_bucket_members_to_one_key() {
+    let policy = BucketPolicy::PowerOfTwo { min: 16 };
+    let cfg = PipelineConfig::default();
+    let spec = Some(chain as fn(usize) -> Module);
+
+    let k17 = CacheKey::for_class(
+        &chain(17),
+        &policy.class_of(17, 128),
+        spec,
+        FusionMode::FusionStitching,
+        &cfg,
+    );
+    let k23 = CacheKey::for_class(
+        &chain(23),
+        &policy.class_of(23, 128),
+        spec,
+        FusionMode::FusionStitching,
+        &cfg,
+    );
+    assert_eq!(k17, k23, "concrete shapes in one bucket share the canonical key");
+
+    let k40 = CacheKey::for_class(
+        &chain(40),
+        &policy.class_of(40, 128),
+        spec,
+        FusionMode::FusionStitching,
+        &cfg,
+    );
+    assert_ne!(k17, k40, "the next bucket is a different key");
+
+    // Without a specializer the class key degenerates to exact-shape
+    // keying on the concrete module — bit for bit.
+    let degenerate = CacheKey::for_class(
+        &chain(17),
+        &policy.class_of(17, 128),
+        None,
+        FusionMode::FusionStitching,
+        &cfg,
+    );
+    assert_eq!(degenerate, CacheKey::new(&chain(17), FusionMode::FusionStitching, &cfg));
+}
+
+/// An exact-shape serving loop whose whole contract is one row length —
+/// the reference a bucketed loop's live regions are compared against.
+fn exact_coordinator(dir: &TempDir, len: usize) -> ServingCoordinator {
+    let cfg = ServerConfig {
+        artifact: "double".into(),
+        batch: BATCH,
+        in_elems_per_request: len,
+        out_elems_per_request: len,
+        input_dims: vec![BATCH as i64, len as i64],
+        policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
+        compile: Some(CompileOptions {
+            module: chain(len),
+            mode: FusionMode::FusionStitching,
+            pipeline: PipelineConfig::default(),
+            use_stitched_backend: true,
+            specialize: None,
+        }),
+        buckets: None,
+        trace: None,
+    };
+    ServingCoordinator::start(dir.path(), cfg).unwrap()
+}
+
+#[test]
+fn bucketed_serving_matches_exact_shape_serving_bitwise() {
+    let dir = TempDir::new("buckets-e2e");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+
+    let policy = BucketPolicy::PowerOfTwo { min: 2 };
+    let mut pipeline = PipelineConfig::default();
+    pipeline.bucketing = policy.clone();
+    let cfg = ServerConfig {
+        artifact: "double".into(),
+        batch: BATCH,
+        in_elems_per_request: 8,
+        out_elems_per_request: 8,
+        input_dims: vec![BATCH as i64, 8],
+        policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
+        compile: Some(CompileOptions {
+            module: chain(8),
+            mode: FusionMode::FusionStitching,
+            pipeline,
+            use_stitched_backend: true,
+            specialize: Some(chain as fn(usize) -> Module),
+        }),
+        buckets: Some(policy),
+        trace: None,
+    };
+    let bucketed = ServingCoordinator::start(dir.path(), cfg).unwrap();
+
+    for len in [3usize, 4, 6, 8, 2] {
+        let input: Vec<f32> = (0..len).map(|i| 0.3 * i as f32 - 0.7).collect();
+        let (got, _) = bucketed.infer(input.clone()).unwrap();
+        assert_eq!(got.len(), len, "live region only");
+
+        let exact = exact_coordinator(&dir, len);
+        let (want, _) = exact.infer(input).unwrap();
+        exact.shutdown().unwrap();
+
+        assert_eq!(
+            got.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|f| f.to_bits()).collect::<Vec<_>>(),
+            "length-{len} live region must match exact-shape serving bit for bit"
+        );
+    }
+
+    let stats = bucketed.shutdown().unwrap();
+    assert_eq!(stats.requests, 5);
+    assert_eq!(stats.stitched_batches, stats.batches, "every batch ran a bucket artifact");
+    // Lengths {3,4} → bucket 4, {6,8} → bucket 8, {2} → bucket 2:
+    // three canonical artifacts serve five concrete shapes.
+    assert_eq!(stats.cache_misses, 3, "one cold compile per bucket");
+    assert_eq!(stats.cache_hits, 2);
+    // Padding actually happened (3→4, 6→8) and is accounted for.
+    assert_eq!(stats.padded_elems, 1 + 2);
+    assert_eq!(stats.live_elems, (3 + 4 + 6 + 8 + 2) as u64);
+    let waste = stats.padding_waste_ratio();
+    assert!(waste > 0.0 && waste < 0.5, "waste = {waste}");
+}
+
+#[test]
+fn degenerate_exact_policy_serves_identically_to_unbucketed() {
+    // `Some(BucketPolicy::Exact)` must be indistinguishable from `None`
+    // for contract-length traffic: same outputs (bitwise), same batch
+    // and cache accounting, zero padding.
+    let dir = TempDir::new("buckets-degenerate");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+    let base = ServerConfig {
+        artifact: "double".into(),
+        batch: BATCH,
+        in_elems_per_request: 3,
+        out_elems_per_request: 3,
+        input_dims: vec![BATCH as i64, 3],
+        policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
+        compile: None,
+        buckets: None,
+        trace: None,
+    };
+    let mut exact_bucketed = base.clone();
+    exact_bucketed.buckets = Some(BucketPolicy::Exact);
+
+    let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
+    let mut counters = Vec::new();
+    for cfg in [base, exact_bucketed] {
+        let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
+        let mut leg = Vec::new();
+        for i in 0..6 {
+            let (out, _) = srv.infer(vec![0.25 * i as f32, -1.5, 2.0]).unwrap();
+            leg.push(out.iter().map(|f| f.to_bits()).collect());
+        }
+        let stats = srv.shutdown().unwrap();
+        counters.push((stats.requests, stats.rejected, stats.padded_elems));
+        outputs.push(leg);
+    }
+    assert_eq!(outputs[0], outputs[1], "degenerate policy must not change outputs");
+    assert_eq!(counters[0], (6, 0, 0));
+    assert_eq!(counters[1], (6, 0, 0), "exact bucketing pads nothing");
+}
+
+#[test]
+fn lying_bucket_claims_are_rejected_poolwide() {
+    // A row longer than its claimed bucket's canonical length must be
+    // rejected with a bucket-naming error and counted, not padded into
+    // a batch it cannot fit (which would corrupt its neighbors).
+    let dir = TempDir::new("buckets-lie");
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+    let cfg = ServerConfig {
+        artifact: "double".into(),
+        batch: BATCH,
+        in_elems_per_request: 3,
+        out_elems_per_request: 3,
+        input_dims: vec![BATCH as i64, 3],
+        policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
+        compile: None,
+        buckets: Some(BucketPolicy::PowerOfTwo { min: 2 }),
+        trace: None,
+    };
+    let p = ServingPool::start(dir.path(), cfg, PoolConfig { workers: 2, ..PoolConfig::default() })
+        .unwrap();
+
+    // Legitimate traffic: a contract-length row routes by bucket key
+    // and is served in full.
+    let (out, _) = p.infer(vec![1.0, 2.0, 3.0]).unwrap();
+    assert_eq!(out, vec![2.0, 4.0, 6.0]);
+
+    // A short row is padded to the contract stride for the interpreter
+    // and sliced back to its live region.
+    let (out, _) = p.infer(vec![0.5, -0.5]).unwrap();
+    assert_eq!(out, vec![1.0, -1.0]);
+
+    // The lie: claiming bucket 2 (canonical length 2) with 3 elements.
+    let bad = p.infer_keyed(2, vec![0.0; 3]);
+    let msg = format!("{:#}", bad.expect_err("oversized row for its claimed bucket"));
+    assert!(msg.contains("bucket"), "error must name the claimed bucket: {msg}");
+    assert!(msg.contains("3 elements"), "error must name the offending row: {msg}");
+
+    let stats = p.shutdown().unwrap();
+    assert_eq!(stats.aggregate.rejected, 1);
+    assert_eq!(stats.aggregate.requests, 2, "the lie never reached execution");
+    // The len-2 row padded one element up to the contract stride.
+    assert_eq!(stats.aggregate.padded_elems, 1);
+    assert_eq!(stats.aggregate.live_elems, 5);
+    let waste = stats.aggregate.padding_waste_ratio();
+    assert!(waste > 0.0 && waste < 0.5, "waste = {waste}");
+}
