@@ -1,12 +1,18 @@
 # Convenience targets; everything also works via plain cargo / python.
 
-.PHONY: build test bench bench-launches bench-serving bench-fusion bench-vm bench-global bench-profile bench-autotune bench-buckets artifacts doc
+.PHONY: build test test-faults bench bench-launches bench-serving bench-fusion bench-vm bench-global bench-profile bench-autotune bench-buckets bench-slo artifacts doc
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# Same suite plus the deterministic fault-injection tests (seeded
+# compile failures, slow kernels, worker panics) that only compile with
+# the non-default `faults` feature.
+test-faults:
+	cargo test -q --features faults
 
 bench:
 	cargo bench
@@ -61,6 +67,14 @@ bench-autotune:
 # the repo root.
 bench-buckets:
 	BENCH_SMOKE=1 cargo bench --bench shape_buckets
+
+# Deadline-SLO bench (smoke mode): slack admission vs a no-deadline
+# baseline under a heavy-tailed bursty arrival trace; full runs gate
+# admitted-p99-within-deadline at saturation, the baseline miss, and a
+# bounded moderate-load shed rate; writes BENCH_deadline_slo.json at
+# the repo root.
+bench-slo:
+	BENCH_SMOKE=1 cargo bench --bench deadline_slo
 
 doc:
 	cargo doc --no-deps

@@ -73,6 +73,9 @@ fn config(artifact: &str) -> ServerConfig {
         policy: BatchPolicy { max_batch: BATCH, max_wait: Duration::from_millis(2) },
         compile: None,
         trace: None,
+        buckets: None,
+        deadline: None,
+        faults: None,
     }
 }
 

@@ -158,6 +158,8 @@ fn run_hot_swap_leg() -> SwapResult {
         }),
         buckets: None,
         trace: None,
+        deadline: None,
+        faults: None,
     };
 
     let service = Arc::new(SharedCompileService::new(PipelineConfig::default()));
@@ -178,6 +180,7 @@ fn run_hot_swap_leg() -> SwapResult {
                 interval: Duration::from_millis(5),
                 min_launches: u64::MAX,
             }),
+            ..PoolConfig::default()
         },
         service.clone(),
     )

@@ -37,6 +37,8 @@ fn bench_variant(artifact: &str) -> Option<(f64, f64, f64, usize)> {
         compile: None,
         buckets: None,
         trace: None,
+        deadline: None,
+        faults: None,
     };
     let srv = ServingCoordinator::start(dir, cfg).ok()?;
     // warmup (first execution touches every buffer cold)

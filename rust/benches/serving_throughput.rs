@@ -91,6 +91,8 @@ fn server_config() -> ServerConfig {
         compile,
         buckets: None,
         trace: None,
+        deadline: None,
+        faults: None,
     }
 }
 
@@ -132,7 +134,7 @@ fn run_one(dir: &std::path::Path, workers: usize, requests: usize) -> Measuremen
     let pool = ServingPool::start(
         dir,
         server_config(),
-        PoolConfig { workers, queue_depth: 64, autotune: None },
+        PoolConfig { workers, queue_depth: 64, ..PoolConfig::default() },
     )
     .expect("pool start");
     let keys = client_keys(&pool, CLIENTS);

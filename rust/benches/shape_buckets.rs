@@ -101,6 +101,8 @@ fn run_leg(dir: &TempDir, policy: BucketPolicy, passes: usize) -> LegResult {
         }),
         buckets: Some(policy),
         trace: None,
+        deadline: None,
+        faults: None,
     };
     let srv = ServingCoordinator::start(dir.path(), cfg).expect("serving loop start");
     let mut outputs = Vec::new();

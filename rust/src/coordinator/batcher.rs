@@ -27,8 +27,23 @@
 //! modeled padding waste exceeds the cost of a separate launch is
 //! *demoted* — its key is rewritten to its exact length so it ships in
 //! its own exact-shape batch instead of being padded.
+//!
+//! # Deadlines and slack admission
+//!
+//! Requests may carry a **deadline** ([`Request::deadline`]). The
+//! deadline-aware collector ([`next_batch_admitted`]) runs a per-row
+//! feasibility check against a [`SlackCheck`] — the predicted kernel
+//! service time plus batch-assembly overhead, supplied by the worker
+//! from measured latencies or the cost oracle. A row whose deadline
+//! cannot be met even if the batch shipped *right now* is **shed**
+//! (returned separately so the worker replies with a structured
+//! [`Rejection::DeadlineInfeasible`] instead of a silent timeout), and
+//! an admitted deadline tightens the batch window so the batch flushes
+//! early rather than letting slack go negative while it waits for
+//! stragglers.
 
 use super::buckets::BucketAdmission;
+use std::fmt;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -47,19 +62,102 @@ pub struct Request {
     pub respond: std::sync::mpsc::Sender<anyhow::Result<Vec<f32>>>,
     /// Enqueue timestamp (for latency accounting).
     pub enqueued: Instant,
+    /// Absolute reply deadline, if the client set one. Requests without
+    /// a deadline are never shed by slack admission and do not tighten
+    /// the batch window.
+    pub deadline: Option<Instant>,
 }
 
-/// Batching policy.
-#[derive(Debug, Clone)]
-pub struct BatchPolicy {
-    pub max_batch: usize,
-    pub max_wait: Duration,
+/// Structured rejection reasons. Every fail-fast reply the coordinator
+/// sends carries one of these at the root of its error chain, so
+/// clients can branch on `err.downcast_ref::<Rejection>()` instead of
+/// string-matching, and the Prometheus exposition can label
+/// `fusion_rejected_total` by reason.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Rejection {
+    /// The request row exceeds the serving contract's stride.
+    Oversized,
+    /// The row does not fit the bucket it claimed.
+    BucketMismatch,
+    /// Slack admission: the deadline cannot be met even if the request
+    /// shipped immediately, given the predicted service time.
+    DeadlineInfeasible,
+    /// Load shedding: dropped without execution (backpressure, or a
+    /// queue drained while its worker was down).
+    Shed,
+    /// The compile service is fast-failing this key after repeated
+    /// compile failures (negative-result cache within backoff).
+    CompileFailed,
 }
 
-impl Default for BatchPolicy {
-    fn default() -> Self {
-        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+impl Rejection {
+    /// Stable label used by the Prometheus exposition
+    /// (`fusion_rejected_total{reason="..."}`).
+    pub fn reason(&self) -> &'static str {
+        match self {
+            Rejection::Oversized => "oversized",
+            Rejection::BucketMismatch => "bucket_mismatch",
+            Rejection::DeadlineInfeasible => "deadline",
+            Rejection::Shed => "shed",
+            Rejection::CompileFailed => "compile_failed",
+        }
     }
+}
+
+impl fmt::Display for Rejection {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let msg = match self {
+            Rejection::Oversized => "request rejected: row exceeds serving contract",
+            Rejection::BucketMismatch => "request rejected: row does not fit its bucket",
+            Rejection::DeadlineInfeasible => "request shed: deadline infeasible",
+            Rejection::Shed => "request shed: load shedding",
+            Rejection::CompileFailed => "request rejected: compile fast-fail",
+        };
+        f.write_str(msg)
+    }
+}
+
+impl std::error::Error for Rejection {}
+
+/// Per-shard feasibility inputs for slack admission: the worker's
+/// current estimate of how long one batch takes to execute
+/// (`service_us`, from measured exec latencies, the cost oracle's
+/// modeled kernel time, or the policy's bootstrap value — in that order
+/// of preference) plus the budgeted batch-assembly/reply overhead.
+#[derive(Debug, Clone, Copy)]
+pub struct SlackCheck {
+    /// Predicted batch execution time, microseconds.
+    pub service_us: f64,
+    /// Budgeted batch assembly + reply overhead, microseconds.
+    pub assembly_us: f64,
+}
+
+impl SlackCheck {
+    /// Total lead time a request needs between shipping and its reply.
+    pub fn lead(&self) -> Duration {
+        Duration::from_secs_f64((self.service_us + self.assembly_us).max(0.0) / 1e6)
+    }
+
+    /// The latest instant a batch containing a request with `deadline`
+    /// may ship and still meet it. `None` means the deadline predates
+    /// even a zero-wait ship (hopeless).
+    pub fn latest_ship(&self, deadline: Instant) -> Option<Instant> {
+        deadline.checked_sub(self.lead())
+    }
+
+    /// Can `deadline` still be met if the batch ships at `now`?
+    pub fn feasible(&self, deadline: Instant, now: Instant) -> bool {
+        self.latest_ship(deadline).is_some_and(|t| t >= now)
+    }
+}
+
+/// Result of a deadline-aware collection round: the batch to execute
+/// plus the rows shed as deadline-infeasible. The worker must reply to
+/// every shed row with a structured rejection — shedding is fail-fast,
+/// never a silent drop.
+pub struct BatchOutcome {
+    pub batch: Vec<Request>,
+    pub shed: Vec<Request>,
 }
 
 /// Collect the next batch from `rx` under `policy`, ignoring shape
@@ -67,7 +165,7 @@ impl Default for BatchPolicy {
 /// until `max_wait` expires. Returns `None` once the channel is closed
 /// and drained.
 pub fn next_batch(rx: &Receiver<Request>, policy: &BatchPolicy) -> Option<Vec<Request>> {
-    collect_batch(rx, policy, &mut None, false, None)
+    collect(rx, policy, &mut None, false, None, None).map(|o| o.batch)
 }
 
 /// Like [`next_batch`], but a batch only contains requests sharing one
@@ -79,7 +177,7 @@ pub fn next_batch_keyed(
     policy: &BatchPolicy,
     carry: &mut Option<Request>,
 ) -> Option<Vec<Request>> {
-    collect_batch(rx, policy, carry, true, None)
+    collect(rx, policy, carry, true, None, None).map(|o| o.batch)
 }
 
 /// Like [`next_batch_keyed`], but for bucket keys: before a request
@@ -95,7 +193,43 @@ pub fn next_batch_bucketed(
     carry: &mut Option<Request>,
     admission: Option<&BucketAdmission>,
 ) -> Option<Vec<Request>> {
-    collect_batch(rx, policy, carry, true, admission)
+    collect(rx, policy, carry, true, admission, None).map(|o| o.batch)
+}
+
+/// The deadline-aware keyed/bucketed collector. Behaves like
+/// [`next_batch_bucketed`] plus slack admission under `slack`:
+///
+/// - a deadline-carrying row that is infeasible *now* goes into
+///   [`BatchOutcome::shed`] instead of the batch;
+/// - an admitted deadline tightens the batch window to its latest
+///   feasible ship time, flushing the batch early instead of letting
+///   slack go negative;
+/// - rows without deadlines are unaffected.
+///
+/// Returns `None` only when the channel is closed, drained, *and*
+/// nothing was shed this round (a final all-shed round still returns
+/// `Some` with an empty batch so the worker can send the rejections).
+pub fn next_batch_admitted(
+    rx: &Receiver<Request>,
+    policy: &BatchPolicy,
+    carry: &mut Option<Request>,
+    admission: Option<&BucketAdmission>,
+    slack: Option<&SlackCheck>,
+) -> Option<BatchOutcome> {
+    collect(rx, policy, carry, true, admission, slack)
+}
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
 }
 
 /// Demote `req` to an exact-shape key if the admission check refuses to
@@ -110,40 +244,82 @@ fn maybe_demote(req: &mut Request, admission: Option<&BucketAdmission>) {
     }
 }
 
-fn collect_batch(
+/// Is `req` hopeless under `slack` — i.e. would it miss its deadline
+/// even if its batch shipped this instant?
+fn infeasible(req: &Request, slack: Option<&SlackCheck>, now: Instant) -> bool {
+    match (slack, req.deadline) {
+        (Some(sl), Some(d)) => !sl.feasible(d, now),
+        _ => false,
+    }
+}
+
+fn collect(
     rx: &Receiver<Request>,
     policy: &BatchPolicy,
     carry: &mut Option<Request>,
     keyed: bool,
     admission: Option<&BucketAdmission>,
-) -> Option<Vec<Request>> {
-    let (mut first, carried) = match carry.take() {
-        Some(r) => (r, true),
-        None => (rx.recv().ok()?, false),
+    slack: Option<&SlackCheck>,
+) -> Option<BatchOutcome> {
+    let mut shed: Vec<Request> = Vec::new();
+    // Seed loop: find a feasible first request, shedding hopeless ones.
+    let first = loop {
+        let cand = match carry.take() {
+            Some(r) => Some(r),
+            None => rx.recv().ok(),
+        };
+        let Some(mut cand) = cand else {
+            // Channel closed. A round that only shed still has replies
+            // to send, so it must surface; a truly empty round is the
+            // shutdown signal.
+            return if shed.is_empty() {
+                None
+            } else {
+                Some(BatchOutcome { batch: Vec::new(), shed })
+            };
+        };
+        maybe_demote(&mut cand, admission);
+        if infeasible(&cand, slack, Instant::now()) {
+            shed.push(cand);
+            continue;
+        }
+        break cand;
     };
-    maybe_demote(&mut first, admission);
     let key = first.shape_key;
     let now = Instant::now();
-    // A carried request already sat through the previous batch's window;
-    // give it only what is left of its own `max_wait` budget (possibly
-    // nothing) instead of restarting the clock.
-    let deadline = if carried {
-        (first.enqueued + policy.max_wait).max(now)
-    } else {
-        now + policy.max_wait
-    };
+    // The window is bounded by the *seed's arrival time*, whether it
+    // came from the carry slot or sat queued in the channel: a request
+    // that already waited through (part of) its budget gets only what
+    // is left of it, never a fresh full window.
+    let mut window = (first.enqueued + policy.max_wait).max(now);
+    // An admitted deadline caps the window at its latest feasible ship
+    // time: better to flush a small batch early than to shed later.
+    if let (Some(sl), Some(d)) = (slack, first.deadline) {
+        if let Some(ship) = sl.latest_ship(d) {
+            window = window.min(ship).max(now);
+        }
+    }
     let mut batch = vec![first];
     while batch.len() < policy.max_batch {
         let now = Instant::now();
-        if now >= deadline {
+        if now >= window {
             break;
         }
-        match rx.recv_timeout(deadline - now) {
+        match rx.recv_timeout(window - now) {
             Ok(mut req) => {
                 maybe_demote(&mut req, admission);
                 if keyed && req.shape_key != key {
                     *carry = Some(req);
                     break;
+                }
+                if infeasible(&req, slack, Instant::now()) {
+                    shed.push(req);
+                    continue;
+                }
+                if let (Some(sl), Some(d)) = (slack, req.deadline) {
+                    if let Some(ship) = sl.latest_ship(d) {
+                        window = window.min(ship);
+                    }
                 }
                 batch.push(req);
             }
@@ -151,7 +327,7 @@ fn collect_batch(
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    Some(batch)
+    Some(BatchOutcome { batch, shed })
 }
 
 #[cfg(test)]
@@ -166,7 +342,13 @@ mod tests {
     fn keyed_req(v: f32, key: u64) -> (Request, mpsc::Receiver<anyhow::Result<Vec<f32>>>) {
         let (tx, rx) = mpsc::channel();
         (
-            Request { input: vec![v], shape_key: key, respond: tx, enqueued: Instant::now() },
+            Request {
+                input: vec![v],
+                shape_key: key,
+                respond: tx,
+                enqueued: Instant::now(),
+                deadline: None,
+            },
             rx,
         )
     }
@@ -204,6 +386,29 @@ mod tests {
         let (tx, rx) = mpsc::channel::<Request>();
         drop(tx);
         assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    /// Regression: a request that sat queued in the channel (not the
+    /// carry slot) while the worker was busy must not re-arm a fresh
+    /// full `max_wait` window — its own arrival time bounds the window,
+    /// so a stale first request ships (near-)immediately.
+    #[test]
+    fn queued_request_does_not_rearm_a_fresh_window() {
+        let (tx, rx) = mpsc::channel();
+        let (r, _keep) = keyed_req(1.0, 7);
+        tx.send(r).unwrap();
+        // Simulate the worker being busy past the request's whole window.
+        std::thread::sleep(Duration::from_millis(12));
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let start = Instant::now();
+        let batch = next_batch(&rx, &policy).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(
+            start.elapsed() < Duration::from_millis(5),
+            "stale first request re-armed a fresh window: {:?}",
+            start.elapsed()
+        );
+        drop(tx);
     }
 
     #[test]
@@ -346,7 +551,13 @@ mod tests {
         let mk = |vals: Vec<f32>, key: u64| {
             let (resp, rr) = mpsc::channel();
             (
-                Request { input: vals, shape_key: key, respond: resp, enqueued: Instant::now() },
+                Request {
+                    input: vals,
+                    shape_key: key,
+                    respond: resp,
+                    enqueued: Instant::now(),
+                    deadline: None,
+                },
                 rr,
             )
         };
@@ -378,7 +589,13 @@ mod tests {
         let mk = |vals: Vec<f32>, key: u64| {
             let (resp, rr) = mpsc::channel();
             (
-                Request { input: vals, shape_key: key, respond: resp, enqueued: Instant::now() },
+                Request {
+                    input: vals,
+                    shape_key: key,
+                    respond: resp,
+                    enqueued: Instant::now(),
+                    deadline: None,
+                },
                 rr,
             )
         };
@@ -413,5 +630,87 @@ mod tests {
         let b = next_batch_keyed(&rx, &policy, &mut carry).unwrap();
         assert_eq!(b[0].shape_key, 2);
         assert!(next_batch_keyed(&rx, &policy, &mut carry).is_none());
+    }
+
+    // --- slack admission -------------------------------------------------
+
+    fn deadline_req(
+        v: f32,
+        key: u64,
+        deadline: Instant,
+    ) -> (Request, mpsc::Receiver<anyhow::Result<Vec<f32>>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                input: vec![v],
+                shape_key: key,
+                respond: tx,
+                enqueued: Instant::now(),
+                deadline: Some(deadline),
+            },
+            rx,
+        )
+    }
+
+    /// A deadline that cannot be met even by an immediate ship is shed,
+    /// not batched — and the shed row surfaces even when it was the
+    /// only request of the round.
+    #[test]
+    fn hopeless_deadline_is_shed_not_batched() {
+        let (tx, rx) = mpsc::channel();
+        // 10ms of predicted service vs a deadline 1ms out: hopeless.
+        let slack = SlackCheck { service_us: 10_000.0, assembly_us: 0.0 };
+        let (r, _keep) = deadline_req(1.0, 7, Instant::now() + Duration::from_millis(1));
+        let (ok, _keep2) = keyed_req(2.0, 7);
+        tx.send(r).unwrap();
+        tx.send(ok).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let mut carry = None;
+        let out = next_batch_admitted(&rx, &policy, &mut carry, None, Some(&slack)).unwrap();
+        assert_eq!(out.shed.len(), 1, "hopeless deadline must be shed");
+        assert_eq!(out.batch.len(), 1, "deadline-free request still ships");
+        assert_eq!(out.batch[0].input[0], 2.0);
+        assert!(next_batch_admitted(&rx, &policy, &mut carry, None, Some(&slack)).is_none());
+    }
+
+    /// An admitted tight deadline tightens the batch window: the batch
+    /// flushes at the latest feasible ship time instead of waiting out
+    /// the full `max_wait`.
+    #[test]
+    fn tight_deadline_flushes_batch_early() {
+        let (tx, rx) = mpsc::channel();
+        let slack = SlackCheck { service_us: 0.0, assembly_us: 0.0 };
+        // Feasible, but only ~3ms of slack vs a 100ms batch window.
+        let (r, _keep) = deadline_req(1.0, 7, Instant::now() + Duration::from_millis(3));
+        tx.send(r).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(100) };
+        let mut carry = None;
+        let start = Instant::now();
+        let out = next_batch_admitted(&rx, &policy, &mut carry, None, Some(&slack)).unwrap();
+        assert_eq!(out.batch.len(), 1);
+        assert!(out.shed.is_empty());
+        assert!(
+            start.elapsed() < Duration::from_millis(60),
+            "deadline did not tighten the window: {:?}",
+            start.elapsed()
+        );
+        drop(tx);
+    }
+
+    /// Without a slack check, deadlines are inert: nothing is shed and
+    /// the window is the ordinary arrival-bounded one.
+    #[test]
+    fn deadlines_are_inert_without_slack_check() {
+        let (tx, rx) = mpsc::channel();
+        // Already-expired deadline, but no slack check installed.
+        let (r, _keep) = deadline_req(1.0, 7, Instant::now() - Duration::from_millis(5));
+        tx.send(r).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        let mut carry = None;
+        let out = next_batch_admitted(&rx, &policy, &mut carry, None, None).unwrap();
+        assert_eq!(out.batch.len(), 1);
+        assert!(out.shed.is_empty());
     }
 }

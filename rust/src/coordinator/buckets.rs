@@ -237,6 +237,18 @@ impl BucketAdmission {
         }
     }
 
+    /// Modeled wall time of one batch of `elems` assembled elements,
+    /// µs: the launch overhead plus the per-element compute cost. The
+    /// slack-admission path ([`crate::coordinator::server::DeadlinePolicy`])
+    /// can use this as its bootstrap service estimate when the worker
+    /// has neither measurements nor a compiled module's timing yet —
+    /// the same constants that decide *padding* admission then also
+    /// bound *deadline* admission, so the two checks never disagree
+    /// about what a batch costs.
+    pub fn predicted_batch_us(&self, elems: usize) -> f64 {
+        self.launch_overhead_us + self.per_elem_us * elems as f64
+    }
+
     /// Admit a row of `len` elements into a batch executing at
     /// `canonical_len`? Rows that fill the row (no waste) are always
     /// admitted; otherwise padding must be modeled cheaper than the

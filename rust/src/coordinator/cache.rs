@@ -44,8 +44,11 @@ use crate::schedule::PerfLibrary;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
+use super::batcher::Rejection;
 use super::driver::compile_module_traced;
+use super::faults::FaultPlan;
 use super::metrics::PassTrace;
 use super::pipeline::{CompiledModule, FusionMode, PipelineConfig};
 
@@ -366,6 +369,22 @@ struct CompilerState {
 /// leader flips the flag.
 type InflightSlot = Arc<(Mutex<bool>, Condvar)>;
 
+/// Default negative-cache backoff: first retry after this long.
+pub const DEFAULT_FAIL_BACKOFF: Duration = Duration::from_millis(100);
+/// Default negative-cache backoff ceiling.
+pub const DEFAULT_FAIL_BACKOFF_CAP: Duration = Duration::from_secs(5);
+
+/// One persistently failing compile key: how often it failed, when it
+/// last failed, how long to fast-fail before the next real retry, and
+/// the error message to echo back meanwhile.
+#[derive(Debug, Clone)]
+struct FailEntry {
+    failures: u32,
+    last: Instant,
+    backoff: Duration,
+    error: String,
+}
+
 /// Panic-safe cleanup for the single-flight leader: whatever way the
 /// leader exits — success, compile error, or a panic inside the
 /// pipeline — the in-flight entry is removed and every waiter is
@@ -423,6 +442,18 @@ pub struct SharedCompileService {
     /// watch this to invalidate per-worker derived state (resolved
     /// stitched backends) without any lock on the hit path.
     generation: AtomicU64,
+    /// Negative-result cache: keys whose compiles keep failing fast-fail
+    /// (with the cached error) until an exponential backoff expires,
+    /// instead of re-running the whole pipeline on every batch.
+    failed: Mutex<HashMap<CacheKey, FailEntry>>,
+    /// How many compile calls were answered by the negative cache.
+    fast_fails: AtomicU64,
+    /// (base, cap) of the exponential failure backoff.
+    fail_backoff: Mutex<(Duration, Duration)>,
+    /// Optional fault-injection plan; the single-flight leader consults
+    /// it before running a real cold compile. Inert unless the `faults`
+    /// cargo feature is enabled.
+    faults: Mutex<Option<Arc<FaultPlan>>>,
 }
 
 impl SharedCompileService {
@@ -439,7 +470,79 @@ impl SharedCompileService {
             cfg,
             cold_compiles: AtomicU64::new(0),
             generation: AtomicU64::new(0),
+            failed: Mutex::new(HashMap::new()),
+            fast_fails: AtomicU64::new(0),
+            fail_backoff: Mutex::new((DEFAULT_FAIL_BACKOFF, DEFAULT_FAIL_BACKOFF_CAP)),
+            faults: Mutex::new(None),
         }
+    }
+
+    /// Install (or clear) a fault-injection plan. The single-flight
+    /// leader calls its compile hook before each real cold compile;
+    /// without the `faults` cargo feature the hook is a no-op.
+    pub fn set_fault_plan(&self, plan: Option<Arc<FaultPlan>>) {
+        *self.faults.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = plan;
+    }
+
+    /// Override the negative-cache backoff (base, cap) — tests use tiny
+    /// values so fast-fail → retry → recovery runs deterministically in
+    /// milliseconds.
+    pub fn set_failure_backoff(&self, base: Duration, cap: Duration) {
+        *self.fail_backoff.lock().unwrap_or_else(std::sync::PoisonError::into_inner) =
+            (base, cap.max(base));
+    }
+
+    /// How many compile calls the negative cache answered with an
+    /// immediate structured failure instead of a pipeline run.
+    pub fn compile_fast_fails(&self) -> u64 {
+        self.fast_fails.load(Ordering::Relaxed)
+    }
+
+    /// Number of keys currently tracked as failing.
+    pub fn negative_entries(&self) -> usize {
+        self.failed.lock().unwrap_or_else(std::sync::PoisonError::into_inner).len()
+    }
+
+    /// If `key` is inside its failure backoff window, the structured
+    /// fast-fail error to return. `None` means "try a real compile"
+    /// (never failed, or the backoff expired).
+    fn negative_lookup(&self, key: &CacheKey) -> Option<anyhow::Error> {
+        let failed = self.failed.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let entry = failed.get(key)?;
+        if entry.last.elapsed() >= entry.backoff {
+            return None; // backoff expired: let the caller retry for real
+        }
+        let remaining = entry.backoff.saturating_sub(entry.last.elapsed());
+        Some(anyhow::Error::new(Rejection::CompileFailed).context(format!(
+            "compile fast-fail ({} failure{} so far, next retry in {:?}): {}",
+            entry.failures,
+            if entry.failures == 1 { "" } else { "s" },
+            remaining,
+            entry.error
+        )))
+    }
+
+    /// Record a real compile failure for `key`: bump its failure count
+    /// and double its backoff (up to the cap).
+    fn record_failure(&self, key: &CacheKey, err: &anyhow::Error) {
+        let (base, cap) =
+            *self.fail_backoff.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut failed = self.failed.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let entry = failed.entry(key.clone()).or_insert(FailEntry {
+            failures: 0,
+            last: Instant::now(),
+            backoff: base,
+            error: String::new(),
+        });
+        entry.failures += 1;
+        entry.last = Instant::now();
+        entry.backoff = if entry.failures <= 1 { base } else { (entry.backoff * 2).min(cap) };
+        entry.error = format!("{err:#}");
+    }
+
+    /// A compile for `key` succeeded: forget any failure history.
+    fn clear_failure(&self, key: &CacheKey) {
+        self.failed.lock().unwrap_or_else(std::sync::PoisonError::into_inner).remove(key);
     }
 
     /// Compile (or fetch) `module` under `mode`. Returns the artifact
@@ -456,6 +559,14 @@ impl SharedCompileService {
             return Ok((hit, true));
         }
         loop {
+            // Negative cache: a key inside its failure backoff window
+            // fast-fails with the cached error instead of re-running
+            // the pipeline (also breaks the thundering herd when a
+            // failing leader releases its waiters).
+            if let Some(err) = self.negative_lookup(&key) {
+                self.fast_fails.fetch_add(1, Ordering::Relaxed);
+                return Err(err);
+            }
             enum Role {
                 Leader(InflightSlot),
                 Waiter(InflightSlot),
@@ -494,19 +605,36 @@ impl SharedCompileService {
                             .compiler
                             .lock()
                             .unwrap_or_else(std::sync::PoisonError::into_inner);
-                        self.cold_compiles.fetch_add(1, Ordering::Relaxed);
-                        compile_module_traced(module, mode, &mut state.lib, &self.cfg).map(
-                            |(compiled, trace)| {
-                                state.last_trace = Some(trace);
-                                Arc::new(compiled)
-                            },
-                        )
+                        // Fault injection (inert without the `faults`
+                        // feature): an injected failure skips the real
+                        // pipeline and does not count as a cold compile.
+                        let injected = self
+                            .faults
+                            .lock()
+                            .unwrap_or_else(std::sync::PoisonError::into_inner)
+                            .as_ref()
+                            .map_or(Ok(()), |plan| plan.fire_compile());
+                        match injected {
+                            Err(e) => Err(e),
+                            Ok(()) => {
+                                self.cold_compiles.fetch_add(1, Ordering::Relaxed);
+                                compile_module_traced(module, mode, &mut state.lib, &self.cfg)
+                                    .map(|(compiled, trace)| {
+                                        state.last_trace = Some(trace);
+                                        Arc::new(compiled)
+                                    })
+                            }
+                        }
                     };
-                    if let Ok(artifact) = &result {
-                        self.cache
-                            .write()
-                            .expect("cache poisoned")
-                            .insert(key.clone(), artifact.clone());
+                    match &result {
+                        Ok(artifact) => {
+                            self.cache
+                                .write()
+                                .expect("cache poisoned")
+                                .insert(key.clone(), artifact.clone());
+                            self.clear_failure(&key);
+                        }
+                        Err(e) => self.record_failure(&key, e),
                     }
                     return result.map(|artifact| (artifact, false));
                 }
@@ -845,6 +973,68 @@ mod tests {
         let after = svc.stats();
         assert_eq!(after.misses, before.misses, "background recompile bypasses miss counting");
         assert_eq!(after.evictions, before.evictions);
+    }
+
+    /// Negative-result caching: a failing key fast-fails (structured
+    /// `Rejection::CompileFailed`, no pipeline run) while inside its
+    /// backoff window, retries for real once the backoff expires, and a
+    /// success wipes the failure history.
+    #[cfg(feature = "faults")]
+    #[test]
+    fn failing_compile_key_fast_fails_then_recovers() {
+        let svc = SharedCompileService::new(PipelineConfig::default());
+        svc.set_failure_backoff(Duration::from_millis(40), Duration::from_millis(200));
+        svc.set_fault_plan(Some(Arc::new(FaultPlan::new(7).fail_compiles(1))));
+        let m = tiny_module(8);
+
+        // Real attempt #1: injected failure, recorded in the negative cache.
+        svc.compile(&m, FusionMode::FusionStitching).unwrap_err();
+        assert_eq!(svc.cold_compiles(), 0, "injected failure skips the pipeline");
+        assert_eq!(svc.negative_entries(), 1);
+
+        // Within the backoff window: structured fast-fail, still no pipeline.
+        let e = svc.compile(&m, FusionMode::FusionStitching).unwrap_err();
+        assert_eq!(
+            e.downcast_ref::<Rejection>(),
+            Some(&Rejection::CompileFailed),
+            "fast-fail must carry a structured reason: {e:#}"
+        );
+        assert_eq!(svc.compile_fast_fails(), 1);
+        assert_eq!(svc.cold_compiles(), 0);
+
+        // Past the backoff: a real retry runs and (plan exhausted) succeeds.
+        std::thread::sleep(Duration::from_millis(45));
+        let (artifact, hit) = svc.compile(&m, FusionMode::FusionStitching).unwrap();
+        assert!(!hit);
+        assert_eq!(svc.cold_compiles(), 1);
+        assert_eq!(svc.negative_entries(), 0, "success clears the failure history");
+
+        let (again, hit2) = svc.compile(&m, FusionMode::FusionStitching).unwrap();
+        assert!(hit2);
+        assert!(Arc::ptr_eq(&artifact, &again));
+    }
+
+    /// Each real failure doubles the backoff up to the cap.
+    #[cfg(feature = "faults")]
+    #[test]
+    fn repeated_failures_grow_the_backoff_exponentially() {
+        let svc = SharedCompileService::new(PipelineConfig::default());
+        svc.set_failure_backoff(Duration::from_millis(5), Duration::from_millis(40));
+        svc.set_fault_plan(Some(Arc::new(FaultPlan::new(0).fail_compiles(u64::MAX))));
+        let m = tiny_module(8);
+        for expected_ms in [5u64, 10, 20, 40, 40] {
+            svc.compile(&m, FusionMode::FusionStitching).unwrap_err();
+            let backoff = {
+                let failed =
+                    svc.failed.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                failed.values().next().expect("entry recorded").backoff
+            };
+            assert_eq!(backoff, Duration::from_millis(expected_ms));
+            // Wait the window out so the next attempt is real, not a
+            // fast-fail (which would not grow the backoff).
+            std::thread::sleep(backoff + Duration::from_millis(3));
+        }
+        assert_eq!(svc.cold_compiles(), 0, "injected failures never run the pipeline");
     }
 
     #[test]

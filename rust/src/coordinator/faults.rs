@@ -1,0 +1,340 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] describes *which* faults to inject (failing cold
+//! compiles, artificially slow kernels, a worker panic) and *when*
+//! (attempt/batch indices, a seed for jitter). The plan itself is plain
+//! data and always compiles; the **hooks** the coordinator calls
+//! ([`FaultPlan::fire_compile`], [`FaultPlan::fire_execute`],
+//! [`FaultPlan::fire_panic_point`], [`FaultPlan::note_batch`]) are real
+//! only under the non-default `faults` cargo feature and compile to
+//! empty inlined bodies otherwise — production builds carry zero
+//! fault-injection overhead.
+//!
+//! Everything is counted: each hook records how many faults it actually
+//! injected, so tests can reconcile observed behavior (respawns, sheds,
+//! fast-fails) against the injected ground truth. All state is atomic —
+//! one plan is shared by every worker, the compile service, and the
+//! test's assertions.
+//!
+//! The CLI accepts a plan as `--faults
+//! "compile_fail=2,slow_from=16,slow_count=8,slow_us=200,panic_at=12,seed=42"`
+//! (see [`FaultPlan::parse`]).
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// A window of artificially slow batches: every batch whose global
+/// index falls in `[from_batch, from_batch + count)` sleeps for
+/// `delay_us` plus seeded jitter before executing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlowKernels {
+    /// First global batch index (see [`FaultPlan::note_batch`]) to slow.
+    pub from_batch: u64,
+    /// How many batches from `from_batch` on are slowed.
+    pub count: u64,
+    /// Base injected delay, microseconds.
+    pub delay_us: u64,
+    /// Upper bound on seeded per-batch jitter, microseconds (0 = none).
+    pub jitter_us: u64,
+}
+
+/// A seeded, deterministic fault schedule. Construct with
+/// [`FaultPlan::new`] + builder methods or [`FaultPlan::parse`], share
+/// via `Arc` through `ServerConfig::faults`.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Fail this many cold compile attempts before letting one succeed.
+    compile_fail_first: u64,
+    slow: Option<SlowKernels>,
+    /// Panic one worker once its shard has executed this many batches.
+    panic_after_batches: Option<u64>,
+
+    // Live counters (shared across all holders of the plan).
+    compile_attempts: AtomicU64,
+    batches: AtomicU64,
+    injected_compile_fails: AtomicU64,
+    injected_slow: AtomicU64,
+    injected_panics: AtomicU64,
+    panicked: AtomicBool,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Fail the first `n` cold compile attempts with an injected error.
+    pub fn fail_compiles(mut self, n: u64) -> Self {
+        self.compile_fail_first = n;
+        self
+    }
+
+    /// Slow `count` batches starting at global batch `from`, by
+    /// `delay_us` (+ up to `jitter_us` of seeded jitter) each.
+    pub fn slow_kernels(mut self, from: u64, count: u64, delay_us: u64, jitter_us: u64) -> Self {
+        self.slow = Some(SlowKernels { from_batch: from, count, delay_us, jitter_us });
+        self
+    }
+
+    /// Panic one worker (exactly once, pool-wide) after `batches`
+    /// batches have executed.
+    pub fn panic_after(mut self, batches: u64) -> Self {
+        self.panic_after_batches = Some(batches);
+        self
+    }
+
+    /// Parse a comma-separated `key=value` spec, e.g.
+    /// `"compile_fail=2,slow_from=16,slow_count=8,slow_us=200,panic_at=12,seed=42"`.
+    /// Keys: `seed`, `compile_fail`, `slow_from`, `slow_count`,
+    /// `slow_us`, `slow_jitter_us`, `panic_at`.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut plan = FaultPlan::new(0);
+        let mut slow = SlowKernels { from_batch: 0, count: 0, delay_us: 0, jitter_us: 0 };
+        let mut any_slow = false;
+        for part in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fault spec entry `{part}` is not key=value"))?;
+            let n: u64 = v
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("fault spec `{part}`: bad number ({e})"))?;
+            match k.trim() {
+                "seed" => plan.seed = n,
+                "compile_fail" => plan.compile_fail_first = n,
+                "slow_from" => {
+                    slow.from_batch = n;
+                    any_slow = true;
+                }
+                "slow_count" => {
+                    slow.count = n;
+                    any_slow = true;
+                }
+                "slow_us" => {
+                    slow.delay_us = n;
+                    any_slow = true;
+                }
+                "slow_jitter_us" => {
+                    slow.jitter_us = n;
+                    any_slow = true;
+                }
+                "panic_at" => plan.panic_after_batches = Some(n),
+                other => anyhow::bail!(
+                    "unknown fault spec key `{other}` (expected seed, compile_fail, \
+                     slow_from, slow_count, slow_us, slow_jitter_us, panic_at)"
+                ),
+            }
+        }
+        if any_slow {
+            plan.slow = Some(slow);
+        }
+        Ok(plan)
+    }
+
+    /// `true` when this build actually injects faults (`faults`
+    /// feature); `false` when the hooks are compiled-out no-ops.
+    pub fn enabled() -> bool {
+        cfg!(feature = "faults")
+    }
+
+    // -- counters (always available, so reconcile assertions and the
+    //    CLI summary compile in every build) ---------------------------
+
+    pub fn injected_compile_fails(&self) -> u64 {
+        self.injected_compile_fails.load(Ordering::Relaxed)
+    }
+
+    /// Total cold compile attempts the hook has seen (injected failures
+    /// and pass-throughs alike).
+    pub fn compile_attempts(&self) -> u64 {
+        self.compile_attempts.load(Ordering::Relaxed)
+    }
+
+    pub fn injected_slow(&self) -> u64 {
+        self.injected_slow.load(Ordering::Relaxed)
+    }
+
+    pub fn injected_panics(&self) -> u64 {
+        self.injected_panics.load(Ordering::Relaxed)
+    }
+
+    pub fn batches_noted(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn has_panicked(&self) -> bool {
+        self.panicked.load(Ordering::Relaxed)
+    }
+
+    // -- hooks ---------------------------------------------------------
+
+    /// Called by the compile service's leader before running a real
+    /// cold compile. Fails the first `compile_fail` attempts.
+    #[cfg(feature = "faults")]
+    pub fn fire_compile(&self) -> anyhow::Result<()> {
+        let attempt = self.compile_attempts.fetch_add(1, Ordering::Relaxed);
+        if attempt < self.compile_fail_first {
+            self.injected_compile_fails.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!(
+                "injected compile fault (attempt {} of {} scheduled failures, seed {})",
+                attempt + 1,
+                self.compile_fail_first,
+                self.seed
+            );
+        }
+        Ok(())
+    }
+
+    #[cfg(not(feature = "faults"))]
+    #[inline(always)]
+    pub fn fire_compile(&self) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Called by the worker immediately before executing a batch:
+    /// sleeps when the global batch index falls in the slow window.
+    #[cfg(feature = "faults")]
+    pub fn fire_execute(&self) {
+        if let Some(s) = self.slow {
+            let b = self.batches.load(Ordering::Relaxed);
+            if b >= s.from_batch && b < s.from_batch.saturating_add(s.count) {
+                self.injected_slow.fetch_add(1, Ordering::Relaxed);
+                let jitter = if s.jitter_us == 0 {
+                    0
+                } else {
+                    super::metrics::splitmix64(self.seed ^ b) % s.jitter_us
+                };
+                std::thread::sleep(std::time::Duration::from_micros(s.delay_us + jitter));
+            }
+        }
+    }
+
+    #[cfg(not(feature = "faults"))]
+    #[inline(always)]
+    pub fn fire_execute(&self) {}
+
+    /// Called by the worker at the top of its loop, *before* collecting
+    /// a batch — so an injected panic never takes in-hand requests down
+    /// with it; the supervisor's drain only has to cover the queue.
+    /// Panics exactly once pool-wide.
+    #[cfg(feature = "faults")]
+    pub fn fire_panic_point(&self) {
+        if let Some(at) = self.panic_after_batches {
+            if self.batches.load(Ordering::Relaxed) >= at
+                && !self.panicked.swap(true, Ordering::SeqCst)
+            {
+                self.injected_panics.fetch_add(1, Ordering::Relaxed);
+                panic!("injected worker panic after {at} batches (seed {})", self.seed);
+            }
+        }
+    }
+
+    #[cfg(not(feature = "faults"))]
+    #[inline(always)]
+    pub fn fire_panic_point(&self) {}
+
+    /// Called by the worker after each executed batch; advances the
+    /// global batch index that `slow_from`/`panic_at` are relative to.
+    #[cfg(feature = "faults")]
+    pub fn note_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[cfg(not(feature = "faults"))]
+    #[inline(always)]
+    pub fn note_batch(&self) {}
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "FaultPlan(seed={}", self.seed)?;
+        if self.compile_fail_first > 0 {
+            write!(f, ", compile_fail={}", self.compile_fail_first)?;
+        }
+        if let Some(s) = self.slow {
+            write!(
+                f,
+                ", slow[{}..{}]={}us(+{}us jitter)",
+                s.from_batch,
+                s.from_batch.saturating_add(s.count),
+                s.delay_us,
+                s.jitter_us
+            )?;
+        }
+        if let Some(at) = self.panic_after_batches {
+            write!(f, ", panic_at={at}")?;
+        }
+        write!(f, ", {})", if Self::enabled() { "armed" } else { "hooks compiled out" })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_key() {
+        let plan = FaultPlan::parse(
+            "compile_fail=2, slow_from=16, slow_count=8, slow_us=200, \
+             slow_jitter_us=50, panic_at=12, seed=42",
+        )
+        .unwrap();
+        assert_eq!(plan.compile_fail_first, 2);
+        assert_eq!(
+            plan.slow,
+            Some(SlowKernels { from_batch: 16, count: 8, delay_us: 200, jitter_us: 50 })
+        );
+        assert_eq!(plan.panic_after_batches, Some(12));
+        assert_eq!(plan.seed, 42);
+        let shown = plan.to_string();
+        assert!(shown.contains("compile_fail=2"), "{shown}");
+        assert!(shown.contains("panic_at=12"), "{shown}");
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_numbers() {
+        assert!(FaultPlan::parse("explode=1").is_err());
+        assert!(FaultPlan::parse("panic_at=soon").is_err());
+        assert!(FaultPlan::parse("panic_at").is_err());
+        assert!(FaultPlan::parse("").unwrap().panic_after_batches.is_none());
+    }
+
+    #[cfg(feature = "faults")]
+    #[test]
+    fn compile_hook_fails_exactly_the_first_n_attempts() {
+        let plan = FaultPlan::new(1).fail_compiles(2);
+        assert!(plan.fire_compile().is_err());
+        assert!(plan.fire_compile().is_err());
+        assert!(plan.fire_compile().is_ok());
+        assert!(plan.fire_compile().is_ok());
+        assert_eq!(plan.injected_compile_fails(), 2);
+    }
+
+    #[cfg(feature = "faults")]
+    #[test]
+    fn panic_point_fires_exactly_once() {
+        let plan = FaultPlan::new(0).panic_after(0);
+        let caught =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| plan.fire_panic_point()));
+        assert!(caught.is_err(), "armed panic point must fire");
+        // Second call must NOT panic again.
+        plan.fire_panic_point();
+        assert_eq!(plan.injected_panics(), 1);
+        assert!(plan.has_panicked());
+    }
+
+    #[cfg(not(feature = "faults"))]
+    #[test]
+    fn hooks_are_inert_without_the_feature() {
+        let plan = FaultPlan::new(0).fail_compiles(10).panic_after(0);
+        assert!(plan.fire_compile().is_ok());
+        plan.fire_panic_point();
+        plan.fire_execute();
+        plan.note_batch();
+        assert_eq!(plan.injected_compile_fails(), 0);
+        assert_eq!(plan.injected_panics(), 0);
+        assert_eq!(plan.batches_noted(), 0);
+        assert!(!FaultPlan::enabled());
+    }
+}

@@ -18,8 +18,12 @@
 //!   traffic shares compiled artifacts, plus the cost-modeled padding
 //!   admission check.
 //! - [`pool`] — the sharded multi-worker serving engine: N workers with
-//!   sticky shape-key routing, bounded-queue backpressure, and the
-//!   concurrent single-flight compile service.
+//!   sticky shape-key routing, bounded-queue backpressure, the
+//!   concurrent single-flight compile service, and supervisor-driven
+//!   worker respawn with rerouting while a shard is down.
+//! - [`faults`] — the deterministic fault-injection harness (seeded
+//!   compile failures, slow kernels, worker panics) behind the
+//!   non-default `faults` cargo feature; inert no-ops otherwise.
 //! - [`metrics`] — latency/throughput accounting for the serving loop
 //!   plus the per-pass compile-time trace types.
 
@@ -27,15 +31,21 @@ pub mod batcher;
 pub mod buckets;
 pub mod cache;
 pub mod driver;
+pub mod faults;
 pub mod metrics;
 pub mod pipeline;
 pub mod pool;
 pub mod server;
 
+pub use batcher::{BatchOutcome, BatchPolicy, Rejection, SlackCheck};
 pub use buckets::{BucketAdmission, BucketPolicy, ShapeClass};
 pub use cache::{CacheKey, CacheStats, CompileCache, CompileService, SharedCompileService};
 pub use driver::{compile_module_traced, Pass, PassManager};
+pub use faults::FaultPlan;
 pub use metrics::{PassRecord, PassTrace, StreamingSummary};
 pub use pipeline::{compile_module, evaluate, CompiledModule, FusionMode, ModuleReport, PipelineConfig};
 pub use pool::{AutotuneConfig, PoolConfig, ServingPool, ServingStats};
-pub use server::{CompileBackend, CompileOptions, ServerConfig, ServingCoordinator, WorkerStats};
+pub use server::{
+    CompileBackend, CompileOptions, DeadlinePolicy, RejectCounts, ServerConfig,
+    ServingCoordinator, WorkerStats,
+};

@@ -25,23 +25,42 @@
 //! - **Live stats.** Each worker publishes a [`WorkerStats`] snapshot
 //!   after every batch; [`ServingPool::stats`] merges them into a
 //!   [`ServingStats`] aggregate readable while the pool serves.
+//! - **Fault containment.** A worker panic is caught on its own
+//!   thread: queued requests get a structured [`Rejection::Shed`]
+//!   reply, the incarnation's counters fold into the shard's durable
+//!   accumulator, and a supervisor thread respawns the worker (up to
+//!   [`PoolConfig::max_respawns`] times per shard). While a shard is
+//!   down — respawning, or its budget exhausted — submissions *reroute*
+//!   to the next live shard instead of erroring forever on the sticky
+//!   key. Dropping the pool (or [`ServingPool::shutdown`]) drains every
+//!   queue: every in-flight request is answered or shed, never left
+//!   hanging on a client `recv`.
 //!
 //! The artifact is parsed once up front ([`Engine::parse_artifact`])
 //! and the same immutable program is registered into every worker's
 //! engine, so starting a 16-worker pool does not re-parse the HLO text
 //! 16 times.
 
-use super::batcher::Request;
+use super::batcher::{Rejection, Request};
 use super::cache::{CacheStats, SharedCompileService};
 use super::server::{run_worker, CompileBackend, ServerConfig, WorkerStats};
+use crate::runtime::interp::HloProgram;
 use crate::runtime::Engine;
-use anyhow::{anyhow, Context, Result};
-use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use anyhow::{anyhow, Context, Error, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the data from a poisoned lock. A worker
+/// that panicked mid-publish leaves at worst a stale stats snapshot —
+/// never an invariant violation worth propagating the panic for.
+fn lock_tolerant<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Feedback-directed autotuning knobs (the `serve --autotune` path).
 ///
@@ -76,11 +95,15 @@ pub struct PoolConfig {
     /// Run the feedback-directed autotuning thread (requires
     /// [`ServerConfig::compile`]; ignored without it).
     pub autotune: Option<AutotuneConfig>,
+    /// How many times the supervisor will respawn each shard's worker
+    /// after a panic before marking the shard permanently down (its
+    /// traffic then reroutes to live shards).
+    pub max_respawns: u32,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        PoolConfig { workers: 0, queue_depth: 64, autotune: None }
+        PoolConfig { workers: 0, queue_depth: 64, autotune: None, max_respawns: 3 }
     }
 }
 
@@ -97,7 +120,9 @@ impl PoolConfig {
 /// Aggregate view over every worker, readable while the pool is live.
 #[derive(Debug, Clone)]
 pub struct ServingStats {
-    /// Per-worker snapshots, indexed by shard.
+    /// Per-worker snapshots, indexed by shard. Each entry folds the
+    /// shard's finished worker incarnations (clean exits and contained
+    /// panics) together with its current incarnation's live snapshot.
     pub per_worker: Vec<WorkerStats>,
     /// Everything merged: counters summed, latency summaries folded,
     /// [`crate::exec::LaunchLedger`]s merged.
@@ -112,6 +137,20 @@ pub struct ServingStats {
     /// The shared service's hot-swap generation: how many times the
     /// autotuner replaced the served module (`None` without a service).
     pub generation: Option<u64>,
+    /// Workers the supervisor respawned after a contained panic.
+    pub respawns: u64,
+    /// Submissions that landed on a non-primary shard because the
+    /// sticky shard was down (respawning or budget-exhausted).
+    pub reroutes: u64,
+    /// Current per-shard queue depth (requests submitted but not yet
+    /// drained by the worker), indexed by shard.
+    pub queue_depths: Vec<u64>,
+    /// Shards currently without a live worker (mid-respawn, or their
+    /// respawn budget is exhausted).
+    pub shards_down: usize,
+    /// Compile requests the shared service's negative cache answered
+    /// with a fast-fail (`None` without a service).
+    pub compile_fast_fails: Option<u64>,
 }
 
 impl ServingStats {
@@ -146,6 +185,17 @@ impl ServingStats {
         if let Some(generation) = self.generation {
             j.field_uint("generation", generation);
         }
+        j.field_uint("respawns", self.respawns);
+        j.field_uint("reroutes", self.reroutes);
+        j.field_uint("shards_down", self.shards_down as u64);
+        if let Some(fast) = self.compile_fast_fails {
+            j.field_uint("compile_fast_fails", fast);
+        }
+        j.key("queue_depths").begin_arr();
+        for d in &self.queue_depths {
+            j.uint(*d);
+        }
+        j.end_arr();
         j.end_obj();
     }
 
@@ -166,16 +216,211 @@ impl ServingStats {
             cache: None,
             cold_compiles: None,
             generation: None,
+            respawns: 0,
+            reroutes: 0,
+            queue_depths: Vec::new(),
+            shards_down: 0,
+            compile_fast_fails: None,
         }
+    }
+}
+
+/// The mutable routing state of one shard, guarded by one lock so a
+/// submitter sees a consistent (channel, live-stats) pair and the
+/// supervisor can swap both atomically on respawn.
+struct ShardState {
+    /// The live worker's bounded request queue; `None` while the shard
+    /// is down (mid-respawn, or its budget is exhausted).
+    tx: Option<SyncSender<Request>>,
+    /// The live incarnation's stats snapshot (a fresh Arc per respawn;
+    /// finished incarnations fold into [`Shard::done`]).
+    live: Arc<Mutex<WorkerStats>>,
+    /// Remaining respawn budget.
+    respawns_left: u32,
+}
+
+/// One serving shard: routing state plus the durable counters that
+/// survive worker incarnations.
+///
+/// Lock order across a shard is `done` → `state` → `live` (each lock
+/// optional, never taken in reverse), so stats readers, the supervisor
+/// and the fold-on-exit path cannot deadlock.
+struct Shard {
+    state: Mutex<ShardState>,
+    /// Counters folded in from every finished worker incarnation —
+    /// clean exits contribute their final return value, contained
+    /// panics their last published live snapshot.
+    done: Mutex<WorkerStats>,
+    /// Queue-depth gauge: submitters increment before sending, the
+    /// worker decrements by everything a collection round drained.
+    depth: Arc<AtomicU64>,
+}
+
+/// Everything the submitters, workers and supervisor share.
+struct PoolShared {
+    shards: Vec<Shard>,
+    cfg: ServerConfig,
+    dir: PathBuf,
+    program: Arc<HloProgram>,
+    backend: Option<CompileBackend>,
+    queue_depth: usize,
+    vm_threads: usize,
+    /// Set on teardown: the supervisor stops respawning.
+    stopping: AtomicBool,
+    respawns: AtomicU64,
+    reroutes: AtomicU64,
+    /// Join handles of every spawned worker incarnation (teardown joins
+    /// them all; a panicked thread's join returns Err harmlessly).
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    /// The supervisor's wake-up channel. Workers clone the sender
+    /// transiently to report their shard down; teardown clears it so
+    /// the supervisor's `recv` unblocks once the last worker exited.
+    sup_tx: Mutex<Option<mpsc::Sender<usize>>>,
+}
+
+/// Report `shard_idx` down to the supervisor (no-op once teardown
+/// cleared the channel).
+fn notify_down(shared: &PoolShared, shard_idx: usize) {
+    let tx = lock_tolerant(&shared.sup_tx).clone();
+    if let Some(tx) = tx {
+        let _ = tx.send(shard_idx);
+    }
+}
+
+/// Fold a finished incarnation's stats into the shard's durable
+/// accumulator: the worker's final return value on a clean exit, or
+/// (after a panic, when the return value died with the stack) its last
+/// published live snapshot. The live cell is zeroed under the same
+/// locks so a stats reader never double-counts the folded portion.
+fn fold_into_done(shard: &Shard, live: &Mutex<WorkerStats>, fin: Option<WorkerStats>) {
+    let mut done = lock_tolerant(&shard.done);
+    let mut live = lock_tolerant(live);
+    let stats = fin.unwrap_or_else(|| live.clone());
+    done.merge(&stats);
+    *live = WorkerStats::default();
+}
+
+/// Spawn one worker incarnation for `shard_idx`, reading from `rx` and
+/// publishing into `live`. `ready` carries the startup handshake for
+/// the initial spawn; respawns pass `None` (a respawn that fails to
+/// start reports the shard down again instead).
+///
+/// The worker body runs under `catch_unwind`: a panic — injected or
+/// real — is contained to this incarnation. Its queued requests are
+/// shed with a structured reply, its counters fold into the shard's
+/// accumulator, and the supervisor is asked for a replacement.
+fn spawn_worker(
+    shared: &Arc<PoolShared>,
+    shard_idx: usize,
+    rx: Receiver<Request>,
+    live: Arc<Mutex<WorkerStats>>,
+    ready: Option<mpsc::Sender<Result<()>>>,
+) -> JoinHandle<()> {
+    let shared = shared.clone();
+    std::thread::spawn(move || {
+        let mut engine = match Engine::new(&shared.dir) {
+            Ok(e) => e,
+            Err(e) => {
+                let e = e.context(format!("worker {shard_idx} startup"));
+                match ready {
+                    Some(tx) => {
+                        let _ = tx.send(Err(e));
+                    }
+                    None => {
+                        eprintln!("respawned worker {shard_idx} failed to start: {e:#}");
+                        notify_down(&shared, shard_idx);
+                    }
+                }
+                return;
+            }
+        };
+        engine.register_program(&shared.cfg.artifact, shared.program.clone());
+        if let Some(tx) = ready {
+            let _ = tx.send(Ok(()));
+        }
+        let model = engine.get(&shared.cfg.artifact).expect("registered above");
+        let shard = &shared.shards[shard_idx];
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            run_worker(
+                model,
+                &rx,
+                &shared.cfg,
+                shared.backend.as_ref(),
+                Some(live.as_ref()),
+                shared.vm_threads,
+                shard_idx as u32,
+                Some(shard.depth.as_ref()),
+            )
+        }));
+        match result {
+            Ok(stats) => fold_into_done(shard, &live, Some(stats)),
+            Err(_) => {
+                fold_into_done(shard, &live, None);
+                // Shed everything still queued with a structured reply
+                // — the panicked loop will never serve it, and a
+                // dropped channel would read as an anonymous failure
+                // client-side.
+                let mut drained = 0u64;
+                while let Ok(req) = rx.try_recv() {
+                    drained += 1;
+                    let _ = req.respond.send(Err(Error::new(Rejection::Shed).context(format!(
+                        "worker {shard_idx} panicked; request shed during respawn"
+                    ))));
+                }
+                // Dropping the receiver now disconnects any submitter
+                // still holding the old sender, so it reroutes instead
+                // of queueing into the void.
+                drop(rx);
+                if drained > 0 {
+                    shard.depth.fetch_sub(drained, Ordering::Relaxed);
+                    let mut done = lock_tolerant(&shard.done);
+                    done.rejected += drained as usize;
+                    done.rejects.shed += drained;
+                }
+                eprintln!("serving worker {shard_idx} panicked; respawning");
+                notify_down(&shared, shard_idx);
+            }
+        }
+    })
+}
+
+/// The supervisor loop: each message names a shard whose worker died.
+/// Within budget, install a fresh channel + live cell and respawn;
+/// after the budget, mark the shard permanently down (its traffic
+/// reroutes). Exits when every sender is gone — teardown clears the
+/// pool's copy and the last worker's transient clone drops with it.
+fn supervise(shared: Arc<PoolShared>, sup_rx: mpsc::Receiver<usize>) {
+    while let Ok(idx) = sup_rx.recv() {
+        if shared.stopping.load(Ordering::SeqCst) {
+            continue;
+        }
+        let shard = &shared.shards[idx];
+        let (tx, rx) = mpsc::sync_channel::<Request>(shared.queue_depth);
+        let live = Arc::new(Mutex::new(WorkerStats::default()));
+        {
+            let mut state = lock_tolerant(&shard.state);
+            if state.respawns_left == 0 {
+                state.tx = None;
+                eprintln!("worker {idx} exhausted its respawn budget; shard marked down");
+                continue;
+            }
+            state.respawns_left -= 1;
+            // Requests that died with the old channel leaked their
+            // depth increments; the fresh channel starts empty.
+            shard.depth.store(0, Ordering::Relaxed);
+            state.tx = Some(tx);
+            state.live = live.clone();
+        }
+        shared.respawns.fetch_add(1, Ordering::Relaxed);
+        let handle = spawn_worker(&shared, idx, rx, live, None);
+        lock_tolerant(&shared.handles).push(handle);
     }
 }
 
 /// Handle to the sharded serving engine. See the module docs.
 pub struct ServingPool {
-    txs: Vec<SyncSender<Request>>,
-    workers: Vec<JoinHandle<WorkerStats>>,
-    live: Vec<Arc<Mutex<WorkerStats>>>,
-    cfg: ServerConfig,
+    shared: Arc<PoolShared>,
+    supervisor: Option<JoinHandle<()>>,
     service: Option<Arc<SharedCompileService>>,
     autotune_stop: Option<Arc<AtomicBool>>,
     autotune_thread: Option<JoinHandle<()>>,
@@ -226,97 +471,136 @@ impl ServingPool {
         // malformed artifact.
         let program = Engine::parse_artifact(artifact_dir, &cfg.artifact)
             .with_context(|| format!("loading artifact {:?}", cfg.artifact))?;
+        // Wire the shared service into the fault plan so injected
+        // compile failures flow through the negative cache like real
+        // ones.
+        if let (Some(svc), Some(plan)) = (&service, &cfg.faults) {
+            svc.set_fault_plan(Some(plan.clone()));
+        }
         let backend = service.clone().map(CompileBackend::Shared);
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let mut txs = Vec::with_capacity(n);
-        let mut workers = Vec::with_capacity(n);
-        let mut live = Vec::with_capacity(n);
-        for shard in 0..n {
-            let (tx, rx): (SyncSender<Request>, Receiver<Request>) =
-                mpsc::sync_channel(pool.queue_depth);
-            let snapshot = Arc::new(Mutex::new(WorkerStats::default()));
-            let wcfg = cfg.clone();
-            let wprog = program.clone();
-            let wbackend = backend.clone();
-            let wsnapshot = snapshot.clone();
-            let wready = ready_tx.clone();
-            let dir = artifact_dir.to_path_buf();
-            workers.push(std::thread::spawn(move || {
-                let mut engine = match Engine::new(&dir) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        let _ = wready.send(Err(e.context(format!("worker {shard} startup"))));
-                        return WorkerStats::default();
-                    }
-                };
-                engine.register_program(&wcfg.artifact, wprog);
-                let _ = wready.send(Ok(()));
-                let model = engine.get(&wcfg.artifact).expect("registered above");
-                run_worker(
-                    model,
-                    &rx,
-                    &wcfg,
-                    wbackend.as_ref(),
-                    Some(wsnapshot.as_ref()),
-                    vm_threads,
-                    shard as u32,
-                )
-            }));
-            txs.push(tx);
-            live.push(snapshot);
-        }
-        // Fail fast if any shard failed to come up; dropping `txs` on
-        // the error path disconnects the healthy workers, which then
-        // drain and exit.
-        drop(ready_tx);
+        let (sup_tx, sup_rx) = mpsc::channel::<usize>();
+        let mut shards = Vec::with_capacity(n);
+        let mut inboxes = Vec::with_capacity(n);
         for _ in 0..n {
-            ready_rx.recv().map_err(|_| anyhow!("worker died during startup"))??;
+            let (tx, rx) = mpsc::sync_channel::<Request>(pool.queue_depth);
+            let live = Arc::new(Mutex::new(WorkerStats::default()));
+            shards.push(Shard {
+                state: Mutex::new(ShardState {
+                    tx: Some(tx),
+                    live: live.clone(),
+                    respawns_left: pool.max_respawns,
+                }),
+                done: Mutex::new(WorkerStats::default()),
+                depth: Arc::new(AtomicU64::new(0)),
+            });
+            inboxes.push((rx, live));
         }
+        let shared = Arc::new(PoolShared {
+            shards,
+            cfg,
+            dir: artifact_dir.to_path_buf(),
+            program,
+            backend,
+            queue_depth: pool.queue_depth,
+            vm_threads,
+            stopping: AtomicBool::new(false),
+            respawns: AtomicU64::new(0),
+            reroutes: AtomicU64::new(0),
+            handles: Mutex::new(Vec::new()),
+            sup_tx: Mutex::new(Some(sup_tx)),
+        });
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        {
+            let mut handles = lock_tolerant(&shared.handles);
+            for (idx, (rx, live)) in inboxes.into_iter().enumerate() {
+                handles.push(spawn_worker(&shared, idx, rx, live, Some(ready_tx.clone())));
+            }
+        }
+        drop(ready_tx);
+        // Fail fast if any shard failed to come up; tear the healthy
+        // ones down before returning the error.
+        let mut startup: Result<()> = Ok(());
+        for _ in 0..n {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    startup = Err(e);
+                    break;
+                }
+                Err(_) => {
+                    startup = Err(anyhow!("worker died during startup"));
+                    break;
+                }
+            }
+        }
+        if let Err(e) = startup {
+            shared.stopping.store(true, Ordering::SeqCst);
+            *lock_tolerant(&shared.sup_tx) = None;
+            for shard in &shared.shards {
+                lock_tolerant(&shard.state).tx = None;
+            }
+            let handles: Vec<_> = lock_tolerant(&shared.handles).drain(..).collect();
+            for h in handles {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        let supervisor = {
+            let shared = shared.clone();
+            std::thread::spawn(move || supervise(shared, sup_rx))
+        };
         // Feedback loop: a background thread writes measured launch
         // times back into the perf library and re-explores under the
         // measured oracle; a changed plan hot-swaps via the cache
         // generation (workers re-resolve on their next batch).
-        let (autotune_stop, autotune_thread) = match (&pool.autotune, &service, &cfg.compile) {
-            (Some(at), Some(svc), Some(opts)) => {
-                let stop = Arc::new(AtomicBool::new(false));
-                let tstop = stop.clone();
-                let tsvc = svc.clone();
-                let module = opts.module.clone();
-                let mode = opts.mode;
-                let at = at.clone();
-                let handle = std::thread::spawn(move || {
-                    let mut seen_epoch = 0u64;
-                    while !tstop.load(Ordering::Relaxed) {
-                        std::thread::sleep(at.interval);
-                        if tstop.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        // Write-back: fold the resident module's launch
-                        // spans into the library's measured entries.
-                        if let Some(current) = tsvc.probe(&module, mode) {
-                            let snap = current.profile.snapshot();
-                            if snap.total_launches() >= at.min_launches {
-                                tsvc.absorb_profile(&snap);
+        let (autotune_stop, autotune_thread) =
+            match (&pool.autotune, &service, &shared.cfg.compile) {
+                (Some(at), Some(svc), Some(opts)) => {
+                    let stop = Arc::new(AtomicBool::new(false));
+                    let tstop = stop.clone();
+                    let tsvc = svc.clone();
+                    let module = opts.module.clone();
+                    let mode = opts.mode;
+                    let at = at.clone();
+                    let handle = std::thread::spawn(move || {
+                        let mut seen_epoch = 0u64;
+                        while !tstop.load(Ordering::Relaxed) {
+                            std::thread::sleep(at.interval);
+                            if tstop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            // Write-back: fold the resident module's launch
+                            // spans into the library's measured entries.
+                            if let Some(current) = tsvc.probe(&module, mode) {
+                                let snap = current.profile.snapshot();
+                                if snap.total_launches() >= at.min_launches {
+                                    tsvc.absorb_profile(&snap);
+                                }
+                            }
+                            // Re-explore only when the measured picture
+                            // actually moved since the last pass.
+                            let epoch = tsvc.measured_epoch();
+                            if epoch != 0 && epoch != seen_epoch {
+                                seen_epoch = epoch;
+                                let _ = tsvc.reexplore_and_swap(&module, mode);
                             }
                         }
-                        // Re-explore only when the measured picture
-                        // actually moved since the last pass.
-                        let epoch = tsvc.measured_epoch();
-                        if epoch != 0 && epoch != seen_epoch {
-                            seen_epoch = epoch;
-                            let _ = tsvc.reexplore_and_swap(&module, mode);
-                        }
-                    }
-                });
-                (Some(stop), Some(handle))
-            }
-            _ => (None, None),
-        };
-        Ok(ServingPool { txs, workers, live, cfg, service, autotune_stop, autotune_thread })
+                    });
+                    (Some(stop), Some(handle))
+                }
+                _ => (None, None),
+            };
+        Ok(ServingPool {
+            shared,
+            supervisor: Some(supervisor),
+            service,
+            autotune_stop,
+            autotune_thread,
+        })
     }
 
     pub fn config(&self) -> &ServerConfig {
-        &self.cfg
+        &self.shared.cfg
     }
 
     /// The shared compile service behind the pool (`None` without
@@ -330,15 +614,75 @@ impl ServingPool {
     /// finalizer spreads consecutive keys (shape keys are often input
     /// lengths) uniformly over shards.
     pub fn route(&self, shape_key: u64) -> usize {
-        (super::metrics::splitmix64(shape_key) % self.txs.len() as u64) as usize
+        (super::metrics::splitmix64(shape_key) % self.shared.shards.len() as u64) as usize
     }
 
     fn request(
+        &self,
         input: Vec<f32>,
         shape_key: u64,
+        deadline: Option<Duration>,
     ) -> (Request, mpsc::Receiver<Result<Vec<f32>>>) {
         let (rtx, rrx) = mpsc::channel();
-        (Request { input, shape_key, respond: rtx, enqueued: Instant::now() }, rrx)
+        let enqueued = Instant::now();
+        let deadline = deadline
+            .or_else(|| self.shared.cfg.deadline.as_ref().and_then(|d| d.default_deadline))
+            .map(|d| enqueued + d);
+        (Request { input, shape_key, respond: rtx, enqueued, deadline }, rrx)
+    }
+
+    /// Deliver `req` to its sticky shard, rerouting past down shards.
+    ///
+    /// Probing starts at the key's primary shard and walks the ring; a
+    /// shard without a live channel (mid-respawn or budget-exhausted)
+    /// is skipped and the landing on a non-primary shard counts as a
+    /// reroute. A *full* queue is backpressure, not death: blocking
+    /// submission waits on the primary shard, non-blocking submission
+    /// sheds with a structured [`Rejection::Shed`] — neither violates
+    /// sticky routing for a merely-busy shard.
+    fn submit(&self, mut req: Request, blocking: bool) -> Result<()> {
+        let n = self.shared.shards.len();
+        let primary = self.route(req.shape_key);
+        for probe in 0..n {
+            let idx = (primary + probe) % n;
+            let shard = &self.shared.shards[idx];
+            let tx = match lock_tolerant(&shard.state).tx.clone() {
+                Some(tx) => tx,
+                None => continue,
+            };
+            // Gauge before sending so the worker's decrement can never
+            // observe the increment missing (transient overcount only).
+            shard.depth.fetch_add(1, Ordering::Relaxed);
+            let outcome = if blocking {
+                tx.send(req).map_err(|mpsc::SendError(r)| (r, false))
+            } else {
+                match tx.try_send(req) {
+                    Ok(()) => Ok(()),
+                    Err(TrySendError::Full(r)) => Err((r, true)),
+                    Err(TrySendError::Disconnected(r)) => Err((r, false)),
+                }
+            };
+            match outcome {
+                Ok(()) => {
+                    if probe > 0 {
+                        self.shared.reroutes.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return Ok(());
+                }
+                Err((r, full)) => {
+                    shard.depth.fetch_sub(1, Ordering::Relaxed);
+                    if full {
+                        return Err(Error::new(Rejection::Shed)
+                            .context(format!("backpressure: worker {idx} queue is full")));
+                    }
+                    // Disconnected mid-submit (the worker died between
+                    // the state read and the send): recover the request
+                    // and probe the next shard.
+                    req = r;
+                }
+            }
+        }
+        Err(anyhow!("no live worker shard available ({n} shards down or stopping)"))
     }
 
     /// Submit one request and block for its output (backpressure: the
@@ -348,8 +692,22 @@ impl ServingPool {
     /// the bucket key under [`ServerConfig::buckets`], the exact length
     /// otherwise).
     pub fn infer(&self, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
-        let key = self.cfg.shape_key_for(input.len());
+        let key = self.shared.cfg.shape_key_for(input.len());
         self.infer_keyed(key, input)
+    }
+
+    /// [`ServingPool::infer`] with an explicit per-request deadline:
+    /// the request is answered within `deadline` or shed with a
+    /// structured [`Rejection::DeadlineInfeasible`] (slack admission
+    /// requires [`ServerConfig::deadline`] to be set; without a policy
+    /// the deadline is recorded but never sheds).
+    pub fn infer_with_deadline(
+        &self,
+        input: Vec<f32>,
+        deadline: Duration,
+    ) -> Result<(Vec<f32>, Duration)> {
+        let key = self.shared.cfg.shape_key_for(input.len());
+        self.infer_keyed_with_deadline(key, input, deadline)
     }
 
     /// [`ServingPool::infer`] with an explicit shape key (e.g. a
@@ -359,15 +717,29 @@ impl ServingPool {
     /// bucket's canonical length is rejected, not trusted.
     pub fn infer_keyed(&self, shape_key: u64, input: Vec<f32>) -> Result<(Vec<f32>, Duration)> {
         let enqueued = Instant::now();
-        let rrx = self.infer_keyed_async(shape_key, input)?;
+        let rrx = self.infer_keyed_async_with_deadline(shape_key, input, None)?;
+        let out = rrx.recv().context("worker dropped response")??;
+        Ok((out, enqueued.elapsed()))
+    }
+
+    /// [`ServingPool::infer_keyed`] with an explicit per-request
+    /// deadline.
+    pub fn infer_keyed_with_deadline(
+        &self,
+        shape_key: u64,
+        input: Vec<f32>,
+        deadline: Duration,
+    ) -> Result<(Vec<f32>, Duration)> {
+        let enqueued = Instant::now();
+        let rrx = self.infer_keyed_async_with_deadline(shape_key, input, Some(deadline))?;
         let out = rrx.recv().context("worker dropped response")??;
         Ok((out, enqueued.elapsed()))
     }
 
     /// Submit asynchronously; the caller holds the response channel.
     pub fn infer_async(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
-        let key = self.cfg.shape_key_for(input.len());
-        self.infer_keyed_async(key, input)
+        let key = self.shared.cfg.shape_key_for(input.len());
+        self.infer_keyed_async_with_deadline(key, input, None)
     }
 
     /// Async submit with an explicit shape key. Blocks while the
@@ -377,38 +749,71 @@ impl ServingPool {
         shape_key: u64,
         input: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
-        let shard = self.route(shape_key);
-        let (req, rrx) = Self::request(input, shape_key);
-        self.txs[shard].send(req).map_err(|_| anyhow!("worker {shard} gone"))?;
+        self.infer_keyed_async_with_deadline(shape_key, input, None)
+    }
+
+    /// Async submit with an explicit shape key and optional deadline
+    /// (`None` falls back to [`DeadlinePolicy::default_deadline`] when
+    /// a policy is configured).
+    ///
+    /// [`DeadlinePolicy::default_deadline`]: super::server::DeadlinePolicy::default_deadline
+    pub fn infer_keyed_async_with_deadline(
+        &self,
+        shape_key: u64,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        let (req, rrx) = self.request(input, shape_key, deadline);
+        self.submit(req, true)?;
         Ok(rrx)
     }
 
     /// Non-blocking submit: fails fast with a "backpressure" error when
     /// the shard's queue is full, so callers can shed load instead of
-    /// stalling.
+    /// stalling. A *down* shard (unlike a busy one) reroutes to the
+    /// next live shard.
     pub fn try_infer_async(
         &self,
         shape_key: u64,
         input: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
-        let shard = self.route(shape_key);
-        let (req, rrx) = Self::request(input, shape_key);
-        match self.txs[shard].try_send(req) {
-            Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(_)) => {
-                Err(anyhow!("backpressure: worker {shard} queue is full"))
-            }
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("worker {shard} gone")),
-        }
+        let (req, rrx) = self.request(input, shape_key, None);
+        self.submit(req, false)?;
+        Ok(rrx)
     }
 
     /// Merge every worker's latest snapshot (plus the shared cache's
     /// counters) into one [`ServingStats`] — readable while the pool
     /// is live; workers refresh their snapshot after every batch.
+    /// Per-shard entries fold finished incarnations' counters together
+    /// with the live incarnation's.
     pub fn stats(&self) -> ServingStats {
-        let per_worker: Vec<WorkerStats> =
-            self.live.iter().map(|w| w.lock().expect("live stats poisoned").clone()).collect();
-        Self::merged(per_worker, self.service.as_deref())
+        let mut per_worker = Vec::with_capacity(self.shared.shards.len());
+        let mut queue_depths = Vec::with_capacity(self.shared.shards.len());
+        let mut shards_down = 0;
+        for shard in &self.shared.shards {
+            // Lock order: done → state → live (see [`Shard`]). Holding
+            // `done` across the live read keeps the fold-on-exit path
+            // from being double-counted or missed mid-read.
+            let done = lock_tolerant(&shard.done);
+            let state = lock_tolerant(&shard.state);
+            if state.tx.is_none() {
+                shards_down += 1;
+            }
+            let live = lock_tolerant(&state.live).clone();
+            drop(state);
+            let mut w = done.clone();
+            drop(done);
+            w.merge(&live);
+            per_worker.push(w);
+            queue_depths.push(shard.depth.load(Ordering::Relaxed));
+        }
+        let mut stats = Self::merged(per_worker, self.service.as_deref());
+        stats.respawns = self.shared.respawns.load(Ordering::Relaxed);
+        stats.reroutes = self.shared.reroutes.load(Ordering::Relaxed);
+        stats.queue_depths = queue_depths;
+        stats.shards_down = shards_down;
+        stats
     }
 
     fn merged(per_worker: Vec<WorkerStats>, service: Option<&SharedCompileService>) -> ServingStats {
@@ -422,24 +827,75 @@ impl ServingPool {
             cache: service.map(SharedCompileService::stats),
             cold_compiles: service.map(SharedCompileService::cold_compiles),
             generation: service.map(SharedCompileService::generation),
+            respawns: 0,
+            reroutes: 0,
+            queue_depths: Vec::new(),
+            shards_down: 0,
+            compile_fast_fails: service.map(SharedCompileService::compile_fast_fails),
+        }
+    }
+
+    /// Tear the serving machinery down in dependency order: stop the
+    /// autotuner, tell the supervisor to stop respawning, close every
+    /// shard's queue (workers drain what's left and exit), join the
+    /// supervisor, then join every worker incarnation. Idempotent —
+    /// [`ServingPool::shutdown`] calls it and `Drop` calls it again
+    /// harmlessly.
+    fn teardown(&mut self) {
+        if let Some(stop) = self.autotune_stop.take() {
+            stop.store(true, Ordering::Relaxed);
+        }
+        if let Some(handle) = self.autotune_thread.take() {
+            let _ = handle.join();
+        }
+        self.shared.stopping.store(true, Ordering::SeqCst);
+        *lock_tolerant(&self.shared.sup_tx) = None;
+        for shard in &self.shared.shards {
+            lock_tolerant(&shard.state).tx = None;
+        }
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
+        }
+        // The supervisor may have installed a replacement channel while
+        // we were clearing; with the supervisor gone this sweep is
+        // final, and the fresh worker drains its (empty) queue and
+        // exits like the rest.
+        for shard in &self.shared.shards {
+            lock_tolerant(&shard.state).tx = None;
+        }
+        let handles: Vec<_> = lock_tolerant(&self.shared.handles).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
         }
     }
 
     /// Stop accepting requests, drain every shard, and return the
-    /// final statistics.
-    pub fn shutdown(self) -> Result<ServingStats> {
-        if let Some(stop) = &self.autotune_stop {
-            stop.store(true, Ordering::Relaxed);
+    /// final statistics. Worker panics during the run were contained
+    /// and respawned, so shutdown itself cannot fail on them; the
+    /// `Result` is kept for API stability.
+    pub fn shutdown(mut self) -> Result<ServingStats> {
+        self.teardown();
+        let mut per_worker = Vec::with_capacity(self.shared.shards.len());
+        let mut queue_depths = Vec::with_capacity(self.shared.shards.len());
+        for shard in &self.shared.shards {
+            // Every incarnation has exited and folded into `done`.
+            per_worker.push(lock_tolerant(&shard.done).clone());
+            queue_depths.push(shard.depth.load(Ordering::Relaxed));
         }
-        if let Some(handle) = self.autotune_thread {
-            handle.join().map_err(|_| anyhow!("autotune thread panicked"))?;
-        }
-        drop(self.txs);
-        let mut per_worker = Vec::with_capacity(self.workers.len());
-        for worker in self.workers {
-            per_worker.push(worker.join().map_err(|_| anyhow!("worker panicked"))?);
-        }
-        Ok(Self::merged(per_worker, self.service.as_deref()))
+        let mut stats = Self::merged(per_worker, self.service.as_deref());
+        stats.respawns = self.shared.respawns.load(Ordering::Relaxed);
+        stats.reroutes = self.shared.reroutes.load(Ordering::Relaxed);
+        stats.queue_depths = queue_depths;
+        Ok(stats)
+    }
+}
+
+impl Drop for ServingPool {
+    /// Dropping the pool mid-load is a graceful shutdown: queues close,
+    /// workers drain and answer everything still in flight, threads
+    /// join. No client is ever left hanging on `recv`.
+    fn drop(&mut self) {
+        self.teardown();
     }
 }
 
@@ -470,6 +926,8 @@ ENTRY main {
             compile: None,
             trace: None,
             buckets: None,
+            deadline: None,
+            faults: None,
         }
     }
 
@@ -499,6 +957,8 @@ ENTRY main {
         assert_eq!(stats.aggregate.requests, 16);
         // sticky sharding actually spread the keys
         assert!(stats.per_worker.iter().filter(|w| w.requests > 0).count() >= 2);
+        // healthy run: nothing respawned or rerouted
+        assert_eq!((stats.respawns, stats.reroutes), (0, 0));
     }
 
     #[test]
@@ -529,6 +989,8 @@ ENTRY main {
         assert_eq!(live.aggregate.requests, 6);
         assert!(live.aggregate.batches >= 1);
         assert_eq!(live.workers(), 2);
+        assert_eq!(live.queue_depths.len(), 2);
+        assert_eq!(live.shards_down, 0);
         let fin = p.shutdown().unwrap();
         assert_eq!(fin.aggregate.requests, 6);
     }
@@ -543,7 +1005,7 @@ ENTRY main {
         let p = ServingPool::start(
             dir.path(),
             cfg,
-            PoolConfig { workers: 1, queue_depth: 2, autotune: None },
+            PoolConfig { workers: 1, queue_depth: 2, ..PoolConfig::default() },
         )
         .unwrap();
         // Flood one shard with try_send: the bounded queue must refuse
@@ -556,6 +1018,11 @@ ENTRY main {
                 Ok(rx) => receivers.push(rx),
                 Err(e) => {
                     assert!(e.to_string().contains("backpressure"), "got: {e:#}");
+                    assert_eq!(
+                        e.downcast_ref::<Rejection>(),
+                        Some(&Rejection::Shed),
+                        "backpressure errors carry the structured shed reason"
+                    );
                     saw_full = true;
                     break;
                 }
@@ -576,5 +1043,6 @@ ENTRY main {
         assert!(bad.is_err(), "oversized row must error, not truncate");
         let stats = p.shutdown().unwrap();
         assert_eq!(stats.aggregate.rejected, 1);
+        assert_eq!(stats.aggregate.rejects.oversized, 1);
     }
 }

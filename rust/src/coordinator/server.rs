@@ -24,16 +24,20 @@
 //! canonical artifact shared by every length in the bucket. `None`
 //! keeps the historical exact-shape semantics bit-for-bit.
 
-use super::batcher::{next_batch_bucketed, next_batch_keyed, BatchPolicy, Request};
+use super::batcher::{
+    next_batch_admitted, BatchOutcome, BatchPolicy, Rejection, Request, SlackCheck,
+};
 use super::buckets::{BucketAdmission, BucketPolicy, ShapeClass};
 use super::cache::{CompileService, SharedCompileService};
+use super::faults::FaultPlan;
 use super::metrics::StreamingSummary;
 use super::pipeline::{CompiledModule, FusionMode, PipelineConfig};
 use crate::exec::{ArenaStats, ExecArena, LaunchLedger, StitchedExecutable};
 use crate::hlo::Module;
 use crate::runtime::{Engine, LoadedModel};
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Error, Result};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -72,6 +76,37 @@ pub struct CompileOptions {
     pub specialize: Option<fn(usize) -> Module>,
 }
 
+/// Deadline handling for the serving loop. Installing a policy turns
+/// on slack admission: the batcher predicts whether a deadline-carrying
+/// request can still be answered in time (queue wait so far + predicted
+/// kernel service time + assembly overhead vs. its deadline) and
+/// **sheds** hopeless requests with an immediate structured
+/// [`Rejection::DeadlineInfeasible`] reply instead of letting them time
+/// out silently. The service-time estimate prefers, in order: the
+/// worker's measured per-batch execution p95, the cost oracle's modeled
+/// module time (once a compile resolved), and `bootstrap_service_us`.
+#[derive(Debug, Clone)]
+pub struct DeadlinePolicy {
+    /// Deadline stamped onto requests whose callers did not set one
+    /// (`None`: such requests are never shed).
+    pub default_deadline: Option<Duration>,
+    /// Service-time estimate before any measurement or compile exists,
+    /// microseconds.
+    pub bootstrap_service_us: f64,
+    /// Budgeted batch assembly + reply overhead, microseconds.
+    pub assembly_overhead_us: f64,
+}
+
+impl Default for DeadlinePolicy {
+    fn default() -> Self {
+        DeadlinePolicy {
+            default_deadline: None,
+            bootstrap_service_us: 200.0,
+            assembly_overhead_us: 50.0,
+        }
+    }
+}
+
 /// Server configuration: which artifact to serve and its baked shapes.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
@@ -102,6 +137,13 @@ pub struct ServerConfig {
     /// key-pure, rows validate against `in_elems_per_request` — kept
     /// bit-for-bit for existing deployments.
     pub buckets: Option<BucketPolicy>,
+    /// Deadline/slack-admission policy. `None` (the default) keeps the
+    /// historical no-deadline semantics: nothing is ever shed.
+    pub deadline: Option<DeadlinePolicy>,
+    /// Fault-injection plan for tests/benches (see
+    /// [`crate::coordinator::faults`]). Inert unless the non-default
+    /// `faults` cargo feature is enabled; `None` in production.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl ServerConfig {
@@ -180,6 +222,41 @@ impl ServerConfig {
     }
 }
 
+/// Per-reason rejection counters, mirroring [`Rejection`]'s variants.
+/// `oversized + bucket_mismatch + deadline + shed + compile_failed`
+/// always equals [`WorkerStats::rejected`] for a single worker (and the
+/// pool-merged aggregate).
+#[derive(Debug, Default, Clone)]
+pub struct RejectCounts {
+    /// Rows longer than the unbucketed serving contract.
+    pub oversized: u64,
+    /// Rows that exceed their claimed bucket's canonical length.
+    pub bucket_mismatch: u64,
+    /// Requests shed by slack admission ([`Rejection::DeadlineInfeasible`]).
+    pub deadline: u64,
+    /// Requests shed by overload/teardown ([`Rejection::Shed`]).
+    pub shed: u64,
+    /// Requests answered with a compile fast-fail
+    /// ([`Rejection::CompileFailed`]).
+    pub compile_failed: u64,
+}
+
+impl RejectCounts {
+    /// Sum over every reason.
+    pub fn total(&self) -> u64 {
+        self.oversized + self.bucket_mismatch + self.deadline + self.shed + self.compile_failed
+    }
+
+    /// Fold another worker's counts into this one.
+    pub fn merge(&mut self, other: &RejectCounts) {
+        self.oversized += other.oversized;
+        self.bucket_mismatch += other.bucket_mismatch;
+        self.deadline += other.deadline;
+        self.shed += other.shed;
+        self.compile_failed += other.compile_failed;
+    }
+}
+
 /// Handle to the serving loop.
 pub struct ServingCoordinator {
     tx: Option<Sender<Request>>,
@@ -198,6 +275,16 @@ pub struct WorkerStats {
     /// Requests rejected before execution (e.g. rows longer than the
     /// serving contract's `in_elems_per_request`).
     pub rejected: usize,
+    /// [`WorkerStats::rejected`] broken down by [`Rejection`] reason.
+    pub rejects: RejectCounts,
+    /// Requests that were *served* but replied after their deadline had
+    /// already passed (slack admission mispredicted). Shed requests are
+    /// counted under `rejects.deadline`, not here.
+    pub deadline_misses: u64,
+    /// Signed per-request slack at reply time, microseconds (positive:
+    /// replied early; negative: a deadline miss). Only deadline-carrying
+    /// requests record here.
+    pub slack_us: StreamingSummary,
     /// Execution time spent inside the runtime, per batch, microseconds.
     pub exec_us: StreamingSummary,
     /// Compilation-cache hits observed on the serving path.
@@ -275,6 +362,9 @@ impl WorkerStats {
         self.batches += other.batches;
         self.requests += other.requests;
         self.rejected += other.rejected;
+        self.rejects.merge(&other.rejects);
+        self.deadline_misses += other.deadline_misses;
+        self.slack_us.merge(&other.slack_us);
         self.exec_us.merge(&other.exec_us);
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
@@ -302,6 +392,14 @@ impl WorkerStats {
         j.field_uint("batches", self.batches as u64);
         j.field_uint("requests", self.requests as u64);
         j.field_uint("rejected", self.rejected as u64);
+        j.key("rejects").begin_obj();
+        j.field_uint("oversized", self.rejects.oversized);
+        j.field_uint("bucket_mismatch", self.rejects.bucket_mismatch);
+        j.field_uint("deadline", self.rejects.deadline);
+        j.field_uint("shed", self.rejects.shed);
+        j.field_uint("compile_failed", self.rejects.compile_failed);
+        j.end_obj();
+        j.field_uint("deadline_misses", self.deadline_misses);
         j.field_uint("cache_hits", self.cache_hits as u64);
         j.field_uint("cache_misses", self.cache_misses as u64);
         j.field_uint("compile_failures", self.compile_failures as u64);
@@ -330,6 +428,7 @@ impl WorkerStats {
             ("exec_us", &self.exec_us),
             ("compile_us", &self.compile_us),
             ("queue_us", &self.queue_us),
+            ("slack_us", &self.slack_us),
         ] {
             let qs = s.percentiles_us(&[50.0, 95.0, 99.0]);
             j.key(name).begin_obj();
@@ -459,6 +558,12 @@ fn validate_stitched(
 ///
 /// `shard` is this worker's id in the flight recorder's trace (one
 /// ring/track per worker when [`ServerConfig::trace`] is set).
+///
+/// `depth` is the pool's per-shard queue-depth gauge: the submitter
+/// increments it per enqueued request and this loop decrements it by
+/// everything a collection round drained from the channel (served,
+/// shed, or parked in the carry slot). `None` for the standalone
+/// coordinator.
 pub(crate) fn run_worker(
     model: &LoadedModel,
     rx: &Receiver<Request>,
@@ -467,6 +572,7 @@ pub(crate) fn run_worker(
     live: Option<&Mutex<WorkerStats>>,
     vm_threads: usize,
     shard: u32,
+    depth: Option<&AtomicU64>,
 ) -> WorkerStats {
     // Install the flight recorder for this worker thread: every layer
     // below (compile service, stitched VM, interpreter) records spans
@@ -477,6 +583,10 @@ pub(crate) fn run_worker(
     let out_elems = cfg.batch * cfg.out_elems_per_request;
     let mut carry = None;
     let mut compile_failed = false;
+    // The cost model's predicted module time (µs), set once a compile
+    // resolves — the slack check's estimate until real measurements
+    // accumulate.
+    let mut modeled_service_us: Option<f64> = None;
     // Stitched-VM dispatch: resolved from the first successful compile
     // when requested (and signature-compatible).
     let mut stitched: Option<Arc<StitchedExecutable>> = None;
@@ -512,10 +622,58 @@ pub(crate) fn run_worker(
     let mut arena = ExecArena::with_threads(vm_threads);
     let mut input: Vec<f32> = Vec::new();
     let mut stitched_out: Vec<f32> = Vec::new();
-    while let Some(batch) = match buckets {
-        Some(_) => next_batch_bucketed(rx, &cfg.policy, &mut carry, admission.as_ref()),
-        None => next_batch_keyed(rx, &cfg.policy, &mut carry),
-    } {
+    loop {
+        // Fault hook: injected worker panics fire between batches, so
+        // the pool's containment drain covers whatever is still queued.
+        if let Some(plan) = &cfg.faults {
+            plan.fire_panic_point();
+        }
+        // Slack admission: the predicted service time for the next
+        // batch, preferring measured execution p95 over the compiled
+        // module's modeled time over the policy's bootstrap estimate.
+        let slack = cfg.deadline.as_ref().map(|dp| SlackCheck {
+            service_us: if stats.exec_us.count() >= 2 {
+                stats.exec_us.percentiles_us(&[95.0])[0]
+            } else {
+                modeled_service_us.unwrap_or(dp.bootstrap_service_us)
+            },
+            assembly_us: dp.assembly_overhead_us,
+        });
+        let carry_before = carry.is_some() as usize;
+        let Some(BatchOutcome { batch, shed }) =
+            next_batch_admitted(rx, &cfg.policy, &mut carry, admission.as_ref(), slack.as_ref())
+        else {
+            break;
+        };
+        // Queue-depth accounting: everything that left the channel this
+        // round — admitted, shed, or parked in the carry slot.
+        if let Some(depth) = depth {
+            let drained =
+                (batch.len() + shed.len() + carry.is_some() as usize).saturating_sub(carry_before);
+            depth.fetch_sub(drained as u64, Ordering::Relaxed);
+        }
+        // Infeasible requests get an immediate structured rejection
+        // instead of timing out silently on the client side.
+        if !shed.is_empty() {
+            stats.rejected += shed.len();
+            stats.rejects.deadline += shed.len() as u64;
+            if let Some(live) = live {
+                *live.lock().expect("live stats poisoned") = stats.clone();
+            }
+            let predicted =
+                slack.as_ref().map_or(0.0, |s| s.lead().as_secs_f64() * 1e6);
+            for req in shed {
+                let _ = req.respond.send(Err(Error::new(Rejection::DeadlineInfeasible).context(
+                    format!(
+                        "shed: predicted service + assembly time {predicted:.0}us \
+                         exceeds the request's remaining deadline slack"
+                    ),
+                )));
+            }
+        }
+        if batch.is_empty() {
+            continue;
+        }
         // The batch's shape class: under bucketing, the claimed bucket
         // key resolved against the contract's maximum row; otherwise
         // the degenerate one-shape class of the contract itself.
@@ -580,6 +738,7 @@ pub(crate) fn run_worker(
                 match svc.compile(module, opts.mode) {
                     Ok((plan, hit)) => {
                         stats.compile_us.record_us(t0.elapsed().as_secs_f64() * 1e6);
+                        modeled_service_us = Some(plan.timing.total_us());
                         if hit {
                             stats.cache_hits += 1;
                         } else {
@@ -652,12 +811,39 @@ pub(crate) fn run_worker(
                         }
                     }
                     Err(e) => {
-                        // Don't re-pay the full cold pipeline on every
-                        // batch for a module that cannot compile; serve
-                        // uncompiled and report.
-                        stats.compile_failures += 1;
-                        compile_failed = true;
-                        eprintln!("serving-path compile failed (disabling): {e:#}");
+                        // A structured fast-fail is the shared service's
+                        // negative cache answering from backoff — not a
+                        // fresh failure, and not worth a log line.
+                        let fast_fail = e
+                            .downcast_ref::<Rejection>()
+                            .is_some_and(|r| matches!(r, Rejection::CompileFailed));
+                        if !fast_fail {
+                            stats.compile_failures += 1;
+                        }
+                        match svc {
+                            CompileBackend::Legacy(_) => {
+                                // No negative cache behind this backend:
+                                // don't re-pay the full cold pipeline on
+                                // every batch for a module that cannot
+                                // compile; serve uncompiled and report.
+                                compile_failed = true;
+                                eprintln!("serving-path compile failed (disabling): {e:#}");
+                            }
+                            CompileBackend::Shared(_) => {
+                                // The shared service's negative cache
+                                // makes retries cheap (fast-fail inside
+                                // the backoff window), so keep trying:
+                                // the key recovers when a later compile
+                                // succeeds. Batches serve on the
+                                // artifact interpreter meanwhile.
+                                if !fast_fail {
+                                    eprintln!(
+                                        "serving-path compile failed (will retry \
+                                         after backoff): {e:#}"
+                                    );
+                                }
+                            }
+                        }
                     }
                 }
             }
@@ -686,6 +872,10 @@ pub(crate) fn run_worker(
             batch.into_iter().partition(|req| !class.admits(req.input.len()));
         if !rejected.is_empty() {
             stats.rejected += rejected.len();
+            match buckets {
+                Some(_) => stats.rejects.bucket_mismatch += rejected.len() as u64,
+                None => stats.rejects.oversized += rejected.len() as u64,
+            }
             // Count before replying, so a live-stats read right after
             // the error response already sees the rejection.
             if let Some(live) = live {
@@ -694,14 +884,17 @@ pub(crate) fn run_worker(
             for req in rejected {
                 let row = req.input.len();
                 let _ = req.respond.send(Err(match buckets {
-                    Some(_) => model
-                        .validate_row(row, &class)
-                        .expect_err("partition admitted an oversized row"),
-                    None => anyhow!(
+                    Some(_) => {
+                        let cause = model
+                            .validate_row(row, &class)
+                            .expect_err("partition admitted an oversized row");
+                        Error::new(Rejection::BucketMismatch).context(format!("{cause:#}"))
+                    }
+                    None => Error::new(Rejection::Oversized).context(format!(
                         "request row has {row} elements but the serving contract \
                          carries {} per request",
                         cfg.in_elems_per_request
-                    ),
+                    )),
                 }));
             }
         }
@@ -723,6 +916,12 @@ pub(crate) fn run_worker(
                 stats.padded_elems += (row_in - req.input.len()) as u64;
             }
             crate::obs::record(crate::obs::SpanCat::Batch, "assemble", 0, asm);
+            // Fault hook: injected slow kernels sleep inside the timed
+            // execution window, so the delay lands in `exec_us` and
+            // drives the slack estimate up like a real slowdown would.
+            if let Some(plan) = &cfg.faults {
+                plan.fire_execute();
+            }
             let t0 = Instant::now();
             let mut artifact_out: Vec<Vec<f32>> = Vec::new();
             let result: Result<&[f32]> = match &active {
@@ -753,6 +952,26 @@ pub(crate) fn run_worker(
             stats.exec_us.record_us(t0.elapsed().as_secs_f64() * 1e6);
             stats.batches += 1;
             stats.requests += chunk.len();
+            if let Some(plan) = &cfg.faults {
+                plan.note_batch();
+            }
+            // Deadline outcome at reply time: signed slack for every
+            // deadline-carrying request, a miss when the reply lands
+            // late (the request is still answered — admission predicted
+            // feasible, so the caller gets its output plus a counted
+            // miss rather than a shed).
+            let replied = Instant::now();
+            for req in chunk.iter() {
+                if let Some(d) = req.deadline {
+                    let slack_us = if replied <= d {
+                        (d - replied).as_secs_f64() * 1e6
+                    } else {
+                        stats.deadline_misses += 1;
+                        -((replied - d).as_secs_f64() * 1e6)
+                    };
+                    stats.slack_us.record_us(slack_us);
+                }
+            }
             // Publish the snapshot *before* replying: a client that
             // reads pool stats right after its response must already
             // see its own request counted.
@@ -846,7 +1065,7 @@ impl ServingCoordinator {
             };
             let model = engine.get(&wcfg.artifact).expect("loaded above");
             // Single worker: the VM may use the whole machine.
-            run_worker(model, &rx, &wcfg, backend.as_ref(), None, 0, 0)
+            run_worker(model, &rx, &wcfg, backend.as_ref(), None, 0, 0, None)
         });
         // Fail fast if the artifact is missing/bad.
         ready_rx
@@ -877,10 +1096,11 @@ impl ServingCoordinator {
         let (rtx, rrx) = mpsc::channel();
         let enqueued = Instant::now();
         let shape_key = self.cfg.shape_key_for(input.len());
+        let deadline = self.default_deadline(enqueued);
         self.tx
             .as_ref()
             .context("server stopped")?
-            .send(Request { input, shape_key, respond: rtx, enqueued })
+            .send(Request { input, shape_key, respond: rtx, enqueued, deadline })
             .map_err(|_| anyhow!("worker gone"))?;
         let out = rrx.recv().context("worker dropped response")??;
         Ok((out, enqueued.elapsed()))
@@ -892,13 +1112,61 @@ impl ServingCoordinator {
         input: Vec<f32>,
     ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
         let (rtx, rrx) = mpsc::channel();
+        let enqueued = Instant::now();
         let shape_key = self.cfg.shape_key_for(input.len());
+        let deadline = self.default_deadline(enqueued);
         self.tx
             .as_ref()
             .context("server stopped")?
-            .send(Request { input, shape_key, respond: rtx, enqueued: Instant::now() })
+            .send(Request { input, shape_key, respond: rtx, enqueued, deadline })
             .map_err(|_| anyhow!("worker gone"))?;
         Ok(rrx)
+    }
+
+    /// Submit one request with an explicit per-request deadline and
+    /// block for its output. The worker sheds the request with a
+    /// structured [`Rejection::DeadlineInfeasible`] reply when its
+    /// predicted service time would overrun the remaining slack.
+    pub fn infer_with_deadline(
+        &self,
+        input: Vec<f32>,
+        deadline: Duration,
+    ) -> Result<(Vec<f32>, Duration)> {
+        let enqueued = Instant::now();
+        let rrx = self.infer_async_with_deadline(input, Some(deadline))?;
+        let out = rrx.recv().context("worker dropped response")??;
+        Ok((out, enqueued.elapsed()))
+    }
+
+    /// Submit asynchronously with an explicit deadline (`None` falls
+    /// back to the configured [`DeadlinePolicy::default_deadline`]).
+    pub fn infer_async_with_deadline(
+        &self,
+        input: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Result<Vec<f32>>>> {
+        let (rtx, rrx) = mpsc::channel();
+        let enqueued = Instant::now();
+        let shape_key = self.cfg.shape_key_for(input.len());
+        let deadline = deadline
+            .map(|d| enqueued + d)
+            .or_else(|| self.default_deadline(enqueued));
+        self.tx
+            .as_ref()
+            .context("server stopped")?
+            .send(Request { input, shape_key, respond: rtx, enqueued, deadline })
+            .map_err(|_| anyhow!("worker gone"))?;
+        Ok(rrx)
+    }
+
+    /// The deadline the configured [`DeadlinePolicy`] stamps onto
+    /// requests whose callers did not pick one.
+    fn default_deadline(&self, enqueued: Instant) -> Option<Instant> {
+        self.cfg
+            .deadline
+            .as_ref()
+            .and_then(|d| d.default_deadline)
+            .map(|d| enqueued + d)
     }
 
     /// Stop accepting requests, drain, and return worker statistics.
@@ -939,6 +1207,8 @@ ENTRY main {
             compile: None,
             trace: None,
             buckets: None,
+            deadline: None,
+            faults: None,
         }
     }
 
@@ -1125,6 +1395,8 @@ ENTRY main {
             }),
             trace: None,
             buckets: Some(policy),
+            deadline: None,
+            faults: None,
         };
         let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
         // Lengths 3 and 4 share bucket 4; length 2 has its own bucket.

@@ -5,6 +5,7 @@
 //! fusion-stitching compile <model|file.hlo> [--mode baseline|stitching] [--ir] [--no-cost-fusion]
 //! fusion-stitching corpus [--models N]               # Fig. 1 percentile table
 //! fusion-stitching serve [--requests N] [--demo] [--workers N] [--autotune]
+//!                        [--deadline-ms N] [--faults SPEC]
 //!                        [--trace-out t.json] [--prom-out m.prom]
 //! fusion-stitching obs [--model NAME|--all] [--runs N] [--replay-into-library]
 //!                      [--trace-out t.json] [--prom-out m.prom]
@@ -25,6 +26,15 @@
 //! does the offline equivalent — it folds the replayed profile into the
 //! perf library's measured entries (persist with `--perf-lib`).
 //!
+//! `serve --deadline-ms N` gives every request an N-millisecond
+//! deadline: the batcher sheds requests whose predicted service time
+//! would overrun their slack (a structured `DeadlineInfeasible` reply,
+//! not a silent timeout), and the run summary reports sheds and
+//! deadline misses. `--faults SPEC` (e.g.
+//! `seed=7,fail_compiles=2,panic_after=3`) arms the deterministic
+//! fault-injection harness — inert unless the crate was built with the
+//! non-default `faults` cargo feature.
+//!
 //! `--no-cost-fusion` disables the cost-guided fusion-exploration pass
 //! (merge/split refinement of the greedy plan), reverting to pure
 //! greedy deep fusion. `--autotune` still measures and writes back
@@ -34,7 +44,9 @@
 //! (Hand-rolled argument parsing: the offline image carries no clap.)
 
 use fusion_stitching::coordinator::pipeline::{evaluate, geomean, FusionMode, PipelineConfig};
-use fusion_stitching::coordinator::{ServerConfig, ServingCoordinator};
+use fusion_stitching::coordinator::{
+    DeadlinePolicy, FaultPlan, ServerConfig, ServingCoordinator,
+};
 use fusion_stitching::corpus::generator::{self, CorpusConfig};
 use fusion_stitching::corpus::{percentiles, OpClass};
 use fusion_stitching::gpusim::DeviceConfig;
@@ -61,6 +73,8 @@ fn main() {
                  \x20            [--demo] serves a built-in module (no `make artifacts` needed)\n\
                  \x20            [--trace-out t.json] [--prom-out m.prom] arm the flight recorder\n\
                  \x20            [--autotune] measured write-back + re-explore + hot-swap\n\
+                 \x20            [--deadline-ms N] per-request deadline + slack-based shedding\n\
+                 \x20            [--faults SPEC] deterministic fault injection (needs `faults` feature)\n\
                  \x20 obs      — offline kernel profiler: replay benchmark models under the\n\
                  \x20            flight recorder, report modeled-vs-measured divergence\n\
                  \x20            [--replay-into-library] fold measured times into --perf-lib"
@@ -314,6 +328,34 @@ fn cmd_serve(args: &[String]) -> i32 {
     let sink = (trace_out.is_some() || prom_out.is_some())
         .then(|| TraceSink::new(TraceConfig::default()));
 
+    // --deadline-ms N: every request carries an N-ms deadline and the
+    // batcher sheds rows whose predicted service would overrun it.
+    let deadline = flag_value(args, "--deadline-ms")
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(|ms| DeadlinePolicy {
+            default_deadline: Some(std::time::Duration::from_millis(ms)),
+            ..DeadlinePolicy::default()
+        });
+    // --faults SPEC: seeded fault plan (inert without the cargo feature).
+    let faults = match flag_value(args, "--faults") {
+        Some(spec) => match FaultPlan::parse(spec) {
+            Ok(plan) => {
+                if !FaultPlan::enabled() {
+                    eprintln!(
+                        "warning: --faults given but the `faults` cargo feature is off; \
+                         the plan is inert (rebuild with `--features faults`)"
+                    );
+                }
+                Some(std::sync::Arc::new(plan))
+            }
+            Err(e) => {
+                eprintln!("parsing --faults spec: {e:#}");
+                return 2;
+            }
+        },
+        None => None,
+    };
+
     // --demo: self-contained serving that needs no `make artifacts` —
     // writes a tiny interpreter artifact and serves a stitched
     // tanh(exp(x)) module on top, so a trace export exercises every
@@ -353,6 +395,8 @@ fn cmd_serve(args: &[String]) -> i32 {
             }),
             buckets: None,
             trace: sink.clone(),
+            deadline: deadline.clone(),
+            faults: faults.clone(),
         }
     } else {
         // Compile-once serving: every batch routes through the
@@ -381,6 +425,8 @@ fn cmd_serve(args: &[String]) -> i32 {
             compile,
             buckets: None,
             trace: sink.clone(),
+            deadline,
+            faults,
         }
     };
     if let Some(n) = workers {
@@ -394,6 +440,7 @@ fn cmd_serve(args: &[String]) -> i32 {
         }
     };
     let mut lat = StreamingSummary::default();
+    let mut shed = 0usize;
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..requests {
@@ -401,14 +448,20 @@ fn cmd_serve(args: &[String]) -> i32 {
         pending.push((std::time::Instant::now(), srv.infer_async(input).unwrap()));
         if pending.len() >= cfg.batch {
             for (t, rx) in pending.drain(..) {
-                rx.recv().unwrap().unwrap();
-                lat.record(t.elapsed());
+                // Under --deadline-ms a reply may be a structured shed;
+                // count it rather than crashing the client loop.
+                match rx.recv().unwrap() {
+                    Ok(_) => lat.record(t.elapsed()),
+                    Err(_) => shed += 1,
+                }
             }
         }
     }
     for (t, rx) in pending.drain(..) {
-        rx.recv().unwrap().unwrap();
-        lat.record(t.elapsed());
+        match rx.recv().unwrap() {
+            Ok(_) => lat.record(t.elapsed()),
+            Err(_) => shed += 1,
+        }
     }
     let wall = t0.elapsed();
     let stats = srv.shutdown().unwrap();
@@ -440,6 +493,12 @@ fn cmd_serve(args: &[String]) -> i32 {
             100.0 * stats.cache_hit_rate(),
             stats.compile_us.first_us(),
             stats.compile_us.warm_mean_us(),
+        );
+    }
+    if shed > 0 || stats.deadline_misses > 0 {
+        println!(
+            "deadlines: {} request(s) shed with a structured reply, {} admitted miss(es)",
+            shed, stats.deadline_misses
         );
     }
     let agg = fusion_stitching::coordinator::ServingStats::from_worker(stats);
@@ -476,23 +535,33 @@ fn serve_pool(
         }
     };
     let mut lat = StreamingSummary::default();
+    let mut shed = 0usize;
     let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     for i in 0..requests {
         let input = vec![0.01 * (i % 7) as f32; in_elems];
         // cycle a few shape keys so the sticky router exercises shards
         let key = (i % 8) as u64;
-        pending.push((std::time::Instant::now(), pool.infer_keyed_async(key, input).unwrap()));
+        // Submission itself can shed (backpressure / shard respawning);
+        // replies can carry a structured deadline shed. Count both.
+        match pool.infer_keyed_async(key, input) {
+            Ok(rx) => pending.push((std::time::Instant::now(), rx)),
+            Err(_) => shed += 1,
+        }
         if pending.len() >= batch {
             for (t, rx) in pending.drain(..) {
-                rx.recv().unwrap().unwrap();
-                lat.record(t.elapsed());
+                match rx.recv() {
+                    Ok(Ok(_)) => lat.record(t.elapsed()),
+                    _ => shed += 1,
+                }
             }
         }
     }
     for (t, rx) in pending.drain(..) {
-        rx.recv().unwrap().unwrap();
-        lat.record(t.elapsed());
+        match rx.recv() {
+            Ok(Ok(_)) => lat.record(t.elapsed()),
+            _ => shed += 1,
+        }
     }
     let wall = t0.elapsed();
     let stats = pool.shutdown().unwrap();
@@ -516,6 +585,12 @@ fn serve_pool(
         if generation > 0 {
             println!("autotune: hot-swapped the served module {generation} time(s)");
         }
+    }
+    if shed > 0 || stats.aggregate.deadline_misses > 0 || stats.respawns > 0 {
+        println!(
+            "robustness: {} shed, {} deadline miss(es), {} worker respawn(s), {} reroute(s)",
+            shed, stats.aggregate.deadline_misses, stats.respawns, stats.reroutes
+        );
     }
     write_observability(sink.as_ref(), trace_out.as_deref(), prom_out.as_deref(), &stats);
     0

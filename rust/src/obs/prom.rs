@@ -48,10 +48,31 @@ pub fn prometheus(stats: &ServingStats, dropped_events: Option<u64>) -> String {
     line(&mut out, "fusion_batches_total", "", a.batches as f64);
     header(&mut out, "fusion_stitched_batches_total", "counter", "Batches run on the stitched VM.");
     line(&mut out, "fusion_stitched_batches_total", "", a.stitched_batches as f64);
-    header(&mut out, "fusion_rejected_total", "counter", "Requests rejected (oversized).");
-    line(&mut out, "fusion_rejected_total", "", a.rejected as f64);
+    header(&mut out, "fusion_rejected_total", "counter", "Requests rejected, by reason.");
+    line(&mut out, "fusion_rejected_total", "{reason=\"oversized\"}", a.rejects.oversized as f64);
+    line(&mut out, "fusion_rejected_total", "{reason=\"bucket_mismatch\"}", a.rejects.bucket_mismatch as f64);
+    line(&mut out, "fusion_rejected_total", "{reason=\"deadline\"}", a.rejects.deadline as f64);
+    line(&mut out, "fusion_rejected_total", "{reason=\"shed\"}", a.rejects.shed as f64);
+    line(&mut out, "fusion_rejected_total", "{reason=\"compile_failed\"}", a.rejects.compile_failed as f64);
+    header(&mut out, "fusion_deadline_misses_total", "counter", "Served requests that replied after their deadline.");
+    line(&mut out, "fusion_deadline_misses_total", "", a.deadline_misses as f64);
     header(&mut out, "fusion_compile_failures_total", "counter", "Pipeline compiles that failed.");
     line(&mut out, "fusion_compile_failures_total", "", a.compile_failures as f64);
+
+    header(&mut out, "fusion_queue_depth", "gauge", "Requests queued per shard, awaiting drain.");
+    for (shard, depth) in stats.queue_depths.iter().enumerate() {
+        line(&mut out, "fusion_queue_depth", &format!("{{shard=\"{shard}\"}}"), *depth as f64);
+    }
+    header(&mut out, "fusion_worker_respawns_total", "counter", "Workers respawned after a contained panic.");
+    line(&mut out, "fusion_worker_respawns_total", "", stats.respawns as f64);
+    header(&mut out, "fusion_reroutes_total", "counter", "Submissions rerouted past a down shard.");
+    line(&mut out, "fusion_reroutes_total", "", stats.reroutes as f64);
+    header(&mut out, "fusion_shards_down", "gauge", "Shards currently without a live worker.");
+    line(&mut out, "fusion_shards_down", "", stats.shards_down as f64);
+    if let Some(fast) = stats.compile_fast_fails {
+        header(&mut out, "fusion_compile_fast_fails_total", "counter", "Compiles answered by the negative cache's backoff.");
+        line(&mut out, "fusion_compile_fast_fails_total", "", fast as f64);
+    }
 
     header(&mut out, "fusion_padded_elems_total", "counter", "Pad elements appended to reach bucket canonical lengths.");
     line(&mut out, "fusion_padded_elems_total", "", a.padded_elems as f64);
@@ -105,6 +126,7 @@ pub fn prometheus(stats: &ServingStats, dropped_events: Option<u64>) -> String {
     summary(&mut out, "fusion_exec_latency_us", "Per-batch execution latency, µs.", &a.exec_us);
     summary(&mut out, "fusion_compile_latency_us", "Compile (cache lookup or cold) latency, µs.", &a.compile_us);
     summary(&mut out, "fusion_queue_latency_us", "Request queue wait, µs.", &a.queue_us);
+    summary(&mut out, "fusion_slack_us", "Signed per-request slack at reply time, µs.", &a.slack_us);
 
     if let Some(dropped) = dropped_events {
         header(&mut out, "fusion_trace_dropped_events_total", "counter", "Flight-recorder ring overflow drops.");
@@ -149,12 +171,22 @@ mod tests {
         w.queue_us.record_us(5.0);
         w.padded_elems = 3;
         w.live_elems = 9;
+        w.rejected = 3;
+        w.rejects.oversized = 1;
+        w.rejects.deadline = 2;
+        w.deadline_misses = 1;
+        w.slack_us.record_us(250.0);
         let stats = ServingStats {
             per_worker: vec![w.clone()],
             aggregate: w,
             cache: None,
             cold_compiles: None,
             generation: None,
+            respawns: 1,
+            reroutes: 4,
+            queue_depths: vec![2, 0],
+            shards_down: 1,
+            compile_fast_fails: Some(5),
         };
         let text = prometheus(&stats, Some(0));
         for family in [
@@ -169,6 +201,21 @@ mod tests {
             "fusion_queue_latency_us_count 1",
             "fusion_trace_dropped_events_total 0",
             "# TYPE fusion_launch_tier_total counter",
+            "fusion_rejected_total{reason=\"oversized\"} 1",
+            "fusion_rejected_total{reason=\"deadline\"} 2",
+            "fusion_rejected_total{reason=\"bucket_mismatch\"} 0",
+            "fusion_rejected_total{reason=\"shed\"} 0",
+            "fusion_rejected_total{reason=\"compile_failed\"} 0",
+            "fusion_deadline_misses_total 1",
+            "fusion_queue_depth{shard=\"0\"} 2",
+            "fusion_queue_depth{shard=\"1\"} 0",
+            "fusion_worker_respawns_total 1",
+            "fusion_reroutes_total 4",
+            "fusion_shards_down 1",
+            "fusion_compile_fast_fails_total 5",
+            "fusion_slack_us_count 1",
+            "# TYPE fusion_queue_depth gauge",
+            "# TYPE fusion_rejected_total counter",
         ] {
             assert!(text.contains(family), "missing {family:?} in:\n{text}");
         }

@@ -217,6 +217,8 @@ fn live_pool_hot_swaps_mid_serve_without_dropping_requests() {
         }),
         buckets: None,
         trace: None,
+        deadline: None,
+        faults: None,
     };
 
     // Pre-warm the shared service so the baseline digest is known, and
@@ -244,6 +246,7 @@ fn live_pool_hot_swaps_mid_serve_without_dropping_requests() {
                 interval: Duration::from_millis(5),
                 min_launches: u64::MAX,
             }),
+            ..PoolConfig::default()
         },
         service.clone(),
     )

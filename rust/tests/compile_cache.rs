@@ -177,6 +177,8 @@ fn serving_loop_reports_cache_hits_for_repeated_nmt_requests() {
         }),
         buckets: None,
         trace: None,
+        deadline: None,
+        faults: None,
     };
     let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
     for i in 0..4 {
@@ -219,6 +221,8 @@ fn shared_service_amortizes_across_serving_loops() {
         }),
         buckets: None,
         trace: None,
+        deadline: None,
+        faults: None,
     };
 
     let srv1 = ServingCoordinator::start_with_service(dir.path(), cfg.clone(), service.clone())

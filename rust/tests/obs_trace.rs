@@ -225,6 +225,8 @@ ENTRY main {
         }),
         buckets: None,
         trace: Some(sink.clone()),
+        deadline: None,
+        faults: None,
     };
     let srv = ServingCoordinator::start(dir.path(), cfg).unwrap();
     for i in 0..8 {

@@ -91,6 +91,8 @@ fn serving_loop_runs_real_artifact() {
             compile: None,
             buckets: None,
             trace: None,
+            deadline: None,
+            faults: None,
         },
     )
     .unwrap();

@@ -1,0 +1,160 @@
+//! Integration tests for deadline-aware serving: slack-based admission
+//! sheds infeasible requests with a structured reply, admitted requests
+//! record signed slack, and tearing a pool down mid-load answers every
+//! in-flight client (no hung `recv`).
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::{
+    DeadlinePolicy, PoolConfig, Rejection, ServerConfig, ServingCoordinator, ServingPool,
+};
+use fusion_stitching::testutil::TempDir;
+use std::time::Duration;
+
+/// Identity-ish artifact: doubles a [4, 3] batch.
+const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+
+fn config(deadline: Option<DeadlinePolicy>) -> ServerConfig {
+    ServerConfig {
+        artifact: "double".into(),
+        batch: 4,
+        in_elems_per_request: 3,
+        out_elems_per_request: 3,
+        input_dims: vec![4, 3],
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+        compile: None,
+        buckets: None,
+        trace: None,
+        deadline,
+        faults: None,
+    }
+}
+
+fn write_artifact(dir: &TempDir) {
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+}
+
+/// A deadline the predicted service time cannot possibly meet is shed
+/// before execution with a structured `DeadlineInfeasible` reply, and
+/// the shed is counted under `rejects.deadline` — while deadline-free
+/// traffic on the same pool keeps being served.
+#[test]
+fn infeasible_deadline_sheds_with_structured_reply() {
+    let dir = TempDir::new("deadline-shed");
+    write_artifact(&dir);
+    // No default deadline: only the explicit per-request one sheds.
+    let policy = DeadlinePolicy {
+        bootstrap_service_us: 50_000.0, // predict 50ms of service…
+        ..DeadlinePolicy::default()
+    };
+    let pool = ServingPool::start(
+        dir.path(),
+        config(Some(policy)),
+        PoolConfig { workers: 1, ..PoolConfig::default() },
+    )
+    .unwrap();
+
+    // …against a 1ms deadline: hopeless, must shed.
+    let err = pool
+        .infer_with_deadline(vec![1.0, 2.0, 3.0], Duration::from_millis(1))
+        .expect_err("infeasible deadline must not be served");
+    assert_eq!(err.downcast_ref::<Rejection>(), Some(&Rejection::DeadlineInfeasible), "{err:#}");
+    assert!(err.to_string().contains("shed"), "{err:#}");
+
+    // A deadline-free request on the same pool is still served.
+    let (out, _) = pool.infer(vec![1.0, 2.0, 3.0]).unwrap();
+    assert_eq!(out, vec![2.0, 4.0, 6.0]);
+
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(stats.aggregate.rejects.deadline, 1, "shed counted: {:?}", stats.aggregate.rejects);
+    assert_eq!(stats.aggregate.requests, 1, "only the deadline-free request executed");
+}
+
+/// A generous deadline is admitted, served within budget, and leaves a
+/// positive-slack sample behind — no misses, no sheds.
+#[test]
+fn generous_deadline_served_with_recorded_slack() {
+    let dir = TempDir::new("deadline-ok");
+    write_artifact(&dir);
+    let policy = DeadlinePolicy {
+        default_deadline: Some(Duration::from_secs(10)),
+        ..DeadlinePolicy::default()
+    };
+    let pool = ServingPool::start(
+        dir.path(),
+        config(Some(policy)),
+        PoolConfig { workers: 1, ..PoolConfig::default() },
+    )
+    .unwrap();
+    for i in 0..6u64 {
+        let (out, _) = pool.infer_keyed(i, vec![i as f32, 0.0, 1.0]).unwrap();
+        assert_eq!(out, vec![2.0 * i as f32, 0.0, 2.0]);
+    }
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(stats.aggregate.requests, 6);
+    assert_eq!(stats.aggregate.rejects.total(), 0, "{:?}", stats.aggregate.rejects);
+    assert_eq!(stats.aggregate.deadline_misses, 0);
+    assert!(
+        stats.aggregate.slack_us.count() >= 6,
+        "every admitted deadline leaves a slack sample: {}",
+        stats.aggregate.slack_us.count()
+    );
+    assert!(stats.aggregate.slack_us.mean_us() > 0.0, "10s deadlines leave positive slack");
+}
+
+/// The single-worker coordinator honors explicit per-request deadlines
+/// through the same slack admission as the pool.
+#[test]
+fn coordinator_sheds_infeasible_deadline() {
+    let dir = TempDir::new("deadline-coord");
+    write_artifact(&dir);
+    let policy =
+        DeadlinePolicy { bootstrap_service_us: 50_000.0, ..DeadlinePolicy::default() };
+    let srv = ServingCoordinator::start(dir.path(), config(Some(policy))).unwrap();
+    let err = srv
+        .infer_with_deadline(vec![1.0, 2.0, 3.0], Duration::from_millis(1))
+        .expect_err("infeasible deadline must be shed");
+    assert_eq!(err.downcast_ref::<Rejection>(), Some(&Rejection::DeadlineInfeasible), "{err:#}");
+    let (out, _) = srv.infer(vec![0.5, 1.5, 2.5]).unwrap();
+    assert_eq!(out, vec![1.0, 3.0, 5.0]);
+    let stats = srv.shutdown().unwrap();
+    assert_eq!(stats.rejects.deadline, 1);
+}
+
+/// Graceful shutdown under load: dropping the pool with a queue full of
+/// unanswered requests must drain and answer every one of them —
+/// a client blocked on `recv` gets a reply (or a structured error),
+/// never a hang.
+#[test]
+fn dropping_pool_mid_load_answers_every_client() {
+    let dir = TempDir::new("deadline-drop");
+    write_artifact(&dir);
+    let pool = ServingPool::start(
+        dir.path(),
+        config(None),
+        PoolConfig { workers: 2, ..PoolConfig::default() },
+    )
+    .unwrap();
+    let receivers: Vec<_> = (0..64)
+        .map(|i| {
+            let key = (i % 8) as u64;
+            pool.infer_keyed_async(key, vec![i as f32, 0.5, 1.5]).unwrap()
+        })
+        .collect();
+    // Drop with every request still in flight: teardown must close the
+    // queues and let the workers drain them.
+    drop(pool);
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|e| panic!("client {i} hung on shutdown: {e}"));
+        let out = reply.unwrap_or_else(|e| panic!("request {i} not served: {e:#}"));
+        assert_eq!(out, vec![2.0 * i as f32, 1.0, 3.0]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Fault-injection integration tests (run with `--features faults`):
+//! under a seeded [`FaultPlan`] the pool must keep serving — no hung
+//! clients, every request answered or shed with a structured reason —
+//! and the observed counters must reconcile with the injected ground
+//! truth.
+
+#![cfg(feature = "faults")]
+
+use fusion_stitching::coordinator::batcher::BatchPolicy;
+use fusion_stitching::coordinator::server::CompileOptions;
+use fusion_stitching::coordinator::{
+    DeadlinePolicy, FaultPlan, FusionMode, PipelineConfig, PoolConfig, Rejection, ServerConfig,
+    ServingPool,
+};
+use fusion_stitching::models;
+use fusion_stitching::testutil::TempDir;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Identity-ish artifact: doubles a [4, 3] batch.
+const DOUBLE_HLO: &str = r#"HloModule double, entry_computation_layout={(f32[4,3]{1,0})->(f32[4,3]{1,0})}
+
+ENTRY main {
+  p0 = f32[4,3]{1,0} parameter(0)
+  sum = f32[4,3]{1,0} add(p0, p0)
+  ROOT t = (f32[4,3]{1,0}) tuple(sum)
+}
+"#;
+
+fn config(faults: Arc<FaultPlan>) -> ServerConfig {
+    ServerConfig {
+        artifact: "double".into(),
+        batch: 4,
+        in_elems_per_request: 3,
+        out_elems_per_request: 3,
+        input_dims: vec![4, 3],
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) },
+        compile: None,
+        buckets: None,
+        trace: None,
+        deadline: None,
+        faults: Some(faults),
+    }
+}
+
+fn write_artifact(dir: &TempDir) {
+    std::fs::write(dir.path().join("double.hlo.txt"), DOUBLE_HLO).unwrap();
+}
+
+/// An injected worker panic mid-load: the supervisor respawns the
+/// shard, queued requests on the dead shard are shed with a structured
+/// reply (never silently dropped), and the pool keeps serving. The
+/// respawn counter reconciles with the plan's injected-panic count.
+#[test]
+fn injected_panic_respawns_worker_and_loses_no_client() {
+    let dir = TempDir::new("faults-panic");
+    write_artifact(&dir);
+    let plan = Arc::new(FaultPlan::new(7).panic_after(2));
+    let pool = ServingPool::start(
+        dir.path(),
+        config(plan.clone()),
+        PoolConfig { workers: 2, ..PoolConfig::default() },
+    )
+    .unwrap();
+
+    let receivers: Vec<_> = (0..40)
+        .map(|i| {
+            let key = (i % 8) as u64;
+            pool.infer_keyed_async(key, vec![i as f32, 0.5, 1.5]).unwrap()
+        })
+        .collect();
+    let (mut served, mut shed) = (0u64, 0u64);
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(10))
+            .unwrap_or_else(|e| panic!("client {i} hung across the injected panic: {e}"));
+        match reply {
+            Ok(out) => {
+                assert_eq!(out, vec![2.0 * i as f32, 1.0, 3.0]);
+                served += 1;
+            }
+            Err(e) => {
+                assert_eq!(
+                    e.downcast_ref::<Rejection>(),
+                    Some(&Rejection::Shed),
+                    "only structured sheds are acceptable: {e:#}"
+                );
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(served + shed, 40, "every client answered");
+
+    // The supervisor's respawn is asynchronous; wait for it to land.
+    let mut respawned = false;
+    for _ in 0..200 {
+        if pool.stats().respawns >= 1 {
+            respawned = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    assert!(respawned, "injected panic must be followed by a respawn");
+
+    // The pool still serves after the respawn.
+    let (out, _) = pool.infer_keyed(3, vec![1.0, 2.0, 3.0]).unwrap();
+    assert_eq!(out, vec![2.0, 4.0, 6.0]);
+
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(plan.injected_panics(), 1, "the panic point fires exactly once");
+    assert_eq!(stats.respawns, 1, "one respawn per injected panic");
+    assert_eq!(
+        stats.aggregate.requests + stats.aggregate.rejected,
+        41,
+        "accounting covers the load and the post-respawn probe: {:?}",
+        stats.aggregate
+    );
+    assert_eq!(stats.aggregate.rejects.shed, shed, "shed counter matches shed replies");
+}
+
+/// An injected slow-kernel burst against a tight deadline: the slack
+/// estimator absorbs the measured slowdown and starts shedding
+/// infeasible requests, while everything already admitted is still
+/// answered (as counted deadline misses, not hangs).
+#[test]
+fn slow_kernels_drive_deadline_sheds_not_hangs() {
+    let dir = TempDir::new("faults-slow");
+    write_artifact(&dir);
+    // Every batch sleeps 20ms — far beyond the 5ms deadline.
+    let plan = Arc::new(FaultPlan::new(3).slow_kernels(0, 10_000, 20_000, 0));
+    let mut cfg = config(plan.clone());
+    cfg.deadline = Some(DeadlinePolicy {
+        default_deadline: Some(Duration::from_millis(5)),
+        ..DeadlinePolicy::default()
+    });
+    let pool = ServingPool::start(
+        dir.path(),
+        cfg,
+        PoolConfig { workers: 1, ..PoolConfig::default() },
+    )
+    .unwrap();
+
+    let receivers: Vec<_> = (0..30)
+        .map(|i| pool.infer_keyed_async(1, vec![i as f32, 0.0, 1.0]).unwrap())
+        .collect();
+    let (mut served, mut shed) = (0u64, 0u64);
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let reply = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|e| panic!("client {i} hung under slow kernels: {e}"));
+        match reply {
+            Ok(out) => {
+                assert_eq!(out, vec![2.0 * i as f32, 0.0, 2.0]);
+                served += 1;
+            }
+            Err(e) => {
+                assert_eq!(
+                    e.downcast_ref::<Rejection>(),
+                    Some(&Rejection::DeadlineInfeasible),
+                    "{e:#}"
+                );
+                shed += 1;
+            }
+        }
+    }
+    assert_eq!(served + shed, 30, "zero silent timeouts");
+    assert!(served >= 1, "bootstrap-admitted requests are still answered");
+    assert!(shed >= 1, "the measured slowdown must start shedding");
+    assert!(plan.injected_slow() >= 1, "the slow window actually fired");
+
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(stats.aggregate.requests as u64, served);
+    assert_eq!(stats.aggregate.rejects.deadline, shed, "{:?}", stats.aggregate.rejects);
+    assert!(
+        stats.aggregate.deadline_misses >= 1,
+        "admitted-but-slow batches land as counted misses"
+    );
+}
+
+/// Injected cold-compile failures: the first attempt fails and is
+/// negatively cached, a retry inside the backoff window fast-fails
+/// without re-running the pipeline, and a retry after the window
+/// recovers — serving continues on the artifact interpreter throughout.
+#[test]
+fn injected_compile_faults_fast_fail_then_recover() {
+    let dir = TempDir::new("faults-compile");
+    write_artifact(&dir);
+    let plan = Arc::new(FaultPlan::new(11).fail_compiles(1));
+    let (meta, nmt) = models::by_name("NMT").unwrap();
+    let mut pipeline = PipelineConfig::default();
+    pipeline.deep.fuse_batch_dot = meta.fuse_batch_dot;
+    let mut cfg = config(plan.clone());
+    cfg.compile = Some(CompileOptions {
+        module: nmt,
+        mode: FusionMode::FusionStitching,
+        pipeline,
+        use_stitched_backend: false,
+        specialize: None,
+    });
+    let pool = ServingPool::start(
+        dir.path(),
+        cfg,
+        PoolConfig { workers: 1, ..PoolConfig::default() },
+    )
+    .unwrap();
+    let service = pool.compile_service().unwrap().clone();
+    // A wide, deterministic backoff window: the second request lands
+    // inside it (fast-fail), the post-sleep request lands beyond it.
+    service.set_failure_backoff(Duration::from_millis(500), Duration::from_millis(500));
+
+    // First batch: the injected failure. Still served (interpreter).
+    let (out, _) = pool.infer_keyed(1, vec![1.0, 2.0, 3.0]).unwrap();
+    assert_eq!(out, vec![2.0, 4.0, 6.0]);
+    assert_eq!(plan.injected_compile_fails(), 1);
+
+    // Second batch, inside the backoff window: the negative cache
+    // answers without a new pipeline attempt.
+    let (out, _) = pool.infer_keyed(1, vec![0.5, 1.5, 2.5]).unwrap();
+    assert_eq!(out, vec![1.0, 3.0, 5.0]);
+    assert_eq!(service.compile_fast_fails(), 1, "backoff window fast-fails");
+    assert_eq!(plan.compile_attempts(), 1, "no real attempt inside the window");
+
+    // Past the window: the retry runs for real and succeeds.
+    std::thread::sleep(Duration::from_millis(700));
+    let (out, _) = pool.infer_keyed(1, vec![2.0, 0.0, -2.0]).unwrap();
+    assert_eq!(out, vec![4.0, 0.0, -4.0]);
+
+    let stats = pool.shutdown().unwrap();
+    assert_eq!(plan.compile_attempts(), 2, "exactly one real retry after backoff");
+    assert_eq!(stats.aggregate.compile_failures, 1, "fast-fails are not re-counted");
+    assert_eq!(stats.aggregate.requests, 3);
+    assert_eq!(stats.cold_compiles, Some(1), "injected failures never count as cold compiles");
+    assert_eq!(stats.compile_fast_fails, Some(1));
+}

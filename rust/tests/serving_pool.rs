@@ -34,6 +34,8 @@ fn base_config() -> ServerConfig {
         compile: None,
         buckets: None,
         trace: None,
+        deadline: None,
+        faults: None,
     }
 }
 
@@ -63,7 +65,7 @@ fn concurrent_workers_share_one_cold_compile() {
     let pool = ServingPool::start(
         dir.path(),
         compile_config(),
-        PoolConfig { workers: 4, queue_depth: 16, autotune: None },
+        PoolConfig { workers: 4, queue_depth: 16, ..PoolConfig::default() },
     )
     .unwrap();
 
@@ -118,7 +120,7 @@ fn prewarmed_shared_service_skips_cold_compiles() {
     let pool = ServingPool::start_with_service(
         dir.path(),
         cfg,
-        PoolConfig { workers: 2, queue_depth: 16, autotune: None },
+        PoolConfig { workers: 2, queue_depth: 16, ..PoolConfig::default() },
         service.clone(),
     )
     .unwrap();
@@ -143,8 +145,12 @@ fn pool_survives_policy_larger_than_artifact_batch() {
     let mut cfg = base_config();
     cfg.policy = BatchPolicy::default(); // max_batch 8 > batch 4: the bug's shape
     assert!(cfg.policy.max_batch > cfg.batch);
-    let pool =
-        ServingPool::start(dir.path(), cfg, PoolConfig { workers: 2, queue_depth: 32, autotune: None }).unwrap();
+    let pool = ServingPool::start(
+        dir.path(),
+        cfg,
+        PoolConfig { workers: 2, queue_depth: 32, ..PoolConfig::default() },
+    )
+    .unwrap();
     let pending: Vec<_> = (0..24)
         .map(|i| pool.infer_keyed_async(7, vec![i as f32, 0.5, 1.5]).unwrap())
         .collect();
@@ -166,7 +172,7 @@ fn aggregate_stats_fold_worker_summaries() {
     let pool = ServingPool::start(
         dir.path(),
         base_config(),
-        PoolConfig { workers: 2, queue_depth: 16, autotune: None },
+        PoolConfig { workers: 2, queue_depth: 16, ..PoolConfig::default() },
     )
     .unwrap();
     for i in 0..10u64 {

@@ -199,6 +199,8 @@ fn exact_coordinator(dir: &TempDir, len: usize) -> ServingCoordinator {
         }),
         buckets: None,
         trace: None,
+        deadline: None,
+        faults: None,
     };
     ServingCoordinator::start(dir.path(), cfg).unwrap()
 }
@@ -227,6 +229,8 @@ fn bucketed_serving_matches_exact_shape_serving_bitwise() {
         }),
         buckets: Some(policy),
         trace: None,
+        deadline: None,
+        faults: None,
     };
     let bucketed = ServingCoordinator::start(dir.path(), cfg).unwrap();
 
@@ -277,6 +281,8 @@ fn degenerate_exact_policy_serves_identically_to_unbucketed() {
         compile: None,
         buckets: None,
         trace: None,
+        deadline: None,
+        faults: None,
     };
     let mut exact_bucketed = base.clone();
     exact_bucketed.buckets = Some(BucketPolicy::Exact);
@@ -316,6 +322,8 @@ fn lying_bucket_claims_are_rejected_poolwide() {
         compile: None,
         buckets: Some(BucketPolicy::PowerOfTwo { min: 2 }),
         trace: None,
+        deadline: None,
+        faults: None,
     };
     let p = ServingPool::start(dir.path(), cfg, PoolConfig { workers: 2, ..PoolConfig::default() })
         .unwrap();
